@@ -1,0 +1,66 @@
+//! Decomposition explorer: sweeps the TNN zoo (CP/TK/TT/TR/BT/HT, flat and
+//! reshaped) across compression rates, reporting parameters, planned FLOPs
+//! for optimal vs left-to-right evaluation, and the speedup — a practical
+//! guide to which factorization benefits most from the optimal sequencer.
+//!
+//! Run: `cargo run --release --example decomposition_explorer`
+
+use conv_einsum::experiments::Table;
+use conv_einsum::planner::{contract_path, PlanOptions};
+use conv_einsum::tnn::{build_layer, Decomp};
+use conv_einsum::util::sci;
+
+fn main() -> anyhow::Result<()> {
+    let (t, s, k) = (64, 64, 3);
+    let (batch, hp) = (32, 32);
+    println!(
+        "exploring tensorial factorizations of a {t}x{s}x{k}x{k} kernel on \
+         {hp}x{hp} features (batch {batch})\n"
+    );
+
+    let mut rows = Vec::new();
+    for decomp in Decomp::all() {
+        for m in [1usize, 3] {
+            if decomp == Decomp::HierarchicalTucker && m == 1 {
+                continue;
+            }
+            for cr in [0.1, 0.5, 1.0] {
+                let layer = match build_layer(decomp, m, t, s, k, k, cr) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        eprintln!("skip {} m={m} cr={cr}: {e}", decomp.name());
+                        continue;
+                    }
+                };
+                let dims = layer.expr_dims(batch, hp, hp);
+                let plan = contract_path(&layer.expr, &dims, &PlanOptions::default())
+                    .map_err(anyhow::Error::msg)?;
+                rows.push(vec![
+                    format!("{}{}", if m > 1 { "R" } else { "" }, decomp.name()),
+                    format!("{m}"),
+                    format!("{:.0}%", cr * 100.0),
+                    format!("{}", layer.params),
+                    sci(plan.cost),
+                    sci(plan.naive_cost),
+                    format!("{:.2}x", plan.speedup_vs_naive()),
+                ]);
+            }
+        }
+    }
+    let table = Table {
+        title: "TNN zoo: planned FLOPs, optimal vs left-to-right".into(),
+        header: vec![
+            "form".into(),
+            "M".into(),
+            "CR".into(),
+            "params".into(),
+            "optimal".into(),
+            "naive".into(),
+            "speedup".into(),
+        ],
+        rows,
+    };
+    println!("{}", table.render());
+    table.save("decomposition_explorer").ok();
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Serving example: the L3 coordinator dispatching batched tensorial-layer
+//! evaluations, with latency/throughput reporting — and, when `make
+//! artifacts` has been run, the same layer executed through the AOT
+//! JAX/Pallas artifact on the PJRT runtime (proving all three layers
+//! compose: rust coordinator → PJRT → HLO lowered from JAX+Pallas).
+//!
+//! Run: `cargo run --release --example serve_layers`
+
+use conv_einsum::coordinator::{EvalService, ServiceConfig};
+use conv_einsum::runtime::ArtifactRegistry;
+use conv_einsum::tnn::{build_layer, Decomp};
+use conv_einsum::util::rng::Rng;
+use conv_einsum::Tensor;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(5);
+
+    // Register two tensorial layers with the service.
+    let cp = build_layer(Decomp::Cp, 1, 16, 8, 3, 3, 0.5).map_err(anyhow::Error::msg)?;
+    let tk = build_layer(Decomp::Tucker, 1, 16, 8, 3, 3, 0.5).map_err(anyhow::Error::msg)?;
+    let cp_factors = cp.init_factors(&mut rng);
+    let tk_factors = tk.init_factors(&mut rng);
+    let service = EvalService::start(
+        ServiceConfig {
+            workers: 2,
+            max_batch: 8,
+            ..Default::default()
+        },
+        vec![
+            ("cp".into(), cp.expr.clone(), cp_factors),
+            ("tk".into(), tk.expr.clone(), tk_factors),
+        ],
+    )?;
+    let handle = service.handle();
+
+    // Fire a mixed request stream.
+    let n = 96;
+    println!("serving {n} single-example layer evaluations (batched)...");
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..n)
+        .map(|i| {
+            let layer = if i % 3 == 0 { "tk" } else { "cp" };
+            let x = Tensor::rand(&[1, 8, 16, 16], -1.0, 1.0, &mut rng);
+            handle.submit(layer, x).unwrap()
+        })
+        .collect();
+    for rx in receivers {
+        rx.recv().unwrap()?;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "done in {dt:?} → {:.1} req/s",
+        n as f64 / dt.as_secs_f64()
+    );
+    println!("{}\n", handle.metrics().report());
+    service.shutdown();
+
+    // PJRT path: run the AOT'd CP layer artifact if it has been built.
+    match ArtifactRegistry::open("artifacts") {
+        Ok(mut registry) => {
+            println!("AOT artifacts found (platform: {}):", registry.platform());
+            let names: Vec<String> =
+                registry.names().iter().map(|s| s.to_string()).collect();
+            for name in names.iter().filter(|n| n.contains("fwd")) {
+                let meta = registry.meta(name).unwrap().clone();
+                let inputs: Vec<Tensor> = meta
+                    .input_shapes
+                    .iter()
+                    .map(|s| Tensor::rand(s, -0.5, 0.5, &mut rng))
+                    .collect();
+                let refs: Vec<&Tensor> = inputs.iter().collect();
+                // warm (compile) + timed run
+                let _ = registry.execute(name, &refs)?;
+                let t0 = Instant::now();
+                let out = registry.execute(name, &refs)?;
+                println!(
+                    "  {name}: out {:?} in {:?} (jax+pallas → HLO → PJRT)",
+                    out[0].shape(),
+                    t0.elapsed()
+                );
+            }
+        }
+        Err(_) => {
+            println!(
+                "no artifacts/ directory — run `make artifacts` to exercise \
+                 the PJRT path (jax+pallas AOT)."
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT pipeline: lower the L2 JAX functions (with L1 Pallas kernels inside)
+to HLO **text** artifacts for the rust runtime.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the pinned xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md and DESIGN.md).
+
+Run via `make artifacts`:  python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, arg_shapes):
+    args = [jax.ShapeDtypeStruct(tuple(s), jnp.float32) for s in arg_shapes]
+    return jax.jit(fn).lower(*args)
+
+
+def build_manifest_entries():
+    """The artifact catalogue: every L2 function the rust layer loads."""
+    entries = []
+
+    # --- CP layer forward (flat), Pallas kernels, optimal vs naive path ---
+    cp_expr = "bshw,rt,rs,rh,rw->bthw|hw"
+    cp_dims = [[4, 8, 16, 16], [6, 8], [6, 8], [6, 3], [6, 3]]
+    for strategy in ("optimal", "ltr"):
+        fn = model_lib.tnn_layer_forward(cp_expr, cp_dims, strategy=strategy)
+        entries.append(
+            dict(
+                name=f"cp_layer_fwd_{strategy}",
+                fn=lambda *a, fn=fn: (fn(*a),),
+                input_shapes=cp_dims,
+                description=f"CP conv layer forward, {strategy} path, Pallas atoms",
+            )
+        )
+
+    # --- RCP (M=2) layer forward, Pallas kernels ---
+    rcp_expr = "b(s1)(s2)hw,r(t1)(s1),r(t2)(s2),rhw->b(t1)(t2)hw|hw"
+    rcp_dims = [[2, 3, 4, 12, 12], [5, 3, 3], [5, 2, 4], [5, 3, 3]]
+    fn = model_lib.tnn_layer_forward(rcp_expr, rcp_dims, strategy="optimal")
+    entries.append(
+        dict(
+            name="rcp_layer_fwd_optimal",
+            fn=lambda *a, fn=fn: (fn(*a),),
+            input_shapes=rcp_dims,
+            description="reshaped-CP (M=2) layer forward, optimal path, Pallas atoms",
+        )
+    )
+
+    # --- tiny TNN train step (jnp atoms, optimal order baked) ---
+    ts_expr = "bshw,rt,rs,rh,rw->bthw|hw"
+    ts_dims = [[8, 4, 12, 12], [4, 6], [4, 4], [4, 3], [4, 3]]
+    n_classes = 4
+    step = model_lib.tiny_tnn_train_step(ts_expr, ts_dims, n_classes)
+    t_out = ts_dims[1][1]
+    step_shapes = (
+        [ts_dims[0], [8, n_classes]]
+        + ts_dims[1:]
+        + [[t_out, n_classes], [n_classes]]
+    )
+    entries.append(
+        dict(
+            name="tnn_train_step",
+            fn=step,
+            input_shapes=step_shapes,
+            description=(
+                "SGD train step for a tiny CP-TNN classifier "
+                "(loss + updated params), optimal path order"
+            ),
+        )
+    )
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for entry in build_manifest_entries():
+        lowered = lower_fn(entry["fn"], entry["input_shapes"])
+        text = to_hlo_text(lowered)
+        fname = f"{entry['name']}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        # output shape: evaluate abstractly
+        out_aval = jax.eval_shape(
+            entry["fn"],
+            *[jax.ShapeDtypeStruct(tuple(s), jnp.float32) for s in entry["input_shapes"]],
+        )
+        first = jax.tree_util.tree_leaves(out_aval)[0]
+        manifest.append(
+            dict(
+                name=entry["name"],
+                file=fname,
+                input_shapes=entry["input_shapes"],
+                output_shape=list(first.shape),
+                description=entry["description"],
+            )
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

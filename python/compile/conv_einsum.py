@@ -1,0 +1,362 @@
+"""Python mirror of the rust conv_einsum planner (build-time only).
+
+The optimal sequencer must run at AOT time to bake the evaluation path into
+the lowered JAX graph. This module mirrors `rust/src/{einsum,cost,planner}`:
+same grammar, same tnn-cost model (paper Appendix B Eq. 5-8), same exact
+subset-DP optimum. Cross-language equivalence is enforced by golden tests
+(python/tests/test_planner.py runs the rust CLI when the binary is built).
+
+Not a runtime component: python never executes on the request path.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+# ---------------------------------------------------------------------------
+# Grammar
+# ---------------------------------------------------------------------------
+
+def parse_subscripts(text: str) -> list[str]:
+    """Parse one subscript group: single letters or parenthesized names."""
+    modes = []
+    i = 0
+    text = text.strip()
+    while i < len(text):
+        c = text[i]
+        if c.isspace():
+            i += 1
+        elif c == "(":
+            close = text.index(")", i + 1)
+            name = text[i + 1 : close].strip()
+            if not name:
+                raise ValueError("empty mode name '()'")
+            modes.append(name)
+            i = close + 1
+        elif c.isalpha():
+            modes.append(c)
+            i += 1
+        else:
+            raise ValueError(f"unexpected character {c!r} in subscripts")
+    return modes
+
+
+@dataclass
+class Spec:
+    """Parsed conv_einsum expression."""
+
+    inputs: list[list[str]]
+    output: list[str]
+    conv: list[str]
+
+    def occurrences(self, m: str) -> int:
+        return sum(1 for modes in self.inputs if m in modes)
+
+    def all_modes(self) -> list[str]:
+        seen, out = set(), []
+        for modes in self.inputs + [self.output]:
+            for m in modes:
+                if m not in seen:
+                    seen.add(m)
+                    out.append(m)
+        return out
+
+    def render(self) -> str:
+        def sub(modes):
+            return "".join(m if len(m) == 1 else f"({m})" for m in modes)
+
+        s = ",".join(sub(i) for i in self.inputs) + "->" + sub(self.output)
+        if self.conv:
+            s += "|" + sub(self.conv)
+        return s
+
+
+def parse(expr: str) -> Spec:
+    """Parse a conv_einsum string like 'bshw,rt,rs,rh,rw->bthw|hw'."""
+    if "->" not in expr:
+        raise ValueError("missing '->'")
+    lhs, rhs = expr.split("->", 1)
+    if "|" in rhs:
+        out_part, conv_part = rhs.split("|", 1)
+        conv = [m for seg in conv_part.split(",") for m in parse_subscripts(seg)]
+        if not conv:
+            raise ValueError("empty convolution list")
+        if len(set(conv)) != len(conv):
+            raise ValueError("duplicate convolution mode")
+    else:
+        out_part, conv = rhs, []
+    inputs = [parse_subscripts(seg) for seg in lhs.split(",")]
+    output = parse_subscripts(out_part)
+    spec = Spec(inputs, output, conv)
+    # validation (mirrors rust EinsumSpec::validate)
+    for i, modes in enumerate(spec.inputs):
+        if len(set(modes)) != len(modes):
+            raise ValueError(f"input {i} repeats a mode")
+    if len(set(spec.output)) != len(spec.output):
+        raise ValueError("output repeats a mode")
+    for m in spec.output:
+        if spec.occurrences(m) == 0:
+            raise ValueError(f"output mode {m!r} not in any input")
+    for m in spec.conv:
+        if m not in spec.output:
+            raise ValueError(f"conv mode {m!r} must appear in the output")
+        if spec.occurrences(m) == 0:
+            raise ValueError(f"conv mode {m!r} not in any input")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Sized spec + cost model (Appendix B)
+# ---------------------------------------------------------------------------
+
+def conv_out_size(kind: str, ia: int, ib: int, modulus: int | None) -> int:
+    feat, filt = max(ia, ib), min(ia, ib)
+    if kind == "circular":
+        p = modulus if modulus is not None else feat
+        return min(ia + ib - 1, p)
+    if kind == "same":
+        return feat
+    if kind == "valid":
+        return feat - filt + 1
+    if kind == "full":
+        return feat + filt - 1
+    raise ValueError(f"unknown conv kind {kind}")
+
+
+@dataclass
+class Sized:
+    """Spec with dims bound; default conv kinds mirror rust SizedSpec::new."""
+
+    spec: Spec
+    dims: list[list[int]]
+    conv_kinds: list[str] = field(default_factory=list)
+
+    def __post_init__(self):
+        assert len(self.dims) == len(self.spec.inputs)
+        for modes, sizes in zip(self.spec.inputs, self.dims):
+            assert len(modes) == len(sizes), (modes, sizes)
+        if not self.conv_kinds:
+            self.conv_kinds = [
+                "circular" if self.spec.occurrences(m) > 2 else "same"
+                for m in self.spec.conv
+            ]
+        # non-conv shared modes must agree
+        for m in self.spec.all_modes():
+            if m in self.spec.conv:
+                continue
+            sizes = self.occurrence_sizes(m)
+            if len(set(sizes)) > 1:
+                raise ValueError(f"mode {m!r} has inconsistent sizes {sizes}")
+
+    def occurrence_sizes(self, m: str) -> list[int]:
+        out = []
+        for modes, sizes in zip(self.spec.inputs, self.dims):
+            if m in modes:
+                out.append(sizes[modes.index(m)])
+        return out
+
+    def mode_size(self, m: str) -> int:
+        return self.occurrence_sizes(m)[0]
+
+    def conv_feature(self, m: str) -> int:
+        return max(self.occurrence_sizes(m))
+
+    def conv_kind(self, m: str) -> str:
+        return self.conv_kinds[self.spec.conv.index(m)]
+
+    def output_shape(self) -> list[int]:
+        shape = []
+        for m in self.spec.output:
+            if m in self.spec.conv:
+                sizes = self.occurrence_sizes(m)
+                if len(sizes) == 1:
+                    shape.append(sizes[0])
+                elif len(sizes) == 2:
+                    shape.append(conv_out_size(self.conv_kind(m), sizes[0], sizes[1], None))
+                else:
+                    shape.append(self.conv_feature(m))
+            else:
+                shape.append(self.mode_size(m))
+        return shape
+
+
+# ---------------------------------------------------------------------------
+# Optimal sequencer (mirrors rust planner subset-DP)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SubSpec:
+    mask: int
+    modes: list[str]
+    sizes: list[int]
+
+    def size_of(self, m: str) -> int | None:
+        return self.sizes[self.modes.index(m)] if m in self.modes else None
+
+    def elems(self) -> float:
+        return float(math.prod(self.sizes))
+
+
+class Ctx:
+    def __init__(self, sized: Sized):
+        self.sized = sized
+        self.spec = sized.spec
+        self.occ_mask = {}
+        for i, modes in enumerate(self.spec.inputs):
+            for m in modes:
+                self.occ_mask[m] = self.occ_mask.get(m, 0) | (1 << i)
+        self.out_set = set(self.spec.output)
+        self.conv_feature = {m: sized.conv_feature(m) for m in self.spec.conv}
+
+    def needed_outside(self, m: str, mask: int) -> bool:
+        return m in self.out_set or (self.occ_mask[m] & ~mask) != 0
+
+    def leaf(self, i: int) -> SubSpec:
+        return SubSpec(1 << i, list(self.spec.inputs[i]), list(self.sized.dims[i]))
+
+    def mode_size_in(self, m: str, mask: int) -> int:
+        if m not in self.spec.conv:
+            return self.sized.mode_size(m)
+        inside = []
+        for i, modes in enumerate(self.spec.inputs):
+            if mask & (1 << i) and m in modes:
+                inside.append(self.sized.dims[i][modes.index(m)])
+        if len(inside) == 1:
+            return inside[0]
+        kind = self.sized.conv_kind(m)
+        if kind == "circular":
+            return min(sum(inside) - (len(inside) - 1), self.conv_feature[m])
+        return conv_out_size(kind, inside[0], inside[1], None)
+
+    def subset(self, mask: int) -> SubSpec:
+        if bin(mask).count("1") == 1:
+            return self.leaf(mask.bit_length() - 1)
+        modes = []
+        for m in self.spec.all_modes():
+            occ = self.occ_mask.get(m, 0)
+            if occ & mask == 0:
+                continue
+            if self.needed_outside(m, mask) or m in self.spec.conv:
+                modes.append(m)
+        modes.sort()
+        sizes = [self.mode_size_in(m, mask) for m in modes]
+        return SubSpec(mask, modes, sizes)
+
+    def merge_cost_and_out(self, a: SubSpec, b: SubSpec, training: bool):
+        """(cost_mults, out_elems) of the pairwise merge — Appendix B."""
+        union = a.mask | b.mask
+        g = t = n = s = 1.0
+        conv = []  # (ia, ib, io)
+        for m in sorted(set(a.modes) | set(b.modes)):
+            sa, sb = a.size_of(m), b.size_of(m)
+            needed = self.needed_outside(m, union)
+            is_conv = m in self.spec.conv
+            if sa is not None and sb is not None:
+                if is_conv:
+                    kind = self.sized.conv_kind(m)
+                    modulus = self.conv_feature[m] if kind == "circular" else None
+                    conv.append((sa, sb, conv_out_size(kind, sa, sb, modulus)))
+                elif needed:
+                    g *= sa
+                else:
+                    s *= sa
+            elif sa is not None:
+                if needed or is_conv:
+                    t *= sa
+            else:
+                if needed or is_conv:
+                    n *= sb
+        fwd = g * t * n * s * math.prod(ia * ib for ia, ib, _ in conv)
+        if training:
+            g1 = g * t * n * s * math.prod(io * ib for _, ib, io in conv)
+            g2 = g * t * n * s * math.prod(io * ia for ia, _, io in conv)
+            cost = fwd + g1 + g2
+        else:
+            cost = fwd
+        out_elems = g * t * n * math.prod(io for _, _, io in conv)
+        return cost, out_elems
+
+
+def _ltr_cost(ctx: Ctx, n: int, training: bool) -> float:
+    total = 0.0
+    acc = 1
+    for i in range(1, n):
+        a = ctx.subset(acc)
+        b = ctx.leaf(i)
+        c, _ = ctx.merge_cost_and_out(a, b, training)
+        total += c
+        acc |= 1 << i
+    return total
+
+
+def contract_path(expr: str, dims: list[list[int]], training: bool = False) -> dict:
+    """Plan an N-input conv_einsum; mirrors rust `contract_path` costs.
+
+    Returns a dict with keys cost, naive_cost, largest_intermediate and
+    steps: a list of (left_mask, right_mask) merges in bottom-up order.
+    """
+    spec = parse(expr)
+    sized = Sized(spec, [list(d) for d in dims])
+    ctx = Ctx(sized)
+    n = len(spec.inputs)
+    if n < 2:
+        raise ValueError("need at least 2 inputs")
+    full = (1 << n) - 1
+
+    best = {1 << i: 0.0 for i in range(n)}
+    split: dict[int, tuple[int, int]] = {}
+    subs = {1 << i: ctx.leaf(i) for i in range(n)}
+
+    for mask in range(3, full + 1):
+        if bin(mask).count("1") < 2:
+            continue
+        subs[mask] = ctx.subset(mask)
+        low = mask & (-mask)
+        sub = (mask - 1) & mask
+        b_cost = math.inf
+        b_split = None
+        while sub:
+            if sub & low:
+                other = mask ^ sub
+                if sub in best and other in best:
+                    c, _ = ctx.merge_cost_and_out(subs[sub], subs[other], training)
+                    cand = best[sub] + best[other] + c
+                    if cand < b_cost:
+                        b_cost = cand
+                        b_split = (sub, other)
+            sub = (sub - 1) & mask
+        best[mask] = b_cost
+        split[mask] = b_split
+
+    # reconstruct
+    steps = []
+    largest = 0.0
+
+    def emit(mask):
+        nonlocal largest
+        if bin(mask).count("1") == 1:
+            return
+        l, r = split[mask]
+        emit(l)
+        emit(r)
+        _, out_elems = ctx.merge_cost_and_out(subs[l], subs[r], training)
+        largest = max(largest, out_elems)
+        steps.append((l, r))
+
+    emit(full)
+
+    return {
+        "expr": spec.render(),
+        "cost": best[full],
+        "naive_cost": _ltr_cost(ctx, n, training),
+        "largest_intermediate": largest,
+        "steps": steps,
+        "n_inputs": n,
+    }
+
+
+def optimal_order(expr: str, dims: list[list[int]]) -> list[tuple[int, int]]:
+    """The optimal merge order as (left_mask, right_mask) pairs."""
+    return contract_path(expr, dims)["steps"]

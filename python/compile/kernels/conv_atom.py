@@ -1,0 +1,149 @@
+"""Layer-1 Pallas kernels: the paper's §3.1 atomic operations.
+
+Two kernels cover every pairwise step of a planned conv_einsum path:
+
+* `matmul_atom` — the pure contraction/batch/outer atom
+  `out[g,t,n] = Σ_s a[g,t,s]·b[g,n,s]` (conv1d's non-conv special case);
+* `conv2d_atom` — the grouped 2-D true-convolution atom with Same padding
+  (the conv2d case of §3.1, `"gtshw,bgshw->bgthw|h,w"` up to mode order).
+
+HARDWARE ADAPTATION (DESIGN.md §6): on TPU the atom is an MXU contraction
+over VMEM-resident tiles. The grid iterates (G, T-tiles); each program
+holds one `[TS_TILE, S, HA, WA]` feature block and the full filter block in
+VMEM and reduces over S and the filter taps with `jnp.einsum` (lowered to
+MXU dots). `interpret=True` is mandatory here: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so correctness runs through the interpreter
+and real-TPU performance is *estimated* from the BlockSpec footprint
+(see EXPERIMENTS.md §Perf/L1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget used by the block-shape heuristic (bytes). A v4 core has
+# ~16 MiB; leave headroom for double buffering.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # a: [1, T, S], b: [1, N, S] → o: [1, T, N]; contraction on the MXU.
+    a = a_ref[0]
+    b = b_ref[0]
+    o_ref[0] = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+
+
+def matmul_atom(a: jax.Array, b: jax.Array) -> jax.Array:
+    """out[g,t,n] = Σ_s a[g,t,s] b[g,n,s] via a Pallas grid over G."""
+    g, t, s = a.shape
+    g2, n, s2 = b.shape
+    assert g == g2 and s == s2, (a.shape, b.shape)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, t, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, s), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, t, n), jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def _conv2d_kernel(hb, wb, sh, sw, a_ref, b_ref, o_ref):
+    # a: [1, TT, S, HA+2(hb-1), WA+2(wb-1)] pre-padded feature tile
+    # b: [1, N, S, HB, WB] filter
+    # o: [1, TT, N, HA, WA]
+    a = a_ref[0]
+    b = b_ref[0]
+    tt, s, hp, wp = a.shape
+    ha = hp - 2 * (hb - 1)
+    wa = wp - 2 * (wb - 1)
+    acc = jnp.zeros((tt, b.shape[0], ha, wa), jnp.float32)
+    # True convolution, Same padding: out[p] = Σ_{i} b[i]·a[p + shift − i],
+    # realized as static slices of the pre-padded feature (unrolled taps —
+    # each tap is one MXU-shaped contraction over S).
+    for i in range(hb):
+        for j in range(wb):
+            off_h = sh - i + hb - 1
+            off_w = sw - j + wb - 1
+            window = jax.lax.slice(
+                a, (0, 0, off_h, off_w), (tt, s, off_h + ha, off_w + wa)
+            )
+            acc = acc + jnp.einsum(
+                "tshw,ns->tnhw", window, b[:, :, i, j],
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[0] = acc
+
+
+def conv2d_atom(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Grouped 2-D true-convolution atom, Same padding.
+
+    a: [G, T, S, HA, WA] feature; b: [G, N, S, HB, WB] filter
+    (HB ≤ HA, WB ≤ WA); out: [G, T, N, HA, WA].
+    """
+    g, t, s, ha, wa = a.shape
+    g2, n, s2, hb, wb = b.shape
+    assert g == g2 and s == s2 and hb <= ha and wb <= wa, (a.shape, b.shape)
+    sh, sw = (hb - 1) // 2, (wb - 1) // 2
+    # Pre-pad the feature so every tap is a static in-bounds slice.
+    apad = jnp.pad(
+        a.astype(jnp.float32),
+        ((0, 0), (0, 0), (0, 0), (hb - 1, hb - 1), (wb - 1, wb - 1)),
+    )
+    hp, wp = ha + 2 * (hb - 1), wa + 2 * (wb - 1)
+    # T tiling keeps the VMEM footprint bounded (see vmem_footprint).
+    tt = t_tile(t, s, hp, wp, n, hb, wb)
+    grid_t = (t + tt - 1) // tt
+    if t % tt != 0:
+        pad_t = grid_t * tt - t
+        apad = jnp.pad(apad, ((0, 0), (0, pad_t), (0, 0), (0, 0), (0, 0)))
+    kernel = functools.partial(_conv2d_kernel, hb, wb, sh, sw)
+    out = pl.pallas_call(
+        kernel,
+        grid=(g, grid_t),
+        in_specs=[
+            pl.BlockSpec((1, tt, s, hp, wp), lambda gi, ti: (gi, ti, 0, 0, 0)),
+            pl.BlockSpec((1, n, s, hb, wb), lambda gi, ti: (gi, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tt, n, ha, wa), lambda gi, ti: (gi, ti, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, grid_t * tt, n, ha, wa), jnp.float32),
+        interpret=True,
+    )(apad, b.astype(jnp.float32))
+    return out[:, :t]
+
+
+def t_tile(t: int, s: int, hp: int, wp: int, n: int, hb: int, wb: int) -> int:
+    """Largest T-tile whose VMEM footprint fits the budget."""
+    for tt in range(t, 0, -1):
+        if vmem_footprint(tt, s, hp, wp, n, hb, wb) <= VMEM_BUDGET:
+            return tt
+    return 1
+
+
+def vmem_footprint(tt: int, s: int, hp: int, wp: int, n: int, hb: int, wb: int) -> int:
+    """Bytes resident per program: feature tile + filter + accumulator.
+
+    This is the L1 performance model used by EXPERIMENTS.md §Perf — on a
+    real TPU the tile must fit VMEM; MXU utilization is estimated as the
+    fraction of the contraction (S·HB·WB per output element) that lands in
+    128×128 systolic passes.
+    """
+    feat = tt * s * hp * wp * 4
+    filt = n * s * hb * wb * 4
+    ha, wa = hp - 2 * (hb - 1), wp - 2 * (wb - 1)
+    acc = tt * n * ha * wa * 4
+    return feat + filt + acc
+
+
+def mxu_utilization_estimate(t: int, s: int, n: int) -> float:
+    """Fraction of MXU lanes busy for the per-tap contraction
+    `[T,S]×[N,S]→[T,N]`: each dimension utilizes min(dim,128)/128 lanes."""
+    use = lambda d: min(d, 128) / 128.0
+    return use(t) * use(s) * use(n)

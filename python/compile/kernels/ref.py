@@ -1,0 +1,139 @@
+"""Correctness oracles for the kernels (build-time only).
+
+`pairwise_ref` is a brute-force numpy evaluator for a 2-input conv_einsum
+with the exact semantics of the rust executor (true convolution; same /
+valid / full / circular varieties; see rust/src/exec/reference.rs). The
+Pallas kernels and the JAX model path are validated against it by pytest +
+hypothesis.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+
+def conv_index(kind: str, p_full: int, feat: int, filt: int, out: int):
+    """Map a full-conv output index to the variety's output index (or None)."""
+    if kind == "full":
+        return p_full
+    if kind == "circular":
+        return p_full % max(feat, 1) % max(out, 1)
+    shift = (filt - 1) // 2 if kind == "same" else filt - 1
+    p = p_full - shift
+    return p if 0 <= p < out else None
+
+
+def out_size(kind: str, ia: int, ib: int) -> int:
+    feat, filt = max(ia, ib), min(ia, ib)
+    if kind == "full":
+        return ia + ib - 1
+    if kind == "valid":
+        return feat - filt + 1
+    return feat  # same / circular
+
+
+def pairwise_ref(
+    lhs_modes: list[str],
+    rhs_modes: list[str],
+    out_modes: list[str],
+    conv_modes: list[str],
+    a: np.ndarray,
+    b: np.ndarray,
+    kinds: dict[str, str] | None = None,
+) -> np.ndarray:
+    """Brute-force 2-input conv_einsum. Exponential; test sizes only."""
+    kinds = kinds or {}
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    sizes_a = dict(zip(lhs_modes, a.shape))
+    sizes_b = dict(zip(rhs_modes, b.shape))
+
+    def kind_of(m):
+        return kinds.get(m, "same")
+
+    out_shape = []
+    for m in out_modes:
+        if m in conv_modes and m in sizes_a and m in sizes_b:
+            out_shape.append(out_size(kind_of(m), sizes_a[m], sizes_b[m]))
+        else:
+            out_shape.append(sizes_a.get(m, sizes_b.get(m)))
+    out = np.zeros(out_shape)
+
+    # enumeration axes: shared index per non-conv mode, separate per conv occ
+    shared = [m for m in dict.fromkeys(lhs_modes + rhs_modes) if m not in conv_modes]
+    conv_both = [m for m in conv_modes if m in sizes_a and m in sizes_b]
+    conv_single = [m for m in conv_modes if m not in conv_both]
+
+    ranges = []
+    names = []
+    for m in shared:
+        ranges.append(range(sizes_a.get(m, sizes_b.get(m))))
+        names.append(("shared", m))
+    for m in conv_both:
+        ranges.append(range(sizes_a[m]))
+        names.append(("conv_a", m))
+        ranges.append(range(sizes_b[m]))
+        names.append(("conv_b", m))
+    for m in conv_single:
+        ranges.append(range(sizes_a.get(m, sizes_b.get(m))))
+        names.append(("shared", m))
+
+    for combo in itertools.product(*ranges):
+        env = dict(zip(names, combo))
+        ok = True
+        oix = []
+        for m in out_modes:
+            if m in conv_both:
+                ia = env[("conv_a", m)]
+                ib = env[("conv_b", m)]
+                feat = max(sizes_a[m], sizes_b[m])
+                filt = min(sizes_a[m], sizes_b[m])
+                osz = out_size(kind_of(m), sizes_a[m], sizes_b[m])
+                p = conv_index(kind_of(m), ia + ib, feat, filt, osz)
+                if p is None:
+                    ok = False
+                    break
+                oix.append(p)
+            else:
+                oix.append(env[("shared", m)])
+        if not ok:
+            continue
+        aix = tuple(
+            env[("conv_a", m)] if m in conv_both else env[("shared", m)]
+            for m in lhs_modes
+        )
+        bix = tuple(
+            env[("conv_b", m)] if m in conv_both else env[("shared", m)]
+            for m in rhs_modes
+        )
+        out[tuple(oix)] += a[aix] * b[bix]
+    return out
+
+
+def matmul_atom_ref(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """out[g,t,n] = sum_s a[g,t,s] * b[g,n,s]."""
+    return np.einsum("gts,gns->gtn", a, b)
+
+
+def conv2d_atom_ref(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Grouped 2-D true-convolution atom, Same padding.
+
+    a: [G, T, S, HA, WA] (feature), b: [G, N, S, HB, WB] (filter),
+    out: [G, T, N, HA, WA]; out[..., p] = sum_{i+j=p+shift} a[i] b[j].
+    """
+    g, t, s, ha, wa = a.shape
+    g2, n, s2, hb, wb = b.shape
+    assert g == g2 and s == s2 and ha >= hb and wa >= wb
+    sh, sw = (hb - 1) // 2, (wb - 1) // 2
+    out = np.zeros((g, t, n, ha, wa))
+    apad = np.pad(a, ((0, 0), (0, 0), (0, 0), (hb - 1, hb - 1), (wb - 1, wb - 1)))
+    for i in range(hb):
+        for j in range(wb):
+            # a index = p + shift - i  ⇒ padded offset (shift - i + hb - 1)
+            off_h = sh - i + hb - 1
+            off_w = sw - j + wb - 1
+            window = apad[:, :, :, off_h : off_h + ha, off_w : off_w + wa]
+            out += np.einsum("gtshw,gns->gtnhw", window, b[:, :, :, i, j])
+    return out

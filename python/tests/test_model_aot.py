@@ -1,0 +1,129 @@
+"""L2 model + AOT pipeline tests: planned-path execution matches the
+oracle; the train step learns; lowering produces loadable HLO text."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.conv_einsum import contract_path
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=shape).astype(np.float32))
+
+
+def full_ref(expr, tensors):
+    """Evaluate an N-input expression left-to-right with the oracle."""
+    from compile.conv_einsum import Ctx, Sized, parse
+
+    spec = parse(expr)
+    sized = Sized(spec, [list(t.shape) for t in tensors])
+    ctx = Ctx(sized)
+    vals = {1 << i: np.asarray(t, np.float64) for i, t in enumerate(tensors)}
+    acc = 1
+    for i in range(1, len(tensors)):
+        a = ctx.subset(acc)
+        b = ctx.leaf(i)
+        merged = ctx.subset(acc | (1 << i))
+        conv = [m for m in spec.conv if m in a.modes and m in b.modes]
+        vals[acc | (1 << i)] = ref.pairwise_ref(
+            a.modes, b.modes, merged.modes, conv, vals.pop(acc), vals.pop(1 << i)
+        )
+        acc |= 1 << i
+    root = ctx.subset(acc)
+    perm = [root.modes.index(m) for m in spec.output]
+    return np.transpose(vals[acc], perm)
+
+
+CP_EXPR = "bshw,rt,rs,rh,rw->bthw|hw"
+CP_DIMS = [[2, 3, 8, 8], [4, 5], [4, 3], [4, 3], [4, 3]]
+
+
+class TestPathForward:
+    def test_cp_layer_optimal_matches_oracle(self):
+        tensors = [rand(s, i) for i, s in enumerate(CP_DIMS)]
+        fn = model.tnn_layer_forward(CP_EXPR, CP_DIMS, strategy="optimal")
+        got = np.asarray(fn(*tensors))
+        want = full_ref(CP_EXPR, tensors)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_cp_layer_ltr_matches_oracle(self):
+        tensors = [rand(s, 10 + i) for i, s in enumerate(CP_DIMS)]
+        fn = model.tnn_layer_forward(CP_EXPR, CP_DIMS, strategy="ltr")
+        got = np.asarray(fn(*tensors))
+        want = full_ref(CP_EXPR, tensors)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_optimal_path_is_cheaper(self):
+        p = contract_path(CP_EXPR, CP_DIMS)
+        assert p["cost"] < p["naive_cost"]
+
+    def test_rcp_layer(self):
+        expr = "b(s1)(s2)hw,r(t1)(s1),r(t2)(s2),rhw->b(t1)(t2)hw|hw"
+        dims = [[1, 2, 3, 6, 6], [4, 2, 2], [4, 3, 3], [4, 3, 3]]
+        tensors = [rand(s, 20 + i) for i, s in enumerate(dims)]
+        fn = model.tnn_layer_forward(expr, dims, strategy="optimal")
+        got = np.asarray(fn(*tensors))
+        want = full_ref(expr, tensors)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+        assert got.shape == (1, 2, 3, 6, 6)
+
+    def test_jnp_atoms_match_pallas_atoms(self):
+        tensors = [rand(s, 30 + i) for i, s in enumerate(CP_DIMS)]
+        pallas_fn = model.tnn_layer_forward(CP_EXPR, CP_DIMS, use_pallas=True)
+        jnp_fn = model.tnn_layer_forward(CP_EXPR, CP_DIMS, use_pallas=False)
+        np.testing.assert_allclose(
+            np.asarray(pallas_fn(*tensors)),
+            np.asarray(jnp_fn(*tensors)),
+            rtol=1e-3,
+            atol=1e-4,
+        )
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        expr = "bshw,rt,rs,rh,rw->bthw|hw"
+        dims = [[8, 2, 8, 8], [3, 4], [3, 2], [3, 3], [3, 3]]
+        n_classes = 3
+        step = jax.jit(model.tiny_tnn_train_step(expr, dims, n_classes, lr=0.1))
+        rng = np.random.default_rng(0)
+        x = rand(dims[0], 40)
+        labels = rng.integers(0, n_classes, size=8)
+        onehot = jnp.asarray(np.eye(n_classes, dtype=np.float32)[labels])
+        params = [rand(s, 41 + i) for i, s in enumerate(dims[1:])]
+        params += [rand([4, n_classes], 50), jnp.zeros((n_classes,))]
+        losses = []
+        for _ in range(12):
+            loss, *params = step(x, onehot, *params)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+
+
+class TestAot:
+    def test_lowering_produces_hlo_text(self, tmp_path):
+        fn = model.tnn_layer_forward(CP_EXPR, CP_DIMS)
+        lowered = aot.lower_fn(lambda *a: (fn(*a),), CP_DIMS)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert len(text) > 500
+
+    @pytest.mark.slow
+    def test_full_aot_build(self, tmp_path, monkeypatch):
+        import sys
+
+        monkeypatch.setattr(sys, "argv", ["aot", "--out", str(tmp_path)])
+        aot.main()
+        manifest = os.path.join(tmp_path, "manifest.json")
+        assert os.path.exists(manifest)
+        import json
+
+        data = json.load(open(manifest))
+        assert len(data["artifacts"]) >= 4
+        for a in data["artifacts"]:
+            assert os.path.exists(os.path.join(tmp_path, a["file"]))

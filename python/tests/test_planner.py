@@ -1,0 +1,108 @@
+"""Python planner mirror: unit tests + cross-language golden comparison
+against the rust planner (runs the rust CLI when the binary exists)."""
+
+import json
+import os
+import subprocess
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.conv_einsum import contract_path, parse
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+FIXTURES = [
+    ("ij,jk,kl->il", [[2, 3], [3, 100], [100, 2]]),
+    ("ijk,jl,lmq,njpq->ijknp|j", [[4, 7, 9], [10, 5], [5, 4, 2], [6, 8, 9, 2]]),
+    ("bshw,rt,rs,rh,rw->bthw|hw", [[2, 3, 16, 16], [4, 8], [4, 3], [4, 3], [4, 3]]),
+    (
+        "b(s1)(s2)hw,r(t1)(s1),r(t2)(s2),rhw->b(t1)(t2)hw|hw",
+        [[2, 3, 4, 12, 12], [5, 3, 3], [5, 2, 4], [5, 3, 3]],
+    ),
+    ("bfsh,fgh,sth->bgth|h", [[2, 3, 4, 16], [3, 5, 3], [4, 6, 3]]),
+]
+
+
+def test_parse_roundtrip():
+    s = parse("b(s1)(s2)hw,r(t1)(s1)->b(t1)hw|hw")
+    assert s.render() == "b(s1)(s2)hw,r(t1)(s1)->b(t1)hw|hw"
+    assert s.conv == ["h", "w"]
+
+
+def test_parse_rejects_bad():
+    with pytest.raises(ValueError):
+        parse("ab,bc")
+    with pytest.raises(ValueError):
+        parse("ab,bc->az")
+    with pytest.raises(ValueError):
+        parse("ah,bh->ab|h")  # conv mode not in output
+
+
+def test_matmul_chain_cost():
+    p = contract_path("ij,jk,kl->il", [[2, 3], [3, 100], [100, 2]])
+    assert p["cost"] == 612.0  # A(BC)
+    assert p["naive_cost"] == 1000.0  # (AB)C
+
+
+def test_optimal_never_worse_than_naive():
+    for expr, dims in FIXTURES:
+        p = contract_path(expr, dims)
+        assert p["cost"] <= p["naive_cost"] + 1e-9, expr
+
+
+def test_training_cost_exceeds_forward():
+    expr, dims = FIXTURES[2]
+    fwd = contract_path(expr, dims, training=False)
+    trn = contract_path(expr, dims, training=True)
+    assert trn["cost"] >= 2.0 * fwd["cost"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.integers(2, 4),
+    r_extra=st.integers(0, 3),
+    h=st.integers(2, 3),
+    mult=st.integers(6, 10),
+)
+def test_theorem1_cheaper_path_exists(b, s, r_extra, h, mult):
+    """Theorem 1: RCP layers with H'>>H and R >= S have a cheaper-than-naive
+    path; the sequencer must find one."""
+    r = s * s + r_extra
+    hp = h * mult
+    expr = "b(s1)(s2)hw,r(t1)(s1),r(t2)(s2),rhw->b(t1)(t2)hw|hw"
+    dims = [[b, s, s, hp, hp], [r, s, s], [r, s, s], [r, h, h]]
+    p = contract_path(expr, dims)
+    assert p["cost"] < p["naive_cost"]
+
+
+def _rust_binary():
+    for profile in ("release", "debug"):
+        p = os.path.join(REPO, "target", profile, "conv-einsum")
+        if os.path.exists(p):
+            return p
+    return None
+
+
+@pytest.mark.skipif(_rust_binary() is None, reason="rust binary not built")
+def test_golden_against_rust_planner():
+    """The rust planner and this mirror must agree on total/naive costs and
+    largest intermediate for every fixture (paths may tie-break differently;
+    costs may not)."""
+    binary = _rust_binary()
+    for expr, dims in FIXTURES:
+        dims_arg = ";".join(",".join(str(d) for d in dd) for dd in dims)
+        out = subprocess.run(
+            [binary, "plan", expr, "--dims", dims_arg, "--json"],
+            capture_output=True,
+            text=True,
+            check=True,
+        )
+        rust = json.loads(out.stdout)
+        py = contract_path(expr, dims)
+        assert rust["cost"] == pytest.approx(py["cost"], rel=1e-9), expr
+        assert rust["naive_cost"] == pytest.approx(py["naive_cost"], rel=1e-9), expr
+        assert rust["largest_intermediate"] == pytest.approx(
+            py["largest_intermediate"], rel=1e-9
+        ), expr

@@ -1,0 +1,43 @@
+//! Paper Figure 3: runtime vs CR for image classification (RCP ResNet-34 /
+//! CIFAR-10-like) and ASR (CP Conformer-conv / LibriSpeech-like), all three
+//! execution modes. Scaled-down measured epochs.
+use conv_einsum::experiments::runtime_sweep::{render, sweep, Workload};
+use conv_einsum::tnn::Decomp;
+
+fn main() {
+    let full = std::env::var("FULL").is_ok();
+    let crs = if full {
+        vec![0.01, 0.05, 0.1, 0.2, 0.5, 1.0]
+    } else {
+        vec![0.05, 0.5]
+    };
+    // IC: RCP (M=3) on image batches
+    let ic = sweep(
+        &Workload::ImageClassification { size: 12, channels: 3 },
+        Decomp::Cp,
+        3,
+        &crs,
+        8,
+        if full { 48 } else { 16 },
+        2,
+        16,
+    );
+    let t = render("Figure 3 (IC, scaled): s/epoch, RCP(M=3), CIFAR-10-like", &ic);
+    println!("{}", t.render());
+    t.save("fig3_ic").unwrap();
+
+    // ASR: flat CP on sequence batches (W'=1)
+    let asr = sweep(
+        &Workload::SpeechRecognition { channels: 8, frames: 32 },
+        Decomp::Cp,
+        1,
+        &crs,
+        8,
+        if full { 48 } else { 16 },
+        2,
+        16,
+    );
+    let t = render("Figure 3 (ASR, scaled): s/epoch, CP, LibriSpeech-like", &asr);
+    println!("{}", t.render());
+    t.save("fig3_asr").unwrap();
+}

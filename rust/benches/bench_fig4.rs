@@ -1,0 +1,32 @@
+//! Paper Figure 4: video classification, two-stream RCP(M=3) network at
+//! the maximum allowable batch size per mode — runtime + the max-batch
+//! interplay (memory-bounded workload). Spatial stream: RGB; temporal
+//! stream: stacked-flow channels.
+use conv_einsum::experiments::memory::max_batch;
+use conv_einsum::experiments::runtime_sweep::{render, sweep, Workload};
+use conv_einsum::nn::EvalConfig;
+use conv_einsum::tnn::{build_layer, Decomp};
+
+fn main() {
+    let full = std::env::var("FULL").is_ok();
+    let crs = if full { vec![0.01, 0.05, 0.1, 0.2, 0.5, 1.0] } else { vec![0.05, 0.5] };
+    let budget = 8 * 1024 * 1024; // scaled "GPU memory"
+    println!("max allowable batch (budget {} bytes), VC-layer 16x20x3x3 @ 14x14:", budget);
+    println!("{:>6} {:>14} {:>16} {:>16}", "CR", "conv_einsum", "naive w/ ckpt", "naive w/o ckpt");
+    for &cr in &crs {
+        // temporal-stream-like layer: 20 input channels (stacked flow)
+        let spec = build_layer(Decomp::Cp, 3, 16, 20, 3, 3, cr).unwrap();
+        let ce = max_batch(&spec, EvalConfig::conv_einsum(), 14, 14, budget, 128);
+        let nc = max_batch(&spec, EvalConfig::naive_ckpt(), 14, 14, budget, 128);
+        let nn = max_batch(&spec, EvalConfig::naive_no_ckpt(), 14, 14, budget, 128);
+        println!("{:>5.0}% {:>14} {:>16} {:>16}", cr * 100.0, ce, nc, nn);
+    }
+    // runtime at a fixed feasible batch for both "streams"
+    let cells = sweep(
+        &Workload::ImageClassification { size: 14, channels: 3 },
+        Decomp::Cp, 3, &crs, 4, if full { 32 } else { 8 }, 2, 16,
+    );
+    let t = render("Figure 4 (VC spatial stream, scaled): s/epoch", &cells);
+    println!("{}", t.render());
+    t.save("fig4_vc").unwrap();
+}

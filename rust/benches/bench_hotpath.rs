@@ -1,0 +1,83 @@
+//! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf): executor
+//! throughput on the two atoms (contraction GFLOP/s, conv atom GFLOP/s),
+//! pairwise overhead, and coordinator request throughput with batching on
+//! vs off.
+use conv_einsum::coordinator::{EvalService, ServiceConfig};
+use conv_einsum::einsum::{parse, SizedSpec};
+use conv_einsum::exec::pairwise;
+use conv_einsum::tnn::{build_layer, Decomp};
+use conv_einsum::util::rng::Rng;
+use conv_einsum::util::timing::bench;
+use conv_einsum::Tensor;
+
+fn gflops(mults: f64, secs: f64) -> f64 {
+    2.0 * mults / secs / 1e9
+}
+
+fn main() {
+    let mut rng = Rng::new(3);
+
+    // contraction atom: batched matmul via "gts,gns->gtn"
+    let (g, t, n, s) = (4usize, 96usize, 96usize, 96usize);
+    let spec = SizedSpec::new(
+        parse("gts,gns->gtn").unwrap(),
+        vec![vec![g, t, s], vec![g, n, s]],
+    )
+    .unwrap();
+    let a = Tensor::rand(&[g, t, s], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&[g, n, s], -1.0, 1.0, &mut rng);
+    let sample = bench("matmul-atom 4x96^3", 2, 10, || {
+        let _ = pairwise(&spec, &a, &b);
+    });
+    println!("{}", sample.report());
+    println!(
+        "  -> {:.2} GFLOP/s",
+        gflops((g * t * n * s) as f64, sample.median_secs())
+    );
+
+    // conv atom: standard conv layer "bshw,tshw->bthw|hw"
+    let (bb, ss, tt, hh, kk) = (4usize, 16usize, 16usize, 32usize, 3usize);
+    let spec = SizedSpec::new(
+        parse("bshw,tshw->bthw|hw").unwrap(),
+        vec![vec![bb, ss, hh, hh], vec![tt, ss, kk, kk]],
+    )
+    .unwrap();
+    let x = Tensor::rand(&[bb, ss, hh, hh], -1.0, 1.0, &mut rng);
+    let w = Tensor::rand(&[tt, ss, kk, kk], -1.0, 1.0, &mut rng);
+    let sample = bench("conv-atom 4x16x16 32^2 k3", 2, 10, || {
+        let _ = pairwise(&spec, &x, &w);
+    });
+    println!("{}", sample.report());
+    let mults = (bb * ss * tt * hh * hh * kk * kk) as f64;
+    println!("  -> {:.2} GFLOP/s", gflops(mults, sample.median_secs()));
+
+    // coordinator throughput, batching on vs off
+    for max_batch in [1usize, 8] {
+        let layer = build_layer(Decomp::Cp, 1, 16, 8, 3, 3, 0.5).unwrap();
+        let factors = layer.init_factors(&mut rng);
+        let service = EvalService::start(
+            ServiceConfig { max_batch, workers: 2, ..Default::default() },
+            vec![("cp".into(), layer.expr.clone(), factors)],
+        )
+        .unwrap();
+        let h = service.handle();
+        let n_req = 64;
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|_| {
+                let x = Tensor::rand(&[1, 8, 16, 16], -1.0, 1.0, &mut rng);
+                h.submit("cp", x).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let dt = t0.elapsed();
+        println!(
+            "coordinator max_batch={max_batch}: {n_req} req in {dt:?} ({:.0} req/s) | {}",
+            n_req as f64 / dt.as_secs_f64(),
+            h.metrics().report()
+        );
+        service.shutdown();
+    }
+}

@@ -1,0 +1,40 @@
+//! Paper Table 1: run-time per epoch, RCP(M=3) ResNet-34-proxy on the
+//! ImageNet-like synthetic task, conv_einsum vs naive w/ ckpt across CRs.
+//! Scaled to laptop size; the paper's *shape* (conv_einsum faster at every
+//! CR, both growing with CR) is the reproduction target.
+use conv_einsum::experiments::runtime_sweep::{render, sweep, Workload};
+use conv_einsum::tnn::Decomp;
+
+fn main() {
+    let full = std::env::var("FULL").is_ok();
+    let crs = if full {
+        vec![0.05, 0.1, 0.2, 0.5, 1.0]
+    } else {
+        vec![0.05, 0.2, 1.0]
+    };
+    let cells = sweep(
+        &Workload::ImageClassification { size: if full { 24 } else { 12 }, channels: 3 },
+        Decomp::Cp,
+        3,
+        &crs,
+        8,
+        if full { 64 } else { 16 },
+        2,
+        16,
+    );
+    let table = render(
+        "Table 1 (scaled): s/epoch, RCP(M=3) ResNet-34-proxy, ImageNet-like",
+        &cells,
+    );
+    println!("{}", table.render());
+    table.save("table1").unwrap();
+    // shape check: conv_einsum no slower than naive w/ ckpt at each CR
+    for cr in &crs {
+        let ce = cells.iter().find(|c| c.cr == *cr && c.mode == "conv_einsum").unwrap();
+        let nc = cells.iter().find(|c| c.cr == *cr && c.mode == "naive w/ ckpt").unwrap();
+        println!(
+            "CR {:>4.0}%: conv_einsum {:.2}s vs naive-ckpt {:.2}s ({:.2}x)",
+            cr * 100.0, ce.train_secs, nc.train_secs, nc.train_secs / ce.train_secs
+        );
+    }
+}

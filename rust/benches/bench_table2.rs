@@ -1,0 +1,19 @@
+//! Paper Table 2: FLOPs per CP convolutional layer in ResNet-34 (analytic,
+//! CR=100%, batch 128) — exact-mechanism reproduction.
+use conv_einsum::experiments::table2;
+
+fn main() {
+    let table = table2::run(128);
+    println!("{}", table.render());
+    table.save("table2").expect("save experiments/table2.json");
+    // Headline checks mirroring the paper's shape:
+    let rows = table2::rows(128);
+    for r in &rows {
+        assert!(r.ltr > r.opt, "{} must win", r.stage);
+    }
+    println!(
+        "speedups grow with depth: conv2_x {:.1}x -> conv5_x {:.1}x (paper: 4.5x -> 90x)",
+        rows[1].ltr / rows[1].opt,
+        rows[4].ltr / rows[4].opt
+    );
+}

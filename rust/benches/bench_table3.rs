@@ -1,0 +1,30 @@
+//! Paper Table 3: maximal batch size under a memory budget — ASR-like and
+//! VC-like tensorial layers across CRs and the three execution modes.
+//! conv_einsum must permit the largest batches (paper's headline).
+use conv_einsum::experiments::memory::table3;
+use conv_einsum::tnn::Decomp;
+
+fn main() {
+    let budget = 8 * 1024 * 1024; // scaled stand-in for the 2080Ti's 11 GB
+    let full = std::env::var("FULL").is_ok();
+    let crs = if full {
+        vec![0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0]
+    } else {
+        vec![0.05, 0.2, 1.0]
+    };
+    // ASR-like: CP over 1-D frames (represented as H'=48, W'=1)
+    let asr = table3(
+        "Table 3 (ASR, scaled): max batch under memory budget",
+        Decomp::Cp, 1, 16, 16, 3, 48, 1, &crs, budget,
+    );
+    println!("{}", asr.render());
+    asr.save("table3_asr").unwrap();
+
+    // VC-like: RCP(M=3), temporal stream channels
+    let vc = table3(
+        "Table 3 (VC temporal, scaled): max batch under memory budget",
+        Decomp::Cp, 3, 16, 20, 3, 14, 14, &crs, budget,
+    );
+    println!("{}", vc.render());
+    vc.save("table3_vc").unwrap();
+}

@@ -1,0 +1,48 @@
+//! Paper Table 5: s/epoch on CIFAR-10-like IC for the reshaped
+//! decomposition zoo (RCP / RTR / RTT / RTK, M=3), three execution modes.
+use conv_einsum::experiments::runtime_sweep::{render, sweep, Workload};
+use conv_einsum::experiments::Table;
+use conv_einsum::tnn::Decomp;
+
+fn main() {
+    let full = std::env::var("FULL").is_ok();
+    let mut rows = Vec::new();
+    for (name, decomp) in [
+        ("RCP", Decomp::Cp),
+        ("RTR", Decomp::TensorRing),
+        ("RTT", Decomp::TensorTrain),
+        ("RTK", Decomp::Tucker),
+    ] {
+        let cells = sweep(
+            &Workload::ImageClassification { size: 12, channels: 3 },
+            decomp,
+            3,
+            &[0.5],
+            8,
+            if full { 48 } else { 16 },
+            2,
+            16,
+        );
+        let mut row = vec![name.to_string()];
+        for mode in ["conv_einsum", "naive w/ ckpt", "naive w/o ckpt"] {
+            let c = cells.iter().find(|c| c.mode == mode).unwrap();
+            row.push(format!("{:.2}", c.train_secs));
+            row.push(format!("{:.2}", c.test_secs));
+        }
+        rows.push(row);
+        let t = render(&format!("Table 5 detail: {name}"), &cells);
+        println!("{}", t.render());
+    }
+    let table = Table {
+        title: "Table 5 (scaled): s/epoch by decomposition form (M=3, CR 50%)".into(),
+        header: vec![
+            "form".into(),
+            "conv_einsum train".into(), "conv_einsum test".into(),
+            "naive ckpt train".into(), "naive ckpt test".into(),
+            "naive no-ckpt train".into(), "naive no-ckpt test".into(),
+        ],
+        rows,
+    };
+    println!("{}", table.render());
+    table.save("table5").unwrap();
+}

@@ -1,0 +1,36 @@
+//! Paper Table 6: low-resource (4-core CPU) s/epoch, RCP vs TK across CRs.
+//! Our engine is single-threaded per request, so the 4-core cap is the
+//! natural habitat; this bench compares the two decompositions' scaling.
+use conv_einsum::experiments::runtime_sweep::{sweep, Workload};
+use conv_einsum::experiments::Table;
+use conv_einsum::tnn::Decomp;
+
+fn main() {
+    let full = std::env::var("FULL").is_ok();
+    let crs = if full { vec![0.05, 0.1, 0.2, 0.5, 1.0] } else { vec![0.05, 0.5] };
+    let mut rows = Vec::new();
+    for &cr in &crs {
+        let mut row = vec![format!("{:.0}%", cr * 100.0)];
+        for decomp in [Decomp::Cp, Decomp::Tucker] {
+            let cells = sweep(
+                &Workload::ImageClassification { size: 12, channels: 3 },
+                decomp, 3, &[cr], 8, if full { 32 } else { 12 }, 2, 16,
+            );
+            let ce = cells.iter().find(|c| c.mode == "conv_einsum").unwrap();
+            row.push(format!("{:.2}", ce.train_secs));
+            row.push(format!("{:.2}", ce.test_secs));
+        }
+        rows.push(row);
+    }
+    let table = Table {
+        title: "Table 6 (scaled, CPU): conv_einsum s/epoch, RCP vs RTK across CRs".into(),
+        header: vec![
+            "CR".into(),
+            "RCP train".into(), "RCP test".into(),
+            "RTK train".into(), "RTK test".into(),
+        ],
+        rows,
+    };
+    println!("{}", table.render());
+    table.save("table6").unwrap();
+}

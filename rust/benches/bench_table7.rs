@@ -1,0 +1,51 @@
+//! Paper Table 7: accuracy vs compression rate (the trend reproduction:
+//! accuracy degrades monotonically-ish as CR shrinks). Trains the small
+//! RCP net per CR on the synthetic IC task.
+use conv_einsum::experiments::Table;
+use conv_einsum::nn::{small_tnn_cnn, EvalConfig, Sgd, SyntheticImages, Trainer, TrainerConfig};
+use conv_einsum::tnn::Decomp;
+use conv_einsum::util::rng::Rng;
+
+fn main() {
+    let full = std::env::var("FULL").is_ok();
+    let crs = if full {
+        vec![1.0, 0.5, 0.2, 0.1, 0.05, 0.02]
+    } else {
+        vec![1.0, 0.1, 0.02]
+    };
+    let epochs = if full { 8 } else { 4 };
+    let mut rows = Vec::new();
+    let mut accs = Vec::new();
+    for &cr in &crs {
+        let mut rng = Rng::new(0x7AB1E7);
+        let mut model = small_tnn_cnn(
+            Decomp::Cp, 2, cr, 1, 12, 2, 3, 4, EvalConfig::conv_einsum(), &mut rng,
+        )
+        .unwrap();
+        let train = SyntheticImages::sized(1, 12, 12, 4, 96, 31);
+        let eval = SyntheticImages::sized(1, 12, 12, 4, 48, 32);
+        let mut trainer = Trainer::new(
+            TrainerConfig { batch_size: 16, epochs, ..Default::default() },
+            Sgd::new(0.05, 0.9, 5e-4),
+        );
+        let stats = trainer.fit(&mut model, &train, &eval);
+        let acc = stats.last().unwrap().eval_acc;
+        accs.push(acc);
+        rows.push(vec![
+            format!("{:.0}%", cr * 100.0),
+            format!("{}", model.param_count()),
+            format!("{:.3}", acc),
+        ]);
+        println!("CR {:>4.0}%: {} params, eval acc {:.3}", cr * 100.0, model.param_count(), acc);
+    }
+    let table = Table {
+        title: "Table 7 (scaled): accuracy vs compression rate (RCP, synthetic IC)".into(),
+        header: vec!["CR".into(), "params".into(), "eval acc".into()],
+        rows,
+    };
+    println!("{}", table.render());
+    table.save("table7").unwrap();
+    // trend: highest CR should not be the worst model
+    let max_acc = accs.iter().cloned().fold(0.0f32, f32::max);
+    assert!(accs[0] >= max_acc - 0.15, "full-rank model unexpectedly weak: {accs:?}");
+}

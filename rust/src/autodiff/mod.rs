@@ -1,0 +1,357 @@
+//! Autodiff over pairwise evaluation paths, with gradient checkpointing
+//! (paper §3.3) and peak-memory metering (the mechanism behind Table 3).
+//!
+//! Evaluating an N-input conv_einsum pairwise produces N−1 intermediates.
+//! An autograd-style backward needs each step's operands, so the default
+//! ([`CkptPolicy::StoreAll`]) tape keeps every intermediate live — high
+//! memory. [`CkptPolicy::Sqrt`] keeps only √K segment boundaries and
+//! recomputes inside each segment during the backward pass, trading FLOPs
+//! for memory exactly as Chen et al. [21] describe; [`CkptPolicy::None`]
+//! stores nothing and recomputes each segment from the inputs.
+
+use crate::exec::{pairwise_mod, pairwise_vjp_mod};
+use crate::planner::Plan;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+
+/// Checkpointing policy for the backward pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptPolicy {
+    /// Keep every intermediate (PyTorch autograd default; "naive w/o ckpt").
+    StoreAll,
+    /// √K segment checkpointing (paper's "w/ ckpt" mode).
+    Sqrt,
+    /// Keep nothing; recompute every segment from the inputs.
+    None,
+}
+
+/// Tracks live tensor bytes during an evaluation, recording the peak.
+/// This is the quantity Table 3 bounds with GPU memory.
+#[derive(Debug, Default)]
+pub struct MemoryMeter {
+    live: RefCell<usize>,
+    peak: RefCell<usize>,
+}
+
+impl MemoryMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&self, bytes: usize) {
+        let mut live = self.live.borrow_mut();
+        *live += bytes;
+        let mut peak = self.peak.borrow_mut();
+        if *live > *peak {
+            *peak = *live;
+        }
+    }
+
+    pub fn free(&self, bytes: usize) {
+        let mut live = self.live.borrow_mut();
+        *live = live.saturating_sub(bytes);
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        *self.peak.borrow()
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        *self.live.borrow()
+    }
+
+    pub fn reset(&self) {
+        *self.live.borrow_mut() = 0;
+        *self.peak.borrow_mut() = 0;
+    }
+}
+
+/// DAG node id: inputs are 0..n, step k produces node n+k.
+type NodeId = usize;
+
+/// A differentiation tape: node values retained by the forward pass (per
+/// checkpoint policy) plus the forward output.
+pub struct Tape {
+    vals: Vec<Option<Tensor>>,
+    pub output: Tensor,
+}
+
+/// Forward + backward executor over a [`Plan`], with checkpointing.
+pub struct PathAutodiff<'p> {
+    plan: &'p Plan,
+    /// node ids consumed/produced per step, precomputed from the plan's
+    /// working-list positions.
+    step_nodes: Vec<(NodeId, NodeId, NodeId)>, // (lhs, rhs, out)
+    root: NodeId,
+}
+
+impl<'p> PathAutodiff<'p> {
+    pub fn new(plan: &'p Plan) -> Result<Self> {
+        let n = plan.n_inputs;
+        let mut working: Vec<NodeId> = (0..n).collect();
+        let mut step_nodes = Vec::with_capacity(plan.steps.len());
+        for (k, step) in plan.steps.iter().enumerate() {
+            let (i, j) = (step.lhs, step.rhs);
+            if i >= working.len() || j >= working.len() || i == j {
+                return Err(anyhow!("invalid step indices in plan"));
+            }
+            let out = n + k;
+            step_nodes.push((working[i], working[j], out));
+            let (hi, lo) = if i > j { (i, j) } else { (j, i) };
+            working.remove(hi);
+            working.remove(lo);
+            working.push(out);
+        }
+        if working.len() != 1 {
+            return Err(anyhow!("plan does not reduce to a single output"));
+        }
+        Ok(PathAutodiff {
+            plan,
+            root: working[0],
+            step_nodes,
+        })
+    }
+
+    fn n(&self) -> usize {
+        self.plan.n_inputs
+    }
+
+    /// Execute one step given node values, metering the allocation.
+    fn run_step(&self, k: usize, vals: &mut [Option<Tensor>], meter: &MemoryMeter) {
+        let (l, r, o) = self.step_nodes[k];
+        let step = &self.plan.steps[k];
+        let a = vals[l].as_ref().expect("lhs value live");
+        let b = vals[r].as_ref().expect("rhs value live");
+        let out = pairwise_mod(&step.sized, a, b, &step.moduli);
+        meter.alloc(out.bytes());
+        vals[o] = Some(out);
+    }
+
+    /// Drop a node value, metering the free.
+    fn drop_val(&self, vals: &mut [Option<Tensor>], node: NodeId, meter: &MemoryMeter) {
+        if let Some(t) = vals[node].take() {
+            meter.free(t.bytes());
+        }
+    }
+
+    /// Is `node` still needed by any step ≥ `after` (as an operand)?
+    fn needed_after(&self, node: NodeId, after: usize) -> bool {
+        self.step_nodes[after..]
+            .iter()
+            .any(|&(l, r, _)| l == node || r == node)
+    }
+
+    /// Forward pass returning the output (final permutation applied).
+    /// Intermediates are freed as soon as no later step consumes them —
+    /// this is the inference-mode memory profile.
+    pub fn forward(&self, inputs: &[&Tensor], meter: &MemoryMeter) -> Result<Tensor> {
+        let n = self.n();
+        if inputs.len() != n {
+            return Err(anyhow!("expected {} inputs, got {}", n, inputs.len()));
+        }
+        let mut vals: Vec<Option<Tensor>> = vec![None; n + self.plan.steps.len()];
+        for (i, t) in inputs.iter().enumerate() {
+            meter.alloc(t.bytes());
+            vals[i] = Some((*t).clone());
+        }
+        for k in 0..self.plan.steps.len() {
+            self.run_step(k, &mut vals, meter);
+            let (l, r, _) = self.step_nodes[k];
+            for node in [l, r] {
+                if node != self.root && !self.needed_after(node, k + 1) {
+                    self.drop_val(&mut vals, node, meter);
+                }
+            }
+        }
+        let root = vals[self.root].take().expect("root value");
+        let out = match &self.plan.final_perm {
+            Some(p) => {
+                let o = root.permute(p);
+                meter.alloc(o.bytes());
+                meter.free(root.bytes());
+                o
+            }
+            None => root,
+        };
+        Ok(out)
+    }
+
+    /// Forward + backward under a checkpoint policy. Returns the output
+    /// and ∂L/∂input for every input, given the output cotangent computed
+    /// by `dout_fn(output) -> dout`.
+    pub fn forward_backward(
+        &self,
+        inputs: &[&Tensor],
+        dout_fn: impl FnOnce(&Tensor) -> Tensor,
+        policy: CkptPolicy,
+        meter: &MemoryMeter,
+    ) -> Result<(Tensor, Vec<Tensor>)> {
+        let mut tape = self.forward_with_tape(inputs, policy, meter)?;
+        let dout = dout_fn(&tape.output);
+        let grads = self.backward(&mut tape, &dout, meter)?;
+        Ok((tape.output, grads))
+    }
+
+    /// Forward pass retaining a differentiation tape per the checkpoint
+    /// policy. Use with [`PathAutodiff::backward`]; this is the layer-level
+    /// API of the training substrate.
+    pub fn forward_with_tape(
+        &self,
+        inputs: &[&Tensor],
+        policy: CkptPolicy,
+        meter: &MemoryMeter,
+    ) -> Result<Tape> {
+        let n = self.n();
+        let ksteps = self.plan.steps.len();
+        if inputs.len() != n {
+            return Err(anyhow!("expected {} inputs, got {}", n, inputs.len()));
+        }
+
+        // Which step outputs to retain during the stored forward:
+        let keep: Vec<bool> = match policy {
+            CkptPolicy::StoreAll => vec![true; ksteps],
+            CkptPolicy::None => vec![false; ksteps],
+            CkptPolicy::Sqrt => {
+                let seg = (ksteps as f64).sqrt().ceil() as usize;
+                (0..ksteps).map(|k| seg != 0 && k % seg == seg - 1).collect()
+            }
+        };
+
+        let mut vals: Vec<Option<Tensor>> = vec![None; n + ksteps];
+        for (i, t) in inputs.iter().enumerate() {
+            meter.alloc(t.bytes());
+            vals[i] = Some((*t).clone());
+        }
+        // Stored forward: keep checkpointed nodes; free the rest when no
+        // longer needed *within the remaining forward*.
+        for k in 0..ksteps {
+            self.run_step(k, &mut vals, meter);
+            let (l, r, _) = self.step_nodes[k];
+            for node in [l, r] {
+                let is_input = node < n;
+                let is_kept = !is_input && keep[node - n];
+                if !is_input && !is_kept && !self.needed_after(node, k + 1) {
+                    self.drop_val(&mut vals, node, meter);
+                }
+            }
+        }
+        // Under None/Sqrt, non-checkpointed values that were still live at
+        // the end of the forward (e.g. the root's direct operands) stay, but
+        // drop anything not marked kept except the root.
+        for k in 0..ksteps {
+            let node = n + k;
+            if node != self.root && !keep[k] && vals[node].is_some() {
+                self.drop_val(&mut vals, node, meter);
+            }
+        }
+
+        let root_val = vals[self.root].clone().expect("root");
+        let output = match &self.plan.final_perm {
+            Some(p) => {
+                let o = root_val.permute(p);
+                meter.alloc(o.bytes());
+                o
+            }
+            None => root_val.clone(),
+        };
+        Ok(Tape { vals, output })
+    }
+
+    /// Backward pass from a tape: returns ∂L/∂input for every input given
+    /// the output cotangent. Consumes the tape's stored values (recomputing
+    /// checkpointed segments as needed).
+    pub fn backward(
+        &self,
+        tape: &mut Tape,
+        dout: &Tensor,
+        meter: &MemoryMeter,
+    ) -> Result<Vec<Tensor>> {
+        let n = self.n();
+        let ksteps = self.plan.steps.len();
+        let vals = &mut tape.vals;
+        meter.alloc(dout.bytes());
+        let droot = match &self.plan.final_perm {
+            Some(p) => {
+                let inv = invert(p);
+                let d = dout.permute(&inv);
+                meter.alloc(d.bytes());
+                meter.free(dout.bytes());
+                d
+            }
+            None => dout.clone(),
+        };
+
+        // Backward, recomputing missing operand values per step (checkpoint
+        // segment replay).
+        let mut grads: Vec<Option<Tensor>> = vec![None; n + ksteps];
+        grads[self.root] = Some(droot);
+        for k in (0..ksteps).rev() {
+            let (l, r, o) = self.step_nodes[k];
+            for node in [l, r] {
+                if vals[node].is_none() {
+                    self.recompute(node, vals, meter);
+                }
+            }
+            let step = &self.plan.steps[k];
+            let dnode = grads[o].take().expect("cotangent for step output");
+            let a = vals[l].as_ref().unwrap();
+            let b = vals[r].as_ref().unwrap();
+            let (da, db) = pairwise_vjp_mod(&step.sized, a, b, &dnode, &step.moduli);
+            meter.free(dnode.bytes());
+            meter.alloc(da.bytes());
+            meter.alloc(db.bytes());
+            accumulate(&mut grads, l, da, meter);
+            accumulate(&mut grads, r, db, meter);
+            // The step output value is no longer needed going backward.
+            if o >= n {
+                self.drop_val(vals, o, meter);
+            }
+        }
+
+        let input_grads: Vec<Tensor> = (0..n)
+            .map(|i| {
+                grads[i].take().unwrap_or_else(|| {
+                    Tensor::zeros(vals[i].as_ref().expect("input value live").shape())
+                })
+            })
+            .collect();
+        Ok(input_grads)
+    }
+
+    /// Recompute the value of `node` (a step output) from the nearest
+    /// materialized ancestors, re-running intermediate steps.
+    fn recompute(&self, node: NodeId, vals: &mut Vec<Option<Tensor>>, meter: &MemoryMeter) {
+        let n = self.n();
+        debug_assert!(node >= n, "input values are always live");
+        let k = node - n;
+        let (l, r, _) = self.step_nodes[k];
+        for dep in [l, r] {
+            if vals[dep].is_none() {
+                self.recompute(dep, vals, meter);
+            }
+        }
+        self.run_step(k, vals, meter);
+    }
+}
+
+fn invert(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+fn accumulate(grads: &mut [Option<Tensor>], node: NodeId, g: Tensor, meter: &MemoryMeter) {
+    match &mut grads[node] {
+        Some(existing) => {
+            existing.add_assign(&g);
+            meter.free(g.bytes());
+        }
+        slot @ None => *slot = Some(g),
+    }
+}
+
+#[cfg(test)]
+mod tests;

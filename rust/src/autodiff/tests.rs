@@ -1,0 +1,251 @@
+//! Tests for path autodiff and checkpointing: gradient correctness against
+//! finite differences and against the single-op VJP; memory-policy
+//! invariants (StoreAll ≥ Sqrt ≥ forward-only peak; identical gradients
+//! under every policy).
+
+use super::*;
+use crate::einsum::{parse, SizedSpec};
+use crate::exec::pairwise;
+use crate::planner::{plan_with, PlanOptions, Strategy};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+fn make_plan(expr: &str, dims: Vec<Vec<usize>>, strategy: Strategy) -> crate::planner::Plan {
+    let spec = parse(expr).unwrap();
+    let sized = SizedSpec::new(spec, dims).unwrap();
+    plan_with(
+        &sized,
+        &PlanOptions {
+            strategy,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn rand_inputs(dims: &[Vec<usize>], rng: &mut Rng) -> Vec<Tensor> {
+    dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, rng)).collect()
+}
+
+/// Sum-loss cotangent: L = Σ out ⊙ dout for fixed random dout.
+fn fixed_dout(shape: &[usize], rng: &mut Rng) -> Tensor {
+    Tensor::rand(shape, -1.0, 1.0, rng)
+}
+
+#[test]
+fn two_input_grads_match_pairwise_vjp() {
+    let expr = "ij,jk->ik";
+    let dims = vec![vec![3, 4], vec![4, 5]];
+    let plan = make_plan(expr, dims.clone(), Strategy::Optimal);
+    let mut rng = Rng::new(1);
+    let ins = rand_inputs(&dims, &mut rng);
+    let ad = PathAutodiff::new(&plan).unwrap();
+    let meter = MemoryMeter::new();
+    let dout = fixed_dout(&[3, 5], &mut rng);
+    let d2 = dout.clone();
+    let (_out, grads) = ad
+        .forward_backward(
+            &[&ins[0], &ins[1]],
+            |_| d2.clone(),
+            CkptPolicy::StoreAll,
+            &meter,
+        )
+        .unwrap();
+    let sized = SizedSpec::new(parse(expr).unwrap(), dims).unwrap();
+    let (da, db) = crate::exec::pairwise_vjp(&sized, &ins[0], &ins[1], &dout);
+    grads[0].assert_close(&da, 1e-4);
+    grads[1].assert_close(&db, 1e-4);
+}
+
+#[test]
+fn multi_input_grads_match_finite_differences() {
+    // CP layer in 1D with optimal path (shared intermediates exercise grad
+    // accumulation through the DAG).
+    let expr = "bsh,rt,rs,rh->bth|h";
+    let dims = vec![vec![2, 2, 6], vec![3, 2], vec![3, 2], vec![3, 3]];
+    let plan = make_plan(expr, dims.clone(), Strategy::Optimal);
+    let mut rng = Rng::new(2);
+    let ins = rand_inputs(&dims, &mut rng);
+    let refs: Vec<&Tensor> = ins.iter().collect();
+    let ad = PathAutodiff::new(&plan).unwrap();
+    let meter = MemoryMeter::new();
+    let out = ad.forward(&refs, &meter).unwrap();
+    let dout = fixed_dout(out.shape(), &mut rng);
+    let d2 = dout.clone();
+    let (_o, grads) = ad
+        .forward_backward(&refs, |_| d2.clone(), CkptPolicy::StoreAll, &meter)
+        .unwrap();
+
+    let loss = |ins: &[Tensor]| -> f32 {
+        let refs: Vec<&Tensor> = ins.iter().collect();
+        let o = crate::exec::execute_path(&plan, &refs).unwrap();
+        o.data().iter().zip(dout.data()).map(|(a, b)| a * b).sum()
+    };
+    let eps = 1e-2f32;
+    for input_idx in 0..ins.len() {
+        for k in [0usize, ins[input_idx].len() / 2, ins[input_idx].len() - 1] {
+            let mut p = ins.clone();
+            p[input_idx].data_mut()[k] += eps;
+            let mut m = ins.clone();
+            m[input_idx].data_mut()[k] -= eps;
+            let fd = (loss(&p) - loss(&m)) / (2.0 * eps);
+            let an = grads[input_idx].data()[k];
+            assert!(
+                (fd - an).abs() < 3e-2 * (1.0 + an.abs()),
+                "input {input_idx} coord {k}: fd={fd} analytic={an}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gradients_identical_across_ckpt_policies() {
+    let expr = "bshw,rt,rs,rh,rw->bthw|hw";
+    let dims = vec![vec![2, 2, 5, 5], vec![3, 2], vec![3, 2], vec![3, 3], vec![3, 3]];
+    let plan = make_plan(expr, dims.clone(), Strategy::Optimal);
+    let mut rng = Rng::new(3);
+    let ins = rand_inputs(&dims, &mut rng);
+    let refs: Vec<&Tensor> = ins.iter().collect();
+    let ad = PathAutodiff::new(&plan).unwrap();
+    let meter = MemoryMeter::new();
+    let out = ad.forward(&refs, &meter).unwrap();
+    let dout = fixed_dout(out.shape(), &mut rng);
+
+    let mut all = Vec::new();
+    for policy in [CkptPolicy::StoreAll, CkptPolicy::Sqrt, CkptPolicy::None] {
+        let meter = MemoryMeter::new();
+        let d = dout.clone();
+        let (o, grads) = ad
+            .forward_backward(&refs, |_| d.clone(), policy, &meter)
+            .unwrap();
+        o.assert_close(&out, 1e-4);
+        all.push(grads);
+    }
+    for i in 0..ins.len() {
+        all[1][i].assert_close(&all[0][i], 1e-4);
+        all[2][i].assert_close(&all[0][i], 1e-4);
+    }
+}
+
+#[test]
+fn checkpointing_reduces_peak_memory() {
+    // A batch chain "za,ab,...,gh->zh" with a large batch mode z: every
+    // intermediate is z×2, so StoreAll holds 7 large intermediates at once
+    // while Sqrt holds only √K boundaries (+1 transient recompute).
+    let n = 8;
+    let letters: Vec<char> = "abcdefghi".chars().collect();
+    let mut parts = vec!["za".to_string()];
+    for i in 0..n - 1 {
+        parts.push(format!("{}{}", letters[i], letters[i + 1]));
+    }
+    let expr = format!("{}->z{}", parts.join(","), letters[n - 1]);
+    let mut dims: Vec<Vec<usize>> = vec![vec![4096, 2]];
+    dims.extend((0..n - 1).map(|_| vec![2, 2]));
+    // Left-to-right keeps the chain order so intermediates stay 24×24.
+    let plan = make_plan(&expr, dims.clone(), Strategy::LeftToRight);
+    let mut rng = Rng::new(4);
+    let ins = rand_inputs(&dims, &mut rng);
+    let refs: Vec<&Tensor> = ins.iter().collect();
+    let ad = PathAutodiff::new(&plan).unwrap();
+
+    let mut peaks = Vec::new();
+    for policy in [CkptPolicy::StoreAll, CkptPolicy::Sqrt, CkptPolicy::None] {
+        let meter = MemoryMeter::new();
+        let (_o, _g) = ad
+            .forward_backward(&refs, |o| Tensor::full(o.shape(), 1.0), policy, &meter)
+            .unwrap();
+        peaks.push(meter.peak_bytes());
+    }
+    assert!(
+        peaks[0] > peaks[1],
+        "StoreAll peak {} should exceed Sqrt peak {}",
+        peaks[0],
+        peaks[1]
+    );
+    // CkptPolicy::None recomputes the whole prefix at the first backward
+    // step and keeps it live for the remaining steps, so its *peak* matches
+    // StoreAll — which is exactly why the paper uses segment checkpointing
+    // rather than full recomputation. Sqrt must beat both.
+    assert!(
+        peaks[2] >= peaks[1],
+        "None peak {} should be ≥ Sqrt peak {}",
+        peaks[2],
+        peaks[1]
+    );
+}
+
+#[test]
+fn forward_only_frees_dead_intermediates() {
+    let expr = "ij,jk,kl,lm->im";
+    let dims = vec![vec![16, 16]; 4];
+    let plan = make_plan(expr, dims.clone(), Strategy::LeftToRight);
+    let mut rng = Rng::new(5);
+    let ins = rand_inputs(&dims, &mut rng);
+    let refs: Vec<&Tensor> = ins.iter().collect();
+    let ad = PathAutodiff::new(&plan).unwrap();
+    let meter = MemoryMeter::new();
+    let out = ad.forward(&refs, &meter).unwrap();
+    assert_eq!(out.shape(), &[16, 16]);
+    // Peak should be well under "inputs + all intermediates":
+    let all = 4 * 16 * 16 * 4 + 3 * 16 * 16 * 4;
+    assert!(meter.peak_bytes() < all);
+    // Live at the end: inputs (cloned) + output only.
+    assert!(meter.live_bytes() <= 5 * 16 * 16 * 4 + 16 * 16 * 4);
+}
+
+#[test]
+fn meter_tracks_alloc_free() {
+    let m = MemoryMeter::new();
+    m.alloc(100);
+    m.alloc(50);
+    assert_eq!(m.live_bytes(), 150);
+    assert_eq!(m.peak_bytes(), 150);
+    m.free(100);
+    assert_eq!(m.live_bytes(), 50);
+    assert_eq!(m.peak_bytes(), 150);
+    m.alloc(60);
+    assert_eq!(m.peak_bytes(), 150);
+    m.reset();
+    assert_eq!(m.peak_bytes(), 0);
+}
+
+#[test]
+fn conv_path_grads_policy_invariant() {
+    // Gradient equality across policies for a *convolutional* TNN path.
+    let expr = "bsh,(r1)t,(r1)(r2)h,(r2)s->bth|h";
+    let dims = vec![vec![2, 3, 6], vec![2, 4], vec![2, 2, 3], vec![2, 3]];
+    let plan = make_plan(expr, dims.clone(), Strategy::Optimal);
+    let mut rng = Rng::new(6);
+    let ins = rand_inputs(&dims, &mut rng);
+    let refs: Vec<&Tensor> = ins.iter().collect();
+    let ad = PathAutodiff::new(&plan).unwrap();
+    let meter = MemoryMeter::new();
+    let out = ad.forward(&refs, &meter).unwrap();
+    let dout = fixed_dout(out.shape(), &mut rng);
+    let d1 = dout.clone();
+    let d2 = dout.clone();
+    let (_o1, g1) = ad
+        .forward_backward(&refs, |_| d1.clone(), CkptPolicy::StoreAll, &meter)
+        .unwrap();
+    let (_o2, g2) = ad
+        .forward_backward(&refs, |_| d2.clone(), CkptPolicy::Sqrt, &meter)
+        .unwrap();
+    for i in 0..ins.len() {
+        g2[i].assert_close(&g1[i], 1e-4);
+    }
+}
+
+#[test]
+fn pairwise_and_path_agree_on_two_inputs() {
+    let expr = "bshw,tshw->bthw|hw";
+    let dims = vec![vec![1, 2, 5, 5], vec![3, 2, 3, 3]];
+    let plan = make_plan(expr, dims.clone(), Strategy::Optimal);
+    let mut rng = Rng::new(7);
+    let ins = rand_inputs(&dims, &mut rng);
+    let ad = PathAutodiff::new(&plan).unwrap();
+    let meter = MemoryMeter::new();
+    let got = ad.forward(&[&ins[0], &ins[1]], &meter).unwrap();
+    let sized = SizedSpec::new(parse(expr).unwrap(), dims).unwrap();
+    let want = pairwise(&sized, &ins[0], &ins[1]);
+    got.assert_close(&want, 1e-4);
+}

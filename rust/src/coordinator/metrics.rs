@@ -1,0 +1,111 @@
+//! Service metrics: atomic counters + latency histograms, with cheap
+//! snapshots for reporting.
+
+use crate::util::timing::LatencyHisto;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics for the evaluation service.
+#[derive(Default)]
+pub struct ServiceMetrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    plan_misses: AtomicU64,
+    queue_depth: AtomicUsize,
+    latency: Mutex<LatencyHisto>,
+    exec_time: Mutex<LatencyHisto>,
+}
+
+impl ServiceMetrics {
+    pub fn note_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_done(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().unwrap().record(latency);
+    }
+
+    pub fn note_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn note_plan_miss(&self) {
+        self.plan_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_exec_time(&self, d: Duration) {
+        self.exec_time.lock().unwrap().record(d);
+    }
+
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let latency = self.latency.lock().unwrap().clone();
+        let exec = self.exec_time.lock().unwrap().clone();
+        let batches = self.batches.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            latency_p50_us: latency.percentile_us(50.0),
+            latency_p99_us: latency.percentile_us(99.0),
+            latency_mean_us: latency.mean_us(),
+            exec_mean_us: exec.mean_us(),
+        }
+    }
+}
+
+/// A point-in-time copy of the service metrics.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub plan_misses: u64,
+    pub queue_depth: usize,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_mean_us: f64,
+    pub exec_mean_us: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} submitted, {} completed, {} errors | batches: {} (mean size {:.2}, {} plan misses) | latency: p50 {:.0}us p99 {:.0}us mean {:.0}us | exec mean {:.0}us",
+            self.submitted,
+            self.completed,
+            self.errors,
+            self.batches,
+            self.mean_batch_size,
+            self.plan_misses,
+            self.latency_p50_us,
+            self.latency_p99_us,
+            self.latency_mean_us,
+            self.exec_mean_us,
+        )
+    }
+}

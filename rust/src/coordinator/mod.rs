@@ -1,0 +1,459 @@
+//! The L3 coordinator: a multi-threaded evaluation service for tensorial
+//! layers — request router, dynamic batcher, worker pool, plan cache,
+//! metrics and backpressure (vLLM-router-style, adapted to layer-evaluation
+//! traffic).
+//!
+//! Clients register tensorial layers once (expression + factor weights) and
+//! submit single-example evaluations; the router coalesces same-layer
+//! requests into one batched conv_einsum execution (the batch mode `b` of
+//! the layer string) up to `max_batch` or `batch_timeout`, whichever first.
+//! Workers execute along the planner's FLOPs-optimal path on the native
+//! engine, or via a PJRT artifact when one is registered for the layer.
+
+mod metrics;
+
+pub use metrics::{MetricsSnapshot, ServiceMetrics};
+
+use crate::einsum::{parse, SizedSpec};
+use crate::exec::execute_path;
+use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Maximum requests coalesced into one batch.
+    pub max_batch: usize,
+    /// Maximum time the batcher holds a partial batch.
+    pub batch_timeout: Duration,
+    /// Router inbox capacity (backpressure: submit blocks when full).
+    pub queue_capacity: usize,
+    /// Path strategy for plans.
+    pub strategy: Strategy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+            queue_capacity: 256,
+            strategy: Strategy::Optimal,
+        }
+    }
+}
+
+/// A registered tensorial layer: expression + weights.
+struct LayerEntry {
+    expr: String,
+    factors: Vec<Tensor>,
+    /// Per-(batch, spatial) plan cache.
+    plans: HashMap<(usize, usize, usize), Arc<Plan>>,
+}
+
+/// One in-flight request.
+struct Pending {
+    x: Tensor,
+    respond: SyncSender<Result<Tensor>>,
+    enqueued: Instant,
+}
+
+enum Msg {
+    Eval {
+        layer: String,
+        pending: Pending,
+    },
+    AdHoc {
+        expr: String,
+        tensors: Vec<Tensor>,
+        respond: SyncSender<Result<Tensor>>,
+    },
+    Shutdown,
+}
+
+/// Handle for submitting work; cheap to clone.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<Msg>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl ServiceHandle {
+    /// Evaluate a registered layer on a single example `[1, S, H', W']`
+    /// (or `[S, H', W']`, auto-expanded). Blocks if the router is saturated
+    /// (backpressure). Returns a receiver for the result.
+    pub fn submit(&self, layer: &str, x: Tensor) -> Result<Receiver<Result<Tensor>>> {
+        let x = if x.rank() == 3 {
+            let mut shape = vec![1];
+            shape.extend_from_slice(x.shape());
+            let s2 = shape.clone();
+            x.reshape(&s2)
+        } else {
+            x
+        };
+        let (rtx, rrx) = sync_channel(1);
+        self.metrics.note_submit();
+        self.tx
+            .send(Msg::Eval {
+                layer: layer.to_string(),
+                pending: Pending {
+                    x,
+                    respond: rtx,
+                    enqueued: Instant::now(),
+                },
+            })
+            .map_err(|_| anyhow!("service stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Evaluate an ad-hoc conv_einsum expression (unbatched path).
+    pub fn submit_adhoc(
+        &self,
+        expr: &str,
+        tensors: Vec<Tensor>,
+    ) -> Result<Receiver<Result<Tensor>>> {
+        let (rtx, rrx) = sync_channel(1);
+        self.metrics.note_submit();
+        self.tx
+            .send(Msg::AdHoc {
+                expr: expr.to_string(),
+                tensors,
+                respond: rtx,
+            })
+            .map_err(|_| anyhow!("service stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn eval(&self, layer: &str, x: Tensor) -> Result<Tensor> {
+        self.submit(layer, x)?
+            .recv()
+            .map_err(|_| anyhow!("service dropped response"))?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+/// The evaluation service: router thread + worker pool.
+pub struct EvalService {
+    handle: ServiceHandle,
+    router: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// A batch dispatched to workers.
+struct WorkItem {
+    layer: String,
+    plan: Arc<Plan>,
+    factors: Arc<Vec<Tensor>>,
+    requests: Vec<Pending>,
+}
+
+enum WorkMsg {
+    Batch(WorkItem),
+    AdHoc {
+        expr: String,
+        tensors: Vec<Tensor>,
+        respond: SyncSender<Result<Tensor>>,
+        strategy: Strategy,
+    },
+    Stop,
+}
+
+impl EvalService {
+    /// Start the service with the given registered layers.
+    pub fn start(
+        config: ServiceConfig,
+        layers: Vec<(String, String, Vec<Tensor>)>, // (name, expr, factors)
+    ) -> Result<EvalService> {
+        let metrics = Arc::new(ServiceMetrics::default());
+        let (tx, rx) = sync_channel::<Msg>(config.queue_capacity);
+        let (wtx, wrx) = sync_channel::<WorkMsg>(config.workers * 2);
+        let wrx = Arc::new(Mutex::new(wrx));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let mut registry: HashMap<String, LayerEntry> = HashMap::new();
+        for (name, expr, factors) in layers {
+            parse(&expr).map_err(|e| anyhow!("layer '{name}': {e}"))?;
+            registry.insert(
+                name,
+                LayerEntry {
+                    expr,
+                    factors,
+                    plans: HashMap::new(),
+                },
+            );
+        }
+
+        // Worker pool.
+        let mut workers = Vec::new();
+        for wid in 0..config.workers.max(1) {
+            let wrx = Arc::clone(&wrx);
+            let metrics = Arc::clone(&metrics);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("conv-einsum-worker-{wid}"))
+                    .spawn(move || worker_loop(wrx, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+
+        // Router thread.
+        let router_metrics = Arc::clone(&metrics);
+        let cfg = config.clone();
+        let router = std::thread::Builder::new()
+            .name("conv-einsum-router".to_string())
+            .spawn(move || router_loop(rx, wtx, registry, cfg, router_metrics))
+            .expect("spawn router");
+
+        Ok(EvalService {
+            handle: ServiceHandle { tx, metrics },
+            router: Some(router),
+            workers,
+            stop,
+        })
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful shutdown: drain queues, stop threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(r) = self.router.take() {
+            let _ = r.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn router_loop(
+    rx: Receiver<Msg>,
+    wtx: SyncSender<WorkMsg>,
+    mut registry: HashMap<String, LayerEntry>,
+    config: ServiceConfig,
+    metrics: Arc<ServiceMetrics>,
+) {
+    // Per-layer pending queues awaiting batch formation.
+    let mut queues: HashMap<String, Vec<Pending>> = HashMap::new();
+    let mut deadline: Option<Instant> = None;
+
+    let flush = |registry: &mut HashMap<String, LayerEntry>,
+                 layer_name: &str,
+                 batch: Vec<Pending>,
+                 wtx: &SyncSender<WorkMsg>,
+                 metrics: &ServiceMetrics,
+                 strategy: Strategy| {
+        if batch.is_empty() {
+            return;
+        }
+        let entry = registry.get_mut(layer_name).expect("layer exists");
+        // All requests in a bucket share the single-example shape; derive
+        // the batched plan for the combined batch size.
+        let bshape = batch[0].x.shape().to_vec();
+        let total_b: usize = batch.iter().map(|p| p.x.shape()[0]).sum();
+        let key = (total_b, bshape[bshape.len() - 2], bshape[bshape.len() - 1]);
+        let plan = match entry.plans.get(&key) {
+            Some(p) => Arc::clone(p),
+            None => {
+                let planned = plan_layer(entry, total_b, &bshape, strategy);
+                match planned {
+                    Ok(p) => {
+                        let p = Arc::new(p);
+                        entry.plans.insert(key, Arc::clone(&p));
+                        metrics.note_plan_miss();
+                        p
+                    }
+                    Err(e) => {
+                        let msg = format!("planning failed: {e}");
+                        for p in batch {
+                            let _ = p.respond.send(Err(anyhow!("{msg}")));
+                        }
+                        return;
+                    }
+                }
+            }
+        };
+        metrics.note_batch(batch.len());
+        let item = WorkItem {
+            layer: layer_name.to_string(),
+            plan,
+            factors: Arc::new(entry.factors.clone()),
+            requests: batch,
+        };
+        let _ = wtx.send(WorkMsg::Batch(item));
+    };
+
+    loop {
+        let timeout = deadline
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Eval { layer, pending }) => {
+                if !registry.contains_key(&layer) {
+                    let _ = pending.respond.send(Err(anyhow!("unknown layer '{layer}'")));
+                    continue;
+                }
+                // Mixed shapes cannot batch together: flush incompatible.
+                let q = queues.entry(layer.clone()).or_default();
+                if let Some(first) = q.first() {
+                    if first.x.shape() != pending.x.shape() {
+                        let old = std::mem::take(q);
+                        flush(&mut registry, &layer, old, &wtx, &metrics, config.strategy);
+                    }
+                }
+                let q = queues.entry(layer.clone()).or_default();
+                q.push(pending);
+                if q.len() >= config.max_batch {
+                    let old = std::mem::take(q);
+                    flush(&mut registry, &layer, old, &wtx, &metrics, config.strategy);
+                } else if deadline.is_none() {
+                    deadline = Some(Instant::now() + config.batch_timeout);
+                }
+            }
+            Ok(Msg::AdHoc {
+                expr,
+                tensors,
+                respond,
+            }) => {
+                let _ = wtx.send(WorkMsg::AdHoc {
+                    expr,
+                    tensors,
+                    respond,
+                    strategy: config.strategy,
+                });
+            }
+            Ok(Msg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                // Flush everything pending.
+                for (layer, q) in queues.iter_mut() {
+                    let old = std::mem::take(q);
+                    flush(&mut registry, layer, old, &wtx, &metrics, config.strategy);
+                }
+                deadline = None;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        metrics.set_queue_depth(queues.values().map(Vec::len).sum());
+    }
+    // Drain on shutdown.
+    for (layer, q) in queues.iter_mut() {
+        let old = std::mem::take(q);
+        flush(&mut registry, layer, old, &wtx, &metrics, config.strategy);
+    }
+    for _ in 0..8 {
+        let _ = wtx.send(WorkMsg::Stop);
+    }
+}
+
+fn plan_layer(
+    entry: &LayerEntry,
+    batch: usize,
+    single_shape: &[usize],
+    strategy: Strategy,
+) -> Result<Plan, String> {
+    let spec = parse(&entry.expr).map_err(|e| e.to_string())?;
+    let mut x_dims = single_shape.to_vec();
+    x_dims[0] = batch;
+    let mut dims = vec![x_dims];
+    dims.extend(entry.factors.iter().map(|f| f.shape().to_vec()));
+    let sized = SizedSpec::new(spec, dims)?;
+    plan_with(
+        &sized,
+        &PlanOptions {
+            strategy,
+            ..Default::default()
+        },
+    )
+}
+
+fn worker_loop(wrx: Arc<Mutex<Receiver<WorkMsg>>>, metrics: Arc<ServiceMetrics>) {
+    loop {
+        let msg = {
+            let rx = wrx.lock().unwrap();
+            rx.recv()
+        };
+        match msg {
+            Ok(WorkMsg::Batch(item)) => {
+                let t0 = Instant::now();
+                // Concatenate the batch along axis 0.
+                let bsum: usize = item.requests.iter().map(|p| p.x.shape()[0]).sum();
+                let mut shape = item.requests[0].x.shape().to_vec();
+                shape[0] = bsum;
+                let mut data = Vec::with_capacity(shape.iter().product());
+                for p in &item.requests {
+                    data.extend_from_slice(p.x.data());
+                }
+                let x = Tensor::from_vec(&shape, data);
+                let mut inputs: Vec<&Tensor> = vec![&x];
+                inputs.extend(item.factors.iter());
+                let result = execute_path(&item.plan, &inputs);
+                match result {
+                    Ok(y) => {
+                        // Split along axis 0 back to requesters.
+                        let mut offset = 0usize;
+                        for p in item.requests {
+                            let nb = p.x.shape()[0];
+                            let part = y.slice_axis(0, offset, offset + nb);
+                            offset += nb;
+                            metrics.note_done(p.enqueued.elapsed());
+                            let _ = p.respond.send(Ok(part));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("layer '{}' failed: {e}", item.layer);
+                        for p in item.requests {
+                            metrics.note_error();
+                            let _ = p.respond.send(Err(anyhow!("{msg}")));
+                        }
+                    }
+                }
+                metrics.note_exec_time(t0.elapsed());
+            }
+            Ok(WorkMsg::AdHoc {
+                expr,
+                tensors,
+                respond,
+                strategy,
+            }) => {
+                let t0 = Instant::now();
+                let refs: Vec<&Tensor> = tensors.iter().collect();
+                let result = crate::exec::conv_einsum_with(
+                    &expr,
+                    &refs,
+                    &PlanOptions {
+                        strategy,
+                        ..Default::default()
+                    },
+                );
+                match &result {
+                    Ok(_) => metrics.note_done(t0.elapsed()),
+                    Err(_) => metrics.note_error(),
+                }
+                let _ = respond.send(result);
+                metrics.note_exec_time(t0.elapsed());
+            }
+            Ok(WorkMsg::Stop) | Err(_) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,221 @@
+//! Coordinator tests: correctness under batching, concurrency, error
+//! routing, metrics accounting and shutdown.
+
+use super::*;
+use crate::exec::conv_einsum;
+use crate::tnn::{build_layer, Decomp};
+use crate::util::rng::Rng;
+
+fn cp_layer(name: &str, rng: &mut Rng) -> (String, String, Vec<Tensor>, crate::tnn::TnnLayerSpec) {
+    let spec = build_layer(Decomp::Cp, 1, 4, 3, 3, 3, 1.0).unwrap();
+    let factors = spec.init_factors(rng);
+    (name.to_string(), spec.expr.clone(), factors, spec)
+}
+
+#[test]
+fn single_request_matches_direct_execution() {
+    let mut rng = Rng::new(1);
+    let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+    let service = EvalService::start(
+        ServiceConfig::default(),
+        vec![(name.clone(), expr.clone(), factors.clone())],
+    )
+    .unwrap();
+    let h = service.handle();
+    let x = Tensor::rand(&[1, 3, 8, 8], -1.0, 1.0, &mut rng);
+    let y = h.eval("cp", x.clone()).unwrap();
+    // direct evaluation
+    let mut inputs = vec![&x];
+    inputs.extend(factors.iter());
+    let want = conv_einsum(&expr, &inputs).unwrap();
+    y.assert_close(&want, 1e-4);
+    service.shutdown();
+}
+
+#[test]
+fn batched_requests_each_get_their_slice() {
+    let mut rng = Rng::new(2);
+    let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+    let service = EvalService::start(
+        ServiceConfig {
+            max_batch: 4,
+            batch_timeout: std::time::Duration::from_millis(20),
+            ..Default::default()
+        },
+        vec![(name, expr.clone(), factors.clone())],
+    )
+    .unwrap();
+    let h = service.handle();
+    let xs: Vec<Tensor> = (0..6)
+        .map(|_| Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng))
+        .collect();
+    let receivers: Vec<_> = xs
+        .iter()
+        .map(|x| h.submit("cp", x.clone()).unwrap())
+        .collect();
+    for (x, rx) in xs.iter().zip(receivers) {
+        let y = rx.recv().unwrap().unwrap();
+        let mut inputs = vec![x];
+        inputs.extend(factors.iter());
+        let want = conv_einsum(&expr, &inputs).unwrap();
+        y.assert_close(&want, 1e-4);
+    }
+    let m = h.metrics();
+    assert_eq!(m.completed, 6);
+    assert!(m.batches >= 1);
+    assert!(m.mean_batch_size >= 1.0);
+    service.shutdown();
+}
+
+#[test]
+fn batching_coalesces_under_load() {
+    let mut rng = Rng::new(3);
+    let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+    let service = EvalService::start(
+        ServiceConfig {
+            max_batch: 8,
+            workers: 1,
+            batch_timeout: std::time::Duration::from_millis(30),
+            ..Default::default()
+        },
+        vec![(name, expr, factors)],
+    )
+    .unwrap();
+    let h = service.handle();
+    let receivers: Vec<_> = (0..16)
+        .map(|_| {
+            let x = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+            h.submit("cp", x).unwrap()
+        })
+        .collect();
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = h.metrics();
+    assert_eq!(m.completed, 16);
+    assert!(
+        m.batches < 16,
+        "16 requests should coalesce into fewer batches (got {})",
+        m.batches
+    );
+    assert!(m.mean_batch_size > 1.0);
+    service.shutdown();
+}
+
+#[test]
+fn concurrent_clients() {
+    let mut rng = Rng::new(4);
+    let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+    let service =
+        EvalService::start(ServiceConfig::default(), vec![(name, expr.clone(), factors.clone())])
+            .unwrap();
+    let h = service.handle();
+    let threads: Vec<_> = (0..4)
+        .map(|tid| {
+            let h = h.clone();
+            let factors = factors.clone();
+            let expr = expr.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + tid);
+                for _ in 0..5 {
+                    let x = Tensor::rand(&[1, 3, 5, 5], -1.0, 1.0, &mut rng);
+                    let y = h.eval("cp", x.clone()).unwrap();
+                    let mut inputs = vec![&x];
+                    inputs.extend(factors.iter());
+                    let want = conv_einsum(&expr, &inputs).unwrap();
+                    y.assert_close(&want, 1e-4);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(h.metrics().completed, 20);
+    service.shutdown();
+}
+
+#[test]
+fn unknown_layer_errors() {
+    let service = EvalService::start(ServiceConfig::default(), vec![]).unwrap();
+    let h = service.handle();
+    let x = Tensor::zeros(&[1, 3, 4, 4]);
+    let res = h.eval("nope", x);
+    assert!(res.is_err());
+    service.shutdown();
+}
+
+#[test]
+fn adhoc_expression_evaluation() {
+    let service = EvalService::start(ServiceConfig::default(), vec![]).unwrap();
+    let h = service.handle();
+    let mut rng = Rng::new(5);
+    let a = Tensor::rand(&[3, 4], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&[4, 5], -1.0, 1.0, &mut rng);
+    let y = h
+        .submit_adhoc("ij,jk->ik", vec![a.clone(), b.clone()])
+        .unwrap()
+        .recv()
+        .unwrap()
+        .unwrap();
+    let want = conv_einsum("ij,jk->ik", &[&a, &b]).unwrap();
+    y.assert_close(&want, 1e-5);
+    // bad expression routes an error back, not a hang
+    let res = h
+        .submit_adhoc("ij,jk->iz", vec![a, b])
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(res.is_err());
+    service.shutdown();
+}
+
+#[test]
+fn mixed_shapes_do_not_cross_batch() {
+    let mut rng = Rng::new(6);
+    let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+    let service = EvalService::start(
+        ServiceConfig {
+            max_batch: 8,
+            ..Default::default()
+        },
+        vec![(name, expr.clone(), factors.clone())],
+    )
+    .unwrap();
+    let h = service.handle();
+    let x1 = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+    let x2 = Tensor::rand(&[1, 3, 10, 10], -1.0, 1.0, &mut rng);
+    let r1 = h.submit("cp", x1.clone()).unwrap();
+    let r2 = h.submit("cp", x2.clone()).unwrap();
+    let y1 = r1.recv().unwrap().unwrap();
+    let y2 = r2.recv().unwrap().unwrap();
+    assert_eq!(y1.shape(), &[1, 4, 6, 6]);
+    assert_eq!(y2.shape(), &[1, 4, 10, 10]);
+    let mut i1 = vec![&x1];
+    i1.extend(factors.iter());
+    y1.assert_close(&conv_einsum(&expr, &i1).unwrap(), 1e-4);
+    service.shutdown();
+}
+
+#[test]
+fn plan_cache_hit_on_repeated_shapes() {
+    let mut rng = Rng::new(7);
+    let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+    let service = EvalService::start(
+        ServiceConfig {
+            max_batch: 1, // force one batch per request → same plan key
+            ..Default::default()
+        },
+        vec![(name, expr, factors)],
+    )
+    .unwrap();
+    let h = service.handle();
+    for _ in 0..5 {
+        let x = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+        h.eval("cp", x).unwrap();
+    }
+    let m = h.metrics();
+    assert_eq!(m.completed, 5);
+    assert_eq!(m.plan_misses, 1, "plan should be cached after first use");
+    service.shutdown();
+}

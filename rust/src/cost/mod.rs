@@ -1,0 +1,270 @@
+//! The tnn-cost model (paper Appendix B).
+//!
+//! FLOPs (multiplication counts) of the primitive operations, Eq. (5)–(8):
+//!
+//! * mode-(k,l) contraction / batch product:  (∏ᵖ Iₚ)(∏_{q≠l} J_q)
+//! * outer product:                            (∏ᵖ Iₚ)(∏ᑫ J_q)
+//! * mode-(k,l) convolution (no FFT):          (∏ᵖ Iₚ)(∏ᑫ J_q)
+//!
+//! For the generalized pairwise atom with merged groups G (batch), T/N
+//! (free), S (contraction) and conv axes (Iₐ, I_b) these collapse to
+//!
+//! ```text
+//!   mults(f)  = G · T · N · S · ∏_c Iₐᶜ · I_bᶜ
+//! ```
+//!
+//! Training mode ("Modification of the cost model for training") adds the
+//! two backward computations `g1 = ∂L/∂a`, `g2 = ∂L/∂b`, each a pairwise op
+//! against the cotangent whose conv axes pair the *output* size I_oᶜ with
+//! the other operand's size:
+//!
+//! ```text
+//!   mults(g1) = G · T · N · S · ∏_c I_oᶜ · I_bᶜ
+//!   mults(g2) = G · T · N · S · ∏_c I_oᶜ · Iₐᶜ
+//! ```
+//!
+//! which reproduces the paper's standard-conv2d example
+//! (`cost(f)=O(BHWXYTS)`, `cost(g1)=O(BHWX'Y'TS)`, `cost(g2)=O(BXYX'Y'TS)`).
+
+use crate::einsum::{ConvKind, SizedSpec};
+
+/// The merged dimension groups of one pairwise operation — everything the
+/// cost model needs to price it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MergeDims {
+    /// Product of batch-product mode sizes (shared, kept).
+    pub g: f64,
+    /// Product of lhs-only kept mode sizes.
+    pub t: f64,
+    /// Product of rhs-only kept mode sizes.
+    pub n: f64,
+    /// Product of contraction mode sizes (shared, dropped).
+    pub s: f64,
+    /// Product of self-sum mode sizes (summed in preprocessing; prices the
+    /// pre-pass, not the atom itself).
+    pub presum: f64,
+    /// Per shared conv mode: (lhs size, rhs size, output size).
+    pub conv: Vec<(f64, f64, f64)>,
+}
+
+impl MergeDims {
+    /// Multiplications of the forward pairwise op, Eq. (5)–(8).
+    pub fn fwd_mults(&self) -> f64 {
+        let conv: f64 = self.conv.iter().map(|&(ia, ib, _)| ia * ib).product();
+        self.g * self.t * self.n * self.s * conv
+    }
+
+    /// Multiplications of `g1 = ∂L/∂lhs`.
+    pub fn g1_mults(&self) -> f64 {
+        let conv: f64 = self.conv.iter().map(|&(_, ib, io)| io * ib).product();
+        self.g * self.t * self.n * self.s * conv
+    }
+
+    /// Multiplications of `g2 = ∂L/∂rhs`.
+    pub fn g2_mults(&self) -> f64 {
+        let conv: f64 = self.conv.iter().map(|&(ia, _, io)| io * ia).product();
+        self.g * self.t * self.n * self.s * conv
+    }
+
+    /// Total training-mode cost: `cost(f) + cost(g1) + cost(g2)`.
+    pub fn training_mults(&self) -> f64 {
+        self.fwd_mults() + self.g1_mults() + self.g2_mults()
+    }
+
+    /// Cost under the given mode (forward-only vs training).
+    pub fn mults(&self, training: bool) -> f64 {
+        if training {
+            self.training_mults()
+        } else {
+            self.fwd_mults()
+        }
+    }
+
+    /// Elements of the pairwise output.
+    pub fn out_elems(&self) -> f64 {
+        let conv: f64 = self.conv.iter().map(|&(_, _, io)| io).product();
+        self.g * self.t * self.n * conv
+    }
+}
+
+/// Output size of a pairwise convolution along one mode.
+///
+/// `modulus` is the circular wrap length (the feature size of the *whole*
+/// expression for multi-way convolutions); `None` defaults to `max(ia, ib)`.
+pub fn conv_out_size(kind: ConvKind, ia: usize, ib: usize, modulus: Option<usize>) -> usize {
+    match kind {
+        ConvKind::Circular => {
+            let p = modulus.unwrap_or(ia.max(ib));
+            (ia + ib - 1).min(p)
+        }
+        _ => kind.out_dim(ia, ib),
+    }
+}
+
+/// Analyze a 2-input sized spec into its [`MergeDims`] (shape-only twin of
+/// `exec::atom::canonicalize` — no triple tables, cheap enough for the
+/// planner's inner loop).
+pub fn analyze_pairwise(sized: &SizedSpec, moduli: &[Option<usize>]) -> MergeDims {
+    assert_eq!(sized.spec.n_inputs(), 2);
+    let spec = &sized.spec;
+    let ma = &spec.inputs[0];
+    let mb = &spec.inputs[1];
+    let size_a = |m| sized.dims[0][ma.iter().position(|&x| x == m).unwrap()];
+    let size_b = |m| sized.dims[1][mb.iter().position(|&x| x == m).unwrap()];
+
+    let mut dims = MergeDims {
+        g: 1.0,
+        t: 1.0,
+        n: 1.0,
+        s: 1.0,
+        presum: 1.0,
+        conv: Vec::new(),
+    };
+    let mut seen = std::collections::HashSet::new();
+    for &m in ma.iter().chain(mb.iter()) {
+        if !seen.insert(m) {
+            continue;
+        }
+        let in_a = ma.contains(&m);
+        let in_b = mb.contains(&m);
+        let in_out = spec.output.contains(&m);
+        if spec.is_conv(m) && in_a && in_b {
+            let pipe = spec.conv.iter().position(|&x| x == m).unwrap();
+            let kind = sized.conv_kinds[pipe];
+            let modulus = moduli.get(pipe).copied().flatten();
+            let (ia, ib) = (size_a(m), size_b(m));
+            let io = conv_out_size(kind, ia, ib, modulus);
+            dims.conv.push((ia as f64, ib as f64, io as f64));
+        } else {
+            match (in_a, in_b, in_out) {
+                (true, true, true) => dims.g *= size_a(m) as f64,
+                (true, true, false) => dims.s *= size_a(m) as f64,
+                (true, false, true) => dims.t *= size_a(m) as f64,
+                (false, true, true) => dims.n *= size_b(m) as f64,
+                (true, false, false) => dims.presum *= size_a(m) as f64,
+                (false, true, false) => dims.presum *= size_b(m) as f64,
+                (false, false, _) => unreachable!(),
+            }
+        }
+    }
+    dims
+}
+
+/// The "flat" cost of evaluating an N-input expression in a single nested
+/// loop (what opt-einsum reports as the *naive FLOP count*): the product of
+/// every distinct index range, counting each conv mode once per occurrence,
+/// times one multiplication per input.
+pub fn flat_cost(sized: &SizedSpec) -> f64 {
+    let spec = &sized.spec;
+    let mut loops = 1.0f64;
+    for m in spec.all_modes() {
+        if spec.is_conv(m) {
+            for sz in sized.occurrence_sizes(m) {
+                loops *= sz as f64;
+            }
+        } else {
+            loops *= sized.mode_size(m) as f64;
+        }
+    }
+    loops * (spec.n_inputs().max(2) - 1) as f64
+}
+
+/// Bytes of one f32 tensor of `elems` elements.
+pub fn elems_to_bytes(elems: f64) -> f64 {
+    elems * 4.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::parse;
+
+    fn sized(expr: &str, dims: Vec<Vec<usize>>) -> SizedSpec {
+        SizedSpec::new(parse(expr).unwrap(), dims).unwrap()
+    }
+
+    #[test]
+    fn contraction_cost_matches_eq5() {
+        // mode-(k,l) contraction of A∈R^{2×3×4}, B∈R^{4×5}:
+        // cost = (2·3·4)·(5) = 120
+        let s = sized("abc,cd->abd", vec![vec![2, 3, 4], vec![4, 5]]);
+        let d = analyze_pairwise(&s, &[]);
+        assert_eq!(d.fwd_mults(), 120.0);
+        assert_eq!(d.out_elems(), 30.0);
+    }
+
+    #[test]
+    fn outer_product_cost_matches_eq7() {
+        let s = sized("ab,cd->abcd", vec![vec![2, 3], vec![4, 5]]);
+        let d = analyze_pairwise(&s, &[]);
+        assert_eq!(d.fwd_mults(), 120.0); // ∏I · ∏J
+        assert_eq!(d.out_elems(), 120.0);
+    }
+
+    #[test]
+    fn batch_product_cost_matches_eq6() {
+        // batch over shared mode a (kept): cost = ∏I · ∏J / |a| = 2·3·4·5
+        let s = sized("ab,acd->abcd", vec![vec![2, 3], vec![2, 4, 5]]);
+        let d = analyze_pairwise(&s, &[]);
+        assert_eq!(d.fwd_mults(), 120.0);
+        assert_eq!(d.g, 2.0);
+    }
+
+    #[test]
+    fn convolution_cost_matches_eq8() {
+        // conv between X (len 10) and L (len 4): all dims of both multiply.
+        let s = sized("xbc,xde->xbcde|x", vec![vec![10, 2, 3], vec![4, 5, 6]]);
+        let d = analyze_pairwise(&s, &[]);
+        assert_eq!(d.fwd_mults(), (10.0 * 2.0 * 3.0) * (4.0 * 5.0 * 6.0));
+        assert_eq!(d.conv.len(), 1);
+    }
+
+    #[test]
+    fn standard_conv2d_training_cost_matches_paper_example() {
+        // f: input (B,S,X,Y) ⊛ weight (T,S,H,W) → (B,T,X',Y'), Same pad.
+        // The paper writes the layer as "bshw,tshw->bthw|hw": the conv
+        // letters are shared between feature (X,Y) and filter (H,W) sizes.
+        let (b, s, x, y, t, h, w) = (2, 3, 16, 16, 4, 3, 3);
+        let sz = sized(
+            "bsxy,tsxy->btxy|xy",
+            vec![vec![b, s, x, y], vec![t, s, h, w]],
+        );
+        let d = analyze_pairwise(&sz, &[]);
+        let bf = (b * s * t) as f64;
+        assert_eq!(d.fwd_mults(), bf * (x * y * h * w) as f64); // O(BHWXYTS)
+        // Same padding ⇒ X' = X, Y' = Y.
+        assert_eq!(d.g1_mults(), bf * (x * y * h * w) as f64); // O(BHWX'Y'TS)
+        assert_eq!(d.g2_mults(), bf * (x * y * x * y) as f64); // O(BXYX'Y'TS)
+        assert_eq!(d.training_mults(), d.fwd_mults() + d.g1_mults() + d.g2_mults());
+    }
+
+    #[test]
+    fn conv_out_sizes() {
+        assert_eq!(conv_out_size(ConvKind::Circular, 8, 3, None), 8);
+        assert_eq!(conv_out_size(ConvKind::Circular, 3, 4, Some(32)), 6);
+        assert_eq!(conv_out_size(ConvKind::Circular, 30, 4, Some(32)), 32);
+        assert_eq!(conv_out_size(ConvKind::Full, 8, 3, None), 10);
+        assert_eq!(conv_out_size(ConvKind::Valid, 8, 3, None), 6);
+        assert_eq!(conv_out_size(ConvKind::Same, 8, 3, None), 8);
+    }
+
+    #[test]
+    fn selfsum_tracked_separately() {
+        let s = sized("ak,ab->b", vec![vec![2, 5], vec![2, 3]]);
+        let d = analyze_pairwise(&s, &[]);
+        assert_eq!(d.presum, 5.0);
+        assert_eq!(d.s, 2.0); // a contracted
+        assert_eq!(d.n, 3.0);
+        assert_eq!(d.fwd_mults(), 6.0);
+    }
+
+    #[test]
+    fn flat_cost_counts_all_loops() {
+        // "ij,jk->ik" with i=2,j=3,k=4: 2·3·4 · (2-1) = 24
+        let s = sized("ij,jk->ik", vec![vec![2, 3], vec![3, 4]]);
+        assert_eq!(flat_cost(&s), 24.0);
+        // conv modes count once per occurrence
+        let c = sized("xa,xb->xab|x", vec![vec![8, 2], vec![3, 4]]);
+        assert_eq!(flat_cost(&c), (8 * 2 * 3 * 4) as f64);
+    }
+}

@@ -1,0 +1,16 @@
+//! The conv_einsum grammar (paper §2): einsum strings extended with
+//! multi-character modes `(t1)` and a pipe-delimited convolution mode list,
+//! e.g. `"b(s1)(s2)hw,r(t1)(s1),r(t2)(s2),rhw->b(t1)(t2)hw|hw"`.
+//!
+//! [`EinsumSpec`] is the parsed, size-free form; [`SizedSpec`] binds concrete
+//! dimension sizes to every mode occurrence (convolution modes may carry
+//! *different* sizes per occurrence — feature vs filter).
+
+mod parse;
+mod spec;
+
+pub use parse::{parse, ParseError};
+pub use spec::{ConvKind, EinsumSpec, ModeId, ModeKind, ModeTable, SizedSpec};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,187 @@
+//! Parser for the conv_einsum string grammar.
+//!
+//! ```text
+//! expr      := subscripts ("," subscripts)* "->" subscripts conv?
+//! conv      := "|" mode (","? mode)*
+//! subscripts:= mode*
+//! mode      := LETTER | "(" NAME ")"
+//! ```
+//!
+//! Whitespace is ignored everywhere. Mode names are case-sensitive; `(t1)`
+//! and `t` are distinct modes. The convolution list accepts both the
+//! paper's juxtaposed form `|hw` and comma form `|h,w`.
+
+use super::spec::{EinsumSpec, ModeTable};
+use std::fmt;
+
+/// Error produced while parsing a conv_einsum string.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "conv_einsum parse error at char {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse a conv_einsum string such as `"bshw,rt,rs,rh,rw->bthw|hw"`.
+pub fn parse(input: &str) -> Result<EinsumSpec, ParseError> {
+    let chars: Vec<char> = input.chars().collect();
+    let mut modes = ModeTable::new();
+
+    // Split at "->" first (required — implicit-output einsum is not part of
+    // the paper's grammar and is rejected explicitly).
+    let arrow = find_arrow(&chars).ok_or_else(|| ParseError {
+        pos: input.len(),
+        msg: "missing '->' (conv_einsum requires an explicit output)".to_string(),
+    })?;
+
+    let lhs = &chars[..arrow];
+    let rhs = &chars[arrow + 2..];
+
+    // rhs = output [ '|' convlist ]
+    let pipe = rhs.iter().position(|&c| c == '|');
+    let (out_part, conv_part) = match pipe {
+        Some(p) => (&rhs[..p], Some(&rhs[p + 1..])),
+        None => (rhs, None),
+    };
+
+    let mut inputs = Vec::new();
+    for segment in split_commas(lhs) {
+        let (seg, offset) = segment;
+        let parsed = parse_subscripts(seg, offset, &mut modes)?;
+        inputs.push(parsed);
+    }
+    if inputs.is_empty() || inputs.iter().any(|v| v.is_empty()) {
+        // An empty subscript list is legal einsum (a scalar) but every layer
+        // expression in the paper has non-scalar inputs; still allow scalars
+        // only when explicitly written as "->...": reject empty inputs that
+        // came from stray commas.
+        if inputs.is_empty() {
+            return Err(ParseError {
+                pos: 0,
+                msg: "no input subscripts".to_string(),
+            });
+        }
+    }
+
+    let output = parse_subscripts(out_part, arrow + 2, &mut modes)?;
+
+    let mut conv = Vec::new();
+    if let Some(cp) = conv_part {
+        let base = arrow + 2 + out_part.len() + 1;
+        for (seg, offset) in split_commas(cp) {
+            let ms = parse_subscripts(seg, base + offset, &mut modes)?;
+            conv.extend(ms);
+        }
+        if conv.is_empty() {
+            return Err(ParseError {
+                pos: base,
+                msg: "empty convolution list after '|'".to_string(),
+            });
+        }
+        let mut dedup = std::collections::HashSet::new();
+        for &m in &conv {
+            if !dedup.insert(m) {
+                return Err(ParseError {
+                    pos: base,
+                    msg: format!("duplicate convolution mode '{}'", modes.name(m)),
+                });
+            }
+        }
+    }
+
+    let spec = EinsumSpec {
+        modes,
+        inputs,
+        output,
+        conv,
+    };
+    spec.validate().map_err(|msg| ParseError { pos: 0, msg })?;
+    Ok(spec)
+}
+
+/// Find the index of the `->` token.
+fn find_arrow(chars: &[char]) -> Option<usize> {
+    chars
+        .windows(2)
+        .position(|w| w[0] == '-' && w[1] == '>')
+}
+
+/// Split a char slice at top-level commas, yielding (segment, start offset).
+fn split_commas(chars: &[char]) -> Vec<(&[char], usize)> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut depth = 0usize;
+    for (i, &c) in chars.iter().enumerate() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push((&chars[start..i], start));
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push((&chars[start..], start));
+    out
+}
+
+/// Parse one subscript group (`b(s1)(s2)hw`) into mode ids.
+fn parse_subscripts(
+    chars: &[char],
+    base: usize,
+    modes: &mut ModeTable,
+) -> Result<Vec<super::spec::ModeId>, ParseError> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '(' {
+            let close = chars[i + 1..]
+                .iter()
+                .position(|&c| c == ')')
+                .ok_or_else(|| ParseError {
+                    pos: base + i,
+                    msg: "unclosed '('".to_string(),
+                })?;
+            let name: String = chars[i + 1..i + 1 + close]
+                .iter()
+                .filter(|c| !c.is_whitespace())
+                .collect();
+            if name.is_empty() {
+                return Err(ParseError {
+                    pos: base + i,
+                    msg: "empty mode name '()'".to_string(),
+                });
+            }
+            if !name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+                return Err(ParseError {
+                    pos: base + i,
+                    msg: format!("invalid mode name '({})'", name),
+                });
+            }
+            out.push(modes.intern(&name));
+            i += close + 2;
+        } else if c.is_alphabetic() {
+            out.push(modes.intern(&c.to_string()));
+            i += 1;
+        } else {
+            return Err(ParseError {
+                pos: base + i,
+                msg: format!("unexpected character '{}'", c),
+            });
+        }
+    }
+    Ok(out)
+}

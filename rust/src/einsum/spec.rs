@@ -1,0 +1,439 @@
+//! Core spec types for conv_einsum expressions.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Identifier of a mode (an index into the expression's [`ModeTable`]).
+pub type ModeId = u32;
+
+/// Interned mode names for one expression. Single-letter modes (`b`) and
+/// parenthesized multi-character modes (`(t1)`) share this table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModeTable {
+    names: Vec<String>,
+    map: HashMap<String, ModeId>,
+}
+
+impl ModeTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern `name`, returning its id.
+    pub fn intern(&mut self, name: &str) -> ModeId {
+        if let Some(&id) = self.map.get(name) {
+            return id;
+        }
+        let id = self.names.len() as ModeId;
+        self.names.push(name.to_string());
+        self.map.insert(name.to_string(), id);
+        id
+    }
+
+    /// Look up an existing mode by name.
+    pub fn get(&self, name: &str) -> Option<ModeId> {
+        self.map.get(name).copied()
+    }
+
+    /// Name of mode `id`.
+    pub fn name(&self, id: ModeId) -> &str {
+        &self.names[id as usize]
+    }
+
+    /// Number of distinct modes.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Render a mode list back to subscript syntax: multi-char modes get
+    /// parens, single chars don't.
+    pub fn render(&self, modes: &[ModeId]) -> String {
+        let mut s = String::new();
+        for &m in modes {
+            let name = self.name(m);
+            if name.chars().count() == 1 {
+                s.push_str(name);
+            } else {
+                s.push('(');
+                s.push_str(name);
+                s.push(')');
+            }
+        }
+        s
+    }
+}
+
+/// The role a mode plays in a (sub)expression, following the paper's §2.1 /
+/// §3.1 taxonomy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModeKind {
+    /// Appears in ≥2 inputs, not in the output: summed out.
+    Contraction,
+    /// Appears in ≥2 inputs and in the output ("filter group" in conv1d).
+    Batch,
+    /// Appears in exactly one input and in the output.
+    Free,
+    /// Appears in exactly one input and not in the output: pre-summed
+    /// (paper §3.1 case 5, "self-contraction").
+    SelfSum,
+    /// Listed after the pipe: convolved across its occurrences.
+    Convolution,
+}
+
+/// Boundary handling for a convolution mode. The paper's framework supports
+/// several "convolution varieties" (Appendix B): multi-way convolutions are
+/// restricted to circular padding; 2-input convolutions may be any variety.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ConvKind {
+    /// Circular (periodic) convolution modulo the feature length. The only
+    /// variety that is commutative/associative, hence the only one allowed
+    /// for multi-way (>2 occurrence) convolution modes.
+    Circular,
+    /// Zero-padded, output length = feature length (the standard NN
+    /// "same" convolution; paper's default for layers).
+    Same,
+    /// No padding: output length = feature − filter + 1.
+    Valid,
+    /// Full convolution: output length = feature + filter − 1
+    /// (the paper's `X' = X + L − 1` standard convolution, Eq. 1).
+    Full,
+}
+
+impl ConvKind {
+    /// Output dimension for a pairwise convolution of lengths `a`, `b`
+    /// (feature = max, filter = min).
+    pub fn out_dim(self, a: usize, b: usize) -> usize {
+        let feat = a.max(b);
+        let filt = a.min(b);
+        match self {
+            ConvKind::Circular | ConvKind::Same => feat,
+            ConvKind::Valid => feat - filt + 1,
+            ConvKind::Full => feat + filt - 1,
+        }
+    }
+}
+
+impl fmt::Display for ConvKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ConvKind::Circular => "circular",
+            ConvKind::Same => "same",
+            ConvKind::Valid => "valid",
+            ConvKind::Full => "full",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A parsed conv_einsum expression (shape-free).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EinsumSpec {
+    /// Interned mode names.
+    pub modes: ModeTable,
+    /// Ordered mode list per input tensor.
+    pub inputs: Vec<Vec<ModeId>>,
+    /// Ordered mode list of the output tensor.
+    pub output: Vec<ModeId>,
+    /// Modes listed after the pipe (convolution modes), in pipe order.
+    pub conv: Vec<ModeId>,
+}
+
+impl EinsumSpec {
+    /// Number of input tensors.
+    pub fn n_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// Is `m` a convolution mode?
+    pub fn is_conv(&self, m: ModeId) -> bool {
+        self.conv.contains(&m)
+    }
+
+    /// Number of inputs in which mode `m` occurs.
+    pub fn occurrences(&self, m: ModeId) -> usize {
+        self.inputs
+            .iter()
+            .filter(|modes| modes.contains(&m))
+            .count()
+    }
+
+    /// Classify a mode per the paper's taxonomy (see [`ModeKind`]).
+    pub fn kind(&self, m: ModeId) -> ModeKind {
+        if self.is_conv(m) {
+            return ModeKind::Convolution;
+        }
+        let occ = self.occurrences(m);
+        let in_out = self.output.contains(&m);
+        match (occ, in_out) {
+            (0 | 1, false) => ModeKind::SelfSum,
+            (0 | 1, true) => ModeKind::Free,
+            (_, true) => ModeKind::Batch,
+            (_, false) => ModeKind::Contraction,
+        }
+    }
+
+    /// All distinct modes used anywhere in the expression.
+    pub fn all_modes(&self) -> Vec<ModeId> {
+        let mut seen = vec![false; self.modes.len()];
+        let mut out = Vec::new();
+        for modes in self.inputs.iter().chain(std::iter::once(&self.output)) {
+            for &m in modes {
+                if !seen[m as usize] {
+                    seen[m as usize] = true;
+                    out.push(m);
+                }
+            }
+        }
+        out
+    }
+
+    /// Render the expression back to conv_einsum string syntax.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (i, input) in self.inputs.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&self.modes.render(input));
+        }
+        s.push_str("->");
+        s.push_str(&self.modes.render(&self.output));
+        if !self.conv.is_empty() {
+            s.push('|');
+            s.push_str(&self.modes.render(&self.conv));
+        }
+        s
+    }
+
+    /// Structural validation that does not need sizes: conv modes must
+    /// appear in the output and in at least one input; output modes must
+    /// come from some input; no duplicate modes within a single tensor.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, modes) in self.inputs.iter().enumerate() {
+            let mut seen = std::collections::HashSet::new();
+            for &m in modes {
+                if !seen.insert(m) {
+                    return Err(format!(
+                        "input {} repeats mode '{}' (diagonals are unsupported)",
+                        i,
+                        self.modes.name(m)
+                    ));
+                }
+            }
+        }
+        {
+            let mut seen = std::collections::HashSet::new();
+            for &m in &self.output {
+                if !seen.insert(m) {
+                    return Err(format!(
+                        "output repeats mode '{}'",
+                        self.modes.name(m)
+                    ));
+                }
+            }
+        }
+        for &m in &self.output {
+            if self.occurrences(m) == 0 {
+                return Err(format!(
+                    "output mode '{}' does not appear in any input",
+                    self.modes.name(m)
+                ));
+            }
+        }
+        for &m in &self.conv {
+            if !self.output.contains(&m) {
+                return Err(format!(
+                    "convolution mode '{}' must appear in the output",
+                    self.modes.name(m)
+                ));
+            }
+            if self.occurrences(m) == 0 {
+                return Err(format!(
+                    "convolution mode '{}' does not appear in any input",
+                    self.modes.name(m)
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for EinsumSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+/// An [`EinsumSpec`] with concrete dimension sizes bound to every input
+/// mode occurrence, plus the convolution variety per conv mode.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SizedSpec {
+    pub spec: EinsumSpec,
+    /// dims[i][j] = size of the j-th mode of input i.
+    pub dims: Vec<Vec<usize>>,
+    /// Convolution variety per entry of `spec.conv` (parallel array).
+    pub conv_kinds: Vec<ConvKind>,
+}
+
+impl SizedSpec {
+    /// Bind sizes with default convolution varieties: `Same` for conv modes
+    /// occurring in exactly two inputs, `Circular` for multi-way.
+    pub fn new(spec: EinsumSpec, dims: Vec<Vec<usize>>) -> Result<SizedSpec, String> {
+        let conv_kinds = spec
+            .conv
+            .iter()
+            .map(|&m| {
+                if spec.occurrences(m) > 2 {
+                    ConvKind::Circular
+                } else {
+                    ConvKind::Same
+                }
+            })
+            .collect();
+        Self::with_kinds(spec, dims, conv_kinds)
+    }
+
+    /// Bind sizes with explicit convolution varieties.
+    pub fn with_kinds(
+        spec: EinsumSpec,
+        dims: Vec<Vec<usize>>,
+        conv_kinds: Vec<ConvKind>,
+    ) -> Result<SizedSpec, String> {
+        spec.validate()?;
+        if dims.len() != spec.inputs.len() {
+            return Err(format!(
+                "expected {} dim lists, got {}",
+                spec.inputs.len(),
+                dims.len()
+            ));
+        }
+        for (i, (modes, sizes)) in spec.inputs.iter().zip(dims.iter()).enumerate() {
+            if modes.len() != sizes.len() {
+                return Err(format!(
+                    "input {}: {} modes but {} dims",
+                    i,
+                    modes.len(),
+                    sizes.len()
+                ));
+            }
+            if sizes.iter().any(|&d| d == 0) {
+                return Err(format!("input {}: zero-sized dimension", i));
+            }
+        }
+        if conv_kinds.len() != spec.conv.len() {
+            return Err(format!(
+                "expected {} conv kinds, got {}",
+                spec.conv.len(),
+                conv_kinds.len()
+            ));
+        }
+        let sized = SizedSpec {
+            spec,
+            dims,
+            conv_kinds,
+        };
+        // Non-conv shared modes must agree in size everywhere.
+        for &m in &sized.spec.all_modes() {
+            if sized.spec.is_conv(m) {
+                // Multi-way circular conv additionally requires that the
+                // "feature" (max) size is consistent; filters just need to
+                // be no larger than the feature. Nothing to check here.
+                continue;
+            }
+            let sizes = sized.occurrence_sizes(m);
+            if sizes.windows(2).any(|w| w[0] != w[1]) {
+                return Err(format!(
+                    "mode '{}' has inconsistent sizes {:?}",
+                    sized.spec.modes.name(m),
+                    sizes
+                ));
+            }
+        }
+        // Valid convolution requires feature ≥ filter (guaranteed) and a
+        // positive output dim (guaranteed by out_dim formula); Full/Valid
+        // only make sense for 2-occurrence modes.
+        for (idx, &m) in sized.spec.conv.iter().enumerate() {
+            let occ = sized.spec.occurrences(m);
+            if occ > 2 && sized.conv_kinds[idx] != ConvKind::Circular {
+                return Err(format!(
+                    "multi-way convolution mode '{}' requires circular padding \
+                     (paper Appendix B, Convolution Varieties)",
+                    sized.spec.modes.name(m)
+                ));
+            }
+        }
+        Ok(sized)
+    }
+
+    /// Sizes of mode `m` across inputs that contain it (in input order).
+    pub fn occurrence_sizes(&self, m: ModeId) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (modes, sizes) in self.spec.inputs.iter().zip(self.dims.iter()) {
+            if let Some(pos) = modes.iter().position(|&x| x == m) {
+                out.push(sizes[pos]);
+            }
+        }
+        out
+    }
+
+    /// Size of non-conv mode `m` (consistent across occurrences).
+    pub fn mode_size(&self, m: ModeId) -> usize {
+        self.occurrence_sizes(m)[0]
+    }
+
+    /// For a conv mode, the "feature" size: the max across occurrences.
+    /// This is the size that circular convolution wraps modulo, and the
+    /// output size for Same/Circular varieties.
+    pub fn conv_feature_size(&self, m: ModeId) -> usize {
+        self.occurrence_sizes(m).into_iter().max().unwrap()
+    }
+
+    /// Variety of conv mode `m`.
+    pub fn conv_kind(&self, m: ModeId) -> ConvKind {
+        let idx = self.spec.conv.iter().position(|&x| x == m).unwrap();
+        self.conv_kinds[idx]
+    }
+
+    /// The output shape implied by the sizes and conv varieties. For a conv
+    /// mode with >2 occurrences the output is the feature size (circular);
+    /// for 2 occurrences it follows the variety's `out_dim`; for 1
+    /// occurrence the mode passes through unchanged.
+    pub fn output_shape(&self) -> Vec<usize> {
+        self.spec
+            .output
+            .iter()
+            .map(|&m| {
+                if self.spec.is_conv(m) {
+                    let sizes = self.occurrence_sizes(m);
+                    match sizes.len() {
+                        1 => sizes[0],
+                        2 => self.conv_kind(m).out_dim(sizes[0], sizes[1]),
+                        _ => self.conv_feature_size(m),
+                    }
+                } else {
+                    self.mode_size(m)
+                }
+            })
+            .collect()
+    }
+
+    /// Number of elements of input `i`.
+    pub fn input_elems(&self, i: usize) -> usize {
+        self.dims[i].iter().product()
+    }
+
+    /// Number of elements of the output.
+    pub fn output_elems(&self) -> usize {
+        self.output_shape().iter().product()
+    }
+}
+
+impl fmt::Display for SizedSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} dims={:?}", self.spec.render(), self.dims)
+    }
+}

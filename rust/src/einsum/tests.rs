@@ -1,0 +1,216 @@
+//! Unit tests for the conv_einsum grammar: parsing, classification,
+//! validation, rendering, and sized-spec semantics. Strings are taken
+//! directly from the paper (§2.1–§2.3, Appendix A.3).
+
+use super::*;
+
+fn ids(spec: &EinsumSpec, names: &[&str]) -> Vec<ModeId> {
+    names.iter().map(|n| spec.modes.get(n).unwrap()).collect()
+}
+
+#[test]
+fn parse_simple_contraction() {
+    // Paper §2.1: T = einsum("bci,bcj->bij", T1, T2)
+    let s = parse("bci,bcj->bij").unwrap();
+    assert_eq!(s.n_inputs(), 2);
+    assert!(s.conv.is_empty());
+    let c = s.modes.get("c").unwrap();
+    let b = s.modes.get("b").unwrap();
+    let i = s.modes.get("i").unwrap();
+    assert_eq!(s.kind(c), ModeKind::Contraction);
+    assert_eq!(s.kind(b), ModeKind::Batch);
+    assert_eq!(s.kind(i), ModeKind::Free);
+}
+
+#[test]
+fn parse_conv_mode() {
+    // Paper §2.2: conv_einsum("xbc,ade->xbcde|x", T1, T2)
+    // (the paper writes the conv mode as `x` on both inputs)
+    let s = parse("xbc,xde->xbcde|x").unwrap();
+    let x = s.modes.get("x").unwrap();
+    assert_eq!(s.kind(x), ModeKind::Convolution);
+    assert_eq!(s.conv, vec![x]);
+}
+
+#[test]
+fn parse_interleaved_group_conv() {
+    // Paper Eq. (2): conv_einsum("bfshw,fghw,sthw->bgthw|hw", X, K1, K2)
+    let s = parse("bfshw,fghw,sthw->bgthw|hw").unwrap();
+    assert_eq!(s.n_inputs(), 3);
+    let h = s.modes.get("h").unwrap();
+    let w = s.modes.get("w").unwrap();
+    assert_eq!(s.conv, vec![h, w]);
+    assert_eq!(s.occurrences(h), 3); // multi-way convolution
+    let f = s.modes.get("f").unwrap();
+    assert_eq!(s.kind(f), ModeKind::Contraction);
+}
+
+#[test]
+fn parse_pipe_comma_form() {
+    // §3.1 writes conv2d as "...->bgthw|h,w" — comma-separated conv list.
+    let a = parse("gtshw,bgshw->bgthw|h,w").unwrap();
+    let b = parse("gtshw,bgshw->bgthw|hw").unwrap();
+    assert_eq!(a.conv.len(), 2);
+    assert_eq!(a.conv, b.conv);
+}
+
+#[test]
+fn parse_multichar_modes() {
+    // Paper §2.3 RCP layer string.
+    let s =
+        parse("b(s1)(s2)(s3)hw,r(t1)(s1),r(t2)(s2),r(t3)(s3),rhw->b(t1)(t2)(t3)hw|hw").unwrap();
+    assert_eq!(s.n_inputs(), 5);
+    let t1 = s.modes.get("t1").unwrap();
+    assert_eq!(s.kind(t1), ModeKind::Free);
+    let s1 = s.modes.get("s1").unwrap();
+    assert_eq!(s.kind(s1), ModeKind::Contraction);
+    let r = s.modes.get("r").unwrap();
+    assert_eq!(s.kind(r), ModeKind::Contraction);
+    // Round-trip rendering.
+    assert_eq!(
+        s.render(),
+        "b(s1)(s2)(s3)hw,r(t1)(s1),r(t2)(s2),r(t3)(s3),rhw->b(t1)(t2)(t3)hw|hw"
+    );
+}
+
+#[test]
+fn parse_whitespace_insensitive() {
+    let a = parse(" b s h w , t s h w -> b t h w | h w ").unwrap();
+    let b = parse("bshw,tshw->bthw|hw").unwrap();
+    assert_eq!(a.render(), b.render());
+}
+
+#[test]
+fn self_sum_mode_classified() {
+    // 'k' appears only in input 0 and not the output: case (5) of §3.1.
+    let s = parse("ak,ab->b").unwrap();
+    let k = s.modes.get("k").unwrap();
+    assert_eq!(s.kind(k), ModeKind::SelfSum);
+    let a = s.modes.get("a").unwrap();
+    assert_eq!(s.kind(a), ModeKind::Contraction);
+}
+
+#[test]
+fn reject_missing_arrow() {
+    assert!(parse("ab,bc").is_err());
+}
+
+#[test]
+fn reject_unknown_output_mode() {
+    assert!(parse("ab,bc->az").is_err());
+}
+
+#[test]
+fn reject_conv_mode_not_in_output() {
+    // conv mode must appear in the output (it produces an axis).
+    assert!(parse("ah,bh->ab|h").is_err());
+}
+
+#[test]
+fn reject_duplicate_mode_within_tensor() {
+    assert!(parse("aa->a").is_err());
+}
+
+#[test]
+fn reject_bad_characters() {
+    assert!(parse("a$b,bc->ac").is_err());
+    assert!(parse("a(b,bc->ac").is_err());
+    assert!(parse("a()b->ab").is_err());
+}
+
+#[test]
+fn fig1_string_parses() {
+    // Figure 1a: conv_einsum.contract_path("ijk,jl,lmq,njpq->ijknp|j", A,B,C,D)
+    let s = parse("ijk,jl,lmq,njpq->ijknp|j").unwrap();
+    assert_eq!(s.n_inputs(), 4);
+    let j = s.modes.get("j").unwrap();
+    assert_eq!(s.kind(j), ModeKind::Convolution);
+    assert_eq!(s.occurrences(j), 3);
+}
+
+#[test]
+fn sized_spec_standard_conv_layer() {
+    // §2.3: Y = conv_einsum("bshw,tshw->bthw|hw", X, W)
+    let spec = parse("bshw,tshw->bthw|hw").unwrap();
+    let sized = SizedSpec::new(spec, vec![vec![8, 3, 32, 32], vec![16, 3, 5, 5]]).unwrap();
+    // Default variety for 2-input conv is Same → output spatial = feature.
+    assert_eq!(sized.output_shape(), vec![8, 16, 32, 32]);
+    let h = sized.spec.modes.get("h").unwrap();
+    assert_eq!(sized.conv_feature_size(h), 32);
+    assert_eq!(sized.occurrence_sizes(h), vec![32, 5]);
+}
+
+#[test]
+fn sized_spec_full_conv_matches_eq1() {
+    // Eq. (1): standard convolution yields X' = X + L − 1.
+    let spec = parse("xbc,xde->xbcde|x").unwrap();
+    let sized = SizedSpec::with_kinds(
+        spec,
+        vec![vec![10, 2, 3], vec![4, 5, 6]],
+        vec![ConvKind::Full],
+    )
+    .unwrap();
+    assert_eq!(sized.output_shape(), vec![13, 2, 3, 5, 6]); // 10+4-1
+}
+
+#[test]
+fn sized_spec_rejects_inconsistent_contraction() {
+    let spec = parse("ab,bc->ac").unwrap();
+    assert!(SizedSpec::new(spec, vec![vec![2, 3], vec![4, 5]]).is_err());
+}
+
+#[test]
+fn sized_spec_rejects_wrong_arity() {
+    let spec = parse("ab,bc->ac").unwrap();
+    assert!(SizedSpec::new(spec.clone(), vec![vec![2, 3]]).is_err());
+    assert!(SizedSpec::new(spec, vec![vec![2], vec![3, 4]]).is_err());
+}
+
+#[test]
+fn sized_spec_conv_modes_may_differ_in_size() {
+    // "the same letter x is used for different modes, even if their
+    //  dimension sizes may differ" (§2.2).
+    let spec = parse("xa,xb->xab|x").unwrap();
+    let sized = SizedSpec::new(spec, vec![vec![32, 2], vec![5, 3]]).unwrap();
+    assert_eq!(sized.output_shape(), vec![32, 2, 3]);
+}
+
+#[test]
+fn sized_spec_multiway_requires_circular() {
+    let spec = parse("bfshw,fghw,sthw->bgthw|hw").unwrap();
+    let dims = vec![
+        vec![2, 3, 4, 16, 16],
+        vec![3, 5, 3, 3],
+        vec![4, 6, 3, 3],
+    ];
+    // Default (multi-way → circular) is accepted.
+    let ok = SizedSpec::new(spec.clone(), dims.clone()).unwrap();
+    let h = ok.spec.modes.get("h").unwrap();
+    assert_eq!(ok.conv_kind(h), ConvKind::Circular);
+    // Forcing Same on a 3-way conv mode is rejected.
+    assert!(SizedSpec::with_kinds(spec, dims, vec![ConvKind::Same, ConvKind::Same]).is_err());
+}
+
+#[test]
+fn conv_kind_out_dims() {
+    assert_eq!(ConvKind::Full.out_dim(10, 4), 13);
+    assert_eq!(ConvKind::Valid.out_dim(10, 4), 7);
+    assert_eq!(ConvKind::Same.out_dim(10, 4), 10);
+    assert_eq!(ConvKind::Circular.out_dim(10, 4), 10);
+    // Symmetric in argument order (feature = max).
+    assert_eq!(ConvKind::Full.out_dim(4, 10), 13);
+}
+
+#[test]
+fn all_modes_enumeration() {
+    let s = parse("ab,bc->ac").unwrap();
+    let all = s.all_modes();
+    assert_eq!(all.len(), 3);
+    assert_eq!(ids(&s, &["a", "b", "c"]), all);
+}
+
+#[test]
+fn render_multichar_parenthesizes() {
+    let s = parse("(r1)t,(r2)s,(r1)(r2)hw->tshw").unwrap();
+    assert_eq!(s.render(), "(r1)t,(r2)s,(r1)(r2)hw->tshw");
+}

@@ -1,0 +1,560 @@
+//! Canonicalization of a 2-input conv_einsum into the paper's *atomic
+//! operation* (§3.1): a grouped N-way convolution
+//!
+//! ```text
+//!   out[g, t, n, p⃗] = Σ_s Σ_{i⃗ ⊛ q⃗ = p⃗}  A[g, t, s, i⃗] · B[g, n, s, q⃗]
+//! ```
+//!
+//! where `g` merges all batch-product modes, `t`/`n` merge the free modes of
+//! each input, `s` merges all contraction modes, and `p⃗` ranges over the
+//! convolution modes. Self-contraction modes (§3.1 case 5) are summed out in
+//! pre-processing; same-type mode groups are merged by reshape (§3.1
+//! "multiple letters with the same operation type").
+//!
+//! The convolution itself is driven by per-mode *triple tables*
+//! `(ia, ib, p)` enumerating the index combinations that contribute, which
+//! uniformly covers circular / same / valid / full varieties (and arbitrary
+//! wrap moduli needed for pairwise steps inside a multi-way convolution).
+
+use crate::einsum::{ConvKind, ModeId, SizedSpec};
+use crate::tensor::Tensor;
+
+/// One convolution axis of the atom.
+#[derive(Debug, Clone)]
+pub struct ConvAxis {
+    pub mode: ModeId,
+    pub ia: usize,
+    pub ib: usize,
+    pub out: usize,
+    pub kind: ConvKind,
+    /// Wrap modulus actually used (circular only).
+    pub modulus: usize,
+    /// Contributing index combinations.
+    pub triples: Vec<(u32, u32, u32)>,
+}
+
+/// Build the triple table for one conv axis.
+pub fn conv_triples(
+    kind: ConvKind,
+    ia: usize,
+    ib: usize,
+    modulus: Option<usize>,
+) -> (usize, Vec<(u32, u32, u32)>) {
+    let feat = ia.max(ib);
+    let filt = ia.min(ib);
+    let (out, p_of): (usize, Box<dyn Fn(usize) -> Option<usize>>) = match kind {
+        ConvKind::Circular => {
+            let p = modulus.unwrap_or(feat);
+            let out = (ia + ib - 1).min(p);
+            (out, Box::new(move |pf| Some(pf % p)))
+        }
+        ConvKind::Full => (ia + ib - 1, Box::new(Some)),
+        ConvKind::Same => {
+            let shift = (filt - 1) / 2;
+            let out = feat;
+            (
+                out,
+                Box::new(move |pf| {
+                    let p = pf as isize - shift as isize;
+                    (p >= 0 && (p as usize) < out).then(|| p as usize)
+                }),
+            )
+        }
+        ConvKind::Valid => {
+            let shift = filt - 1;
+            let out = feat - filt + 1;
+            (
+                out,
+                Box::new(move |pf| {
+                    let p = pf as isize - shift as isize;
+                    (p >= 0 && (p as usize) < out).then(|| p as usize)
+                }),
+            )
+        }
+    };
+    let mut triples = Vec::with_capacity(ia * ib);
+    for a in 0..ia {
+        for b in 0..ib {
+            if let Some(p) = p_of(a + b) {
+                triples.push((a as u32, b as u32, p as u32));
+            }
+        }
+    }
+    (out, triples)
+}
+
+/// The canonicalized atom for one pairwise conv_einsum.
+#[derive(Debug, Clone)]
+pub struct Atom {
+    /// Axes of input 0 to sum out first (descending order).
+    pub presum_a: Vec<usize>,
+    /// Axes of input 1 to sum out first (descending order).
+    pub presum_b: Vec<usize>,
+    /// Permutation applied to (pre-summed) input 0: [batch, afree, contr, conv].
+    pub perm_a: Vec<usize>,
+    /// Permutation applied to (pre-summed) input 1: [batch, bfree, contr, conv].
+    pub perm_b: Vec<usize>,
+    /// Merged group sizes.
+    pub g: usize,
+    pub t: usize,
+    pub n: usize,
+    pub s: usize,
+    /// Convolution axes in canonical order.
+    pub conv: Vec<ConvAxis>,
+    /// Raw output dims (mode-granular): [batch…, afree…, bfree…, conv…].
+    pub raw_out_dims: Vec<usize>,
+    /// Permutation from raw output to the requested output order.
+    pub out_perm: Vec<usize>,
+    /// Final output shape in requested order.
+    pub out_shape: Vec<usize>,
+}
+
+/// Classify + canonicalize a 2-input sized spec.
+///
+/// `moduli` optionally overrides the circular wrap modulus per entry of
+/// `spec.conv` (needed when this op is a step inside a multi-way convolution
+/// whose feature size lives on a tensor not participating in this step).
+pub fn canonicalize(sized: &SizedSpec, moduli: &[Option<usize>]) -> Atom {
+    assert_eq!(sized.spec.n_inputs(), 2, "atom requires exactly 2 inputs");
+    assert!(moduli.is_empty() || moduli.len() == sized.spec.conv.len());
+    let spec = &sized.spec;
+    let ma = &spec.inputs[0];
+    let mb = &spec.inputs[1];
+    let da = &sized.dims[0];
+    let db = &sized.dims[1];
+
+    let in_a = |m: ModeId| ma.contains(&m);
+    let in_b = |m: ModeId| mb.contains(&m);
+    let in_out = |m: ModeId| spec.output.contains(&m);
+    let size_a = |m: ModeId| da[ma.iter().position(|&x| x == m).unwrap()];
+    let size_b = |m: ModeId| db[mb.iter().position(|&x| x == m).unwrap()];
+
+    // --- group the modes -------------------------------------------------
+    let mut batch = Vec::new(); // in a & b & out (non-conv)
+    let mut contr = Vec::new(); // in a & b, not out (non-conv)
+    let mut afree = Vec::new(); // only a, in out (incl. 1-sided conv modes)
+    let mut bfree = Vec::new();
+    let mut presum_a_modes = Vec::new();
+    let mut presum_b_modes = Vec::new();
+    let mut convpair = Vec::new(); // conv modes in both inputs
+
+    let mut seen = std::collections::HashSet::new();
+    for &m in ma.iter().chain(mb.iter()) {
+        if !seen.insert(m) {
+            continue;
+        }
+        let conv = spec.is_conv(m);
+        match (in_a(m), in_b(m)) {
+            (true, true) if conv => convpair.push(m),
+            (true, true) if in_out(m) => batch.push(m),
+            (true, true) => contr.push(m),
+            (true, false) if in_out(m) => afree.push(m),
+            (true, false) => presum_a_modes.push(m),
+            (false, true) if in_out(m) => bfree.push(m),
+            (false, true) => presum_b_modes.push(m),
+            (false, false) => unreachable!(),
+        }
+    }
+    // Keep conv-pair order aligned with the pipe list.
+    convpair.sort_by_key(|m| spec.conv.iter().position(|x| x == m).unwrap());
+
+    // --- pre-sum axes ------------------------------------------------------
+    let mut presum_a: Vec<usize> = presum_a_modes
+        .iter()
+        .map(|m| ma.iter().position(|x| x == m).unwrap())
+        .collect();
+    presum_a.sort_unstable_by(|x, y| y.cmp(x)); // descending
+    let mut presum_b: Vec<usize> = presum_b_modes
+        .iter()
+        .map(|m| mb.iter().position(|x| x == m).unwrap())
+        .collect();
+    presum_b.sort_unstable_by(|x, y| y.cmp(x));
+
+    // Mode lists after pre-sum.
+    let ma2: Vec<ModeId> = ma
+        .iter()
+        .copied()
+        .filter(|m| !presum_a_modes.contains(m))
+        .collect();
+    let mb2: Vec<ModeId> = mb
+        .iter()
+        .copied()
+        .filter(|m| !presum_b_modes.contains(m))
+        .collect();
+
+    // --- canonical permutations -------------------------------------------
+    let pos_a = |m: ModeId| ma2.iter().position(|&x| x == m).unwrap();
+    let pos_b = |m: ModeId| mb2.iter().position(|&x| x == m).unwrap();
+    let perm_a: Vec<usize> = batch
+        .iter()
+        .chain(afree.iter())
+        .chain(contr.iter())
+        .chain(convpair.iter())
+        .map(|&m| pos_a(m))
+        .collect();
+    let perm_b: Vec<usize> = batch
+        .iter()
+        .chain(bfree.iter())
+        .chain(contr.iter())
+        .chain(convpair.iter())
+        .map(|&m| pos_b(m))
+        .collect();
+
+    let g: usize = batch.iter().map(|&m| size_a(m)).product();
+    let t: usize = afree.iter().map(|&m| size_a(m)).product();
+    let n: usize = bfree.iter().map(|&m| size_b(m)).product();
+    let s: usize = contr.iter().map(|&m| size_a(m)).product();
+
+    // --- conv axes ----------------------------------------------------------
+    let conv: Vec<ConvAxis> = convpair
+        .iter()
+        .map(|&m| {
+            let pipe_idx = spec.conv.iter().position(|&x| x == m).unwrap();
+            let kind = sized.conv_kinds[pipe_idx];
+            let modulus = moduli.get(pipe_idx).copied().flatten();
+            let ia = size_a(m);
+            let ib = size_b(m);
+            let (out, triples) = conv_triples(kind, ia, ib, modulus);
+            ConvAxis {
+                mode: m,
+                ia,
+                ib,
+                out,
+                kind,
+                modulus: modulus.unwrap_or_else(|| ia.max(ib)),
+                triples,
+            }
+        })
+        .collect();
+
+    // --- output layout -------------------------------------------------------
+    // Raw order: batch…, afree…, bfree…, convpair…
+    let raw_modes: Vec<ModeId> = batch
+        .iter()
+        .chain(afree.iter())
+        .chain(bfree.iter())
+        .chain(convpair.iter())
+        .copied()
+        .collect();
+    let raw_out_dims: Vec<usize> = batch
+        .iter()
+        .map(|&m| size_a(m))
+        .chain(afree.iter().map(|&m| size_a(m)))
+        .chain(bfree.iter().map(|&m| size_b(m)))
+        .chain(conv.iter().map(|c| c.out))
+        .collect();
+
+    debug_assert_eq!(raw_modes.len(), spec.output.len());
+    let out_perm: Vec<usize> = spec
+        .output
+        .iter()
+        .map(|m| raw_modes.iter().position(|x| x == m).unwrap())
+        .collect();
+    let out_shape: Vec<usize> = out_perm.iter().map(|&p| raw_out_dims[p]).collect();
+
+    Atom {
+        presum_a,
+        presum_b,
+        perm_a,
+        perm_b,
+        g,
+        t,
+        n,
+        s,
+        conv,
+        raw_out_dims,
+        out_perm,
+        out_shape,
+    }
+}
+
+/// Pre-sum + permute an input into canonical contiguous layout
+/// `[G, F, S, conv…]` (F = t for input 0, n for input 1).
+fn canonical_input(x: &Tensor, presum: &[usize], perm: &[usize]) -> Tensor {
+    let mut x = x.clone();
+    for &ax in presum {
+        x = x.sum_axis(ax);
+    }
+    x.permute(perm)
+}
+
+impl Atom {
+    /// Total elements across the conv axes of input a / input b / output.
+    fn conv_sizes(&self) -> (usize, usize, usize) {
+        let pa: usize = self.conv.iter().map(|c| c.ia).product();
+        let pb: usize = self.conv.iter().map(|c| c.ib).product();
+        let po: usize = self.conv.iter().map(|c| c.out).product();
+        (pa, pb, po)
+    }
+
+    /// Build the flattened combined triple table: offsets into the a-conv
+    /// block, b-conv block and out-conv block for every contributing
+    /// combination across all conv axes.
+    fn combined_triples(&self) -> Vec<(u32, u32, u32)> {
+        let mut combined: Vec<(u32, u32, u32)> = vec![(0, 0, 0)];
+        for c in &self.conv {
+            let mut next = Vec::with_capacity(combined.len() * c.triples.len());
+            for &(ao, bo, po) in &combined {
+                for &(ia, ib, p) in &c.triples {
+                    next.push((
+                        ao * c.ia as u32 + ia,
+                        bo * c.ib as u32 + ib,
+                        po * c.out as u32 + p,
+                    ));
+                }
+            }
+            combined = next;
+        }
+        combined
+    }
+
+    /// §Perf: combined triples for all conv axes *except the last*, plus the
+    /// last axis lowered into contiguous runs — for a fixed filter tap `ib`,
+    /// consecutive feature indices `ia` map to consecutive outputs `p`, so
+    /// the innermost loop becomes a vectorizable axpy over slices instead of
+    /// per-element gather/scatter.
+    fn head_and_runs(&self) -> (Vec<(u32, u32, u32)>, Vec<(u32, u32, u32, u32)>) {
+        debug_assert!(!self.conv.is_empty());
+        let head_axes = &self.conv[..self.conv.len() - 1];
+        let mut head: Vec<(u32, u32, u32)> = vec![(0, 0, 0)];
+        for c in head_axes {
+            let mut next = Vec::with_capacity(head.len() * c.triples.len());
+            for &(ao, bo, po) in &head {
+                for &(ia, ib, p) in &c.triples {
+                    next.push((
+                        ao * c.ia as u32 + ia,
+                        bo * c.ib as u32 + ib,
+                        po * c.out as u32 + p,
+                    ));
+                }
+            }
+            head = next;
+        }
+        // Coalesce the last axis triples into (ib, ia_start, p_start, len)
+        // runs: group by ib, then merge unit-stride (ia, p) successions.
+        let last = self.conv.last().unwrap();
+        let mut by_ib: Vec<Vec<(u32, u32)>> = vec![Vec::new(); last.ib];
+        for &(ia, ib, p) in &last.triples {
+            by_ib[ib as usize].push((ia, p));
+        }
+        let mut runs: Vec<(u32, u32, u32, u32)> = Vec::new();
+        for (ib, mut pairs) in by_ib.into_iter().enumerate() {
+            pairs.sort_unstable();
+            let mut i = 0;
+            while i < pairs.len() {
+                let (ia0, p0) = pairs[i];
+                let mut len = 1u32;
+                while i + (len as usize) < pairs.len() {
+                    let (ia, p) = pairs[i + len as usize];
+                    if ia == ia0 + len && p == p0 + len {
+                        len += 1;
+                    } else {
+                        break;
+                    }
+                }
+                runs.push((ib as u32, ia0, p0, len));
+                i += len as usize;
+            }
+        }
+        (head, runs)
+    }
+
+    /// Execute the atom: `out = f(a, b)`.
+    pub fn execute(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let ac = canonical_input(a, &self.presum_a, &self.perm_a);
+        let bc = canonical_input(b, &self.presum_b, &self.perm_b);
+        let (pa, pb, po) = self.conv_sizes();
+        let (g, t, n, s) = (self.g, self.t, self.n, self.s);
+        debug_assert_eq!(ac.len(), g * t * s * pa);
+        debug_assert_eq!(bc.len(), g * n * s * pb);
+
+        let av = ac.data();
+        let bv = bc.data();
+        let mut out = vec![0.0f32; g * t * n * po];
+
+        if self.conv.is_empty() {
+            // Pure contraction/batch/outer: per-group matmul
+            // out[g,t,n] = Σ_s A[g,t,s]·B[g,n,s]  (dot of contiguous rows).
+            for gi in 0..g {
+                let a_g = &av[gi * t * s..(gi + 1) * t * s];
+                let b_g = &bv[gi * n * s..(gi + 1) * n * s];
+                let o_g = &mut out[gi * t * n..(gi + 1) * t * n];
+                matmul_nt(a_g, b_g, o_g, t, n, s);
+            }
+        } else {
+            // §Perf run-coalesced kernel: head axes via triple table, last
+            // axis as contiguous axpy runs (see EXPERIMENTS.md §Perf/L3).
+            let (head, runs) = self.head_and_runs();
+            let last = self.conv.last().unwrap();
+            let (la, lb, lo) = (last.ia, last.ib, last.out);
+            for gi in 0..g {
+                for ti in 0..t {
+                    for ni in 0..n {
+                        let ob = ((gi * t + ti) * n + ni) * po;
+                        for si in 0..s {
+                            let abase = ((gi * t + ti) * s + si) * pa;
+                            let bbase = ((gi * n + ni) * s + si) * pb;
+                            for &(ao, bo, poo) in &head {
+                                let arow = abase + ao as usize * la;
+                                let brow = bbase + bo as usize * lb;
+                                let orow = ob + poo as usize * lo;
+                                for &(ib, ia0, p0, len) in &runs {
+                                    let w = bv[brow + ib as usize];
+                                    if w == 0.0 {
+                                        continue;
+                                    }
+                                    let asl =
+                                        &av[arow + ia0 as usize..arow + (ia0 + len) as usize];
+                                    let osl = &mut out
+                                        [orow + p0 as usize..orow + (p0 + len) as usize];
+                                    for (o, &a) in osl.iter_mut().zip(asl) {
+                                        *o += w * a;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        Tensor::from_vec(&[g * t * n * po], out)
+            .reshape(&self.raw_out_dims)
+            .permute(&self.out_perm)
+    }
+
+    /// Vector–Jacobian product: given `dout = ∂L/∂out`, return
+    /// `(∂L/∂a, ∂L/∂b)`. This is the training-path computation whose cost
+    /// the paper's tnn-cost adds as `cost(g1) + cost(g2)` (Appendix B).
+    pub fn vjp(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        dout: &Tensor,
+    ) -> (Tensor, Tensor) {
+        let ac = canonical_input(a, &self.presum_a, &self.perm_a);
+        let bc = canonical_input(b, &self.presum_b, &self.perm_b);
+        // Bring dout into raw canonical order [batch, afree, bfree, conv…].
+        debug_assert_eq!(dout.shape(), &self.out_shape[..]);
+        let dout_c = dout.permute(&invert_perm(&self.out_perm));
+
+        let (pa, pb, po) = self.conv_sizes();
+        let (g, t, n, s) = (self.g, self.t, self.n, self.s);
+        let av = ac.data();
+        let bv = bc.data();
+        let dv = dout_c.data();
+        let mut da = vec![0.0f32; av.len()];
+        let mut db = vec![0.0f32; bv.len()];
+
+        if self.conv.is_empty() {
+            // da[g,t,s] = Σ_n dout[g,t,n]·B[g,n,s]
+            // db[g,n,s] = Σ_t dout[g,t,n]·A[g,t,s]
+            for gi in 0..g {
+                let d_g = &dv[gi * t * n..(gi + 1) * t * n];
+                let a_g = &av[gi * t * s..(gi + 1) * t * s];
+                let b_g = &bv[gi * n * s..(gi + 1) * n * s];
+                let da_g = &mut da[gi * t * s..(gi + 1) * t * s];
+                let db_g = &mut db[gi * n * s..(gi + 1) * n * s];
+                // da = dout(t×n) · B(n×s)
+                matmul_nn(d_g, b_g, da_g, t, s, n);
+                // db = doutᵀ(n×t) · A(t×s)
+                matmul_tn(d_g, a_g, db_g, n, s, t);
+            }
+        } else {
+            let combined = self.combined_triples();
+            for gi in 0..g {
+                for ti in 0..t {
+                    for ni in 0..n {
+                        let ob = ((gi * t + ti) * n + ni) * po;
+                        for si in 0..s {
+                            let abase = ((gi * t + ti) * s + si) * pa;
+                            let bbase = ((gi * n + ni) * s + si) * pb;
+                            for &(ao, bo, poo) in &combined {
+                                let do_ = dv[ob + poo as usize];
+                                da[abase + ao as usize] += do_ * bv[bbase + bo as usize];
+                                db[bbase + bo as usize] += do_ * av[abase + ao as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Undo canonicalization: permute back, then re-broadcast pre-summed
+        // axes (∂/∂x of a sum over an axis broadcasts the cotangent).
+        let mut da_t = Tensor::from_vec(&[da.len()], da)
+            .reshape(ac.shape())
+            .permute(&invert_perm(&self.perm_a));
+        for &ax in self.presum_a.iter().rev() {
+            // presum_a is descending; re-insert ascending.
+            da_t = da_t.broadcast_axis(ax, a.shape()[ax]);
+        }
+        let mut db_t = Tensor::from_vec(&[db.len()], db)
+            .reshape(bc.shape())
+            .permute(&invert_perm(&self.perm_b));
+        for &ax in self.presum_b.iter().rev() {
+            db_t = db_t.broadcast_axis(ax, b.shape()[ax]);
+        }
+        (da_t, db_t)
+    }
+}
+
+fn invert_perm(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+/// C(t×n) = A(t×s) · B(n×s)ᵀ — rows of both operands contiguous.
+pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], t: usize, n: usize, s: usize) {
+    for ti in 0..t {
+        let arow = &a[ti * s..(ti + 1) * s];
+        let crow = &mut c[ti * n..(ti + 1) * n];
+        for ni in 0..n {
+            let brow = &b[ni * s..(ni + 1) * s];
+            let mut acc = 0.0f32;
+            for k in 0..s {
+                acc += arow[k] * brow[k];
+            }
+            crow[ni] += acc;
+        }
+    }
+}
+
+/// C(t×s) = A(t×n) · B(n×s) — accumulating.
+pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], t: usize, s: usize, n: usize) {
+    for ti in 0..t {
+        let arow = &a[ti * n..(ti + 1) * n];
+        let crow = &mut c[ti * s..(ti + 1) * s];
+        for ni in 0..n {
+            let av = arow[ni];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[ni * s..(ni + 1) * s];
+            for k in 0..s {
+                crow[k] += av * brow[k];
+            }
+        }
+    }
+}
+
+/// C(n×s) = A(t×n)ᵀ · B(t×s) — accumulating.
+pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], n: usize, s: usize, t: usize) {
+    for ti in 0..t {
+        let arow = &a[ti * n..(ti + 1) * n];
+        let brow = &b[ti * s..(ti + 1) * s];
+        for ni in 0..n {
+            let av = arow[ni];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[ni * s..(ni + 1) * s];
+            for k in 0..s {
+                crow[k] += av * brow[k];
+            }
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Execution of conv_einsum expressions (paper §3.1).
+//!
+//! * [`pairwise`] — evaluate a 2-input conv_einsum by canonicalizing it into
+//!   the atomic grouped-convolution operation.
+//! * [`pairwise_vjp`] — gradients of a pairwise op (the `g1`/`g2` of
+//!   Appendix B).
+//! * [`execute_path`] — run a multi-input expression along a
+//!   [`crate::planner::Plan`]'s pairwise steps.
+//! * [`conv_einsum`] — parse + plan (FLOPs-optimal) + execute in one call;
+//!   the library's headline entry point.
+//! * [`naive_eval`] — brute-force reference oracle (tests only).
+
+pub mod atom;
+mod reference;
+
+pub use atom::{canonicalize, conv_triples, Atom, ConvAxis};
+pub use reference::naive_eval;
+
+use crate::einsum::{parse, SizedSpec};
+use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+
+/// Evaluate a 2-input sized conv_einsum.
+pub fn pairwise(sized: &SizedSpec, a: &Tensor, b: &Tensor) -> Tensor {
+    pairwise_mod(sized, a, b, &[])
+}
+
+/// As [`pairwise`], with explicit circular wrap moduli (one per entry of
+/// `sized.spec.conv`; `None` = default). Needed for pairwise steps inside a
+/// multi-way circular convolution, where the wrap length is the feature size
+/// of the *whole* expression, not of this step.
+pub fn pairwise_mod(
+    sized: &SizedSpec,
+    a: &Tensor,
+    b: &Tensor,
+    moduli: &[Option<usize>],
+) -> Tensor {
+    let atom = canonicalize(sized, moduli);
+    atom.execute(a, b)
+}
+
+/// Gradients of a pairwise op: returns (∂L/∂a, ∂L/∂b) given ∂L/∂out.
+pub fn pairwise_vjp(
+    sized: &SizedSpec,
+    a: &Tensor,
+    b: &Tensor,
+    dout: &Tensor,
+) -> (Tensor, Tensor) {
+    pairwise_vjp_mod(sized, a, b, dout, &[])
+}
+
+/// As [`pairwise_vjp`] with explicit wrap moduli.
+pub fn pairwise_vjp_mod(
+    sized: &SizedSpec,
+    a: &Tensor,
+    b: &Tensor,
+    dout: &Tensor,
+    moduli: &[Option<usize>],
+) -> (Tensor, Tensor) {
+    let atom = canonicalize(sized, moduli);
+    atom.vjp(a, b, dout)
+}
+
+/// Execute a multi-input expression along a plan's pairwise steps.
+///
+/// Mirrors opt-einsum's working-list semantics: each step consumes two
+/// operands from the current list and appends the intermediate at the end;
+/// the final remaining tensor (optionally permuted by the plan's
+/// `final_perm`) is the result.
+pub fn execute_path(plan: &Plan, inputs: &[&Tensor]) -> Result<Tensor> {
+    if inputs.len() != plan.n_inputs {
+        return Err(anyhow!(
+            "plan expects {} inputs, got {}",
+            plan.n_inputs,
+            inputs.len()
+        ));
+    }
+    // Single-input expressions: the plan has one pseudo-step with rhs=lhs
+    // handled by the planner as an identity/reduction; here handle the
+    // degenerate 1-input case by brute reduction via pairwise with a scalar.
+    let mut working: Vec<Tensor> = inputs.iter().map(|t| (*t).clone()).collect();
+    for step in &plan.steps {
+        let (i, j) = (step.lhs, step.rhs);
+        if i >= working.len() || j >= working.len() || i == j {
+            return Err(anyhow!("invalid step indices ({}, {})", i, j));
+        }
+        let a = &working[i];
+        let b = &working[j];
+        debug_assert_eq!(a.shape(), &step.sized.dims[0][..], "step lhs shape");
+        debug_assert_eq!(b.shape(), &step.sized.dims[1][..], "step rhs shape");
+        let out = pairwise_mod(&step.sized, a, b, &step.moduli);
+        // remove higher index first
+        let (hi, lo) = if i > j { (i, j) } else { (j, i) };
+        working.remove(hi);
+        working.remove(lo);
+        working.push(out);
+    }
+    if working.len() != 1 {
+        return Err(anyhow!(
+            "plan left {} operands on the working list",
+            working.len()
+        ));
+    }
+    let mut result = working.pop().unwrap();
+    if let Some(perm) = &plan.final_perm {
+        result = result.permute(perm);
+    }
+    Ok(result)
+}
+
+/// Parse, plan (FLOPs-optimal by default) and execute a conv_einsum string.
+///
+/// ```
+/// use conv_einsum::{conv_einsum, Tensor};
+/// use conv_einsum::util::rng::Rng;
+/// let mut rng = Rng::new(0);
+/// let x = Tensor::rand(&[2, 3, 8, 8], -1.0, 1.0, &mut rng);
+/// let w = Tensor::rand(&[4, 3, 3, 3], -1.0, 1.0, &mut rng);
+/// let y = conv_einsum("bshw,tshw->bthw|hw", &[&x, &w]).unwrap();
+/// assert_eq!(y.shape(), &[2, 4, 8, 8]);
+/// ```
+pub fn conv_einsum(expr: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+    conv_einsum_with(expr, inputs, &PlanOptions::default())
+}
+
+/// As [`conv_einsum`] with explicit planning options (strategy, training
+/// cost model, cost caps, convolution varieties).
+pub fn conv_einsum_with(expr: &str, inputs: &[&Tensor], opts: &PlanOptions) -> Result<Tensor> {
+    let spec = parse(expr).map_err(|e| anyhow!("{e}"))?;
+    let dims: Vec<Vec<usize>> = inputs.iter().map(|t| t.shape().to_vec()).collect();
+    let sized = match &opts.conv_kinds {
+        Some(kinds) => SizedSpec::with_kinds(spec, dims, kinds.clone()),
+        None => SizedSpec::new(spec, dims),
+    }
+    .map_err(|e| anyhow!("{e}"))?;
+    if sized.spec.n_inputs() == 1 {
+        // Degenerate: reductions/permutations of a single tensor.
+        return Ok(single_input_eval(&sized, inputs[0]));
+    }
+    let plan = plan_with(&sized, opts).map_err(|e| anyhow!("{e}"))?;
+    execute_path(&plan, inputs)
+}
+
+/// Evaluate a 1-input expression (self-sums + permutation).
+pub fn single_input_eval(sized: &SizedSpec, x: &Tensor) -> Tensor {
+    let spec = &sized.spec;
+    let modes = &spec.inputs[0];
+    // sum out modes not in output (descending axis order)
+    let mut axes: Vec<usize> = modes
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| !spec.output.contains(m))
+        .map(|(i, _)| i)
+        .collect();
+    axes.sort_unstable_by(|a, b| b.cmp(a));
+    let mut t = x.clone();
+    for ax in axes {
+        t = t.sum_axis(ax);
+    }
+    let remaining: Vec<_> = modes
+        .iter()
+        .copied()
+        .filter(|m| spec.output.contains(m))
+        .collect();
+    let perm: Vec<usize> = spec
+        .output
+        .iter()
+        .map(|m| remaining.iter().position(|x| x == m).unwrap())
+        .collect();
+    t.permute(&perm)
+}
+
+/// Evaluate with the naive left-to-right strategy (the paper's baseline).
+pub fn conv_einsum_ltr(expr: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+    conv_einsum_with(
+        expr,
+        inputs,
+        &PlanOptions {
+            strategy: Strategy::LeftToRight,
+            ..PlanOptions::default()
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,190 @@
+//! Brute-force reference evaluator for N-input conv_einsum expressions.
+//!
+//! Exponential-time (it enumerates the full cross product of every mode
+//! occurrence) but trivially correct from the paper's defining summations
+//! (Appendix A.2). Used as the oracle in unit/property tests for the
+//! pairwise executor, the path executor and the autodiff — *never* on a hot
+//! path.
+//!
+//! Semantics fixed here (and mirrored by `python/compile/kernels/ref.py`):
+//!
+//! * non-conv shared modes: one shared index (batch if in output,
+//!   contraction otherwise);
+//! * self-sum modes: free summation index of their input;
+//! * a convolution mode contributes `p_full = Σ occurrence indices`, then
+//!   per variety: Full keeps `p_full`; Same shifts by `(filt−1)/2` and
+//!   crops; Valid shifts by `filt−1` and crops; Circular wraps modulo the
+//!   feature (max occurrence) size. True convolution, not correlation.
+
+use crate::einsum::{ConvKind, ModeId, SizedSpec};
+use crate::tensor::{for_each_index, Tensor};
+
+/// Evaluate a sized conv_einsum over `inputs` by direct summation.
+pub fn naive_eval(sized: &SizedSpec, inputs: &[&Tensor]) -> Tensor {
+    let spec = &sized.spec;
+    assert_eq!(inputs.len(), spec.n_inputs());
+    for (i, t) in inputs.iter().enumerate() {
+        assert_eq!(
+            t.shape(),
+            &sized.dims[i][..],
+            "input {} shape mismatch",
+            i
+        );
+    }
+
+    let out_shape = sized.output_shape();
+    let mut out = Tensor::zeros(&out_shape);
+
+    // Enumerate one index per *occurrence* for conv modes and per *mode*
+    // otherwise. Build the enumeration axis list:
+    //   - every non-conv mode (shared index across occurrences)
+    //   - every (input, position) occurrence of every conv mode
+    #[derive(Clone, Copy)]
+    enum Axis {
+        Shared(ModeId, usize),          // mode, size
+        ConvOcc(ModeId, usize, usize),  // mode, input idx, size
+    }
+
+    let mut axes: Vec<Axis> = Vec::new();
+    for m in spec.all_modes() {
+        if spec.is_conv(m) {
+            for (i, modes) in spec.inputs.iter().enumerate() {
+                if let Some(pos) = modes.iter().position(|&x| x == m) {
+                    axes.push(Axis::ConvOcc(m, i, sized.dims[i][pos]));
+                }
+            }
+        } else {
+            axes.push(Axis::Shared(m, sized.mode_size(m)));
+        }
+    }
+    let sizes: Vec<usize> = axes
+        .iter()
+        .map(|a| match *a {
+            Axis::Shared(_, s) | Axis::ConvOcc(_, _, s) => s,
+        })
+        .collect();
+
+    // Per conv mode: variety, shift, output size, feature size.
+    struct ConvInfo {
+        mode: ModeId,
+        kind: ConvKind,
+        out_size: usize,
+        shift: usize,
+        feature: usize,
+    }
+    let conv_infos: Vec<ConvInfo> = spec
+        .conv
+        .iter()
+        .map(|&m| {
+            let occ = sized.occurrence_sizes(m);
+            let feature = *occ.iter().max().unwrap();
+            let filt = *occ.iter().min().unwrap();
+            let kind = sized.conv_kind(m);
+            let out_size = if occ.len() == 1 {
+                occ[0]
+            } else {
+                match kind {
+                    ConvKind::Circular | ConvKind::Same => feature,
+                    ConvKind::Full => occ.iter().sum::<usize>() - (occ.len() - 1),
+                    ConvKind::Valid => feature - filt + 1,
+                }
+            };
+            let shift = match kind {
+                ConvKind::Same => (filt - 1) / 2,
+                ConvKind::Valid => filt - 1,
+                _ => 0,
+            };
+            ConvInfo {
+                mode: m,
+                kind,
+                out_size,
+                shift,
+                feature,
+            }
+        })
+        .collect();
+
+    for_each_index(&sizes, |idx| {
+        // index of each non-conv mode:
+        let mode_val = |m: ModeId| -> usize {
+            axes.iter()
+                .zip(idx.iter())
+                .find_map(|(a, &v)| match *a {
+                    Axis::Shared(mm, _) if mm == m => Some(v),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        // index of a conv occurrence:
+        let occ_val = |m: ModeId, input: usize| -> usize {
+            axes.iter()
+                .zip(idx.iter())
+                .find_map(|(a, &v)| match *a {
+                    Axis::ConvOcc(mm, i, _) if mm == m && i == input => Some(v),
+                    _ => None,
+                })
+                .unwrap()
+        };
+
+        // Output index per conv mode; None ⇒ this combination is cropped.
+        let mut conv_out: Vec<Option<usize>> = Vec::with_capacity(conv_infos.len());
+        for ci in &conv_infos {
+            let p_full: usize = spec
+                .inputs
+                .iter()
+                .enumerate()
+                .filter(|(_, modes)| modes.contains(&ci.mode))
+                .map(|(i, _)| occ_val(ci.mode, i))
+                .sum();
+            let p = match ci.kind {
+                ConvKind::Circular => {
+                    // wraps modulo feature size; but when the support
+                    // min(Σsizes−k+1, feature) never reaches the modulus the
+                    // mod is a no-op, matching the pairwise executor.
+                    Some(p_full % ci.feature.max(1) % ci.out_size.max(1))
+                }
+                ConvKind::Full => Some(p_full),
+                ConvKind::Same | ConvKind::Valid => {
+                    let p = p_full as isize - ci.shift as isize;
+                    (p >= 0 && (p as usize) < ci.out_size).then_some(p as usize)
+                }
+            };
+            conv_out.push(p);
+        }
+        if conv_out.iter().any(|p| p.is_none()) {
+            return;
+        }
+
+        // Product over inputs.
+        let mut prod = 1.0f32;
+        for (i, modes) in spec.inputs.iter().enumerate() {
+            let mut ix = Vec::with_capacity(modes.len());
+            for &m in modes {
+                if spec.is_conv(m) {
+                    ix.push(occ_val(m, i));
+                } else {
+                    ix.push(mode_val(m));
+                }
+            }
+            prod *= inputs[i].at(&ix);
+            if prod == 0.0 {
+                // keep going: zeros are common but cheap anyway
+            }
+        }
+
+        // Output index.
+        let mut oix = Vec::with_capacity(spec.output.len());
+        for &m in &spec.output {
+            if spec.is_conv(m) {
+                let k = spec.conv.iter().position(|&x| x == m).unwrap();
+                oix.push(conv_out[k].unwrap());
+            } else {
+                oix.push(mode_val(m));
+            }
+        }
+        let cur = out.at(&oix);
+        out.set(&oix, cur + prod);
+    });
+
+    out
+}

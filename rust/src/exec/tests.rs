@@ -1,0 +1,396 @@
+//! Tests for the pairwise executor, path executor and the high-level
+//! `conv_einsum` entry point. The oracle is the brute-force reference
+//! evaluator; property tests sweep random shapes and mode structures.
+
+use super::*;
+use crate::einsum::{parse, ConvKind, SizedSpec};
+use crate::tensor::Tensor;
+use crate::util::prop;
+use crate::util::rng::Rng;
+
+fn sized(expr: &str, dims: Vec<Vec<usize>>) -> SizedSpec {
+    SizedSpec::new(parse(expr).unwrap(), dims).unwrap()
+}
+
+fn rand_inputs(sized: &SizedSpec, rng: &mut Rng) -> Vec<Tensor> {
+    sized
+        .dims
+        .iter()
+        .map(|d| Tensor::rand(d, -1.0, 1.0, rng))
+        .collect()
+}
+
+fn check_pairwise(expr: &str, dims: Vec<Vec<usize>>, seed: u64) {
+    let s = sized(expr, dims);
+    let mut rng = Rng::new(seed);
+    let inputs = rand_inputs(&s, &mut rng);
+    let got = pairwise(&s, &inputs[0], &inputs[1]);
+    let want = naive_eval(&s, &[&inputs[0], &inputs[1]]);
+    got.assert_close(&want, 1e-3);
+}
+
+#[test]
+fn matmul_matches_reference() {
+    check_pairwise("ij,jk->ik", vec![vec![3, 4], vec![4, 5]], 1);
+}
+
+#[test]
+fn batch_matmul_matches_reference() {
+    check_pairwise("bij,bjk->bik", vec![vec![2, 3, 4], vec![2, 4, 5]], 2);
+}
+
+#[test]
+fn outer_product_matches_reference() {
+    check_pairwise("ab,cd->abcd", vec![vec![2, 3], vec![4, 5]], 3);
+}
+
+#[test]
+fn paper_section21_example() {
+    // T_{b,i,j} = Σ_c T1_{b,c,i} T2_{b,c,j}
+    check_pairwise("bci,bcj->bij", vec![vec![2, 3, 4], vec![2, 3, 5]], 4);
+}
+
+#[test]
+fn selfsum_matches_reference() {
+    check_pairwise("ak,ab->b", vec![vec![3, 7], vec![3, 2]], 5);
+    check_pairwise("akz,abq->b", vec![vec![3, 2, 2], vec![3, 4, 3]], 6);
+}
+
+#[test]
+fn conv1d_full_matches_reference() {
+    let spec = parse("xa,xb->xab|x").unwrap();
+    let s = SizedSpec::with_kinds(
+        spec,
+        vec![vec![6, 2], vec![3, 4]],
+        vec![ConvKind::Full],
+    )
+    .unwrap();
+    let mut rng = Rng::new(7);
+    let inputs = rand_inputs(&s, &mut rng);
+    let got = pairwise(&s, &inputs[0], &inputs[1]);
+    assert_eq!(got.shape(), &[8, 2, 4]);
+    let want = naive_eval(&s, &[&inputs[0], &inputs[1]]);
+    got.assert_close(&want, 1e-3);
+}
+
+#[test]
+fn conv1d_full_known_values() {
+    // [1,2,3] * [1,1] = [1,3,5,3]
+    let spec = parse("x,x->x|x").unwrap();
+    let s = SizedSpec::with_kinds(spec, vec![vec![3], vec![2]], vec![ConvKind::Full]).unwrap();
+    let a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+    let b = Tensor::from_vec(&[2], vec![1.0, 1.0]);
+    let y = pairwise(&s, &a, &b);
+    assert_eq!(y.data(), &[1.0, 3.0, 5.0, 3.0]);
+}
+
+#[test]
+fn conv1d_circular_known_values() {
+    // circular [1,2,3,4] ⊛ [1,1] mod 4 = [1+4? ...]:
+    // full = [1,3,5,7,4]; wrap index 4→0: [5,3,5,7]
+    let spec = parse("x,x->x|x").unwrap();
+    let s =
+        SizedSpec::with_kinds(spec, vec![vec![4], vec![2]], vec![ConvKind::Circular]).unwrap();
+    let a = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+    let b = Tensor::from_vec(&[2], vec![1.0, 1.0]);
+    let y = pairwise(&s, &a, &b);
+    assert_eq!(y.data(), &[5.0, 3.0, 5.0, 7.0]);
+}
+
+#[test]
+fn conv_same_and_valid_match_reference() {
+    for kind in [ConvKind::Same, ConvKind::Valid] {
+        let spec = parse("xa,xb->xab|x").unwrap();
+        let s = SizedSpec::with_kinds(spec, vec![vec![8, 2], vec![3, 2]], vec![kind]).unwrap();
+        let mut rng = Rng::new(8);
+        let inputs = rand_inputs(&s, &mut rng);
+        let got = pairwise(&s, &inputs[0], &inputs[1]);
+        let want = naive_eval(&s, &[&inputs[0], &inputs[1]]);
+        got.assert_close(&want, 1e-3);
+    }
+}
+
+#[test]
+fn standard_conv_layer_matches_reference() {
+    // §2.3: Y = conv_einsum("bshw,tshw->bthw|hw", X, W), Same padding.
+    check_pairwise(
+        "bshw,tshw->bthw|hw",
+        vec![vec![2, 3, 6, 5], vec![4, 3, 3, 3]],
+        9,
+    );
+}
+
+#[test]
+fn grouped_conv_atom_matches_reference() {
+    // §3.1 atomic op: "gtsh,bgsh->bgth|h"
+    check_pairwise(
+        "gtsh,bgsh->bgth|h",
+        vec![vec![2, 3, 2, 3], vec![2, 2, 2, 6]],
+        10,
+    );
+}
+
+#[test]
+fn feature_filter_order_irrelevant() {
+    // conv_einsum is symmetric in which operand carries the feature.
+    let s1 = sized("bshw,tshw->bthw|hw", vec![vec![2, 3, 6, 6], vec![4, 3, 3, 3]]);
+    let mut rng = Rng::new(11);
+    let x = Tensor::rand(&[2, 3, 6, 6], -1.0, 1.0, &mut rng);
+    let w = Tensor::rand(&[4, 3, 3, 3], -1.0, 1.0, &mut rng);
+    let y1 = pairwise(&s1, &x, &w);
+    let s2 = sized("tshw,bshw->bthw|hw", vec![vec![4, 3, 3, 3], vec![2, 3, 6, 6]]);
+    let y2 = pairwise(&s2, &w, &x);
+    y1.assert_close(&y2, 1e-4);
+}
+
+#[test]
+fn vjp_matches_finite_differences() {
+    let s = sized("bshw,tshw->bthw|hw", vec![vec![1, 2, 5, 4], vec![2, 2, 3, 3]]);
+    let mut rng = Rng::new(12);
+    let x = Tensor::rand(&[1, 2, 5, 4], -1.0, 1.0, &mut rng);
+    let w = Tensor::rand(&[2, 2, 3, 3], -1.0, 1.0, &mut rng);
+    // L = Σ out ⊙ dout for a fixed random dout.
+    let out = pairwise(&s, &x, &w);
+    let dout = Tensor::rand(out.shape(), -1.0, 1.0, &mut rng);
+    let (dx, dw) = pairwise_vjp(&s, &x, &w, &dout);
+    assert_eq!(dx.shape(), x.shape());
+    assert_eq!(dw.shape(), w.shape());
+
+    let loss = |x: &Tensor, w: &Tensor| -> f32 {
+        let o = pairwise(&s, x, w);
+        o.data().iter().zip(dout.data()).map(|(a, b)| a * b).sum()
+    };
+    let eps = 1e-2f32;
+    // Check a handful of coordinates of each gradient.
+    for k in [0usize, 7, 13, 29] {
+        let mut xp = x.clone();
+        xp.data_mut()[k] += eps;
+        let mut xm = x.clone();
+        xm.data_mut()[k] -= eps;
+        let fd = (loss(&xp, &w) - loss(&xm, &w)) / (2.0 * eps);
+        let an = dx.data()[k];
+        assert!(
+            (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+            "dx[{k}]: fd={fd} analytic={an}"
+        );
+    }
+    for k in [0usize, 5, 17, 35] {
+        let mut wp = w.clone();
+        wp.data_mut()[k] += eps;
+        let mut wm = w.clone();
+        wm.data_mut()[k] -= eps;
+        let fd = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps);
+        let an = dw.data()[k];
+        assert!(
+            (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+            "dw[{k}]: fd={fd} analytic={an}"
+        );
+    }
+}
+
+#[test]
+fn vjp_with_selfsum_broadcasts() {
+    let s = sized("ak,ab->b", vec![vec![2, 3], vec![2, 4]]);
+    let mut rng = Rng::new(13);
+    let a = Tensor::rand(&[2, 3], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&[2, 4], -1.0, 1.0, &mut rng);
+    let out = pairwise(&s, &a, &b);
+    let dout = Tensor::full(out.shape(), 1.0);
+    let (da, db) = pairwise_vjp(&s, &a, &b, &dout);
+    assert_eq!(da.shape(), a.shape());
+    assert_eq!(db.shape(), b.shape());
+    // da[a,k] = Σ_b dout[b]·b[a,b] — independent of k (broadcast).
+    for ai in 0..2 {
+        assert!((da.at(&[ai, 0]) - da.at(&[ai, 1])).abs() < 1e-6);
+        assert!((da.at(&[ai, 0]) - da.at(&[ai, 2])).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn conv_einsum_end_to_end_cp_layer() {
+    // Paper §2.3 CP convolutional layer, 5 inputs.
+    let expr = "bshw,rt,rs,rh,rw->bthw|hw";
+    let mut rng = Rng::new(14);
+    let x = Tensor::rand(&[2, 3, 6, 6], -1.0, 1.0, &mut rng);
+    let w1 = Tensor::rand(&[2, 4], -1.0, 1.0, &mut rng);
+    let w2 = Tensor::rand(&[2, 3], -1.0, 1.0, &mut rng);
+    let w3 = Tensor::rand(&[2, 6], -1.0, 1.0, &mut rng);
+    let w4 = Tensor::rand(&[2, 6], -1.0, 1.0, &mut rng);
+    let inputs = [&x, &w1, &w2, &w3, &w4];
+    let opt = conv_einsum(expr, &inputs).unwrap();
+    let ltr = conv_einsum_ltr(expr, &inputs).unwrap();
+    assert_eq!(opt.shape(), &[2, 4, 6, 6]);
+    // Optimal and naive paths compute the same tensor.
+    opt.assert_close(&ltr, 1e-3);
+    // And both match the brute-force reference.
+    let s = sized(
+        expr,
+        inputs.iter().map(|t| t.shape().to_vec()).collect(),
+    );
+    let want = naive_eval(&s, &inputs);
+    opt.assert_close(&want, 1e-3);
+}
+
+#[test]
+fn conv_einsum_multiway_circular_path_independent() {
+    // Interleaved group convolution (Eq. 2): h is a 3-way conv mode; any
+    // pairwise order must agree under circular padding.
+    let expr = "bfsh,fgh,sth->bgth|h";
+    let mut rng = Rng::new(15);
+    let x = Tensor::rand(&[2, 2, 3, 6], -1.0, 1.0, &mut rng);
+    let k1 = Tensor::rand(&[2, 2, 3], -1.0, 1.0, &mut rng);
+    let k2 = Tensor::rand(&[3, 2, 2], -1.0, 1.0, &mut rng);
+    let inputs = [&x, &k1, &k2];
+    let opt = conv_einsum(expr, &inputs).unwrap();
+    let ltr = conv_einsum_ltr(expr, &inputs).unwrap();
+    opt.assert_close(&ltr, 1e-3);
+    let s = sized(expr, inputs.iter().map(|t| t.shape().to_vec()).collect());
+    let want = naive_eval(&s, &inputs);
+    opt.assert_close(&want, 1e-3);
+    assert_eq!(opt.shape(), &[2, 2, 2, 6]);
+}
+
+#[test]
+fn fig1_string_executes() {
+    let expr = "ijk,jl,lmq,njpq->ijknp|j";
+    let mut rng = Rng::new(16);
+    let a = Tensor::rand(&[3, 4, 2], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&[4, 3], -1.0, 1.0, &mut rng);
+    let c = Tensor::rand(&[3, 2, 2], -1.0, 1.0, &mut rng);
+    let d = Tensor::rand(&[2, 4, 3, 2], -1.0, 1.0, &mut rng);
+    let inputs = [&a, &b, &c, &d];
+    let got = conv_einsum(expr, &inputs).unwrap();
+    let ltr = conv_einsum_ltr(expr, &inputs).unwrap();
+    got.assert_close(&ltr, 1e-3);
+    let s = sized(expr, inputs.iter().map(|t| t.shape().to_vec()).collect());
+    got.assert_close(&naive_eval(&s, &inputs), 1e-3);
+}
+
+#[test]
+fn single_input_expressions() {
+    let mut rng = Rng::new(17);
+    let x = Tensor::rand(&[2, 3, 4], -1.0, 1.0, &mut rng);
+    // reduction
+    let y = conv_einsum("abc->b", &[&x]).unwrap();
+    let mut want = Tensor::zeros(&[3]);
+    for a in 0..2 {
+        for b in 0..3 {
+            for c in 0..4 {
+                let cur = want.at(&[b]);
+                want.set(&[b], cur + x.at(&[a, b, c]));
+            }
+        }
+    }
+    y.assert_close(&want, 1e-4);
+    // transpose
+    let t = conv_einsum("abc->cab", &[&x]).unwrap();
+    assert_eq!(t.shape(), &[4, 2, 3]);
+    assert_eq!(t.at(&[3, 1, 2]), x.at(&[1, 2, 3]));
+}
+
+#[test]
+fn property_pairwise_matches_reference() {
+    // Random 2-input expressions over a small mode vocabulary.
+    prop::check("pairwise-vs-reference", 60, |g| {
+        let mut rng = Rng::new(g.usize_in(0, u32::MAX as usize) as u64);
+        // choose structure: sizes for shared modes
+        let n_shared = g.usize_in(0, 2); // contraction candidates
+        let n_batch = g.usize_in(0, 1);
+        let n_afree = g.usize_in(0, 2);
+        let n_bfree = g.usize_in(0, 2);
+        let with_conv = g.bool();
+
+        let names = ["c", "d", "g", "t", "u", "n", "m", "x"];
+        let mut lhs = String::new();
+        let mut rhs = String::new();
+        let mut out = String::new();
+        let mut da: Vec<usize> = vec![];
+        let mut db: Vec<usize> = vec![];
+        let mut ni = 0;
+        for _ in 0..n_shared {
+            let d = g.usize_in(1, 3);
+            lhs.push_str(names[ni]);
+            rhs.push_str(names[ni]);
+            da.push(d);
+            db.push(d);
+            ni += 1;
+        }
+        for _ in 0..n_batch {
+            let d = g.usize_in(1, 3);
+            lhs.push_str(names[ni]);
+            rhs.push_str(names[ni]);
+            out.push_str(names[ni]);
+            da.push(d);
+            db.push(d);
+            ni += 1;
+        }
+        for _ in 0..n_afree {
+            let d = g.usize_in(1, 3);
+            lhs.push_str(names[ni]);
+            out.push_str(names[ni]);
+            da.push(d);
+            ni += 1;
+        }
+        for _ in 0..n_bfree {
+            let d = g.usize_in(1, 3);
+            rhs.push_str(names[ni]);
+            out.push_str(names[ni]);
+            db.push(d);
+            ni += 1;
+        }
+        let mut conv_tail = String::new();
+        if with_conv {
+            let fa = g.usize_in(2, 6);
+            let fb = g.usize_in(1, fa);
+            lhs.push('x');
+            rhs.push('x');
+            out.push('x');
+            conv_tail = "|x".to_string();
+            da.push(fa);
+            db.push(fb);
+        }
+        if lhs.is_empty() || rhs.is_empty() {
+            return; // degenerate scalar operands — skip
+        }
+        let expr = format!("{lhs},{rhs}->{out}{conv_tail}");
+        let s = sized(&expr, vec![da.clone(), db.clone()]);
+        let a = Tensor::rand(&da, -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&db, -1.0, 1.0, &mut rng);
+        let got = pairwise(&s, &a, &b);
+        let want = naive_eval(&s, &[&a, &b]);
+        got.assert_close(&want, 1e-3);
+    });
+}
+
+#[test]
+fn property_optimal_path_equals_ltr_numerically() {
+    // Whatever order the planner picks, the numbers must agree with LTR.
+    prop::check("path-order-independence", 30, |g| {
+        let mut rng = Rng::new(g.usize_in(0, u32::MAX as usize) as u64);
+        let r = g.usize_in(1, 3);
+        let t = g.usize_in(1, 3);
+        let s_ = g.usize_in(1, 3);
+        let hf = g.usize_in(3, 6);
+        let hk = g.usize_in(1, 3);
+        let b = g.usize_in(1, 2);
+        // CP-style layer in 1D: "bsh,rt,rs,rh->bth|h"
+        let expr = "bsh,rt,rs,rh->bth|h";
+        let dims = vec![
+            vec![b, s_, hf],
+            vec![r, t],
+            vec![r, s_],
+            vec![r, hk],
+        ];
+        let sspec = sized(expr, dims.clone());
+        let inputs: Vec<Tensor> = dims
+            .iter()
+            .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let opt = conv_einsum(expr, &refs).unwrap();
+        let ltr = conv_einsum_ltr(expr, &refs).unwrap();
+        opt.assert_close(&ltr, 1e-3);
+        let want = naive_eval(&sspec, &refs);
+        opt.assert_close(&want, 1e-3);
+    });
+}

@@ -1,0 +1,150 @@
+//! Paper Table 3: maximal batch size under a memory budget, per execution
+//! mode and compression rate. The peak live bytes of a training step
+//! (forward tape + cotangents) are measured with the [`MemoryMeter`];
+//! the max batch is found by doubling + binary search against the budget.
+
+use super::Table;
+use crate::autodiff::{MemoryMeter, PathAutodiff};
+use crate::einsum::{parse, SizedSpec};
+use crate::nn::EvalConfig;
+use crate::planner::{plan_with, PlanOptions};
+use crate::tensor::Tensor;
+use crate::tnn::{build_layer, Decomp, TnnLayerSpec};
+use crate::util::rng::Rng;
+
+/// Peak training-step bytes for one tensorial layer at batch `b`.
+pub fn peak_bytes(spec: &TnnLayerSpec, eval: EvalConfig, b: usize, hp: usize, wp: usize) -> usize {
+    let mut rng = Rng::new(17);
+    let factors = spec.init_factors(&mut rng);
+    let x = Tensor::rand(&spec.input_shape(b, hp, wp), -1.0, 1.0, &mut rng);
+    let parsed = parse(&spec.expr).unwrap();
+    let mut dims = vec![x.shape().to_vec()];
+    dims.extend(factors.iter().map(|f| f.shape().to_vec()));
+    let sized = SizedSpec::new(parsed, dims).unwrap();
+    let plan = plan_with(
+        &sized,
+        &PlanOptions {
+            strategy: eval.strategy,
+            training: eval.training_cost_model,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let ad = PathAutodiff::new(&plan).unwrap();
+    let meter = MemoryMeter::new();
+    let mut inputs: Vec<&Tensor> = vec![&x];
+    inputs.extend(factors.iter());
+    let _ = ad
+        .forward_backward(
+            &inputs,
+            |o| Tensor::full(o.shape(), 1.0),
+            eval.ckpt,
+            &meter,
+        )
+        .unwrap();
+    meter.peak_bytes()
+}
+
+/// Largest batch size whose peak stays within `budget_bytes` (0 if none).
+pub fn max_batch(
+    spec: &TnnLayerSpec,
+    eval: EvalConfig,
+    hp: usize,
+    wp: usize,
+    budget_bytes: usize,
+    cap: usize,
+) -> usize {
+    if peak_bytes(spec, eval, 1, hp, wp) > budget_bytes {
+        return 0;
+    }
+    let mut lo = 1usize;
+    let mut hi = 2usize;
+    while hi <= cap && peak_bytes(spec, eval, hi, hp, wp) <= budget_bytes {
+        lo = hi;
+        hi *= 2;
+    }
+    hi = hi.min(cap + 1);
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if peak_bytes(spec, eval, mid, hp, wp) <= budget_bytes {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Build the Table-3-style report for a layer family across CRs and modes.
+pub fn table3(
+    title: &str,
+    decomp: Decomp,
+    m: usize,
+    t: usize,
+    s: usize,
+    k: usize,
+    hp: usize,
+    wp: usize,
+    crs: &[f64],
+    budget_bytes: usize,
+) -> Table {
+    let modes = [
+        ("conv_einsum", EvalConfig::conv_einsum()),
+        ("naive w/ ckpt", EvalConfig::naive_ckpt()),
+        ("naive w/o ckpt", EvalConfig::naive_no_ckpt()),
+    ];
+    let mut rows = Vec::new();
+    for &cr in crs {
+        let spec = build_layer(decomp, m, t, s, k, k, cr).expect("layer builds");
+        let mut row = vec![format!("{:.0}%", cr * 100.0)];
+        for (_, eval) in &modes {
+            row.push(max_batch(&spec, *eval, hp, wp, budget_bytes, 512).to_string());
+        }
+        rows.push(row);
+    }
+    Table {
+        title: title.to_string(),
+        header: vec![
+            "CR".into(),
+            "conv_einsum".into(),
+            "naive w/ ckpt".into(),
+            "naive w/o ckpt".into(),
+        ],
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_grows_with_batch() {
+        let spec = build_layer(Decomp::Cp, 2, 8, 8, 3, 3, 1.0).unwrap();
+        let p1 = peak_bytes(&spec, EvalConfig::conv_einsum(), 1, 8, 8);
+        let p4 = peak_bytes(&spec, EvalConfig::conv_einsum(), 4, 8, 8);
+        assert!(p4 > p1);
+    }
+
+    #[test]
+    fn conv_einsum_allows_largest_batch() {
+        // The paper's Table 3 shape: conv_einsum ≥ naive w/ ckpt ≥ naive w/o.
+        let spec = build_layer(Decomp::Cp, 3, 16, 16, 3, 3, 1.0).unwrap();
+        let budget = 4 * 1024 * 1024;
+        let ce = max_batch(&spec, EvalConfig::conv_einsum(), 12, 12, budget, 256);
+        let nc = max_batch(&spec, EvalConfig::naive_ckpt(), 12, 12, budget, 256);
+        let nn = max_batch(&spec, EvalConfig::naive_no_ckpt(), 12, 12, budget, 256);
+        assert!(ce >= nc, "conv_einsum {ce} < naive ckpt {nc}");
+        assert!(nc >= nn, "naive ckpt {nc} < naive no-ckpt {nn}");
+        assert!(ce > nn, "no separation at all: {ce} vs {nn}");
+    }
+
+    #[test]
+    fn zero_when_budget_too_small() {
+        let spec = build_layer(Decomp::Cp, 1, 8, 8, 3, 3, 1.0).unwrap();
+        assert_eq!(
+            max_batch(&spec, EvalConfig::naive_no_ckpt(), 16, 16, 1024, 64),
+            0
+        );
+    }
+}

@@ -1,0 +1,72 @@
+//! Experiment harnesses reproducing the paper's tables and figures
+//! (DESIGN.md §4 experiment index). Each submodule produces the rows of one
+//! artefact; the `rust/benches/` binaries print them and dump JSON under
+//! `experiments/`.
+
+pub mod memory;
+pub mod runtime_sweep;
+pub mod table2;
+
+use crate::util::json::Json;
+
+/// A printable experiment table.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8) + 2))
+                .collect::<String>()
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().map(|w| w + 2).sum::<usize>()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            (
+                "header",
+                Json::arr(self.header.iter().map(|h| Json::str(h.clone()))),
+            ),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::arr(r.iter().map(|c| Json::str(c.clone())))
+                })),
+            ),
+        ])
+    }
+
+    /// Write the table's JSON to `experiments/<name>.json`.
+    pub fn save(&self, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("experiments")?;
+        std::fs::write(
+            format!("experiments/{name}.json"),
+            self.to_json().encode_pretty(),
+        )
+    }
+}

@@ -1,0 +1,194 @@
+//! Measured-runtime sweeps: train/test seconds per epoch across
+//! compression rates × the three execution modes, on scaled-down versions
+//! of the paper's workloads. Drives Table 1, Figures 3–4 and Tables 5–6.
+
+use super::Table;
+use crate::nn::{
+    Dataset, EvalConfig, Sequential, Sgd, SyntheticImages, SyntheticSequences, Trainer,
+    TrainerConfig,
+};
+use crate::tnn::Decomp;
+use crate::util::rng::Rng;
+
+/// One measured cell of a runtime table.
+#[derive(Debug, Clone)]
+pub struct RuntimeCell {
+    pub cr: f64,
+    pub mode: &'static str,
+    pub train_secs: f64,
+    pub test_secs: f64,
+    pub peak_tape_bytes: usize,
+    pub eval_acc: f32,
+}
+
+/// The three execution modes compared throughout §5.
+pub fn modes() -> [EvalConfig; 3] {
+    [
+        EvalConfig::conv_einsum(),
+        EvalConfig::naive_ckpt(),
+        EvalConfig::naive_no_ckpt(),
+    ]
+}
+
+/// Which synthetic task a sweep runs on.
+pub enum Workload {
+    /// IC: CIFAR-like images through a small tensorial CNN.
+    ImageClassification { size: usize, channels: usize },
+    /// ASR: 1-D sequences through a Conformer-conv-like tensorial stack.
+    SpeechRecognition { channels: usize, frames: usize },
+}
+
+/// Train one epoch per (CR, mode) and measure.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep(
+    workload: &Workload,
+    decomp: Decomp,
+    m: usize,
+    crs: &[f64],
+    batch: usize,
+    epoch_examples: usize,
+    depth: usize,
+    width: usize,
+) -> Vec<RuntimeCell> {
+    let mut cells = Vec::new();
+    for &cr in crs {
+        for eval in modes() {
+            let mut rng = Rng::new(0xC0DE ^ (cr * 1000.0) as u64);
+            let (mut model, train_ds, eval_ds): (Sequential, Box<dyn Dataset>, Box<dyn Dataset>) =
+                match workload {
+                    Workload::ImageClassification { size, channels } => {
+                        let model = crate::nn::model::small_tnn_cnn(
+                            decomp, m, cr, *channels, width, depth, 3, 10, eval, &mut rng,
+                        )
+                        .expect("model builds");
+                        (
+                            model,
+                            Box::new(SyntheticImages::sized(
+                                *channels,
+                                *size,
+                                *size,
+                                10,
+                                epoch_examples,
+                                1,
+                            )),
+                            Box::new(SyntheticImages::sized(
+                                *channels,
+                                *size,
+                                *size,
+                                10,
+                                epoch_examples / 2,
+                                2,
+                            )),
+                        )
+                    }
+                    Workload::SpeechRecognition { channels, frames } => {
+                        // 1-D temporal convolution: kernel 3x1 over [B,C,T,1]
+                        let model = crate::nn::model::small_tnn_cnn_hw(
+                            decomp, m, cr, *channels, width, depth, 3, 1, 10, eval, &mut rng,
+                        )
+                        .expect("model builds");
+                        (
+                            model,
+                            Box::new(SyntheticSequences::librispeech_like(
+                                *channels,
+                                *frames,
+                                epoch_examples,
+                                3,
+                            )),
+                            Box::new(SyntheticSequences::librispeech_like(
+                                *channels,
+                                *frames,
+                                epoch_examples / 2,
+                                4,
+                            )),
+                        )
+                    }
+                };
+            let mut trainer = Trainer::new(
+                TrainerConfig {
+                    batch_size: batch,
+                    epochs: 1,
+                    ..Default::default()
+                },
+                Sgd::paper_defaults(),
+            );
+            let (loss, _acc, train_time, peak) = trainer.train_epoch(&mut model, &*train_ds, 0);
+            let (_eloss, eacc, eval_time) = trainer.eval_epoch(&mut model, &*eval_ds);
+            let _ = loss;
+            cells.push(RuntimeCell {
+                cr,
+                mode: eval.label(),
+                train_secs: train_time.as_secs_f64(),
+                test_secs: eval_time.as_secs_f64(),
+                peak_tape_bytes: peak,
+                eval_acc: eacc,
+            });
+        }
+    }
+    cells
+}
+
+/// Render cells as a paper-style table (rows = CR, column groups = modes).
+pub fn render(title: &str, cells: &[RuntimeCell]) -> Table {
+    let mut crs: Vec<f64> = cells.iter().map(|c| c.cr).collect();
+    crs.dedup();
+    let mode_names: Vec<&str> = {
+        let mut v = Vec::new();
+        for c in cells {
+            if !v.contains(&c.mode) {
+                v.push(c.mode);
+            }
+        }
+        v
+    };
+    let mut header = vec!["CR".to_string()];
+    for m in &mode_names {
+        header.push(format!("{m} train(s)"));
+        header.push(format!("{m} test(s)"));
+    }
+    let mut rows = Vec::new();
+    for &cr in &crs {
+        let mut row = vec![format!("{:.0}%", cr * 100.0)];
+        for m in &mode_names {
+            if let Some(c) = cells.iter().find(|c| c.cr == cr && &c.mode == m) {
+                row.push(format!("{:.2}", c.train_secs));
+                row.push(format!("{:.2}", c.test_secs));
+            } else {
+                row.push("-".into());
+                row.push("-".into());
+            }
+        }
+        rows.push(row);
+    }
+    Table {
+        title: title.to_string(),
+        header,
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_produces_cells() {
+        let cells = sweep(
+            &Workload::ImageClassification {
+                size: 8,
+                channels: 1,
+            },
+            Decomp::Cp,
+            1,
+            &[0.5],
+            4,
+            8,
+            1,
+            4,
+        );
+        assert_eq!(cells.len(), 3); // one per mode
+        assert!(cells.iter().all(|c| c.train_secs > 0.0));
+        let t = render("test", &cells);
+        assert!(t.render().contains("conv_einsum"));
+    }
+}

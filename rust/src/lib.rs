@@ -1,0 +1,51 @@
+//! # conv_einsum
+//!
+//! A production-grade reproduction of *"conv_einsum: A Framework for
+//! Representation and Fast Evaluation of Multilinear Operations in
+//! Convolutional Tensorial Neural Networks"* (Rabbani, Su, Liu, Chan,
+//! Sangston, Huang; 2024).
+//!
+//! The crate implements, from scratch:
+//!
+//! * the **conv_einsum grammar** — einsum strings extended with a
+//!   pipe-delimited convolution mode list (`"bshw,tshw->bthw|hw"`) and
+//!   multi-character modes (`"(t1)(s1)"`) — in [`einsum`];
+//! * a **dense tensor substrate** ([`tensor`]) and a **pairwise executor**
+//!   ([`exec`]) that rewrites any 2-input conv_einsum into an atomic
+//!   grouped-convolution primitive (paper §3.1);
+//! * the **tnn-cost model** (paper Appendix B, Eq. 5–8) with training-mode
+//!   costs `cost(f) + cost(g1) + cost(g2)` in [`cost`];
+//! * the **optimal sequencer** (paper §3.2) — an exact netcon-equivalent
+//!   subset-DP plus greedy / left-to-right / cost-capped searches — in
+//!   [`planner`];
+//! * **autodiff with gradient checkpointing** over pairwise evaluation paths
+//!   (paper §3.3) in [`autodiff`];
+//! * the **TNN layer zoo** — CP / Tucker / TT / TR / BT / HT convolutional
+//!   layers and their reshaped variants, with compression-rate-driven rank
+//!   selection (paper §2.3, Appendix A.3) — in [`tnn`];
+//! * a **training substrate** ([`nn`]) used by the paper-reproduction
+//!   benches (Tables 1–7, Figures 3–4);
+//! * a **coordinator** ([`coordinator`]) serving batched layer-evaluation
+//!   requests, and a **PJRT runtime** ([`runtime`]) that loads the AOT
+//!   JAX/Pallas artifacts produced by `python/compile/aot.py`.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the paper-vs-measured record.
+
+pub mod autodiff;
+pub mod coordinator;
+pub mod cost;
+pub mod einsum;
+pub mod exec;
+pub mod experiments;
+pub mod nn;
+pub mod planner;
+pub mod runtime;
+pub mod tensor;
+pub mod tnn;
+pub mod util;
+
+pub use einsum::{EinsumSpec, ModeKind, SizedSpec};
+pub use exec::{conv_einsum, conv_einsum_with, pairwise};
+pub use planner::{contract_path, Plan, PlanOptions, Strategy};
+pub use tensor::Tensor;

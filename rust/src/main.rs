@@ -1,0 +1,237 @@
+//! conv-einsum launcher: plan inspection, FLOPs tables, training runs, the
+//! evaluation service demo, and AOT-artifact smoke execution.
+//!
+//! ```text
+//! conv-einsum plan "<expr>" --dims "4,7,9;10,5;5,4,2" [--json] [--strategy S]
+//!                            [--training] [--cap FLOPS]
+//! conv-einsum flops-table [--batch 128]          # paper Table 2
+//! conv-einsum train [--decomp CP] [--m 1] [--cr 0.5] [--epochs 2] [--mode conv_einsum]
+//! conv-einsum serve [--requests 64] [--max-batch 8]
+//! conv-einsum artifacts [--dir artifacts]
+//! ```
+
+use anyhow::{anyhow, Result};
+use conv_einsum::nn::{Sgd, SyntheticImages, Trainer, TrainerConfig};
+use conv_einsum::planner::{contract_path, PlanOptions, Strategy};
+use conv_einsum::tensor::Tensor;
+use conv_einsum::tnn::{build_layer, Decomp};
+use conv_einsum::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("plan") => cmd_plan(&args[1..]),
+        Some("flops-table") => cmd_flops_table(&args[1..]),
+        Some("train") => cmd_train(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("artifacts") => cmd_artifacts(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand '{other}' (try --help)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "conv-einsum — representation and fast evaluation of multilinear \
+         operations in convolutional TNNs\n\n\
+         subcommands:\n  \
+         plan <expr> --dims \"d,d;d,d\" [--json] [--strategy optimal|greedy|ltr] [--training] [--cap N]\n  \
+         flops-table [--batch N]     reproduce paper Table 2 (FLOPs per CP layer of ResNet-34)\n  \
+         train [--decomp CP|TK|TT|TR|BT|HT] [--m M] [--cr CR] [--epochs N] [--mode conv_einsum|naive_ckpt|naive_no_ckpt]\n  \
+         serve [--requests N] [--max-batch N]\n  \
+         artifacts [--dir DIR]       list + smoke-run AOT artifacts"
+    );
+}
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn has_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn parse_dims(text: &str) -> Result<Vec<Vec<usize>>> {
+    text.split(';')
+        .map(|group| {
+            group
+                .split(',')
+                .map(|d| {
+                    d.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("bad dimension '{d}'"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn cmd_plan(args: &[String]) -> Result<()> {
+    let expr = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .ok_or_else(|| anyhow!("usage: plan <expr> --dims \"...\""))?;
+    let dims = parse_dims(
+        flag_value(args, "--dims").ok_or_else(|| anyhow!("--dims required"))?,
+    )?;
+    let strategy = match flag_value(args, "--strategy").unwrap_or("optimal") {
+        "optimal" => Strategy::Optimal,
+        "greedy" => Strategy::Greedy,
+        "ltr" | "left-to-right" => Strategy::LeftToRight,
+        other => return Err(anyhow!("unknown strategy '{other}'")),
+    };
+    let opts = PlanOptions {
+        strategy,
+        training: has_flag(args, "--training"),
+        cost_cap: flag_value(args, "--cap").and_then(|c| c.parse().ok()),
+        ..Default::default()
+    };
+    let plan = contract_path(expr, &dims, &opts).map_err(|e| anyhow!("{e}"))?;
+    if has_flag(args, "--json") {
+        println!("{}", plan.to_json().encode_pretty());
+    } else {
+        println!("{}", plan.report());
+    }
+    Ok(())
+}
+
+/// Paper Table 2: analytic FLOPs per CP convolutional layer of ResNet-34,
+/// left-to-right vs conv_einsum, CR = 100%, batch 128.
+fn cmd_flops_table(args: &[String]) -> Result<()> {
+    let batch: usize = flag_value(args, "--batch").unwrap_or("128").parse()?;
+    println!("{}", conv_einsum::experiments::table2::run(batch).render());
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    use conv_einsum::nn::*;
+    let decomp = match flag_value(args, "--decomp").unwrap_or("CP") {
+        "CP" => Decomp::Cp,
+        "TK" => Decomp::Tucker,
+        "TT" => Decomp::TensorTrain,
+        "TR" => Decomp::TensorRing,
+        "BT" => Decomp::BlockTerm,
+        "HT" => Decomp::HierarchicalTucker,
+        other => return Err(anyhow!("unknown decomposition '{other}'")),
+    };
+    let m: usize = flag_value(args, "--m").unwrap_or("1").parse()?;
+    let cr: f64 = flag_value(args, "--cr").unwrap_or("0.5").parse()?;
+    let epochs: usize = flag_value(args, "--epochs").unwrap_or("2").parse()?;
+    let eval = match flag_value(args, "--mode").unwrap_or("conv_einsum") {
+        "conv_einsum" => EvalConfig::conv_einsum(),
+        "naive_ckpt" => EvalConfig::naive_ckpt(),
+        "naive_no_ckpt" => EvalConfig::naive_no_ckpt(),
+        other => return Err(anyhow!("unknown mode '{other}'")),
+    };
+    let mut rng = Rng::new(42);
+    let spec = build_layer(decomp, m, 16, 3, 3, 3, cr).map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "layer: {} ({} params, CR {:.3})",
+        spec.expr,
+        spec.params,
+        spec.achieved_cr()
+    );
+    let spec2 = build_layer(decomp, m, 16, 16, 3, 3, cr).map_err(|e| anyhow!("{e}"))?;
+    let mut model = Sequential::new(vec![
+        Box::new(TensorialConv2d::new(spec, eval, &mut rng)),
+        Box::new(ReLU::new()),
+        Box::new(TensorialConv2d::new(spec2, eval, &mut rng)),
+        Box::new(ReLU::new()),
+        Box::new(GlobalAvgPool::new()),
+        Box::new(Linear::new(16, 10, &mut rng)),
+    ]);
+    let train = SyntheticImages::sized(3, 16, 16, 10, 128, 7);
+    let evalds = SyntheticImages::sized(3, 16, 16, 10, 64, 8);
+    let mut trainer = Trainer::new(
+        TrainerConfig {
+            batch_size: 16,
+            epochs,
+            verbose: true,
+            ..Default::default()
+        },
+        Sgd::paper_defaults(),
+    );
+    let stats = trainer.fit(&mut model, &train, &evalds);
+    let last = stats.last().unwrap();
+    println!(
+        "done [{}]: eval acc {:.3}, peak tape {}",
+        eval.label(),
+        last.eval_acc,
+        conv_einsum::util::human_bytes(last.peak_tape_bytes)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use conv_einsum::coordinator::{EvalService, ServiceConfig};
+    let n_requests: usize = flag_value(args, "--requests").unwrap_or("64").parse()?;
+    let max_batch: usize = flag_value(args, "--max-batch").unwrap_or("8").parse()?;
+    let mut rng = Rng::new(1);
+    let spec = build_layer(Decomp::Cp, 1, 16, 8, 3, 3, 0.5).map_err(|e| anyhow!("{e}"))?;
+    let factors = spec.init_factors(&mut rng);
+    let service = EvalService::start(
+        ServiceConfig {
+            max_batch,
+            ..Default::default()
+        },
+        vec![("cp16".to_string(), spec.expr.clone(), factors)],
+    )?;
+    let h = service.handle();
+    let t0 = std::time::Instant::now();
+    let receivers: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let x = Tensor::rand(&[1, 8, 16, 16], -1.0, 1.0, &mut rng);
+            h.submit("cp16", x).unwrap()
+        })
+        .collect();
+    for rx in receivers {
+        rx.recv().unwrap()?;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{n_requests} requests in {dt:?} ({:.1} req/s)",
+        n_requests as f64 / dt.as_secs_f64()
+    );
+    println!("{}", h.metrics().report());
+    service.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> Result<()> {
+    use conv_einsum::runtime::ArtifactRegistry;
+    let dir = flag_value(args, "--dir").unwrap_or("artifacts");
+    let mut registry = ArtifactRegistry::open(dir)?;
+    println!("platform: {}", registry.platform());
+    let names: Vec<String> = registry.names().iter().map(|s| s.to_string()).collect();
+    for name in names {
+        let meta = registry.meta(&name).unwrap().clone();
+        let mut rng = Rng::new(9);
+        let inputs: Vec<Tensor> = meta
+            .input_shapes
+            .iter()
+            .map(|s| Tensor::rand(s, -0.5, 0.5, &mut rng))
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let t0 = std::time::Instant::now();
+        let out = registry.execute(&name, &refs)?;
+        println!(
+            "  {name}: {} inputs -> {} outputs (first shape {:?}) in {:?}   [{}]",
+            meta.input_shapes.len(),
+            out.len(),
+            out[0].shape(),
+            t0.elapsed(),
+            meta.description,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,227 @@
+//! Synthetic datasets shaped like the paper's tasks (DESIGN.md §5
+//! substitutions): runtime/memory results depend only on tensor shapes and
+//! batch sizes, and the accuracy *trend* (Table 7) is reproduced on a
+//! learnable class-conditional task.
+//!
+//! Images: each class has a deterministic frequency/orientation signature
+//! (2-D sinusoid bank) plus pixel noise — linearly separable enough to
+//! learn quickly, hard enough that capacity (rank/CR) matters.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A labelled-batch provider.
+pub trait Dataset {
+    /// Total examples per epoch.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn n_classes(&self) -> usize;
+    /// Sample a batch; deterministic in (seed at construction, batch index).
+    fn batch(&self, index: usize, batch_size: usize) -> (Tensor, Vec<usize>);
+}
+
+/// CIFAR-like class-conditional synthetic image dataset `[B, C, H, W]`.
+pub struct SyntheticImages {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub classes: usize,
+    pub epoch_size: usize,
+    pub noise: f32,
+    seed: u64,
+}
+
+impl SyntheticImages {
+    pub fn cifar_like(epoch_size: usize, seed: u64) -> Self {
+        SyntheticImages {
+            channels: 3,
+            height: 32,
+            width: 32,
+            classes: 10,
+            epoch_size,
+            noise: 0.3,
+            seed,
+        }
+    }
+
+    pub fn sized(
+        channels: usize,
+        height: usize,
+        width: usize,
+        classes: usize,
+        epoch_size: usize,
+        seed: u64,
+    ) -> Self {
+        SyntheticImages {
+            channels,
+            height,
+            width,
+            classes,
+            epoch_size,
+            noise: 0.3,
+            seed,
+        }
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng) -> Vec<f32> {
+        let (c, h, w) = (self.channels, self.height, self.width);
+        let mut out = vec![0.0f32; c * h * w];
+        // class signature: orientation + frequency + channel phase
+        let theta = class as f32 * std::f32::consts::PI / self.classes as f32;
+        let freq = 1.0 + (class % 4) as f32;
+        let (ct, st) = (theta.cos(), theta.sin());
+        for ci in 0..c {
+            let phase = ci as f32 * 0.7 + class as f32 * 0.21;
+            for i in 0..h {
+                for j in 0..w {
+                    let u = i as f32 / h as f32;
+                    let v = j as f32 / w as f32;
+                    let proj = u * ct + v * st;
+                    let val = (2.0 * std::f32::consts::PI * freq * proj + phase).sin();
+                    out[(ci * h + i) * w + j] =
+                        val + self.noise * rng.normal() as f32;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Dataset for SyntheticImages {
+    fn len(&self) -> usize {
+        self.epoch_size
+    }
+
+    fn n_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn batch(&self, index: usize, batch_size: usize) -> (Tensor, Vec<usize>) {
+        let mut rng = Rng::new(self.seed ^ (index as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut data = Vec::with_capacity(batch_size * self.channels * self.height * self.width);
+        let mut labels = Vec::with_capacity(batch_size);
+        for _ in 0..batch_size {
+            let class = rng.below(self.classes);
+            labels.push(class);
+            data.extend(self.render(class, &mut rng));
+        }
+        (
+            Tensor::from_vec(
+                &[batch_size, self.channels, self.height, self.width],
+                data,
+            ),
+            labels,
+        )
+    }
+}
+
+/// ASR-like synthetic sequences `[B, C, T, 1]` (log-mel-ish feature maps
+/// over time; W′=1 matches the 1-D convolution sites of the Conformer
+/// module). Classes differ by temporal modulation frequency.
+pub struct SyntheticSequences {
+    pub channels: usize,
+    pub frames: usize,
+    pub classes: usize,
+    pub epoch_size: usize,
+    seed: u64,
+}
+
+impl SyntheticSequences {
+    pub fn librispeech_like(channels: usize, frames: usize, epoch_size: usize, seed: u64) -> Self {
+        SyntheticSequences {
+            channels,
+            frames,
+            classes: 10,
+            epoch_size,
+            seed,
+        }
+    }
+}
+
+impl Dataset for SyntheticSequences {
+    fn len(&self) -> usize {
+        self.epoch_size
+    }
+
+    fn n_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn batch(&self, index: usize, batch_size: usize) -> (Tensor, Vec<usize>) {
+        let mut rng = Rng::new(self.seed ^ (index as u64).wrapping_mul(0xD1B54A32D192ED03));
+        let (c, t) = (self.channels, self.frames);
+        let mut data = Vec::with_capacity(batch_size * c * t);
+        let mut labels = Vec::with_capacity(batch_size);
+        for _ in 0..batch_size {
+            let class = rng.below(self.classes);
+            labels.push(class);
+            let freq = 1.0 + class as f32 * 0.5;
+            for ci in 0..c {
+                let phase = ci as f32 * 0.3;
+                for ti in 0..t {
+                    let x = ti as f32 / t as f32;
+                    data.push(
+                        (2.0 * std::f32::consts::PI * freq * x + phase).sin()
+                            + 0.3 * rng.normal() as f32,
+                    );
+                }
+            }
+        }
+        (Tensor::from_vec(&[batch_size, c, t, 1], data), labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_batches_deterministic() {
+        let ds = SyntheticImages::cifar_like(100, 7);
+        let (a, la) = ds.batch(3, 4);
+        let (b, lb) = ds.batch(3, 4);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+        let (c, _) = ds.batch(4, 4);
+        assert!(a != c, "different batch indices must differ");
+    }
+
+    #[test]
+    fn image_shapes() {
+        let ds = SyntheticImages::sized(3, 16, 16, 5, 50, 1);
+        let (x, labels) = ds.batch(0, 8);
+        assert_eq!(x.shape(), &[8, 3, 16, 16]);
+        assert_eq!(labels.len(), 8);
+        assert!(labels.iter().all(|&l| l < 5));
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Same-class examples should correlate more than cross-class ones.
+        let ds = SyntheticImages::sized(1, 16, 16, 4, 50, 2);
+        let mut rng = Rng::new(3);
+        let a0 = ds.render(0, &mut rng);
+        let a0b = ds.render(0, &mut rng);
+        let a2 = ds.render(2, &mut rng);
+        let corr = |x: &[f32], y: &[f32]| -> f32 {
+            let n = x.len() as f32;
+            let mx = x.iter().sum::<f32>() / n;
+            let my = y.iter().sum::<f32>() / n;
+            let cov: f32 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+            let vx: f32 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+            let vy: f32 = y.iter().map(|b| (b - my) * (b - my)).sum();
+            cov / (vx.sqrt() * vy.sqrt() + 1e-9)
+        };
+        assert!(corr(&a0, &a0b) > corr(&a0, &a2) + 0.2);
+    }
+
+    #[test]
+    fn sequence_shapes() {
+        let ds = SyntheticSequences::librispeech_like(8, 32, 100, 5);
+        let (x, labels) = ds.batch(1, 6);
+        assert_eq!(x.shape(), &[6, 8, 32, 1]);
+        assert_eq!(labels.len(), 6);
+    }
+}

@@ -1,0 +1,471 @@
+//! Layers. The tensorial convolution layer is the paper's object of study:
+//! its forward/backward run along a planner-chosen pairwise path
+//! (optimal / left-to-right) under a checkpoint policy — exactly the three
+//! execution modes compared throughout the paper's §5.
+
+use crate::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff, Tape};
+use crate::einsum::parse;
+use crate::einsum::SizedSpec;
+use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
+use crate::tensor::Tensor;
+use crate::tnn::TnnLayerSpec;
+use crate::util::rng::Rng;
+
+/// How tensorial layers evaluate: the paper's experimental axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvalConfig {
+    /// Path selection: Optimal = conv_einsum, LeftToRight = naive baseline.
+    pub strategy: Strategy,
+    /// Checkpoint policy for the backward tape.
+    pub ckpt: CkptPolicy,
+    /// Price the plan with the training cost model (f + g1 + g2).
+    pub training_cost_model: bool,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig {
+            strategy: Strategy::Optimal,
+            ckpt: CkptPolicy::Sqrt,
+            training_cost_model: true,
+        }
+    }
+}
+
+impl EvalConfig {
+    /// The paper's "conv_einsum" mode.
+    pub fn conv_einsum() -> Self {
+        Self::default()
+    }
+
+    /// The paper's "naive w/ ckpt" baseline.
+    pub fn naive_ckpt() -> Self {
+        EvalConfig {
+            strategy: Strategy::LeftToRight,
+            ckpt: CkptPolicy::Sqrt,
+            training_cost_model: false,
+        }
+    }
+
+    /// The paper's "naive w/o ckpt" baseline.
+    pub fn naive_no_ckpt() -> Self {
+        EvalConfig {
+            strategy: Strategy::LeftToRight,
+            ckpt: CkptPolicy::StoreAll,
+            training_cost_model: false,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match (self.strategy, self.ckpt) {
+            (Strategy::LeftToRight, CkptPolicy::StoreAll) => "naive w/o ckpt",
+            (Strategy::LeftToRight, _) => "naive w/ ckpt",
+            _ => "conv_einsum",
+        }
+    }
+}
+
+/// A trainable layer.
+pub trait Layer {
+    /// Forward; caches whatever backward needs when `train` is set.
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor;
+    /// Backward from ∂L/∂y, accumulating parameter grads; returns ∂L/∂x.
+    fn backward(&mut self, dy: &Tensor) -> Tensor;
+    /// (param, grad) pairs for the optimizer.
+    fn params_mut(&mut self) -> Vec<(&mut Tensor, &mut Tensor)> {
+        Vec::new()
+    }
+    fn param_count(&self) -> usize {
+        0
+    }
+    fn name(&self) -> String;
+    /// Peak tape memory observed (tensorial layers only).
+    fn peak_tape_bytes(&self) -> usize {
+        0
+    }
+    fn reset_peak(&self) {}
+}
+
+/// The tensorial convolutional layer (paper §2.3): factors + a planned
+/// pairwise path. Input/output are dense `[B, S, H', W']` / `[B, T, H', W']`;
+/// channel reshaping to the factorized modes happens inside.
+pub struct TensorialConv2d {
+    pub spec: TnnLayerSpec,
+    pub factors: Vec<Tensor>,
+    pub grads: Vec<Tensor>,
+    pub eval: EvalConfig,
+    /// Plan cache keyed by (batch, hp, wp).
+    plan: Option<(usize, usize, usize, Plan)>,
+    tape: Option<Tape>,
+    cached_x_shape: Vec<usize>,
+    pub meter: MemoryMeter,
+}
+
+impl TensorialConv2d {
+    pub fn new(spec: TnnLayerSpec, eval: EvalConfig, rng: &mut Rng) -> Self {
+        let factors = spec.init_factors(rng);
+        let grads = spec
+            .factor_shapes
+            .iter()
+            .map(|s| Tensor::zeros(s))
+            .collect();
+        TensorialConv2d {
+            spec,
+            factors,
+            grads,
+            eval,
+            plan: None,
+            tape: None,
+            cached_x_shape: Vec::new(),
+            meter: MemoryMeter::new(),
+        }
+    }
+
+    fn plan_for(&mut self, b: usize, hp: usize, wp: usize) -> &Plan {
+        let stale = match &self.plan {
+            Some((pb, ph, pw, _)) => (*pb, *ph, *pw) != (b, hp, wp),
+            None => true,
+        };
+        if stale {
+            let spec = parse(&self.spec.expr).expect("layer expr parses");
+            let dims = self.spec.expr_dims(b, hp, wp);
+            let sized = SizedSpec::new(spec, dims).expect("layer expr sizes");
+            let plan = plan_with(
+                &sized,
+                &PlanOptions {
+                    strategy: self.eval.strategy,
+                    training: self.eval.training_cost_model,
+                    ..Default::default()
+                },
+            )
+            .expect("layer expr plans");
+            self.plan = Some((b, hp, wp, plan));
+        }
+        &self.plan.as_ref().unwrap().3
+    }
+
+    /// Planned FLOPs (multiplications) for one forward at this input shape.
+    pub fn planned_cost(&mut self, b: usize, hp: usize, wp: usize) -> f64 {
+        self.plan_for(b, hp, wp).cost
+    }
+}
+
+impl Layer for TensorialConv2d {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, hp, wp) = (x.shape()[0], x.shape()[2], x.shape()[3]);
+        assert_eq!(x.shape()[1], self.spec.s, "input channels mismatch");
+        self.cached_x_shape = x.shape().to_vec();
+        let x_reshaped = x.clone().reshape(&self.spec.input_shape(b, hp, wp));
+        let ckpt = self.eval.ckpt;
+        let plan = self.plan_for(b, hp, wp).clone();
+        let ad = PathAutodiff::new(&plan).expect("plan is executable");
+        let mut inputs: Vec<&Tensor> = vec![&x_reshaped];
+        inputs.extend(self.factors.iter());
+        if train {
+            let tape = ad
+                .forward_with_tape(&inputs, ckpt, &self.meter)
+                .expect("forward");
+            let out = tape.output.clone();
+            self.tape = Some(tape);
+            out.reshape(&[b, self.spec.t, hp, wp])
+        } else {
+            let out = ad.forward(&inputs, &self.meter).expect("forward");
+            out.reshape(&[b, self.spec.t, hp, wp])
+        }
+    }
+
+    fn backward(&mut self, dy: &Tensor) -> Tensor {
+        let (b, hp, wp) = (
+            self.cached_x_shape[0],
+            self.cached_x_shape[2],
+            self.cached_x_shape[3],
+        );
+        let plan = self.plan.as_ref().unwrap().3.clone();
+        let ad = PathAutodiff::new(&plan).expect("plan is executable");
+        let mut tape = self.tape.take().expect("backward without forward");
+        let dy_shaped = dy.clone().reshape(&self.spec.output_shape(b, hp, wp));
+        let grads = ad
+            .backward(&mut tape, &dy_shaped, &self.meter)
+            .expect("backward");
+        // grads[0] is ∂L/∂x (reshaped); the rest are factor grads.
+        for (g, acc) in grads[1..].iter().zip(self.grads.iter_mut()) {
+            acc.add_assign(g);
+        }
+        grads[0].clone().reshape(&self.cached_x_shape)
+    }
+
+    fn params_mut(&mut self) -> Vec<(&mut Tensor, &mut Tensor)> {
+        self.factors.iter_mut().zip(self.grads.iter_mut()).collect()
+    }
+
+    fn param_count(&self) -> usize {
+        self.spec.params
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "TensorialConv2d[{} m={} {}x{}x{}x{} cr={:.3}]",
+            self.spec.decomp.name(),
+            self.spec.m,
+            self.spec.t,
+            self.spec.s,
+            self.spec.h,
+            self.spec.w,
+            self.spec.achieved_cr()
+        )
+    }
+
+    fn peak_tape_bytes(&self) -> usize {
+        self.meter.peak_bytes()
+    }
+
+    fn reset_peak(&self) {
+        self.meter.reset();
+    }
+}
+
+/// ReLU.
+#[derive(Default)]
+pub struct ReLU {
+    mask: Option<Vec<bool>>,
+}
+
+impl ReLU {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Layer for ReLU {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        if train {
+            self.mask = Some(x.data().iter().map(|&v| v > 0.0).collect());
+        }
+        x.map(|v| v.max(0.0))
+    }
+
+    fn backward(&mut self, dy: &Tensor) -> Tensor {
+        let mask = self.mask.as_ref().expect("backward without forward");
+        let data = dy
+            .data()
+            .iter()
+            .zip(mask.iter())
+            .map(|(&d, &m)| if m { d } else { 0.0 })
+            .collect();
+        Tensor::from_vec(dy.shape(), data)
+    }
+
+    fn name(&self) -> String {
+        "ReLU".into()
+    }
+}
+
+/// 2×2 max pooling with stride 2 over the last two axes of `[B,C,H,W]`.
+#[derive(Default)]
+pub struct MaxPool2 {
+    argmax: Option<Vec<usize>>,
+    in_shape: Vec<usize>,
+}
+
+impl MaxPool2 {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Layer for MaxPool2 {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        let (oh, ow) = (h / 2, w / 2);
+        let mut out = Tensor::zeros(&[b, c, oh, ow]);
+        let mut arg = vec![0usize; b * c * oh * ow];
+        let xd = x.data();
+        let od = out.data_mut();
+        for bi in 0..b {
+            for ci in 0..c {
+                let base = (bi * c + ci) * h * w;
+                for i in 0..oh {
+                    for j in 0..ow {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut besti = 0;
+                        for di in 0..2 {
+                            for dj in 0..2 {
+                                let idx = base + (2 * i + di) * w + (2 * j + dj);
+                                if xd[idx] > best {
+                                    best = xd[idx];
+                                    besti = idx;
+                                }
+                            }
+                        }
+                        let o = ((bi * c + ci) * oh + i) * ow + j;
+                        od[o] = best;
+                        arg[o] = besti;
+                    }
+                }
+            }
+        }
+        if train {
+            self.argmax = Some(arg);
+            self.in_shape = x.shape().to_vec();
+        }
+        out
+    }
+
+    fn backward(&mut self, dy: &Tensor) -> Tensor {
+        let arg = self.argmax.as_ref().expect("backward without forward");
+        let mut dx = Tensor::zeros(&self.in_shape);
+        let dxd = dx.data_mut();
+        for (o, &src) in arg.iter().enumerate() {
+            dxd[src] += dy.data()[o];
+        }
+        dx
+    }
+
+    fn name(&self) -> String {
+        "MaxPool2".into()
+    }
+}
+
+/// Global average pooling `[B,C,H,W] -> [B,C]`.
+#[derive(Default)]
+pub struct GlobalAvgPool {
+    in_shape: Vec<usize>,
+}
+
+impl GlobalAvgPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Layer for GlobalAvgPool {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        if train {
+            self.in_shape = x.shape().to_vec();
+        }
+        let mut out = Tensor::zeros(&[b, c]);
+        let inv = 1.0 / (h * w) as f32;
+        let od = out.data_mut();
+        for bi in 0..b {
+            for ci in 0..c {
+                let base = (bi * c + ci) * h * w;
+                let s: f32 = x.data()[base..base + h * w].iter().sum();
+                od[bi * c + ci] = s * inv;
+            }
+        }
+        out
+    }
+
+    fn backward(&mut self, dy: &Tensor) -> Tensor {
+        let (b, c, h, w) = (
+            self.in_shape[0],
+            self.in_shape[1],
+            self.in_shape[2],
+            self.in_shape[3],
+        );
+        let inv = 1.0 / (h * w) as f32;
+        let mut dx = Tensor::zeros(&self.in_shape);
+        let dxd = dx.data_mut();
+        for bi in 0..b {
+            for ci in 0..c {
+                let g = dy.data()[bi * c + ci] * inv;
+                let base = (bi * c + ci) * h * w;
+                for k in 0..h * w {
+                    dxd[base + k] = g;
+                }
+            }
+        }
+        dx
+    }
+
+    fn name(&self) -> String {
+        "GlobalAvgPool".into()
+    }
+}
+
+/// Fully-connected layer `[B, in] -> [B, out]` with bias.
+pub struct Linear {
+    pub weight: Tensor, // [out, in]
+    pub bias: Tensor,   // [out]
+    pub dweight: Tensor,
+    pub dbias: Tensor,
+    cached_x: Option<Tensor>,
+}
+
+impl Linear {
+    pub fn new(in_dim: usize, out_dim: usize, rng: &mut Rng) -> Self {
+        let std = (2.0 / in_dim as f64).sqrt() as f32;
+        Linear {
+            weight: Tensor::randn(&[out_dim, in_dim], 0.0, std, rng),
+            bias: Tensor::zeros(&[out_dim]),
+            dweight: Tensor::zeros(&[out_dim, in_dim]),
+            dbias: Tensor::zeros(&[out_dim]),
+            cached_x: None,
+        }
+    }
+}
+
+impl Layer for Linear {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, d) = (x.shape()[0], x.shape()[1]);
+        let o = self.weight.shape()[0];
+        let mut out = Tensor::zeros(&[b, o]);
+        let od = out.data_mut();
+        for bi in 0..b {
+            let xrow = &x.data()[bi * d..(bi + 1) * d];
+            for oi in 0..o {
+                let wrow = &self.weight.data()[oi * d..(oi + 1) * d];
+                let mut acc = self.bias.data()[oi];
+                for k in 0..d {
+                    acc += xrow[k] * wrow[k];
+                }
+                od[bi * o + oi] = acc;
+            }
+        }
+        if train {
+            self.cached_x = Some(x.clone());
+        }
+        out
+    }
+
+    fn backward(&mut self, dy: &Tensor) -> Tensor {
+        let x = self.cached_x.take().expect("backward without forward");
+        let (b, d) = (x.shape()[0], x.shape()[1]);
+        let o = self.weight.shape()[0];
+        let mut dx = Tensor::zeros(&[b, d]);
+        for bi in 0..b {
+            let dyrow = &dy.data()[bi * o..(bi + 1) * o];
+            let xrow = &x.data()[bi * d..(bi + 1) * d];
+            for oi in 0..o {
+                let g = dyrow[oi];
+                self.dbias.data_mut()[oi] += g;
+                let wrow_base = oi * d;
+                for k in 0..d {
+                    self.dweight.data_mut()[wrow_base + k] += g * xrow[k];
+                    dx.data_mut()[bi * d + k] += g * self.weight.data()[wrow_base + k];
+                }
+            }
+        }
+        dx
+    }
+
+    fn params_mut(&mut self) -> Vec<(&mut Tensor, &mut Tensor)> {
+        vec![
+            (&mut self.weight, &mut self.dweight),
+            (&mut self.bias, &mut self.dbias),
+        ]
+    }
+
+    fn param_count(&self) -> usize {
+        self.weight.len() + self.bias.len()
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "Linear[{}x{}]",
+            self.weight.shape()[0],
+            self.weight.shape()[1]
+        )
+    }
+}

@@ -1,0 +1,101 @@
+//! Softmax cross-entropy loss with gradient and accuracy.
+
+use crate::tensor::Tensor;
+
+/// Result of a loss evaluation on a batch.
+pub struct SoftmaxCeLoss {
+    /// Mean cross-entropy over the batch.
+    pub loss: f32,
+    /// ∂loss/∂logits (already averaged over the batch).
+    pub dlogits: Tensor,
+    /// Top-1 accuracy on the batch.
+    pub accuracy: f32,
+}
+
+/// Compute softmax cross-entropy for `[B, C]` logits and integer labels.
+pub fn softmax_cross_entropy(logits: &Tensor, labels: &[usize]) -> SoftmaxCeLoss {
+    let (b, c) = (logits.shape()[0], logits.shape()[1]);
+    assert_eq!(labels.len(), b);
+    let mut dlogits = Tensor::zeros(&[b, c]);
+    let mut loss = 0.0f32;
+    let mut correct = 0usize;
+    let inv_b = 1.0 / b as f32;
+    for bi in 0..b {
+        let row = &logits.data()[bi * c..(bi + 1) * c];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|&v| (v - maxv).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let label = labels[bi];
+        assert!(label < c, "label out of range");
+        let p_label = exps[label] / z;
+        loss += -(p_label.max(1e-12)).ln();
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if argmax == label {
+            correct += 1;
+        }
+        let drow = &mut dlogits.data_mut()[bi * c..(bi + 1) * c];
+        for k in 0..c {
+            let p = exps[k] / z;
+            drow[k] = (p - if k == label { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    SoftmaxCeLoss {
+        loss: loss * inv_b,
+        dlogits,
+        accuracy: correct as f32 * inv_b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_give_log_c() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let labels = vec![0, 3, 5, 9];
+        let out = softmax_cross_entropy(&logits, &labels);
+        assert!((out.loss - (10.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn confident_correct_prediction_low_loss() {
+        let mut logits = Tensor::zeros(&[1, 3]);
+        logits.set(&[0, 1], 10.0);
+        let out = softmax_cross_entropy(&logits, &[1]);
+        assert!(out.loss < 1e-3);
+        assert_eq!(out.accuracy, 1.0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let mut logits = Tensor::from_vec(&[2, 3], vec![0.2, -0.4, 0.6, 1.0, 0.0, -1.0]);
+        let labels = vec![2, 0];
+        let out = softmax_cross_entropy(&logits, &labels);
+        let eps = 1e-3f32;
+        for k in 0..6 {
+            let orig = logits.data()[k];
+            logits.data_mut()[k] = orig + eps;
+            let lp = softmax_cross_entropy(&logits, &labels).loss;
+            logits.data_mut()[k] = orig - eps;
+            let lm = softmax_cross_entropy(&logits, &labels).loss;
+            logits.data_mut()[k] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = out.dlogits.data()[k];
+            assert!((fd - an).abs() < 1e-3, "coord {k}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn gradient_rows_sum_to_zero() {
+        let logits = Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let out = softmax_cross_entropy(&logits, &[2]);
+        let s: f32 = out.dlogits.data().iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+}

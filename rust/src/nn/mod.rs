@@ -1,0 +1,25 @@
+//! Training substrate: the minimal neural-network stack needed to run the
+//! paper's workloads end-to-end on the native engine — tensorial conv
+//! layers driven by the planner/autodiff, elementwise layers, SGD with
+//! momentum + weight decay (the paper's §5 hyperparameters), synthetic
+//! datasets shaped like the paper's tasks, and a trainer with per-epoch
+//! timing and peak-memory metering.
+
+pub mod data;
+pub mod layers;
+pub mod loss;
+pub mod model;
+pub mod optim;
+pub mod trainer;
+
+pub use data::{Dataset, SyntheticImages, SyntheticSequences};
+pub use layers::{
+    EvalConfig, GlobalAvgPool, Layer, Linear, MaxPool2, ReLU, TensorialConv2d,
+};
+pub use loss::{softmax_cross_entropy, SoftmaxCeLoss};
+pub use model::{small_tnn_cnn, small_tnn_cnn_hw, Sequential, TnnNetConfig};
+pub use optim::Sgd;
+pub use trainer::{EpochStats, Trainer, TrainerConfig};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,159 @@
+//! Model containers: a [`Sequential`] stack and the TNN network builder
+//! that turns an architecture inventory ([`crate::tnn::arch::ConvSite`])
+//! into a stack of tensorial conv blocks — the model family all §5
+//! experiments run on.
+
+use super::layers::{
+    EvalConfig, GlobalAvgPool, Layer, Linear, MaxPool2, ReLU, TensorialConv2d,
+};
+use crate::tensor::Tensor;
+use crate::tnn::arch::ConvSite;
+use crate::tnn::{build_layer, Decomp};
+use crate::util::rng::Rng;
+
+/// A sequential stack of layers.
+pub struct Sequential {
+    pub layers: Vec<Box<dyn Layer>>,
+}
+
+impl Sequential {
+    pub fn new(layers: Vec<Box<dyn Layer>>) -> Self {
+        Sequential { layers }
+    }
+
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let mut cur = x.clone();
+        for layer in self.layers.iter_mut() {
+            cur = layer.forward(&cur, train);
+        }
+        cur
+    }
+
+    pub fn backward(&mut self, dy: &Tensor) -> Tensor {
+        let mut cur = dy.clone();
+        for layer in self.layers.iter_mut().rev() {
+            cur = layer.backward(&cur);
+        }
+        cur
+    }
+
+    pub fn params_mut(&mut self) -> Vec<(&mut Tensor, &mut Tensor)> {
+        self.layers
+            .iter_mut()
+            .flat_map(|l| l.params_mut())
+            .collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Peak tape bytes across tensorial layers (Table 3's bounded quantity).
+    pub fn peak_tape_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.peak_tape_bytes()).sum()
+    }
+
+    pub fn reset_peaks(&self) {
+        for l in &self.layers {
+            l.reset_peak();
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        self.layers
+            .iter()
+            .map(|l| l.name())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Configuration for building a tensorial conv-net from an arch inventory.
+#[derive(Debug, Clone)]
+pub struct TnnNetConfig {
+    pub decomp: Decomp,
+    /// Reshape order (paper experiments: M=3 for RCP/RTK/RTT/RTR).
+    pub m: usize,
+    /// Compression rate ∈ (0, 1].
+    pub cr: f64,
+    pub eval: EvalConfig,
+    pub n_classes: usize,
+    /// Downsample (MaxPool2) between stages, mirroring ResNet's strides.
+    pub pool_between_stages: bool,
+}
+
+impl TnnNetConfig {
+    pub fn build(&self, sites: &[ConvSite], rng: &mut Rng) -> Result<Sequential, String> {
+        let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+        let mut prev_stage = None;
+        let mut last_t = 0usize;
+        for site in sites {
+            if self.pool_between_stages {
+                if let Some(prev) = prev_stage {
+                    if prev != site.stage {
+                        layers.push(Box::new(MaxPool2::new()));
+                    }
+                }
+            }
+            prev_stage = Some(site.stage);
+            for _ in 0..site.count {
+                // First layer of the net ingests the raw input channels;
+                // inner repeats keep T→T.
+                let s_in = if last_t == 0 { site.s } else { last_t };
+                let spec = build_layer(self.decomp, self.m, site.t, s_in, site.h, site.w, self.cr)?;
+                layers.push(Box::new(TensorialConv2d::new(spec, self.eval, rng)));
+                layers.push(Box::new(ReLU::new()));
+                last_t = site.t;
+            }
+        }
+        layers.push(Box::new(GlobalAvgPool::new()));
+        layers.push(Box::new(Linear::new(last_t, self.n_classes, rng)));
+        Ok(Sequential::new(layers))
+    }
+}
+
+/// A compact tensorial CNN for fast tests/benches: `depth` tensorial conv
+/// blocks on `channels`, then GAP + linear head.
+pub fn small_tnn_cnn(
+    decomp: Decomp,
+    m: usize,
+    cr: f64,
+    in_channels: usize,
+    channels: usize,
+    depth: usize,
+    kernel: usize,
+    n_classes: usize,
+    eval: EvalConfig,
+    rng: &mut Rng,
+) -> Result<Sequential, String> {
+    small_tnn_cnn_hw(decomp, m, cr, in_channels, channels, depth, kernel, kernel, n_classes, eval, rng)
+}
+
+/// As [`small_tnn_cnn`] with a non-square kernel (e.g. temporal-only
+/// convolutions for the ASR workload, kw = 1).
+#[allow(clippy::too_many_arguments)]
+pub fn small_tnn_cnn_hw(
+    decomp: Decomp,
+    m: usize,
+    cr: f64,
+    in_channels: usize,
+    channels: usize,
+    depth: usize,
+    kh: usize,
+    kw: usize,
+    n_classes: usize,
+    eval: EvalConfig,
+    rng: &mut Rng,
+) -> Result<Sequential, String> {
+    let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+    let mut s = in_channels;
+    for _ in 0..depth {
+        let spec = build_layer(decomp, m, channels, s, kh, kw, cr)?;
+        layers.push(Box::new(TensorialConv2d::new(spec, eval, rng)));
+        layers.push(Box::new(ReLU::new()));
+        s = channels;
+    }
+    layers.push(Box::new(GlobalAvgPool::new()));
+    layers.push(Box::new(Linear::new(channels, n_classes, rng)));
+    Ok(Sequential::new(layers))
+}

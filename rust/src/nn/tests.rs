@@ -1,0 +1,250 @@
+//! Integration tests of the training substrate: layer gradient checks,
+//! execution-mode equivalence (conv_einsum vs naive paths give identical
+//! losses), and actual learning on the synthetic task.
+
+use super::*;
+use crate::autodiff::CkptPolicy;
+use crate::nn::model::small_tnn_cnn;
+use crate::planner::Strategy;
+use crate::tensor::Tensor;
+use crate::tnn::{build_layer, Decomp};
+use crate::util::rng::Rng;
+
+#[test]
+fn tensorial_conv_forward_shapes() {
+    let mut rng = Rng::new(1);
+    let spec = build_layer(Decomp::Cp, 1, 8, 4, 3, 3, 1.0).unwrap();
+    let mut layer = TensorialConv2d::new(spec, EvalConfig::conv_einsum(), &mut rng);
+    let x = Tensor::rand(&[2, 4, 10, 10], -1.0, 1.0, &mut rng);
+    let y = layer.forward(&x, false);
+    assert_eq!(y.shape(), &[2, 8, 10, 10]);
+}
+
+#[test]
+fn tensorial_conv_gradcheck() {
+    let mut rng = Rng::new(2);
+    let spec = build_layer(Decomp::Cp, 1, 4, 3, 3, 3, 1.0).unwrap();
+    let mut layer = TensorialConv2d::new(spec, EvalConfig::conv_einsum(), &mut rng);
+    let x = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+    let y = layer.forward(&x, true);
+    let dy = Tensor::rand(y.shape(), -1.0, 1.0, &mut rng);
+    let dx = layer.backward(&dy);
+    assert_eq!(dx.shape(), x.shape());
+
+    // finite differences on a few x coordinates
+    let loss = |layer: &mut TensorialConv2d, x: &Tensor| -> f32 {
+        let y = layer.forward(x, false);
+        y.data().iter().zip(dy.data()).map(|(a, b)| a * b).sum()
+    };
+    let eps = 1e-2f32;
+    for k in [0usize, 31, 77] {
+        let mut xp = x.clone();
+        xp.data_mut()[k] += eps;
+        let mut xm = x.clone();
+        xm.data_mut()[k] -= eps;
+        let fd = (loss(&mut layer, &xp) - loss(&mut layer, &xm)) / (2.0 * eps);
+        let an = dx.data()[k];
+        assert!(
+            (fd - an).abs() < 3e-2 * (1.0 + an.abs()),
+            "dx[{k}]: fd={fd} an={an}"
+        );
+    }
+    // factor gradient check (first factor, a few coords)
+    let g0 = layer.grads[0].clone();
+    for k in [0usize, 3] {
+        let orig = layer.factors[0].data()[k];
+        layer.factors[0].data_mut()[k] = orig + eps;
+        let lp = loss(&mut layer, &x);
+        layer.factors[0].data_mut()[k] = orig - eps;
+        let lm = loss(&mut layer, &x);
+        layer.factors[0].data_mut()[k] = orig;
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = g0.data()[k];
+        assert!(
+            (fd - an).abs() < 3e-2 * (1.0 + an.abs()),
+            "dW0[{k}]: fd={fd} an={an}"
+        );
+    }
+}
+
+#[test]
+fn eval_modes_compute_identical_functions() {
+    // The same factors evaluated under conv_einsum vs naive paths must give
+    // identical outputs (the paper's modes differ only in speed/memory).
+    let mut rng = Rng::new(3);
+    let spec = build_layer(Decomp::Cp, 2, 4, 4, 3, 3, 0.8).unwrap();
+    let mut a = TensorialConv2d::new(spec.clone(), EvalConfig::conv_einsum(), &mut rng);
+    let mut b = TensorialConv2d::new(spec.clone(), EvalConfig::naive_ckpt(), &mut rng);
+    let mut c = TensorialConv2d::new(spec, EvalConfig::naive_no_ckpt(), &mut rng);
+    // share weights
+    b.factors = a.factors.clone();
+    c.factors = a.factors.clone();
+    let x = Tensor::rand(&[2, 4, 8, 8], -1.0, 1.0, &mut rng);
+    let ya = a.forward(&x, true);
+    let yb = b.forward(&x, true);
+    let yc = c.forward(&x, true);
+    yb.assert_close(&ya, 1e-3);
+    yc.assert_close(&ya, 1e-3);
+    // and identical gradients
+    let dy = Tensor::rand(ya.shape(), -1.0, 1.0, &mut rng);
+    let dxa = a.backward(&dy);
+    let dxb = b.backward(&dy);
+    let dxc = c.backward(&dy);
+    dxb.assert_close(&dxa, 1e-3);
+    dxc.assert_close(&dxa, 1e-3);
+    for i in 0..a.grads.len() {
+        b.grads[i].assert_close(&a.grads[i], 1e-3);
+        c.grads[i].assert_close(&a.grads[i], 1e-3);
+    }
+}
+
+#[test]
+fn eval_config_labels() {
+    assert_eq!(EvalConfig::conv_einsum().label(), "conv_einsum");
+    assert_eq!(EvalConfig::naive_ckpt().label(), "naive w/ ckpt");
+    assert_eq!(EvalConfig::naive_no_ckpt().label(), "naive w/o ckpt");
+    assert_eq!(EvalConfig::naive_no_ckpt().ckpt, CkptPolicy::StoreAll);
+    assert_eq!(EvalConfig::conv_einsum().strategy, Strategy::Optimal);
+}
+
+#[test]
+fn maxpool_gradcheck() {
+    let mut rng = Rng::new(4);
+    let mut pool = MaxPool2::new();
+    let x = Tensor::rand(&[1, 2, 4, 4], -1.0, 1.0, &mut rng);
+    let y = pool.forward(&x, true);
+    assert_eq!(y.shape(), &[1, 2, 2, 2]);
+    let dy = Tensor::full(y.shape(), 1.0);
+    let dx = pool.backward(&dy);
+    // gradient is 1 at each argmax location, 0 elsewhere; sums match
+    assert_eq!(dx.sum(), dy.sum());
+    assert!(dx.data().iter().all(|&v| v == 0.0 || v == 1.0));
+}
+
+#[test]
+fn gap_and_linear_gradcheck() {
+    let mut rng = Rng::new(5);
+    let mut gap = GlobalAvgPool::new();
+    let mut lin = Linear::new(3, 2, &mut rng);
+    let x = Tensor::rand(&[2, 3, 4, 4], -1.0, 1.0, &mut rng);
+    let h = gap.forward(&x, true);
+    let y = lin.forward(&h, true);
+    assert_eq!(y.shape(), &[2, 2]);
+    let dy = Tensor::rand(&[2, 2], -1.0, 1.0, &mut rng);
+    let dh = lin.backward(&dy);
+    let dx = gap.backward(&dh);
+
+    let loss = |x: &Tensor, lin: &mut Linear, gap: &mut GlobalAvgPool| -> f32 {
+        let h = gap.forward(x, false);
+        let y = lin.forward(&h, false);
+        y.data().iter().zip(dy.data()).map(|(a, b)| a * b).sum()
+    };
+    let eps = 1e-2f32;
+    for k in [0usize, 20, 90] {
+        let mut xp = x.clone();
+        xp.data_mut()[k] += eps;
+        let mut xm = x.clone();
+        xm.data_mut()[k] -= eps;
+        let fd = (loss(&xp, &mut lin, &mut gap) - loss(&xm, &mut lin, &mut gap)) / (2.0 * eps);
+        let an = dx.data()[k];
+        assert!((fd - an).abs() < 1e-2, "dx[{k}]: fd={fd} an={an}");
+    }
+}
+
+#[test]
+fn small_tnn_learns_synthetic_task() {
+    // End-to-end: a tiny RCP net must beat chance on the synthetic images
+    // within a few epochs — the learning-works smoke test.
+    let mut rng = Rng::new(6);
+    let mut model = small_tnn_cnn(
+        Decomp::Cp,
+        1,
+        1.0,
+        1,
+        8,
+        2,
+        3,
+        4,
+        EvalConfig::conv_einsum(),
+        &mut rng,
+    )
+    .unwrap();
+    let train = SyntheticImages::sized(1, 12, 12, 4, 64, 11);
+    let eval = SyntheticImages::sized(1, 12, 12, 4, 32, 12);
+    let mut trainer = Trainer::new(
+        TrainerConfig {
+            batch_size: 16,
+            epochs: 6,
+            ..Default::default()
+        },
+        Sgd::new(0.05, 0.9, 5e-4),
+    );
+    let stats = trainer.fit(&mut model, &train, &eval);
+    let first = &stats[0];
+    let last = stats.last().unwrap();
+    assert!(
+        last.eval_acc > 0.45,
+        "should beat 25% chance clearly: got {}",
+        last.eval_acc
+    );
+    assert!(
+        last.train_loss < first.train_loss,
+        "loss should decrease: {} -> {}",
+        first.train_loss,
+        last.train_loss
+    );
+}
+
+#[test]
+fn training_identical_across_eval_modes() {
+    // Training curves must be *identical* between conv_einsum and naive
+    // modes — only time/memory differ. (Fixed seeds end to end.)
+    let run = |eval: EvalConfig| -> Vec<f32> {
+        let mut rng = Rng::new(7);
+        let mut model =
+            small_tnn_cnn(Decomp::Cp, 1, 1.0, 1, 6, 1, 3, 3, eval, &mut rng).unwrap();
+        let train = SyntheticImages::sized(1, 10, 10, 3, 32, 21);
+        let mut trainer = Trainer::new(
+            TrainerConfig {
+                batch_size: 8,
+                epochs: 2,
+                ..Default::default()
+            },
+            Sgd::new(0.05, 0.9, 5e-4),
+        );
+        trainer
+            .fit(&mut model, &train, &train)
+            .iter()
+            .map(|s| s.train_loss)
+            .collect()
+    };
+    let a = run(EvalConfig::conv_einsum());
+    let b = run(EvalConfig::naive_ckpt());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert!((x - y).abs() < 1e-3, "loss curves diverged: {x} vs {y}");
+    }
+}
+
+#[test]
+fn model_peak_memory_reported() {
+    let mut rng = Rng::new(8);
+    let mut model = small_tnn_cnn(
+        Decomp::Cp,
+        2,
+        0.5,
+        2,
+        4,
+        2,
+        3,
+        3,
+        EvalConfig::naive_no_ckpt(),
+        &mut rng,
+    )
+    .unwrap();
+    let x = Tensor::rand(&[2, 2, 8, 8], -1.0, 1.0, &mut rng);
+    let y = model.forward(&x, true);
+    assert!(model.peak_tape_bytes() > 0);
+    assert_eq!(y.shape(), &[2, 3]);
+    model.reset_peaks();
+    assert_eq!(model.peak_tape_bytes(), 0);
+}

@@ -1,0 +1,158 @@
+//! Training loop with per-epoch wall-clock timing, loss/accuracy logging
+//! and peak-tape-memory tracking — the measurement harness behind the
+//! paper's runtime tables/figures.
+
+use super::data::Dataset;
+use super::loss::softmax_cross_entropy;
+use super::model::Sequential;
+use super::optim::Sgd;
+use std::time::{Duration, Instant};
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub batch_size: usize,
+    pub epochs: usize,
+    /// Steps per epoch = ceil(dataset len / batch).
+    pub log_every: usize,
+    pub lr_decay_every: usize,
+    pub lr_decay_factor: f32,
+    pub verbose: bool,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            batch_size: 16,
+            epochs: 1,
+            log_every: 0,
+            lr_decay_every: 30,
+            lr_decay_factor: 0.5,
+            verbose: false,
+        }
+    }
+}
+
+/// Per-epoch statistics.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub train_acc: f32,
+    pub train_time: Duration,
+    pub eval_loss: f32,
+    pub eval_acc: f32,
+    pub eval_time: Duration,
+    pub peak_tape_bytes: usize,
+}
+
+/// Orchestrates train/eval epochs over a model + dataset.
+pub struct Trainer {
+    pub config: TrainerConfig,
+    pub optimizer: Sgd,
+}
+
+impl Trainer {
+    pub fn new(config: TrainerConfig, optimizer: Sgd) -> Self {
+        Trainer { config, optimizer }
+    }
+
+    fn n_batches(&self, ds: &dyn Dataset) -> usize {
+        ds.len().div_ceil(self.config.batch_size).max(1)
+    }
+
+    /// One training epoch; returns (mean loss, mean acc, wall time, peak tape bytes).
+    pub fn train_epoch(
+        &mut self,
+        model: &mut Sequential,
+        ds: &dyn Dataset,
+        epoch: usize,
+    ) -> (f32, f32, Duration, usize) {
+        self.optimizer.decay_lr(
+            epoch,
+            self.config.lr_decay_every,
+            self.config.lr_decay_factor,
+        );
+        model.reset_peaks();
+        let nb = self.n_batches(ds);
+        let t0 = Instant::now();
+        let mut loss_sum = 0.0;
+        let mut acc_sum = 0.0;
+        for bi in 0..nb {
+            let (x, labels) = ds.batch(bi + epoch * nb, self.config.batch_size);
+            let logits = model.forward(&x, true);
+            let out = softmax_cross_entropy(&logits, &labels);
+            model.backward(&out.dlogits);
+            let mut params = model.params_mut();
+            self.optimizer.step(&mut params);
+            loss_sum += out.loss;
+            acc_sum += out.accuracy;
+            if self.config.verbose
+                && self.config.log_every > 0
+                && bi % self.config.log_every == 0
+            {
+                println!(
+                    "  epoch {epoch} step {bi}/{nb}: loss {:.4} acc {:.3}",
+                    out.loss, out.accuracy
+                );
+            }
+        }
+        (
+            loss_sum / nb as f32,
+            acc_sum / nb as f32,
+            t0.elapsed(),
+            model.peak_tape_bytes(),
+        )
+    }
+
+    /// One evaluation epoch (no grads): (mean loss, mean acc, wall time).
+    pub fn eval_epoch(
+        &self,
+        model: &mut Sequential,
+        ds: &dyn Dataset,
+    ) -> (f32, f32, Duration) {
+        let nb = self.n_batches(ds);
+        let t0 = Instant::now();
+        let mut loss_sum = 0.0;
+        let mut acc_sum = 0.0;
+        for bi in 0..nb {
+            let (x, labels) = ds.batch(1_000_000 + bi, self.config.batch_size);
+            let logits = model.forward(&x, false);
+            let out = softmax_cross_entropy(&logits, &labels);
+            loss_sum += out.loss;
+            acc_sum += out.accuracy;
+        }
+        (loss_sum / nb as f32, acc_sum / nb as f32, t0.elapsed())
+    }
+
+    /// Full run: `epochs` train+eval rounds.
+    pub fn fit(
+        &mut self,
+        model: &mut Sequential,
+        train: &dyn Dataset,
+        eval: &dyn Dataset,
+    ) -> Vec<EpochStats> {
+        let mut stats = Vec::new();
+        for epoch in 0..self.config.epochs {
+            let (train_loss, train_acc, train_time, peak) =
+                self.train_epoch(model, train, epoch);
+            let (eval_loss, eval_acc, eval_time) = self.eval_epoch(model, eval);
+            if self.config.verbose {
+                println!(
+                    "epoch {epoch}: train loss {train_loss:.4} acc {train_acc:.3} ({train_time:?}) | eval loss {eval_loss:.4} acc {eval_acc:.3} ({eval_time:?})"
+                );
+            }
+            stats.push(EpochStats {
+                epoch,
+                train_loss,
+                train_acc,
+                train_time,
+                eval_loss,
+                eval_acc,
+                eval_time,
+                peak_tape_bytes: peak,
+            });
+        }
+        stats
+    }
+}

@@ -1,0 +1,470 @@
+//! The optimal sequencer (paper §3.2): decomposes an N-input conv_einsum
+//! into a FLOPs-minimal sequence of pairwise operations.
+//!
+//! netcon [Pfeifer–Haegeman–Verstraete 2014] searches the space of pairwise
+//! contraction trees; our extension swaps its contraction-cost function for
+//! the tnn-cost model ([`crate::cost`]) which prices convolutions (Eq. 8)
+//! and, in training mode, the backward computations `g1`/`g2`.
+//!
+//! Strategies:
+//! * [`Strategy::Optimal`] — exact subset dynamic program (equivalent
+//!   optimum to netcon's breadth-first search; `O(3^n)` over input subsets).
+//! * [`Strategy::Greedy`] — cheapest-pair-first heuristic, for very large
+//!   networks.
+//! * [`Strategy::LeftToRight`] — the paper's naive baseline.
+//!
+//! A [`PlanOptions::cost_cap`] restricts the search to trees whose every
+//! step costs at most the cap — the "orange path" of the paper's Figure 2.
+
+mod subspec;
+
+pub use subspec::{analyze_merge, step_sized_spec, NetCtx, SubSpec};
+
+use crate::cost::flat_cost;
+use crate::einsum::{parse, ConvKind, SizedSpec};
+use crate::util::json::Json;
+use crate::util::sci;
+
+/// Evaluation-order search strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Exact FLOPs-minimal tree (netcon-equivalent subset DP).
+    Optimal,
+    /// Cheapest-pair-first heuristic.
+    Greedy,
+    /// Naive left-to-right evaluation — the paper's baseline.
+    LeftToRight,
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Strategy::Optimal => "optimal",
+            Strategy::Greedy => "greedy",
+            Strategy::LeftToRight => "left-to-right",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Options controlling planning.
+#[derive(Debug, Clone)]
+pub struct PlanOptions {
+    pub strategy: Strategy,
+    /// Price steps with the training cost `f + g1 + g2` (Appendix B) rather
+    /// than forward-only.
+    pub training: bool,
+    /// Reject any tree containing a step costlier than this (paper Fig. 2).
+    pub cost_cap: Option<f64>,
+    /// Explicit convolution varieties (parallel to the pipe list); `None`
+    /// uses the defaults (Same for 2-input modes, Circular for multi-way).
+    pub conv_kinds: Option<Vec<ConvKind>>,
+    /// Above this input count, Optimal falls back to Greedy.
+    pub max_dp_inputs: usize,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions {
+            strategy: Strategy::Optimal,
+            training: false,
+            cost_cap: None,
+            conv_kinds: None,
+            max_dp_inputs: 16,
+        }
+    }
+}
+
+/// One pairwise step of a plan, in opt-einsum working-list semantics:
+/// operands `lhs`/`rhs` are removed from the list and the result appended.
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    pub lhs: usize,
+    pub rhs: usize,
+    /// The executable 2-input spec for this step.
+    pub sized: SizedSpec,
+    /// Circular wrap moduli per conv mode of the step.
+    pub moduli: Vec<Option<usize>>,
+    /// Rendered einsum string of the step (for display / goldens).
+    pub expr: String,
+    /// Multiplications (under the plan's cost mode).
+    pub cost: f64,
+    /// Elements of the step output.
+    pub out_elems: f64,
+}
+
+/// A complete evaluation plan for an N-input conv_einsum.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub expr: String,
+    pub n_inputs: usize,
+    pub strategy: Strategy,
+    pub training: bool,
+    pub steps: Vec<PlanStep>,
+    /// Permutation from the last step's (mode-sorted) output to the
+    /// requested output order.
+    pub final_perm: Option<Vec<usize>>,
+    /// Total cost of this plan (multiplications).
+    pub cost: f64,
+    /// Cost of the naive left-to-right baseline, for the report.
+    pub naive_cost: f64,
+    /// Single-nested-loop cost (opt-einsum's "naive FLOP count").
+    pub flat_cost: f64,
+    /// Largest intermediate produced, in elements.
+    pub largest_intermediate: f64,
+    /// Peak simultaneously-live elements during forward execution
+    /// (inputs + working list + current output).
+    pub peak_mem_elems: f64,
+}
+
+impl Plan {
+    /// Speedup of this plan over left-to-right.
+    pub fn speedup_vs_naive(&self) -> f64 {
+        self.naive_cost / self.cost.max(1.0)
+    }
+
+    /// Paper-Figure-1b-style report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("  Complete sequence:  {}\n", self.expr));
+        s.push_str(&format!("  Naive FLOP count:  {}\n", sci(self.naive_cost)));
+        s.push_str(&format!("  Optimized FLOP count:  {}\n", sci(self.cost)));
+        s.push_str(&format!(
+            "  Largest intermediate:  {} elements\n",
+            sci(self.largest_intermediate)
+        ));
+        s.push_str(&format!("  Strategy: {}", self.strategy));
+        if self.training {
+            s.push_str("  (training cost model: f + g1 + g2)");
+        }
+        s.push('\n');
+        s.push_str("--------------------------------------------------\n");
+        s.push_str("current\n");
+        s.push_str("--------------------------------------------------\n");
+        for step in &self.steps {
+            s.push_str(&format!(
+                "{:<40} cost {:>10}  out {:>10}\n",
+                step.expr,
+                sci(step.cost),
+                sci(step.out_elems)
+            ));
+        }
+        s
+    }
+
+    /// JSON form (used by golden tests against the python planner mirror).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("expr", Json::str(&self.expr)),
+            ("strategy", Json::str(format!("{}", self.strategy))),
+            ("training", Json::Bool(self.training)),
+            ("cost", Json::num(self.cost)),
+            ("naive_cost", Json::num(self.naive_cost)),
+            ("flat_cost", Json::num(self.flat_cost)),
+            ("largest_intermediate", Json::num(self.largest_intermediate)),
+            ("peak_mem_elems", Json::num(self.peak_mem_elems)),
+            (
+                "steps",
+                Json::arr(self.steps.iter().map(|st| {
+                    Json::obj(vec![
+                        ("lhs", Json::num(st.lhs as f64)),
+                        ("rhs", Json::num(st.rhs as f64)),
+                        ("expr", Json::str(&st.expr)),
+                        ("cost", Json::num(st.cost)),
+                        ("out_elems", Json::num(st.out_elems)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Plan a parsed + sized expression.
+pub fn plan_with(sized: &SizedSpec, opts: &PlanOptions) -> Result<Plan, String> {
+    let n = sized.spec.n_inputs();
+    if n < 2 {
+        return Err("planning requires at least 2 inputs".to_string());
+    }
+    if n > 63 {
+        return Err(format!("too many inputs ({n} > 63)"));
+    }
+    // Re-bind conv kinds if the options override them.
+    let owned;
+    let sized = match &opts.conv_kinds {
+        Some(kinds) => {
+            owned = SizedSpec::with_kinds(sized.spec.clone(), sized.dims.clone(), kinds.clone())?;
+            &owned
+        }
+        None => sized,
+    };
+    let ctx = NetCtx::new(sized);
+
+    // The left-to-right baseline is always computed for the report.
+    let ltr_tree = left_to_right_tree(n);
+    let ltr_cost = tree_cost(&ctx, &ltr_tree, opts.training, None)
+        .ok_or("internal: LTR tree must be feasible")?;
+
+    let tree = match opts.strategy {
+        Strategy::LeftToRight => ltr_tree.clone(),
+        Strategy::Greedy => greedy_tree(&ctx, n, opts.training),
+        Strategy::Optimal => {
+            if n <= opts.max_dp_inputs {
+                optimal_tree(&ctx, n, opts.training, opts.cost_cap)?
+            } else {
+                greedy_tree(&ctx, n, opts.training)
+            }
+        }
+    };
+    if let Some(cap) = opts.cost_cap {
+        if tree_cost(&ctx, &tree, opts.training, Some(cap)).is_none() {
+            return Err(format!(
+                "no evaluation path satisfies per-step cost cap {}",
+                cap
+            ));
+        }
+    }
+
+    build_plan(&ctx, &tree, opts, ltr_cost)
+}
+
+/// Parse + size + plan in one call (the Figure 1a `contract_path` API).
+pub fn contract_path(expr: &str, dims: &[Vec<usize>], opts: &PlanOptions) -> Result<Plan, String> {
+    let spec = parse(expr).map_err(|e| e.to_string())?;
+    let sized = SizedSpec::new(spec, dims.to_vec())?;
+    plan_with(&sized, opts)
+}
+
+// ---------------------------------------------------------------------------
+// Contraction trees
+// ---------------------------------------------------------------------------
+
+/// A binary contraction tree over input indices, as (left, right) subtree
+/// pairs identified by subset masks with a split table.
+#[derive(Debug, Clone)]
+struct Tree {
+    /// For every non-leaf subset mask on the tree: its (left, right) split.
+    splits: Vec<(u64, u64, u64)>, // (mask, left, right) in bottom-up order
+    root: u64,
+}
+
+fn left_to_right_tree(n: usize) -> Tree {
+    let mut splits = Vec::new();
+    let mut acc = 1u64;
+    for i in 1..n {
+        let next = acc | (1 << i);
+        splits.push((next, acc, 1u64 << i));
+        acc = next;
+    }
+    Tree { splits, root: acc }
+}
+
+/// Total cost of a tree; None if any step exceeds `cap`.
+fn tree_cost(ctx: &NetCtx, tree: &Tree, training: bool, cap: Option<f64>) -> Option<f64> {
+    let mut total = 0.0;
+    for &(_, l, r) in &tree.splits {
+        let sa = ctx.subset(l);
+        let sb = ctx.subset(r);
+        let merge = analyze_merge(ctx, &sa, &sb);
+        let c = merge.dims.mults(training);
+        if let Some(cap) = cap {
+            if c > cap {
+                return None;
+            }
+        }
+        total += c;
+    }
+    Some(total)
+}
+
+/// Exact subset DP (netcon-equivalent optimum).
+fn optimal_tree(
+    ctx: &NetCtx,
+    n: usize,
+    training: bool,
+    cap: Option<f64>,
+) -> Result<Tree, String> {
+    let full: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let size = 1usize << n;
+    let mut best = vec![f64::INFINITY; size];
+    let mut split: Vec<(u64, u64)> = vec![(0, 0); size];
+    // Cache SubSpecs per mask (they are order-independent).
+    let mut subs: Vec<Option<SubSpec>> = vec![None; size];
+    for i in 0..n {
+        best[1 << i] = 0.0;
+        subs[1 << i] = Some(ctx.leaf(i));
+    }
+    // Iterate masks in increasing order (all submasks precede their mask).
+    for mask in 1..=full {
+        if mask.count_ones() < 2 {
+            continue;
+        }
+        if subs[mask as usize].is_none() {
+            subs[mask as usize] = Some(ctx.subset(mask));
+        }
+        // Enumerate proper submask splits; dedupe unordered pairs by
+        // requiring s to contain the lowest set bit of mask.
+        let low = mask & mask.wrapping_neg();
+        let mut s = (mask - 1) & mask;
+        while s != 0 {
+            if s & low != 0 {
+                let t = mask ^ s;
+                if best[s as usize].is_finite() && best[t as usize].is_finite() {
+                    let sa = subs[s as usize].get_or_insert_with(|| ctx.subset(s));
+                    let sa = sa.clone();
+                    let sb = subs[t as usize].get_or_insert_with(|| ctx.subset(t));
+                    let merge = analyze_merge(ctx, &sa, sb);
+                    let step = merge.dims.mults(training);
+                    let ok = cap.map_or(true, |c| step <= c);
+                    if ok {
+                        let cand = best[s as usize] + best[t as usize] + step;
+                        if cand < best[mask as usize] {
+                            best[mask as usize] = cand;
+                            split[mask as usize] = (s, t);
+                        }
+                    }
+                }
+            }
+            s = (s - 1) & mask;
+        }
+    }
+    if !best[full as usize].is_finite() {
+        return Err("no feasible evaluation path under the cost cap".to_string());
+    }
+    // Reconstruct bottom-up split list.
+    let mut splits = Vec::new();
+    let mut stack = vec![full];
+    let mut order = Vec::new();
+    while let Some(m) = stack.pop() {
+        if m.count_ones() < 2 {
+            continue;
+        }
+        let (l, r) = split[m as usize];
+        order.push((m, l, r));
+        stack.push(l);
+        stack.push(r);
+    }
+    order.reverse(); // children before parents
+    splits.extend(order);
+    Ok(Tree { splits, root: full })
+}
+
+/// Cheapest-pair-first greedy.
+fn greedy_tree(ctx: &NetCtx, n: usize, training: bool) -> Tree {
+    let mut pool: Vec<SubSpec> = (0..n).map(|i| ctx.leaf(i)).collect();
+    let mut splits = Vec::new();
+    while pool.len() > 1 {
+        let mut best = (f64::INFINITY, f64::INFINITY, 0usize, 1usize);
+        for i in 0..pool.len() {
+            for j in i + 1..pool.len() {
+                let merge = analyze_merge(ctx, &pool[i], &pool[j]);
+                let c = merge.dims.mults(training);
+                let e = merge.result.elems();
+                if (c, e) < (best.0, best.1) {
+                    best = (c, e, i, j);
+                }
+            }
+        }
+        let (_, _, i, j) = best;
+        let (si, sj) = (pool[i].mask, pool[j].mask);
+        let merge = analyze_merge(ctx, &pool[i], &pool[j]);
+        splits.push((si | sj, si, sj));
+        // remove j first (j > i)
+        pool.remove(j);
+        pool.remove(i);
+        pool.push(merge.result);
+    }
+    Tree {
+        splits,
+        root: pool[0].mask,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan construction
+// ---------------------------------------------------------------------------
+
+fn build_plan(
+    ctx: &NetCtx,
+    tree: &Tree,
+    opts: &PlanOptions,
+    ltr_cost: f64,
+) -> Result<Plan, String> {
+    let sized = ctx.sized;
+    let n = sized.spec.n_inputs();
+    // Simulate the working list to assign step positions.
+    let mut working: Vec<u64> = (0..n).map(|i| 1u64 << i).collect();
+    let mut live_elems: Vec<f64> = (0..n).map(|i| ctx.leaf(i).elems()).collect();
+    let mut steps = Vec::new();
+    let mut total = 0.0;
+    let mut largest = 0.0f64;
+    let mut peak_mem = live_elems.iter().sum::<f64>();
+
+    for &(_, l, r) in &tree.splits {
+        let i = working
+            .iter()
+            .position(|&m| m == l)
+            .ok_or("internal: split child missing from working list")?;
+        let j = working
+            .iter()
+            .position(|&m| m == r)
+            .ok_or("internal: split child missing from working list")?;
+        let sa = ctx.subset(l);
+        let sb = ctx.subset(r);
+        let merge = analyze_merge(ctx, &sa, &sb);
+        let (step_sized, moduli) = step_sized_spec(ctx, &sa, &sb, &merge);
+        let cost = merge.dims.mults(opts.training);
+        let out_elems = merge.result.elems();
+        total += cost;
+        largest = largest.max(out_elems);
+        peak_mem = peak_mem.max(live_elems.iter().sum::<f64>() + out_elems);
+        steps.push(PlanStep {
+            lhs: i,
+            rhs: j,
+            expr: step_sized.spec.render(),
+            sized: step_sized,
+            moduli,
+            cost,
+            out_elems,
+        });
+        let (hi, lo) = if i > j { (i, j) } else { (j, i) };
+        working.remove(hi);
+        working.remove(lo);
+        live_elems.remove(hi);
+        live_elems.remove(lo);
+        working.push(l | r);
+        live_elems.push(out_elems);
+    }
+
+    // Final permutation: last step output is mode-sorted; map to requested.
+    let root_sub = ctx.subset(tree.root);
+    let final_perm: Vec<usize> = sized
+        .spec
+        .output
+        .iter()
+        .map(|m| {
+            root_sub
+                .modes
+                .iter()
+                .position(|x| x == m)
+                .ok_or_else(|| format!("output mode missing from root intermediate"))
+        })
+        .collect::<Result<_, _>>()?;
+    let is_identity = final_perm.iter().enumerate().all(|(i, &p)| i == p);
+
+    Ok(Plan {
+        expr: sized.spec.render(),
+        n_inputs: n,
+        strategy: opts.strategy,
+        training: opts.training,
+        steps,
+        final_perm: if is_identity { None } else { Some(final_perm) },
+        cost: total,
+        naive_cost: ltr_cost,
+        flat_cost: flat_cost(sized),
+        largest_intermediate: largest,
+        peak_mem_elems: peak_mem,
+    })
+}
+
+#[cfg(test)]
+mod tests;

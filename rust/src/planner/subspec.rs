@@ -1,0 +1,300 @@
+//! Subexpression bookkeeping for the optimal sequencer.
+//!
+//! A [`SubSpec`] describes the intermediate tensor obtained by fully merging
+//! a *subset* (bitmask) of the expression's inputs. Crucially its shape is
+//! **order-independent** — circular convolution support grows as
+//! `min(Σ sizes − (k−1), P)` and all other mode sizes are fixed — which is
+//! what makes netcon-style dynamic programming over subsets sound in the
+//! presence of convolutions.
+
+use crate::cost::{conv_out_size, MergeDims};
+use crate::einsum::{ConvKind, ModeId, SizedSpec};
+
+/// Global, per-expression context shared by all subsets.
+pub struct NetCtx<'a> {
+    pub sized: &'a SizedSpec,
+    /// For every mode: bitmask of inputs containing it.
+    pub occ_mask: Vec<u64>,
+    /// For conv modes (indexed by pipe position): global feature size =
+    /// wrap modulus for circular steps.
+    pub conv_feature: Vec<usize>,
+    /// Convolution variety per pipe position.
+    pub conv_kinds: Vec<ConvKind>,
+    /// Set of output modes.
+    pub out_set: Vec<bool>,
+}
+
+impl<'a> NetCtx<'a> {
+    pub fn new(sized: &'a SizedSpec) -> NetCtx<'a> {
+        let n_modes = sized.spec.modes.len();
+        let mut occ_mask = vec![0u64; n_modes];
+        for (i, modes) in sized.spec.inputs.iter().enumerate() {
+            for &m in modes {
+                occ_mask[m as usize] |= 1 << i;
+            }
+        }
+        let conv_feature = sized
+            .spec
+            .conv
+            .iter()
+            .map(|&m| sized.conv_feature_size(m))
+            .collect();
+        let mut out_set = vec![false; n_modes];
+        for &m in &sized.spec.output {
+            out_set[m as usize] = true;
+        }
+        NetCtx {
+            sized,
+            occ_mask,
+            conv_feature,
+            conv_kinds: sized.conv_kinds.clone(),
+            out_set,
+        }
+    }
+
+    /// Pipe position of conv mode `m` (None if not a conv mode).
+    pub fn conv_pos(&self, m: ModeId) -> Option<usize> {
+        self.sized.spec.conv.iter().position(|&x| x == m)
+    }
+
+    /// Is mode `m` needed outside subset `mask` (in the output or in inputs
+    /// not yet merged)?
+    pub fn needed_outside(&self, m: ModeId, mask: u64) -> bool {
+        self.out_set[m as usize] || (self.occ_mask[m as usize] & !mask) != 0
+    }
+
+    /// The [`SubSpec`] of a single input.
+    pub fn leaf(&self, i: usize) -> SubSpec {
+        SubSpec {
+            mask: 1 << i,
+            modes: self.sized.spec.inputs[i].clone(),
+            sizes: self.sized.dims[i].clone(),
+        }
+    }
+
+    /// The [`SubSpec`] for an arbitrary subset, built directly (used for
+    /// testing the order-independence invariant and by the greedy search).
+    ///
+    /// Singleton subsets return the *leaf* spec (original mode order,
+    /// self-sum modes still present — they are only summed when the input
+    /// first participates in a merge, matching the executed tensors).
+    pub fn subset(&self, mask: u64) -> SubSpec {
+        if mask.count_ones() == 1 {
+            return self.leaf(mask.trailing_zeros() as usize);
+        }
+        let spec = &self.sized.spec;
+        let mut modes: Vec<ModeId> = Vec::new();
+        for m in spec.all_modes() {
+            let occ = self.occ_mask[m as usize];
+            if occ & mask == 0 {
+                continue; // not present in this subset
+            }
+            if self.needed_outside(m, mask) {
+                modes.push(m);
+            } else if spec.is_conv(m) {
+                modes.push(m); // conv modes are always in the output
+            }
+        }
+        modes.sort_unstable();
+        let sizes = modes.iter().map(|&m| self.mode_size_in(m, mask)).collect();
+        SubSpec { mask, modes, sizes }
+    }
+
+    /// Size of mode `m` within the intermediate for subset `mask`.
+    pub fn mode_size_in(&self, m: ModeId, mask: u64) -> usize {
+        let spec = &self.sized.spec;
+        if !spec.is_conv(m) {
+            return self.sized.mode_size(m);
+        }
+        // Gather the occurrence sizes inside the subset.
+        let mut inside: Vec<usize> = Vec::new();
+        for (i, modes) in spec.inputs.iter().enumerate() {
+            if mask & (1 << i) == 0 {
+                continue;
+            }
+            if let Some(pos) = modes.iter().position(|&x| x == m) {
+                inside.push(self.sized.dims[i][pos]);
+            }
+        }
+        let pipe = self.conv_pos(m).unwrap();
+        match inside.len() {
+            0 => unreachable!(),
+            1 => inside[0],
+            k => {
+                let kind = self.conv_kinds[pipe];
+                match kind {
+                    ConvKind::Circular => {
+                        let p = self.conv_feature[pipe];
+                        (inside.iter().sum::<usize>() - (k - 1)).min(p)
+                    }
+                    // Non-circular varieties only permit 2 occurrences
+                    // (validated in SizedSpec), both inside here:
+                    _ => kind.out_dim(inside[0], inside[1]),
+                }
+            }
+        }
+    }
+}
+
+/// The intermediate tensor for a subset of inputs: its modes (sorted by id)
+/// and sizes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubSpec {
+    pub mask: u64,
+    pub modes: Vec<ModeId>,
+    pub sizes: Vec<usize>,
+}
+
+impl SubSpec {
+    pub fn elems(&self) -> f64 {
+        self.sizes.iter().map(|&s| s as f64).product()
+    }
+
+    pub fn size_of(&self, m: ModeId) -> Option<usize> {
+        self.modes
+            .iter()
+            .position(|&x| x == m)
+            .map(|p| self.sizes[p])
+    }
+}
+
+/// Everything about merging two disjoint subexpressions.
+pub struct Merge {
+    pub dims: MergeDims,
+    pub result: SubSpec,
+}
+
+/// Analyze the pairwise merge of `a` and `b` under context `ctx`.
+pub fn analyze_merge(ctx: &NetCtx, a: &SubSpec, b: &SubSpec) -> Merge {
+    debug_assert_eq!(a.mask & b.mask, 0, "subsets must be disjoint");
+    let spec = &ctx.sized.spec;
+    let union = a.mask | b.mask;
+
+    let mut dims = MergeDims {
+        g: 1.0,
+        t: 1.0,
+        n: 1.0,
+        s: 1.0,
+        presum: 1.0,
+        conv: Vec::new(),
+    };
+    let mut out_modes: Vec<ModeId> = Vec::new();
+    let mut out_sizes: Vec<usize> = Vec::new();
+
+    let mut all: Vec<ModeId> = a.modes.iter().chain(b.modes.iter()).copied().collect();
+    all.sort_unstable();
+    all.dedup();
+
+    for &m in &all {
+        let sa = a.size_of(m);
+        let sb = b.size_of(m);
+        let needed = ctx.needed_outside(m, union);
+        let is_conv = spec.is_conv(m);
+        match (sa, sb) {
+            (Some(ia), Some(ib)) if is_conv => {
+                let pipe = ctx.conv_pos(m).unwrap();
+                let kind = ctx.conv_kinds[pipe];
+                let modulus = match kind {
+                    ConvKind::Circular => Some(ctx.conv_feature[pipe]),
+                    _ => None,
+                };
+                let io = conv_out_size(kind, ia, ib, modulus);
+                dims.conv.push((ia as f64, ib as f64, io as f64));
+                out_modes.push(m);
+                out_sizes.push(io);
+            }
+            (Some(ia), Some(_)) => {
+                if needed {
+                    dims.g *= ia as f64;
+                    out_modes.push(m);
+                    out_sizes.push(ia);
+                } else {
+                    dims.s *= ia as f64;
+                }
+            }
+            (Some(ia), None) => {
+                if needed || is_conv {
+                    dims.t *= ia as f64;
+                    out_modes.push(m);
+                    out_sizes.push(ia);
+                } else {
+                    dims.presum *= ia as f64;
+                }
+            }
+            (None, Some(ib)) => {
+                if needed || is_conv {
+                    dims.n *= ib as f64;
+                    out_modes.push(m);
+                    out_sizes.push(ib);
+                } else {
+                    dims.presum *= ib as f64;
+                }
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+
+    Merge {
+        dims,
+        result: SubSpec {
+            mask: union,
+            modes: out_modes,
+            sizes: out_sizes,
+        },
+    }
+}
+
+/// Build the executable 2-input [`SizedSpec`] (plus wrap moduli) for a merge
+/// step. The step's output mode order is the merged SubSpec's (sorted) mode
+/// order; `override_output` substitutes a caller-chosen order for the final
+/// step.
+pub fn step_sized_spec(
+    ctx: &NetCtx,
+    a: &SubSpec,
+    b: &SubSpec,
+    merge: &Merge,
+) -> (SizedSpec, Vec<Option<usize>>) {
+    let spec = &ctx.sized.spec;
+    // Construct a fresh EinsumSpec reusing the parent's mode table.
+    let mut conv_modes: Vec<ModeId> = Vec::new();
+    for &m in merge
+        .result
+        .modes
+        .iter()
+        .chain(a.modes.iter())
+        .chain(b.modes.iter())
+    {
+        if spec.is_conv(m) && !conv_modes.contains(&m) {
+            conv_modes.push(m);
+        }
+    }
+    conv_modes.sort_unstable_by_key(|m| ctx.conv_pos(*m).unwrap());
+
+    let step_spec = crate::einsum::EinsumSpec {
+        modes: spec.modes.clone(),
+        inputs: vec![a.modes.clone(), b.modes.clone()],
+        output: merge.result.modes.clone(),
+        conv: conv_modes.clone(),
+    };
+    let kinds: Vec<ConvKind> = conv_modes
+        .iter()
+        .map(|&m| ctx.conv_kinds[ctx.conv_pos(m).unwrap()])
+        .collect();
+    let moduli: Vec<Option<usize>> = conv_modes
+        .iter()
+        .map(|&m| {
+            let pipe = ctx.conv_pos(m).unwrap();
+            match ctx.conv_kinds[pipe] {
+                ConvKind::Circular => Some(ctx.conv_feature[pipe]),
+                _ => None,
+            }
+        })
+        .collect();
+    let sized = SizedSpec::with_kinds(
+        step_spec,
+        vec![a.sizes.clone(), b.sizes.clone()],
+        kinds,
+    )
+    .expect("internal: step spec must validate");
+    (sized, moduli)
+}

@@ -1,0 +1,532 @@
+//! Dense row-major f32 tensors — the substrate every other module executes
+//! on. (ndarray is unavailable offline; this is a purpose-built minimal
+//! replacement with exactly the layout operations conv_einsum needs:
+//! reshape, permute, mode merge/split, pad, slice, and fast accessors.)
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// A dense, contiguous, row-major tensor of f32 values.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+/// Row-major strides for `shape`.
+pub fn strides_for(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+impl Tensor {
+    /// All-zero tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Tensor filled with `v`.
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    /// Build from data; length must match the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with {} elements",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Scalar (rank-0) tensor.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// Uniform random in [lo, hi).
+    pub fn rand(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: rng.fill_uniform(n, lo, hi),
+        }
+    }
+
+    /// Normal(mean, std) random.
+    pub fn randn(shape: &[usize], mean: f32, std: f32, rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal_f32(mean, std)).collect(),
+        }
+    }
+
+    /// Values 0,1,2,... (testing helper).
+    pub fn iota(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|i| i as f32).collect(),
+        }
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Size in bytes of the payload.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Multi-index read (slow; for tests and reference paths).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = strides_for(&self.shape);
+        let off: usize = idx.iter().zip(strides.iter()).map(|(&i, &s)| i * s).sum();
+        self.data[off]
+    }
+
+    /// Multi-index write (slow; for tests and reference paths).
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let strides = strides_for(&self.shape);
+        let off: usize = idx.iter().zip(strides.iter()).map(|(&i, &s)| i * s).sum();
+        self.data[off] = v;
+    }
+
+    // ---- layout ops ------------------------------------------------------
+
+    /// Reinterpret with a new shape of equal element count. O(1).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?} changes element count",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Materializing axis permutation: output axis `i` is input axis
+    /// `perm[i]`.
+    pub fn permute(&self, perm: &[usize]) -> Tensor {
+        assert_eq!(perm.len(), self.shape.len());
+        let rank = perm.len();
+        if rank <= 1 || perm.iter().enumerate().all(|(i, &p)| i == p) {
+            return self.clone();
+        }
+        let new_shape: Vec<usize> = perm.iter().map(|&p| self.shape[p]).collect();
+        let in_strides = strides_for(&self.shape);
+        // stride (in the input) of each output axis:
+        let out_axis_stride: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
+        let mut out = vec![0.0f32; self.data.len()];
+        // Iterate output in row-major order, tracking the input offset
+        // incrementally (odometer) — O(n) with no per-element multiply.
+        let mut idx = vec![0usize; rank];
+        let mut in_off = 0usize;
+        for slot in out.iter_mut() {
+            *slot = self.data[in_off];
+            // increment odometer
+            for ax in (0..rank).rev() {
+                idx[ax] += 1;
+                in_off += out_axis_stride[ax];
+                if idx[ax] < new_shape[ax] {
+                    break;
+                }
+                in_off -= out_axis_stride[ax] * new_shape[ax];
+                idx[ax] = 0;
+            }
+        }
+        Tensor {
+            shape: new_shape,
+            data: out,
+        }
+    }
+
+    /// Sum over one axis.
+    pub fn sum_axis(&self, axis: usize) -> Tensor {
+        assert!(axis < self.shape.len());
+        let outer: usize = self.shape[..axis].iter().product();
+        let mid = self.shape[axis];
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let mut out = vec![0.0f32; outer * inner];
+        for o in 0..outer {
+            for m in 0..mid {
+                let src = (o * mid + m) * inner;
+                let dst = o * inner;
+                for i in 0..inner {
+                    out[dst + i] += self.data[src + i];
+                }
+            }
+        }
+        let mut shape = self.shape.clone();
+        shape.remove(axis);
+        Tensor { shape, data: out }
+    }
+
+    /// Insert a broadcast axis of size `size` at `axis` (repeats data).
+    pub fn broadcast_axis(&self, axis: usize, size: usize) -> Tensor {
+        assert!(axis <= self.shape.len());
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis..].iter().product();
+        let mut out = Vec::with_capacity(outer * size * inner);
+        for o in 0..outer {
+            let chunk = &self.data[o * inner..(o + 1) * inner];
+            for _ in 0..size {
+                out.extend_from_slice(chunk);
+            }
+        }
+        let mut shape = self.shape.clone();
+        shape.insert(axis, size);
+        Tensor { shape, data: out }
+    }
+
+    /// Slice `axis` to the half-open range [start, stop).
+    pub fn slice_axis(&self, axis: usize, start: usize, stop: usize) -> Tensor {
+        assert!(axis < self.shape.len() && start <= stop && stop <= self.shape[axis]);
+        let outer: usize = self.shape[..axis].iter().product();
+        let mid = self.shape[axis];
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let new_mid = stop - start;
+        let mut out = Vec::with_capacity(outer * new_mid * inner);
+        for o in 0..outer {
+            let base = (o * mid + start) * inner;
+            out.extend_from_slice(&self.data[base..base + new_mid * inner]);
+        }
+        let mut shape = self.shape.clone();
+        shape[axis] = new_mid;
+        Tensor { shape, data: out }
+    }
+
+    /// Zero-pad `axis` with `before` zeros in front and `after` behind.
+    pub fn pad_axis(&self, axis: usize, before: usize, after: usize) -> Tensor {
+        if before == 0 && after == 0 {
+            return self.clone();
+        }
+        let outer: usize = self.shape[..axis].iter().product();
+        let mid = self.shape[axis];
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let new_mid = mid + before + after;
+        let mut out = vec![0.0f32; outer * new_mid * inner];
+        for o in 0..outer {
+            let src = o * mid * inner;
+            let dst = (o * new_mid + before) * inner;
+            out[dst..dst + mid * inner].copy_from_slice(&self.data[src..src + mid * inner]);
+        }
+        let mut shape = self.shape.clone();
+        shape[axis] = new_mid;
+        Tensor { shape, data: out }
+    }
+
+    // ---- elementwise -----------------------------------------------------
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place `self += other` (shapes must match).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// In-place `self *= s`.
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// In-place axpy: `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Maximum absolute element difference to `other`.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in comparison");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 distance ‖a−b‖/(‖b‖+ε).
+    pub fn rel_l2(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let num: f32 = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        let den: f32 = other.data.iter().map(|b| b * b).sum::<f32>().sqrt();
+        num / (den + 1e-12)
+    }
+
+    /// Assert elementwise closeness (for tests).
+    pub fn assert_close(&self, other: &Tensor, tol: f32) {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        let d = self.max_abs_diff(other);
+        assert!(
+            d <= tol,
+            "tensors differ: max |Δ| = {} > tol {} (shape {:?})",
+            d,
+            tol,
+            self.shape
+        );
+    }
+}
+
+/// Iterate all multi-indices of `shape` in row-major order, calling `f`.
+pub fn for_each_index(shape: &[usize], mut f: impl FnMut(&[usize])) {
+    if shape.iter().any(|&d| d == 0) {
+        return;
+    }
+    let mut idx = vec![0usize; shape.len()];
+    loop {
+        f(&idx);
+        // odometer increment
+        let mut ax = shape.len();
+        loop {
+            if ax == 0 {
+                return;
+            }
+            ax -= 1;
+            idx[ax] += 1;
+            if idx[ax] < shape[ax] {
+                break;
+            }
+            idx[ax] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_full() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(Tensor::full(&[2], 3.5).data(), &[3.5, 3.5]);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides_for(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_for(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn index_read_write() {
+        let mut t = Tensor::iota(&[2, 3]);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        t.set(&[0, 1], 9.0);
+        assert_eq!(t.at(&[0, 1]), 9.0);
+    }
+
+    #[test]
+    fn permute_matches_manual() {
+        let t = Tensor::iota(&[2, 3, 4]);
+        let p = t.permute(&[2, 0, 1]);
+        assert_eq!(p.shape(), &[4, 2, 3]);
+        for i in 0..2 {
+            for j in 0..3 {
+                for k in 0..4 {
+                    assert_eq!(p.at(&[k, i, j]), t.at(&[i, j, k]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn permute_identity_is_noop() {
+        let t = Tensor::iota(&[3, 5]);
+        assert_eq!(t.permute(&[0, 1]), t);
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        let t = Tensor::iota(&[2, 3, 4, 5]);
+        let p = t.permute(&[3, 1, 0, 2]);
+        // inverse of [3,1,0,2] is [2,1,3,0]
+        let back = p.permute(&[2, 1, 3, 0]);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::iota(&[2, 6]).reshape(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.at(&[2, 3]), 11.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_wrong_count_panics() {
+        let _ = Tensor::iota(&[2, 3]).reshape(&[4]);
+    }
+
+    #[test]
+    fn sum_axis_matches_manual() {
+        let t = Tensor::iota(&[2, 3]);
+        let s0 = t.sum_axis(0);
+        assert_eq!(s0.shape(), &[3]);
+        assert_eq!(s0.data(), &[3.0, 5.0, 7.0]);
+        let s1 = t.sum_axis(1);
+        assert_eq!(s1.data(), &[3.0, 12.0]);
+    }
+
+    #[test]
+    fn broadcast_axis_repeats() {
+        let t = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = t.broadcast_axis(0, 3);
+        assert_eq!(b.shape(), &[3, 2]);
+        assert_eq!(b.data(), &[1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+        let b2 = t.broadcast_axis(1, 2);
+        assert_eq!(b2.shape(), &[2, 2]);
+        assert_eq!(b2.data(), &[1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn slice_and_pad() {
+        let t = Tensor::iota(&[4, 2]);
+        let s = t.slice_axis(0, 1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
+        let p = s.pad_axis(0, 1, 2);
+        assert_eq!(p.shape(), &[5, 2]);
+        assert_eq!(p.at(&[0, 0]), 0.0);
+        assert_eq!(p.at(&[1, 0]), 2.0);
+        assert_eq!(p.at(&[4, 1]), 0.0);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![0.5, 0.5, 0.5]);
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[1.5, 2.5, 3.5]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data(), &[2.5, 3.5, 4.5]);
+        a.scale(2.0);
+        assert_eq!(a.sum(), 21.0);
+        assert!(a.map(|x| x * 0.0).sum() == 0.0);
+    }
+
+    #[test]
+    fn comparison_helpers() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0, 2.001]);
+        assert!(a.max_abs_diff(&b) < 0.01);
+        assert!(a.rel_l2(&b) < 0.01);
+        a.assert_close(&b, 0.01);
+    }
+
+    #[test]
+    fn for_each_index_visits_all() {
+        let mut count = 0;
+        let mut last = vec![];
+        for_each_index(&[2, 3], |idx| {
+            count += 1;
+            last = idx.to_vec();
+        });
+        assert_eq!(count, 6);
+        assert_eq!(last, vec![1, 2]);
+        // empty dims: no visits
+        let mut n = 0;
+        for_each_index(&[2, 0], |_| n += 1);
+        assert_eq!(n, 0);
+        // scalar: one visit
+        let mut n = 0;
+        for_each_index(&[], |_| n += 1);
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn random_tensors_in_range() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::rand(&[100], -1.0, 1.0, &mut rng);
+        assert!(t.data().iter().all(|&x| (-1.0..1.0).contains(&x)));
+        let n = Tensor::randn(&[100], 0.0, 1.0, &mut rng);
+        assert!(n.data().iter().any(|&x| x.abs() > 0.5));
+    }
+}

@@ -1,0 +1,220 @@
+//! Architecture shape tables for the paper's evaluation workloads:
+//! ResNet-34/ResNet-101 convolution inventories (He et al. 2016, Table 1),
+//! the Conformer convolution module (Gulati et al. 2020) and the two-stream
+//! action-recognition network (Simonyan & Zisserman 2014).
+//!
+//! Only the *convolution layer shapes* matter for reproducing the paper's
+//! FLOPs/runtime/memory results — FLOPs are "purely a function of the
+//! tensor dimensions" (paper §5) — so these tables carry exactly that.
+
+/// One convolutional layer site: kernel `T×S×H×W` applied to a `H'×W'`
+/// feature map, with a repetition count for identical layers in a stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvSite {
+    /// Paper/He-et-al. stage name, e.g. "conv3_x".
+    pub stage: &'static str,
+    /// Output channels.
+    pub t: usize,
+    /// Input channels.
+    pub s: usize,
+    /// Kernel height/width.
+    pub h: usize,
+    pub w: usize,
+    /// Feature-map size the kernel runs over.
+    pub hp: usize,
+    pub wp: usize,
+    /// Number of identical layers at this site.
+    pub count: usize,
+}
+
+impl ConvSite {
+    pub fn kernel_params(&self) -> usize {
+        self.t * self.s * self.h * self.w
+    }
+}
+
+/// ResNet-34 convolution inventory on 224×224 inputs (He et al. Table 1).
+/// Stage rows aggregate the 3×3 convolutions of their basic blocks; the
+/// first conv of each of conv3–conv5 downsamples (stride 2) and maps
+/// S(prev)→T channels — represented as a separate site.
+pub fn resnet34_imagenet() -> Vec<ConvSite> {
+    vec![
+        ConvSite { stage: "conv1", t: 64, s: 3, h: 7, w: 7, hp: 112, wp: 112, count: 1 },
+        // conv2_x: 3 basic blocks × 2 convs, 64→64 on 56×56
+        ConvSite { stage: "conv2_x", t: 64, s: 64, h: 3, w: 3, hp: 56, wp: 56, count: 6 },
+        // conv3_x: 4 blocks × 2 convs at 28×28; first conv is 64→128
+        ConvSite { stage: "conv3_x", t: 128, s: 64, h: 3, w: 3, hp: 28, wp: 28, count: 1 },
+        ConvSite { stage: "conv3_x", t: 128, s: 128, h: 3, w: 3, hp: 28, wp: 28, count: 7 },
+        // conv4_x: 6 blocks × 2 convs at 14×14; first is 128→256
+        ConvSite { stage: "conv4_x", t: 256, s: 128, h: 3, w: 3, hp: 14, wp: 14, count: 1 },
+        ConvSite { stage: "conv4_x", t: 256, s: 256, h: 3, w: 3, hp: 14, wp: 14, count: 11 },
+        // conv5_x: 3 blocks × 2 convs at 7×7; first is 256→512
+        ConvSite { stage: "conv5_x", t: 512, s: 256, h: 3, w: 3, hp: 7, wp: 7, count: 1 },
+        ConvSite { stage: "conv5_x", t: 512, s: 512, h: 3, w: 3, hp: 7, wp: 7, count: 5 },
+    ]
+}
+
+/// ResNet-34 scaled to CIFAR-10's 32×32 inputs (conv1 is 3×3 and no initial
+/// downsampling, the common CIFAR adaptation).
+pub fn resnet34_cifar10() -> Vec<ConvSite> {
+    vec![
+        ConvSite { stage: "conv1", t: 64, s: 3, h: 3, w: 3, hp: 32, wp: 32, count: 1 },
+        ConvSite { stage: "conv2_x", t: 64, s: 64, h: 3, w: 3, hp: 32, wp: 32, count: 6 },
+        ConvSite { stage: "conv3_x", t: 128, s: 64, h: 3, w: 3, hp: 16, wp: 16, count: 1 },
+        ConvSite { stage: "conv3_x", t: 128, s: 128, h: 3, w: 3, hp: 16, wp: 16, count: 7 },
+        ConvSite { stage: "conv4_x", t: 256, s: 128, h: 3, w: 3, hp: 8, wp: 8, count: 1 },
+        ConvSite { stage: "conv4_x", t: 256, s: 256, h: 3, w: 3, hp: 8, wp: 8, count: 11 },
+        ConvSite { stage: "conv5_x", t: 512, s: 256, h: 3, w: 3, hp: 4, wp: 4, count: 1 },
+        ConvSite { stage: "conv5_x", t: 512, s: 512, h: 3, w: 3, hp: 4, wp: 4, count: 5 },
+    ]
+}
+
+/// The 3×3-conv inventory of ResNet-101 bottleneck stages (for the
+/// two-stream video classification streams). Only the 3×3 convs are
+/// tensorized in the paper's VC experiments.
+pub fn resnet101_imagenet() -> Vec<ConvSite> {
+    vec![
+        ConvSite { stage: "conv1", t: 64, s: 3, h: 7, w: 7, hp: 112, wp: 112, count: 1 },
+        ConvSite { stage: "conv2_x", t: 64, s: 64, h: 3, w: 3, hp: 56, wp: 56, count: 3 },
+        ConvSite { stage: "conv3_x", t: 128, s: 128, h: 3, w: 3, hp: 28, wp: 28, count: 4 },
+        ConvSite { stage: "conv4_x", t: 256, s: 256, h: 3, w: 3, hp: 14, wp: 14, count: 23 },
+        ConvSite { stage: "conv5_x", t: 512, s: 512, h: 3, w: 3, hp: 7, wp: 7, count: 3 },
+    ]
+}
+
+/// Conformer convolution module sites (ASR): depthwise + pointwise convs
+/// over time on `d_model` channels and ~T=256-frame features. The paper's
+/// CP-TNN tensorizes the pointwise/depthwise kernels. 1-D convolution is
+/// represented with W'=1, W=1.
+pub fn conformer_conv_modules(d_model: usize, frames: usize, n_blocks: usize) -> Vec<ConvSite> {
+    let mut sites = Vec::new();
+    for _ in 0..n_blocks {
+        // pointwise expansion 1×1 (2× expansion, GLU halves it back)
+        sites.push(ConvSite {
+            stage: "pw_expand",
+            t: 2 * d_model,
+            s: d_model,
+            h: 1,
+            w: 1,
+            hp: frames,
+            wp: 1,
+            count: 1,
+        });
+        // depthwise temporal conv, kernel 31 (represented densely as the
+        // grouped kernel it factorizes from)
+        sites.push(ConvSite {
+            stage: "dw_conv",
+            t: d_model,
+            s: d_model,
+            h: 31,
+            w: 1,
+            hp: frames,
+            wp: 1,
+            count: 1,
+        });
+        // pointwise projection
+        sites.push(ConvSite {
+            stage: "pw_proj",
+            t: d_model,
+            s: d_model,
+            h: 1,
+            w: 1,
+            hp: frames,
+            wp: 1,
+            count: 1,
+        });
+    }
+    sites
+}
+
+/// Spatial stream of the two-stream network: ResNet-101 over RGB frames.
+pub fn two_stream_spatial() -> Vec<ConvSite> {
+    resnet101_imagenet()
+}
+
+/// Temporal stream: ResNet-101 whose conv1 ingests stacked optical flow
+/// (2 channels × 10 frames = 20 input channels).
+pub fn two_stream_temporal() -> Vec<ConvSite> {
+    let mut sites = resnet101_imagenet();
+    sites[0].s = 20;
+    sites
+}
+
+/// Scale a site inventory down by `spatial` (feature map + channel divisor)
+/// for laptop-scale reproduction runs. Kernel sizes are preserved; channels
+/// and feature maps shrink, keeping every site's *structure*.
+pub fn scaled(sites: &[ConvSite], channel_div: usize, spatial_div: usize) -> Vec<ConvSite> {
+    sites
+        .iter()
+        .map(|s| ConvSite {
+            stage: s.stage,
+            t: (s.t / channel_div).max(4),
+            s: if s.s <= 3 { s.s } else { (s.s / channel_div).max(4) },
+            h: s.h,
+            w: s.w,
+            hp: (s.hp / spatial_div).max(s.h),
+            wp: (s.wp / spatial_div).max(s.w),
+            count: s.count,
+        })
+        .collect()
+}
+
+/// The distinct stage names of an inventory, in order.
+pub fn stages(sites: &[ConvSite]) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    for s in sites {
+        if !out.contains(&s.stage) {
+            out.push(s.stage);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet34_layer_counts() {
+        // 1 + 6 + 8 + 12 + 6 = 33 convs (+ the fc makes 34 weight layers).
+        let total: usize = resnet34_imagenet().iter().map(|s| s.count).sum();
+        assert_eq!(total, 33);
+        let total: usize = resnet34_cifar10().iter().map(|s| s.count).sum();
+        assert_eq!(total, 33);
+    }
+
+    #[test]
+    fn resnet34_channel_progression() {
+        let sites = resnet34_imagenet();
+        assert_eq!(sites[0].s, 3);
+        assert_eq!(sites.last().unwrap().t, 512);
+        // feature maps shrink monotonically along stages
+        for w in sites.windows(2) {
+            assert!(w[0].hp >= w[1].hp);
+        }
+    }
+
+    #[test]
+    fn conformer_sites_shape() {
+        let sites = conformer_conv_modules(144, 256, 4);
+        assert_eq!(sites.len(), 12);
+        assert!(sites.iter().all(|s| s.wp == 1 && s.w == 1));
+        assert_eq!(sites[0].t, 288);
+        assert_eq!(sites[1].h, 31);
+    }
+
+    #[test]
+    fn temporal_stream_ingests_flow_stack() {
+        assert_eq!(two_stream_temporal()[0].s, 20);
+        assert_eq!(two_stream_spatial()[0].s, 3);
+    }
+
+    #[test]
+    fn scaled_preserves_structure() {
+        let sites = scaled(&resnet34_imagenet(), 8, 4);
+        assert_eq!(sites.len(), resnet34_imagenet().len());
+        assert!(sites.iter().all(|s| s.h == 3 || s.h == 7));
+        assert!(sites.iter().all(|s| s.hp >= s.h));
+        assert_eq!(stages(&sites).len(), 5);
+    }
+}

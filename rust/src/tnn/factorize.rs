@@ -1,0 +1,108 @@
+//! Channel-mode factorization and compression-rate-driven rank solving.
+
+use super::LayerBuilder;
+
+/// Split `n` into `m` integer factors whose product is exactly `n`, as
+/// balanced as possible: prime factors are assigned largest-first to the
+/// currently-smallest bucket. `balanced_factors(64, 3) = [4, 4, 4]`.
+pub fn balanced_factors(n: usize, m: usize) -> Vec<usize> {
+    assert!(n > 0 && m > 0);
+    if m == 1 {
+        return vec![n];
+    }
+    let mut primes = Vec::new();
+    let mut x = n;
+    let mut d = 2;
+    while d * d <= x {
+        while x % d == 0 {
+            primes.push(d);
+            x /= d;
+        }
+        d += 1;
+    }
+    if x > 1 {
+        primes.push(x);
+    }
+    primes.sort_unstable_by(|a, b| b.cmp(a));
+    let mut buckets = vec![1usize; m];
+    for p in primes {
+        let idx = buckets
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap();
+        buckets[idx] *= p;
+    }
+    buckets.sort_unstable_by(|a, b| b.cmp(a));
+    buckets
+}
+
+/// Solve for the largest rank assignment whose parameter count stays at or
+/// below `target` (the paper's CR mechanism: "trim off the least
+/// significant components, i.e. reduce the rank, until it contains ≤ x% of
+/// the original parameters"). All ranks start equal and the residual budget
+/// is spent greedily one rank at a time.
+pub fn solve_ranks(builder: &LayerBuilder, target: f64) -> Result<Vec<usize>, String> {
+    let n = builder.n_ranks();
+    let cap = builder.rank_cap();
+    let fits = |ranks: &[usize]| (builder.params(ranks) as f64) <= target;
+
+    // Largest equal value by doubling + binary search.
+    let mut lo = 1usize;
+    if !fits(&vec![1; n]) {
+        // Even the minimal layer exceeds the budget — the paper's trimming
+        // bottoms out at rank 1; accept it (CR is then slightly exceeded).
+        return Ok(vec![1; n]);
+    }
+    let mut hi = 2usize;
+    while hi <= cap && fits(&vec![hi; n]) {
+        lo = hi;
+        hi *= 2;
+    }
+    hi = hi.min(cap + 1);
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if fits(&vec![mid; n]) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let mut ranks = vec![lo; n];
+
+    // Greedy refinement: bump individual ranks while budget remains.
+    let mut improved = true;
+    while improved {
+        improved = false;
+        for i in 0..n {
+            if ranks[i] >= cap {
+                continue;
+            }
+            ranks[i] += 1;
+            if fits(&ranks) {
+                improved = true;
+            } else {
+                ranks[i] -= 1;
+            }
+        }
+    }
+    Ok(ranks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_factors_exact_products() {
+        for (n, m) in [(64, 3), (128, 3), (12, 2), (7, 2), (1, 3), (360, 4)] {
+            let f = balanced_factors(n, m);
+            assert_eq!(f.len(), m);
+            assert_eq!(f.iter().product::<usize>(), n, "n={n} m={m} f={f:?}");
+        }
+        assert_eq!(balanced_factors(64, 3), vec![4, 4, 4]);
+        assert_eq!(balanced_factors(512, 3), vec![8, 8, 8]);
+        assert_eq!(balanced_factors(7, 2), vec![7, 1]);
+    }
+}

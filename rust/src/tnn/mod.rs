@@ -1,0 +1,500 @@
+//! The TNN layer zoo (paper §2.3, Appendix A.3): tensorial convolutional
+//! layers built from CP / Tucker / Tensor-Train / Tensor-Ring / Block-Term /
+//! Hierarchical-Tucker factorizations of a `T×S×H×W` convolution kernel,
+//! plus their *reshaped* variants (channel modes split into M factors), and
+//! the compression-rate mechanism that trims ranks until the layer holds
+//! ≤ CR·(original parameters).
+//!
+//! Every layer is just a conv_einsum string over its factor tensors —
+//! [`TnnLayerSpec::expr`] — so it plugs straight into the planner and the
+//! path executor/autodiff.
+
+pub mod arch;
+
+mod factorize;
+
+pub use factorize::{balanced_factors, solve_ranks};
+
+use crate::einsum::{parse, SizedSpec};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Supported tensor decompositions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Decomp {
+    Cp,
+    Tucker,
+    TensorTrain,
+    TensorRing,
+    BlockTerm,
+    HierarchicalTucker,
+}
+
+impl Decomp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Decomp::Cp => "CP",
+            Decomp::Tucker => "TK",
+            Decomp::TensorTrain => "TT",
+            Decomp::TensorRing => "TR",
+            Decomp::BlockTerm => "BT",
+            Decomp::HierarchicalTucker => "HT",
+        }
+    }
+
+    /// All decompositions with both flat and reshaped layer constructions.
+    pub fn all() -> [Decomp; 6] {
+        [
+            Decomp::Cp,
+            Decomp::Tucker,
+            Decomp::TensorTrain,
+            Decomp::TensorRing,
+            Decomp::BlockTerm,
+            Decomp::HierarchicalTucker,
+        ]
+    }
+}
+
+/// A fully-specified tensorial convolutional layer.
+#[derive(Debug, Clone)]
+pub struct TnnLayerSpec {
+    pub decomp: Decomp,
+    /// Channel reshape order; 1 = unreshaped ("flat") variant.
+    pub m: usize,
+    /// Original kernel dims.
+    pub t: usize,
+    pub s: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Channel factorizations (length m; products equal t and s).
+    pub t_factors: Vec<usize>,
+    pub s_factors: Vec<usize>,
+    /// Solved rank values (interpretation depends on the decomposition).
+    pub ranks: Vec<usize>,
+    /// The layer's forward conv_einsum string (batch mode `b` included);
+    /// the input carries the *reshaped* channel modes.
+    pub expr: String,
+    /// Kernel-reconstruction einsum (factors → reshaped kernel, no conv).
+    pub kernel_expr: String,
+    /// Shapes of the factor tensors, in the order they appear in `expr`
+    /// after the input.
+    pub factor_shapes: Vec<Vec<usize>>,
+    /// Total learnable parameters across factors.
+    pub params: usize,
+}
+
+impl TnnLayerSpec {
+    /// Parameters of the original dense kernel this layer replaces.
+    pub fn original_params(&self) -> usize {
+        self.t * self.s * self.h * self.w
+    }
+
+    /// Achieved compression rate (params / original).
+    pub fn achieved_cr(&self) -> f64 {
+        self.params as f64 / self.original_params() as f64
+    }
+
+    /// Shape the layer expects for the (reshaped) input given batch and
+    /// spatial sizes: `[B, S1..SM, H', W']`.
+    pub fn input_shape(&self, batch: usize, hp: usize, wp: usize) -> Vec<usize> {
+        let mut shape = vec![batch];
+        shape.extend(&self.s_factors);
+        shape.push(hp);
+        shape.push(wp);
+        shape
+    }
+
+    /// Output shape `[B, T1..TM, H', W']` (Same padding).
+    pub fn output_shape(&self, batch: usize, hp: usize, wp: usize) -> Vec<usize> {
+        let mut shape = vec![batch];
+        shape.extend(&self.t_factors);
+        shape.push(hp);
+        shape.push(wp);
+        shape
+    }
+
+    /// The dims list for the layer's expression at a given batch/spatial
+    /// size: input dims followed by factor dims.
+    pub fn expr_dims(&self, batch: usize, hp: usize, wp: usize) -> Vec<Vec<usize>> {
+        let mut dims = vec![self.input_shape(batch, hp, wp)];
+        dims.extend(self.factor_shapes.iter().cloned());
+        dims
+    }
+
+    /// Initialize factor tensors. Each factor uses fan-in-scaled normals so
+    /// the reconstructed kernel has roughly He-init variance.
+    pub fn init_factors(&self, rng: &mut Rng) -> Vec<Tensor> {
+        let n_factors = self.factor_shapes.len() as f64;
+        // Aim for per-element kernel std ≈ sqrt(2 / (S·H·W)); each factor
+        // contributes multiplicatively, so take the 1/n-th root heuristic.
+        let kernel_std = (2.0 / (self.s * self.h * self.w) as f64).sqrt();
+        // The reconstruction sums over rank components; normalize by the
+        // total rank product to keep variance bounded.
+        let rank_prod: f64 = self.ranks.iter().map(|&r| r as f64).product::<f64>().max(1.0);
+        let per_factor = (kernel_std / rank_prod.sqrt()).powf(1.0 / n_factors);
+        self.factor_shapes
+            .iter()
+            .map(|shape| Tensor::randn(shape, 0.0, per_factor as f32, rng))
+            .collect()
+    }
+
+    /// Reconstruct the full (reshaped) kernel from factors, then reshape to
+    /// the dense `[T, S, H, W]` kernel. Ground truth for equivalence tests.
+    pub fn reconstruct_kernel(&self, factors: &[Tensor]) -> Tensor {
+        let refs: Vec<&Tensor> = factors.iter().collect();
+        let k = crate::exec::conv_einsum(&self.kernel_expr, &refs)
+            .expect("kernel reconstruction must evaluate");
+        // kernel_expr output modes: (t1..tM)(s1..sM)hw
+        k.reshape(&[self.t, self.s, self.h, self.w])
+    }
+}
+
+/// Build a tensorial layer for kernel `T×S×H×W` under `decomp`, reshape
+/// order `m` (1 = flat), targeting compression rate `cr` ∈ (0, 1].
+pub fn build_layer(
+    decomp: Decomp,
+    m: usize,
+    t: usize,
+    s: usize,
+    h: usize,
+    w: usize,
+    cr: f64,
+) -> Result<TnnLayerSpec, String> {
+    if m == 0 {
+        return Err("reshape order m must be ≥ 1".into());
+    }
+    if decomp == Decomp::HierarchicalTucker && m < 2 {
+        return Err("hierarchical Tucker requires a reshaped kernel (m ≥ 2)".into());
+    }
+    if !(0.0..=1.0).contains(&cr) || cr == 0.0 {
+        return Err(format!("compression rate {} outside (0,1]", cr));
+    }
+    let t_factors = balanced_factors(t, m);
+    let s_factors = balanced_factors(s, m);
+    let target = (cr * (t * s * h * w) as f64).ceil().max(1.0);
+
+    let builder = LayerBuilder {
+        decomp,
+        m,
+        t,
+        s,
+        h,
+        w,
+        t_factors: t_factors.clone(),
+        s_factors: s_factors.clone(),
+    };
+    let ranks = solve_ranks(&builder, target)?;
+    let (expr, kernel_expr, factor_shapes) = builder.strings_and_shapes(&ranks);
+    let params = factor_shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+
+    // Sanity: the expression must parse and size correctly.
+    let spec = parse(&expr).map_err(|e| e.to_string())?;
+    let dims = {
+        let mut d = vec![{
+            let mut v = vec![2];
+            v.extend(&s_factors);
+            v.push(h.max(2) * 2);
+            v.push(w.max(2) * 2);
+            v
+        }];
+        d.extend(factor_shapes.iter().cloned());
+        d
+    };
+    SizedSpec::new(spec, dims)?;
+
+    Ok(TnnLayerSpec {
+        decomp,
+        m,
+        t,
+        s,
+        h,
+        w,
+        t_factors,
+        s_factors,
+        ranks,
+        expr,
+        kernel_expr,
+        factor_shapes,
+        params,
+    })
+}
+
+/// Internal: generates strings + shapes per decomposition given ranks.
+pub(crate) struct LayerBuilder {
+    pub decomp: Decomp,
+    pub m: usize,
+    pub t: usize,
+    pub s: usize,
+    pub h: usize,
+    pub w: usize,
+    pub t_factors: Vec<usize>,
+    pub s_factors: Vec<usize>,
+}
+
+impl LayerBuilder {
+    /// Number of independent rank variables for this decomposition/reshape.
+    pub fn n_ranks(&self) -> usize {
+        let m = self.m;
+        match (self.decomp, m) {
+            (Decomp::Cp, _) => 1,
+            (Decomp::Tucker, 1) => 2,        // (r1)t, (r2)s, core
+            (Decomp::Tucker, _) => m + 1,    // r0..rm
+            (Decomp::TensorTrain, 1) => 3,   // r1,r2,r3
+            (Decomp::TensorTrain, _) => m,   // r1..rm (rM feeds W0)
+            (Decomp::TensorRing, 1) => 4,    // r0..r3
+            (Decomp::TensorRing, _) => m + 1, // r0..rm
+            (Decomp::BlockTerm, _) => m + 2, // r, r0..rm
+            (Decomp::HierarchicalTucker, _) => {
+                // leaf ranks r0..rm plus internal ranks: a binary tree over
+                // (m+1) leaves has m-1 internal edges (root excluded).
+                (m + 1) + (m - 1).max(1)
+            }
+        }
+    }
+
+    /// Max sensible value per rank position (used by the solver as an upper
+    /// bound; CP-style ranks can exceed min dims so give them headroom).
+    pub fn rank_cap(&self) -> usize {
+        let full = self.t * self.s * self.h * self.w;
+        full.min(4096)
+    }
+
+    /// Parameter count for a rank assignment.
+    pub fn params(&self, ranks: &[usize]) -> usize {
+        let (_, _, shapes) = self.strings_and_shapes(ranks);
+        shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// (layer expr, kernel reconstruction expr, factor shapes).
+    pub fn strings_and_shapes(&self, ranks: &[usize]) -> (String, String, Vec<Vec<usize>>) {
+        let m = self.m;
+        let (t, s, h, w) = (self.t, self.s, self.h, self.w);
+        let tf = &self.t_factors;
+        let sf = &self.s_factors;
+
+        // Subscript fragments for channel modes.
+        let smodes: String = (1..=m).map(|i| format!("(s{i})")).collect();
+        let tmodes: String = (1..=m).map(|i| format!("(t{i})")).collect();
+        let x_sub = format!("b{smodes}hw");
+        let out_sub = format!("b{tmodes}hw");
+
+        match (self.decomp, m) {
+            // ---- CP ------------------------------------------------------
+            (Decomp::Cp, 1) => {
+                let r = ranks[0];
+                (
+                    "bshw,rt,rs,rh,rw->bthw|hw".into(),
+                    "rt,rs,rh,rw->tshw".into(),
+                    vec![vec![r, t], vec![r, s], vec![r, h], vec![r, w]],
+                )
+            }
+            (Decomp::Cp, _) => {
+                let r = ranks[0];
+                let mut lhs = vec![x_sub.clone()];
+                let mut klhs = Vec::new();
+                let mut shapes = Vec::new();
+                for i in 1..=m {
+                    lhs.push(format!("r(t{i})(s{i})"));
+                    klhs.push(format!("r(t{i})(s{i})"));
+                    shapes.push(vec![r, tf[i - 1], sf[i - 1]]);
+                }
+                lhs.push("rhw".into());
+                klhs.push("rhw".into());
+                shapes.push(vec![r, h, w]);
+                (
+                    format!("{}->{}|hw", lhs.join(","), out_sub),
+                    format!("{}->{}{}hw", klhs.join(","), tmodes, smodes),
+                    shapes,
+                )
+            }
+            // ---- Tucker --------------------------------------------------
+            (Decomp::Tucker, 1) => {
+                let (r1, r2) = (ranks[0], ranks[1]);
+                (
+                    "bshw,(r1)t,(r2)s,(r1)(r2)hw->bthw|hw".into(),
+                    "(r1)t,(r2)s,(r1)(r2)hw->tshw".into(),
+                    vec![vec![r1, t], vec![r2, s], vec![r1, r2, h, w]],
+                )
+            }
+            (Decomp::Tucker, _) => {
+                // ranks = [r0, r1..rm]; core C ∈ R^{r0×r1×…×rm}, W0 ∈ R^{r0×h×w}
+                let r0 = ranks[0];
+                let mut lhs = vec![x_sub.clone()];
+                let mut klhs = Vec::new();
+                let mut shapes = Vec::new();
+                for i in 1..=m {
+                    lhs.push(format!("(r{i})(t{i})(s{i})"));
+                    klhs.push(format!("(r{i})(t{i})(s{i})"));
+                    shapes.push(vec![ranks[i], tf[i - 1], sf[i - 1]]);
+                }
+                lhs.push("(r0)hw".into());
+                klhs.push("(r0)hw".into());
+                shapes.push(vec![r0, h, w]);
+                let core_modes: String = (0..=m).map(|i| format!("(r{i})")).collect();
+                lhs.push(core_modes.clone());
+                klhs.push(core_modes);
+                shapes.push(ranks.to_vec());
+                (
+                    format!("{}->{}|hw", lhs.join(","), out_sub),
+                    format!("{}->{}{}hw", klhs.join(","), tmodes, smodes),
+                    shapes,
+                )
+            }
+            // ---- Tensor-Train ---------------------------------------------
+            (Decomp::TensorTrain, 1) => {
+                let (r1, r2, r3) = (ranks[0], ranks[1], ranks[2]);
+                (
+                    "bshw,(r1)t,(r1)(r2)h,(r2)(r3)w,(r3)s->bthw|hw".into(),
+                    "(r1)t,(r1)(r2)h,(r2)(r3)w,(r3)s->tshw".into(),
+                    vec![
+                        vec![r1, t],
+                        vec![r1, r2, h],
+                        vec![r2, r3, w],
+                        vec![r3, s],
+                    ],
+                )
+            }
+            (Decomp::TensorTrain, _) => {
+                // ranks = [r1..rm]; cores: (r1 t1 s1), (r(i-1) r(i) t(i) s(i)), (rm h w)
+                let mut lhs = vec![x_sub.clone()];
+                let mut klhs = Vec::new();
+                let mut shapes = Vec::new();
+                lhs.push("(r1)(t1)(s1)".into());
+                klhs.push("(r1)(t1)(s1)".into());
+                shapes.push(vec![ranks[0], tf[0], sf[0]]);
+                for i in 2..=m {
+                    lhs.push(format!("(r{})(r{})(t{})(s{})", i - 1, i, i, i));
+                    klhs.push(format!("(r{})(r{})(t{})(s{})", i - 1, i, i, i));
+                    shapes.push(vec![ranks[i - 2], ranks[i - 1], tf[i - 1], sf[i - 1]]);
+                }
+                lhs.push(format!("(r{m})hw"));
+                klhs.push(format!("(r{m})hw"));
+                shapes.push(vec![ranks[m - 1], h, w]);
+                (
+                    format!("{}->{}|hw", lhs.join(","), out_sub),
+                    format!("{}->{}{}hw", klhs.join(","), tmodes, smodes),
+                    shapes,
+                )
+            }
+            // ---- Tensor-Ring ---------------------------------------------
+            (Decomp::TensorRing, 1) => {
+                let (r0, r1, r2, r3) = (ranks[0], ranks[1], ranks[2], ranks[3]);
+                (
+                    "bshw,(r0)(r1)t,(r1)(r2)h,(r2)(r3)w,(r3)(r0)s->bthw|hw".into(),
+                    "(r0)(r1)t,(r1)(r2)h,(r2)(r3)w,(r3)(r0)s->tshw".into(),
+                    vec![
+                        vec![r0, r1, t],
+                        vec![r1, r2, h],
+                        vec![r2, r3, w],
+                        vec![r3, r0, s],
+                    ],
+                )
+            }
+            (Decomp::TensorRing, _) => {
+                // ranks = [r0..rm]; cores (r(i-1) r(i) t(i) s(i)), W0 (rm r0 h w)
+                let mut lhs = vec![x_sub.clone()];
+                let mut klhs = Vec::new();
+                let mut shapes = Vec::new();
+                for i in 1..=m {
+                    lhs.push(format!("(r{})(r{})(t{})(s{})", i - 1, i, i, i));
+                    klhs.push(format!("(r{})(r{})(t{})(s{})", i - 1, i, i, i));
+                    shapes.push(vec![ranks[i - 1], ranks[i], tf[i - 1], sf[i - 1]]);
+                }
+                lhs.push(format!("(r{m})(r0)hw"));
+                klhs.push(format!("(r{m})(r0)hw"));
+                shapes.push(vec![ranks[m], ranks[0], h, w]);
+                (
+                    format!("{}->{}|hw", lhs.join(","), out_sub),
+                    format!("{}->{}{}hw", klhs.join(","), tmodes, smodes),
+                    shapes,
+                )
+            }
+            // ---- Block-Term -----------------------------------------------
+            (Decomp::BlockTerm, _) => {
+                // ranks = [r, r0, r1..rm]
+                let r = ranks[0];
+                let r0 = ranks[1];
+                let mut lhs = vec![x_sub.clone()];
+                let mut klhs = Vec::new();
+                let mut shapes = Vec::new();
+                for i in 1..=m {
+                    lhs.push(format!("r(r{i})(t{i})(s{i})"));
+                    klhs.push(format!("r(r{i})(t{i})(s{i})"));
+                    shapes.push(vec![r, ranks[i + 1], tf[i - 1], sf[i - 1]]);
+                }
+                lhs.push("r(r0)hw".into());
+                klhs.push("r(r0)hw".into());
+                shapes.push(vec![r, r0, h, w]);
+                let core: String =
+                    format!("r{}(r0)", (1..=m).map(|i| format!("(r{i})")).collect::<String>());
+                lhs.push(core.clone());
+                klhs.push(core);
+                {
+                    let mut c = vec![r];
+                    c.extend(&ranks[2..]);
+                    c.push(r0);
+                    shapes.push(c);
+                }
+                (
+                    format!("{}->{}|hw", lhs.join(","), out_sub),
+                    format!("{}->{}{}hw", klhs.join(","), tmodes, smodes),
+                    shapes,
+                )
+            }
+            // ---- Hierarchical Tucker (paper's M=3 topology, generalized
+            //      as a caterpillar tree for other M) --------------------------
+            (Decomp::HierarchicalTucker, _) => {
+                // ranks = [r0, r1..rm, internal ranks i1..i(m-1)]
+                let r0 = ranks[0];
+                let mut lhs = vec![x_sub.clone()];
+                let mut klhs = Vec::new();
+                let mut shapes = Vec::new();
+                for i in 1..=m {
+                    lhs.push(format!("(r{i})(t{i})(s{i})"));
+                    klhs.push(format!("(r{i})(t{i})(s{i})"));
+                    shapes.push(vec![ranks[i], tf[i - 1], sf[i - 1]]);
+                }
+                lhs.push("(r0)hw".into());
+                klhs.push("(r0)hw".into());
+                shapes.push(vec![r0, h, w]);
+                // Internal nodes: pair (r1,r2)→u1, (u_{k},r_{k+2})→u_{k+1},
+                // last internal pairs with r0 at the root matrix.
+                let n_internal = (m - 1).max(1);
+                let int_ranks = &ranks[m + 1..];
+                // C1 couples r1,r2 → u1
+                lhs.push("(r1)(r2)(u1)".into());
+                klhs.push("(r1)(r2)(u1)".into());
+                shapes.push(vec![ranks[1], ranks[2], int_ranks[0]]);
+                for k in 2..n_internal {
+                    lhs.push(format!("(u{})(r{})(u{})", k - 1, k + 1, k));
+                    klhs.push(format!("(u{})(r{})(u{})", k - 1, k + 1, k));
+                    shapes.push(vec![int_ranks[k - 2], ranks[k + 1], int_ranks[k - 1]]);
+                }
+                // Root couples the last internal with the remaining leaf(s):
+                if m >= 3 {
+                    // C2: (r3)(r0)(u2)-style: couple leaf m and r0
+                    lhs.push(format!("(r{m})(r0)(u{})", n_internal));
+                    klhs.push(format!("(r{m})(r0)(u{})", n_internal));
+                    shapes.push(vec![ranks[m], r0, int_ranks[n_internal - 1]]);
+                    // C3: root matrix over the two internal edges
+                    lhs.push(format!("(u1)(u{})", n_internal));
+                    klhs.push(format!("(u1)(u{})", n_internal));
+                    shapes.push(vec![int_ranks[0], int_ranks[n_internal - 1]]);
+                } else {
+                    // m == 2: root couples u1 with r0 directly.
+                    lhs.push("(u1)(r0)".into());
+                    klhs.push("(u1)(r0)".into());
+                    shapes.push(vec![int_ranks[0], r0]);
+                }
+                (
+                    format!("{}->{}|hw", lhs.join(","), out_sub),
+                    format!("{}->{}{}hw", klhs.join(","), tmodes, smodes),
+                    shapes,
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,212 @@
+//! TNN zoo tests. The central invariant: **a tensorial layer computes
+//! exactly the standard convolution with its reconstructed kernel** —
+//! `layer(X, factors...) == conv2d(X, reconstruct(factors))` — for every
+//! decomposition, flat and reshaped. Plus rank/CR accounting and planning
+//! sanity for every layer string.
+
+use super::*;
+use crate::exec::{conv_einsum, conv_einsum_ltr};
+use crate::planner::{contract_path, PlanOptions};
+use crate::util::prop;
+use crate::util::rng::Rng;
+
+/// Run the layer via its conv_einsum string and via dense reconstruction;
+/// they must agree.
+fn check_equivalence(layer: &TnnLayerSpec, batch: usize, hp: usize, wp: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let factors = layer.init_factors(&mut rng);
+    let x = Tensor::rand(&layer.input_shape(batch, hp, wp), -1.0, 1.0, &mut rng);
+
+    let mut inputs: Vec<&Tensor> = vec![&x];
+    inputs.extend(factors.iter());
+    let y = conv_einsum(&layer.expr, &inputs).expect("layer must evaluate");
+    assert_eq!(y.shape(), &layer.output_shape(batch, hp, wp)[..]);
+
+    // Dense path: reconstruct kernel, flatten channels, standard conv.
+    let kernel = layer.reconstruct_kernel(&factors);
+    let x_flat = x.clone().reshape(&[batch, layer.s, hp, wp]);
+    let y_dense = conv_einsum("bshw,tshw->bthw|hw", &[&x_flat, &kernel]).unwrap();
+    let y_flat = y.clone().reshape(&[batch, layer.t, hp, wp]);
+    let scale = y_dense.data().iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+    assert!(
+        y_flat.max_abs_diff(&y_dense) <= 1e-3 * (1.0 + scale),
+        "{:?} m={} layer != dense conv (Δ={})",
+        layer.decomp,
+        layer.m,
+        y_flat.max_abs_diff(&y_dense)
+    );
+}
+
+#[test]
+fn flat_layers_equal_dense_conv() {
+    for decomp in [Decomp::Cp, Decomp::Tucker, Decomp::TensorTrain, Decomp::TensorRing] {
+        let layer = build_layer(decomp, 1, 6, 4, 3, 3, 1.0).unwrap();
+        check_equivalence(&layer, 2, 8, 8, 42);
+    }
+}
+
+#[test]
+fn reshaped_layers_equal_dense_conv() {
+    for decomp in Decomp::all() {
+        let layer = build_layer(decomp, 2, 6, 4, 3, 3, 1.0).unwrap();
+        check_equivalence(&layer, 2, 7, 7, 43);
+    }
+}
+
+#[test]
+fn reshaped_m3_layers_equal_dense_conv() {
+    for decomp in Decomp::all() {
+        let layer = build_layer(decomp, 3, 8, 8, 3, 3, 1.0).unwrap();
+        check_equivalence(&layer, 1, 6, 6, 44);
+    }
+}
+
+#[test]
+fn layer_strings_match_paper_forms() {
+    // §2.3 (1): CP convolutional layer.
+    let cp = build_layer(Decomp::Cp, 1, 16, 8, 3, 3, 0.5).unwrap();
+    assert_eq!(cp.expr, "bshw,rt,rs,rh,rw->bthw|hw");
+    assert_eq!(cp.kernel_expr, "rt,rs,rh,rw->tshw");
+    // §2.3 (2): reshaped CP, M=3.
+    let rcp = build_layer(Decomp::Cp, 3, 64, 64, 3, 3, 0.5).unwrap();
+    assert_eq!(
+        rcp.expr,
+        "b(s1)(s2)(s3)hw,r(t1)(s1),r(t2)(s2),r(t3)(s3),rhw->b(t1)(t2)(t3)hw|hw"
+    );
+    // Appendix A.3 (2a): Tucker layer.
+    let tk = build_layer(Decomp::Tucker, 1, 16, 8, 3, 3, 0.5).unwrap();
+    assert_eq!(tk.expr, "bshw,(r1)t,(r2)s,(r1)(r2)hw->bthw|hw");
+    // Appendix A.3 (3a): TT layer.
+    let tt = build_layer(Decomp::TensorTrain, 1, 16, 8, 3, 3, 0.5).unwrap();
+    assert_eq!(tt.expr, "bshw,(r1)t,(r1)(r2)h,(r2)(r3)w,(r3)s->bthw|hw");
+    // Appendix A.3 (4a): TR layer.
+    let tr = build_layer(Decomp::TensorRing, 1, 16, 8, 3, 3, 0.5).unwrap();
+    assert_eq!(
+        tr.expr,
+        "bshw,(r0)(r1)t,(r1)(r2)h,(r2)(r3)w,(r3)(r0)s->bthw|hw"
+    );
+    // Appendix A.3 HT (M=3) has the C1/C2/C3 coupling structure.
+    let ht = build_layer(Decomp::HierarchicalTucker, 3, 8, 8, 3, 3, 1.0).unwrap();
+    assert!(ht.expr.contains("(r1)(r2)(u1)"));
+    assert!(ht.expr.contains("(r3)(r0)(u2)"));
+    assert!(ht.expr.contains("(u1)(u2)"));
+}
+
+#[test]
+fn compression_rate_respected() {
+    for decomp in Decomp::all() {
+        for cr in [0.05, 0.1, 0.2, 0.5, 1.0] {
+            let layer = build_layer(decomp, 3, 64, 64, 3, 3, cr).unwrap();
+            let achieved = layer.achieved_cr();
+            // Rank-1 floors can exceed tiny budgets; otherwise must fit.
+            if layer.ranks.iter().any(|&r| r > 1) {
+                assert!(
+                    achieved <= cr * 1.001,
+                    "{} m=3 cr={}: achieved {} params {}",
+                    decomp.name(),
+                    cr,
+                    achieved,
+                    layer.params
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn higher_cr_gives_more_params() {
+    for decomp in Decomp::all() {
+        let small = build_layer(decomp, 3, 64, 64, 3, 3, 0.05).unwrap();
+        let large = build_layer(decomp, 3, 64, 64, 3, 3, 0.8).unwrap();
+        assert!(
+            large.params >= small.params,
+            "{}: {} < {}",
+            decomp.name(),
+            large.params,
+            small.params
+        );
+    }
+}
+
+#[test]
+fn rank_solver_uses_budget() {
+    // At CR=1.0 a CP layer should reach a healthy fraction of the budget.
+    let layer = build_layer(Decomp::Cp, 3, 64, 64, 3, 3, 1.0).unwrap();
+    assert!(layer.achieved_cr() > 0.8, "only used {}", layer.achieved_cr());
+}
+
+#[test]
+fn layer_exprs_plan_and_beat_naive() {
+    // Every zoo member must plan, and (at paper-like shapes with H'≫H)
+    // the optimal path must be at least as cheap as naive — strictly
+    // cheaper for the CP/Tucker families (Theorems 1–2).
+    for decomp in Decomp::all() {
+        let layer = build_layer(decomp, 3, 32, 32, 3, 3, 0.5).unwrap();
+        let dims = layer.expr_dims(8, 32, 32);
+        let plan = contract_path(&layer.expr, &dims, &PlanOptions::default()).unwrap();
+        assert!(
+            plan.cost <= plan.naive_cost,
+            "{}: opt {} > naive {}",
+            decomp.name(),
+            plan.cost,
+            plan.naive_cost
+        );
+    }
+    for decomp in [Decomp::Cp, Decomp::Tucker] {
+        let layer = build_layer(decomp, 3, 32, 32, 3, 3, 0.5).unwrap();
+        let dims = layer.expr_dims(8, 32, 32);
+        let plan = contract_path(&layer.expr, &dims, &PlanOptions::default()).unwrap();
+        assert!(
+            plan.cost < plan.naive_cost,
+            "{}: no strict improvement",
+            decomp.name()
+        );
+    }
+}
+
+#[test]
+fn optimal_and_ltr_agree_numerically_on_layers() {
+    for decomp in [Decomp::Cp, Decomp::Tucker, Decomp::TensorTrain] {
+        let layer = build_layer(decomp, 2, 4, 4, 3, 3, 1.0).unwrap();
+        let mut rng = Rng::new(7);
+        let factors = layer.init_factors(&mut rng);
+        let x = Tensor::rand(&layer.input_shape(1, 6, 6), -1.0, 1.0, &mut rng);
+        let mut inputs: Vec<&Tensor> = vec![&x];
+        inputs.extend(factors.iter());
+        let a = conv_einsum(&layer.expr, &inputs).unwrap();
+        let b = conv_einsum_ltr(&layer.expr, &inputs).unwrap();
+        a.assert_close(&b, 1e-3);
+    }
+}
+
+#[test]
+fn ht_requires_reshaping() {
+    assert!(build_layer(Decomp::HierarchicalTucker, 1, 8, 8, 3, 3, 0.5).is_err());
+}
+
+#[test]
+fn invalid_args_rejected() {
+    assert!(build_layer(Decomp::Cp, 0, 8, 8, 3, 3, 0.5).is_err());
+    assert!(build_layer(Decomp::Cp, 1, 8, 8, 3, 3, 0.0).is_err());
+    assert!(build_layer(Decomp::Cp, 1, 8, 8, 3, 3, 1.5).is_err());
+}
+
+#[test]
+fn property_zoo_equivalence_random_shapes() {
+    prop::check("tnn-zoo-equivalence", 12, |g| {
+        let decomp = *g.pick(&[
+            Decomp::Cp,
+            Decomp::Tucker,
+            Decomp::TensorTrain,
+            Decomp::TensorRing,
+            Decomp::BlockTerm,
+        ]);
+        let m = g.usize_in(1, 2);
+        let m = if decomp == Decomp::HierarchicalTucker { 2 } else { m };
+        let t = 2 * g.usize_in(1, 3);
+        let s = 2 * g.usize_in(1, 3);
+        let k = 2 * g.usize_in(0, 1) + 1; // 1 or 3
+        let layer = build_layer(decomp, m, t, s, k, k, 1.0).unwrap();
+        check_equivalence(&layer, 1, 5, 5, 0xfeed ^ (t * 31 + s) as u64);
+    });
+}

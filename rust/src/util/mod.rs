@@ -1,0 +1,74 @@
+//! Offline substitutes for common ecosystem crates (see DESIGN.md §5):
+//! a mini JSON encoder/parser ([`json`]), a deterministic RNG ([`rng`]),
+//! a small property-testing harness ([`prop`]) and timing helpers
+//! ([`timing`]).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timing;
+
+/// Product of a slice of dimension sizes, as f64 (cost-model friendly —
+/// matches opt-einsum which also reports FLOP counts as floats).
+pub fn prod_f64(dims: &[usize]) -> f64 {
+    dims.iter().map(|&d| d as f64).product()
+}
+
+/// Product of a slice of dimension sizes, as usize (element counts).
+pub fn prod(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Human-readable engineering formatting for FLOP counts: `4.212e+05` style,
+/// mirroring opt-einsum's `contract_path` report (paper Fig. 1b).
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0.000e+00".to_string();
+    }
+    let exp = x.abs().log10().floor() as i32;
+    let mant = x / 10f64.powi(exp);
+    let sign = if exp < 0 { '-' } else { '+' };
+    format!("{:.3}e{}{:02}", mant, sign, exp.abs())
+}
+
+/// Format a byte count as a human-readable string.
+pub fn human_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", b, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prod_basics() {
+        assert_eq!(prod(&[2, 3, 4]), 24);
+        assert_eq!(prod(&[]), 1);
+        assert_eq!(prod_f64(&[10, 10]), 100.0);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(12), "12 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(sci(421200.0), "4.212e+05");
+        assert_eq!(sci(0.0), "0.000e+00");
+        assert_eq!(sci(0.00321), "3.210e-03");
+    }
+}

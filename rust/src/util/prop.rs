@@ -1,0 +1,226 @@
+//! A miniature property-testing harness (substitute for `proptest`, which is
+//! unavailable offline). Supports seeded case generation and greedy input
+//! shrinking on failure.
+//!
+//! Usage:
+//! ```
+//! use conv_einsum::util::prop::{check, Gen};
+//! check("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.usize_in(0, 100);
+//!     let b = g.usize_in(0, 100);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generation context handed to a property closure. Records the *choices*
+/// made so failing cases can be shrunk by replaying with smaller choices.
+pub struct Gen {
+    rng: Rng,
+    /// When replaying a shrunk case, choices are served from here.
+    replay: Option<Vec<u64>>,
+    replay_pos: usize,
+    /// Choices made during this run (each paired with its modulus).
+    pub trace: Vec<(u64, u64)>,
+}
+
+impl Gen {
+    fn fresh(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            replay: None,
+            replay_pos: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    fn replaying(choices: Vec<u64>) -> Gen {
+        Gen {
+            rng: Rng::new(0),
+            replay: Some(choices),
+            replay_pos: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Core choice primitive: uniform u64 in [0, modulus).
+    fn choice(&mut self, modulus: u64) -> u64 {
+        debug_assert!(modulus > 0);
+        let v = match &self.replay {
+            Some(tape) => {
+                let raw = tape.get(self.replay_pos).copied().unwrap_or(0);
+                self.replay_pos += 1;
+                raw % modulus
+            }
+            None => self.rng.next_u64() % modulus,
+        };
+        self.trace.push((v, modulus));
+        v
+    }
+
+    /// usize uniform in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.choice((hi - lo + 1) as u64) as usize
+    }
+
+    /// f32 uniform in [lo, hi), quantized to 2^20 steps so shrinking is
+    /// meaningful.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let q = self.choice(1 << 20) as f32 / (1u64 << 20) as f32;
+        lo + (hi - lo) * q
+    }
+
+    /// Bernoulli(1/2).
+    pub fn bool(&mut self) -> bool {
+        self.choice(2) == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// Vec of f32 samples in [lo, hi).
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// A tensor shape: `rank` dims each in [1, max_dim].
+    pub fn shape(&mut self, rank: usize, max_dim: usize) -> Vec<usize> {
+        (0..rank).map(|_| self.usize_in(1, max_dim)).collect()
+    }
+}
+
+/// Result of a property check.
+pub struct PropResult {
+    pub cases: usize,
+    pub shrinks: usize,
+}
+
+/// Run `cases` random cases of `prop`. On a panic inside `prop`, greedily
+/// shrink the choice tape (halving each choice toward 0) and re-panic with
+/// the minimal failing seed/tape information.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: usize,
+    prop: F,
+) -> PropResult {
+    check_seeded(name, 0xC0FFEE ^ fxhash(name), cases, prop)
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// As [`check`] but with an explicit base seed.
+pub fn check_seeded<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    prop: F,
+) -> PropResult {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::fresh(case_seed);
+        let outcome = run_one(&prop, &mut g);
+        if let Err(panic_msg) = outcome {
+            // Shrink: repeatedly try halving each choice.
+            let mut tape: Vec<u64> = g.trace.iter().map(|&(v, _)| v).collect();
+            let mut shrinks = 0;
+            let mut improved = true;
+            while improved && shrinks < 2000 {
+                improved = false;
+                for i in 0..tape.len() {
+                    if tape[i] == 0 {
+                        continue;
+                    }
+                    for candidate in [0, tape[i] / 2, tape[i].saturating_sub(1)] {
+                        if candidate >= tape[i] {
+                            continue;
+                        }
+                        let mut t2 = tape.clone();
+                        t2[i] = candidate;
+                        let mut g2 = Gen::replaying(t2.clone());
+                        if run_one(&prop, &mut g2).is_err() {
+                            tape = t2;
+                            shrinks += 1;
+                            improved = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            // Reproduce the minimal case to extract its message.
+            let mut gmin = Gen::replaying(tape.clone());
+            let min_msg = run_one(&prop, &mut gmin)
+                .err()
+                .unwrap_or_else(|| panic_msg.clone());
+            panic!(
+                "property '{}' failed (case {} of {}, seed {:#x}, {} shrinks)\nminimal tape: {:?}\nfailure: {}",
+                name, case, cases, case_seed, shrinks, tape, min_msg
+            );
+        }
+    }
+    PropResult { cases, shrinks: 0 }
+}
+
+fn run_one<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    prop: &F,
+    g: &mut Gen,
+) -> Result<(), String> {
+    // Silence the default panic hook while probing.
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(g)));
+    std::panic::set_hook(prev);
+    match res {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let msg = if let Some(s) = e.downcast_ref::<&str>() {
+                s.to_string()
+            } else if let Some(s) = e.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "<non-string panic>".to_string()
+            };
+            Err(msg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let r = check("add-commutes", 50, |g| {
+            let a = g.usize_in(0, 1000);
+            let b = g.usize_in(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+        assert_eq!(r.cases, 50);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check_seeded("find-42", 99, 500, |g| {
+                let x = g.usize_in(0, 100);
+                assert!(x < 42, "x too big: {x}");
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        // Greedy shrink should land exactly on the boundary, 42.
+        assert!(msg.contains("x too big: 42"), "got: {msg}");
+    }
+}

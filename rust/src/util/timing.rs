@@ -1,0 +1,160 @@
+//! Self-timing bench helpers (substitute for criterion, unavailable
+//! offline): warmup + median-of-K measurement, simple stats, and a tiny
+//! wall-clock stopwatch used by the coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+/// Measurement summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Sample {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} median {:>12?}  mean {:>12?}  min {:>12?}  max {:>12?}  (n={})",
+            self.name, self.median, self.mean, self.min, self.max, self.iters
+        )
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` with `warmup` unmeasured iterations then `iters` measured ones;
+/// return median/mean/min/max. `f` should do one unit of work per call.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / iters as u32;
+    Sample {
+        name: name.to_string(),
+        iters,
+        median,
+        mean,
+        min: times[0],
+        max: times[times.len() - 1],
+    }
+}
+
+/// Time a single invocation (for long-running "epoch"-scale workloads where
+/// repeated measurement is impractical).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// A lightweight online histogram for latency metrics: power-of-two bucket
+/// boundaries in microseconds.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHisto {
+    buckets: [u64; 24], // 1us .. ~8.3s
+    count: u64,
+    total_us: u64,
+    max_us: u64,
+}
+
+impl LatencyHisto {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(self.buckets.len()) - 1;
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.total_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate percentile from bucket midpoints, p in [0,100].
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // midpoint of bucket [2^i, 2^(i+1))
+                return (1u64 << i) as f64 * 1.5;
+            }
+        }
+        self.max_us as f64
+    }
+
+    pub fn merge(&mut self, other: &LatencyHisto) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.total_us += other.total_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0usize;
+        let s = bench("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(s.iters, 10);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn histo_percentiles_monotone() {
+        let mut h = LatencyHisto::default();
+        for us in [1u64, 10, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.percentile_us(50.0) <= h.percentile_us(99.0));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn histo_merge_adds_counts() {
+        let mut a = LatencyHisto::default();
+        let mut b = LatencyHisto::default();
+        a.record(Duration::from_micros(5));
+        b.record(Duration::from_micros(500));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+}

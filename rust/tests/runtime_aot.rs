@@ -1,0 +1,102 @@
+//! End-to-end three-layer integration: loads the AOT artifacts produced by
+//! `make artifacts` (L2 JAX calling L1 Pallas kernels, lowered to HLO
+//! text) and checks their numerics against the native L3 engine.
+//! Skips when artifacts/ has not been built.
+use conv_einsum::exec::{conv_einsum, conv_einsum_ltr};
+use conv_einsum::runtime::ArtifactRegistry;
+use conv_einsum::util::rng::Rng;
+use conv_einsum::Tensor;
+
+fn registry() -> Option<ArtifactRegistry> {
+    ArtifactRegistry::open("artifacts").ok()
+}
+
+#[test]
+fn cp_layer_artifact_matches_native_engine() {
+    let Some(mut reg) = registry() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rng = Rng::new(21);
+    for name in ["cp_layer_fwd_optimal", "cp_layer_fwd_ltr"] {
+        let meta = reg.meta(name).expect("artifact in manifest").clone();
+        let inputs: Vec<Tensor> = meta
+            .input_shapes
+            .iter()
+            .map(|s| Tensor::rand(s, -0.5, 0.5, &mut rng))
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let out = reg.execute(name, &refs).unwrap();
+        assert_eq!(out.len(), 1);
+        // Native engine on the same expression + tensors.
+        let expr = "bshw,rt,rs,rh,rw->bthw|hw";
+        let native = if name.ends_with("optimal") {
+            conv_einsum(expr, &refs).unwrap()
+        } else {
+            conv_einsum_ltr(expr, &refs).unwrap()
+        };
+        assert_eq!(out[0].shape(), native.shape());
+        let rel = out[0].rel_l2(&native);
+        assert!(rel < 1e-3, "{name}: PJRT vs native rel-l2 {rel}");
+    }
+}
+
+#[test]
+fn rcp_artifact_executes() {
+    let Some(mut reg) = registry() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let meta = reg.meta("rcp_layer_fwd_optimal").unwrap().clone();
+    let mut rng = Rng::new(22);
+    let inputs: Vec<Tensor> = meta
+        .input_shapes
+        .iter()
+        .map(|s| Tensor::rand(s, -0.5, 0.5, &mut rng))
+        .collect();
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let out = reg.execute("rcp_layer_fwd_optimal", &refs).unwrap();
+    assert_eq!(out[0].shape(), &meta.output_shape[..]);
+    // native comparison
+    let expr = "b(s1)(s2)hw,r(t1)(s1),r(t2)(s2),rhw->b(t1)(t2)hw|hw";
+    let native = conv_einsum(expr, &refs).unwrap();
+    assert!(out[0].rel_l2(&native) < 1e-3);
+}
+
+#[test]
+fn train_step_artifact_reduces_loss() {
+    let Some(mut reg) = registry() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let meta = reg.meta("tnn_train_step").unwrap().clone();
+    let mut rng = Rng::new(23);
+    // inputs: x, onehot labels, factors..., w, b
+    let mut tensors: Vec<Tensor> = meta
+        .input_shapes
+        .iter()
+        .map(|s| Tensor::rand(s, -0.3, 0.3, &mut rng))
+        .collect();
+    // proper one-hot labels
+    let n_classes = meta.input_shapes[1][1];
+    let bsz = meta.input_shapes[1][0];
+    let mut onehot = Tensor::zeros(&[bsz, n_classes]);
+    for i in 0..bsz {
+        onehot.set(&[i, rng.below(n_classes)], 1.0);
+    }
+    tensors[1] = onehot;
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let refs: Vec<&Tensor> = tensors.iter().collect();
+        let out = reg.execute("tnn_train_step", &refs).unwrap();
+        // out = (loss, new_params...)
+        losses.push(out[0].data()[0]);
+        for (k, p) in out[1..].iter().enumerate() {
+            tensors[2 + k] = p.clone();
+        }
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease across AOT train steps: {losses:?}"
+    );
+}
