@@ -1,14 +1,16 @@
 //! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf): executor
 //! throughput on the two atoms (contraction GFLOP/s, conv atom GFLOP/s),
-//! pairwise overhead, and coordinator request throughput with batching on
-//! vs off.
+//! scalar-vs-parallel backend scaling across 1/2/4/8-thread pools, CP/TT
+//! layer steps under both backends, pairwise overhead, and coordinator
+//! request throughput with batching on vs off.
 use conv_einsum::coordinator::{EvalService, ServiceConfig};
 use conv_einsum::einsum::{parse, SizedSpec};
-use conv_einsum::exec::pairwise;
+use conv_einsum::exec::{pairwise, pairwise_with};
+use conv_einsum::planner::PlanOptions;
 use conv_einsum::tnn::{build_layer, Decomp};
 use conv_einsum::util::rng::Rng;
 use conv_einsum::util::timing::bench;
-use conv_einsum::Tensor;
+use conv_einsum::{conv_einsum_with, Backend, ExecOptions, Tensor};
 
 fn gflops(mults: f64, secs: f64) -> f64 {
     2.0 * mults / secs / 1e9
@@ -51,7 +53,100 @@ fn main() {
     let mults = (bb * ss * tt * hh * hh * kk * kk) as f64;
     println!("  -> {:.2} GFLOP/s", gflops(mults, sample.median_secs()));
 
+    // ---- scalar vs parallel backend scaling -------------------------------
+    println!("\n== backend scaling: scalar vs parallel (conv atom) ==");
+    let scalar_opts = ExecOptions::scalar();
+    let base = bench("conv-atom scalar", 2, 10, || {
+        let _ = pairwise_with(&spec, &x, &w, &[], &scalar_opts);
+    });
+    println!(
+        "{}\n  -> {:.2} GFLOP/s",
+        base.report(),
+        gflops(mults, base.median_secs())
+    );
+    for threads in [1usize, 2, 4, 8] {
+        let opts = ExecOptions::parallel(threads);
+        let smp = bench(&format!("conv-atom parallel t={threads}"), 2, 10, || {
+            let _ = pairwise_with(&spec, &x, &w, &[], &opts);
+        });
+        println!(
+            "{}\n  -> {:.2} GFLOP/s  speedup {:.2}x vs scalar",
+            smp.report(),
+            gflops(mults, smp.median_secs()),
+            base.median_secs() / smp.median_secs()
+        );
+    }
+
+    println!("\n== backend scaling: scalar vs parallel (matmul atom) ==");
+    let mspec = SizedSpec::new(
+        parse("gts,gns->gtn").unwrap(),
+        vec![vec![g, t, s], vec![g, n, s]],
+    )
+    .unwrap();
+    let mbase = bench("matmul-atom scalar", 2, 10, || {
+        let _ = pairwise_with(&mspec, &a, &b, &[], &scalar_opts);
+    });
+    println!("{}", mbase.report());
+    for threads in [1usize, 2, 4, 8] {
+        let opts = ExecOptions::parallel(threads);
+        let smp = bench(&format!("matmul-atom parallel t={threads}"), 2, 10, || {
+            let _ = pairwise_with(&mspec, &a, &b, &[], &opts);
+        });
+        println!(
+            "{}\n  -> speedup {:.2}x vs scalar",
+            smp.report(),
+            mbase.median_secs() / smp.median_secs()
+        );
+    }
+
+    // ---- representative CP / TT layer steps under both backends -----------
+    for (decomp, label) in [(Decomp::Cp, "CP"), (Decomp::TensorTrain, "TT")] {
+        println!("\n== backend scaling: {label} layer (batch 4, 32x32) ==");
+        let layer = match build_layer(decomp, 1, 16, 16, 3, 3, 0.5) {
+            Ok(l) => l,
+            Err(e) => {
+                println!("  (skipped: {e})");
+                continue;
+            }
+        };
+        let factors = layer.init_factors(&mut rng);
+        let xin = Tensor::rand(&layer.input_shape(4, 32, 32), -1.0, 1.0, &mut rng);
+        let mut inputs: Vec<&Tensor> = vec![&xin];
+        inputs.extend(factors.iter());
+        let sbase = bench(&format!("{label}-layer scalar"), 1, 5, || {
+            let _ = conv_einsum_with(
+                &layer.expr,
+                &inputs,
+                &PlanOptions {
+                    backend: Backend::Scalar,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        });
+        println!("{}", sbase.report());
+        for threads in [2usize, 4] {
+            let smp = bench(&format!("{label}-layer parallel t={threads}"), 1, 5, || {
+                let _ = conv_einsum_with(
+                    &layer.expr,
+                    &inputs,
+                    &PlanOptions {
+                        backend: Backend::Parallel { threads },
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            });
+            println!(
+                "{}\n  -> speedup {:.2}x vs scalar",
+                smp.report(),
+                sbase.median_secs() / smp.median_secs()
+            );
+        }
+    }
+
     // coordinator throughput, batching on vs off
+    println!();
     for max_batch in [1usize, 8] {
         let layer = build_layer(Decomp::Cp, 1, 16, 8, 3, 3, 0.5).unwrap();
         let factors = layer.init_factors(&mut rng);

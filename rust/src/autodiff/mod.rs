@@ -9,7 +9,7 @@
 //! for memory exactly as Chen et al. [21] describe; [`CkptPolicy::None`]
 //! stores nothing and recomputes each segment from the inputs.
 
-use crate::exec::{pairwise_mod, pairwise_vjp_mod};
+use crate::exec::{pairwise_vjp_with, pairwise_with, ExecOptions};
 use crate::planner::Plan;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
@@ -123,7 +123,10 @@ impl<'p> PathAutodiff<'p> {
         let step = &self.plan.steps[k];
         let a = vals[l].as_ref().expect("lhs value live");
         let b = vals[r].as_ref().expect("rhs value live");
-        let out = pairwise_mod(&step.sized, a, b, &step.moduli);
+        let opts = ExecOptions {
+            backend: self.plan.backend,
+        };
+        let out = pairwise_with(&step.sized, a, b, &step.moduli, &opts);
         meter.alloc(out.bytes());
         vals[o] = Some(out);
     }
@@ -297,7 +300,16 @@ impl<'p> PathAutodiff<'p> {
             let dnode = grads[o].take().expect("cotangent for step output");
             let a = vals[l].as_ref().unwrap();
             let b = vals[r].as_ref().unwrap();
-            let (da, db) = pairwise_vjp_mod(&step.sized, a, b, &dnode, &step.moduli);
+            let (da, db) = pairwise_vjp_with(
+                &step.sized,
+                a,
+                b,
+                &dnode,
+                &step.moduli,
+                &ExecOptions {
+                    backend: self.plan.backend,
+                },
+            );
             meter.free(dnode.bytes());
             meter.alloc(da.bytes());
             meter.alloc(db.bytes());

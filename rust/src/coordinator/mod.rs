@@ -9,13 +9,25 @@
 //! the layer string) up to `max_batch` or `batch_timeout`, whichever first.
 //! Workers execute along the planner's FLOPs-optimal path on the native
 //! engine, or via a PJRT artifact when one is registered for the layer.
+//!
+//! Workers and the executor's intra-step parallelism share one pool: each
+//! plan carries [`ServiceConfig::backend`], and under the default
+//! [`Backend::Parallel`]` { threads: 0 }` (= the global
+//! [`crate::parallel::Pool`]) the pool's busy-flag arbitration means that
+//! when several workers execute batches concurrently, exactly one fans out
+//! across the pool while the rest run their steps serially on their own
+//! worker thread — batch-level and step-level parallelism compose without
+//! oversubscribing the machine. Note this guarantee is specific to the
+//! shared pool: an explicit `Backend::Parallel { threads: k }` gives every
+//! atom a private k-thread pool, so `workers × k` threads can be runnable
+//! at once — only use explicit counts for benchmarking.
 
 mod metrics;
 
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 
 use crate::einsum::{parse, SizedSpec};
-use crate::exec::execute_path;
+use crate::exec::{execute_path, Backend};
 use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
@@ -39,6 +51,9 @@ pub struct ServiceConfig {
     pub queue_capacity: usize,
     /// Path strategy for plans.
     pub strategy: Strategy,
+    /// Execution backend recorded on every plan (see module docs on pool
+    /// sharing between workers and intra-step parallelism).
+    pub backend: Backend,
 }
 
 impl Default for ServiceConfig {
@@ -49,6 +64,7 @@ impl Default for ServiceConfig {
             batch_timeout: Duration::from_millis(2),
             queue_capacity: 256,
             strategy: Strategy::Optimal,
+            backend: Backend::default(),
         }
     }
 }
@@ -169,6 +185,7 @@ enum WorkMsg {
         tensors: Vec<Tensor>,
         respond: SyncSender<Result<Tensor>>,
         strategy: Strategy,
+        backend: Backend,
     },
     Stop,
 }
@@ -260,7 +277,8 @@ fn router_loop(
                  batch: Vec<Pending>,
                  wtx: &SyncSender<WorkMsg>,
                  metrics: &ServiceMetrics,
-                 strategy: Strategy| {
+                 strategy: Strategy,
+                 backend: Backend| {
         if batch.is_empty() {
             return;
         }
@@ -273,7 +291,7 @@ fn router_loop(
         let plan = match entry.plans.get(&key) {
             Some(p) => Arc::clone(p),
             None => {
-                let planned = plan_layer(entry, total_b, &bshape, strategy);
+                let planned = plan_layer(entry, total_b, &bshape, strategy, backend);
                 match planned {
                     Ok(p) => {
                         let p = Arc::new(p);
@@ -316,14 +334,30 @@ fn router_loop(
                 if let Some(first) = q.first() {
                     if first.x.shape() != pending.x.shape() {
                         let old = std::mem::take(q);
-                        flush(&mut registry, &layer, old, &wtx, &metrics, config.strategy);
+                        flush(
+                            &mut registry,
+                            &layer,
+                            old,
+                            &wtx,
+                            &metrics,
+                            config.strategy,
+                            config.backend,
+                        );
                     }
                 }
                 let q = queues.entry(layer.clone()).or_default();
                 q.push(pending);
                 if q.len() >= config.max_batch {
                     let old = std::mem::take(q);
-                    flush(&mut registry, &layer, old, &wtx, &metrics, config.strategy);
+                    flush(
+                        &mut registry,
+                        &layer,
+                        old,
+                        &wtx,
+                        &metrics,
+                        config.strategy,
+                        config.backend,
+                    );
                 } else if deadline.is_none() {
                     deadline = Some(Instant::now() + config.batch_timeout);
                 }
@@ -338,6 +372,7 @@ fn router_loop(
                     tensors,
                     respond,
                     strategy: config.strategy,
+                    backend: config.backend,
                 });
             }
             Ok(Msg::Shutdown) => break,
@@ -345,7 +380,15 @@ fn router_loop(
                 // Flush everything pending.
                 for (layer, q) in queues.iter_mut() {
                     let old = std::mem::take(q);
-                    flush(&mut registry, layer, old, &wtx, &metrics, config.strategy);
+                    flush(
+                        &mut registry,
+                        layer,
+                        old,
+                        &wtx,
+                        &metrics,
+                        config.strategy,
+                        config.backend,
+                    );
                 }
                 deadline = None;
             }
@@ -356,7 +399,15 @@ fn router_loop(
     // Drain on shutdown.
     for (layer, q) in queues.iter_mut() {
         let old = std::mem::take(q);
-        flush(&mut registry, layer, old, &wtx, &metrics, config.strategy);
+        flush(
+            &mut registry,
+            layer,
+            old,
+            &wtx,
+            &metrics,
+            config.strategy,
+            config.backend,
+        );
     }
     for _ in 0..8 {
         let _ = wtx.send(WorkMsg::Stop);
@@ -368,6 +419,7 @@ fn plan_layer(
     batch: usize,
     single_shape: &[usize],
     strategy: Strategy,
+    backend: Backend,
 ) -> Result<Plan, String> {
     let spec = parse(&entry.expr).map_err(|e| e.to_string())?;
     let mut x_dims = single_shape.to_vec();
@@ -379,6 +431,7 @@ fn plan_layer(
         &sized,
         &PlanOptions {
             strategy,
+            backend,
             ..Default::default()
         },
     )
@@ -432,6 +485,7 @@ fn worker_loop(wrx: Arc<Mutex<Receiver<WorkMsg>>>, metrics: Arc<ServiceMetrics>)
                 tensors,
                 respond,
                 strategy,
+                backend,
             }) => {
                 let t0 = Instant::now();
                 let refs: Vec<&Tensor> = tensors.iter().collect();
@@ -440,6 +494,7 @@ fn worker_loop(wrx: Arc<Mutex<Receiver<WorkMsg>>>, metrics: Arc<ServiceMetrics>)
                     &refs,
                     &PlanOptions {
                         strategy,
+                        backend,
                         ..Default::default()
                     },
                 );

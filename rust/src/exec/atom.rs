@@ -15,8 +15,25 @@
 //! `(ia, ib, p)` enumerating the index combinations that contribute, which
 //! uniformly covers circular / same / valid / full varieties (and arbitrary
 //! wrap moduli needed for pairwise steps inside a multi-way convolution).
+//!
+//! # Execution backends
+//!
+//! The atom is a family of independent GEMM-shaped blocks over
+//! `(g, t, n)`: every output row `out[g,t,n,·]` (length `∏ I_oᶜ`) depends
+//! only on row `A[g,t,·,·]`, the `B[g,·,·,·]` panel and the triple tables.
+//! [`Atom::execute_with`] exploits this with [`crate::exec::Backend`]:
+//!
+//! * `Backend::Scalar` — the original single-threaded loop nest;
+//! * `Backend::Parallel` — the same kernels dispatched one output row per
+//!   task across the scoped worker pool ([`crate::parallel::Pool`]). Each
+//!   row keeps the scalar path's accumulation order, so for the convolution
+//!   kernels the parallel backend is bit-identical to scalar; the pure
+//!   contraction kernel uses a 4-way unrolled dot (different summation
+//!   order, same value up to f32 rounding).
 
 use crate::einsum::{ConvKind, ModeId, SizedSpec};
+use crate::exec::{Backend, ExecOptions};
+use crate::parallel::Pool;
 use crate::tensor::Tensor;
 
 /// One convolution axis of the atom.
@@ -278,7 +295,24 @@ fn canonical_input(x: &Tensor, presum: &[usize], perm: &[usize]) -> Tensor {
     x.permute(perm)
 }
 
+/// Below this many forward multiplications, the auto backend
+/// (`Backend::Parallel { threads: 0 }`) stays on the scalar kernels: thread
+/// spawn costs tens of µs, which dwarfs sub-100µs kernels. Explicit thread
+/// counts always take the parallel path (benchmarks and tests rely on it).
+const AUTO_PARALLEL_MIN_WORK: usize = 1 << 16;
+
 impl Atom {
+    /// Estimated forward multiplications: G·T·N·S·∏(Iₐᶜ·I_bᶜ).
+    fn flop_estimate(&self) -> usize {
+        let (pa, pb, _) = self.conv_sizes();
+        self.g
+            .saturating_mul(self.t)
+            .saturating_mul(self.n)
+            .saturating_mul(self.s)
+            .saturating_mul(pa)
+            .saturating_mul(pb)
+    }
+
     /// Total elements across the conv axes of input a / input b / output.
     fn conv_sizes(&self) -> (usize, usize, usize) {
         let pa: usize = self.conv.iter().map(|c| c.ia).product();
@@ -359,19 +393,51 @@ impl Atom {
         (head, runs)
     }
 
-    /// Execute the atom: `out = f(a, b)`.
+    /// Execute the atom: `out = f(a, b)` (default backend).
     pub fn execute(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        self.execute_with(a, b, &ExecOptions::default())
+    }
+
+    /// Execute the atom with an explicit backend.
+    pub fn execute_with(&self, a: &Tensor, b: &Tensor, opts: &ExecOptions) -> Tensor {
         let ac = canonical_input(a, &self.presum_a, &self.perm_a);
         let bc = canonical_input(b, &self.presum_b, &self.perm_b);
         let (pa, pb, po) = self.conv_sizes();
         let (g, t, n, s) = (self.g, self.t, self.n, self.s);
         debug_assert_eq!(ac.len(), g * t * s * pa);
         debug_assert_eq!(bc.len(), g * n * s * pb);
-
         let av = ac.data();
         let bv = bc.data();
         let mut out = vec![0.0f32; g * t * n * po];
 
+        match opts.backend {
+            Backend::Scalar => self.forward_scalar(av, bv, &mut out),
+            Backend::Parallel { threads }
+                if threads == 0 && self.flop_estimate() < AUTO_PARALLEL_MIN_WORK =>
+            {
+                self.forward_scalar(av, bv, &mut out)
+            }
+            Backend::Parallel { threads } => {
+                let owned;
+                let pool: &Pool = if threads == 0 {
+                    Pool::global()
+                } else {
+                    owned = Pool::new(threads);
+                    &owned
+                };
+                self.forward_parallel(av, bv, &mut out, pool);
+            }
+        }
+
+        Tensor::from_vec(&[g * t * n * po], out)
+            .reshape(&self.raw_out_dims)
+            .permute(&self.out_perm)
+    }
+
+    /// Original single-threaded forward kernels.
+    fn forward_scalar(&self, av: &[f32], bv: &[f32], out: &mut [f32]) {
+        let (pa, pb, po) = self.conv_sizes();
+        let (g, t, n, s) = (self.g, self.t, self.n, self.s);
         if self.conv.is_empty() {
             // Pure contraction/batch/outer: per-group matmul
             // out[g,t,n] = Σ_s A[g,t,s]·B[g,n,s]  (dot of contiguous rows).
@@ -417,20 +483,76 @@ impl Atom {
                 }
             }
         }
+    }
 
-        Tensor::from_vec(&[g * t * n * po], out)
-            .reshape(&self.raw_out_dims)
-            .permute(&self.out_perm)
+    /// Row-parallel forward: one task per output row `out[g,t,n,·]`,
+    /// dispatched over the worker pool. The per-row loop nest matches the
+    /// scalar kernel's accumulation order exactly (conv case), so results
+    /// are bit-identical to `forward_scalar` per element.
+    fn forward_parallel(&self, av: &[f32], bv: &[f32], out: &mut [f32], pool: &Pool) {
+        let (pa, pb, po) = self.conv_sizes();
+        let (t, n, s) = (self.t, self.n, self.s);
+        if self.conv.is_empty() {
+            // One task per output row out[g,t,·] (length n): a dot-product
+            // microkernel with the A row L1-resident across the B panel.
+            pool.run_chunks(out, n, |row, crow| {
+                let ti = row % t;
+                let gi = row / t;
+                let arow = &av[(gi * t + ti) * s..(gi * t + ti + 1) * s];
+                let b_g = &bv[gi * n * s..(gi + 1) * n * s];
+                for (ni, c) in crow.iter_mut().enumerate() {
+                    *c += dot(arow, &b_g[ni * s..(ni + 1) * s]);
+                }
+            });
+        } else {
+            let (head, runs) = self.head_and_runs();
+            let last = self.conv.last().unwrap();
+            let (la, lb, lo) = (last.ia, last.ib, last.out);
+            // One task per conv output row out[g,t,n,·] (length po).
+            pool.run_chunks(out, po, |row, orow_buf| {
+                let ni = row % n;
+                let ti = (row / n) % t;
+                let gi = row / (n * t);
+                for si in 0..s {
+                    let abase = ((gi * t + ti) * s + si) * pa;
+                    let bbase = ((gi * n + ni) * s + si) * pb;
+                    for &(ao, bo, poo) in &head {
+                        let arow = abase + ao as usize * la;
+                        let brow = bbase + bo as usize * lb;
+                        let obase = poo as usize * lo;
+                        for &(ib, ia0, p0, len) in &runs {
+                            let w = bv[brow + ib as usize];
+                            if w == 0.0 {
+                                continue;
+                            }
+                            let asl = &av[arow + ia0 as usize..arow + (ia0 + len) as usize];
+                            let osl =
+                                &mut orow_buf[obase + p0 as usize..obase + (p0 + len) as usize];
+                            for (o, &a) in osl.iter_mut().zip(asl) {
+                                *o += w * a;
+                            }
+                        }
+                    }
+                }
+            });
+        }
     }
 
     /// Vector–Jacobian product: given `dout = ∂L/∂out`, return
-    /// `(∂L/∂a, ∂L/∂b)`. This is the training-path computation whose cost
-    /// the paper's tnn-cost adds as `cost(g1) + cost(g2)` (Appendix B).
-    pub fn vjp(
+    /// `(∂L/∂a, ∂L/∂b)` (default backend). This is the training-path
+    /// computation whose cost the paper's tnn-cost adds as
+    /// `cost(g1) + cost(g2)` (Appendix B).
+    pub fn vjp(&self, a: &Tensor, b: &Tensor, dout: &Tensor) -> (Tensor, Tensor) {
+        self.vjp_with(a, b, dout, &ExecOptions::default())
+    }
+
+    /// Vector–Jacobian product with an explicit backend.
+    pub fn vjp_with(
         &self,
         a: &Tensor,
         b: &Tensor,
         dout: &Tensor,
+        opts: &ExecOptions,
     ) -> (Tensor, Tensor) {
         let ac = canonical_input(a, &self.presum_a, &self.perm_a);
         let bc = canonical_input(b, &self.presum_b, &self.perm_b);
@@ -438,14 +560,53 @@ impl Atom {
         debug_assert_eq!(dout.shape(), &self.out_shape[..]);
         let dout_c = dout.permute(&invert_perm(&self.out_perm));
 
-        let (pa, pb, po) = self.conv_sizes();
-        let (g, t, n, s) = (self.g, self.t, self.n, self.s);
         let av = ac.data();
         let bv = bc.data();
         let dv = dout_c.data();
         let mut da = vec![0.0f32; av.len()];
         let mut db = vec![0.0f32; bv.len()];
 
+        match opts.backend {
+            Backend::Scalar => self.backward_scalar(av, bv, dv, &mut da, &mut db),
+            Backend::Parallel { threads }
+                if threads == 0 && self.flop_estimate() < AUTO_PARALLEL_MIN_WORK =>
+            {
+                self.backward_scalar(av, bv, dv, &mut da, &mut db)
+            }
+            Backend::Parallel { threads } => {
+                let owned;
+                let pool: &Pool = if threads == 0 {
+                    Pool::global()
+                } else {
+                    owned = Pool::new(threads);
+                    &owned
+                };
+                self.backward_parallel(av, bv, dv, &mut da, &mut db, pool);
+            }
+        }
+
+        // Undo canonicalization: permute back, then re-broadcast pre-summed
+        // axes (∂/∂x of a sum over an axis broadcasts the cotangent).
+        let mut da_t = Tensor::from_vec(&[da.len()], da)
+            .reshape(ac.shape())
+            .permute(&invert_perm(&self.perm_a));
+        for &ax in self.presum_a.iter().rev() {
+            // presum_a is descending; re-insert ascending.
+            da_t = da_t.broadcast_axis(ax, a.shape()[ax]);
+        }
+        let mut db_t = Tensor::from_vec(&[db.len()], db)
+            .reshape(bc.shape())
+            .permute(&invert_perm(&self.perm_b));
+        for &ax in self.presum_b.iter().rev() {
+            db_t = db_t.broadcast_axis(ax, b.shape()[ax]);
+        }
+        (da_t, db_t)
+    }
+
+    /// Original single-threaded backward kernels.
+    fn backward_scalar(&self, av: &[f32], bv: &[f32], dv: &[f32], da: &mut [f32], db: &mut [f32]) {
+        let (pa, pb, po) = self.conv_sizes();
+        let (g, t, n, s) = (self.g, self.t, self.n, self.s);
         if self.conv.is_empty() {
             // da[g,t,s] = Σ_n dout[g,t,n]·B[g,n,s]
             // db[g,n,s] = Σ_t dout[g,t,n]·A[g,t,s]
@@ -479,23 +640,86 @@ impl Atom {
                 }
             }
         }
+    }
 
-        // Undo canonicalization: permute back, then re-broadcast pre-summed
-        // axes (∂/∂x of a sum over an axis broadcasts the cotangent).
-        let mut da_t = Tensor::from_vec(&[da.len()], da)
-            .reshape(ac.shape())
-            .permute(&invert_perm(&self.perm_a));
-        for &ax in self.presum_a.iter().rev() {
-            // presum_a is descending; re-insert ascending.
-            da_t = da_t.broadcast_axis(ax, a.shape()[ax]);
+    /// Row-parallel backward: two passes, each racing-free by construction —
+    /// `da` is partitioned over `(g, t)` blocks (each task owns
+    /// `da[g,t,·,·]` and reduces over `n`), `db` over `(g, n)` blocks
+    /// (reducing over `t`). Per-element accumulation order matches the
+    /// scalar kernel, so results are bit-identical.
+    fn backward_parallel(
+        &self,
+        av: &[f32],
+        bv: &[f32],
+        dv: &[f32],
+        da: &mut [f32],
+        db: &mut [f32],
+        pool: &Pool,
+    ) {
+        let (pa, pb, po) = self.conv_sizes();
+        let (t, n, s) = (self.t, self.n, self.s);
+        if self.conv.is_empty() {
+            pool.run_chunks(da, s, |row, da_row| {
+                let ti = row % t;
+                let gi = row / t;
+                for ni in 0..n {
+                    let dval = dv[(gi * t + ti) * n + ni];
+                    if dval == 0.0 {
+                        continue;
+                    }
+                    let brow = &bv[(gi * n + ni) * s..(gi * n + ni + 1) * s];
+                    for (d, &b) in da_row.iter_mut().zip(brow) {
+                        *d += dval * b;
+                    }
+                }
+            });
+            pool.run_chunks(db, s, |row, db_row| {
+                let ni = row % n;
+                let gi = row / n;
+                for ti in 0..t {
+                    let dval = dv[(gi * t + ti) * n + ni];
+                    if dval == 0.0 {
+                        continue;
+                    }
+                    let arow = &av[(gi * t + ti) * s..(gi * t + ti + 1) * s];
+                    for (d, &a) in db_row.iter_mut().zip(arow) {
+                        *d += dval * a;
+                    }
+                }
+            });
+        } else {
+            let combined = self.combined_triples();
+            pool.run_chunks(da, s * pa, |row, da_block| {
+                let ti = row % t;
+                let gi = row / t;
+                for ni in 0..n {
+                    let ob = ((gi * t + ti) * n + ni) * po;
+                    for si in 0..s {
+                        let bbase = ((gi * n + ni) * s + si) * pb;
+                        let abase = si * pa;
+                        for &(ao, bo, poo) in &combined {
+                            da_block[abase + ao as usize] +=
+                                dv[ob + poo as usize] * bv[bbase + bo as usize];
+                        }
+                    }
+                }
+            });
+            pool.run_chunks(db, s * pb, |row, db_block| {
+                let ni = row % n;
+                let gi = row / n;
+                for ti in 0..t {
+                    let ob = ((gi * t + ti) * n + ni) * po;
+                    for si in 0..s {
+                        let abase = ((gi * t + ti) * s + si) * pa;
+                        let bbase = si * pb;
+                        for &(ao, bo, poo) in &combined {
+                            db_block[bbase + bo as usize] +=
+                                dv[ob + poo as usize] * av[abase + ao as usize];
+                        }
+                    }
+                }
+            });
         }
-        let mut db_t = Tensor::from_vec(&[db.len()], db)
-            .reshape(bc.shape())
-            .permute(&invert_perm(&self.perm_b));
-        for &ax in self.presum_b.iter().rev() {
-            db_t = db_t.broadcast_axis(ax, b.shape()[ax]);
-        }
-        (da_t, db_t)
     }
 }
 
@@ -505,6 +729,30 @@ fn invert_perm(perm: &[usize]) -> Vec<usize> {
         inv[p] = i;
     }
     inv
+}
+
+/// 4-way unrolled dot product (used by the parallel contraction kernel; the
+/// four independent accumulators let the compiler keep the loop pipelined).
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let quads = a.len() / 4;
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    for k in 0..quads {
+        let i = k * 4;
+        acc0 += a[i] * b[i];
+        acc1 += a[i + 1] * b[i + 1];
+        acc2 += a[i + 2] * b[i + 2];
+        acc3 += a[i + 3] * b[i + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for i in quads * 4..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
 }
 
 /// C(t×n) = A(t×s) · B(n×s)ᵀ — rows of both operands contiguous.

@@ -9,6 +9,23 @@
 //! * [`conv_einsum`] — parse + plan (FLOPs-optimal) + execute in one call;
 //!   the library's headline entry point.
 //! * [`naive_eval`] — brute-force reference oracle (tests only).
+//!
+//! # Backend selection
+//!
+//! Every entry point executes atoms through a [`Backend`] carried by
+//! [`ExecOptions`]:
+//!
+//! * [`Backend::Parallel`] (the default) dispatches independent
+//!   per-`(group, output-row)` blocks of the atom across the scoped worker
+//!   pool in [`crate::parallel`]; `threads == 0` uses the shared global
+//!   pool, a positive count uses a private pool of that size.
+//! * [`Backend::Scalar`] is the original single-threaded executor, kept as
+//!   a deterministic fallback and as the baseline in `bench_hotpath`.
+//!
+//! Plans record the backend chosen at planning time
+//! ([`crate::planner::PlanOptions::backend`] → [`crate::planner::Plan::backend`]),
+//! so [`execute_path`] and the autodiff tape replay with the same backend;
+//! [`execute_path_with`] / [`pairwise_with`] override it per call.
 
 pub mod atom;
 mod reference;
@@ -21,9 +38,50 @@ use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
 
-/// Evaluate a 2-input sized conv_einsum.
+/// Which executor runs the atomic grouped convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The original single-threaded kernels.
+    Scalar,
+    /// Multi-threaded row-blocked kernels on the scoped worker pool.
+    /// `threads == 0` means "use [`crate::parallel::Pool::global`]" and
+    /// additionally falls back to the scalar kernels for atoms too small to
+    /// amortize thread spawning; a positive count forces a private pool of
+    /// that size (benchmarking / tests).
+    Parallel { threads: usize },
+}
+
+impl Default for Backend {
+    fn default() -> Self {
+        Backend::Parallel { threads: 0 }
+    }
+}
+
+/// Options controlling how pairwise atoms execute.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecOptions {
+    pub backend: Backend,
+}
+
+impl ExecOptions {
+    /// Single-threaded execution.
+    pub fn scalar() -> ExecOptions {
+        ExecOptions {
+            backend: Backend::Scalar,
+        }
+    }
+
+    /// Parallel execution (`threads == 0` → shared global pool).
+    pub fn parallel(threads: usize) -> ExecOptions {
+        ExecOptions {
+            backend: Backend::Parallel { threads },
+        }
+    }
+}
+
+/// Evaluate a 2-input sized conv_einsum (default backend).
 pub fn pairwise(sized: &SizedSpec, a: &Tensor, b: &Tensor) -> Tensor {
-    pairwise_mod(sized, a, b, &[])
+    pairwise_with(sized, a, b, &[], &ExecOptions::default())
 }
 
 /// As [`pairwise`], with explicit circular wrap moduli (one per entry of
@@ -36,8 +94,19 @@ pub fn pairwise_mod(
     b: &Tensor,
     moduli: &[Option<usize>],
 ) -> Tensor {
+    pairwise_with(sized, a, b, moduli, &ExecOptions::default())
+}
+
+/// As [`pairwise_mod`], with an explicit execution backend.
+pub fn pairwise_with(
+    sized: &SizedSpec,
+    a: &Tensor,
+    b: &Tensor,
+    moduli: &[Option<usize>],
+    opts: &ExecOptions,
+) -> Tensor {
     let atom = canonicalize(sized, moduli);
-    atom.execute(a, b)
+    atom.execute_with(a, b, opts)
 }
 
 /// Gradients of a pairwise op: returns (∂L/∂a, ∂L/∂b) given ∂L/∂out.
@@ -47,7 +116,7 @@ pub fn pairwise_vjp(
     b: &Tensor,
     dout: &Tensor,
 ) -> (Tensor, Tensor) {
-    pairwise_vjp_mod(sized, a, b, dout, &[])
+    pairwise_vjp_with(sized, a, b, dout, &[], &ExecOptions::default())
 }
 
 /// As [`pairwise_vjp`] with explicit wrap moduli.
@@ -58,17 +127,41 @@ pub fn pairwise_vjp_mod(
     dout: &Tensor,
     moduli: &[Option<usize>],
 ) -> (Tensor, Tensor) {
-    let atom = canonicalize(sized, moduli);
-    atom.vjp(a, b, dout)
+    pairwise_vjp_with(sized, a, b, dout, moduli, &ExecOptions::default())
 }
 
-/// Execute a multi-input expression along a plan's pairwise steps.
+/// As [`pairwise_vjp_mod`], with an explicit execution backend.
+pub fn pairwise_vjp_with(
+    sized: &SizedSpec,
+    a: &Tensor,
+    b: &Tensor,
+    dout: &Tensor,
+    moduli: &[Option<usize>],
+    opts: &ExecOptions,
+) -> (Tensor, Tensor) {
+    let atom = canonicalize(sized, moduli);
+    atom.vjp_with(a, b, dout, opts)
+}
+
+/// Execute a multi-input expression along a plan's pairwise steps, using the
+/// backend recorded in the plan.
 ///
 /// Mirrors opt-einsum's working-list semantics: each step consumes two
 /// operands from the current list and appends the intermediate at the end;
 /// the final remaining tensor (optionally permuted by the plan's
 /// `final_perm`) is the result.
 pub fn execute_path(plan: &Plan, inputs: &[&Tensor]) -> Result<Tensor> {
+    execute_path_with(
+        plan,
+        inputs,
+        &ExecOptions {
+            backend: plan.backend,
+        },
+    )
+}
+
+/// As [`execute_path`], overriding the plan's backend.
+pub fn execute_path_with(plan: &Plan, inputs: &[&Tensor], opts: &ExecOptions) -> Result<Tensor> {
     if inputs.len() != plan.n_inputs {
         return Err(anyhow!(
             "plan expects {} inputs, got {}",
@@ -89,7 +182,7 @@ pub fn execute_path(plan: &Plan, inputs: &[&Tensor]) -> Result<Tensor> {
         let b = &working[j];
         debug_assert_eq!(a.shape(), &step.sized.dims[0][..], "step lhs shape");
         debug_assert_eq!(b.shape(), &step.sized.dims[1][..], "step rhs shape");
-        let out = pairwise_mod(&step.sized, a, b, &step.moduli);
+        let out = pairwise_with(&step.sized, a, b, &step.moduli, opts);
         // remove higher index first
         let (hi, lo) = if i > j { (i, j) } else { (j, i) };
         working.remove(hi);
@@ -125,7 +218,7 @@ pub fn conv_einsum(expr: &str, inputs: &[&Tensor]) -> Result<Tensor> {
 }
 
 /// As [`conv_einsum`] with explicit planning options (strategy, training
-/// cost model, cost caps, convolution varieties).
+/// cost model, cost caps, convolution varieties, execution backend).
 pub fn conv_einsum_with(expr: &str, inputs: &[&Tensor], opts: &PlanOptions) -> Result<Tensor> {
     let spec = parse(expr).map_err(|e| anyhow!("{e}"))?;
     let dims: Vec<Vec<usize>> = inputs.iter().map(|t| t.shape().to_vec()).collect();

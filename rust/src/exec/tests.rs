@@ -4,6 +4,7 @@
 
 use super::*;
 use crate::einsum::{parse, ConvKind, SizedSpec};
+use crate::planner::PlanOptions;
 use crate::tensor::Tensor;
 use crate::util::prop;
 use crate::util::rng::Rng;
@@ -360,6 +361,249 @@ fn property_pairwise_matches_reference() {
         let want = naive_eval(&s, &[&a, &b]);
         got.assert_close(&want, 1e-3);
     });
+}
+
+// ---------------------------------------------------------------------------
+// Parallel backend vs scalar backend vs brute-force reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_backend_matches_scalar_and_reference_all_kinds() {
+    // Deterministic sweep: every convolution variety × 1/2/4-thread pools.
+    // The parallel conv kernels keep the scalar accumulation order per
+    // output element, so scalar vs parallel must agree bit-for-bit here.
+    for kind in [
+        ConvKind::Same,
+        ConvKind::Valid,
+        ConvKind::Full,
+        ConvKind::Circular,
+    ] {
+        let spec = parse("bsx,tsx->btx|x").unwrap();
+        let s = SizedSpec::with_kinds(
+            spec,
+            vec![vec![2, 3, 9], vec![4, 3, 3]],
+            vec![kind],
+        )
+        .unwrap();
+        let mut rng = Rng::new(31);
+        let a = Tensor::rand(&[2, 3, 9], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&[4, 3, 3], -1.0, 1.0, &mut rng);
+        let scalar = pairwise_with(&s, &a, &b, &[], &ExecOptions::scalar());
+        let want = naive_eval(&s, &[&a, &b]);
+        scalar.assert_close(&want, 1e-3);
+        for threads in [1usize, 2, 4] {
+            let par = pairwise_with(&s, &a, &b, &[], &ExecOptions::parallel(threads));
+            par.assert_close(&scalar, 0.0);
+            par.assert_close(&want, 1e-3);
+        }
+    }
+}
+
+#[test]
+fn parallel_backend_matches_scalar_on_2d_conv_layer() {
+    // Two conv axes exercise the head-triples × runs decomposition.
+    let s = sized(
+        "bshw,tshw->bthw|hw",
+        vec![vec![2, 3, 7, 6], vec![4, 3, 3, 3]],
+    );
+    let mut rng = Rng::new(32);
+    let x = Tensor::rand(&[2, 3, 7, 6], -1.0, 1.0, &mut rng);
+    let w = Tensor::rand(&[4, 3, 3, 3], -1.0, 1.0, &mut rng);
+    let scalar = pairwise_with(&s, &x, &w, &[], &ExecOptions::scalar());
+    for threads in [1usize, 2, 4] {
+        let par = pairwise_with(&s, &x, &w, &[], &ExecOptions::parallel(threads));
+        par.assert_close(&scalar, 0.0);
+    }
+    scalar.assert_close(&naive_eval(&s, &[&x, &w]), 1e-3);
+}
+
+#[test]
+fn parallel_backend_respects_explicit_circular_moduli() {
+    // Explicit wrap moduli arise for pairwise steps inside multi-way
+    // circular convolutions; both backends must apply them identically.
+    let spec = parse("xa,xb->xab|x").unwrap();
+    for modulus in [4usize, 6, 8, 11] {
+        let s = SizedSpec::with_kinds(
+            spec.clone(),
+            vec![vec![6, 2], vec![4, 3]],
+            vec![ConvKind::Circular],
+        )
+        .unwrap();
+        let mut rng = Rng::new(33 + modulus as u64);
+        let a = Tensor::rand(&[6, 2], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&[4, 3], -1.0, 1.0, &mut rng);
+        let moduli = vec![Some(modulus)];
+        let scalar = pairwise_with(&s, &a, &b, &moduli, &ExecOptions::scalar());
+        for threads in [1usize, 2, 4] {
+            let par = pairwise_with(&s, &a, &b, &moduli, &ExecOptions::parallel(threads));
+            par.assert_close(&scalar, 0.0);
+        }
+    }
+}
+
+#[test]
+fn parallel_vjp_matches_scalar_vjp() {
+    let s = sized("bshw,tshw->bthw|hw", vec![vec![1, 2, 5, 4], vec![2, 2, 3, 3]]);
+    let mut rng = Rng::new(34);
+    let x = Tensor::rand(&[1, 2, 5, 4], -1.0, 1.0, &mut rng);
+    let w = Tensor::rand(&[2, 2, 3, 3], -1.0, 1.0, &mut rng);
+    let out = pairwise(&s, &x, &w);
+    let dout = Tensor::rand(out.shape(), -1.0, 1.0, &mut rng);
+    let (dx_s, dw_s) = pairwise_vjp_with(&s, &x, &w, &dout, &[], &ExecOptions::scalar());
+    for threads in [1usize, 2, 4] {
+        let (dx_p, dw_p) =
+            pairwise_vjp_with(&s, &x, &w, &dout, &[], &ExecOptions::parallel(threads));
+        dx_p.assert_close(&dx_s, 0.0);
+        dw_p.assert_close(&dw_s, 0.0);
+    }
+    // Pure contraction vjp (matmul kernels) under the parallel backend.
+    let m = sized("gts,gns->gtn", vec![vec![3, 4, 5], vec![3, 6, 5]]);
+    let a = Tensor::rand(&[3, 4, 5], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&[3, 6, 5], -1.0, 1.0, &mut rng);
+    let o = pairwise(&m, &a, &b);
+    let do_ = Tensor::rand(o.shape(), -1.0, 1.0, &mut rng);
+    let (da_s, db_s) = pairwise_vjp_with(&m, &a, &b, &do_, &[], &ExecOptions::scalar());
+    let (da_p, db_p) = pairwise_vjp_with(&m, &a, &b, &do_, &[], &ExecOptions::parallel(4));
+    da_p.assert_close(&da_s, 0.0);
+    db_p.assert_close(&db_s, 0.0);
+}
+
+#[test]
+fn property_parallel_backend_matches_reference() {
+    // Randomized 2-input specs sweeping structure, all four convolution
+    // varieties and 1/2/4-thread pools, checked against the brute-force
+    // reference and against the scalar backend.
+    prop::check("parallel-vs-reference", 40, |g| {
+        let mut rng = Rng::new(g.usize_in(0, u32::MAX as usize) as u64);
+        let n_shared = g.usize_in(0, 2);
+        let n_batch = g.usize_in(0, 1);
+        let n_afree = g.usize_in(0, 2);
+        let n_bfree = g.usize_in(0, 2);
+        let kind = *g.pick(&[
+            ConvKind::Same,
+            ConvKind::Valid,
+            ConvKind::Full,
+            ConvKind::Circular,
+        ]);
+        let threads = *g.pick(&[1usize, 2, 4]);
+
+        let names = ["c", "d", "g", "t", "u", "n", "m", "x"];
+        let mut lhs = String::new();
+        let mut rhs = String::new();
+        let mut out = String::new();
+        let mut da: Vec<usize> = vec![];
+        let mut db: Vec<usize> = vec![];
+        let mut ni = 0;
+        for _ in 0..n_shared {
+            let d = g.usize_in(1, 3);
+            lhs.push_str(names[ni]);
+            rhs.push_str(names[ni]);
+            da.push(d);
+            db.push(d);
+            ni += 1;
+        }
+        for _ in 0..n_batch {
+            let d = g.usize_in(1, 3);
+            lhs.push_str(names[ni]);
+            rhs.push_str(names[ni]);
+            out.push_str(names[ni]);
+            da.push(d);
+            db.push(d);
+            ni += 1;
+        }
+        for _ in 0..n_afree {
+            let d = g.usize_in(1, 3);
+            lhs.push_str(names[ni]);
+            out.push_str(names[ni]);
+            da.push(d);
+            ni += 1;
+        }
+        for _ in 0..n_bfree {
+            let d = g.usize_in(1, 3);
+            rhs.push_str(names[ni]);
+            out.push_str(names[ni]);
+            db.push(d);
+            ni += 1;
+        }
+        // Always include a conv mode: the backend split is what we test.
+        let fa = g.usize_in(2, 6);
+        let fb = g.usize_in(1, fa);
+        lhs.push('x');
+        rhs.push('x');
+        out.push('x');
+        da.push(fa);
+        db.push(fb);
+        let expr = format!("{lhs},{rhs}->{out}|x");
+        let spec = parse(&expr).unwrap();
+        let s = SizedSpec::with_kinds(spec, vec![da.clone(), db.clone()], vec![kind]).unwrap();
+        let a = Tensor::rand(&da, -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&db, -1.0, 1.0, &mut rng);
+        let par = pairwise_with(&s, &a, &b, &[], &ExecOptions::parallel(threads));
+        let scalar = pairwise_with(&s, &a, &b, &[], &ExecOptions::scalar());
+        let want = naive_eval(&s, &[&a, &b]);
+        par.assert_close(&scalar, 1e-5);
+        par.assert_close(&want, 1e-3);
+    });
+}
+
+#[test]
+fn multiway_circular_parallel_path_matches_reference() {
+    // Multi-way circular conv: pairwise steps carry explicit wrap moduli
+    // through execute_path; the parallel backend must agree with the
+    // reference and with a scalar-backend plan.
+    let expr = "bfsh,fgh,sth->bgth|h";
+    let mut rng = Rng::new(35);
+    let x = Tensor::rand(&[2, 2, 3, 6], -1.0, 1.0, &mut rng);
+    let k1 = Tensor::rand(&[2, 2, 3], -1.0, 1.0, &mut rng);
+    let k2 = Tensor::rand(&[3, 2, 2], -1.0, 1.0, &mut rng);
+    let inputs = [&x, &k1, &k2];
+    let par = conv_einsum_with(
+        expr,
+        &inputs,
+        &PlanOptions {
+            backend: Backend::Parallel { threads: 4 },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let scalar = conv_einsum_with(
+        expr,
+        &inputs,
+        &PlanOptions {
+            backend: Backend::Scalar,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    par.assert_close(&scalar, 0.0);
+    let s = sized(expr, inputs.iter().map(|t| t.shape().to_vec()).collect());
+    par.assert_close(&naive_eval(&s, &inputs), 1e-3);
+}
+
+#[test]
+fn execute_path_with_overrides_plan_backend() {
+    use crate::planner::contract_path;
+    let expr = "ij,jk,kl->il";
+    let dims = vec![vec![2, 3], vec![3, 4], vec![4, 5]];
+    let plan = contract_path(
+        expr,
+        &dims,
+        &PlanOptions {
+            backend: Backend::Scalar,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(plan.backend, Backend::Scalar);
+    let mut rng = Rng::new(36);
+    let ts: Vec<Tensor> = dims
+        .iter()
+        .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+        .collect();
+    let refs: Vec<&Tensor> = ts.iter().collect();
+    let via_plan = execute_path(&plan, &refs).unwrap();
+    let via_override = execute_path_with(&plan, &refs, &ExecOptions::parallel(2)).unwrap();
+    via_override.assert_close(&via_plan, 1e-5);
 }
 
 #[test]

@@ -13,6 +13,9 @@
 //! * a **dense tensor substrate** ([`tensor`]) and a **pairwise executor**
 //!   ([`exec`]) that rewrites any 2-input conv_einsum into an atomic
 //!   grouped-convolution primitive (paper §3.1);
+//! * a **multi-threaded execution backend** ([`parallel`]): the atom's
+//!   independent per-`(group, output-row)` GEMM-shaped blocks are dispatched
+//!   across a shared scoped worker pool (std-only, no dependencies);
 //! * the **tnn-cost model** (paper Appendix B, Eq. 5–8) with training-mode
 //!   costs `cost(f) + cost(g1) + cost(g2)` in [`cost`];
 //! * the **optimal sequencer** (paper §3.2) — an exact netcon-equivalent
@@ -29,6 +32,36 @@
 //!   requests, and a **PJRT runtime** ([`runtime`]) that loads the AOT
 //!   JAX/Pallas artifacts produced by `python/compile/aot.py`.
 //!
+//! ## Backend selection
+//!
+//! Every execution entry point is parameterized by [`ExecOptions`] carrying
+//! a [`Backend`]:
+//!
+//! * [`Backend::Parallel`]` { threads: 0 }` — the default — runs atoms on
+//!   the shared global worker pool ([`parallel::Pool::global`]), sized from
+//!   the `CONV_EINSUM_THREADS` environment variable or the machine's
+//!   available parallelism. A positive `threads` count uses a private pool
+//!   of that size (useful for benchmarking scaling).
+//! * [`Backend::Scalar`] — the original single-threaded kernels, kept as a
+//!   deterministic fallback.
+//!
+//! Plans record their backend ([`planner::PlanOptions::backend`] →
+//! [`planner::Plan::backend`]), so [`exec::execute_path`], the coordinator's
+//! workers and the autodiff tape all replay with the backend chosen at
+//! planning time; `*_with` variants ([`exec::pairwise_with`],
+//! [`exec::execute_path_with`]) override it per call. Concurrent users of
+//! the shared pool (e.g. several coordinator workers) are arbitrated by the
+//! pool itself: one fans out, the rest run serially — never oversubscribing.
+//!
+//! ## Cargo features
+//!
+//! * `pjrt` (off by default): compiles the XLA-backed [`runtime`] that
+//!   executes AOT HLO artifacts through a PJRT CPU client. Requires adding
+//!   the external `xla` crate (0.5.1) to Cargo.toml — it cannot be vendored
+//!   into the offline build. With the feature off, the default build has
+//!   zero external dependencies (the `anyhow` shim is vendored in-tree) and
+//!   [`runtime::ArtifactRegistry::open`] returns a clear "disabled" error.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured record.
 
@@ -39,6 +72,7 @@ pub mod einsum;
 pub mod exec;
 pub mod experiments;
 pub mod nn;
+pub mod parallel;
 pub mod planner;
 pub mod runtime;
 pub mod tensor;
@@ -46,6 +80,7 @@ pub mod tnn;
 pub mod util;
 
 pub use einsum::{EinsumSpec, ModeKind, SizedSpec};
-pub use exec::{conv_einsum, conv_einsum_with, pairwise};
+pub use exec::{conv_einsum, conv_einsum_with, pairwise, Backend, ExecOptions};
+pub use parallel::Pool;
 pub use planner::{contract_path, Plan, PlanOptions, Strategy};
 pub use tensor::Tensor;

@@ -1,0 +1,198 @@
+//! Shared scoped worker pool for intra-operator parallelism (std-only).
+//!
+//! The atomic grouped convolution (paper §3.1) decomposes into independent
+//! per-`(group, output-row)` blocks, so the executor's parallel backend
+//! splits its output buffer into disjoint row chunks and fans them out over
+//! scoped threads. A [`Pool`] is a *concurrency budget* plus an arbitration
+//! flag rather than a set of long-lived threads: each [`Pool::run_chunks`]
+//! call spawns scoped workers (so borrowed tensor data crosses thread
+//! boundaries safely with zero `unsafe`), and a `busy` flag guarantees that
+//! concurrent users of the same pool — e.g. several coordinator workers
+//! executing batches at once, or a nested parallel region — degrade to
+//! serial execution on their own thread instead of oversubscribing the
+//! machine with `workers × threads` runnables.
+//!
+//! The process-wide pool ([`Pool::global`]) sizes itself from the
+//! `CONV_EINSUM_THREADS` environment variable when set, falling back to
+//! [`std::thread::available_parallelism`]. The coordinator's worker loop and
+//! the executor's default [`crate::exec::Backend::Parallel`] backend share
+//! this single pool.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// A reusable concurrency budget for scoped data-parallel loops.
+#[derive(Debug)]
+pub struct Pool {
+    threads: usize,
+    busy: AtomicBool,
+}
+
+/// Clears the busy flag even if a worker panics mid-region (the panic is
+/// propagated by `thread::scope` after joining, unwinding through this).
+struct BusyGuard<'a>(&'a AtomicBool);
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
+    }
+}
+
+impl Pool {
+    /// A pool with an explicit thread budget (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool {
+            threads: threads.max(1),
+            busy: AtomicBool::new(false),
+        }
+    }
+
+    /// The process-wide shared pool.
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let threads = std::env::var("CONV_EINSUM_THREADS")
+                .ok()
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .filter(|&t| t > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(4)
+                });
+            Pool::new(threads)
+        })
+    }
+
+    /// This pool's thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `out` into contiguous chunks of `chunk` elements (the last may
+    /// be shorter) and invoke `f(chunk_index, chunk)` on every chunk, fanned
+    /// out across up to `self.threads` scoped worker threads.
+    ///
+    /// Chunks are assigned round-robin, so uniform per-chunk work balances
+    /// well. Falls back to serial execution on the calling thread when the
+    /// budget is 1, there is only one chunk, or the pool is already busy
+    /// (nested or concurrent use) — never blocks waiting for the pool.
+    pub fn run_chunks<F>(&self, out: &mut [f32], chunk: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        assert!(chunk > 0, "chunk size must be positive");
+        let n_chunks = (out.len() + chunk - 1) / chunk;
+        let nt = self.threads.min(n_chunks);
+        if nt <= 1 || self.busy.swap(true, Ordering::Acquire) {
+            for (i, c) in out.chunks_mut(chunk).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        let _guard = BusyGuard(&self.busy);
+        let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
+            (0..nt).map(|_| Vec::new()).collect();
+        for (i, c) in out.chunks_mut(chunk).enumerate() {
+            buckets[i % nt].push((i, c));
+        }
+        let fref = &f;
+        std::thread::scope(|s| {
+            let mut buckets = buckets.into_iter();
+            let first = buckets.next().expect("nt >= 2 buckets");
+            for bucket in buckets {
+                s.spawn(move || {
+                    for (i, c) in bucket {
+                        fref(i, c);
+                    }
+                });
+            }
+            for (i, c) in first {
+                fref(i, c);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn every_chunk_visited_exactly_once() {
+        let pool = Pool::new(4);
+        let mut data = vec![0.0f32; 100];
+        pool.run_chunks(&mut data, 7, |i, c| {
+            for v in c.iter_mut() {
+                *v += 1.0 + i as f32;
+            }
+        });
+        for (k, &v) in data.iter().enumerate() {
+            assert_eq!(v, 1.0 + (k / 7) as f32, "element {k}");
+        }
+    }
+
+    #[test]
+    fn uneven_tail_chunk_has_right_length() {
+        let pool = Pool::new(3);
+        let mut data = vec![0.0f32; 10];
+        let lens = std::sync::Mutex::new(vec![0usize; 4]);
+        pool.run_chunks(&mut data, 3, |i, c| {
+            lens.lock().unwrap()[i] = c.len();
+        });
+        assert_eq!(*lens.lock().unwrap(), vec![3, 3, 3, 1]);
+    }
+
+    #[test]
+    fn single_thread_budget_runs_serially() {
+        let pool = Pool::new(1);
+        let mut data = vec![0.0f32; 16];
+        let count = AtomicUsize::new(0);
+        pool.run_chunks(&mut data, 4, |_, c| {
+            count.fetch_add(1, Ordering::SeqCst);
+            c[0] = 1.0;
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+        assert!(!pool.busy.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn nested_use_degrades_to_serial_without_deadlock() {
+        let pool = Pool::new(4);
+        let mut outer = vec![0.0f32; 8];
+        pool.run_chunks(&mut outer, 2, |i, c| {
+            // Nested region on the same pool: must complete serially.
+            let mut inner = vec![0.0f32; 4];
+            pool.run_chunks(&mut inner, 1, |j, ic| {
+                ic[0] = (i * 10 + j) as f32;
+            });
+            c[0] = inner.iter().sum();
+        });
+        for (k, chunk) in outer.chunks(2).enumerate() {
+            // Σ_j (10k + j) for j in 0..4 = 40k + 6
+            assert_eq!(chunk[0], (40 * k + 6) as f32);
+        }
+        assert!(!pool.busy.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn busy_flag_clears_after_parallel_run() {
+        let pool = Pool::new(2);
+        let mut data = vec![0.0f32; 64];
+        pool.run_chunks(&mut data, 8, |_, c| c.iter_mut().for_each(|v| *v = 2.0));
+        assert!(!pool.busy.load(Ordering::SeqCst));
+        assert!(data.iter().all(|&v| v == 2.0));
+        // The pool is immediately reusable.
+        pool.run_chunks(&mut data, 8, |_, c| c.iter_mut().for_each(|v| *v += 1.0));
+        assert!(data.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton_with_positive_budget() {
+        let a = Pool::global() as *const Pool;
+        let b = Pool::global() as *const Pool;
+        assert_eq!(a, b);
+        assert!(Pool::global().threads() >= 1);
+    }
+}

@@ -18,10 +18,11 @@
 
 mod subspec;
 
-pub use subspec::{analyze_merge, step_sized_spec, NetCtx, SubSpec};
+pub use subspec::{analyze_merge, step_sized_spec, Merge, NetCtx, SubSpec};
 
 use crate::cost::flat_cost;
 use crate::einsum::{parse, ConvKind, SizedSpec};
+use crate::exec::Backend;
 use crate::util::json::Json;
 use crate::util::sci;
 
@@ -61,6 +62,9 @@ pub struct PlanOptions {
     pub conv_kinds: Option<Vec<ConvKind>>,
     /// Above this input count, Optimal falls back to Greedy.
     pub max_dp_inputs: usize,
+    /// Execution backend recorded on the plan (used by `execute_path` and
+    /// the autodiff tape; see [`crate::exec::Backend`]).
+    pub backend: Backend,
 }
 
 impl Default for PlanOptions {
@@ -71,6 +75,7 @@ impl Default for PlanOptions {
             cost_cap: None,
             conv_kinds: None,
             max_dp_inputs: 16,
+            backend: Backend::default(),
         }
     }
 }
@@ -100,6 +105,9 @@ pub struct Plan {
     pub n_inputs: usize,
     pub strategy: Strategy,
     pub training: bool,
+    /// Execution backend the plan was made for (overridable at execution
+    /// time via `execute_path_with`).
+    pub backend: Backend,
     pub steps: Vec<PlanStep>,
     /// Permutation from the last step's (mode-sorted) output to the
     /// requested output order.
@@ -208,7 +216,10 @@ pub fn plan_with(sized: &SizedSpec, opts: &PlanOptions) -> Result<Plan, String> 
         Strategy::LeftToRight => ltr_tree.clone(),
         Strategy::Greedy => greedy_tree(&ctx, n, opts.training),
         Strategy::Optimal => {
-            if n <= opts.max_dp_inputs {
+            // Clamp to the DP's hard feasibility ceiling so a raised
+            // max_dp_inputs degrades to greedy (like every other over-limit
+            // case) instead of erroring inside optimal_tree.
+            if n <= opts.max_dp_inputs.min(MAX_DP_INPUTS_HARD) {
                 optimal_tree(&ctx, n, opts.training, opts.cost_cap)?
             } else {
                 greedy_tree(&ctx, n, opts.training)
@@ -276,6 +287,11 @@ fn tree_cost(ctx: &NetCtx, tree: &Tree, training: bool, cap: Option<f64>) -> Opt
     Some(total)
 }
 
+/// Hard ceiling on exact-DP input count: beyond this the `O(2^n)` tables
+/// are plainly infeasible, so `plan_with` routes to greedy regardless of
+/// `max_dp_inputs`.
+const MAX_DP_INPUTS_HARD: usize = 30;
+
 /// Exact subset DP (netcon-equivalent optimum).
 fn optimal_tree(
     ctx: &NetCtx,
@@ -283,7 +299,20 @@ fn optimal_tree(
     training: bool,
     cap: Option<f64>,
 ) -> Result<Tree, String> {
-    let full: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    // `plan_with` already rejects n > 63 and clamps DP dispatch to
+    // MAX_DP_INPUTS_HARD, but compute the full mask checked rather than
+    // special-casing: a u64::MAX full mask would make the `1..=full` scan
+    // below never terminate. Keep a defensive error for direct callers.
+    if n > MAX_DP_INPUTS_HARD {
+        return Err(format!(
+            "exact subset DP limited to {MAX_DP_INPUTS_HARD} inputs (got {n}); \
+             use Strategy::Greedy or lower max_dp_inputs"
+        ));
+    }
+    let full: u64 = 1u64
+        .checked_shl(n as u32)
+        .map(|v| v - 1)
+        .ok_or_else(|| format!("subset DP mask overflow for {n} inputs"))?;
     let size = 1usize << n;
     let mut best = vec![f64::INFINITY; size];
     let mut split: Vec<(u64, u64)> = vec![(0, 0); size];
@@ -353,7 +382,10 @@ fn greedy_tree(ctx: &NetCtx, n: usize, training: bool) -> Tree {
     let mut pool: Vec<SubSpec> = (0..n).map(|i| ctx.leaf(i)).collect();
     let mut splits = Vec::new();
     while pool.len() > 1 {
+        // Scan all pairs, keeping the winning Merge so it is analyzed once
+        // per round instead of twice (scan + post-selection recompute).
         let mut best = (f64::INFINITY, f64::INFINITY, 0usize, 1usize);
+        let mut best_merge: Option<Merge> = None;
         for i in 0..pool.len() {
             for j in i + 1..pool.len() {
                 let merge = analyze_merge(ctx, &pool[i], &pool[j]);
@@ -361,12 +393,13 @@ fn greedy_tree(ctx: &NetCtx, n: usize, training: bool) -> Tree {
                 let e = merge.result.elems();
                 if (c, e) < (best.0, best.1) {
                     best = (c, e, i, j);
+                    best_merge = Some(merge);
                 }
             }
         }
         let (_, _, i, j) = best;
+        let merge = best_merge.expect("pool has at least one pair");
         let (si, sj) = (pool[i].mask, pool[j].mask);
-        let merge = analyze_merge(ctx, &pool[i], &pool[j]);
         splits.push((si | sj, si, sj));
         // remove j first (j > i)
         pool.remove(j);
@@ -456,6 +489,7 @@ fn build_plan(
         n_inputs: n,
         strategy: opts.strategy,
         training: opts.training,
+        backend: opts.backend,
         steps,
         final_perm: if is_identity { None } else { Some(final_perm) },
         cost: total,

@@ -380,6 +380,140 @@ fn property_theorem2_tucker_reduction() {
 }
 
 #[test]
+fn greedy_matches_optimal_cost_on_small_specs() {
+    // Regression for the greedy scan caching the winning Merge instead of
+    // re-running analyze_merge after selection: the selected pair (and
+    // therefore the whole tree) must be unchanged. On these specs the
+    // greedy tree is also exactly optimal (hand-verified costs).
+    for (expr, dims, want) in [
+        // (B·C) first (tiebreak on output elems), then A·(BC): 600 + 12.
+        (
+            "ij,jk,kl->il",
+            vec![vec![2, 3], vec![3, 100], vec![100, 2]],
+            612.0,
+        ),
+        // Single pairwise step: trivially identical. g·t·n·s = 2·4·5·3.
+        ("bci,bcj->bij", vec![vec![2, 3, 4], vec![2, 3, 5]], 120.0),
+        // Four identical batch operands: every tree costs 3 · (2·3) = 18.
+        (
+            "ab,ab,ab,ab->ab",
+            vec![vec![2, 3], vec![2, 3], vec![2, 3], vec![2, 3]],
+            18.0,
+        ),
+    ] {
+        let o = plan(expr, dims.clone(), &PlanOptions::default());
+        let g = plan(
+            expr,
+            dims,
+            &PlanOptions {
+                strategy: Strategy::Greedy,
+                ..Default::default()
+            },
+        );
+        assert_eq!(g.cost, want, "{expr}: greedy cost");
+        assert_eq!(o.cost, want, "{expr}: optimal cost");
+        assert_eq!(g.steps.len(), o.steps.len());
+    }
+}
+
+#[test]
+fn max_dp_inputs_boundary_switches_to_greedy() {
+    // 4-input chain where greedy (80) is strictly worse than the DP
+    // optimum (76 = A·(B·(C·D))): at the boundary (max_dp_inputs == n) the
+    // Optimal strategy must run the exact DP; just below it, it must fall
+    // back to greedy — and both must plan without error.
+    let expr = "ab,bc,cd,de->ae";
+    let dims = vec![vec![2, 3], vec![3, 4], vec![4, 5], vec![5, 2]];
+    let exact = plan(
+        expr,
+        dims.clone(),
+        &PlanOptions {
+            max_dp_inputs: 4,
+            ..Default::default()
+        },
+    );
+    assert_eq!(exact.cost, 76.0, "DP at the boundary must find the optimum");
+    let fallback = plan(
+        expr,
+        dims.clone(),
+        &PlanOptions {
+            max_dp_inputs: 3,
+            ..Default::default()
+        },
+    );
+    assert_eq!(fallback.cost, 80.0, "below the boundary falls back to greedy");
+    assert!(exact.cost <= fallback.cost);
+    // The explicit Greedy strategy agrees with the fallback.
+    let greedy = plan(
+        expr,
+        dims,
+        &PlanOptions {
+            strategy: Strategy::Greedy,
+            ..Default::default()
+        },
+    );
+    assert_eq!(greedy.cost, fallback.cost);
+}
+
+#[test]
+fn plan_rejects_more_than_63_inputs() {
+    // The old DP special-cased n == 64 with a u64::MAX full mask, under
+    // which `for mask in 1..=full` would never have terminated; plan_with
+    // must reject such sizes outright (and the DP now computes its mask
+    // checked).
+    let expr = format!("{}->i", vec!["i"; 64].join(","));
+    let dims = vec![vec![2]; 64];
+    let err = contract_path(&expr, &dims, &PlanOptions::default());
+    assert!(err.is_err());
+    assert!(
+        err.unwrap_err().contains("too many inputs"),
+        "should reject 64 inputs at the plan_with gate"
+    );
+    // 63 inputs is within the representable range and must plan fine
+    // (greedy fallback; DP would be astronomically large).
+    let expr63 = format!("{}->i", vec!["i"; 63].join(","));
+    let dims63 = vec![vec![2]; 63];
+    let p = contract_path(&expr63, &dims63, &PlanOptions::default()).unwrap();
+    assert_eq!(p.steps.len(), 62);
+}
+
+#[test]
+fn raised_max_dp_inputs_degrades_to_greedy_beyond_hard_cap() {
+    // A max_dp_inputs above the DP's hard feasibility ceiling must not
+    // error: dispatch clamps and falls back to greedy like every other
+    // over-limit case.
+    let expr = format!("{}->i", vec!["i"; 40].join(","));
+    let dims = vec![vec![2]; 40];
+    let p = contract_path(
+        &expr,
+        &dims,
+        &PlanOptions {
+            max_dp_inputs: 63,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(p.steps.len(), 39);
+}
+
+#[test]
+fn plan_records_requested_backend() {
+    use crate::exec::Backend;
+    let dims = vec![vec![2, 3], vec![3, 4]];
+    let default_plan = plan("ij,jk->ik", dims.clone(), &PlanOptions::default());
+    assert_eq!(default_plan.backend, Backend::Parallel { threads: 0 });
+    let scalar_plan = plan(
+        "ij,jk->ik",
+        dims,
+        &PlanOptions {
+            backend: Backend::Scalar,
+            ..Default::default()
+        },
+    );
+    assert_eq!(scalar_plan.backend, Backend::Scalar);
+}
+
+#[test]
 fn subset_order_independence() {
     // The SubSpec of a mask must match incremental merging in any order.
     let spec = parse("bfsh,fgh,sth->bgth|h").unwrap();

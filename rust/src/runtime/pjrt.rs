@@ -1,0 +1,217 @@
+//! The real PJRT runtime (compiled only with `--features pjrt`): loads AOT
+//! HLO-text artifacts and executes them via the `xla` crate's PJRT CPU
+//! client.
+//!
+//! Enabling the `pjrt` feature requires adding the external `xla` crate
+//! (0.5.1) to Cargo.toml yourself — it cannot be vendored into the offline
+//! build (see the feature's comment in Cargo.toml).
+
+use super::ArtifactMeta;
+use crate::tensor::Tensor;
+use crate::util::json::{parse as json_parse, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Registry of AOT artifacts: lazy-compiles HLO text on first use and
+/// caches the loaded executable.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    client: xla::PjRtClient,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactRegistry {
+    /// Open `artifacts/` via its `manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let json = json_parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut metas = HashMap::new();
+        for entry in json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?
+        {
+            let meta = ArtifactMeta {
+                name: entry
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing name"))?
+                    .to_string(),
+                file: entry
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing file"))?
+                    .to_string(),
+                input_shapes: shapes_from(entry.get("input_shapes"))?,
+                output_shape: shape_from(entry.get("output_shape"))?,
+                description: entry
+                    .get("description")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            };
+            metas.insert(meta.name.clone(), meta);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(ArtifactRegistry {
+            dir,
+            metas,
+            client,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.metas.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) and return a handle for execution.
+    fn ensure_compiled(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let meta = self
+                .metas
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling '{name}': {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute an artifact on native tensors. Outputs are returned as
+    /// native tensors (the artifacts are lowered with `return_tuple=True`,
+    /// so the single result literal is a tuple).
+    pub fn execute(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self
+            .metas
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        if inputs.len() != meta.input_shapes.len() {
+            return Err(anyhow!(
+                "'{name}' expects {} inputs, got {}",
+                meta.input_shapes.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, want)) in inputs.iter().zip(meta.input_shapes.iter()).enumerate() {
+            if t.shape() != &want[..] {
+                return Err(anyhow!(
+                    "'{name}' input {i}: shape {:?} != expected {:?}",
+                    t.shape(),
+                    want
+                ));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let exe = self.ensure_compiled(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{name}': {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of '{name}': {e:?}"))?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+fn shapes_from(v: Option<&Json>) -> Result<Vec<Vec<usize>>> {
+    v.and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("bad input_shapes"))?
+        .iter()
+        .map(|s| shape_from(Some(s)))
+        .collect()
+}
+
+fn shape_from(v: Option<&Json>) -> Result<Vec<usize>> {
+    v.and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("bad shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect()
+}
+
+/// Native tensor → PJRT literal (f32).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape: {e:?}"))
+}
+
+/// PJRT literal → native tensor (f32).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = match &shape {
+        xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+        _ => return Err(anyhow!("expected array literal")),
+    };
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    // Literal round-trips exercise the PJRT bridge without artifacts.
+    #[test]
+    fn literal_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::rand(&[2, 3, 4], -1.0, 1.0, &mut rng);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        back.assert_close(&t, 0.0);
+    }
+
+    #[test]
+    fn registry_missing_dir_errors() {
+        assert!(ArtifactRegistry::open("/nonexistent/artifacts").is_err());
+    }
+
+    #[test]
+    fn registry_rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join("conv_einsum_badmanifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(ArtifactRegistry::open(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), "{\"artifacts\": [{}]}").unwrap();
+        assert!(ArtifactRegistry::open(&dir).is_err());
+    }
+
+    // Full load-and-execute integration lives in rust/tests/runtime_aot.rs
+    // (requires `make artifacts`).
+}

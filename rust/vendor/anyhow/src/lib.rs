@@ -1,0 +1,152 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment for this repository has no network access, so the
+//! real crates.io `anyhow` cannot be fetched. This vendored shim provides the
+//! slice of its API the workspace actually uses — a message-carrying opaque
+//! [`Error`], the [`anyhow!`] macro, a [`Result`] alias, [`Error::msg`], and
+//! the [`Context`] extension trait — with the same semantics:
+//!
+//! * `Error` deliberately does **not** implement `std::error::Error`, which
+//!   is what lets the blanket `From<E: std::error::Error>` impl coexist with
+//!   the reflexive `From<Error>` used by the `?` operator.
+//! * `anyhow!("literal {captures}")`, `anyhow!("fmt {}", args)` and
+//!   `anyhow!(expr)` all work.
+//!
+//! No backtraces, no downcasting, no error chains — none of which the
+//! workspace relies on.
+
+use std::fmt;
+
+/// An opaque, message-carrying error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{}: {}", context, self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", context, e)))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", f(), e)))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_debug_carry_message() {
+        let e = anyhow!("bad {} thing", 3);
+        assert_eq!(format!("{e}"), "bad 3 thing");
+        assert_eq!(format!("{e:?}"), "bad 3 thing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let n: i32 = "7".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 7);
+        fn failing() -> Result<i32> {
+            let n: i32 = "x".parse()?;
+            Ok(n)
+        }
+        assert!(failing().is_err());
+    }
+
+    #[test]
+    fn context_wraps_messages() {
+        let r: std::result::Result<(), String> = Err("inner".to_string());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner");
+        let o: Option<i32> = None;
+        assert!(o.with_context(|| "missing").is_err());
+    }
+
+    #[test]
+    fn error_msg_accepts_strings() {
+        let e = Error::msg("plain".to_string());
+        assert_eq!(format!("{e}"), "plain");
+    }
+}
