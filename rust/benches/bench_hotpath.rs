@@ -1,16 +1,52 @@
 //! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf): executor
 //! throughput on the two atoms (contraction GFLOP/s, conv atom GFLOP/s),
 //! scalar-vs-parallel backend scaling across 1/2/4/8-thread pools, CP/TT
-//! layer steps under both backends, pairwise overhead, and coordinator
-//! request throughput with batching on vs off.
+//! layer steps under both backends, compiled-vs-uncompiled training steps
+//! (with heap-allocation counts and workspace bytes, dumped to
+//! `BENCH_compiled.json`), and coordinator request throughput with batching
+//! on vs off.
+use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
 use conv_einsum::coordinator::{EvalService, ServiceConfig};
 use conv_einsum::einsum::{parse, SizedSpec};
 use conv_einsum::exec::{pairwise, pairwise_with};
-use conv_einsum::planner::PlanOptions;
+use conv_einsum::planner::{contract_path, PlanOptions};
 use conv_einsum::tnn::{build_layer, Decomp};
+use conv_einsum::util::json::Json;
 use conv_einsum::util::rng::Rng;
 use conv_einsum::util::timing::bench;
-use conv_einsum::{conv_einsum_with, Backend, ExecOptions, Tensor};
+use conv_einsum::{compile_expr, conv_einsum_with, Backend, ExecOptions, Tensor, Workspace};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Counting allocator: makes the compiled engine's zero-alloc steady state
+/// measurable rather than asserted.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL_ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
 
 fn gflops(mults: f64, secs: f64) -> f64 {
     2.0 * mults / secs / 1e9
@@ -144,6 +180,120 @@ fn main() {
             );
         }
     }
+
+    // ---- compiled plan: compile once, run many ----------------------------
+    println!("\n== compiled plan: cached CompiledPlan vs per-call conv_einsum ==");
+    let layer = build_layer(Decomp::Cp, 1, 16, 16, 3, 3, 0.5).unwrap();
+    let factors = layer.init_factors(&mut rng);
+    let xin = Tensor::rand(&layer.input_shape(8, 32, 32), -1.0, 1.0, &mut rng);
+    let mut inputs: Vec<&Tensor> = vec![&xin];
+    inputs.extend(factors.iter());
+    let dims: Vec<Vec<usize>> = inputs.iter().map(|t| t.shape().to_vec()).collect();
+    let popts = PlanOptions::default();
+
+    let uncompiled = bench("fwd per-call conv_einsum (parse+plan+compile+run)", 2, 10, || {
+        let _ = conv_einsum_with(&layer.expr, &inputs, &popts).unwrap();
+    });
+    println!("{}", uncompiled.report());
+    let compiled = compile_expr(&layer.expr, &dims, &popts).unwrap();
+    let mut ws = Workspace::new();
+    let mut out = Tensor::zeros(compiled.out_shape());
+    compiled.run_into(&inputs, &mut ws, &mut out).unwrap(); // warm-up
+    let compiled_s = bench("fwd compiled run (cached plan + workspace)", 2, 10, || {
+        compiled.run_into(&inputs, &mut ws, &mut out).unwrap();
+    });
+    println!(
+        "{}\n  -> speedup {:.2}x vs per-call",
+        compiled_s.report(),
+        uncompiled.median_secs() / compiled_s.median_secs()
+    );
+    // Bit-identical to a fresh call (same kernels, same order).
+    let fresh = conv_einsum_with(&layer.expr, &inputs, &popts).unwrap();
+    assert_eq!(out.data(), fresh.data(), "compiled output must be bit-identical");
+
+    // Steady-state heap allocations (scalar backend: the parallel backend's
+    // scoped thread spawns allocate by design — see ROADMAP "persistent
+    // worker threads").
+    let sopts = PlanOptions {
+        backend: Backend::Scalar,
+        ..Default::default()
+    };
+    let scompiled = compile_expr(&layer.expr, &dims, &sopts).unwrap();
+    let mut sws = Workspace::new();
+    let mut sout = Tensor::zeros(scompiled.out_shape());
+    scompiled.run_into(&inputs, &mut sws, &mut sout).unwrap(); // warm-up
+    let a0 = allocs();
+    for _ in 0..50 {
+        scompiled.run_into(&inputs, &mut sws, &mut sout).unwrap();
+    }
+    let steady_allocs = allocs() - a0;
+    // The engine's headline guarantee — keep it enforced, not just printed,
+    // so a reintroduced per-run allocation fails the next bench run.
+    assert_eq!(
+        steady_allocs, 0,
+        "compiled scalar steady state must not allocate (got {steady_allocs} across 50 runs)"
+    );
+    let a1 = allocs();
+    let _ = conv_einsum_with(&layer.expr, &inputs, &sopts).unwrap();
+    let percall_allocs = allocs() - a1;
+    println!(
+        "steady-state heap allocations: {} across 50 compiled runs \
+         (vs {} for a single per-call conv_einsum); workspace {} bytes",
+        steady_allocs,
+        percall_allocs,
+        sws.bytes()
+    );
+
+    // Training step (forward tape + backward): cached compiled plan vs
+    // re-planning and re-lowering every step.
+    let meter = MemoryMeter::new();
+    let compiled_arc = Arc::new(compile_expr(&layer.expr, &dims, &popts).unwrap());
+    let t_uncompiled = bench("train step, plan+compile per call", 1, 5, || {
+        let plan = contract_path(&layer.expr, &dims, &popts).unwrap();
+        let ad = PathAutodiff::new(&plan).unwrap();
+        let _ = ad
+            .forward_backward(&inputs, |o| Tensor::full(o.shape(), 1.0), CkptPolicy::Sqrt, &meter)
+            .unwrap();
+    });
+    println!("{}", t_uncompiled.report());
+    let t_compiled = bench("train step, cached CompiledPlan", 1, 5, || {
+        let ad = PathAutodiff::from_compiled(Arc::clone(&compiled_arc));
+        let _ = ad
+            .forward_backward(&inputs, |o| Tensor::full(o.shape(), 1.0), CkptPolicy::Sqrt, &meter)
+            .unwrap();
+    });
+    println!(
+        "{}\n  -> speedup {:.2}x vs per-call",
+        t_compiled.report(),
+        t_uncompiled.median_secs() / t_compiled.median_secs()
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("compiled_plan")),
+        ("expr", Json::str(&layer.expr)),
+        ("batch", Json::num(8.0)),
+        ("fwd_uncompiled_median_s", Json::num(uncompiled.median_secs())),
+        ("fwd_compiled_median_s", Json::num(compiled_s.median_secs())),
+        (
+            "fwd_speedup",
+            Json::num(uncompiled.median_secs() / compiled_s.median_secs()),
+        ),
+        ("train_uncompiled_median_s", Json::num(t_uncompiled.median_secs())),
+        ("train_compiled_median_s", Json::num(t_compiled.median_secs())),
+        (
+            "train_speedup",
+            Json::num(t_uncompiled.median_secs() / t_compiled.median_secs()),
+        ),
+        ("steady_state_allocs_50_runs", Json::num(steady_allocs as f64)),
+        ("allocs_one_uncompiled_call", Json::num(percall_allocs as f64)),
+        ("workspace_bytes", Json::num(sws.bytes() as f64)),
+        (
+            "plan_workspace_bytes",
+            Json::num(scompiled.workspace_bytes() as f64),
+        ),
+    ]);
+    std::fs::write("BENCH_compiled.json", report.encode_pretty()).ok();
+    println!("wrote BENCH_compiled.json");
 
     // coordinator throughput, batching on vs off
     println!();

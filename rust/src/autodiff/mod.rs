@@ -8,12 +8,19 @@
 //! recomputes inside each segment during the backward pass, trading FLOPs
 //! for memory exactly as Chen et al. [21] describe; [`CkptPolicy::None`]
 //! stores nothing and recomputes each segment from the inputs.
+//!
+//! A [`PathAutodiff`] is built over a [`CompiledPlan`]: every step's atom
+//! canonicalization and kernel tables are resolved once at construction
+//! (or shared from a layer/coordinator cache via
+//! [`PathAutodiff::from_compiled`]), so both the taped forward and the VJP
+//! replay without re-canonicalizing.
 
-use crate::exec::{pairwise_vjp_with, pairwise_with, ExecOptions};
+use crate::exec::CompiledPlan;
 use crate::planner::Plan;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
 use std::cell::RefCell;
+use std::sync::Arc;
 
 /// Checkpointing policy for the backward pass.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,56 +84,61 @@ pub struct Tape {
     pub output: Tensor,
 }
 
-/// Forward + backward executor over a [`Plan`], with checkpointing.
-pub struct PathAutodiff<'p> {
-    plan: &'p Plan,
-    /// node ids consumed/produced per step, precomputed from the plan's
-    /// working-list positions.
-    step_nodes: Vec<(NodeId, NodeId, NodeId)>, // (lhs, rhs, out)
+/// Forward + backward executor over a compiled plan, with checkpointing.
+pub struct PathAutodiff {
+    compiled: Arc<CompiledPlan>,
+    /// node ids consumed/produced per step: (lhs, rhs, out).
+    step_nodes: Vec<(NodeId, NodeId, NodeId)>,
     root: NodeId,
 }
 
-impl<'p> PathAutodiff<'p> {
-    pub fn new(plan: &'p Plan) -> Result<Self> {
-        let n = plan.n_inputs;
-        let mut working: Vec<NodeId> = (0..n).collect();
-        let mut step_nodes = Vec::with_capacity(plan.steps.len());
-        for (k, step) in plan.steps.iter().enumerate() {
-            let (i, j) = (step.lhs, step.rhs);
-            if i >= working.len() || j >= working.len() || i == j {
-                return Err(anyhow!("invalid step indices in plan"));
-            }
-            let out = n + k;
-            step_nodes.push((working[i], working[j], out));
-            let (hi, lo) = if i > j { (i, j) } else { (j, i) };
-            working.remove(hi);
-            working.remove(lo);
-            working.push(out);
-        }
-        if working.len() != 1 {
-            return Err(anyhow!("plan does not reduce to a single output"));
-        }
-        Ok(PathAutodiff {
-            plan,
-            root: working[0],
+impl PathAutodiff {
+    /// Compile `plan` and build the executor. Callers that evaluate the
+    /// same plan repeatedly should compile once and use
+    /// [`PathAutodiff::from_compiled`] instead.
+    pub fn new(plan: &Plan) -> Result<Self> {
+        let compiled = CompiledPlan::compile(plan).map_err(|e| anyhow!("{e}"))?;
+        Ok(Self::from_compiled(Arc::new(compiled)))
+    }
+
+    /// Build the executor over an already-compiled (typically cached) plan.
+    /// Construction is O(steps) bookkeeping — no re-canonicalization.
+    pub fn from_compiled(compiled: Arc<CompiledPlan>) -> PathAutodiff {
+        let n = compiled.n_inputs();
+        let step_nodes: Vec<(NodeId, NodeId, NodeId)> = (0..compiled.n_steps())
+            .map(|k| {
+                let (l, r) = compiled.step(k).nodes();
+                (l, r, n + k)
+            })
+            .collect();
+        // The last step always produces the root (compile validated that
+        // the plan reduces to a single output).
+        let root = n + compiled.n_steps() - 1;
+        PathAutodiff {
+            compiled,
             step_nodes,
-        })
+            root,
+        }
+    }
+
+    /// The compiled plan this executor replays.
+    pub fn compiled(&self) -> &Arc<CompiledPlan> {
+        &self.compiled
     }
 
     fn n(&self) -> usize {
-        self.plan.n_inputs
+        self.compiled.n_inputs()
     }
 
     /// Execute one step given node values, metering the allocation.
     fn run_step(&self, k: usize, vals: &mut [Option<Tensor>], meter: &MemoryMeter) {
         let (l, r, o) = self.step_nodes[k];
-        let step = &self.plan.steps[k];
+        let st = self.compiled.step(k);
         let a = vals[l].as_ref().expect("lhs value live");
         let b = vals[r].as_ref().expect("rhs value live");
-        let opts = ExecOptions {
-            backend: self.plan.backend,
-        };
-        let out = pairwise_with(&step.sized, a, b, &step.moduli, &opts);
+        let out = st
+            .atom()
+            .execute_with_kernel(st.kernel_tables(), a, b, self.compiled.exec_options());
         meter.alloc(out.bytes());
         vals[o] = Some(out);
     }
@@ -153,12 +165,12 @@ impl<'p> PathAutodiff<'p> {
         if inputs.len() != n {
             return Err(anyhow!("expected {} inputs, got {}", n, inputs.len()));
         }
-        let mut vals: Vec<Option<Tensor>> = vec![None; n + self.plan.steps.len()];
+        let mut vals: Vec<Option<Tensor>> = vec![None; n + self.step_nodes.len()];
         for (i, t) in inputs.iter().enumerate() {
             meter.alloc(t.bytes());
             vals[i] = Some((*t).clone());
         }
-        for k in 0..self.plan.steps.len() {
+        for k in 0..self.step_nodes.len() {
             self.run_step(k, &mut vals, meter);
             let (l, r, _) = self.step_nodes[k];
             for node in [l, r] {
@@ -168,7 +180,7 @@ impl<'p> PathAutodiff<'p> {
             }
         }
         let root = vals[self.root].take().expect("root value");
-        let out = match &self.plan.final_perm {
+        let out = match &self.compiled.plan().final_perm {
             Some(p) => {
                 let o = root.permute(p);
                 meter.alloc(o.bytes());
@@ -206,7 +218,7 @@ impl<'p> PathAutodiff<'p> {
         meter: &MemoryMeter,
     ) -> Result<Tape> {
         let n = self.n();
-        let ksteps = self.plan.steps.len();
+        let ksteps = self.step_nodes.len();
         if inputs.len() != n {
             return Err(anyhow!("expected {} inputs, got {}", n, inputs.len()));
         }
@@ -250,7 +262,7 @@ impl<'p> PathAutodiff<'p> {
         }
 
         let root_val = vals[self.root].clone().expect("root");
-        let output = match &self.plan.final_perm {
+        let output = match &self.compiled.plan().final_perm {
             Some(p) => {
                 let o = root_val.permute(p);
                 meter.alloc(o.bytes());
@@ -271,10 +283,10 @@ impl<'p> PathAutodiff<'p> {
         meter: &MemoryMeter,
     ) -> Result<Vec<Tensor>> {
         let n = self.n();
-        let ksteps = self.plan.steps.len();
+        let ksteps = self.step_nodes.len();
         let vals = &mut tape.vals;
         meter.alloc(dout.bytes());
-        let droot = match &self.plan.final_perm {
+        let droot = match &self.compiled.plan().final_perm {
             Some(p) => {
                 let inv = invert(p);
                 let d = dout.permute(&inv);
@@ -296,19 +308,16 @@ impl<'p> PathAutodiff<'p> {
                     self.recompute(node, vals, meter);
                 }
             }
-            let step = &self.plan.steps[k];
+            let st = self.compiled.step(k);
             let dnode = grads[o].take().expect("cotangent for step output");
             let a = vals[l].as_ref().unwrap();
             let b = vals[r].as_ref().unwrap();
-            let (da, db) = pairwise_vjp_with(
-                &step.sized,
+            let (da, db) = st.atom().vjp_with_kernel(
+                st.kernel_tables(),
                 a,
                 b,
                 &dnode,
-                &step.moduli,
-                &ExecOptions {
-                    backend: self.plan.backend,
-                },
+                self.compiled.exec_options(),
             );
             meter.free(dnode.bytes());
             meter.alloc(da.bytes());

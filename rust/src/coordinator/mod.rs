@@ -10,8 +10,17 @@
 //! Workers execute along the planner's FLOPs-optimal path on the native
 //! engine, or via a PJRT artifact when one is registered for the layer.
 //!
+//! Layer evaluation is **compile-once, run-many**: every `(layer, batch,
+//! spatial)` key is planned and lowered to a [`CompiledPlan`] exactly once
+//! (with [`ServiceConfig::backend`] hoisted onto the cached entry, so
+//! batch-level and step-level pool arbitration always see one consistent
+//! backend per entry), and ad-hoc expressions share a service-wide
+//! [`PlanCache`] keyed by `(expr, dims, backend, strategy)`. Each worker
+//! thread owns one reusable [`Workspace`], so steady-state execution
+//! allocates only the output tensors.
+//!
 //! Workers and the executor's intra-step parallelism share one pool: each
-//! plan carries [`ServiceConfig::backend`], and under the default
+//! compiled plan carries [`ServiceConfig::backend`], and under the default
 //! [`Backend::Parallel`]` { threads: 0 }` (= the global
 //! [`crate::parallel::Pool`]) the pool's busy-flag arbitration means that
 //! when several workers execute batches concurrently, exactly one fans out
@@ -27,8 +36,8 @@ mod metrics;
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 
 use crate::einsum::{parse, SizedSpec};
-use crate::exec::{execute_path, Backend};
-use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
+use crate::exec::{Backend, CompiledPlan, PlanCache, Workspace};
+use crate::planner::{plan_with, PlanOptions, Strategy};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -73,8 +82,9 @@ impl Default for ServiceConfig {
 struct LayerEntry {
     expr: String,
     factors: Vec<Tensor>,
-    /// Per-(batch, spatial) plan cache.
-    plans: HashMap<(usize, usize, usize), Arc<Plan>>,
+    /// Per-(batch, spatial) compiled-plan cache; each entry carries its
+    /// hoisted `ExecOptions`, so every replay uses one consistent backend.
+    plans: HashMap<(usize, usize, usize), Arc<CompiledPlan>>,
 }
 
 /// One in-flight request.
@@ -173,7 +183,7 @@ pub struct EvalService {
 /// A batch dispatched to workers.
 struct WorkItem {
     layer: String,
-    plan: Arc<Plan>,
+    plan: Arc<CompiledPlan>,
     factors: Arc<Vec<Tensor>>,
     requests: Vec<Pending>,
 }
@@ -201,6 +211,8 @@ impl EvalService {
         let (wtx, wrx) = sync_channel::<WorkMsg>(config.workers * 2);
         let wrx = Arc::new(Mutex::new(wrx));
         let stop = Arc::new(AtomicBool::new(false));
+        // Compiled-plan cache shared by all workers (ad-hoc expressions).
+        let cache = Arc::new(PlanCache::new());
 
         let mut registry: HashMap<String, LayerEntry> = HashMap::new();
         for (name, expr, factors) in layers {
@@ -220,10 +232,11 @@ impl EvalService {
         for wid in 0..config.workers.max(1) {
             let wrx = Arc::clone(&wrx);
             let metrics = Arc::clone(&metrics);
+            let cache = Arc::clone(&cache);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("conv-einsum-worker-{wid}"))
-                    .spawn(move || worker_loop(wrx, metrics))
+                    .spawn(move || worker_loop(wrx, metrics, cache))
                     .expect("spawn worker"),
             );
         }
@@ -420,24 +433,60 @@ fn plan_layer(
     single_shape: &[usize],
     strategy: Strategy,
     backend: Backend,
-) -> Result<Plan, String> {
+) -> Result<CompiledPlan, String> {
     let spec = parse(&entry.expr).map_err(|e| e.to_string())?;
     let mut x_dims = single_shape.to_vec();
     x_dims[0] = batch;
     let mut dims = vec![x_dims];
     dims.extend(entry.factors.iter().map(|f| f.shape().to_vec()));
     let sized = SizedSpec::new(spec, dims)?;
-    plan_with(
+    let plan = plan_with(
         &sized,
         &PlanOptions {
             strategy,
             backend,
             ..Default::default()
         },
-    )
+    )?;
+    CompiledPlan::compile_arc(Arc::new(plan)).map_err(|e| e.to_string())
 }
 
-fn worker_loop(wrx: Arc<Mutex<Receiver<WorkMsg>>>, metrics: Arc<ServiceMetrics>) {
+/// Evaluate an ad-hoc expression through the shared compile-once cache
+/// (single-input expressions have no pairwise plan and run directly). The
+/// expression is parsed exactly once per request — the parsed spec is
+/// handed to the cache so a miss does not re-parse.
+fn eval_adhoc(
+    cache: &PlanCache,
+    ws: &mut Workspace,
+    expr: &str,
+    tensors: &[Tensor],
+    strategy: Strategy,
+    backend: Backend,
+) -> Result<Tensor> {
+    let refs: Vec<&Tensor> = tensors.iter().collect();
+    let opts = PlanOptions {
+        strategy,
+        backend,
+        ..Default::default()
+    };
+    let spec = parse(expr).map_err(|e| anyhow!("{e}"))?;
+    let dims: Vec<Vec<usize>> = refs.iter().map(|t| t.shape().to_vec()).collect();
+    if spec.n_inputs() < 2 {
+        let sized = SizedSpec::new(spec, dims).map_err(|e| anyhow!("{e}"))?;
+        return Ok(crate::exec::single_input_eval(&sized, refs[0]));
+    }
+    let compiled = cache.get_or_compile_parsed(expr, &spec, &dims, &opts)?;
+    compiled.run(&refs, ws)
+}
+
+fn worker_loop(
+    wrx: Arc<Mutex<Receiver<WorkMsg>>>,
+    metrics: Arc<ServiceMetrics>,
+    cache: Arc<PlanCache>,
+) {
+    // One reusable workspace per worker thread: compiled plans of any shape
+    // run against it, and it only ever grows.
+    let mut ws = Workspace::new();
     loop {
         let msg = {
             let rx = wrx.lock().unwrap();
@@ -457,7 +506,7 @@ fn worker_loop(wrx: Arc<Mutex<Receiver<WorkMsg>>>, metrics: Arc<ServiceMetrics>)
                 let x = Tensor::from_vec(&shape, data);
                 let mut inputs: Vec<&Tensor> = vec![&x];
                 inputs.extend(item.factors.iter());
-                let result = execute_path(&item.plan, &inputs);
+                let result = item.plan.run(&inputs, &mut ws);
                 match result {
                     Ok(y) => {
                         // Split along axis 0 back to requesters.
@@ -488,16 +537,7 @@ fn worker_loop(wrx: Arc<Mutex<Receiver<WorkMsg>>>, metrics: Arc<ServiceMetrics>)
                 backend,
             }) => {
                 let t0 = Instant::now();
-                let refs: Vec<&Tensor> = tensors.iter().collect();
-                let result = crate::exec::conv_einsum_with(
-                    &expr,
-                    &refs,
-                    &PlanOptions {
-                        strategy,
-                        backend,
-                        ..Default::default()
-                    },
-                );
+                let result = eval_adhoc(&cache, &mut ws, &expr, &tensors, strategy, backend);
                 match &result {
                     Ok(_) => metrics.note_done(t0.elapsed()),
                     Err(_) => metrics.note_error(),

@@ -301,6 +301,32 @@ fn canonical_input(x: &Tensor, presum: &[usize], perm: &[usize]) -> Tensor {
 /// counts always take the parallel path (benchmarks and tests rely on it).
 const AUTO_PARALLEL_MIN_WORK: usize = 1 << 16;
 
+/// Kernel tables for one [`Atom`], built lazily per direction and cached:
+/// the head-axes triple table and run-coalesced last conv axis driving the
+/// forward kernels, and the fully combined triple table driving the
+/// backward kernels. Forward-only paths (inference plans, one-shot
+/// `pairwise`) never pay for the backward table and vice versa; a repeat
+/// caller ([`crate::exec::CompiledPlan`], the autodiff tape) initializes
+/// each at most once. Unused for pure contractions (the matmul kernels need
+/// no tables). Build the holder with [`Atom::kernel`].
+#[derive(Debug, Clone, Default)]
+pub struct AtomKernel {
+    fwd: std::sync::OnceLock<(Vec<(u32, u32, u32)>, Vec<(u32, u32, u32, u32)>)>,
+    combined: std::sync::OnceLock<Vec<(u32, u32, u32)>>,
+}
+
+impl AtomKernel {
+    /// Forward tables (head triples + last-axis runs); conv atoms only.
+    fn fwd_tables(&self, atom: &Atom) -> &(Vec<(u32, u32, u32)>, Vec<(u32, u32, u32, u32)>) {
+        self.fwd.get_or_init(|| atom.head_and_runs())
+    }
+
+    /// Backward table (fully combined triples); conv atoms only.
+    fn combined_table(&self, atom: &Atom) -> &Vec<(u32, u32, u32)> {
+        self.combined.get_or_init(|| atom.combined_triples())
+    }
+}
+
 impl Atom {
     /// Estimated forward multiplications: G·T·N·S·∏(Iₐᶜ·I_bᶜ).
     fn flop_estimate(&self) -> usize {
@@ -314,11 +340,30 @@ impl Atom {
     }
 
     /// Total elements across the conv axes of input a / input b / output.
-    fn conv_sizes(&self) -> (usize, usize, usize) {
+    pub fn conv_sizes(&self) -> (usize, usize, usize) {
         let pa: usize = self.conv.iter().map(|c| c.ia).product();
         let pb: usize = self.conv.iter().map(|c| c.ib).product();
         let po: usize = self.conv.iter().map(|c| c.out).product();
         (pa, pb, po)
+    }
+
+    /// Flat lengths of (canonical input a, canonical input b, raw kernel
+    /// output) — the buffer sizes a workspace-backed execution needs.
+    pub fn canonical_lens(&self) -> (usize, usize, usize) {
+        let (pa, pb, po) = self.conv_sizes();
+        (
+            self.g * self.t * self.s * pa,
+            self.g * self.n * self.s * pb,
+            self.g * self.t * self.n * po,
+        )
+    }
+
+    /// Create the (lazily-populated) kernel-table holder for this atom.
+    /// Holding one per compiled step — instead of rebuilding tables on
+    /// every execution — is what makes [`crate::exec::CompiledPlan`]
+    /// replays cheap.
+    pub fn kernel(&self) -> AtomKernel {
+        AtomKernel::default()
     }
 
     /// Build the flattened combined triple table: offsets into the a-conv
@@ -398,24 +443,53 @@ impl Atom {
         self.execute_with(a, b, &ExecOptions::default())
     }
 
-    /// Execute the atom with an explicit backend.
+    /// Execute the atom with an explicit backend (tables computed on the
+    /// fly; repeat callers should precompute them with [`Atom::kernel`] and
+    /// use [`Atom::execute_with_kernel`]).
     pub fn execute_with(&self, a: &Tensor, b: &Tensor, opts: &ExecOptions) -> Tensor {
+        self.execute_with_kernel(&self.kernel(), a, b, opts)
+    }
+
+    /// Execute the atom with precomputed kernel tables.
+    pub fn execute_with_kernel(
+        &self,
+        kernel: &AtomKernel,
+        a: &Tensor,
+        b: &Tensor,
+        opts: &ExecOptions,
+    ) -> Tensor {
         let ac = canonical_input(a, &self.presum_a, &self.perm_a);
         let bc = canonical_input(b, &self.presum_b, &self.perm_b);
-        let (pa, pb, po) = self.conv_sizes();
-        let (g, t, n, s) = (self.g, self.t, self.n, self.s);
-        debug_assert_eq!(ac.len(), g * t * s * pa);
-        debug_assert_eq!(bc.len(), g * n * s * pb);
+        let (a_len, b_len, out_len) = self.canonical_lens();
+        debug_assert_eq!(ac.len(), a_len);
+        debug_assert_eq!(bc.len(), b_len);
         let av = ac.data();
         let bv = bc.data();
-        let mut out = vec![0.0f32; g * t * n * po];
+        let mut out = vec![0.0f32; out_len];
+        self.forward_into(kernel, av, bv, &mut out, opts);
+        Tensor::from_vec(&[out_len], out)
+            .reshape(&self.raw_out_dims)
+            .permute(&self.out_perm)
+    }
 
+    /// Run the forward kernels on pre-canonicalized flat inputs, writing
+    /// into `out` (which the caller must have zeroed), honouring the
+    /// backend. This is the workspace-level entry point used by
+    /// [`crate::exec::CompiledPlan`].
+    pub fn forward_into(
+        &self,
+        kernel: &AtomKernel,
+        av: &[f32],
+        bv: &[f32],
+        out: &mut [f32],
+        opts: &ExecOptions,
+    ) {
         match opts.backend {
-            Backend::Scalar => self.forward_scalar(av, bv, &mut out),
+            Backend::Scalar => self.forward_scalar(kernel, av, bv, out),
             Backend::Parallel { threads }
                 if threads == 0 && self.flop_estimate() < AUTO_PARALLEL_MIN_WORK =>
             {
-                self.forward_scalar(av, bv, &mut out)
+                self.forward_scalar(kernel, av, bv, out)
             }
             Backend::Parallel { threads } => {
                 let owned;
@@ -425,17 +499,13 @@ impl Atom {
                     owned = Pool::new(threads);
                     &owned
                 };
-                self.forward_parallel(av, bv, &mut out, pool);
+                self.forward_parallel(kernel, av, bv, out, pool);
             }
         }
-
-        Tensor::from_vec(&[g * t * n * po], out)
-            .reshape(&self.raw_out_dims)
-            .permute(&self.out_perm)
     }
 
     /// Original single-threaded forward kernels.
-    fn forward_scalar(&self, av: &[f32], bv: &[f32], out: &mut [f32]) {
+    fn forward_scalar(&self, kernel: &AtomKernel, av: &[f32], bv: &[f32], out: &mut [f32]) {
         let (pa, pb, po) = self.conv_sizes();
         let (g, t, n, s) = (self.g, self.t, self.n, self.s);
         if self.conv.is_empty() {
@@ -450,7 +520,7 @@ impl Atom {
         } else {
             // §Perf run-coalesced kernel: head axes via triple table, last
             // axis as contiguous axpy runs (see EXPERIMENTS.md §Perf/L3).
-            let (head, runs) = self.head_and_runs();
+            let (head, runs) = kernel.fwd_tables(self);
             let last = self.conv.last().unwrap();
             let (la, lb, lo) = (last.ia, last.ib, last.out);
             for gi in 0..g {
@@ -460,11 +530,11 @@ impl Atom {
                         for si in 0..s {
                             let abase = ((gi * t + ti) * s + si) * pa;
                             let bbase = ((gi * n + ni) * s + si) * pb;
-                            for &(ao, bo, poo) in &head {
+                            for &(ao, bo, poo) in head {
                                 let arow = abase + ao as usize * la;
                                 let brow = bbase + bo as usize * lb;
                                 let orow = ob + poo as usize * lo;
-                                for &(ib, ia0, p0, len) in &runs {
+                                for &(ib, ia0, p0, len) in runs {
                                     let w = bv[brow + ib as usize];
                                     if w == 0.0 {
                                         continue;
@@ -489,7 +559,14 @@ impl Atom {
     /// dispatched over the worker pool. The per-row loop nest matches the
     /// scalar kernel's accumulation order exactly (conv case), so results
     /// are bit-identical to `forward_scalar` per element.
-    fn forward_parallel(&self, av: &[f32], bv: &[f32], out: &mut [f32], pool: &Pool) {
+    fn forward_parallel(
+        &self,
+        kernel: &AtomKernel,
+        av: &[f32],
+        bv: &[f32],
+        out: &mut [f32],
+        pool: &Pool,
+    ) {
         let (pa, pb, po) = self.conv_sizes();
         let (t, n, s) = (self.t, self.n, self.s);
         if self.conv.is_empty() {
@@ -505,7 +582,7 @@ impl Atom {
                 }
             });
         } else {
-            let (head, runs) = self.head_and_runs();
+            let (head, runs) = kernel.fwd_tables(self);
             let last = self.conv.last().unwrap();
             let (la, lb, lo) = (last.ia, last.ib, last.out);
             // One task per conv output row out[g,t,n,·] (length po).
@@ -516,11 +593,11 @@ impl Atom {
                 for si in 0..s {
                     let abase = ((gi * t + ti) * s + si) * pa;
                     let bbase = ((gi * n + ni) * s + si) * pb;
-                    for &(ao, bo, poo) in &head {
+                    for &(ao, bo, poo) in head {
                         let arow = abase + ao as usize * la;
                         let brow = bbase + bo as usize * lb;
                         let obase = poo as usize * lo;
-                        for &(ib, ia0, p0, len) in &runs {
+                        for &(ib, ia0, p0, len) in runs {
                             let w = bv[brow + ib as usize];
                             if w == 0.0 {
                                 continue;
@@ -546,9 +623,22 @@ impl Atom {
         self.vjp_with(a, b, dout, &ExecOptions::default())
     }
 
-    /// Vector–Jacobian product with an explicit backend.
+    /// Vector–Jacobian product with an explicit backend (tables computed on
+    /// the fly; repeat callers should use [`Atom::vjp_with_kernel`]).
     pub fn vjp_with(
         &self,
+        a: &Tensor,
+        b: &Tensor,
+        dout: &Tensor,
+        opts: &ExecOptions,
+    ) -> (Tensor, Tensor) {
+        self.vjp_with_kernel(&self.kernel(), a, b, dout, opts)
+    }
+
+    /// Vector–Jacobian product with precomputed kernel tables.
+    pub fn vjp_with_kernel(
+        &self,
+        kernel: &AtomKernel,
         a: &Tensor,
         b: &Tensor,
         dout: &Tensor,
@@ -565,25 +655,7 @@ impl Atom {
         let dv = dout_c.data();
         let mut da = vec![0.0f32; av.len()];
         let mut db = vec![0.0f32; bv.len()];
-
-        match opts.backend {
-            Backend::Scalar => self.backward_scalar(av, bv, dv, &mut da, &mut db),
-            Backend::Parallel { threads }
-                if threads == 0 && self.flop_estimate() < AUTO_PARALLEL_MIN_WORK =>
-            {
-                self.backward_scalar(av, bv, dv, &mut da, &mut db)
-            }
-            Backend::Parallel { threads } => {
-                let owned;
-                let pool: &Pool = if threads == 0 {
-                    Pool::global()
-                } else {
-                    owned = Pool::new(threads);
-                    &owned
-                };
-                self.backward_parallel(av, bv, dv, &mut da, &mut db, pool);
-            }
-        }
+        self.backward_into(kernel, av, bv, dv, &mut da, &mut db, opts);
 
         // Undo canonicalization: permute back, then re-broadcast pre-summed
         // axes (∂/∂x of a sum over an axis broadcasts the cotangent).
@@ -603,8 +675,50 @@ impl Atom {
         (da_t, db_t)
     }
 
+    /// Run the backward kernels on pre-canonicalized flat data, accumulating
+    /// into `da`/`db` (which the caller must have zeroed), honouring the
+    /// backend.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_into(
+        &self,
+        kernel: &AtomKernel,
+        av: &[f32],
+        bv: &[f32],
+        dv: &[f32],
+        da: &mut [f32],
+        db: &mut [f32],
+        opts: &ExecOptions,
+    ) {
+        match opts.backend {
+            Backend::Scalar => self.backward_scalar(kernel, av, bv, dv, da, db),
+            Backend::Parallel { threads }
+                if threads == 0 && self.flop_estimate() < AUTO_PARALLEL_MIN_WORK =>
+            {
+                self.backward_scalar(kernel, av, bv, dv, da, db)
+            }
+            Backend::Parallel { threads } => {
+                let owned;
+                let pool: &Pool = if threads == 0 {
+                    Pool::global()
+                } else {
+                    owned = Pool::new(threads);
+                    &owned
+                };
+                self.backward_parallel(kernel, av, bv, dv, da, db, pool);
+            }
+        }
+    }
+
     /// Original single-threaded backward kernels.
-    fn backward_scalar(&self, av: &[f32], bv: &[f32], dv: &[f32], da: &mut [f32], db: &mut [f32]) {
+    fn backward_scalar(
+        &self,
+        kernel: &AtomKernel,
+        av: &[f32],
+        bv: &[f32],
+        dv: &[f32],
+        da: &mut [f32],
+        db: &mut [f32],
+    ) {
         let (pa, pb, po) = self.conv_sizes();
         let (g, t, n, s) = (self.g, self.t, self.n, self.s);
         if self.conv.is_empty() {
@@ -622,7 +736,7 @@ impl Atom {
                 matmul_tn(d_g, a_g, db_g, n, s, t);
             }
         } else {
-            let combined = self.combined_triples();
+            let combined = kernel.combined_table(self);
             for gi in 0..g {
                 for ti in 0..t {
                     for ni in 0..n {
@@ -630,7 +744,7 @@ impl Atom {
                         for si in 0..s {
                             let abase = ((gi * t + ti) * s + si) * pa;
                             let bbase = ((gi * n + ni) * s + si) * pb;
-                            for &(ao, bo, poo) in &combined {
+                            for &(ao, bo, poo) in combined {
                                 let do_ = dv[ob + poo as usize];
                                 da[abase + ao as usize] += do_ * bv[bbase + bo as usize];
                                 db[bbase + bo as usize] += do_ * av[abase + ao as usize];
@@ -647,8 +761,10 @@ impl Atom {
     /// `da[g,t,·,·]` and reduces over `n`), `db` over `(g, n)` blocks
     /// (reducing over `t`). Per-element accumulation order matches the
     /// scalar kernel, so results are bit-identical.
+    #[allow(clippy::too_many_arguments)]
     fn backward_parallel(
         &self,
+        kernel: &AtomKernel,
         av: &[f32],
         bv: &[f32],
         dv: &[f32],
@@ -688,7 +804,7 @@ impl Atom {
                 }
             });
         } else {
-            let combined = self.combined_triples();
+            let combined = kernel.combined_table(self);
             pool.run_chunks(da, s * pa, |row, da_block| {
                 let ti = row % t;
                 let gi = row / t;
@@ -697,7 +813,7 @@ impl Atom {
                     for si in 0..s {
                         let bbase = ((gi * n + ni) * s + si) * pb;
                         let abase = si * pa;
-                        for &(ao, bo, poo) in &combined {
+                        for &(ao, bo, poo) in combined {
                             da_block[abase + ao as usize] +=
                                 dv[ob + poo as usize] * bv[bbase + bo as usize];
                         }
@@ -712,7 +828,7 @@ impl Atom {
                     for si in 0..s {
                         let abase = ((gi * t + ti) * s + si) * pa;
                         let bbase = si * pb;
-                        for &(ao, bo, poo) in &combined {
+                        for &(ao, bo, poo) in combined {
                             db_block[bbase + bo as usize] +=
                                 dv[ob + poo as usize] * av[abase + ao as usize];
                         }

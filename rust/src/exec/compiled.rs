@@ -1,0 +1,857 @@
+//! Compile-once, run-many execution engine.
+//!
+//! The paper's thesis is that the evaluation *path* through a tensorial
+//! convolution determines its cost — but in a training or serving loop the
+//! same expression with the same shapes executes millions of times, and
+//! re-discovering the path (parse → plan → canonicalize every atom →
+//! allocate every intermediate) on each call wastes most of the win. This
+//! module lowers a [`Plan`] **once** into a [`CompiledPlan`]:
+//!
+//! * every step carries its precomputed [`Atom`] (pre-sum axes, canonical
+//!   permutations, conv triple tables) and [`AtomKernel`] (head/run/combined
+//!   tables), so replays do zero canonicalization analysis;
+//! * a liveness-based workspace layout assigns every intermediate a range in
+//!   a value arena, reusing ranges as soon as their producer dies — the
+//!   caller holds the [`Workspace`] and hands it back on every call, so the
+//!   steady-state path performs **no heap allocations** after warm-up
+//!   (`Backend::Scalar`; the parallel backend still spawns scoped threads);
+//! * input canonicalization (permute / pre-sum) runs through the
+//!   workspace-backed [`crate::tensor::permute_into`] /
+//!   [`crate::tensor::sum_axis_into`] kernels, optionally fanned out over
+//!   the worker pool — the previously single-threaded stretch of the hot
+//!   path.
+//!
+//! # Workspace ownership
+//!
+//! A [`Workspace`] is plan-agnostic scratch capacity: it grows to fit
+//! whatever plan runs against it and holds no results between calls, so one
+//! workspace per thread serves any number of compiled plans (the
+//! coordinator gives each worker one). It is `Send` but not shareable —
+//! runs need `&mut`.
+//!
+//! # Invalidation
+//!
+//! A compiled plan is specialized to exact input shapes (and the backend /
+//! strategy recorded at planning time). [`CompiledPlan::run`] rejects
+//! mismatched shapes with an error telling the caller to recompile; layer
+//! caches key compiled plans by `(batch, height, width)` and the shared
+//! [`PlanCache`] keys them by [`PlanKey`] `(expr, dims, backend, strategy,
+//! training, conv kinds)`.
+//!
+//! # Determinism
+//!
+//! Replays are bit-identical to a fresh [`crate::exec::conv_einsum`] call:
+//! the canonicalization kernels replicate `Tensor::sum_axis` /
+//! `Tensor::permute` accumulation orders exactly, and the step kernels are
+//! the same code both paths execute.
+
+use crate::einsum::{parse, ConvKind, EinsumSpec, SizedSpec};
+use crate::exec::atom::{canonicalize, Atom, AtomKernel};
+use crate::exec::{Backend, ExecOptions};
+use crate::parallel::Pool;
+use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
+use crate::tensor::{permute_into, sum_axis_into, Tensor};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Where a step operand's flat data lives at run time.
+#[derive(Debug, Clone)]
+enum Operand {
+    /// Caller-provided input tensor `i`.
+    Input(usize),
+    /// Intermediate produced by an earlier step, at this value-arena range.
+    Value(Range<usize>),
+}
+
+/// Fully-resolved canonicalization recipe for one operand: every pre-sum
+/// stage's shape is precomputed, so replays do no shape bookkeeping (and no
+/// allocation).
+#[derive(Debug, Clone)]
+struct CanonOp {
+    /// (input shape, axis to sum) per pre-sum stage, in execution order.
+    sums: Vec<(Vec<usize>, usize)>,
+    /// Shape after all pre-sums (input to the permutation).
+    post_shape: Vec<usize>,
+    /// Canonical permutation (the atom's `perm_a`/`perm_b`).
+    perm: Vec<usize>,
+    /// No pre-sums and an identity permutation: read the source in place.
+    identity: bool,
+}
+
+fn canon_op(dims: &[usize], presum: &[usize], perm: &[usize]) -> CanonOp {
+    let mut shape = dims.to_vec();
+    let mut sums = Vec::with_capacity(presum.len());
+    for &ax in presum {
+        sums.push((shape.clone(), ax));
+        shape.remove(ax);
+    }
+    let identity = sums.is_empty() && is_identity(perm);
+    CanonOp {
+        sums,
+        post_shape: shape,
+        perm: perm.to_vec(),
+        identity,
+    }
+}
+
+/// One fully-resolved step of a compiled plan.
+#[derive(Debug, Clone)]
+pub struct CompiledStep {
+    /// DAG node ids (inputs are `0..n`; step `k` produces node `n + k`).
+    lhs_node: usize,
+    rhs_node: usize,
+    /// Run-time locations of the operands' flat data.
+    lhs_src: Operand,
+    rhs_src: Operand,
+    /// Canonicalization recipes for the two operands.
+    canon_a: CanonOp,
+    canon_b: CanonOp,
+    /// Value-arena range receiving this step's output (post `out_perm`).
+    out: Range<usize>,
+    /// Whether `atom.out_perm` is the identity (raw layout == working-list
+    /// layout), precomputed so replays skip the per-run check.
+    out_identity: bool,
+    atom: Atom,
+    kernel: AtomKernel,
+}
+
+impl CompiledStep {
+    pub fn atom(&self) -> &Atom {
+        &self.atom
+    }
+
+    pub fn kernel_tables(&self) -> &AtomKernel {
+        &self.kernel
+    }
+
+    /// The (lhs, rhs) DAG node ids this step consumes.
+    pub fn nodes(&self) -> (usize, usize) {
+        (self.lhs_node, self.rhs_node)
+    }
+}
+
+/// Reusable, plan-agnostic scratch memory for [`CompiledPlan::run`]. Create
+/// once per thread, hand back on every call; it grows to the largest plan it
+/// has served and is never shrunk, so the steady state allocates nothing.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Liveness-packed arena holding intermediate (working-list) tensors.
+    values: Vec<f32>,
+    /// Canonicalized operand a (when a transform is needed).
+    scratch_a: Vec<f32>,
+    /// Canonicalized operand b.
+    scratch_b: Vec<f32>,
+    /// Raw kernel output, before `out_perm`.
+    scratch_out: Vec<f32>,
+    /// Ping-pong buffers for pre-sum chains.
+    presum0: Vec<f32>,
+    presum1: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Total capacity currently held, in bytes.
+    pub fn bytes(&self) -> usize {
+        std::mem::size_of::<f32>()
+            * (self.values.len()
+                + self.scratch_a.len()
+                + self.scratch_b.len()
+                + self.scratch_out.len()
+                + self.presum0.len()
+                + self.presum1.len())
+    }
+
+    fn ensure(&mut self, plan: &CompiledPlan) {
+        grow(&mut self.values, plan.values_len);
+        grow(&mut self.scratch_a, plan.scratch_a_len);
+        grow(&mut self.scratch_b, plan.scratch_b_len);
+        grow(&mut self.scratch_out, plan.scratch_out_len);
+        grow(&mut self.presum0, plan.presum_len);
+        grow(&mut self.presum1, plan.presum_len);
+    }
+}
+
+fn grow(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+}
+
+fn is_identity(perm: &[usize]) -> bool {
+    perm.iter().enumerate().all(|(i, &p)| i == p)
+}
+
+/// Compile-time arena allocator: assigns intermediates to value-arena ranges,
+/// reusing (and coalescing) ranges whose producer is dead.
+struct ArenaAlloc {
+    len: usize,
+    free: Vec<Range<usize>>,
+}
+
+impl ArenaAlloc {
+    fn new() -> ArenaAlloc {
+        ArenaAlloc {
+            len: 0,
+            free: Vec::new(),
+        }
+    }
+
+    fn alloc(&mut self, size: usize) -> Range<usize> {
+        // Best fit: the smallest free block that holds `size`.
+        let mut best: Option<usize> = None;
+        for (i, r) in self.free.iter().enumerate() {
+            let cap = r.end - r.start;
+            if cap >= size {
+                let better = match best {
+                    Some(b) => cap < self.free[b].end - self.free[b].start,
+                    None => true,
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+        }
+        if let Some(i) = best {
+            let r = self.free.remove(i);
+            if r.end - r.start > size {
+                self.free.push(r.start + size..r.end);
+            }
+            return r.start..r.start + size;
+        }
+        let start = self.len;
+        self.len += size;
+        start..self.len
+    }
+
+    fn free(&mut self, r: Range<usize>) {
+        if r.start == r.end {
+            return;
+        }
+        self.free.push(r);
+        self.free.sort_by_key(|r| r.start);
+        let mut merged: Vec<Range<usize>> = Vec::with_capacity(self.free.len());
+        for r in self.free.drain(..) {
+            match merged.last_mut() {
+                Some(last) if last.end == r.start => last.end = r.end,
+                _ => merged.push(r),
+            }
+        }
+        self.free = merged;
+    }
+}
+
+/// Largest intermediate produced while pre-summing `presum` axes (descending
+/// order) out of a tensor of `dims`; 0 when no pre-summing happens.
+fn presum_chain_max(dims: &[usize], presum: &[usize]) -> usize {
+    if presum.is_empty() {
+        return 0;
+    }
+    let mut shape = dims.to_vec();
+    let mut max = 0usize;
+    for &ax in presum {
+        shape.remove(ax);
+        max = max.max(shape.iter().product::<usize>());
+    }
+    max
+}
+
+/// A [`Plan`] lowered into a sequence of fully-resolved steps plus a
+/// liveness-based workspace layout. Compile once, run many — see the module
+/// docs for ownership and invalidation rules. Cheap to share: wrap in an
+/// [`Arc`] (the coordinator and layer caches do).
+#[derive(Debug, Clone)]
+pub struct CompiledPlan {
+    plan: Arc<Plan>,
+    /// Execution options hoisted out of the per-call path: every run of this
+    /// compiled entry uses one consistent backend.
+    opts: ExecOptions,
+    in_dims: Vec<Vec<usize>>,
+    out_shape: Vec<usize>,
+    /// Value-arena range and shape of the root intermediate (pre final_perm).
+    root: Range<usize>,
+    root_shape: Vec<usize>,
+    steps: Vec<CompiledStep>,
+    values_len: usize,
+    scratch_a_len: usize,
+    scratch_b_len: usize,
+    scratch_out_len: usize,
+    presum_len: usize,
+}
+
+impl CompiledPlan {
+    /// Lower a plan into a compiled program (clones the plan; use
+    /// [`CompiledPlan::compile_arc`] when you already hold an `Arc`).
+    pub fn compile(plan: &Plan) -> Result<CompiledPlan> {
+        Self::compile_arc(Arc::new(plan.clone()))
+    }
+
+    /// Lower a plan into a compiled program.
+    pub fn compile_arc(plan: Arc<Plan>) -> Result<CompiledPlan> {
+        let n = plan.n_inputs;
+        if n < 2 {
+            return Err(anyhow!("compiled plans require at least 2 inputs"));
+        }
+        let ksteps = plan.steps.len();
+        // Recover the working-list → DAG-node mapping.
+        let mut working: Vec<usize> = (0..n).collect();
+        let mut node_pairs: Vec<(usize, usize)> = Vec::with_capacity(ksteps);
+        for step in &plan.steps {
+            let (i, j) = (step.lhs, step.rhs);
+            if i >= working.len() || j >= working.len() || i == j {
+                return Err(anyhow!("invalid step indices ({}, {})", i, j));
+            }
+            node_pairs.push((working[i], working[j]));
+            let (hi, lo) = if i > j { (i, j) } else { (j, i) };
+            working.remove(hi);
+            working.remove(lo);
+            working.push(n + node_pairs.len() - 1);
+        }
+        if working.len() != 1 {
+            return Err(anyhow!(
+                "plan left {} operands on the working list",
+                working.len()
+            ));
+        }
+        let root_node = working[0];
+
+        // Input shapes: every input node is consumed by exactly one step.
+        let mut in_dims: Vec<Option<Vec<usize>>> = vec![None; n];
+        for (k, step) in plan.steps.iter().enumerate() {
+            let (l, r) = node_pairs[k];
+            if l < n {
+                in_dims[l] = Some(step.sized.dims[0].clone());
+            }
+            if r < n {
+                in_dims[r] = Some(step.sized.dims[1].clone());
+            }
+        }
+        let in_dims: Vec<Vec<usize>> = in_dims
+            .into_iter()
+            .enumerate()
+            .map(|(i, d)| d.ok_or_else(|| anyhow!("input {i} is not consumed by any step")))
+            .collect::<Result<_>>()?;
+
+        // Liveness: last step at which each node is read.
+        let mut last_use = vec![0usize; n + ksteps];
+        for (k, &(l, r)) in node_pairs.iter().enumerate() {
+            last_use[l] = k;
+            last_use[r] = k;
+        }
+
+        // Lower each step; assign arena ranges with liveness-driven reuse.
+        let mut arena = ArenaAlloc::new();
+        let mut node_range: Vec<Option<Range<usize>>> = vec![None; n + ksteps];
+        let mut steps: Vec<CompiledStep> = Vec::with_capacity(ksteps);
+        let (mut sa, mut sb, mut so, mut sp) = (0usize, 0usize, 0usize, 0usize);
+        for (k, step) in plan.steps.iter().enumerate() {
+            let (l, r) = node_pairs[k];
+            let atom = canonicalize(&step.sized, &step.moduli);
+            let kernel = atom.kernel();
+            let (a_len, b_len, raw_len) = atom.canonical_lens();
+            sa = sa.max(a_len);
+            sb = sb.max(b_len);
+            so = so.max(raw_len);
+            sp = sp.max(presum_chain_max(&step.sized.dims[0], &atom.presum_a));
+            sp = sp.max(presum_chain_max(&step.sized.dims[1], &atom.presum_b));
+
+            let resolve = |node: usize, ranges: &[Option<Range<usize>>]| -> Result<Operand> {
+                if node < n {
+                    Ok(Operand::Input(node))
+                } else {
+                    ranges[node]
+                        .clone()
+                        .map(Operand::Value)
+                        .ok_or_else(|| anyhow!("step {k} reads unproduced intermediate"))
+                }
+            };
+            let lhs_src = resolve(l, &node_range)?;
+            let rhs_src = resolve(r, &node_range)?;
+            // Free dying operands *before* allocating the output: the output
+            // is written only after all operand reads complete, so it may
+            // safely reuse their arena space.
+            for node in [l, r] {
+                if node >= n && last_use[node] == k {
+                    if let Some(dead) = node_range[node].take() {
+                        arena.free(dead);
+                    }
+                }
+            }
+            let out_elems: usize = atom.out_shape.iter().product();
+            debug_assert_eq!(out_elems, raw_len);
+            let out = arena.alloc(out_elems);
+            node_range[n + k] = Some(out.clone());
+            let canon_a = canon_op(&step.sized.dims[0], &atom.presum_a, &atom.perm_a);
+            let canon_b = canon_op(&step.sized.dims[1], &atom.presum_b, &atom.perm_b);
+            steps.push(CompiledStep {
+                lhs_node: l,
+                rhs_node: r,
+                lhs_src,
+                rhs_src,
+                canon_a,
+                canon_b,
+                out,
+                out_identity: is_identity(&atom.out_perm),
+                atom,
+                kernel,
+            });
+        }
+
+        let root = node_range[root_node]
+            .clone()
+            .ok_or_else(|| anyhow!("root intermediate was never produced"))?;
+        let root_shape = steps.last().expect("n >= 2 implies steps").atom.out_shape.clone();
+        let out_shape: Vec<usize> = match &plan.final_perm {
+            Some(p) => p.iter().map(|&ax| root_shape[ax]).collect(),
+            None => root_shape.clone(),
+        };
+        let opts = ExecOptions {
+            backend: plan.backend,
+        };
+        Ok(CompiledPlan {
+            opts,
+            in_dims,
+            out_shape,
+            root,
+            root_shape,
+            values_len: arena.len,
+            scratch_a_len: sa,
+            scratch_b_len: sb,
+            scratch_out_len: so,
+            presum_len: sp,
+            steps,
+            plan,
+        })
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    /// The plan this program was lowered from (costs, expression, report).
+    pub fn plan(&self) -> &Arc<Plan> {
+        &self.plan
+    }
+
+    /// Execution options hoisted onto the compiled entry.
+    pub fn exec_options(&self) -> &ExecOptions {
+        &self.opts
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.opts.backend
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.plan.n_inputs
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn step(&self, k: usize) -> &CompiledStep {
+        &self.steps[k]
+    }
+
+    /// Input shapes this plan is specialized to.
+    pub fn in_dims(&self) -> &[Vec<usize>] {
+        &self.in_dims
+    }
+
+    /// Output shape of a run.
+    pub fn out_shape(&self) -> &[usize] {
+        &self.out_shape
+    }
+
+    /// Peak workspace footprint (bytes) a run of this plan requires.
+    pub fn workspace_bytes(&self) -> usize {
+        std::mem::size_of::<f32>()
+            * (self.values_len
+                + self.scratch_a_len
+                + self.scratch_b_len
+                + self.scratch_out_len
+                + 2 * self.presum_len)
+    }
+
+    // ---- execution -------------------------------------------------------
+
+    fn validate(&self, inputs: &[&Tensor]) -> Result<()> {
+        if inputs.len() != self.plan.n_inputs {
+            return Err(anyhow!(
+                "plan expects {} inputs, got {}",
+                self.plan.n_inputs,
+                inputs.len()
+            ));
+        }
+        for (i, t) in inputs.iter().enumerate() {
+            if t.shape() != &self.in_dims[i][..] {
+                return Err(anyhow!(
+                    "input {} has shape {:?} but the plan was compiled for {:?}; \
+                     recompile for the new shapes (compiled plans are \
+                     shape-specialized)",
+                    i,
+                    t.shape(),
+                    self.in_dims[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the compiled program, allocating a fresh output tensor. The
+    /// workspace is grown (once) as needed and reused across calls.
+    pub fn run(&self, inputs: &[&Tensor], ws: &mut Workspace) -> Result<Tensor> {
+        let mut out = Tensor::zeros(&self.out_shape);
+        self.run_into(inputs, ws, &mut out)?;
+        Ok(out)
+    }
+
+    /// Run the compiled program, writing into a caller-provided output
+    /// tensor of exactly [`CompiledPlan::out_shape`] — the allocation-free
+    /// steady-state entry point (as long as `out` is not sharing storage
+    /// with a clone, in which case copy-on-write duplicates it once).
+    pub fn run_into(&self, inputs: &[&Tensor], ws: &mut Workspace, out: &mut Tensor) -> Result<()> {
+        self.run_into_with(inputs, ws, out, &self.opts)
+    }
+
+    /// As [`CompiledPlan::run_into`] with an explicit backend override.
+    pub fn run_into_with(
+        &self,
+        inputs: &[&Tensor],
+        ws: &mut Workspace,
+        out: &mut Tensor,
+        opts: &ExecOptions,
+    ) -> Result<()> {
+        self.validate(inputs)?;
+        if out.shape() != &self.out_shape[..] {
+            return Err(anyhow!(
+                "output tensor has shape {:?}, plan produces {:?}",
+                out.shape(),
+                self.out_shape
+            ));
+        }
+        ws.ensure(self);
+        // Pool for the canonicalization pre-pass (parallel permute/pre-sum).
+        let private;
+        let canon_pool: Option<&Pool> = match opts.backend {
+            Backend::Scalar => None,
+            Backend::Parallel { threads: 0 } => Some(Pool::global()),
+            Backend::Parallel { threads } => {
+                private = Pool::new(threads);
+                Some(&private)
+            }
+        };
+        let Workspace {
+            values,
+            scratch_a,
+            scratch_b,
+            scratch_out,
+            presum0,
+            presum1,
+        } = ws;
+
+        for step in &self.steps {
+            let (a_len, b_len, raw_len) = step.atom.canonical_lens();
+            let a_src: &[f32] = match &step.lhs_src {
+                Operand::Input(i) => inputs[*i].data(),
+                Operand::Value(r) => &values[r.clone()],
+            };
+            let b_src: &[f32] = match &step.rhs_src {
+                Operand::Input(i) => inputs[*i].data(),
+                Operand::Value(r) => &values[r.clone()],
+            };
+            let a_canon = canonicalize_into(
+                a_src,
+                &step.canon_a,
+                &mut scratch_a[..a_len],
+                presum0,
+                presum1,
+                canon_pool,
+            );
+            let b_canon = canonicalize_into(
+                b_src,
+                &step.canon_b,
+                &mut scratch_b[..b_len],
+                presum0,
+                presum1,
+                canon_pool,
+            );
+            let av: &[f32] = if a_canon {
+                &scratch_a[..a_len]
+            } else {
+                a_src
+            };
+            let bv: &[f32] = if b_canon {
+                &scratch_b[..b_len]
+            } else {
+                b_src
+            };
+            for v in scratch_out[..raw_len].iter_mut() {
+                *v = 0.0;
+            }
+            step.atom
+                .forward_into(&step.kernel, av, bv, &mut scratch_out[..raw_len], opts);
+            // Raw kernel layout → working-list layout, into the value arena.
+            let dst = &mut values[step.out.clone()];
+            if step.out_identity {
+                dst.copy_from_slice(&scratch_out[..raw_len]);
+            } else {
+                permute_into(
+                    &scratch_out[..raw_len],
+                    &step.atom.raw_out_dims,
+                    &step.atom.out_perm,
+                    dst,
+                    canon_pool,
+                );
+            }
+        }
+
+        let root = &values[self.root.clone()];
+        match &self.plan.final_perm {
+            Some(p) => permute_into(root, &self.root_shape, p, out.data_mut(), canon_pool),
+            None => out.data_mut().copy_from_slice(root),
+        }
+        Ok(())
+    }
+}
+
+/// Pre-sum + permute one operand into `dst` using the workspace kernels.
+/// Returns `false` when the source is already canonical (no pre-sums,
+/// identity permutation) and can be read in place — the zero-copy fast
+/// path. Allocation-free: every stage's shape was resolved at compile time.
+fn canonicalize_into(
+    src: &[f32],
+    op: &CanonOp,
+    dst: &mut [f32],
+    presum0: &mut [f32],
+    presum1: &mut [f32],
+    pool: Option<&Pool>,
+) -> bool {
+    if op.identity {
+        return false;
+    }
+    if op.sums.is_empty() {
+        permute_into(src, &op.post_shape, &op.perm, dst, pool);
+        return true;
+    }
+    // Pre-sum chain: ping-pong between the presum buffers, replicating the
+    // axis-by-axis accumulation order of `Tensor::sum_axis` exactly.
+    let mut in_p0 = false;
+    let mut first = true;
+    for (shape, ax) in &op.sums {
+        let cur_len: usize = shape.iter().product();
+        let next_len = cur_len / shape[*ax];
+        if first {
+            sum_axis_into(src, shape, *ax, &mut presum0[..next_len], pool);
+            in_p0 = true;
+            first = false;
+        } else if in_p0 {
+            sum_axis_into(&presum0[..cur_len], shape, *ax, &mut presum1[..next_len], pool);
+            in_p0 = false;
+        } else {
+            sum_axis_into(&presum1[..cur_len], shape, *ax, &mut presum0[..next_len], pool);
+            in_p0 = true;
+        }
+    }
+    let post_len: usize = op.post_shape.iter().product();
+    let summed: &[f32] = if in_p0 {
+        &presum0[..post_len]
+    } else {
+        &presum1[..post_len]
+    };
+    if is_identity(&op.perm) {
+        dst.copy_from_slice(summed);
+    } else {
+        permute_into(summed, &op.post_shape, &op.perm, dst, pool);
+    }
+    true
+}
+
+// ---------------------------------------------------------------------------
+// Shared plan cache
+// ---------------------------------------------------------------------------
+
+/// Everything that affects a compiled plan's structure — the cache key for
+/// [`PlanCache`]. Covers every [`PlanOptions`] field the planner's tree
+/// selection depends on (`cost_cap` is keyed by its bit pattern, since
+/// `f64` is not `Hash`/`Eq`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub expr: String,
+    pub dims: Vec<Vec<usize>>,
+    pub backend: Backend,
+    pub strategy: Strategy,
+    pub training: bool,
+    pub conv_kinds: Option<Vec<ConvKind>>,
+    /// `PlanOptions::cost_cap` as IEEE-754 bits (caps the per-step cost).
+    pub cost_cap_bits: Option<u64>,
+    /// `PlanOptions::max_dp_inputs` (flips Optimal to Greedy above it).
+    pub max_dp_inputs: usize,
+}
+
+impl PlanKey {
+    fn new(expr: &str, dims: &[Vec<usize>], opts: &PlanOptions) -> PlanKey {
+        PlanKey {
+            expr: expr.to_string(),
+            dims: dims.to_vec(),
+            backend: opts.backend,
+            strategy: opts.strategy,
+            training: opts.training,
+            conv_kinds: opts.conv_kinds.clone(),
+            cost_cap_bits: opts.cost_cap.map(f64::to_bits),
+            max_dp_inputs: opts.max_dp_inputs,
+        }
+    }
+}
+
+/// Default entry bound for [`PlanCache`]: enough for every realistic layer
+/// geometry mix while keeping worst-case ad-hoc traffic (client-controlled
+/// shapes) from growing resident memory without bound.
+pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 256;
+
+/// A concurrent compile-once cache: coordinator workers (and any caller that
+/// evaluates the same expression repeatedly) share compiled plans keyed by
+/// [`PlanKey`]. Bounded: when full, the least-recently-used entry is
+/// evicted, so client-controlled shape churn cannot grow memory without
+/// limit.
+#[derive(Debug)]
+pub struct PlanCache {
+    map: Mutex<HashMap<PlanKey, (Arc<CompiledPlan>, u64)>>,
+    tick: AtomicUsize,
+    capacity: usize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new()
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::with_capacity(DEFAULT_PLAN_CACHE_CAPACITY)
+    }
+
+    /// A cache holding at most `capacity` compiled plans (LRU-evicted).
+    pub fn with_capacity(capacity: usize) -> PlanCache {
+        PlanCache {
+            map: Mutex::new(HashMap::new()),
+            tick: AtomicUsize::new(0),
+            capacity: capacity.max(1),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Fetch (or plan + compile) the program for `expr` at these shapes.
+    pub fn get_or_compile(
+        &self,
+        expr: &str,
+        dims: &[Vec<usize>],
+        opts: &PlanOptions,
+    ) -> Result<Arc<CompiledPlan>> {
+        self.get_or_compile_with(PlanKey::new(expr, dims, opts), || {
+            compile_expr(expr, dims, opts)
+        })
+    }
+
+    /// As [`PlanCache::get_or_compile`] with an already-parsed spec, so the
+    /// caller's parse is reused instead of re-parsing on a miss.
+    pub fn get_or_compile_parsed(
+        &self,
+        expr: &str,
+        spec: &EinsumSpec,
+        dims: &[Vec<usize>],
+        opts: &PlanOptions,
+    ) -> Result<Arc<CompiledPlan>> {
+        self.get_or_compile_with(PlanKey::new(expr, dims, opts), || {
+            compile_spec(spec.clone(), dims, opts)
+        })
+    }
+
+    fn get_or_compile_with(
+        &self,
+        key: PlanKey,
+        compile: impl FnOnce() -> Result<CompiledPlan>,
+    ) -> Result<Arc<CompiledPlan>> {
+        let now = self.tick.fetch_add(1, Ordering::Relaxed) as u64;
+        if let Some((hit, stamp)) = self.map.lock().unwrap().get_mut(&key) {
+            *stamp = now;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(hit));
+        }
+        // Compile outside the lock: planning can be expensive, and two
+        // racing compilers of the same key converge on whichever inserts
+        // first.
+        let compiled = Arc::new(compile()?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        if !map.contains_key(&key) && map.len() >= self.capacity {
+            // Evict the least-recently-used entry.
+            if let Some(oldest) = map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+            {
+                map.remove(&oldest);
+            }
+        }
+        let entry = map.entry(key).or_insert((compiled, now));
+        entry.1 = now;
+        Ok(Arc::clone(&entry.0))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Maximum number of entries retained.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// Parse + size + plan + compile in one call (≥ 2 inputs; single-input
+/// expressions have no pairwise path and go through
+/// [`crate::exec::conv_einsum`] directly).
+pub fn compile_expr(expr: &str, dims: &[Vec<usize>], opts: &PlanOptions) -> Result<CompiledPlan> {
+    let spec = parse(expr).map_err(|e| anyhow!("{e}"))?;
+    compile_spec(spec, dims, opts)
+}
+
+/// As [`compile_expr`] starting from an already-parsed spec.
+pub fn compile_spec(
+    spec: EinsumSpec,
+    dims: &[Vec<usize>],
+    opts: &PlanOptions,
+) -> Result<CompiledPlan> {
+    let sized = match &opts.conv_kinds {
+        Some(kinds) => SizedSpec::with_kinds(spec, dims.to_vec(), kinds.clone()),
+        None => SizedSpec::new(spec, dims.to_vec()),
+    }
+    .map_err(|e| anyhow!("{e}"))?;
+    let plan = plan_with(&sized, opts).map_err(|e| anyhow!("{e}"))?;
+    CompiledPlan::compile_arc(Arc::new(plan))
+}

@@ -8,6 +8,11 @@
 //!   [`crate::planner::Plan`]'s pairwise steps.
 //! * [`conv_einsum`] — parse + plan (FLOPs-optimal) + execute in one call;
 //!   the library's headline entry point.
+//! * [`CompiledPlan`] / [`Workspace`] / [`PlanCache`] (module [`compiled`]) —
+//!   the compile-once, run-many engine: a plan lowered once into
+//!   fully-resolved steps with a liveness-based workspace layout, replayed
+//!   allocation-free against a caller-held workspace. `execute_path` and
+//!   `conv_einsum` are thin wrappers over compile+run.
 //! * [`naive_eval`] — brute-force reference oracle (tests only).
 //!
 //! # Backend selection
@@ -28,18 +33,23 @@
 //! [`execute_path_with`] / [`pairwise_with`] override it per call.
 
 pub mod atom;
+pub mod compiled;
 mod reference;
 
-pub use atom::{canonicalize, conv_triples, Atom, ConvAxis};
+pub use atom::{canonicalize, conv_triples, Atom, AtomKernel, ConvAxis};
+pub use compiled::{
+    compile_expr, CompiledPlan, PlanCache, PlanKey, Workspace, DEFAULT_PLAN_CACHE_CAPACITY,
+};
 pub use reference::naive_eval;
 
 use crate::einsum::{parse, SizedSpec};
 use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// Which executor runs the atomic grouped convolution.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Backend {
     /// The original single-threaded kernels.
     Scalar,
@@ -150,6 +160,11 @@ pub fn pairwise_vjp_with(
 /// operands from the current list and appends the intermediate at the end;
 /// the final remaining tensor (optionally permuted by the plan's
 /// `final_perm`) is the result.
+///
+/// Internally the plan is lowered to a [`CompiledPlan`] and run once against
+/// a throwaway [`Workspace`]. Callers evaluating the same plan repeatedly
+/// (the compile-once, run-many regime) should compile once and hold the
+/// workspace themselves — see the [`compiled`] module.
 pub fn execute_path(plan: &Plan, inputs: &[&Tensor]) -> Result<Tensor> {
     execute_path_with(
         plan,
@@ -162,44 +177,11 @@ pub fn execute_path(plan: &Plan, inputs: &[&Tensor]) -> Result<Tensor> {
 
 /// As [`execute_path`], overriding the plan's backend.
 pub fn execute_path_with(plan: &Plan, inputs: &[&Tensor], opts: &ExecOptions) -> Result<Tensor> {
-    if inputs.len() != plan.n_inputs {
-        return Err(anyhow!(
-            "plan expects {} inputs, got {}",
-            plan.n_inputs,
-            inputs.len()
-        ));
-    }
-    // Single-input expressions: the plan has one pseudo-step with rhs=lhs
-    // handled by the planner as an identity/reduction; here handle the
-    // degenerate 1-input case by brute reduction via pairwise with a scalar.
-    let mut working: Vec<Tensor> = inputs.iter().map(|t| (*t).clone()).collect();
-    for step in &plan.steps {
-        let (i, j) = (step.lhs, step.rhs);
-        if i >= working.len() || j >= working.len() || i == j {
-            return Err(anyhow!("invalid step indices ({}, {})", i, j));
-        }
-        let a = &working[i];
-        let b = &working[j];
-        debug_assert_eq!(a.shape(), &step.sized.dims[0][..], "step lhs shape");
-        debug_assert_eq!(b.shape(), &step.sized.dims[1][..], "step rhs shape");
-        let out = pairwise_with(&step.sized, a, b, &step.moduli, opts);
-        // remove higher index first
-        let (hi, lo) = if i > j { (i, j) } else { (j, i) };
-        working.remove(hi);
-        working.remove(lo);
-        working.push(out);
-    }
-    if working.len() != 1 {
-        return Err(anyhow!(
-            "plan left {} operands on the working list",
-            working.len()
-        ));
-    }
-    let mut result = working.pop().unwrap();
-    if let Some(perm) = &plan.final_perm {
-        result = result.permute(perm);
-    }
-    Ok(result)
+    let compiled = CompiledPlan::compile(plan)?;
+    let mut ws = Workspace::new();
+    let mut out = Tensor::zeros(compiled.out_shape());
+    compiled.run_into_with(inputs, &mut ws, &mut out, opts)?;
+    Ok(out)
 }
 
 /// Parse, plan (FLOPs-optimal by default) and execute a conv_einsum string.
@@ -232,7 +214,9 @@ pub fn conv_einsum_with(expr: &str, inputs: &[&Tensor], opts: &PlanOptions) -> R
         return Ok(single_input_eval(&sized, inputs[0]));
     }
     let plan = plan_with(&sized, opts).map_err(|e| anyhow!("{e}"))?;
-    execute_path(&plan, inputs)
+    let compiled = CompiledPlan::compile_arc(Arc::new(plan))?;
+    let mut ws = Workspace::new();
+    compiled.run(inputs, &mut ws)
 }
 
 /// Evaluate a 1-input expression (self-sums + permutation).

@@ -606,6 +606,323 @@ fn execute_path_with_overrides_plan_backend() {
     via_override.assert_close(&via_plan, 1e-5);
 }
 
+// ---------------------------------------------------------------------------
+// Compiled-plan engine: bit-identical replays, workspace reuse, invalidation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn compiled_rerun_bit_identical_all_kinds_and_backends() {
+    // 100 replays against one workspace, every convolution variety, scalar
+    // and parallel backends: each run must be bit-identical to a fresh
+    // conv_einsum call (same kernels, same accumulation order, no stale
+    // workspace state).
+    for kind in [
+        ConvKind::Same,
+        ConvKind::Valid,
+        ConvKind::Full,
+        ConvKind::Circular,
+    ] {
+        for backend in [Backend::Scalar, Backend::Parallel { threads: 2 }] {
+            let expr = "bsx,tsx->btx|x";
+            let dims = vec![vec![2, 3, 9], vec![4, 3, 3]];
+            let opts = PlanOptions {
+                backend,
+                conv_kinds: Some(vec![kind]),
+                ..Default::default()
+            };
+            let mut rng = Rng::new(41);
+            let a = Tensor::rand(&dims[0], -1.0, 1.0, &mut rng);
+            let b = Tensor::rand(&dims[1], -1.0, 1.0, &mut rng);
+            let inputs = [&a, &b];
+            let fresh = conv_einsum_with(expr, &inputs, &opts).unwrap();
+            let compiled = compile_expr(expr, &dims, &opts).unwrap();
+            let mut ws = Workspace::new();
+            for _ in 0..100 {
+                let got = compiled.run(&inputs, &mut ws).unwrap();
+                got.assert_close(&fresh, 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn compiled_multiway_rerun_matches_fresh_and_reference() {
+    // A 5-input CP layer: the liveness allocator actually reuses arena
+    // ranges here, and the plan ends with a final permutation.
+    let expr = "bshw,rt,rs,rh,rw->bthw|hw";
+    let dims = vec![
+        vec![2, 3, 6, 6],
+        vec![2, 4],
+        vec![2, 3],
+        vec![2, 3],
+        vec![2, 3],
+    ];
+    let mut rng = Rng::new(42);
+    let tensors: Vec<Tensor> = dims
+        .iter()
+        .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+        .collect();
+    let inputs: Vec<&Tensor> = tensors.iter().collect();
+    for backend in [Backend::Scalar, Backend::Parallel { threads: 2 }] {
+        let opts = PlanOptions {
+            backend,
+            ..Default::default()
+        };
+        let fresh = conv_einsum_with(expr, &inputs, &opts).unwrap();
+        let compiled = compile_expr(expr, &dims, &opts).unwrap();
+        let mut ws = Workspace::new();
+        for _ in 0..25 {
+            let got = compiled.run(&inputs, &mut ws).unwrap();
+            got.assert_close(&fresh, 0.0);
+        }
+        let s = sized(expr, dims.clone());
+        fresh.assert_close(&naive_eval(&s, &inputs), 1e-3);
+    }
+}
+
+#[test]
+fn compiled_presum_path_matches_fresh_and_reference() {
+    // One-sided non-output modes (k, z, q) exercise the workspace pre-sum
+    // ping-pong chain.
+    let expr = "akz,abq->b";
+    let dims = vec![vec![3, 2, 2], vec![3, 4, 3]];
+    let mut rng = Rng::new(43);
+    let a = Tensor::rand(&dims[0], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&dims[1], -1.0, 1.0, &mut rng);
+    let inputs = [&a, &b];
+    for backend in [Backend::Scalar, Backend::Parallel { threads: 2 }] {
+        let opts = PlanOptions {
+            backend,
+            ..Default::default()
+        };
+        let fresh = conv_einsum_with(expr, &inputs, &opts).unwrap();
+        let compiled = compile_expr(expr, &dims, &opts).unwrap();
+        let mut ws = Workspace::new();
+        for _ in 0..30 {
+            compiled.run(&inputs, &mut ws).unwrap().assert_close(&fresh, 0.0);
+        }
+    }
+    let s = sized(expr, dims);
+    let fresh = conv_einsum(expr, &inputs).unwrap();
+    fresh.assert_close(&naive_eval(&s, &inputs), 1e-3);
+}
+
+#[test]
+fn property_compiled_replay_bit_identical() {
+    // Random 2-input structures × all conv varieties × both backends:
+    // compile once, replay three times against one workspace, compare
+    // bit-for-bit with a fresh conv_einsum call and (tolerantly) with the
+    // brute-force reference.
+    prop::check("compiled-replay-vs-fresh", 30, |g| {
+        let mut rng = Rng::new(g.usize_in(0, u32::MAX as usize) as u64);
+        let n_shared = g.usize_in(0, 2);
+        let n_batch = g.usize_in(0, 1);
+        let n_afree = g.usize_in(0, 2);
+        let n_bfree = g.usize_in(0, 2);
+        let kind = *g.pick(&[
+            ConvKind::Same,
+            ConvKind::Valid,
+            ConvKind::Full,
+            ConvKind::Circular,
+        ]);
+        let backend = *g.pick(&[Backend::Scalar, Backend::Parallel { threads: 2 }]);
+
+        let names = ["c", "d", "g", "t", "u", "n", "m", "x"];
+        let mut lhs = String::new();
+        let mut rhs = String::new();
+        let mut out = String::new();
+        let mut da: Vec<usize> = vec![];
+        let mut db: Vec<usize> = vec![];
+        let mut ni = 0;
+        for _ in 0..n_shared {
+            let d = g.usize_in(1, 3);
+            lhs.push_str(names[ni]);
+            rhs.push_str(names[ni]);
+            da.push(d);
+            db.push(d);
+            ni += 1;
+        }
+        for _ in 0..n_batch {
+            let d = g.usize_in(1, 3);
+            lhs.push_str(names[ni]);
+            rhs.push_str(names[ni]);
+            out.push_str(names[ni]);
+            da.push(d);
+            db.push(d);
+            ni += 1;
+        }
+        for _ in 0..n_afree {
+            let d = g.usize_in(1, 3);
+            lhs.push_str(names[ni]);
+            out.push_str(names[ni]);
+            da.push(d);
+            ni += 1;
+        }
+        for _ in 0..n_bfree {
+            let d = g.usize_in(1, 3);
+            rhs.push_str(names[ni]);
+            out.push_str(names[ni]);
+            db.push(d);
+            ni += 1;
+        }
+        let fa = g.usize_in(2, 6);
+        let fb = g.usize_in(1, fa);
+        lhs.push('x');
+        rhs.push('x');
+        out.push('x');
+        da.push(fa);
+        db.push(fb);
+        let expr = format!("{lhs},{rhs}->{out}|x");
+        let dims = vec![da.clone(), db.clone()];
+        let opts = PlanOptions {
+            backend,
+            conv_kinds: Some(vec![kind]),
+            ..Default::default()
+        };
+        let a = Tensor::rand(&da, -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&db, -1.0, 1.0, &mut rng);
+        let inputs = [&a, &b];
+        let fresh = conv_einsum_with(&expr, &inputs, &opts).unwrap();
+        let compiled = compile_expr(&expr, &dims, &opts).unwrap();
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            compiled.run(&inputs, &mut ws).unwrap().assert_close(&fresh, 0.0);
+        }
+        let spec = parse(&expr).unwrap();
+        let s = SizedSpec::with_kinds(spec, dims, vec![kind]).unwrap();
+        fresh.assert_close(&naive_eval(&s, &inputs), 1e-3);
+    });
+}
+
+#[test]
+fn compiled_plan_rejects_shape_change() {
+    let expr = "ij,jk->ik";
+    let dims = vec![vec![3, 4], vec![4, 5]];
+    let compiled = compile_expr(expr, &dims, &PlanOptions::default()).unwrap();
+    let mut rng = Rng::new(44);
+    let a = Tensor::rand(&[3, 4], -1.0, 1.0, &mut rng);
+    let b_bad = Tensor::rand(&[4, 6], -1.0, 1.0, &mut rng);
+    let mut ws = Workspace::new();
+    let err = compiled.run(&[&a, &b_bad], &mut ws).unwrap_err();
+    assert!(
+        format!("{err}").contains("recompile"),
+        "shape-change error should instruct recompilation: {err}"
+    );
+    // Wrong arity is also rejected.
+    assert!(compiled.run(&[&a], &mut ws).is_err());
+    // A matching call still works afterwards (the failed run left no state).
+    let b_ok = Tensor::rand(&[4, 5], -1.0, 1.0, &mut rng);
+    assert!(compiled.run(&[&a, &b_ok], &mut ws).is_ok());
+}
+
+#[test]
+fn plan_cache_reuses_and_keys_by_shape_and_backend() {
+    use std::sync::Arc;
+    let cache = PlanCache::new();
+    let opts = PlanOptions::default();
+    let d1 = vec![vec![3, 4], vec![4, 5]];
+    let c1 = cache.get_or_compile("ij,jk->ik", &d1, &opts).unwrap();
+    let c2 = cache.get_or_compile("ij,jk->ik", &d1, &opts).unwrap();
+    assert!(Arc::ptr_eq(&c1, &c2), "same key must hit the cache");
+    assert_eq!(cache.misses(), 1);
+    assert_eq!(cache.hits(), 1);
+    // Different shapes → different compiled entry.
+    let d2 = vec![vec![3, 4], vec![4, 7]];
+    let c3 = cache.get_or_compile("ij,jk->ik", &d2, &opts).unwrap();
+    assert!(!Arc::ptr_eq(&c1, &c3));
+    // Different backend → different compiled entry.
+    let sopts = PlanOptions {
+        backend: Backend::Scalar,
+        ..Default::default()
+    };
+    let c4 = cache.get_or_compile("ij,jk->ik", &d1, &sopts).unwrap();
+    assert!(!Arc::ptr_eq(&c1, &c4));
+    // Different planning constraints → different compiled entry (the key
+    // covers every option the tree selection depends on).
+    let strict = PlanOptions {
+        max_dp_inputs: 0, // forces the greedy fallback
+        ..Default::default()
+    };
+    let c5 = cache.get_or_compile("ij,jk->ik", &d1, &strict).unwrap();
+    assert!(!Arc::ptr_eq(&c1, &c5));
+    let capped = PlanOptions {
+        cost_cap: Some(1e18),
+        ..Default::default()
+    };
+    let c6 = cache.get_or_compile("ij,jk->ik", &d1, &capped).unwrap();
+    assert!(!Arc::ptr_eq(&c1, &c6));
+    assert_eq!(cache.len(), 5);
+    cache.clear();
+    assert!(cache.is_empty());
+}
+
+#[test]
+fn plan_cache_evicts_least_recently_used() {
+    use std::sync::Arc;
+    let cache = PlanCache::with_capacity(2);
+    assert_eq!(cache.capacity(), 2);
+    let opts = PlanOptions::default();
+    let d = |k: usize| vec![vec![3, 4], vec![4, k]];
+    let c1 = cache.get_or_compile("ij,jk->ik", &d(5), &opts).unwrap();
+    let _c2 = cache.get_or_compile("ij,jk->ik", &d(6), &opts).unwrap();
+    // Touch the first entry so the second becomes least-recently-used…
+    let c1b = cache.get_or_compile("ij,jk->ik", &d(5), &opts).unwrap();
+    assert!(Arc::ptr_eq(&c1, &c1b));
+    // …then a third key must evict it, keeping the cache at capacity.
+    let _c3 = cache.get_or_compile("ij,jk->ik", &d(7), &opts).unwrap();
+    assert_eq!(cache.len(), 2);
+    let misses_before = cache.misses();
+    let _ = cache.get_or_compile("ij,jk->ik", &d(5), &opts).unwrap();
+    assert_eq!(cache.misses(), misses_before, "recently-used entry survived");
+    let _ = cache.get_or_compile("ij,jk->ik", &d(6), &opts).unwrap();
+    assert_eq!(cache.misses(), misses_before + 1, "LRU entry was evicted");
+}
+
+#[test]
+fn one_workspace_serves_many_plans() {
+    // A workspace is plan-agnostic scratch: alternating plans of different
+    // shapes through one workspace must not corrupt results.
+    let e1 = "ij,jk->ik";
+    let d1 = vec![vec![3, 4], vec![4, 5]];
+    let e2 = "bshw,tshw->bthw|hw";
+    let d2 = vec![vec![2, 3, 6, 5], vec![4, 3, 3, 3]];
+    let c1 = compile_expr(e1, &d1, &PlanOptions::default()).unwrap();
+    let c2 = compile_expr(e2, &d2, &PlanOptions::default()).unwrap();
+    let mut rng = Rng::new(45);
+    let a = Tensor::rand(&d1[0], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&d1[1], -1.0, 1.0, &mut rng);
+    let x = Tensor::rand(&d2[0], -1.0, 1.0, &mut rng);
+    let w = Tensor::rand(&d2[1], -1.0, 1.0, &mut rng);
+    let want1 = conv_einsum(e1, &[&a, &b]).unwrap();
+    let want2 = conv_einsum(e2, &[&x, &w]).unwrap();
+    let mut ws = Workspace::new();
+    for _ in 0..5 {
+        c1.run(&[&a, &b], &mut ws).unwrap().assert_close(&want1, 0.0);
+        c2.run(&[&x, &w], &mut ws).unwrap().assert_close(&want2, 0.0);
+    }
+    assert!(ws.bytes() >= c1.workspace_bytes().max(c2.workspace_bytes()) / 2);
+}
+
+#[test]
+fn run_into_reuses_caller_output() {
+    let expr = "bsx,tsx->btx|x";
+    let dims = vec![vec![2, 3, 9], vec![4, 3, 3]];
+    let compiled = compile_expr(expr, &dims, &PlanOptions::default()).unwrap();
+    let mut rng = Rng::new(46);
+    let a = Tensor::rand(&dims[0], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&dims[1], -1.0, 1.0, &mut rng);
+    let want = conv_einsum(expr, &[&a, &b]).unwrap();
+    let mut ws = Workspace::new();
+    let mut out = Tensor::zeros(compiled.out_shape());
+    for _ in 0..10 {
+        compiled.run_into(&[&a, &b], &mut ws, &mut out).unwrap();
+        out.assert_close(&want, 0.0);
+    }
+    // Shape-mismatched output buffers are rejected.
+    let mut bad = Tensor::zeros(&[1, 2, 3]);
+    assert!(compiled.run_into(&[&a, &b], &mut ws, &mut bad).is_err());
+}
+
 #[test]
 fn property_optimal_path_equals_ltr_numerically() {
     // Whatever order the planner picks, the numbers must agree with LTR.

@@ -32,6 +32,37 @@
 //!   requests, and a **PJRT runtime** ([`runtime`]) that loads the AOT
 //!   JAX/Pallas artifacts produced by `python/compile/aot.py`.
 //!
+//! ## Compile once, run many
+//!
+//! The hot-loop API is the compiled execution engine in [`exec::compiled`]:
+//! a [`planner::Plan`] is lowered **once** into a [`CompiledPlan`] — every
+//! step carrying its fully-resolved atom (pre-sum axes, canonical
+//! permutations, conv triple tables, kernel tables) plus a liveness-based
+//! workspace layout — and replayed against a caller-held [`Workspace`]:
+//!
+//! ```
+//! use conv_einsum::{compile_expr, PlanOptions, Tensor, Workspace};
+//! use conv_einsum::util::rng::Rng;
+//! let mut rng = Rng::new(0);
+//! let x = Tensor::rand(&[2, 3, 8, 8], -1.0, 1.0, &mut rng);
+//! let w = Tensor::rand(&[4, 3, 3, 3], -1.0, 1.0, &mut rng);
+//! let dims = vec![vec![2, 3, 8, 8], vec![4, 3, 3, 3]];
+//! let plan = compile_expr("bshw,tshw->bthw|hw", &dims, &PlanOptions::default()).unwrap();
+//! let mut ws = Workspace::new();
+//! for _ in 0..3 {
+//!     let y = plan.run(&[&x, &w], &mut ws).unwrap(); // no re-planning
+//!     assert_eq!(y.shape(), &[2, 4, 8, 8]);
+//! }
+//! ```
+//!
+//! The workspace is plan-agnostic and reusable (one per thread); compiled
+//! plans are shape-specialized and reject mismatched inputs with a
+//! recompile error. [`exec::conv_einsum`] / [`exec::execute_path`] remain
+//! as one-shot wrappers over compile+run; `nn` layers compile at first
+//! forward (keyed by batch/spatial size), the autodiff tape replays the
+//! compiled forward, and the coordinator shares compiled entries across
+//! workers through [`exec::PlanCache`].
+//!
 //! ## Backend selection
 //!
 //! Every execution entry point is parameterized by [`ExecOptions`] carrying
@@ -80,7 +111,10 @@ pub mod tnn;
 pub mod util;
 
 pub use einsum::{EinsumSpec, ModeKind, SizedSpec};
-pub use exec::{conv_einsum, conv_einsum_with, pairwise, Backend, ExecOptions};
+pub use exec::{
+    compile_expr, conv_einsum, conv_einsum_with, pairwise, Backend, CompiledPlan, ExecOptions,
+    PlanCache, Workspace,
+};
 pub use parallel::Pool;
 pub use planner::{contract_path, Plan, PlanOptions, Strategy};
 pub use tensor::Tensor;

@@ -6,10 +6,12 @@
 use crate::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff, Tape};
 use crate::einsum::parse;
 use crate::einsum::SizedSpec;
-use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
+use crate::exec::{CompiledPlan, Workspace};
+use crate::planner::{plan_with, PlanOptions, Strategy};
 use crate::tensor::Tensor;
 use crate::tnn::TnnLayerSpec;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// How tensorial layers evaluate: the paper's experimental axes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,8 +96,12 @@ pub struct TensorialConv2d {
     pub factors: Vec<Tensor>,
     pub grads: Vec<Tensor>,
     pub eval: EvalConfig,
-    /// Plan cache keyed by (batch, hp, wp).
-    plan: Option<(usize, usize, usize, Plan)>,
+    /// Compiled-plan cache keyed by (batch, hp, wp): the expression is
+    /// planned + lowered once per input geometry and replayed on every
+    /// forward/backward; a batch-size (or spatial) change invalidates it.
+    compiled: Option<(usize, usize, usize, Arc<CompiledPlan>)>,
+    /// Reusable workspace for inference-mode forwards.
+    ws: Workspace,
     tape: Option<Tape>,
     cached_x_shape: Vec<usize>,
     pub meter: MemoryMeter,
@@ -114,15 +120,16 @@ impl TensorialConv2d {
             factors,
             grads,
             eval,
-            plan: None,
+            compiled: None,
+            ws: Workspace::new(),
             tape: None,
             cached_x_shape: Vec::new(),
             meter: MemoryMeter::new(),
         }
     }
 
-    fn plan_for(&mut self, b: usize, hp: usize, wp: usize) -> &Plan {
-        let stale = match &self.plan {
+    fn compiled_for(&mut self, b: usize, hp: usize, wp: usize) -> Arc<CompiledPlan> {
+        let stale = match &self.compiled {
             Some((pb, ph, pw, _)) => (*pb, *ph, *pw) != (b, hp, wp),
             None => true,
         };
@@ -139,14 +146,15 @@ impl TensorialConv2d {
                 },
             )
             .expect("layer expr plans");
-            self.plan = Some((b, hp, wp, plan));
+            let compiled = CompiledPlan::compile_arc(Arc::new(plan)).expect("layer expr compiles");
+            self.compiled = Some((b, hp, wp, Arc::new(compiled)));
         }
-        &self.plan.as_ref().unwrap().3
+        Arc::clone(&self.compiled.as_ref().unwrap().3)
     }
 
     /// Planned FLOPs (multiplications) for one forward at this input shape.
     pub fn planned_cost(&mut self, b: usize, hp: usize, wp: usize) -> f64 {
-        self.plan_for(b, hp, wp).cost
+        self.compiled_for(b, hp, wp).plan().cost
     }
 }
 
@@ -157,11 +165,11 @@ impl Layer for TensorialConv2d {
         self.cached_x_shape = x.shape().to_vec();
         let x_reshaped = x.clone().reshape(&self.spec.input_shape(b, hp, wp));
         let ckpt = self.eval.ckpt;
-        let plan = self.plan_for(b, hp, wp).clone();
-        let ad = PathAutodiff::new(&plan).expect("plan is executable");
+        let compiled = self.compiled_for(b, hp, wp);
         let mut inputs: Vec<&Tensor> = vec![&x_reshaped];
         inputs.extend(self.factors.iter());
         if train {
+            let ad = PathAutodiff::from_compiled(Arc::clone(&compiled));
             let tape = ad
                 .forward_with_tape(&inputs, ckpt, &self.meter)
                 .expect("forward");
@@ -169,7 +177,17 @@ impl Layer for TensorialConv2d {
             self.tape = Some(tape);
             out.reshape(&[b, self.spec.t, hp, wp])
         } else {
-            let out = ad.forward(&inputs, &self.meter).expect("forward");
+            // Steady-state inference: replay the compiled plan against the
+            // layer-held workspace — no planning, no canonicalization
+            // analysis, no per-intermediate allocation. Meter the footprint
+            // this call actually needs (inputs + the plan's workspace
+            // requirement + output), not the workspace's lifetime-grown
+            // capacity, so peak_bytes() stays comparable across geometries.
+            let input_bytes: usize = inputs.iter().map(|t| t.bytes()).sum();
+            let out = compiled.run(&inputs, &mut self.ws).expect("forward");
+            let transient = input_bytes + compiled.workspace_bytes() + out.bytes();
+            self.meter.alloc(transient);
+            self.meter.free(transient);
             out.reshape(&[b, self.spec.t, hp, wp])
         }
     }
@@ -180,8 +198,8 @@ impl Layer for TensorialConv2d {
             self.cached_x_shape[2],
             self.cached_x_shape[3],
         );
-        let plan = self.plan.as_ref().unwrap().3.clone();
-        let ad = PathAutodiff::new(&plan).expect("plan is executable");
+        let compiled = Arc::clone(&self.compiled.as_ref().expect("backward without forward").3);
+        let ad = PathAutodiff::from_compiled(compiled);
         let mut tape = self.tape.take().expect("backward without forward");
         let dy_shaped = dy.clone().reshape(&self.spec.output_shape(b, hp, wp));
         let grads = ad

@@ -27,7 +27,7 @@ use crate::util::json::Json;
 use crate::util::sci;
 
 /// Evaluation-order search strategy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Strategy {
     /// Exact FLOPs-minimal tree (netcon-equivalent subset DP).
     Optimal,

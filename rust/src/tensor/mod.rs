@@ -2,15 +2,28 @@
 //! on. (ndarray is unavailable offline; this is a purpose-built minimal
 //! replacement with exactly the layout operations conv_einsum needs:
 //! reshape, permute, mode merge/split, pad, slice, and fast accessors.)
+//!
+//! Storage is shared copy-on-write (`Arc<Vec<f32>>`): `clone()`, identity
+//! `permute`, and `reshape` are O(1) metadata operations; mutation through
+//! [`Tensor::data_mut`] copies only when the payload is actually shared.
+//!
+//! Besides the allocating `Tensor` methods, this module exposes the
+//! workspace kernels [`permute_into`] and [`sum_axis_into`] that write into
+//! caller-provided buffers (and optionally fan out over a
+//! [`crate::parallel::Pool`]) — the allocation-free canonicalization
+//! pre-pass used by the compiled execution engine
+//! ([`crate::exec::CompiledPlan`]).
 
+use crate::parallel::Pool;
 use crate::util::rng::Rng;
 use std::fmt;
+use std::sync::Arc;
 
 /// A dense, contiguous, row-major tensor of f32 values.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: Arc<Vec<f32>>,
 }
 
 impl fmt::Debug for Tensor {
@@ -38,7 +51,7 @@ impl Tensor {
         let n: usize = shape.iter().product();
         Tensor {
             shape: shape.to_vec(),
-            data: vec![0.0; n],
+            data: Arc::new(vec![0.0; n]),
         }
     }
 
@@ -47,7 +60,7 @@ impl Tensor {
         let n: usize = shape.iter().product();
         Tensor {
             shape: shape.to_vec(),
-            data: vec![v; n],
+            data: Arc::new(vec![v; n]),
         }
     }
 
@@ -62,7 +75,7 @@ impl Tensor {
         );
         Tensor {
             shape: shape.to_vec(),
-            data,
+            data: Arc::new(data),
         }
     }
 
@@ -70,7 +83,7 @@ impl Tensor {
     pub fn scalar(v: f32) -> Tensor {
         Tensor {
             shape: vec![],
-            data: vec![v],
+            data: Arc::new(vec![v]),
         }
     }
 
@@ -79,7 +92,7 @@ impl Tensor {
         let n: usize = shape.iter().product();
         Tensor {
             shape: shape.to_vec(),
-            data: rng.fill_uniform(n, lo, hi),
+            data: Arc::new(rng.fill_uniform(n, lo, hi)),
         }
     }
 
@@ -88,7 +101,7 @@ impl Tensor {
         let n: usize = shape.iter().product();
         Tensor {
             shape: shape.to_vec(),
-            data: (0..n).map(|_| rng.normal_f32(mean, std)).collect(),
+            data: Arc::new((0..n).map(|_| rng.normal_f32(mean, std)).collect()),
         }
     }
 
@@ -97,7 +110,7 @@ impl Tensor {
         let n: usize = shape.iter().product();
         Tensor {
             shape: shape.to_vec(),
-            data: (0..n).map(|i| i as f32).collect(),
+            data: Arc::new((0..n).map(|i| i as f32).collect()),
         }
     }
 
@@ -123,12 +136,14 @@ impl Tensor {
         &self.data
     }
 
+    /// Mutable view of the payload; copies the data first if it is shared
+    /// with another tensor (copy-on-write).
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        Arc::make_mut(&mut self.data).as_mut_slice()
     }
 
     pub fn into_vec(self) -> Vec<f32> {
-        self.data
+        Arc::try_unwrap(self.data).unwrap_or_else(|shared| (*shared).clone())
     }
 
     /// Size in bytes of the payload.
@@ -148,7 +163,7 @@ impl Tensor {
     pub fn set(&mut self, idx: &[usize], v: f32) {
         let strides = strides_for(&self.shape);
         let off: usize = idx.iter().zip(strides.iter()).map(|(&i, &s)| i * s).sum();
-        self.data[off] = v;
+        Arc::make_mut(&mut self.data)[off] = v;
     }
 
     // ---- layout ops ------------------------------------------------------
@@ -167,7 +182,8 @@ impl Tensor {
     }
 
     /// Materializing axis permutation: output axis `i` is input axis
-    /// `perm[i]`.
+    /// `perm[i]`. Identity permutations (and rank ≤ 1) return a copy-free
+    /// clone — O(1) layout-metadata sharing, no element gather.
     pub fn permute(&self, perm: &[usize]) -> Tensor {
         assert_eq!(perm.len(), self.shape.len());
         let rank = perm.len();
@@ -175,30 +191,11 @@ impl Tensor {
             return self.clone();
         }
         let new_shape: Vec<usize> = perm.iter().map(|&p| self.shape[p]).collect();
-        let in_strides = strides_for(&self.shape);
-        // stride (in the input) of each output axis:
-        let out_axis_stride: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
         let mut out = vec![0.0f32; self.data.len()];
-        // Iterate output in row-major order, tracking the input offset
-        // incrementally (odometer) — O(n) with no per-element multiply.
-        let mut idx = vec![0usize; rank];
-        let mut in_off = 0usize;
-        for slot in out.iter_mut() {
-            *slot = self.data[in_off];
-            // increment odometer
-            for ax in (0..rank).rev() {
-                idx[ax] += 1;
-                in_off += out_axis_stride[ax];
-                if idx[ax] < new_shape[ax] {
-                    break;
-                }
-                in_off -= out_axis_stride[ax] * new_shape[ax];
-                idx[ax] = 0;
-            }
-        }
+        permute_into(&self.data, &self.shape, perm, &mut out, None);
         Tensor {
             shape: new_shape,
-            data: out,
+            data: Arc::new(out),
         }
     }
 
@@ -206,21 +203,15 @@ impl Tensor {
     pub fn sum_axis(&self, axis: usize) -> Tensor {
         assert!(axis < self.shape.len());
         let outer: usize = self.shape[..axis].iter().product();
-        let mid = self.shape[axis];
         let inner: usize = self.shape[axis + 1..].iter().product();
         let mut out = vec![0.0f32; outer * inner];
-        for o in 0..outer {
-            for m in 0..mid {
-                let src = (o * mid + m) * inner;
-                let dst = o * inner;
-                for i in 0..inner {
-                    out[dst + i] += self.data[src + i];
-                }
-            }
-        }
+        sum_axis_into(&self.data, &self.shape, axis, &mut out, None);
         let mut shape = self.shape.clone();
         shape.remove(axis);
-        Tensor { shape, data: out }
+        Tensor {
+            shape,
+            data: Arc::new(out),
+        }
     }
 
     /// Insert a broadcast axis of size `size` at `axis` (repeats data).
@@ -237,7 +228,10 @@ impl Tensor {
         }
         let mut shape = self.shape.clone();
         shape.insert(axis, size);
-        Tensor { shape, data: out }
+        Tensor {
+            shape,
+            data: Arc::new(out),
+        }
     }
 
     /// Slice `axis` to the half-open range [start, stop).
@@ -254,7 +248,10 @@ impl Tensor {
         }
         let mut shape = self.shape.clone();
         shape[axis] = new_mid;
-        Tensor { shape, data: out }
+        Tensor {
+            shape,
+            data: Arc::new(out),
+        }
     }
 
     /// Zero-pad `axis` with `before` zeros in front and `after` behind.
@@ -274,7 +271,10 @@ impl Tensor {
         }
         let mut shape = self.shape.clone();
         shape[axis] = new_mid;
-        Tensor { shape, data: out }
+        Tensor {
+            shape,
+            data: Arc::new(out),
+        }
     }
 
     // ---- elementwise -----------------------------------------------------
@@ -283,21 +283,23 @@ impl Tensor {
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
         Tensor {
             shape: self.shape.clone(),
-            data: self.data.iter().map(|&x| f(x)).collect(),
+            data: Arc::new(self.data.iter().map(|&x| f(x)).collect()),
         }
     }
 
     /// In-place `self += other` (shapes must match).
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+        let d = Arc::make_mut(&mut self.data);
+        for (a, b) in d.iter_mut().zip(other.data.iter()) {
             *a += b;
         }
     }
 
     /// In-place `self *= s`.
     pub fn scale(&mut self, s: f32) {
-        for a in self.data.iter_mut() {
+        let d = Arc::make_mut(&mut self.data);
+        for a in d.iter_mut() {
             *a *= s;
         }
     }
@@ -305,7 +307,8 @@ impl Tensor {
     /// In-place axpy: `self += alpha * other`.
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+        let d = Arc::make_mut(&mut self.data);
+        for (a, b) in d.iter_mut().zip(other.data.iter()) {
             *a += alpha * b;
         }
     }
@@ -373,6 +376,208 @@ pub fn for_each_index(shape: &[usize], mut f: impl FnMut(&[usize])) {
                 break;
             }
             idx[ax] = 0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workspace kernels: canonicalization pre-passes that write into
+// caller-provided buffers (no allocation) and optionally fan out over the
+// worker pool. Accumulation order per output element matches the allocating
+// `Tensor` methods exactly, so results are bit-identical.
+// ---------------------------------------------------------------------------
+
+/// Below this many destination elements the `_into` kernels stay serial even
+/// when handed a pool: scoped-thread spawn costs tens of µs, which dwarfs
+/// small gathers.
+const PAR_CANON_MIN_ELEMS: usize = 1 << 14;
+
+/// Ranks up to this use stack-allocated index/stride buffers in
+/// [`permute_into`]; larger ranks (never seen in practice) fall back to heap
+/// buffers.
+const MAX_STACK_RANK: usize = 32;
+
+/// Permute `src` (row-major, `shape`) into `out`: output axis `i` is input
+/// axis `perm[i]`. `out.len()` must equal `src.len()`. With `pool`, the
+/// output is split into per-thread chunks gathered independently (the gather
+/// is order-independent, so the parallel path is bit-identical).
+pub fn permute_into(
+    src: &[f32],
+    shape: &[usize],
+    perm: &[usize],
+    out: &mut [f32],
+    pool: Option<&Pool>,
+) {
+    let rank = shape.len();
+    assert_eq!(perm.len(), rank, "permutation rank mismatch");
+    assert_eq!(
+        src.len(),
+        shape.iter().product::<usize>(),
+        "src length does not match shape"
+    );
+    assert_eq!(out.len(), src.len(), "out length does not match src");
+    if rank <= 1 || perm.iter().enumerate().all(|(i, &p)| i == p) {
+        out.copy_from_slice(src);
+        return;
+    }
+    // Output shape and, per output axis, its stride in the input.
+    let mut shape_buf = [0usize; MAX_STACK_RANK];
+    let mut stride_buf = [0usize; MAX_STACK_RANK];
+    let shape_vec: Vec<usize>;
+    let stride_vec: Vec<usize>;
+    let (new_shape, strides): (&[usize], &[usize]) = if rank <= MAX_STACK_RANK {
+        let mut in_stride_buf = [0usize; MAX_STACK_RANK];
+        let mut s = 1usize;
+        for ax in (0..rank).rev() {
+            in_stride_buf[ax] = s;
+            s *= shape[ax];
+        }
+        for (i, &p) in perm.iter().enumerate() {
+            shape_buf[i] = shape[p];
+            stride_buf[i] = in_stride_buf[p];
+        }
+        (&shape_buf[..rank], &stride_buf[..rank])
+    } else {
+        let in_strides = strides_for(shape);
+        shape_vec = perm.iter().map(|&p| shape[p]).collect();
+        stride_vec = perm.iter().map(|&p| in_strides[p]).collect();
+        (&shape_vec, &stride_vec)
+    };
+
+    let parallel = match pool {
+        Some(p) => p.threads() > 1 && out.len() >= PAR_CANON_MIN_ELEMS,
+        None => false,
+    };
+    if parallel {
+        let p = pool.expect("parallel implies pool");
+        let chunk = (out.len() + p.threads() - 1) / p.threads();
+        p.run_chunks(out, chunk, |ci, c| {
+            if rank <= MAX_STACK_RANK {
+                let mut idx = [0usize; MAX_STACK_RANK];
+                permute_gather(src, c, ci * chunk, new_shape, strides, &mut idx[..rank]);
+            } else {
+                let mut idx = vec![0usize; rank];
+                permute_gather(src, c, ci * chunk, new_shape, strides, &mut idx);
+            }
+        });
+    } else if rank <= MAX_STACK_RANK {
+        let mut idx = [0usize; MAX_STACK_RANK];
+        permute_gather(src, out, 0, new_shape, strides, &mut idx[..rank]);
+    } else {
+        let mut idx = vec![0usize; rank];
+        permute_gather(src, out, 0, new_shape, strides, &mut idx);
+    }
+}
+
+/// Gather `out.len()` permuted elements starting at linear output index
+/// `start`, tracking the input offset incrementally (odometer) — O(n) with
+/// no per-element multiply.
+fn permute_gather(
+    src: &[f32],
+    out: &mut [f32],
+    start: usize,
+    new_shape: &[usize],
+    strides: &[usize],
+    idx: &mut [usize],
+) {
+    let rank = new_shape.len();
+    let mut rem = start;
+    let mut in_off = 0usize;
+    for ax in (0..rank).rev() {
+        let d = new_shape[ax];
+        idx[ax] = rem % d;
+        rem /= d;
+        in_off += idx[ax] * strides[ax];
+    }
+    for slot in out.iter_mut() {
+        *slot = src[in_off];
+        for ax in (0..rank).rev() {
+            idx[ax] += 1;
+            in_off += strides[ax];
+            if idx[ax] < new_shape[ax] {
+                break;
+            }
+            in_off -= strides[ax] * new_shape[ax];
+            idx[ax] = 0;
+        }
+    }
+}
+
+/// Sum `src` (row-major, `shape`) over `axis` into `out`
+/// (`out.len() == src.len() / shape[axis]`). `out` is zeroed first; per
+/// output element the summation order over the axis matches
+/// [`Tensor::sum_axis`] exactly, so the result is bit-identical (with or
+/// without a pool — each output block is owned by one task).
+pub fn sum_axis_into(
+    src: &[f32],
+    shape: &[usize],
+    axis: usize,
+    out: &mut [f32],
+    pool: Option<&Pool>,
+) {
+    assert!(axis < shape.len(), "axis out of range");
+    let outer: usize = shape[..axis].iter().product();
+    let mid = shape[axis];
+    let inner: usize = shape[axis + 1..].iter().product();
+    assert_eq!(src.len(), outer * mid * inner, "src length mismatch");
+    assert_eq!(out.len(), outer * inner, "out length mismatch");
+    let parallel = match pool {
+        Some(p) => p.threads() > 1 && out.len() >= PAR_CANON_MIN_ELEMS && inner > 0,
+        None => false,
+    };
+    if parallel && outer == 1 {
+        // Leading-axis reduction: split the (single) output block across
+        // threads — each task owns a disjoint slice of the output, keeping
+        // the serial path's m-ascending accumulation order per element.
+        let p = pool.expect("parallel implies pool");
+        let chunk = (inner + p.threads() - 1) / p.threads();
+        p.run_chunks(out, chunk, |ci, c| {
+            let i0 = ci * chunk;
+            for v in c.iter_mut() {
+                *v = 0.0;
+            }
+            for m in 0..mid {
+                let base = m * inner + i0;
+                for (i, v) in c.iter_mut().enumerate() {
+                    *v += src[base + i];
+                }
+            }
+        });
+    } else if parallel {
+        let p = pool.expect("parallel implies pool");
+        // One task per group of whole outer blocks (so a near-last summed
+        // axis with tiny `inner` still dispatches ~threads tasks, not one
+        // per output element); each output element keeps the serial path's
+        // m-ascending accumulation order.
+        let blocks_per_task = (outer + p.threads() - 1) / p.threads();
+        let chunk = blocks_per_task * inner;
+        p.run_chunks(out, chunk, |ci, c| {
+            let o0 = ci * blocks_per_task;
+            for (bi, block) in c.chunks_mut(inner).enumerate() {
+                let o = o0 + bi;
+                for v in block.iter_mut() {
+                    *v = 0.0;
+                }
+                for m in 0..mid {
+                    let base = (o * mid + m) * inner;
+                    for (i, v) in block.iter_mut().enumerate() {
+                        *v += src[base + i];
+                    }
+                }
+            }
+        });
+    } else {
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        for o in 0..outer {
+            for m in 0..mid {
+                let sbase = (o * mid + m) * inner;
+                let dbase = o * inner;
+                for i in 0..inner {
+                    out[dbase + i] += src[sbase + i];
+                }
+            }
         }
     }
 }
@@ -519,6 +724,70 @@ mod tests {
         let mut n = 0;
         for_each_index(&[], |_| n += 1);
         assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn permute_into_matches_permute() {
+        let t = Tensor::iota(&[3, 4, 5]);
+        let want = t.permute(&[2, 0, 1]);
+        let mut out = vec![0.0f32; t.len()];
+        permute_into(t.data(), t.shape(), &[2, 0, 1], &mut out, None);
+        assert_eq!(out.as_slice(), want.data());
+        // identity permutation is a plain copy
+        let mut id = vec![0.0f32; t.len()];
+        permute_into(t.data(), t.shape(), &[0, 1, 2], &mut id, None);
+        assert_eq!(id.as_slice(), t.data());
+    }
+
+    #[test]
+    fn parallel_permute_gather_matches_serial_on_large_tensor() {
+        let mut rng = Rng::new(9);
+        let t = Tensor::rand(&[32, 32, 32], -1.0, 1.0, &mut rng);
+        let want = t.permute(&[1, 2, 0]);
+        let pool = Pool::new(4);
+        let mut out = vec![0.0f32; t.len()];
+        permute_into(t.data(), t.shape(), &[1, 2, 0], &mut out, Some(&pool));
+        assert_eq!(out.as_slice(), want.data());
+    }
+
+    #[test]
+    fn sum_axis_into_matches_sum_axis() {
+        let mut rng = Rng::new(10);
+        let t = Tensor::rand(&[8, 5, 7], -1.0, 1.0, &mut rng);
+        for axis in 0..3 {
+            let want = t.sum_axis(axis);
+            // dirty destination: the kernel must zero it first
+            let mut out = vec![1.0f32; want.len()];
+            sum_axis_into(t.data(), t.shape(), axis, &mut out, None);
+            assert_eq!(out.as_slice(), want.data());
+        }
+        // large enough to take the parallel path; must stay bit-identical
+        let big = Tensor::rand(&[64, 3, 512], -1.0, 1.0, &mut rng);
+        let want = big.sum_axis(1);
+        let pool = Pool::new(4);
+        let mut out = vec![0.0f32; want.len()];
+        sum_axis_into(big.data(), big.shape(), 1, &mut out, Some(&pool));
+        assert_eq!(out.as_slice(), want.data());
+        // leading-axis reduction (outer == 1) splits over the output slice
+        let lead = Tensor::rand(&[3, 20_000], -1.0, 1.0, &mut rng);
+        let want = lead.sum_axis(0);
+        let mut out = vec![0.0f32; want.len()];
+        sum_axis_into(lead.data(), lead.shape(), 0, &mut out, Some(&pool));
+        assert_eq!(out.as_slice(), want.data());
+    }
+
+    #[test]
+    fn identity_permute_and_clone_are_copy_free() {
+        let t = Tensor::iota(&[64, 64]);
+        let p = t.permute(&[0, 1]);
+        assert_eq!(t.data().as_ptr(), p.data().as_ptr(), "identity permute shares storage");
+        // clones share storage until mutated (copy-on-write)
+        let mut c = t.clone();
+        assert_eq!(t.data().as_ptr(), c.data().as_ptr());
+        c.data_mut()[0] = 42.0;
+        assert_ne!(t.data().as_ptr(), c.data().as_ptr());
+        assert_eq!(t.data()[0], 0.0);
+        assert_eq!(c.data()[0], 42.0);
     }
 
     #[test]
