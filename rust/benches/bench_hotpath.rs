@@ -3,12 +3,16 @@
 //! scalar-vs-parallel backend scaling across 1/2/4/8-thread pools, CP/TT
 //! layer steps under both backends, compiled-vs-uncompiled training steps
 //! (with heap-allocation counts and workspace bytes, dumped to
-//! `BENCH_compiled.json`), and coordinator request throughput with batching
-//! on vs off.
+//! `BENCH_compiled.json`), persistent-pool dispatch latency and small-atom
+//! throughput vs a scoped-spawn baseline plus allocations-per-replay on
+//! both backends (dumped to `BENCH_pool.json`), and coordinator request
+//! throughput with batching on vs off.
 use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
 use conv_einsum::coordinator::{EvalService, ServiceConfig};
 use conv_einsum::einsum::{parse, SizedSpec};
 use conv_einsum::exec::{pairwise, pairwise_with};
+use conv_einsum::kernels::axpy8;
+use conv_einsum::parallel::{default_threads, Pool};
 use conv_einsum::planner::{contract_path, PlanOptions};
 use conv_einsum::tnn::{build_layer, Decomp};
 use conv_einsum::util::json::Json;
@@ -50,6 +54,44 @@ fn allocs() -> usize {
 
 fn gflops(mults: f64, secs: f64) -> f64 {
     2.0 * mults / secs / 1e9
+}
+
+/// The pre-persistent-pool dispatcher, kept as the benchmark baseline:
+/// spawn scoped threads per region with round-robin chunk assignment —
+/// this is what every parallel region used to pay.
+fn scoped_run_chunks<F: Fn(usize, &mut [f32]) + Sync>(
+    threads: usize,
+    out: &mut [f32],
+    chunk: usize,
+    f: F,
+) {
+    let n_chunks = (out.len() + chunk - 1) / chunk;
+    let nt = threads.min(n_chunks).max(1);
+    if nt <= 1 {
+        for (i, c) in out.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, &mut [f32])>> = (0..nt).map(|_| Vec::new()).collect();
+    for (i, c) in out.chunks_mut(chunk).enumerate() {
+        buckets[i % nt].push((i, c));
+    }
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut buckets = buckets.into_iter();
+        let first = buckets.next().expect("nt >= 2 buckets");
+        for bucket in buckets {
+            s.spawn(move || {
+                for (i, c) in bucket {
+                    fref(i, c);
+                }
+            });
+        }
+        for (i, c) in first {
+            fref(i, c);
+        }
+    });
 }
 
 fn main() {
@@ -294,6 +336,130 @@ fn main() {
     ]);
     std::fs::write("BENCH_compiled.json", report.encode_pretty()).ok();
     println!("wrote BENCH_compiled.json");
+
+    // ---- persistent pool vs scoped spawn ----------------------------------
+    println!("\n== persistent pool vs scoped spawn ==");
+
+    // (a) Pure dispatch latency: 8 near-empty chunks isolate the cost of
+    // fanning a region out and joining it again.
+    let mut tiny = vec![0.0f32; 8 * 32];
+    let pool4 = Pool::sized(4);
+    let disp_persist = bench("dispatch persistent t=4 (8 tiny chunks)", 50, 200, || {
+        pool4.run_chunks(&mut tiny, 32, |i, c| c[0] = i as f32);
+    });
+    println!("{}", disp_persist.report());
+    let disp_scoped = bench("dispatch scoped    t=4 (8 tiny chunks)", 5, 50, || {
+        scoped_run_chunks(4, &mut tiny, 32, |i, c| c[0] = i as f32);
+    });
+    println!(
+        "{}\n  -> persistent dispatch {:.1}x faster",
+        disp_scoped.report(),
+        disp_scoped.median_secs() / disp_persist.median_secs()
+    );
+
+    // (b) Small-atom-sized parallel step (32 rows × 64 elems, 8 axpy passes
+    // per row ≈ a sub-100µs conv atom) under both dispatchers: at this
+    // scale dispatch overhead decides the outcome.
+    let mut small = vec![0.0f32; 32 * 64];
+    let srcrow = vec![0.5f32; 64];
+    let small_step = |_i: usize, c: &mut [f32]| {
+        for _ in 0..8 {
+            axpy8(1.0001, &srcrow, c);
+        }
+    };
+    let small_scoped = bench("small-atom step scoped     t=4", 5, 50, || {
+        scoped_run_chunks(4, &mut small, 64, small_step);
+    });
+    println!("{}", small_scoped.report());
+    let thread_list = [1usize, 2, 4, 8];
+    let mut small_persist = [0.0f64; 4];
+    let mut small_t4 = 0.0f64;
+    for (k, &threads) in thread_list.iter().enumerate() {
+        let p = Pool::sized(threads);
+        let smp = bench(&format!("small-atom step persistent t={threads}"), 50, 200, || {
+            p.run_chunks(&mut small, 64, small_step);
+        });
+        println!("{}", smp.report());
+        small_persist[k] = smp.median_secs();
+        if threads == 4 {
+            small_t4 = smp.median_secs();
+        }
+    }
+    let small_speedup_t4 = small_scoped.median_secs() / small_t4;
+    println!("  -> small-atom step at t=4: persistent {small_speedup_t4:.1}x faster than scoped");
+
+    // (c) A real small conv atom end-to-end through the executor on the
+    // persistent pool (explicit counts force the parallel path).
+    let small_spec = SizedSpec::new(
+        parse("bshw,tshw->bthw|hw").unwrap(),
+        vec![vec![1, 4, 12, 12], vec![4, 4, 3, 3]],
+    )
+    .unwrap();
+    let sx = Tensor::rand(&[1, 4, 12, 12], -1.0, 1.0, &mut rng);
+    let sw = Tensor::rand(&[4, 4, 3, 3], -1.0, 1.0, &mut rng);
+    let mut pairwise_small = [0.0f64; 3];
+    for (k, threads) in [1usize, 2, 4].into_iter().enumerate() {
+        let opts = ExecOptions::parallel(threads);
+        let smp = bench(&format!("small conv atom pairwise t={threads}"), 10, 50, || {
+            let _ = pairwise_with(&small_spec, &sx, &sw, &[], &opts);
+        });
+        println!("{}", smp.report());
+        pairwise_small[k] = smp.median_secs();
+    }
+
+    // (d) Allocations per compiled replay on the parallel backend: with the
+    // persistent pool the parallel steady state must be as allocation-free
+    // as the scalar one (asserted, like the scalar case above).
+    let p2opts = PlanOptions {
+        backend: Backend::Parallel { threads: 2 },
+        ..Default::default()
+    };
+    let pcompiled = compile_expr(&layer.expr, &dims, &p2opts).unwrap();
+    let mut pws = Workspace::new();
+    let mut pout = Tensor::zeros(pcompiled.out_shape());
+    for _ in 0..3 {
+        // Warm-up: spawn pool workers, build kernel tables, grow buffers.
+        pcompiled.run_into(&inputs, &mut pws, &mut pout).unwrap();
+    }
+    let pa0 = allocs();
+    for _ in 0..50 {
+        pcompiled.run_into(&inputs, &mut pws, &mut pout).unwrap();
+    }
+    let par_steady_allocs = allocs() - pa0;
+    assert_eq!(
+        par_steady_allocs, 0,
+        "parallel compiled steady state must not allocate (got {par_steady_allocs} across 50 runs)"
+    );
+    println!(
+        "steady-state heap allocations: scalar {steady_allocs}, parallel {par_steady_allocs} \
+         (50 compiled replays each)"
+    );
+
+    let disp_sc = disp_scoped.median_secs();
+    let disp_ps = disp_persist.median_secs();
+    let small_sc = small_scoped.median_secs();
+    let allocs_sc = steady_allocs as f64;
+    let allocs_par = par_steady_allocs as f64;
+    let pool_report = Json::obj(vec![
+        ("bench", Json::str("persistent_pool")),
+        ("default_threads", Json::num(default_threads() as f64)),
+        ("dispatch_scoped_t4_median_s", Json::num(disp_sc)),
+        ("dispatch_persistent_t4_median_s", Json::num(disp_ps)),
+        ("dispatch_speedup_t4", Json::num(disp_sc / disp_ps)),
+        ("small_atom_scoped_t4_median_s", Json::num(small_sc)),
+        ("small_atom_persistent_t1_median_s", Json::num(small_persist[0])),
+        ("small_atom_persistent_t2_median_s", Json::num(small_persist[1])),
+        ("small_atom_persistent_t4_median_s", Json::num(small_persist[2])),
+        ("small_atom_persistent_t8_median_s", Json::num(small_persist[3])),
+        ("small_atom_speedup_t4", Json::num(small_speedup_t4)),
+        ("pairwise_small_atom_t1_median_s", Json::num(pairwise_small[0])),
+        ("pairwise_small_atom_t2_median_s", Json::num(pairwise_small[1])),
+        ("pairwise_small_atom_t4_median_s", Json::num(pairwise_small[2])),
+        ("allocs_scalar_50_replays", Json::num(allocs_sc)),
+        ("allocs_parallel_50_replays", Json::num(allocs_par)),
+    ]);
+    std::fs::write("BENCH_pool.json", pool_report.encode_pretty()).ok();
+    println!("wrote BENCH_pool.json");
 
     // coordinator throughput, batching on vs off
     println!();

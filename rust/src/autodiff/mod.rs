@@ -13,7 +13,13 @@
 //! canonicalization and kernel tables are resolved once at construction
 //! (or shared from a layer/coordinator cache via
 //! [`PathAutodiff::from_compiled`]), so both the taped forward and the VJP
-//! replay without re-canonicalizing.
+//! replay without re-canonicalizing. Each step replays with the compiled
+//! plan's hoisted execution options, so under a parallel backend both the
+//! forward tape and the backward VJP fan out over the **persistent worker
+//! pool** ([`crate::parallel::Pool`]) — training steps pay a condvar
+//! wake-up per region, never a thread spawn — and both backends run the
+//! same SIMD microkernels ([`crate::kernels`]), keeping gradients
+//! bit-identical to the scalar backend's.
 
 use crate::exec::CompiledPlan;
 use crate::planner::Plan;

@@ -11,25 +11,29 @@
 //! engine, or via a PJRT artifact when one is registered for the layer.
 //!
 //! Layer evaluation is **compile-once, run-many**: every `(layer, batch,
-//! spatial)` key is planned and lowered to a [`CompiledPlan`] exactly once
-//! (with [`ServiceConfig::backend`] hoisted onto the cached entry, so
-//! batch-level and step-level pool arbitration always see one consistent
-//! backend per entry), and ad-hoc expressions share a service-wide
-//! [`PlanCache`] keyed by `(expr, dims, backend, strategy)`. Each worker
-//! thread owns one reusable [`Workspace`], so steady-state execution
-//! allocates only the output tensors.
+//! spatial)` key is planned and lowered to a [`CompiledPlan`] once and held
+//! in a per-layer LRU cache bounded at [`LAYER_PLAN_CACHE_CAPACITY`]
+//! geometries (with [`ServiceConfig::backend`] hoisted onto the cached
+//! entry, so batch-level and step-level pool arbitration always see one
+//! consistent backend per entry), and ad-hoc expressions share a
+//! service-wide [`PlanCache`] keyed by `(expr, dims, backend, strategy)`.
+//! Each worker thread owns one reusable [`Workspace`] that survives across
+//! requests (the worker threads — like the executor's pool workers — are
+//! persistent), so steady-state execution allocates only the output
+//! tensors.
 //!
 //! Workers and the executor's intra-step parallelism share one pool: each
 //! compiled plan carries [`ServiceConfig::backend`], and under the default
-//! [`Backend::Parallel`]` { threads: 0 }` (= the global
+//! [`Backend::Parallel`]` { threads: 0 }` (= the global persistent
 //! [`crate::parallel::Pool`]) the pool's busy-flag arbitration means that
 //! when several workers execute batches concurrently, exactly one fans out
 //! across the pool while the rest run their steps serially on their own
 //! worker thread — batch-level and step-level parallelism compose without
-//! oversubscribing the machine. Note this guarantee is specific to the
-//! shared pool: an explicit `Backend::Parallel { threads: k }` gives every
-//! atom a private k-thread pool, so `workers × k` threads can be runnable
-//! at once — only use explicit counts for benchmarking.
+//! oversubscribing the machine. Explicit `Backend::Parallel { threads: k }`
+//! counts resolve to the persistent per-size pools
+//! ([`crate::parallel::Pool::sized`]), which carry the same busy-flag
+//! arbitration — but their workers add to the global pool's, so prefer the
+//! default backend outside benchmarking.
 
 mod metrics;
 
@@ -39,6 +43,7 @@ use crate::einsum::{parse, SizedSpec};
 use crate::exec::{Backend, CompiledPlan, PlanCache, Workspace};
 use crate::planner::{plan_with, PlanOptions, Strategy};
 use crate::tensor::Tensor;
+use crate::util::lru::LruCache;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -68,7 +73,9 @@ pub struct ServiceConfig {
 impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
-            workers: 2,
+            // Sized like the worker pool: available parallelism with the
+            // CONV_EINSUM_THREADS override, instead of a fixed constant.
+            workers: crate::parallel::default_threads(),
             max_batch: 8,
             batch_timeout: Duration::from_millis(2),
             queue_capacity: 256,
@@ -78,13 +85,20 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Bound on each layer's per-geometry compiled-plan cache: enough for a
+/// realistic batch/spatial mix per layer while keeping client-controlled
+/// geometry churn from growing resident memory without limit (the shared
+/// ad-hoc [`PlanCache`] is bounded separately).
+pub const LAYER_PLAN_CACHE_CAPACITY: usize = 16;
+
 /// A registered tensorial layer: expression + weights.
 struct LayerEntry {
     expr: String,
     factors: Vec<Tensor>,
-    /// Per-(batch, spatial) compiled-plan cache; each entry carries its
-    /// hoisted `ExecOptions`, so every replay uses one consistent backend.
-    plans: HashMap<(usize, usize, usize), Arc<CompiledPlan>>,
+    /// Per-(batch, height, width) compiled-plan cache, LRU-bounded at
+    /// [`LAYER_PLAN_CACHE_CAPACITY`]; each entry carries its hoisted
+    /// `ExecOptions`, so every replay uses one consistent backend.
+    plans: LruCache<(usize, usize, usize), Arc<CompiledPlan>>,
 }
 
 /// One in-flight request.
@@ -222,7 +236,7 @@ impl EvalService {
                 LayerEntry {
                     expr,
                     factors,
-                    plans: HashMap::new(),
+                    plans: LruCache::new(LAYER_PLAN_CACHE_CAPACITY),
                 },
             );
         }
@@ -301,13 +315,16 @@ fn router_loop(
         let bshape = batch[0].x.shape().to_vec();
         let total_b: usize = batch.iter().map(|p| p.x.shape()[0]).sum();
         let key = (total_b, bshape[bshape.len() - 2], bshape[bshape.len() - 1]);
-        let plan = match entry.plans.get(&key) {
-            Some(p) => Arc::clone(p),
+        let cached = entry.plans.get(&key).cloned();
+        let plan = match cached {
+            Some(p) => p,
             None => {
                 let planned = plan_layer(entry, total_b, &bshape, strategy, backend);
                 match planned {
                     Ok(p) => {
                         let p = Arc::new(p);
+                        // LRU-bounded: geometry churn past the capacity
+                        // evicts the least-recently-served shape.
                         entry.plans.insert(key, Arc::clone(&p));
                         metrics.note_plan_miss();
                         p

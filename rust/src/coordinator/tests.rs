@@ -219,3 +219,41 @@ fn plan_cache_hit_on_repeated_shapes() {
     assert_eq!(m.plan_misses, 1, "plan should be cached after first use");
     service.shutdown();
 }
+
+#[test]
+fn layer_plan_cache_evicts_lru_geometry() {
+    // Fill a layer's per-geometry plan cache past LAYER_PLAN_CACHE_CAPACITY
+    // with distinct spatial shapes: the first geometry must be evicted (its
+    // re-submission re-plans), while the most recent stays cached — both
+    // observable through the plan-miss metric.
+    let mut rng = Rng::new(8);
+    let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+    let service = EvalService::start(
+        ServiceConfig {
+            max_batch: 1, // one batch per request → one plan key per shape
+            ..Default::default()
+        },
+        vec![(name, expr, factors)],
+    )
+    .unwrap();
+    let h = service.handle();
+    let eval_spatial = |hw: usize, rng: &mut Rng| {
+        let x = Tensor::rand(&[1, 3, hw, hw], -1.0, 1.0, rng);
+        h.eval("cp", x).unwrap();
+    };
+    // Geometry A, then `capacity` distinct fillers (A becomes LRU and is
+    // evicted when the last filler lands).
+    eval_spatial(5, &mut rng);
+    for hw in 6..6 + LAYER_PLAN_CACHE_CAPACITY {
+        eval_spatial(hw, &mut rng);
+    }
+    let misses_after_fill = h.metrics().plan_misses;
+    assert_eq!(misses_after_fill as usize, LAYER_PLAN_CACHE_CAPACITY + 1);
+    // The newest filler is still cached: no new miss.
+    eval_spatial(5 + LAYER_PLAN_CACHE_CAPACITY, &mut rng);
+    assert_eq!(h.metrics().plan_misses, misses_after_fill);
+    // Geometry A was evicted: re-submission re-plans.
+    eval_spatial(5, &mut rng);
+    assert_eq!(h.metrics().plan_misses, misses_after_fill + 1);
+    service.shutdown();
+}

@@ -23,16 +23,21 @@
 //! only on row `A[g,t,·,·]`, the `B[g,·,·,·]` panel and the triple tables.
 //! [`Atom::execute_with`] exploits this with [`crate::exec::Backend`]:
 //!
-//! * `Backend::Scalar` — the original single-threaded loop nest;
+//! * `Backend::Scalar` — the single-threaded loop nest;
 //! * `Backend::Parallel` — the same kernels dispatched one output row per
-//!   task across the scoped worker pool ([`crate::parallel::Pool`]). Each
-//!   row keeps the scalar path's accumulation order, so for the convolution
-//!   kernels the parallel backend is bit-identical to scalar; the pure
-//!   contraction kernel uses a 4-way unrolled dot (different summation
-//!   order, same value up to f32 rounding).
+//!   task across the persistent worker pool ([`crate::parallel::Pool`]).
+//!
+//! Both backends drive their inner loops through the explicit 8-lane
+//! microkernels in [`crate::kernels`] ([`dot8`] for contractions,
+//! [`axpy_run`] for convolution runs), chosen per atom by
+//! [`Atom::select_kernel`] when the [`AtomKernel`] holder is built. Because
+//! the kernels fix their accumulation order and per-row loop nests match,
+//! scalar and parallel results are **bit-identical** on every path —
+//! contractions included.
 
 use crate::einsum::{ConvKind, ModeId, SizedSpec};
 use crate::exec::{Backend, ExecOptions};
+use crate::kernels::{axpy8, axpy_run, dot8, LANES, StepKernel};
 use crate::parallel::Pool;
 use crate::tensor::Tensor;
 
@@ -296,10 +301,14 @@ fn canonical_input(x: &Tensor, presum: &[usize], perm: &[usize]) -> Tensor {
 }
 
 /// Below this many forward multiplications, the auto backend
-/// (`Backend::Parallel { threads: 0 }`) stays on the scalar kernels: thread
-/// spawn costs tens of µs, which dwarfs sub-100µs kernels. Explicit thread
-/// counts always take the parallel path (benchmarks and tests rely on it).
-const AUTO_PARALLEL_MIN_WORK: usize = 1 << 16;
+/// (`Backend::Parallel { threads: 0 }`) stays on the scalar kernels.
+/// Dispatching to the persistent pool costs a condvar wake-up (~a µs), so
+/// the bar is far lower than in the scoped-spawn era (tens of µs per
+/// region) — but sub-µs atoms still are not worth waking workers for.
+/// Either choice computes bit-identical results (the backends share their
+/// microkernels). Explicit thread counts always take the parallel path
+/// (benchmarks and tests rely on it).
+const AUTO_PARALLEL_MIN_WORK: usize = 1 << 13;
 
 /// Kernel tables for one [`Atom`], built lazily per direction and cached:
 /// the head-axes triple table and run-coalesced last conv axis driving the
@@ -307,15 +316,23 @@ const AUTO_PARALLEL_MIN_WORK: usize = 1 << 16;
 /// backward kernels. Forward-only paths (inference plans, one-shot
 /// `pairwise`) never pay for the backward table and vice versa; a repeat
 /// caller ([`crate::exec::CompiledPlan`], the autodiff tape) initializes
-/// each at most once. Unused for pure contractions (the matmul kernels need
-/// no tables). Build the holder with [`Atom::kernel`].
-#[derive(Debug, Clone, Default)]
+/// each at most once. The tables are unused for pure contractions (the
+/// matmul kernels need none), but every holder carries the [`StepKernel`]
+/// selected for the atom — the per-step microkernel choice resolved at
+/// compile/lowering time. Build the holder with [`Atom::kernel`].
+#[derive(Debug, Clone)]
 pub struct AtomKernel {
     fwd: std::sync::OnceLock<(Vec<(u32, u32, u32)>, Vec<(u32, u32, u32, u32)>)>,
     combined: std::sync::OnceLock<Vec<(u32, u32, u32)>>,
+    step: StepKernel,
 }
 
 impl AtomKernel {
+    /// The microkernel family selected for this atom's inner loops.
+    pub fn step(&self) -> StepKernel {
+        self.step
+    }
+
     /// Forward tables (head triples + last-axis runs); conv atoms only.
     fn fwd_tables(&self, atom: &Atom) -> &(Vec<(u32, u32, u32)>, Vec<(u32, u32, u32, u32)>) {
         self.fwd.get_or_init(|| atom.head_and_runs())
@@ -358,12 +375,36 @@ impl Atom {
         )
     }
 
-    /// Create the (lazily-populated) kernel-table holder for this atom.
-    /// Holding one per compiled step — instead of rebuilding tables on
-    /// every execution — is what makes [`crate::exec::CompiledPlan`]
-    /// replays cheap.
+    /// Create the (lazily-populated) kernel-table holder for this atom,
+    /// carrying the per-step microkernel selection. Holding one per
+    /// compiled step — instead of rebuilding tables on every execution —
+    /// is what makes [`crate::exec::CompiledPlan`] replays cheap.
     pub fn kernel(&self) -> AtomKernel {
-        AtomKernel::default()
+        AtomKernel {
+            fwd: std::sync::OnceLock::new(),
+            combined: std::sync::OnceLock::new(),
+            step: self.select_kernel(),
+        }
+    }
+
+    /// Select the microkernel family for this atom's inner loops: pure
+    /// contractions run per-group matmuls over [`dot8`] rows; convolutions
+    /// pick the wide (8-lane blocked) axpy when the last conv axis can
+    /// produce runs long enough to fill a lane block, and the narrow
+    /// (block-setup-free, bit-identical) variant otherwise. Run length on
+    /// the last axis is bounded by `min(Iₐ, I_out)` — unit-stride `(ia, p)`
+    /// successions cannot outrun either extent.
+    pub fn select_kernel(&self) -> StepKernel {
+        match self.conv.last() {
+            None => StepKernel::MatmulDot8,
+            Some(c) => {
+                if c.ia.min(c.out) >= LANES {
+                    StepKernel::ConvRunsWide
+                } else {
+                    StepKernel::ConvRunsNarrow
+                }
+            }
+        }
     }
 
     /// Build the flattened combined triple table: offsets into the a-conv
@@ -492,12 +533,12 @@ impl Atom {
                 self.forward_scalar(kernel, av, bv, out)
             }
             Backend::Parallel { threads } => {
-                let owned;
+                let sized;
                 let pool: &Pool = if threads == 0 {
                     Pool::global()
                 } else {
-                    owned = Pool::new(threads);
-                    &owned
+                    sized = Pool::sized(threads);
+                    sized.as_ref()
                 };
                 self.forward_parallel(kernel, av, bv, out, pool);
             }
@@ -519,7 +560,9 @@ impl Atom {
             }
         } else {
             // §Perf run-coalesced kernel: head axes via triple table, last
-            // axis as contiguous axpy runs (see EXPERIMENTS.md §Perf/L3).
+            // axis as contiguous axpy runs (see EXPERIMENTS.md §Perf/L3)
+            // through the step-selected microkernel.
+            let sk = kernel.step();
             let (head, runs) = kernel.fwd_tables(self);
             let last = self.conv.last().unwrap();
             let (la, lb, lo) = (last.ia, last.ib, last.out);
@@ -543,9 +586,7 @@ impl Atom {
                                         &av[arow + ia0 as usize..arow + (ia0 + len) as usize];
                                     let osl = &mut out
                                         [orow + p0 as usize..orow + (p0 + len) as usize];
-                                    for (o, &a) in osl.iter_mut().zip(asl) {
-                                        *o += w * a;
-                                    }
+                                    axpy_run(sk, w, asl, osl);
                                 }
                             }
                         }
@@ -556,9 +597,10 @@ impl Atom {
     }
 
     /// Row-parallel forward: one task per output row `out[g,t,n,·]`,
-    /// dispatched over the worker pool. The per-row loop nest matches the
-    /// scalar kernel's accumulation order exactly (conv case), so results
-    /// are bit-identical to `forward_scalar` per element.
+    /// dispatched over the persistent worker pool. Every row runs the same
+    /// microkernels in the same per-row loop nest as the scalar path, so
+    /// results are bit-identical to `forward_scalar` per element —
+    /// contraction and convolution cases alike.
     fn forward_parallel(
         &self,
         kernel: &AtomKernel,
@@ -570,7 +612,7 @@ impl Atom {
         let (pa, pb, po) = self.conv_sizes();
         let (t, n, s) = (self.t, self.n, self.s);
         if self.conv.is_empty() {
-            // One task per output row out[g,t,·] (length n): a dot-product
+            // One task per output row out[g,t,·] (length n): the dot8
             // microkernel with the A row L1-resident across the B panel.
             pool.run_chunks(out, n, |row, crow| {
                 let ti = row % t;
@@ -578,10 +620,11 @@ impl Atom {
                 let arow = &av[(gi * t + ti) * s..(gi * t + ti + 1) * s];
                 let b_g = &bv[gi * n * s..(gi + 1) * n * s];
                 for (ni, c) in crow.iter_mut().enumerate() {
-                    *c += dot(arow, &b_g[ni * s..(ni + 1) * s]);
+                    *c += dot8(arow, &b_g[ni * s..(ni + 1) * s]);
                 }
             });
         } else {
+            let sk = kernel.step();
             let (head, runs) = kernel.fwd_tables(self);
             let last = self.conv.last().unwrap();
             let (la, lb, lo) = (last.ia, last.ib, last.out);
@@ -605,9 +648,7 @@ impl Atom {
                             let asl = &av[arow + ia0 as usize..arow + (ia0 + len) as usize];
                             let osl =
                                 &mut orow_buf[obase + p0 as usize..obase + (p0 + len) as usize];
-                            for (o, &a) in osl.iter_mut().zip(asl) {
-                                *o += w * a;
-                            }
+                            axpy_run(sk, w, asl, osl);
                         }
                     }
                 }
@@ -697,12 +738,12 @@ impl Atom {
                 self.backward_scalar(kernel, av, bv, dv, da, db)
             }
             Backend::Parallel { threads } => {
-                let owned;
+                let sized;
                 let pool: &Pool = if threads == 0 {
                     Pool::global()
                 } else {
-                    owned = Pool::new(threads);
-                    &owned
+                    sized = Pool::sized(threads);
+                    sized.as_ref()
                 };
                 self.backward_parallel(kernel, av, bv, dv, da, db, pool);
             }
@@ -784,9 +825,7 @@ impl Atom {
                         continue;
                     }
                     let brow = &bv[(gi * n + ni) * s..(gi * n + ni + 1) * s];
-                    for (d, &b) in da_row.iter_mut().zip(brow) {
-                        *d += dval * b;
-                    }
+                    axpy8(dval, brow, da_row);
                 }
             });
             pool.run_chunks(db, s, |row, db_row| {
@@ -798,9 +837,7 @@ impl Atom {
                         continue;
                     }
                     let arow = &av[(gi * t + ti) * s..(gi * t + ti + 1) * s];
-                    for (d, &a) in db_row.iter_mut().zip(arow) {
-                        *d += dval * a;
-                    }
+                    axpy8(dval, arow, db_row);
                 }
             });
         } else {
@@ -847,47 +884,21 @@ fn invert_perm(perm: &[usize]) -> Vec<usize> {
     inv
 }
 
-/// 4-way unrolled dot product (used by the parallel contraction kernel; the
-/// four independent accumulators let the compiler keep the loop pipelined).
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let quads = a.len() / 4;
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut acc2 = 0.0f32;
-    let mut acc3 = 0.0f32;
-    for k in 0..quads {
-        let i = k * 4;
-        acc0 += a[i] * b[i];
-        acc1 += a[i + 1] * b[i + 1];
-        acc2 += a[i + 2] * b[i + 2];
-        acc3 += a[i + 3] * b[i + 3];
-    }
-    let mut acc = acc0 + acc1 + acc2 + acc3;
-    for i in quads * 4..a.len() {
-        acc += a[i] * b[i];
-    }
-    acc
-}
-
-/// C(t×n) = A(t×s) · B(n×s)ᵀ — rows of both operands contiguous.
+/// C(t×n) = A(t×s) · B(n×s)ᵀ — rows of both operands contiguous, each
+/// entry a [`dot8`] in the normative 8-lane order (matching the parallel
+/// backend's per-row microkernel bit-for-bit).
 pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], t: usize, n: usize, s: usize) {
     for ti in 0..t {
         let arow = &a[ti * s..(ti + 1) * s];
         let crow = &mut c[ti * n..(ti + 1) * n];
         for ni in 0..n {
             let brow = &b[ni * s..(ni + 1) * s];
-            let mut acc = 0.0f32;
-            for k in 0..s {
-                acc += arow[k] * brow[k];
-            }
-            crow[ni] += acc;
+            crow[ni] += dot8(arow, brow);
         }
     }
 }
 
-/// C(t×s) = A(t×n) · B(n×s) — accumulating.
+/// C(t×s) = A(t×n) · B(n×s) — accumulating [`axpy8`] rows.
 pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], t: usize, s: usize, n: usize) {
     for ti in 0..t {
         let arow = &a[ti * n..(ti + 1) * n];
@@ -898,14 +909,12 @@ pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], t: usize, s: usize, n: usi
                 continue;
             }
             let brow = &b[ni * s..(ni + 1) * s];
-            for k in 0..s {
-                crow[k] += av * brow[k];
-            }
+            axpy8(av, brow, crow);
         }
     }
 }
 
-/// C(n×s) = A(t×n)ᵀ · B(t×s) — accumulating.
+/// C(n×s) = A(t×n)ᵀ · B(t×s) — accumulating [`axpy8`] rows.
 pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], n: usize, s: usize, t: usize) {
     for ti in 0..t {
         let arow = &a[ti * n..(ti + 1) * n];
@@ -916,9 +925,7 @@ pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], n: usize, s: usize, t: usi
                 continue;
             }
             let crow = &mut c[ni * s..(ni + 1) * s];
-            for k in 0..s {
-                crow[k] += av * brow[k];
-            }
+            axpy8(av, brow, crow);
         }
     }
 }

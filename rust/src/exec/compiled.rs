@@ -9,12 +9,16 @@
 //!
 //! * every step carries its precomputed [`Atom`] (pre-sum axes, canonical
 //!   permutations, conv triple tables) and [`AtomKernel`] (head/run/combined
-//!   tables), so replays do zero canonicalization analysis;
+//!   tables plus the step's selected SIMD microkernel,
+//!   [`crate::kernels::StepKernel`]), so replays do zero canonicalization
+//!   analysis;
 //! * a liveness-based workspace layout assigns every intermediate a range in
 //!   a value arena, reusing ranges as soon as their producer dies — the
 //!   caller holds the [`Workspace`] and hands it back on every call, so the
-//!   steady-state path performs **no heap allocations** after warm-up
-//!   (`Backend::Scalar`; the parallel backend still spawns scoped threads);
+//!   steady-state path performs **no heap allocations** after warm-up on
+//!   *both* backends (the parallel backend dispatches to the persistent
+//!   worker pool instead of spawning scoped threads; `bench_hotpath`
+//!   asserts zero steady-state allocations for scalar and parallel alike);
 //! * input canonicalization (permute / pre-sum) runs through the
 //!   workspace-backed [`crate::tensor::permute_into`] /
 //!   [`crate::tensor::sum_axis_into`] kernels, optionally fanned out over
@@ -536,13 +540,15 @@ impl CompiledPlan {
         }
         ws.ensure(self);
         // Pool for the canonicalization pre-pass (parallel permute/pre-sum).
-        let private;
+        // Explicit thread counts resolve through the persistent per-size
+        // registry, so replays never spawn threads (and never allocate).
+        let sized;
         let canon_pool: Option<&Pool> = match opts.backend {
             Backend::Scalar => None,
             Backend::Parallel { threads: 0 } => Some(Pool::global()),
             Backend::Parallel { threads } => {
-                private = Pool::new(threads);
-                Some(&private)
+                sized = Pool::sized(threads);
+                Some(sized.as_ref())
             }
         };
         let Workspace {

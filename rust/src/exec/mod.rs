@@ -21,11 +21,16 @@
 //! [`ExecOptions`]:
 //!
 //! * [`Backend::Parallel`] (the default) dispatches independent
-//!   per-`(group, output-row)` blocks of the atom across the scoped worker
-//!   pool in [`crate::parallel`]; `threads == 0` uses the shared global
-//!   pool, a positive count uses a private pool of that size.
-//! * [`Backend::Scalar`] is the original single-threaded executor, kept as
-//!   a deterministic fallback and as the baseline in `bench_hotpath`.
+//!   per-`(group, output-row)` blocks of the atom across the persistent
+//!   worker pool in [`crate::parallel`]; `threads == 0` uses the shared
+//!   global pool, a positive count resolves to the persistent pool of that
+//!   size ([`crate::parallel::Pool::sized`]).
+//! * [`Backend::Scalar`] is the single-threaded executor, the baseline in
+//!   `bench_hotpath`.
+//!
+//! Both backends run the same 8-lane microkernels ([`crate::kernels`]) in
+//! the same per-row order, so their results are bit-identical on every
+//! path.
 //!
 //! Plans record the backend chosen at planning time
 //! ([`crate::planner::PlanOptions::backend`] → [`crate::planner::Plan::backend`]),
@@ -53,11 +58,12 @@ use std::sync::Arc;
 pub enum Backend {
     /// The original single-threaded kernels.
     Scalar,
-    /// Multi-threaded row-blocked kernels on the scoped worker pool.
+    /// Multi-threaded row-blocked kernels on the persistent worker pool.
     /// `threads == 0` means "use [`crate::parallel::Pool::global`]" and
     /// additionally falls back to the scalar kernels for atoms too small to
-    /// amortize thread spawning; a positive count forces a private pool of
-    /// that size (benchmarking / tests).
+    /// amortize even a pool wake-up; a positive count forces the persistent
+    /// pool of exactly that size ([`crate::parallel::Pool::sized`] —
+    /// benchmarking / tests).
     Parallel { threads: usize },
 }
 

@@ -1,0 +1,231 @@
+//! Explicit 8-lane `f32` microkernels for the executor's inner loops.
+//!
+//! The planner minimizes FLOPs, but the paper's wall-clock claims only
+//! materialize if each atom executes near hardware peak. These kernels
+//! replace reliance on autovectorization with hand-unrolled 8-wide blocks
+//! (one AVX/NEON-register-width of `f32`s) written so the backend compiles
+//! them to packed SIMD: fixed-size `chunks_exact` bodies with no bounds
+//! checks and independent accumulator lanes.
+//!
+//! # Accumulation order (normative)
+//!
+//! Floating-point addition is not associative, so every kernel fixes its
+//! accumulation order *as part of its contract* — the scalar and parallel
+//! backends, and the compiled-plan replay, all call these same kernels, so
+//! results are bit-identical across backends by construction:
+//!
+//! * [`axpy8`] / [`add8`] touch each output element exactly once
+//!   (`out[i] += w * a[i]`), so unrolling performs no reassociation at all —
+//!   they are bit-identical to the naive element loop.
+//! * [`dot8`] accumulates block `k` lane-wise into 8 independent lanes
+//!   (`acc[l] += a[8k + l] * b[8k + l]`), then combines lanes pairwise as
+//!   `((acc0+acc1)+(acc2+acc3)) + ((acc4+acc5)+(acc6+acc7))`, then folds the
+//!   ragged tail sequentially onto that total in index order. Any scalar
+//!   emulation of this order reproduces the result bit-for-bit (the
+//!   property suite checks ragged lengths 0..=41).
+//!
+//! # Per-step selection
+//!
+//! [`StepKernel`] names the microkernel family a compiled step uses;
+//! [`crate::exec::Atom::select_kernel`] chooses it when the step's
+//! [`crate::exec::AtomKernel`] table holder is built (pure contractions →
+//! [`StepKernel::MatmulDot8`]; convolutions with last-axis runs long enough
+//! to fill 8-lane blocks → [`StepKernel::ConvRunsWide`], otherwise
+//! [`StepKernel::ConvRunsNarrow`]). Wide and narrow axpy variants are
+//! bit-identical — the choice only avoids block-setup overhead on runs that
+//! can never fill a lane block.
+
+/// Lane width of the hand-unrolled kernels (one 256-bit register of `f32`).
+pub const LANES: usize = 8;
+
+/// Which microkernel family a compiled step's inner loops use. Chosen once
+/// per step at compile/lowering time (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKernel {
+    /// Pure contraction: per-group matmul over [`dot8`] rows.
+    MatmulDot8,
+    /// Convolution whose last-axis runs can fill 8-lane blocks: [`axpy8`].
+    ConvRunsWide,
+    /// Convolution with short (ragged) runs: plain element axpy — the same
+    /// per-element order as [`axpy8`], minus the block prologue.
+    ConvRunsNarrow,
+}
+
+/// `out[i] += w * a[i]` over 8-lane blocks plus a sequential tail.
+/// Bit-identical to the naive element loop (each element is touched once).
+#[inline]
+pub fn axpy8(w: f32, a: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    let blocks = out.len() / LANES;
+    let split = blocks * LANES;
+    let (a_main, a_tail) = a.split_at(split);
+    let (o_main, o_tail) = out.split_at_mut(split);
+    for (o, s) in o_main.chunks_exact_mut(LANES).zip(a_main.chunks_exact(LANES)) {
+        o[0] += w * s[0];
+        o[1] += w * s[1];
+        o[2] += w * s[2];
+        o[3] += w * s[3];
+        o[4] += w * s[4];
+        o[5] += w * s[5];
+        o[6] += w * s[6];
+        o[7] += w * s[7];
+    }
+    for (o, s) in o_tail.iter_mut().zip(a_tail) {
+        *o += w * s;
+    }
+}
+
+/// `out[i] += a[i]` over 8-lane blocks plus a sequential tail.
+/// Bit-identical to the naive element loop.
+#[inline]
+pub fn add8(out: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    let blocks = out.len() / LANES;
+    let split = blocks * LANES;
+    let (a_main, a_tail) = a.split_at(split);
+    let (o_main, o_tail) = out.split_at_mut(split);
+    for (o, s) in o_main.chunks_exact_mut(LANES).zip(a_main.chunks_exact(LANES)) {
+        o[0] += s[0];
+        o[1] += s[1];
+        o[2] += s[2];
+        o[3] += s[3];
+        o[4] += s[4];
+        o[5] += s[5];
+        o[6] += s[6];
+        o[7] += s[7];
+    }
+    for (o, s) in o_tail.iter_mut().zip(a_tail) {
+        *o += s;
+    }
+}
+
+/// Dot product in the normative 8-lane blocked order (see module docs):
+/// lane-parallel block accumulation, pairwise lane combine, sequential
+/// ragged tail.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let blocks = a.len() / LANES;
+    let split = blocks * LANES;
+    let (a_main, a_tail) = a.split_at(split);
+    let (b_main, b_tail) = b.split_at(split);
+    let mut acc = [0.0f32; LANES];
+    for (x, y) in a_main.chunks_exact(LANES).zip(b_main.chunks_exact(LANES)) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+        acc[4] += x[4] * y[4];
+        acc[5] += x[5] * y[5];
+        acc[6] += x[6] * y[6];
+        acc[7] += x[7] * y[7];
+    }
+    let mut total =
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (x, y) in a_tail.iter().zip(b_tail) {
+        total += x * y;
+    }
+    total
+}
+
+/// Axpy dispatched by the step's selected kernel. Both arms compute the
+/// same per-element result bit-for-bit; narrow runs skip the block setup.
+#[inline]
+pub fn axpy_run(kind: StepKernel, w: f32, a: &[f32], out: &mut [f32]) {
+    match kind {
+        StepKernel::ConvRunsNarrow => {
+            for (o, s) in out.iter_mut().zip(a) {
+                *o += w * s;
+            }
+        }
+        _ => axpy8(w, a, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Scalar emulation of `dot8`'s documented accumulation order.
+    fn dot8_reference(a: &[f32], b: &[f32]) -> f32 {
+        let blocks = a.len() / LANES;
+        let mut acc = [0.0f32; LANES];
+        for k in 0..blocks {
+            for l in 0..LANES {
+                acc[l] += a[k * LANES + l] * b[k * LANES + l];
+            }
+        }
+        let mut total =
+            ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for i in blocks * LANES..a.len() {
+            total += a[i] * b[i];
+        }
+        total
+    }
+
+    #[test]
+    fn axpy8_bit_identical_to_naive_on_ragged_lengths() {
+        let mut rng = Rng::new(101);
+        for len in 0..=41 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let w = rng.normal_f32(0.0, 2.0);
+            let mut got = init.clone();
+            axpy8(w, &a, &mut got);
+            let mut want = init.clone();
+            for (o, s) in want.iter_mut().zip(&a) {
+                *o += w * s;
+            }
+            for (g, w_) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w_.to_bits(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn add8_bit_identical_to_naive_on_ragged_lengths() {
+        let mut rng = Rng::new(102);
+        for len in 0..=41 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut got = init.clone();
+            add8(&mut got, &a);
+            let mut want = init.clone();
+            for (o, s) in want.iter_mut().zip(&a) {
+                *o += s;
+            }
+            for (g, w_) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w_.to_bits(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot8_matches_documented_order_on_ragged_lengths() {
+        let mut rng = Rng::new(103);
+        for len in 0..=41 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let got = dot8(&a, &b);
+            let want = dot8_reference(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn axpy_run_variants_agree_bitwise() {
+        let mut rng = Rng::new(104);
+        for len in [0usize, 1, 3, 7, 8, 9, 23] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut wide = init.clone();
+            let mut narrow = init.clone();
+            axpy_run(StepKernel::ConvRunsWide, 1.5, &a, &mut wide);
+            axpy_run(StepKernel::ConvRunsNarrow, 1.5, &a, &mut narrow);
+            for (x, y) in wide.iter().zip(&narrow) {
+                assert_eq!(x.to_bits(), y.to_bits(), "len {len}");
+            }
+        }
+    }
+}

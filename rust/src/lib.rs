@@ -15,7 +15,8 @@
 //!   grouped-convolution primitive (paper §3.1);
 //! * a **multi-threaded execution backend** ([`parallel`]): the atom's
 //!   independent per-`(group, output-row)` GEMM-shaped blocks are dispatched
-//!   across a shared scoped worker pool (std-only, no dependencies);
+//!   across a shared persistent worker pool (std-only, no dependencies),
+//!   through the explicit 8-lane SIMD microkernels in [`kernels`];
 //! * the **tnn-cost model** (paper Appendix B, Eq. 5–8) with training-mode
 //!   costs `cost(f) + cost(g1) + cost(g2)` in [`cost`];
 //! * the **optimal sequencer** (paper §3.2) — an exact netcon-equivalent
@@ -69,12 +70,22 @@
 //! a [`Backend`]:
 //!
 //! * [`Backend::Parallel`]` { threads: 0 }` — the default — runs atoms on
-//!   the shared global worker pool ([`parallel::Pool::global`]), sized from
-//!   the `CONV_EINSUM_THREADS` environment variable or the machine's
-//!   available parallelism. A positive `threads` count uses a private pool
-//!   of that size (useful for benchmarking scaling).
-//! * [`Backend::Scalar`] — the original single-threaded kernels, kept as a
-//!   deterministic fallback.
+//!   the shared **persistent** worker pool ([`parallel::Pool::global`]):
+//!   long-lived workers parked on a condvar, sized from the
+//!   `CONV_EINSUM_THREADS` environment variable or the machine's available
+//!   parallelism ([`parallel::default_threads`]). Dispatching a parallel
+//!   region costs a wake-up, not a thread spawn, and allocates nothing in
+//!   the steady state — a compiled-plan replay on the parallel backend is
+//!   as allocation-free as the scalar one. A positive `threads` count
+//!   resolves to a persistent pool of that exact size
+//!   ([`parallel::Pool::sized`], useful for benchmarking scaling).
+//! * [`Backend::Scalar`] — the single-threaded kernels.
+//!
+//! Both backends execute their inner loops through the explicit 8-lane
+//! SIMD microkernels in [`kernels`] (`dot8` / `axpy8` with a fixed,
+//! documented accumulation order), selected per compiled step when its
+//! kernel tables are built — so scalar and parallel results are
+//! **bit-identical on every path**, contractions included.
 //!
 //! Plans record their backend ([`planner::PlanOptions::backend`] →
 //! [`planner::Plan::backend`]), so [`exec::execute_path`], the coordinator's
@@ -102,6 +113,7 @@ pub mod cost;
 pub mod einsum;
 pub mod exec;
 pub mod experiments;
+pub mod kernels;
 pub mod nn;
 pub mod parallel;
 pub mod planner;

@@ -10,8 +10,14 @@ use crate::exec::{CompiledPlan, Workspace};
 use crate::planner::{plan_with, PlanOptions, Strategy};
 use crate::tensor::Tensor;
 use crate::tnn::TnnLayerSpec;
+use crate::util::lru::LruCache;
 use crate::util::rng::Rng;
 use std::sync::Arc;
+
+/// Bound on a [`TensorialConv2d`]'s per-geometry compiled-plan cache:
+/// alternating batch sizes / spatial shapes (train vs eval, ragged last
+/// batches) stay compiled, while unbounded geometry churn evicts LRU-first.
+pub const GEOMETRY_PLAN_CACHE_CAPACITY: usize = 8;
 
 /// How tensorial layers evaluate: the paper's experimental axes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,8 +104,11 @@ pub struct TensorialConv2d {
     pub eval: EvalConfig,
     /// Compiled-plan cache keyed by (batch, hp, wp): the expression is
     /// planned + lowered once per input geometry and replayed on every
-    /// forward/backward; a batch-size (or spatial) change invalidates it.
-    compiled: Option<(usize, usize, usize, Arc<CompiledPlan>)>,
+    /// forward/backward. LRU-bounded at [`GEOMETRY_PLAN_CACHE_CAPACITY`],
+    /// so alternating geometries (e.g. train batch vs eval batch) keep
+    /// their plans instead of thrashing, while arbitrary-shape churn stays
+    /// memory-bounded.
+    compiled: LruCache<(usize, usize, usize), Arc<CompiledPlan>>,
     /// Reusable workspace for inference-mode forwards.
     ws: Workspace,
     tape: Option<Tape>,
@@ -120,7 +129,7 @@ impl TensorialConv2d {
             factors,
             grads,
             eval,
-            compiled: None,
+            compiled: LruCache::new(GEOMETRY_PLAN_CACHE_CAPACITY),
             ws: Workspace::new(),
             tape: None,
             cached_x_shape: Vec::new(),
@@ -129,27 +138,32 @@ impl TensorialConv2d {
     }
 
     fn compiled_for(&mut self, b: usize, hp: usize, wp: usize) -> Arc<CompiledPlan> {
-        let stale = match &self.compiled {
-            Some((pb, ph, pw, _)) => (*pb, *ph, *pw) != (b, hp, wp),
-            None => true,
-        };
-        if stale {
-            let spec = parse(&self.spec.expr).expect("layer expr parses");
-            let dims = self.spec.expr_dims(b, hp, wp);
-            let sized = SizedSpec::new(spec, dims).expect("layer expr sizes");
-            let plan = plan_with(
-                &sized,
-                &PlanOptions {
-                    strategy: self.eval.strategy,
-                    training: self.eval.training_cost_model,
-                    ..Default::default()
-                },
-            )
-            .expect("layer expr plans");
-            let compiled = CompiledPlan::compile_arc(Arc::new(plan)).expect("layer expr compiles");
-            self.compiled = Some((b, hp, wp, Arc::new(compiled)));
+        let key = (b, hp, wp);
+        if let Some(p) = self.compiled.get(&key) {
+            return Arc::clone(p);
         }
-        Arc::clone(&self.compiled.as_ref().unwrap().3)
+        let spec = parse(&self.spec.expr).expect("layer expr parses");
+        let dims = self.spec.expr_dims(b, hp, wp);
+        let sized = SizedSpec::new(spec, dims).expect("layer expr sizes");
+        let plan = plan_with(
+            &sized,
+            &PlanOptions {
+                strategy: self.eval.strategy,
+                training: self.eval.training_cost_model,
+                ..Default::default()
+            },
+        )
+        .expect("layer expr plans");
+        let compiled =
+            Arc::new(CompiledPlan::compile_arc(Arc::new(plan)).expect("layer expr compiles"));
+        self.compiled.insert(key, Arc::clone(&compiled));
+        compiled
+    }
+
+    /// Number of geometries currently holding a compiled plan (bounded by
+    /// [`GEOMETRY_PLAN_CACHE_CAPACITY`]).
+    pub fn plan_cache_len(&self) -> usize {
+        self.compiled.len()
     }
 
     /// Planned FLOPs (multiplications) for one forward at this input shape.
@@ -198,7 +212,7 @@ impl Layer for TensorialConv2d {
             self.cached_x_shape[2],
             self.cached_x_shape[3],
         );
-        let compiled = Arc::clone(&self.compiled.as_ref().expect("backward without forward").3);
+        let compiled = self.compiled_for(b, hp, wp);
         let ad = PathAutodiff::from_compiled(compiled);
         let mut tape = self.tape.take().expect("backward without forward");
         let dy_shaped = dy.clone().reshape(&self.spec.output_shape(b, hp, wp));

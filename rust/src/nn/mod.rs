@@ -15,6 +15,7 @@ pub mod trainer;
 pub use data::{Dataset, SyntheticImages, SyntheticSequences};
 pub use layers::{
     EvalConfig, GlobalAvgPool, Layer, Linear, MaxPool2, ReLU, TensorialConv2d,
+    GEOMETRY_PLAN_CACHE_CAPACITY,
 };
 pub use loss::{softmax_cross_entropy, SoftmaxCeLoss};
 pub use model::{small_tnn_cnn, small_tnn_cnn_hw, Sequential, TnnNetConfig};

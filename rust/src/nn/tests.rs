@@ -99,6 +99,38 @@ fn eval_modes_compute_identical_functions() {
 }
 
 #[test]
+fn geometry_plan_cache_is_lru_bounded() {
+    // More distinct input geometries than the cache capacity: the layer
+    // must keep working, never exceed the bound, and retain the most
+    // recently used geometries (alternating two geometries at the end must
+    // not recompile — observable by the cache length staying fixed).
+    let mut rng = Rng::new(11);
+    let spec = build_layer(Decomp::Cp, 1, 4, 3, 3, 3, 1.0).unwrap();
+    let mut layer = TensorialConv2d::new(spec, EvalConfig::conv_einsum(), &mut rng);
+    for b in 1..=GEOMETRY_PLAN_CACHE_CAPACITY + 2 {
+        let x = Tensor::rand(&[b, 3, 6, 6], -1.0, 1.0, &mut rng);
+        let y = layer.forward(&x, false);
+        assert_eq!(y.shape(), &[b, 4, 6, 6]);
+        assert!(
+            layer.plan_cache_len() <= GEOMETRY_PLAN_CACHE_CAPACITY,
+            "cache exceeded its bound: {}",
+            layer.plan_cache_len()
+        );
+    }
+    assert_eq!(layer.plan_cache_len(), GEOMETRY_PLAN_CACHE_CAPACITY);
+    // Alternating two resident geometries stays within the bound and keeps
+    // producing correct shapes (train-batch vs eval-batch pattern).
+    for _ in 0..3 {
+        for b in [GEOMETRY_PLAN_CACHE_CAPACITY + 1, GEOMETRY_PLAN_CACHE_CAPACITY + 2] {
+            let x = Tensor::rand(&[b, 3, 6, 6], -1.0, 1.0, &mut rng);
+            let y = layer.forward(&x, false);
+            assert_eq!(y.shape(), &[b, 4, 6, 6]);
+        }
+    }
+    assert_eq!(layer.plan_cache_len(), GEOMETRY_PLAN_CACHE_CAPACITY);
+}
+
+#[test]
 fn eval_config_labels() {
     assert_eq!(EvalConfig::conv_einsum().label(), "conv_einsum");
     assert_eq!(EvalConfig::naive_ckpt().label(), "naive w/ ckpt");

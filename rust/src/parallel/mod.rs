@@ -1,35 +1,237 @@
-//! Shared scoped worker pool for intra-operator parallelism (std-only).
+//! Persistent worker pool for intra-operator parallelism (std-only).
 //!
 //! The atomic grouped convolution (paper §3.1) decomposes into independent
 //! per-`(group, output-row)` blocks, so the executor's parallel backend
 //! splits its output buffer into disjoint row chunks and fans them out over
-//! scoped threads. A [`Pool`] is a *concurrency budget* plus an arbitration
-//! flag rather than a set of long-lived threads: each [`Pool::run_chunks`]
-//! call spawns scoped workers (so borrowed tensor data crosses thread
-//! boundaries safely with zero `unsafe`), and a `busy` flag guarantees that
-//! concurrent users of the same pool — e.g. several coordinator workers
-//! executing batches at once, or a nested parallel region — degrade to
-//! serial execution on their own thread instead of oversubscribing the
-//! machine with `workers × threads` runnables.
+//! the pool. A [`Pool`] owns a set of **long-lived worker threads** parked
+//! on a condvar: dispatching a parallel region costs a mutex hand-off and a
+//! wake-up (nanoseconds to a few microseconds) instead of the tens of
+//! microseconds per-region scoped spawning used to cost — and, crucially,
+//! the steady state performs **zero heap allocations**, so a compiled-plan
+//! replay on the parallel backend is as allocation-free as the scalar one
+//! (`bench_hotpath` asserts both).
 //!
-//! The process-wide pool ([`Pool::global`]) sizes itself from the
-//! `CONV_EINSUM_THREADS` environment variable when set, falling back to
-//! [`std::thread::available_parallelism`]. The coordinator's worker loop and
-//! the executor's default [`crate::exec::Backend::Parallel`] backend share
-//! this single pool.
+//! # Execution model
+//!
+//! [`Pool::run_chunks`] splits the output into fixed-size chunks and
+//! publishes one *job* (an erased pointer to the caller's closure) to the
+//! pool's job slot. Workers and the calling thread then claim chunk indices
+//! from a shared cursor until none remain; the caller blocks until every
+//! claimed chunk has finished executing. Chunks are claimed dynamically, so
+//! load balances even when per-chunk work is uneven, and every chunk is a
+//! deterministic function of its index — results are bit-identical
+//! regardless of which thread runs which chunk, and identical to serial
+//! execution.
+//!
+//! Workers are started lazily on the first parallel region and live until
+//! the pool is dropped ([`Pool::global`] and the [`Pool::sized`] registry
+//! entries live for the process). Because the threads persist, everything
+//! thread-local to a worker — its stack, lazily-built kernel state —
+//! survives across jobs; the coordinator's workers likewise keep their
+//! per-thread [`crate::exec::Workspace`]s across requests.
+//!
+//! A `busy` flag guarantees that concurrent users of the same pool — e.g.
+//! several coordinator workers executing batches at once, or a nested
+//! parallel region — degrade to serial execution on their own thread
+//! instead of oversubscribing the machine with `workers × threads`
+//! runnables.
+//!
+//! The process-wide pool ([`Pool::global`]) sizes itself from
+//! [`default_threads`]: the `CONV_EINSUM_THREADS` environment variable when
+//! set, falling back to [`std::thread::available_parallelism`]. Explicit
+//! `Backend::Parallel { threads: k }` counts resolve through [`Pool::sized`]
+//! to persistent per-size pools, so benchmarking at a fixed width also pays
+//! spawn cost only once.
+//!
+//! # Safety
+//!
+//! The job slot stores a type-erased raw pointer to a closure living on the
+//! caller's stack. This is sound because `run_chunks` does not return until
+//! `completed == n_chunks && in_flight == 0` — i.e. until no thread can
+//! still dereference the pointer — and late-waking workers re-check the
+//! job epoch under the slot mutex before touching anything. Distinct chunk
+//! indices map to disjoint sub-slices of the output, so no two threads ever
+//! alias the same `&mut [f32]`.
 
+use std::any::Any;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
-/// A reusable concurrency budget for scoped data-parallel loops.
+/// Default worker-thread budget: the `CONV_EINSUM_THREADS` environment
+/// variable when set to a positive integer, otherwise the machine's
+/// [`std::thread::available_parallelism`] (falling back to 4 when that is
+/// unavailable). [`Pool::global`] and the coordinator's default worker
+/// count both derive from this, replacing the old fixed config constant.
+pub fn default_threads() -> usize {
+    std::env::var("CONV_EINSUM_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}
+
+/// Type-erased reference to the in-flight job: a data pointer to the
+/// caller's [`ChunkJob`] plus a monomorphized shim that executes one chunk.
+#[derive(Clone, Copy)]
+struct JobRef {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: the pointee outlives every dereference (see module docs: the
+// publishing call blocks until all participants have finished), and the
+// closure it points at is `Sync`, so shared access from workers is sound.
+unsafe impl Send for JobRef {}
+
+/// The caller-stack job descriptor `JobRef::data` points at.
+struct ChunkJob<F> {
+    f: *const F,
+    base: *mut f32,
+    len: usize,
+    chunk: usize,
+}
+
+/// Execute chunk `i` of the job at `data`: reconstruct the disjoint output
+/// sub-slice for that index and invoke the user closure on it.
+///
+/// SAFETY (caller): `data` must point at a live `ChunkJob<F>` whose `base`/
+/// `len` describe a valid `f32` buffer, and no other thread may hold chunk
+/// index `i` (guaranteed by the claim cursor).
+unsafe fn call_chunk<F: Fn(usize, &mut [f32]) + Sync>(data: *const (), i: usize) {
+    let job = &*(data as *const ChunkJob<F>);
+    let start = i * job.chunk;
+    let end = (start + job.chunk).min(job.len);
+    let slice = std::slice::from_raw_parts_mut(job.base.add(start), end - start);
+    (*job.f)(i, slice);
+}
+
+/// Mutex-protected dispatch state shared between the caller and workers.
+/// All transitions happen under the lock; chunk *execution* happens outside
+/// it, so the lock is held only for index bookkeeping.
+struct JobSlot {
+    /// Monotone job counter; workers remember the last epoch they joined so
+    /// a stale wake-up never re-enters a finished job.
+    epoch: u64,
+    job: Option<JobRef>,
+    n_chunks: usize,
+    /// Next unclaimed chunk index.
+    next_chunk: usize,
+    /// Chunks whose execution has finished (success or panic).
+    completed: usize,
+    /// Threads currently executing a claimed chunk.
+    in_flight: usize,
+    /// First panic payload from a chunk closure; the publishing caller
+    /// re-raises it via `resume_unwind`, preserving the original message.
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    /// Workers park here waiting for a new epoch.
+    work_cv: Condvar,
+    /// The publishing caller parks here waiting for completion.
+    done_cv: Condvar,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared {
+            slot: Mutex::new(JobSlot {
+                epoch: 0,
+                job: None,
+                n_chunks: 0,
+                next_chunk: 0,
+                completed: 0,
+                in_flight: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        }
+    }
+}
+
+/// Claim and execute chunks of the job published at `epoch` until none
+/// remain. Run by the caller and by every woken worker; safe to call even
+/// after the job has drained (returns immediately).
+fn execute_chunks(shared: &Shared, job: JobRef, epoch: u64) {
+    loop {
+        let i = {
+            let mut slot = shared.slot.lock().unwrap();
+            if slot.epoch != epoch || slot.job.is_none() || slot.next_chunk >= slot.n_chunks {
+                return;
+            }
+            let i = slot.next_chunk;
+            slot.next_chunk += 1;
+            slot.in_flight += 1;
+            i
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, i) }));
+        let mut slot = shared.slot.lock().unwrap();
+        slot.in_flight -= 1;
+        slot.completed += 1;
+        if let Err(payload) = result {
+            // Keep the first payload; the publishing caller re-raises it.
+            slot.panic.get_or_insert(payload);
+        }
+        if slot.completed >= slot.n_chunks && slot.in_flight == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Worker body: park on the condvar until a new job epoch appears (or
+/// shutdown), then help drain its chunks.
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let (job, epoch) = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if let Some(job) = slot.job {
+                    if slot.epoch != seen && slot.next_chunk < slot.n_chunks {
+                        break (job, slot.epoch);
+                    }
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        seen = epoch;
+        execute_chunks(&shared, job, epoch);
+    }
+}
+
+/// A persistent worker pool: `threads - 1` parked worker threads (started
+/// lazily; the calling thread is the remaining participant) plus a `busy`
+/// arbitration flag. See the module docs for the execution model.
 #[derive(Debug)]
 pub struct Pool {
     threads: usize,
     busy: AtomicBool,
+    shared: OnceLock<Arc<Shared>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
-/// Clears the busy flag even if a worker panics mid-region (the panic is
-/// propagated by `thread::scope` after joining, unwinding through this).
+impl std::fmt::Debug for Shared {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Shared{..}")
+    }
+}
+
+/// Clears the busy flag even if a chunk closure panics (the panic is
+/// re-raised by `run_chunks` after completion, unwinding through this).
 struct BusyGuard<'a>(&'a AtomicBool);
 
 impl Drop for BusyGuard<'_> {
@@ -39,78 +241,166 @@ impl Drop for BusyGuard<'_> {
 }
 
 impl Pool {
-    /// A pool with an explicit thread budget (clamped to ≥ 1).
+    /// A pool with an explicit thread budget (clamped to ≥ 1). Workers are
+    /// spawned on first use and joined when the pool is dropped. For a
+    /// shared persistent pool of a given width, prefer [`Pool::sized`].
     pub fn new(threads: usize) -> Pool {
         Pool {
             threads: threads.max(1),
             busy: AtomicBool::new(false),
+            shared: OnceLock::new(),
+            handles: Mutex::new(Vec::new()),
         }
     }
 
-    /// The process-wide shared pool.
+    /// The process-wide shared pool, sized by [`default_threads`].
     pub fn global() -> &'static Pool {
         static GLOBAL: OnceLock<Pool> = OnceLock::new();
-        GLOBAL.get_or_init(|| {
-            let threads = std::env::var("CONV_EINSUM_THREADS")
-                .ok()
-                .and_then(|v| v.trim().parse::<usize>().ok())
-                .filter(|&t| t > 0)
-                .unwrap_or_else(|| {
-                    std::thread::available_parallelism()
-                        .map(|n| n.get())
-                        .unwrap_or(4)
-                });
-            Pool::new(threads)
-        })
+        GLOBAL.get_or_init(|| Pool::new(default_threads()))
     }
 
-    /// This pool's thread budget.
+    /// The process-wide persistent pool of exactly `threads` workers
+    /// (clamped to ≥ 1). Pools are created once per distinct size and live
+    /// for the process, so repeated `Backend::Parallel { threads: k }`
+    /// executions pay thread-spawn cost once and dispatch allocation-free
+    /// afterwards. Common widths (≤ 16) resolve through a lock-free
+    /// `OnceLock` table — this lookup sits on the per-step dispatch path of
+    /// compiled replays with explicit thread counts, so it must not
+    /// serialize concurrent callers on a registry mutex.
+    pub fn sized(threads: usize) -> Arc<Pool> {
+        const FAST_WIDTHS: usize = 16;
+        #[allow(clippy::declare_interior_mutable_const)]
+        const EMPTY: OnceLock<Arc<Pool>> = OnceLock::new();
+        static FAST: [OnceLock<Arc<Pool>>; FAST_WIDTHS + 1] = [EMPTY; FAST_WIDTHS + 1];
+        static REGISTRY: OnceLock<Mutex<HashMap<usize, Arc<Pool>>>> = OnceLock::new();
+        let threads = threads.max(1);
+        if threads <= FAST_WIDTHS {
+            return Arc::clone(
+                FAST[threads].get_or_init(|| Arc::new(Pool::new(threads))),
+            );
+        }
+        let reg = REGISTRY.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = reg.lock().unwrap();
+        Arc::clone(
+            map.entry(threads)
+                .or_insert_with(|| Arc::new(Pool::new(threads))),
+        )
+    }
+
+    /// This pool's thread budget (including the calling thread).
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// Lazily start the worker threads (budget − 1 of them; the caller is
+    /// the last participant). Spawn failures degrade the pool silently —
+    /// the dynamic chunk cursor means the caller alone still completes
+    /// every job.
+    fn shared(&self) -> &Arc<Shared> {
+        self.shared.get_or_init(|| {
+            let shared = Arc::new(Shared::new());
+            let mut handles = self.handles.lock().unwrap();
+            for i in 0..self.threads - 1 {
+                let s = Arc::clone(&shared);
+                if let Ok(h) = std::thread::Builder::new()
+                    .name(format!("conv-einsum-pool-{i}"))
+                    .spawn(move || worker_loop(s))
+                {
+                    handles.push(h);
+                }
+            }
+            shared
+        })
+    }
+
     /// Split `out` into contiguous chunks of `chunk` elements (the last may
     /// be shorter) and invoke `f(chunk_index, chunk)` on every chunk, fanned
-    /// out across up to `self.threads` scoped worker threads.
+    /// out across the persistent workers plus the calling thread.
     ///
-    /// Chunks are assigned round-robin, so uniform per-chunk work balances
-    /// well. Falls back to serial execution on the calling thread when the
-    /// budget is 1, there is only one chunk, or the pool is already busy
-    /// (nested or concurrent use) — never blocks waiting for the pool.
+    /// Chunks are claimed dynamically from a shared cursor, so uneven
+    /// per-chunk work still balances. Falls back to serial execution on the
+    /// calling thread when the budget is 1, there is only one chunk, or the
+    /// pool is already busy (nested or concurrent use) — never blocks
+    /// waiting for the pool. Steady-state dispatch performs no heap
+    /// allocation.
+    ///
+    /// If `f` panics on any chunk, the remaining chunks still complete (or
+    /// drain) and the panic is re-raised on the calling thread.
     pub fn run_chunks<F>(&self, out: &mut [f32], chunk: usize, f: F)
     where
         F: Fn(usize, &mut [f32]) + Sync,
     {
         assert!(chunk > 0, "chunk size must be positive");
         let n_chunks = (out.len() + chunk - 1) / chunk;
-        let nt = self.threads.min(n_chunks);
-        if nt <= 1 || self.busy.swap(true, Ordering::Acquire) {
+        if self.threads <= 1 || n_chunks <= 1 || self.busy.swap(true, Ordering::Acquire) {
             for (i, c) in out.chunks_mut(chunk).enumerate() {
                 f(i, c);
             }
             return;
         }
-        let _guard = BusyGuard(&self.busy);
-        let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
-            (0..nt).map(|_| Vec::new()).collect();
-        for (i, c) in out.chunks_mut(chunk).enumerate() {
-            buckets[i % nt].push((i, c));
+        let guard = BusyGuard(&self.busy);
+        let shared = self.shared();
+        let ctx = ChunkJob {
+            f: &f as *const F,
+            base: out.as_mut_ptr(),
+            len: out.len(),
+            chunk,
+        };
+        let job = JobRef {
+            data: &ctx as *const ChunkJob<F> as *const (),
+            call: call_chunk::<F>,
+        };
+        let epoch = {
+            let mut slot = shared.slot.lock().unwrap();
+            slot.epoch += 1;
+            slot.job = Some(job);
+            slot.n_chunks = n_chunks;
+            slot.next_chunk = 0;
+            slot.completed = 0;
+            slot.panic = None;
+            slot.epoch
+        };
+        // Wake only as many workers as the job can use (the caller takes
+        // chunks too): a small region on a wide pool must not thundering-
+        // herd every parked worker. A worker that misses its wake-up (e.g.
+        // still draining the previous job) re-checks the slot condition
+        // before sleeping, so under-notification never strands chunks —
+        // the caller drains whatever workers do not claim.
+        let wake = (n_chunks - 1).min(self.threads - 1);
+        for _ in 0..wake {
+            shared.work_cv.notify_one();
         }
-        let fref = &f;
-        std::thread::scope(|s| {
-            let mut buckets = buckets.into_iter();
-            let first = buckets.next().expect("nt >= 2 buckets");
-            for bucket in buckets {
-                s.spawn(move || {
-                    for (i, c) in bucket {
-                        fref(i, c);
-                    }
-                });
+        // The caller is a full participant: even if every worker is slow to
+        // wake (or failed to spawn), the job completes.
+        execute_chunks(shared, job, epoch);
+        let panic = {
+            let mut slot = shared.slot.lock().unwrap();
+            while slot.completed < slot.n_chunks || slot.in_flight > 0 {
+                slot = shared.done_cv.wait(slot).unwrap();
             }
-            for (i, c) in first {
-                fref(i, c);
+            // Clear the job before releasing the lock so a late-waking
+            // worker can never observe a dangling pointer.
+            slot.job = None;
+            slot.panic.take()
+        };
+        drop(guard);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        if let Some(shared) = self.shared.get() {
+            shared.slot.lock().unwrap().shutdown = true;
+            shared.work_cv.notify_all();
+            if let Ok(handles) = self.handles.get_mut() {
+                for h in handles.drain(..) {
+                    let _ = h.join();
+                }
             }
-        });
+        }
     }
 }
 
@@ -189,10 +479,105 @@ mod tests {
     }
 
     #[test]
+    fn workers_persist_across_many_jobs() {
+        // Hundreds of back-to-back dispatches on one pool: exercises the
+        // epoch protocol (publish → drain → clear) repeatedly and checks
+        // every job's result.
+        let pool = Pool::new(4);
+        let mut data = vec![0.0f32; 256];
+        for round in 0..300 {
+            pool.run_chunks(&mut data, 16, |i, c| {
+                for (k, v) in c.iter_mut().enumerate() {
+                    *v = (round * 10_000 + i * 100 + k) as f32;
+                }
+            });
+            for (k, &v) in data.iter().enumerate() {
+                assert_eq!(v, (round * 10_000 + (k / 16) * 100 + (k % 16)) as f32);
+            }
+        }
+        assert!(!pool.busy.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn dropping_a_pool_joins_its_workers() {
+        let pool = Pool::new(3);
+        let mut data = vec![0.0f32; 32];
+        pool.run_chunks(&mut data, 4, |_, c| c.iter_mut().for_each(|v| *v = 1.0));
+        drop(pool); // must not hang
+        assert!(data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn panic_in_chunk_propagates_and_pool_stays_usable() {
+        let pool = Pool::new(2);
+        let mut data = vec![0.0f32; 64];
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunks(&mut data, 8, |i, _| {
+                if i == 3 {
+                    panic!("chunk 3 exploded");
+                }
+            });
+        }));
+        let payload = r.expect_err("panic must propagate to the caller");
+        // The original payload is preserved (resume_unwind, not a new panic).
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"chunk 3 exploded"));
+        assert!(!pool.busy.load(Ordering::SeqCst), "busy flag must clear");
+        // Subsequent jobs still run.
+        pool.run_chunks(&mut data, 8, |_, c| c.iter_mut().for_each(|v| *v = 5.0));
+        assert!(data.iter().all(|&v| v == 5.0));
+    }
+
+    #[test]
+    fn concurrent_callers_all_complete() {
+        // Several threads race run_chunks on one pool: exactly one fans
+        // out, the rest run serially (busy flag), but all finish correctly.
+        let pool = Pool::new(4);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let pool = &pool;
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let mut data = vec![0.0f32; 64];
+                        pool.run_chunks(&mut data, 8, |i, c| {
+                            for v in c.iter_mut() {
+                                *v = (t * 1000 + i) as f32;
+                            }
+                        });
+                        for (k, &v) in data.iter().enumerate() {
+                            assert_eq!(v, (t * 1000 + k / 8) as f32);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(!pool.busy.load(Ordering::SeqCst));
+    }
+
+    #[test]
     fn global_pool_is_a_singleton_with_positive_budget() {
         let a = Pool::global() as *const Pool;
         let b = Pool::global() as *const Pool;
         assert_eq!(a, b);
         assert!(Pool::global().threads() >= 1);
+    }
+
+    #[test]
+    fn sized_registry_returns_one_pool_per_width() {
+        let a = Pool::sized(3);
+        let b = Pool::sized(3);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.threads(), 3);
+        let c = Pool::sized(0); // clamped
+        assert_eq!(c.threads(), 1);
+        let mut data = vec![0.0f32; 30];
+        a.run_chunks(&mut data, 5, |i, c| c.iter_mut().for_each(|v| *v = i as f32));
+        for (k, &v) in data.iter().enumerate() {
+            assert_eq!(v, (k / 5) as f32);
+        }
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
     }
 }

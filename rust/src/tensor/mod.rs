@@ -14,6 +14,7 @@
 //! pre-pass used by the compiled execution engine
 //! ([`crate::exec::CompiledPlan`]).
 
+use crate::kernels::{add8, axpy8};
 use crate::parallel::Pool;
 use crate::util::rng::Rng;
 use std::fmt;
@@ -291,9 +292,7 @@ impl Tensor {
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
         let d = Arc::make_mut(&mut self.data);
-        for (a, b) in d.iter_mut().zip(other.data.iter()) {
-            *a += b;
-        }
+        add8(d, &other.data);
     }
 
     /// In-place `self *= s`.
@@ -304,13 +303,12 @@ impl Tensor {
         }
     }
 
-    /// In-place axpy: `self += alpha * other`.
+    /// In-place axpy: `self += alpha * other` (8-lane microkernel; same
+    /// per-element result as the naive loop).
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
         let d = Arc::make_mut(&mut self.data);
-        for (a, b) in d.iter_mut().zip(other.data.iter()) {
-            *a += alpha * b;
-        }
+        axpy8(alpha, &other.data, d);
     }
 
     /// Sum of all elements.
@@ -533,14 +531,13 @@ pub fn sum_axis_into(
         let chunk = (inner + p.threads() - 1) / p.threads();
         p.run_chunks(out, chunk, |ci, c| {
             let i0 = ci * chunk;
+            let clen = c.len();
             for v in c.iter_mut() {
                 *v = 0.0;
             }
             for m in 0..mid {
                 let base = m * inner + i0;
-                for (i, v) in c.iter_mut().enumerate() {
-                    *v += src[base + i];
-                }
+                add8(c, &src[base..base + clen]);
             }
         });
     } else if parallel {
@@ -560,9 +557,7 @@ pub fn sum_axis_into(
                 }
                 for m in 0..mid {
                     let base = (o * mid + m) * inner;
-                    for (i, v) in block.iter_mut().enumerate() {
-                        *v += src[base + i];
-                    }
+                    add8(block, &src[base..base + inner]);
                 }
             }
         });
@@ -574,9 +569,7 @@ pub fn sum_axis_into(
             for m in 0..mid {
                 let sbase = (o * mid + m) * inner;
                 let dbase = o * inner;
-                for i in 0..inner {
-                    out[dbase + i] += src[sbase + i];
-                }
+                add8(&mut out[dbase..dbase + inner], &src[sbase..sbase + inner]);
             }
         }
     }

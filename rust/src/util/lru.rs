@@ -1,0 +1,153 @@
+//! A tiny least-recently-used map for small, bounded caches.
+//!
+//! Linear-scan over a `Vec` — the per-layer compiled-plan caches this backs
+//! ([`crate::coordinator`] layer entries, [`crate::nn::TensorialConv2d`])
+//! hold at most a handful of entries, where a scan beats a hash map and the
+//! code stays dependency-free. For the larger shared cache see
+//! [`crate::exec::PlanCache`].
+
+/// A bounded map evicting the least-recently-used entry on overflow.
+/// `get` and `insert` both count as a use.
+#[derive(Debug, Clone)]
+pub struct LruCache<K, V> {
+    capacity: usize,
+    tick: u64,
+    entries: Vec<(K, V, u64)>,
+}
+
+impl<K: PartialEq, V> LruCache<K, V> {
+    /// A cache holding at most `capacity` entries (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> LruCache<K, V> {
+        let capacity = capacity.max(1);
+        LruCache {
+            capacity,
+            tick: 0,
+            entries: Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Look up `key`, marking the entry as most recently used.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let idx = self.entries.iter().position(|(k, _, _)| k == key)?;
+        self.tick += 1;
+        self.entries[idx].2 = self.tick;
+        Some(&self.entries[idx].1)
+    }
+
+    /// Insert (or replace) `key`, evicting the least-recently-used entry
+    /// if the cache is full. Returns the evicted `(key, value)` if any.
+    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
+        self.tick += 1;
+        if let Some(idx) = self.entries.iter().position(|(k, _, _)| k == &key) {
+            self.entries[idx] = (key, value, self.tick);
+            return None;
+        }
+        let evicted = if self.entries.len() >= self.capacity {
+            let oldest = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (_, _, t))| *t)
+                .map(|(i, _)| i)
+                .expect("full cache has an oldest entry");
+            let (k, v, _) = self.entries.swap_remove(oldest);
+            Some((k, v))
+        } else {
+            None
+        };
+        self.entries.push((key, value, self.tick));
+        evicted
+    }
+
+    /// Whether `key` is resident (does not touch recency).
+    pub fn contains(&self, key: &K) -> bool {
+        self.entries.iter().any(|(k, _, _)| k == key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Maximum number of entries retained.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_get_roundtrip() {
+        let mut c: LruCache<u32, &str> = LruCache::new(2);
+        assert!(c.is_empty());
+        assert!(c.insert(1, "one").is_none());
+        assert!(c.insert(2, "two").is_none());
+        assert_eq!(c.get(&1), Some(&"one"));
+        assert_eq!(c.get(&3), None);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.capacity(), 2);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        // Touch 1 so 2 is the LRU entry.
+        assert_eq!(c.get(&1), Some(&10));
+        let evicted = c.insert(3, 30);
+        assert_eq!(evicted, Some((2, 20)));
+        assert!(c.contains(&1) && c.contains(&3) && !c.contains(&2));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_eviction() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert!(c.insert(1, 11).is_none());
+        assert_eq!(c.get(&1), Some(&11));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn capacity_clamped_to_one() {
+        let mut c: LruCache<u32, u32> = LruCache::new(0);
+        assert_eq!(c.capacity(), 1);
+        c.insert(1, 10);
+        let evicted = c.insert(2, 20);
+        assert_eq!(evicted, Some((1, 10)));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn insert_counts_as_use() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        // Re-inserting 1 makes 2 the LRU.
+        c.insert(1, 11);
+        let evicted = c.insert(3, 30);
+        assert_eq!(evicted, Some((2, 20)));
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut c: LruCache<u32, u32> = LruCache::new(4);
+        c.insert(1, 10);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.get(&1), None);
+    }
+}

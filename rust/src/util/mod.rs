@@ -1,9 +1,10 @@
 //! Offline substitutes for common ecosystem crates (see DESIGN.md §5):
 //! a mini JSON encoder/parser ([`json`]), a deterministic RNG ([`rng`]),
-//! a small property-testing harness ([`prop`]) and timing helpers
-//! ([`timing`]).
+//! a small property-testing harness ([`prop`]), timing helpers
+//! ([`timing`]) and a tiny bounded LRU map ([`lru`]).
 
 pub mod json;
+pub mod lru;
 pub mod prop;
 pub mod rng;
 pub mod timing;

@@ -1,0 +1,201 @@
+//! Property tests for the persistent-pool parallel backend and the SIMD
+//! microkernels: every parallel path must be **bit-identical** to the
+//! scalar backend — across all four convolution varieties, worker counts,
+//! 100 re-runs against one workspace, and under concurrent use from
+//! multiple threads — and the microkernels must reproduce their documented
+//! accumulation order exactly on ragged (non-multiple-of-8) lengths.
+
+use conv_einsum::einsum::{parse, ConvKind, SizedSpec};
+use conv_einsum::exec::{pairwise_vjp_with, pairwise_with};
+use conv_einsum::kernels::{add8, axpy8, dot8, LANES};
+use conv_einsum::util::rng::Rng;
+use conv_einsum::{compile_expr, Backend, ExecOptions, PlanOptions, Tensor, Workspace};
+
+const KINDS: [ConvKind; 4] = [
+    ConvKind::Same,
+    ConvKind::Valid,
+    ConvKind::Full,
+    ConvKind::Circular,
+];
+
+fn conv_spec(kind: ConvKind) -> SizedSpec {
+    SizedSpec::with_kinds(
+        parse("bsx,tsx->btx|x").unwrap(),
+        vec![vec![2, 3, 11], vec![4, 3, 3]],
+        vec![kind],
+    )
+    .unwrap()
+}
+
+#[test]
+fn persistent_pool_bit_identical_all_kinds_workers_and_reruns() {
+    // All four ConvKinds × 1/2/4 workers × 100 re-runs: the persistent
+    // pool must reproduce the scalar backend bit-for-bit every time (same
+    // microkernels, same per-row order, chunk results independent of which
+    // worker claims them).
+    for kind in KINDS {
+        let s = conv_spec(kind);
+        let mut rng = Rng::new(71);
+        let a = Tensor::rand(&s.dims[0], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&s.dims[1], -1.0, 1.0, &mut rng);
+        let scalar = pairwise_with(&s, &a, &b, &[], &ExecOptions::scalar());
+        for workers in [1usize, 2, 4] {
+            let opts = ExecOptions::parallel(workers);
+            for rerun in 0..100 {
+                let par = pairwise_with(&s, &a, &b, &[], &opts);
+                assert_eq!(
+                    par.data(),
+                    scalar.data(),
+                    "{kind:?} workers={workers} rerun={rerun}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn contraction_forward_bit_identical_scalar_vs_pool() {
+    // Pure contraction with a ragged contraction length (s = 13, not a
+    // multiple of 8): scalar matmul and the pool's per-row dot8 now share
+    // the normative blocked order, so even the matmul path is bit-exact.
+    let s = SizedSpec::new(
+        parse("gts,gns->gtn").unwrap(),
+        vec![vec![3, 5, 13], vec![3, 7, 13]],
+    )
+    .unwrap();
+    let mut rng = Rng::new(72);
+    let a = Tensor::rand(&[3, 5, 13], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&[3, 7, 13], -1.0, 1.0, &mut rng);
+    let scalar = pairwise_with(&s, &a, &b, &[], &ExecOptions::scalar());
+    for workers in [1usize, 2, 4] {
+        let par = pairwise_with(&s, &a, &b, &[], &ExecOptions::parallel(workers));
+        assert_eq!(par.data(), scalar.data(), "workers={workers}");
+    }
+}
+
+#[test]
+fn vjp_bit_identical_scalar_vs_pool_all_kinds() {
+    // Training path: the VJP replayed through the pool must match the
+    // scalar backward bit-for-bit for every convolution variety.
+    for kind in KINDS {
+        let s = conv_spec(kind);
+        let mut rng = Rng::new(73);
+        let a = Tensor::rand(&s.dims[0], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&s.dims[1], -1.0, 1.0, &mut rng);
+        let out = pairwise_with(&s, &a, &b, &[], &ExecOptions::scalar());
+        let dout = Tensor::rand(out.shape(), -1.0, 1.0, &mut rng);
+        let (da_s, db_s) = pairwise_vjp_with(&s, &a, &b, &dout, &[], &ExecOptions::scalar());
+        for workers in [1usize, 2, 4] {
+            let (da_p, db_p) =
+                pairwise_vjp_with(&s, &a, &b, &dout, &[], &ExecOptions::parallel(workers));
+            assert_eq!(da_p.data(), da_s.data(), "{kind:?} da workers={workers}");
+            assert_eq!(db_p.data(), db_s.data(), "{kind:?} db workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn compiled_replay_bit_identical_under_concurrent_use() {
+    // One compiled plan shared by four threads, each replaying 25 times
+    // against its own workspace while all contend for the same persistent
+    // pool (the busy flag serializes fan-out): every result must equal the
+    // scalar reference bit-for-bit.
+    let expr = "bshw,tshw->bthw|hw";
+    let dims = vec![vec![2, 3, 10, 10], vec![4, 3, 3, 3]];
+    let mut rng = Rng::new(74);
+    let x = Tensor::rand(&dims[0], -1.0, 1.0, &mut rng);
+    let w = Tensor::rand(&dims[1], -1.0, 1.0, &mut rng);
+
+    let scalar_opts = PlanOptions {
+        backend: Backend::Scalar,
+        ..Default::default()
+    };
+    let scalar_plan = compile_expr(expr, &dims, &scalar_opts).unwrap();
+    let mut ws = Workspace::new();
+    let want = scalar_plan.run(&[&x, &w], &mut ws).unwrap();
+
+    let par_opts = PlanOptions {
+        backend: Backend::Parallel { threads: 2 },
+        ..Default::default()
+    };
+    let par_plan = compile_expr(expr, &dims, &par_opts).unwrap();
+
+    std::thread::scope(|scope| {
+        for t in 0..4 {
+            let plan = &par_plan;
+            let (x, w, want) = (&x, &w, &want);
+            scope.spawn(move || {
+                let mut ws = Workspace::new();
+                for rerun in 0..25 {
+                    let got = plan.run(&[x, w], &mut ws).unwrap();
+                    assert_eq!(
+                        got.data(),
+                        want.data(),
+                        "thread {t} rerun {rerun} diverged from scalar"
+                    );
+                }
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Microkernel contracts on ragged lengths
+// ---------------------------------------------------------------------------
+
+/// Scalar emulation of `dot8`'s documented order: 8 lane accumulators over
+/// full blocks, pairwise lane combine, sequential tail.
+fn dot8_reference(a: &[f32], b: &[f32]) -> f32 {
+    let blocks = a.len() / LANES;
+    let mut acc = [0.0f32; LANES];
+    for k in 0..blocks {
+        for l in 0..LANES {
+            acc[l] += a[k * LANES + l] * b[k * LANES + l];
+        }
+    }
+    let mut total =
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in blocks * LANES..a.len() {
+        total += a[i] * b[i];
+    }
+    total
+}
+
+#[test]
+fn microkernels_bit_identical_to_reference_on_ragged_lengths() {
+    let mut rng = Rng::new(75);
+    for len in 0..=41usize {
+        let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        // axpy8: per-element, no reassociation — equals the naive loop.
+        let mut got = init.clone();
+        axpy8(0.75, &a, &mut got);
+        let mut want = init.clone();
+        for (o, s) in want.iter_mut().zip(&a) {
+            *o += 0.75 * s;
+        }
+        assert_eq!(bits(&got), bits(&want), "axpy8 len {len}");
+
+        // add8: same property.
+        let mut got = init.clone();
+        add8(&mut got, &a);
+        let mut want = init.clone();
+        for (o, s) in want.iter_mut().zip(&a) {
+            *o += s;
+        }
+        assert_eq!(bits(&got), bits(&want), "add8 len {len}");
+
+        // dot8: matches its documented blocked order exactly.
+        assert_eq!(
+            dot8(&a, &b).to_bits(),
+            dot8_reference(&a, &b).to_bits(),
+            "dot8 len {len}"
+        );
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
