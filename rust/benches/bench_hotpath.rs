@@ -3,10 +3,16 @@
 //! scalar-vs-parallel backend scaling across 1/2/4/8-thread pools, CP/TT
 //! layer steps under both backends, compiled-vs-uncompiled training steps
 //! (with heap-allocation counts and workspace bytes, dumped to
-//! `BENCH_compiled.json`), persistent-pool dispatch latency and small-atom
-//! throughput vs a scoped-spawn baseline plus allocations-per-replay on
-//! both backends (dumped to `BENCH_pool.json`), and coordinator request
-//! throughput with batching on vs off.
+//! `BENCH_compiled.json`), workspace-tape vs heap-tape training steps with
+//! per-step allocation counts (dumped to `BENCH_train.json`; zero
+//! steady-state allocations are *asserted* for StoreAll and Sqrt on both
+//! backends), persistent-pool dispatch latency, small-atom and
+//! fine-grained-region throughput vs a scoped-spawn baseline plus
+//! allocations-per-replay on both backends (dumped to `BENCH_pool.json`),
+//! and coordinator request throughput with batching on vs off.
+//!
+//! With `CONV_EINSUM_BENCH_ASSERT_ONLY=1` only the zero-allocation
+//! assertions run (fast; used by the CI release-test job).
 use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
 use conv_einsum::coordinator::{EvalService, ServiceConfig};
 use conv_einsum::einsum::{parse, SizedSpec};
@@ -18,10 +24,19 @@ use conv_einsum::tnn::{build_layer, Decomp};
 use conv_einsum::util::json::Json;
 use conv_einsum::util::rng::Rng;
 use conv_einsum::util::timing::bench;
-use conv_einsum::{compile_expr, conv_einsum_with, Backend, ExecOptions, Tensor, Workspace};
+use conv_einsum::{
+    compile_expr, conv_einsum_with, Backend, ExecOptions, Tensor, TrainWorkspace, Workspace,
+};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+
+/// Heap-tape reference (shared with `tests/train_parity.rs`): the
+/// pre-workspace training algorithm, the baseline the workspace tape is
+/// measured — and bit-parity-asserted — against.
+#[path = "../testsupport/heap_tape.rs"]
+mod heap_tape;
+use heap_tape::heap_forward_backward;
 
 /// Counting allocator: makes the compiled engine's zero-alloc steady state
 /// measurable rather than asserted.
@@ -94,7 +109,101 @@ fn scoped_run_chunks<F: Fn(usize, &mut [f32]) + Sync>(
     });
 }
 
+/// Inference zero-allocation assertions: 50 compiled replays on each
+/// backend must not allocate after warm-up.
+fn inference_zero_alloc_assertions() {
+    let mut rng = Rng::new(3);
+    let layer = build_layer(Decomp::Cp, 1, 16, 16, 3, 3, 0.5).unwrap();
+    let factors = layer.init_factors(&mut rng);
+    let xin = Tensor::rand(&layer.input_shape(8, 32, 32), -1.0, 1.0, &mut rng);
+    let mut inputs: Vec<&Tensor> = vec![&xin];
+    inputs.extend(factors.iter());
+    let dims: Vec<Vec<usize>> = inputs.iter().map(|t| t.shape().to_vec()).collect();
+    for backend in [Backend::Scalar, Backend::Parallel { threads: 2 }] {
+        let opts = PlanOptions {
+            backend,
+            ..Default::default()
+        };
+        let compiled = compile_expr(&layer.expr, &dims, &opts).unwrap();
+        let mut ws = Workspace::new();
+        let mut out = Tensor::zeros(compiled.out_shape());
+        for _ in 0..3 {
+            compiled.run_into(&inputs, &mut ws, &mut out).unwrap();
+        }
+        let a0 = allocs();
+        for _ in 0..50 {
+            compiled.run_into(&inputs, &mut ws, &mut out).unwrap();
+        }
+        let steady = allocs() - a0;
+        assert_eq!(
+            steady, 0,
+            "inference steady state must not allocate ({backend:?}: {steady} across 50 replays)"
+        );
+        println!("inference zero-alloc OK: {backend:?}");
+    }
+}
+
+/// Training zero-allocation assertions: a repeated forward-with-tape +
+/// backward step (the `_into` entry points against a held workspace) must
+/// not allocate after warm-up — StoreAll and Sqrt, scalar and parallel.
+fn train_zero_alloc_assertions() {
+    let mut rng = Rng::new(7);
+    let layer = build_layer(Decomp::Cp, 1, 16, 16, 3, 3, 0.5).unwrap();
+    let factors = layer.init_factors(&mut rng);
+    let xin = Tensor::rand(&layer.input_shape(4, 16, 16), -1.0, 1.0, &mut rng);
+    let mut inputs: Vec<&Tensor> = vec![&xin];
+    inputs.extend(factors.iter());
+    let dims: Vec<Vec<usize>> = inputs.iter().map(|t| t.shape().to_vec()).collect();
+    for backend in [Backend::Scalar, Backend::Parallel { threads: 2 }] {
+        let opts = PlanOptions {
+            training: true,
+            backend,
+            ..Default::default()
+        };
+        let compiled = Arc::new(compile_expr(&layer.expr, &dims, &opts).unwrap());
+        let ad = PathAutodiff::from_compiled(Arc::clone(&compiled));
+        let dout = Tensor::full(compiled.out_shape(), 1.0);
+        let meter = MemoryMeter::new();
+        let mut ws = TrainWorkspace::new();
+        let mut out = Tensor::zeros(compiled.out_shape());
+        let mut grads: Vec<Tensor> = dims.iter().map(|d| Tensor::zeros(d)).collect();
+        for policy in [CkptPolicy::StoreAll, CkptPolicy::Sqrt] {
+            for _ in 0..3 {
+                let token = ad
+                    .forward_with_tape_into(&inputs, policy, &mut ws, &mut out, &meter)
+                    .unwrap();
+                ad.backward_into(&token, &dout, &mut ws, &mut grads, &meter)
+                    .unwrap();
+            }
+            let a0 = allocs();
+            for _ in 0..20 {
+                let token = ad
+                    .forward_with_tape_into(&inputs, policy, &mut ws, &mut out, &meter)
+                    .unwrap();
+                ad.backward_into(&token, &dout, &mut ws, &mut grads, &meter)
+                    .unwrap();
+            }
+            let steady = allocs() - a0;
+            assert_eq!(
+                steady, 0,
+                "train steady state must not allocate \
+                 ({backend:?} {policy:?}: {steady} allocs across 20 steps)"
+            );
+            println!("train zero-alloc OK: {backend:?} {policy:?}");
+        }
+    }
+}
+
 fn main() {
+    // CI fast path: only the zero-allocation assertions (inference +
+    // training), then exit — used by the release-test job.
+    if std::env::var("CONV_EINSUM_BENCH_ASSERT_ONLY").is_ok() {
+        inference_zero_alloc_assertions();
+        train_zero_alloc_assertions();
+        println!("zero-allocation assertions passed (inference + training)");
+        return;
+    }
+
     let mut rng = Rng::new(3);
 
     // contraction atom: batched matmul via "gts,gns->gtn"
@@ -289,19 +398,32 @@ fn main() {
     // Training step (forward tape + backward): cached compiled plan vs
     // re-planning and re-lowering every step.
     let meter = MemoryMeter::new();
+    let mut tws = TrainWorkspace::new();
     let compiled_arc = Arc::new(compile_expr(&layer.expr, &dims, &popts).unwrap());
     let t_uncompiled = bench("train step, plan+compile per call", 1, 5, || {
         let plan = contract_path(&layer.expr, &dims, &popts).unwrap();
         let ad = PathAutodiff::new(&plan).unwrap();
         let _ = ad
-            .forward_backward(&inputs, |o| Tensor::full(o.shape(), 1.0), CkptPolicy::Sqrt, &meter)
+            .forward_backward(
+                &inputs,
+                |o| Tensor::full(o.shape(), 1.0),
+                CkptPolicy::Sqrt,
+                &mut tws,
+                &meter,
+            )
             .unwrap();
     });
     println!("{}", t_uncompiled.report());
     let t_compiled = bench("train step, cached CompiledPlan", 1, 5, || {
         let ad = PathAutodiff::from_compiled(Arc::clone(&compiled_arc));
         let _ = ad
-            .forward_backward(&inputs, |o| Tensor::full(o.shape(), 1.0), CkptPolicy::Sqrt, &meter)
+            .forward_backward(
+                &inputs,
+                |o| Tensor::full(o.shape(), 1.0),
+                CkptPolicy::Sqrt,
+                &mut tws,
+                &meter,
+            )
             .unwrap();
     });
     println!(
@@ -309,6 +431,104 @@ fn main() {
         t_compiled.report(),
         t_uncompiled.median_secs() / t_compiled.median_secs()
     );
+
+    // ---- training: workspace tape vs heap tape ----------------------------
+    println!("\n== training: workspace tape vs heap tape ==");
+    let t_dout = Tensor::full(compiled_arc.out_shape(), 1.0);
+    let heap_s = bench("train step, heap tape (per-value allocs)", 1, 5, || {
+        let _ = heap_forward_backward(&compiled_arc, &inputs, &t_dout, CkptPolicy::Sqrt);
+    });
+    println!("{}", heap_s.report());
+    let t_ad = PathAutodiff::from_compiled(Arc::clone(&compiled_arc));
+    let mut t_out = Tensor::zeros(compiled_arc.out_shape());
+    let mut t_grads: Vec<Tensor> = dims.iter().map(|d| Tensor::zeros(d)).collect();
+    // Warm-up: grow the arena, build kernel tables and the train layout.
+    for _ in 0..2 {
+        let token = t_ad
+            .forward_with_tape_into(&inputs, CkptPolicy::Sqrt, &mut tws, &mut t_out, &meter)
+            .unwrap();
+        t_ad.backward_into(&token, &t_dout, &mut tws, &mut t_grads, &meter)
+            .unwrap();
+    }
+    let ws_s = bench("train step, workspace tape (arena)", 2, 10, || {
+        let token = t_ad
+            .forward_with_tape_into(&inputs, CkptPolicy::Sqrt, &mut tws, &mut t_out, &meter)
+            .unwrap();
+        t_ad.backward_into(&token, &t_dout, &mut tws, &mut t_grads, &meter)
+            .unwrap();
+    });
+    println!(
+        "{}\n  -> speedup {:.2}x vs heap tape",
+        ws_s.report(),
+        heap_s.median_secs() / ws_s.median_secs()
+    );
+    // Bit parity with the heap tape (same kernels, same schedule).
+    let (heap_y, heap_g) = heap_forward_backward(&compiled_arc, &inputs, &t_dout, CkptPolicy::Sqrt);
+    assert_eq!(
+        t_out.data(),
+        heap_y.data(),
+        "workspace tape output must be bit-identical to the heap tape"
+    );
+    for (g, w) in t_grads.iter().zip(heap_g.iter()) {
+        assert_eq!(
+            g.data(),
+            w.data(),
+            "workspace tape gradients must be bit-identical to the heap tape"
+        );
+    }
+    // Allocations per step: the heap tape pays per value/cotangent, the
+    // workspace tape pays nothing (asserted — the headline guarantee).
+    let h0 = allocs();
+    let _ = heap_forward_backward(&compiled_arc, &inputs, &t_dout, CkptPolicy::Sqrt);
+    let heap_allocs = allocs() - h0;
+    let w0 = allocs();
+    for _ in 0..20 {
+        let token = t_ad
+            .forward_with_tape_into(&inputs, CkptPolicy::Sqrt, &mut tws, &mut t_out, &meter)
+            .unwrap();
+        t_ad.backward_into(&token, &t_dout, &mut tws, &mut t_grads, &meter)
+            .unwrap();
+    }
+    let ws_allocs = allocs() - w0;
+    assert_eq!(
+        ws_allocs, 0,
+        "workspace train steady state must not allocate (got {ws_allocs} across 20 steps)"
+    );
+    println!(
+        "train-step heap allocations: heap tape {heap_allocs} per step, \
+         workspace tape {ws_allocs} across 20 steps"
+    );
+    // Full assertion grid: StoreAll and Sqrt on both backends.
+    train_zero_alloc_assertions();
+
+    let train_report = Json::obj(vec![
+        ("bench", Json::str("train_workspace")),
+        ("expr", Json::str(&layer.expr)),
+        ("batch", Json::num(8.0)),
+        ("policy", Json::str("sqrt")),
+        ("train_heap_median_s", Json::num(heap_s.median_secs())),
+        ("train_workspace_median_s", Json::num(ws_s.median_secs())),
+        (
+            "train_speedup_vs_heap",
+            Json::num(heap_s.median_secs() / ws_s.median_secs()),
+        ),
+        ("allocs_heap_one_step", Json::num(heap_allocs as f64)),
+        ("allocs_workspace_20_steps", Json::num(ws_allocs as f64)),
+        (
+            "train_arena_bytes_sqrt",
+            Json::num(compiled_arc.train_layout(CkptPolicy::Sqrt).arena_bytes() as f64),
+        ),
+        (
+            "train_arena_bytes_storeall",
+            Json::num(compiled_arc.train_layout(CkptPolicy::StoreAll).arena_bytes() as f64),
+        ),
+        (
+            "train_arena_bytes_none",
+            Json::num(compiled_arc.train_layout(CkptPolicy::None).arena_bytes() as f64),
+        ),
+    ]);
+    std::fs::write("BENCH_train.json", train_report.encode_pretty()).ok();
+    println!("wrote BENCH_train.json");
 
     let report = Json::obj(vec![
         ("bench", Json::str("compiled_plan")),
@@ -435,6 +655,29 @@ fn main() {
          (50 compiled replays each)"
     );
 
+    // (e) Fine-grained claim contention: 512 tiny chunks on 4 threads. The
+    // atomic cursor hands out batches of indices per fetch, so per-chunk
+    // claim overhead — the old mutex round-trip per chunk — is what this
+    // isolates (the scoped baseline is unchanged for reference).
+    let mut fine = vec![0.0f32; 512 * 16];
+    let fine_work = |_i: usize, c: &mut [f32]| {
+        for v in c.iter_mut() {
+            *v += 1.0;
+        }
+    };
+    let fine_persist = bench("fine-grain 512x16 persistent t=4", 20, 100, || {
+        pool4.run_chunks(&mut fine, 16, fine_work);
+    });
+    println!("{}", fine_persist.report());
+    let fine_scoped = bench("fine-grain 512x16 scoped     t=4", 5, 20, || {
+        scoped_run_chunks(4, &mut fine, 16, fine_work);
+    });
+    println!(
+        "{}\n  -> persistent {:.1}x faster on fine-grained regions",
+        fine_scoped.report(),
+        fine_scoped.median_secs() / fine_persist.median_secs()
+    );
+
     let disp_sc = disp_scoped.median_secs();
     let disp_ps = disp_persist.median_secs();
     let small_sc = small_scoped.median_secs();
@@ -455,6 +698,14 @@ fn main() {
         ("pairwise_small_atom_t1_median_s", Json::num(pairwise_small[0])),
         ("pairwise_small_atom_t2_median_s", Json::num(pairwise_small[1])),
         ("pairwise_small_atom_t4_median_s", Json::num(pairwise_small[2])),
+        (
+            "fine_grain_512x16_persistent_t4_median_s",
+            Json::num(fine_persist.median_secs()),
+        ),
+        (
+            "fine_grain_512x16_scoped_t4_median_s",
+            Json::num(fine_scoped.median_secs()),
+        ),
         ("allocs_scalar_50_replays", Json::num(allocs_sc)),
         ("allocs_parallel_50_replays", Json::num(allocs_par)),
     ]);

@@ -13,15 +13,48 @@
 //! canonicalization and kernel tables are resolved once at construction
 //! (or shared from a layer/coordinator cache via
 //! [`PathAutodiff::from_compiled`]), so both the taped forward and the VJP
-//! replay without re-canonicalizing. Each step replays with the compiled
-//! plan's hoisted execution options, so under a parallel backend both the
-//! forward tape and the backward VJP fan out over the **persistent worker
-//! pool** ([`crate::parallel::Pool`]) — training steps pay a condvar
-//! wake-up per region, never a thread spawn — and both backends run the
-//! same SIMD microkernels ([`crate::kernels`]), keeping gradients
-//! bit-identical to the scalar backend's.
+//! replay without re-canonicalizing.
+//!
+//! # Workspace tape
+//!
+//! The tape itself lives in a caller-held arena: the compiled plan carries
+//! a per-policy [`crate::exec::TrainLayout`] assigning an arena slot to
+//! every input copy, retained intermediate, recompute-segment transient and
+//! cotangent, and [`PathAutodiff::forward_with_tape`] /
+//! [`PathAutodiff::backward`] replay that schedule against a
+//! [`TrainWorkspace`] through the same `*_into` workspace kernels the
+//! inference engine uses. After workspace warm-up a full
+//! forward-with-tape + backward step performs **zero heap allocations** on
+//! both backends (use the `_into` variants with caller-held output/gradient
+//! tensors; `bench_hotpath` asserts this), and gradients are bit-identical
+//! to the heap tape this replaced (`tests/train_parity.rs` replays the old
+//! algorithm step by step and compares bit patterns).
+//!
+//! A [`Tape`] is a token onto the workspace state: running another taped
+//! forward (or touching the workspace's inference half) bumps the
+//! workspace epoch and invalidates outstanding tapes — their backward
+//! fails with a clear error instead of reading clobbered arena ranges.
+//!
+//! Each step replays with the compiled plan's hoisted execution options,
+//! so under a parallel backend both the taped forward and the backward VJP
+//! fan out over the **persistent worker pool** ([`crate::parallel::Pool`])
+//! — training steps pay a condvar wake-up per region, never a thread spawn
+//! — and both backends run the same SIMD microkernels
+//! ([`crate::kernels`]), keeping gradients bit-identical to the scalar
+//! backend's.
+//!
+//! # Metering
+//!
+//! [`MemoryMeter`] reports the arena **high-water mark** of the layout a
+//! step ran under (the peak tape footprint, Table 3's bounded quantity)
+//! rather than per-allocation traffic: both the taped forward and the
+//! backward record the layout's peak as a balanced `alloc`/`free` pair, so
+//! `peak_bytes` captures the step's footprint while `live_bytes` always
+//! returns to its prior level — regardless of policy, final permutation,
+//! or whether a tape is ever consumed (abandoned tapes cannot leak
+//! accounting).
 
-use crate::exec::CompiledPlan;
+use crate::exec::{CompiledPlan, TrainWorkspace};
 use crate::planner::Plan;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
@@ -83,11 +116,43 @@ impl MemoryMeter {
 /// DAG node id: inputs are 0..n, step k produces node n+k.
 type NodeId = usize;
 
-/// A differentiation tape: node values retained by the forward pass (per
-/// checkpoint policy) plus the forward output.
+/// Handle onto a taped forward resident in a [`TrainWorkspace`]: the
+/// checkpoint policy it ran under, the identity and epoch of the workspace
+/// whose arena holds it, and the compiled plan it belongs to.
+/// [`PathAutodiff::backward_into`] validates all of them, so a stale tape
+/// (another taped forward ran, the workspace's inference half was used) or
+/// a backward against the wrong workspace errors instead of producing
+/// garbage gradients.
+pub struct TapeToken {
+    policy: CkptPolicy,
+    ws_id: u64,
+    epoch: u64,
+    plan: Arc<CompiledPlan>,
+}
+
+impl TapeToken {
+    /// The compiled plan this tape was produced by. Drive the backward
+    /// from this (e.g. [`PathAutodiff::from_compiled`]) rather than
+    /// re-fetching the plan from a cache: a cache may have evicted and
+    /// recompiled a structurally identical entry, which this token would
+    /// rightly reject as a different plan.
+    pub fn plan(&self) -> &Arc<CompiledPlan> {
+        &self.plan
+    }
+}
+
+/// A differentiation tape: the forward output plus the [`TapeToken`]
+/// identifying the arena-resident state the backward will consume.
 pub struct Tape {
-    vals: Vec<Option<Tensor>>,
     pub output: Tensor,
+    token: TapeToken,
+}
+
+impl Tape {
+    /// The workspace-tape token (for [`PathAutodiff::backward_into`]).
+    pub fn token(&self) -> &TapeToken {
+        &self.token
+    }
 }
 
 /// Forward + backward executor over a compiled plan, with checkpointing.
@@ -136,7 +201,9 @@ impl PathAutodiff {
         self.compiled.n_inputs()
     }
 
-    /// Execute one step given node values, metering the allocation.
+    /// Execute one step given node values, metering the allocation
+    /// (inference-mode forward only; the training path runs through the
+    /// compiled plan's arena schedule instead).
     fn run_step(&self, k: usize, vals: &mut [Option<Tensor>], meter: &MemoryMeter) {
         let (l, r, o) = self.step_nodes[k];
         let st = self.compiled.step(k);
@@ -165,7 +232,9 @@ impl PathAutodiff {
 
     /// Forward pass returning the output (final permutation applied).
     /// Intermediates are freed as soon as no later step consumes them —
-    /// this is the inference-mode memory profile.
+    /// this is the inference-mode memory profile. One-shot callers only;
+    /// steady-state inference should replay [`CompiledPlan::run_into`]
+    /// against a held workspace.
     pub fn forward(&self, inputs: &[&Tensor], meter: &MemoryMeter) -> Result<Tensor> {
         let n = self.n();
         if inputs.len() != n {
@@ -206,177 +275,124 @@ impl PathAutodiff {
         inputs: &[&Tensor],
         dout_fn: impl FnOnce(&Tensor) -> Tensor,
         policy: CkptPolicy,
+        ws: &mut TrainWorkspace,
         meter: &MemoryMeter,
     ) -> Result<(Tensor, Vec<Tensor>)> {
-        let mut tape = self.forward_with_tape(inputs, policy, meter)?;
+        let tape = self.forward_with_tape(inputs, policy, ws, meter)?;
         let dout = dout_fn(&tape.output);
-        let grads = self.backward(&mut tape, &dout, meter)?;
+        let grads = self.backward(&tape, &dout, ws, meter)?;
         Ok((tape.output, grads))
     }
 
-    /// Forward pass retaining a differentiation tape per the checkpoint
-    /// policy. Use with [`PathAutodiff::backward`]; this is the layer-level
-    /// API of the training substrate.
+    /// Forward pass retaining a differentiation tape (in the workspace
+    /// arena) per the checkpoint policy. Use with
+    /// [`PathAutodiff::backward`]; this is the layer-level API of the
+    /// training substrate. Allocates only the output tensor — use
+    /// [`PathAutodiff::forward_with_tape_into`] for the fully
+    /// allocation-free loop.
     pub fn forward_with_tape(
         &self,
         inputs: &[&Tensor],
         policy: CkptPolicy,
+        ws: &mut TrainWorkspace,
         meter: &MemoryMeter,
     ) -> Result<Tape> {
-        let n = self.n();
-        let ksteps = self.step_nodes.len();
-        if inputs.len() != n {
-            return Err(anyhow!("expected {} inputs, got {}", n, inputs.len()));
-        }
+        let mut output = Tensor::zeros(self.compiled.out_shape());
+        let token = self.forward_with_tape_into(inputs, policy, ws, &mut output, meter)?;
+        Ok(Tape { output, token })
+    }
 
-        // Which step outputs to retain during the stored forward:
-        let keep: Vec<bool> = match policy {
-            CkptPolicy::StoreAll => vec![true; ksteps],
-            CkptPolicy::None => vec![false; ksteps],
-            CkptPolicy::Sqrt => {
-                let seg = (ksteps as f64).sqrt().ceil() as usize;
-                (0..ksteps).map(|k| seg != 0 && k % seg == seg - 1).collect()
-            }
-        };
-
-        let mut vals: Vec<Option<Tensor>> = vec![None; n + ksteps];
-        for (i, t) in inputs.iter().enumerate() {
-            meter.alloc(t.bytes());
-            vals[i] = Some((*t).clone());
-        }
-        // Stored forward: keep checkpointed nodes; free the rest when no
-        // longer needed *within the remaining forward*.
-        for k in 0..ksteps {
-            self.run_step(k, &mut vals, meter);
-            let (l, r, _) = self.step_nodes[k];
-            for node in [l, r] {
-                let is_input = node < n;
-                let is_kept = !is_input && keep[node - n];
-                if !is_input && !is_kept && !self.needed_after(node, k + 1) {
-                    self.drop_val(&mut vals, node, meter);
-                }
-            }
-        }
-        // Under None/Sqrt, non-checkpointed values that were still live at
-        // the end of the forward (e.g. the root's direct operands) stay, but
-        // drop anything not marked kept except the root.
-        for k in 0..ksteps {
-            let node = n + k;
-            if node != self.root && !keep[k] && vals[node].is_some() {
-                self.drop_val(&mut vals, node, meter);
-            }
-        }
-
-        let root_val = vals[self.root].clone().expect("root");
-        let output = match &self.compiled.plan().final_perm {
-            Some(p) => {
-                let o = root_val.permute(p);
-                meter.alloc(o.bytes());
-                o
-            }
-            None => root_val.clone(),
-        };
-        Ok(Tape { vals, output })
+    /// As [`PathAutodiff::forward_with_tape`], writing the output into a
+    /// caller-held tensor of shape [`CompiledPlan::out_shape`]: the
+    /// allocation-free steady-state entry point (zero heap allocations
+    /// after workspace warm-up, both backends).
+    pub fn forward_with_tape_into(
+        &self,
+        inputs: &[&Tensor],
+        policy: CkptPolicy,
+        ws: &mut TrainWorkspace,
+        out: &mut Tensor,
+        meter: &MemoryMeter,
+    ) -> Result<TapeToken> {
+        let layout = self.compiled.train_layout(policy);
+        let epoch = self.compiled.train_forward(&layout, inputs, ws, out)?;
+        // Meter the layout's arena high-water mark — the peak tape bytes a
+        // step under this policy holds — as a balanced alloc/free pair:
+        // the peak is recorded, the meter returns to its prior live level,
+        // and an abandoned or invalidated tape cannot leak accounting.
+        meter.alloc(layout.arena_bytes());
+        meter.free(layout.arena_bytes());
+        Ok(TapeToken {
+            policy,
+            ws_id: ws.id(),
+            epoch,
+            plan: Arc::clone(&self.compiled),
+        })
     }
 
     /// Backward pass from a tape: returns ∂L/∂input for every input given
-    /// the output cotangent. Consumes the tape's stored values (recomputing
-    /// checkpointed segments as needed).
+    /// the output cotangent. Consumes the arena-resident tape (recomputing
+    /// checkpointed segments as scheduled by the layout). Allocates only
+    /// the gradient tensors — use [`PathAutodiff::backward_into`] for the
+    /// allocation-free loop.
     pub fn backward(
         &self,
-        tape: &mut Tape,
+        tape: &Tape,
         dout: &Tensor,
+        ws: &mut TrainWorkspace,
         meter: &MemoryMeter,
     ) -> Result<Vec<Tensor>> {
-        let n = self.n();
-        let ksteps = self.step_nodes.len();
-        let vals = &mut tape.vals;
-        meter.alloc(dout.bytes());
-        let droot = match &self.compiled.plan().final_perm {
-            Some(p) => {
-                let inv = invert(p);
-                let d = dout.permute(&inv);
-                meter.alloc(d.bytes());
-                meter.free(dout.bytes());
-                d
-            }
-            None => dout.clone(),
-        };
-
-        // Backward, recomputing missing operand values per step (checkpoint
-        // segment replay).
-        let mut grads: Vec<Option<Tensor>> = vec![None; n + ksteps];
-        grads[self.root] = Some(droot);
-        for k in (0..ksteps).rev() {
-            let (l, r, o) = self.step_nodes[k];
-            for node in [l, r] {
-                if vals[node].is_none() {
-                    self.recompute(node, vals, meter);
-                }
-            }
-            let st = self.compiled.step(k);
-            let dnode = grads[o].take().expect("cotangent for step output");
-            let a = vals[l].as_ref().unwrap();
-            let b = vals[r].as_ref().unwrap();
-            let (da, db) = st.atom().vjp_with_kernel(
-                st.kernel_tables(),
-                a,
-                b,
-                &dnode,
-                self.compiled.exec_options(),
-            );
-            meter.free(dnode.bytes());
-            meter.alloc(da.bytes());
-            meter.alloc(db.bytes());
-            accumulate(&mut grads, l, da, meter);
-            accumulate(&mut grads, r, db, meter);
-            // The step output value is no longer needed going backward.
-            if o >= n {
-                self.drop_val(vals, o, meter);
-            }
-        }
-
-        let input_grads: Vec<Tensor> = (0..n)
-            .map(|i| {
-                grads[i].take().unwrap_or_else(|| {
-                    Tensor::zeros(vals[i].as_ref().expect("input value live").shape())
-                })
-            })
+        let mut grads: Vec<Tensor> = self
+            .compiled
+            .in_dims()
+            .iter()
+            .map(|d| Tensor::zeros(d))
             .collect();
-        Ok(input_grads)
+        self.backward_into(&tape.token, dout, ws, &mut grads, meter)?;
+        Ok(grads)
     }
 
-    /// Recompute the value of `node` (a step output) from the nearest
-    /// materialized ancestors, re-running intermediate steps.
-    fn recompute(&self, node: NodeId, vals: &mut Vec<Option<Tensor>>, meter: &MemoryMeter) {
-        let n = self.n();
-        debug_assert!(node >= n, "input values are always live");
-        let k = node - n;
-        let (l, r, _) = self.step_nodes[k];
-        for dep in [l, r] {
-            if vals[dep].is_none() {
-                self.recompute(dep, vals, meter);
-            }
+    /// As [`PathAutodiff::backward`], accumulating into caller-held
+    /// gradient tensors (one per input, natural shapes; contents are
+    /// overwritten). Zero heap allocations after workspace warm-up as long
+    /// as the gradient tensors are unshared.
+    pub fn backward_into(
+        &self,
+        tape: &TapeToken,
+        dout: &Tensor,
+        ws: &mut TrainWorkspace,
+        grads: &mut [Tensor],
+        meter: &MemoryMeter,
+    ) -> Result<()> {
+        if !Arc::ptr_eq(&tape.plan, &self.compiled) {
+            return Err(anyhow!(
+                "tape was produced by a different compiled plan; forward and \
+                 backward must replay the same compiled entry"
+            ));
         }
-        self.run_step(k, vals, meter);
-    }
-}
-
-fn invert(perm: &[usize]) -> Vec<usize> {
-    let mut inv = vec![0usize; perm.len()];
-    for (i, &p) in perm.iter().enumerate() {
-        inv[p] = i;
-    }
-    inv
-}
-
-fn accumulate(grads: &mut [Option<Tensor>], node: NodeId, g: Tensor, meter: &MemoryMeter) {
-    match &mut grads[node] {
-        Some(existing) => {
-            existing.add_assign(&g);
-            meter.free(g.bytes());
+        if tape.ws_id != ws.id() {
+            return Err(anyhow!(
+                "tape belongs to a different workspace: the backward must run \
+                 against the TrainWorkspace whose arena holds the tape"
+            ));
         }
-        slot @ None => *slot = Some(g),
+        if tape.epoch != ws.epoch() {
+            return Err(anyhow!(
+                "tape invalidated: the workspace ran a later taped forward (or \
+                 its inference half was used) since this tape was produced"
+            ));
+        }
+        let layout = self.compiled.train_layout(tape.policy);
+        self.compiled.train_backward(&layout, dout, ws, grads)?;
+        // The tape is consumed: a second backward over the same arena state
+        // would re-accumulate garbage, so invalidate it.
+        ws.invalidate();
+        // Balanced peak recording, mirroring the forward (the backward
+        // replays the same arena; its recompute peaks are part of the
+        // layout's high-water mark).
+        meter.alloc(layout.arena_bytes());
+        meter.free(layout.arena_bytes());
+        Ok(())
     }
 }
 

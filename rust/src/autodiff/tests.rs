@@ -5,7 +5,7 @@
 
 use super::*;
 use crate::einsum::{parse, SizedSpec};
-use crate::exec::pairwise;
+use crate::exec::{pairwise, TrainWorkspace};
 use crate::planner::{plan_with, PlanOptions, Strategy};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -41,6 +41,7 @@ fn two_input_grads_match_pairwise_vjp() {
     let ins = rand_inputs(&dims, &mut rng);
     let ad = PathAutodiff::new(&plan).unwrap();
     let meter = MemoryMeter::new();
+    let mut ws = TrainWorkspace::new();
     let dout = fixed_dout(&[3, 5], &mut rng);
     let d2 = dout.clone();
     let (_out, grads) = ad
@@ -48,6 +49,7 @@ fn two_input_grads_match_pairwise_vjp() {
             &[&ins[0], &ins[1]],
             |_| d2.clone(),
             CkptPolicy::StoreAll,
+            &mut ws,
             &meter,
         )
         .unwrap();
@@ -69,11 +71,12 @@ fn multi_input_grads_match_finite_differences() {
     let refs: Vec<&Tensor> = ins.iter().collect();
     let ad = PathAutodiff::new(&plan).unwrap();
     let meter = MemoryMeter::new();
+    let mut ws = TrainWorkspace::new();
     let out = ad.forward(&refs, &meter).unwrap();
     let dout = fixed_dout(out.shape(), &mut rng);
     let d2 = dout.clone();
     let (_o, grads) = ad
-        .forward_backward(&refs, |_| d2.clone(), CkptPolicy::StoreAll, &meter)
+        .forward_backward(&refs, |_| d2.clone(), CkptPolicy::StoreAll, &mut ws, &meter)
         .unwrap();
 
     let loss = |ins: &[Tensor]| -> f32 {
@@ -108,6 +111,7 @@ fn gradients_identical_across_ckpt_policies() {
     let refs: Vec<&Tensor> = ins.iter().collect();
     let ad = PathAutodiff::new(&plan).unwrap();
     let meter = MemoryMeter::new();
+    let mut ws = TrainWorkspace::new();
     let out = ad.forward(&refs, &meter).unwrap();
     let dout = fixed_dout(out.shape(), &mut rng);
 
@@ -116,7 +120,7 @@ fn gradients_identical_across_ckpt_policies() {
         let meter = MemoryMeter::new();
         let d = dout.clone();
         let (o, grads) = ad
-            .forward_backward(&refs, |_| d.clone(), policy, &meter)
+            .forward_backward(&refs, |_| d.clone(), policy, &mut ws, &meter)
             .unwrap();
         o.assert_close(&out, 1e-4);
         all.push(grads);
@@ -148,11 +152,18 @@ fn checkpointing_reduces_peak_memory() {
     let refs: Vec<&Tensor> = ins.iter().collect();
     let ad = PathAutodiff::new(&plan).unwrap();
 
+    let mut ws = TrainWorkspace::new();
     let mut peaks = Vec::new();
     for policy in [CkptPolicy::StoreAll, CkptPolicy::Sqrt, CkptPolicy::None] {
         let meter = MemoryMeter::new();
         let (_o, _g) = ad
-            .forward_backward(&refs, |o| Tensor::full(o.shape(), 1.0), policy, &meter)
+            .forward_backward(
+                &refs,
+                |o| Tensor::full(o.shape(), 1.0),
+                policy,
+                &mut ws,
+                &meter,
+            )
             .unwrap();
         peaks.push(meter.peak_bytes());
     }
@@ -220,19 +231,106 @@ fn conv_path_grads_policy_invariant() {
     let refs: Vec<&Tensor> = ins.iter().collect();
     let ad = PathAutodiff::new(&plan).unwrap();
     let meter = MemoryMeter::new();
+    let mut ws = TrainWorkspace::new();
     let out = ad.forward(&refs, &meter).unwrap();
     let dout = fixed_dout(out.shape(), &mut rng);
     let d1 = dout.clone();
     let d2 = dout.clone();
     let (_o1, g1) = ad
-        .forward_backward(&refs, |_| d1.clone(), CkptPolicy::StoreAll, &meter)
+        .forward_backward(&refs, |_| d1.clone(), CkptPolicy::StoreAll, &mut ws, &meter)
         .unwrap();
     let (_o2, g2) = ad
-        .forward_backward(&refs, |_| d2.clone(), CkptPolicy::Sqrt, &meter)
+        .forward_backward(&refs, |_| d2.clone(), CkptPolicy::Sqrt, &mut ws, &meter)
         .unwrap();
     for i in 0..ins.len() {
         g2[i].assert_close(&g1[i], 1e-4);
     }
+}
+
+#[test]
+fn meter_balances_to_zero_across_policies_and_final_perm() {
+    // The meter must return to zero live bytes after every completed
+    // forward+backward step — including on plans with a final output
+    // permutation, where the old heap tape metered the permuted output as
+    // an alloc with no matching free.
+    let mut rng = Rng::new(21);
+    for expr in ["ij,jk->ik", "ij,jk->ki"] {
+        let dims = vec![vec![4, 5], vec![5, 6]];
+        let plan = make_plan(expr, dims.clone(), Strategy::Optimal);
+        let ins = rand_inputs(&dims, &mut rng);
+        let refs: Vec<&Tensor> = ins.iter().collect();
+        let ad = PathAutodiff::new(&plan).unwrap();
+        let mut ws = TrainWorkspace::new();
+        for policy in [CkptPolicy::StoreAll, CkptPolicy::Sqrt, CkptPolicy::None] {
+            let meter = MemoryMeter::new();
+            let (_o, _g) = ad
+                .forward_backward(
+                    &refs,
+                    |o| Tensor::full(o.shape(), 1.0),
+                    policy,
+                    &mut ws,
+                    &meter,
+                )
+                .unwrap();
+            assert_eq!(
+                meter.live_bytes(),
+                0,
+                "{expr} {policy:?}: meter must balance after forward+backward"
+            );
+            assert!(meter.peak_bytes() > 0, "{expr} {policy:?}: peak recorded");
+        }
+    }
+    // The second expression really does exercise the final permutation.
+    let plan = make_plan("ij,jk->ki", vec![vec![4, 5], vec![5, 6]], Strategy::Optimal);
+    assert!(plan.final_perm.is_some(), "ki output must need a final perm");
+}
+
+#[test]
+fn stale_or_consumed_tapes_are_rejected() {
+    let expr = "ij,jk->ik";
+    let dims = vec![vec![3, 4], vec![4, 5]];
+    let plan = make_plan(expr, dims.clone(), Strategy::Optimal);
+    let mut rng = Rng::new(22);
+    let ins = rand_inputs(&dims, &mut rng);
+    let refs: Vec<&Tensor> = ins.iter().collect();
+    let ad = PathAutodiff::new(&plan).unwrap();
+    let meter = MemoryMeter::new();
+    let mut ws = TrainWorkspace::new();
+    let dout = Tensor::full(&[3, 5], 1.0);
+
+    // A later taped forward on the same workspace invalidates the tape.
+    let stale = ad
+        .forward_with_tape(&refs, CkptPolicy::StoreAll, &mut ws, &meter)
+        .unwrap();
+    let live = ad
+        .forward_with_tape(&refs, CkptPolicy::StoreAll, &mut ws, &meter)
+        .unwrap();
+    assert!(
+        ad.backward(&stale, &dout, &mut ws, &meter).is_err(),
+        "stale tape must be rejected"
+    );
+    // The most recent tape still works — once.
+    let grads = ad.backward(&live, &dout, &mut ws, &meter).unwrap();
+    assert_eq!(grads.len(), 2);
+    assert!(
+        ad.backward(&live, &dout, &mut ws, &meter).is_err(),
+        "a consumed tape must be rejected"
+    );
+
+    // A tape is bound to the workspace whose arena holds it: a backward
+    // against a different workspace must be rejected even when that
+    // workspace has a tape of its own (same plan, same-looking epoch).
+    let mut other = TrainWorkspace::new();
+    let mine = ad
+        .forward_with_tape(&refs, CkptPolicy::StoreAll, &mut ws, &meter)
+        .unwrap();
+    let _theirs = ad
+        .forward_with_tape(&refs, CkptPolicy::StoreAll, &mut other, &meter)
+        .unwrap();
+    assert!(
+        ad.backward(&mine, &dout, &mut other, &meter).is_err(),
+        "a tape from another workspace must be rejected"
+    );
 }
 
 #[test]

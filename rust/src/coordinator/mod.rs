@@ -17,10 +17,19 @@
 //! entry, so batch-level and step-level pool arbitration always see one
 //! consistent backend per entry), and ad-hoc expressions share a
 //! service-wide [`PlanCache`] keyed by `(expr, dims, backend, strategy)`.
-//! Each worker thread owns one reusable [`Workspace`] that survives across
-//! requests (the worker threads — like the executor's pool workers — are
-//! persistent), so steady-state execution allocates only the output
+//! Each worker thread owns one reusable [`TrainWorkspace`] that survives
+//! across requests (the worker threads — like the executor's pool workers
+//! — are persistent), so steady-state execution allocates only the output
 //! tensors.
+//!
+//! Besides inference, the service accepts **training-step requests**
+//! ([`ServiceHandle::submit_train`]): a forward-with-tape + backward of an
+//! ad-hoc expression under a checkpoint policy, returning the output and
+//! ∂L/∂input for every input. Training requests run through the same
+//! compile-once cache (with the training cost model) and share the same
+//! per-worker arena as inference — the tape lives in the worker's
+//! [`TrainWorkspace`] for the duration of the request, so a steady stream
+//! of train steps allocates only the returned tensors.
 //!
 //! Workers and the executor's intra-step parallelism share one pool: each
 //! compiled plan carries [`ServiceConfig::backend`], and under the default
@@ -39,8 +48,9 @@ mod metrics;
 
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 
+use crate::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
 use crate::einsum::{parse, SizedSpec};
-use crate::exec::{Backend, CompiledPlan, PlanCache, Workspace};
+use crate::exec::{Backend, CompiledPlan, PlanCache, TrainWorkspace};
 use crate::planner::{plan_with, PlanOptions, Strategy};
 use crate::tensor::Tensor;
 use crate::util::lru::LruCache;
@@ -118,6 +128,13 @@ enum Msg {
         tensors: Vec<Tensor>,
         respond: SyncSender<Result<Tensor>>,
     },
+    Train {
+        expr: String,
+        tensors: Vec<Tensor>,
+        dout: Tensor,
+        policy: CkptPolicy,
+        respond: SyncSender<Result<(Tensor, Vec<Tensor>)>>,
+    },
     Shutdown,
 }
 
@@ -174,6 +191,45 @@ impl ServiceHandle {
         Ok(rrx)
     }
 
+    /// Evaluate an ad-hoc **training step**: forward-with-tape + backward
+    /// of `expr` at the given inputs under `policy`, seeded with the output
+    /// cotangent `dout`. Returns the forward output and ∂L/∂input for
+    /// every input. Runs on a worker's training workspace — the same arena
+    /// its inference requests use.
+    pub fn submit_train(
+        &self,
+        expr: &str,
+        tensors: Vec<Tensor>,
+        dout: Tensor,
+        policy: CkptPolicy,
+    ) -> Result<Receiver<Result<(Tensor, Vec<Tensor>)>>> {
+        let (rtx, rrx) = sync_channel(1);
+        self.metrics.note_submit();
+        self.tx
+            .send(Msg::Train {
+                expr: expr.to_string(),
+                tensors,
+                dout,
+                policy,
+                respond: rtx,
+            })
+            .map_err(|_| anyhow!("service stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Convenience: submit a training step and wait.
+    pub fn train(
+        &self,
+        expr: &str,
+        tensors: Vec<Tensor>,
+        dout: Tensor,
+        policy: CkptPolicy,
+    ) -> Result<(Tensor, Vec<Tensor>)> {
+        self.submit_train(expr, tensors, dout, policy)?
+            .recv()
+            .map_err(|_| anyhow!("service dropped response"))?
+    }
+
     /// Convenience: submit and wait.
     pub fn eval(&self, layer: &str, x: Tensor) -> Result<Tensor> {
         self.submit(layer, x)?
@@ -208,6 +264,15 @@ enum WorkMsg {
         expr: String,
         tensors: Vec<Tensor>,
         respond: SyncSender<Result<Tensor>>,
+        strategy: Strategy,
+        backend: Backend,
+    },
+    Train {
+        expr: String,
+        tensors: Vec<Tensor>,
+        dout: Tensor,
+        policy: CkptPolicy,
+        respond: SyncSender<Result<(Tensor, Vec<Tensor>)>>,
         strategy: Strategy,
         backend: Backend,
     },
@@ -405,6 +470,23 @@ fn router_loop(
                     backend: config.backend,
                 });
             }
+            Ok(Msg::Train {
+                expr,
+                tensors,
+                dout,
+                policy,
+                respond,
+            }) => {
+                let _ = wtx.send(WorkMsg::Train {
+                    expr,
+                    tensors,
+                    dout,
+                    policy,
+                    respond,
+                    strategy: config.strategy,
+                    backend: config.backend,
+                });
+            }
             Ok(Msg::Shutdown) => break,
             Err(RecvTimeoutError::Timeout) => {
                 // Flush everything pending.
@@ -474,7 +556,7 @@ fn plan_layer(
 /// handed to the cache so a miss does not re-parse.
 fn eval_adhoc(
     cache: &PlanCache,
-    ws: &mut Workspace,
+    ws: &mut TrainWorkspace,
     expr: &str,
     tensors: &[Tensor],
     strategy: Strategy,
@@ -493,7 +575,44 @@ fn eval_adhoc(
         return Ok(crate::exec::single_input_eval(&sized, refs[0]));
     }
     let compiled = cache.get_or_compile_parsed(expr, &spec, &dims, &opts)?;
-    compiled.run(&refs, ws)
+    compiled.run(&refs, ws.base_mut())
+}
+
+/// Run an ad-hoc training step on the worker's training workspace: plan +
+/// compile (training cost model) through the shared cache, then
+/// forward-with-tape + backward under the requested checkpoint policy.
+#[allow(clippy::too_many_arguments)]
+fn eval_train(
+    cache: &PlanCache,
+    ws: &mut TrainWorkspace,
+    expr: &str,
+    tensors: &[Tensor],
+    dout: &Tensor,
+    policy: CkptPolicy,
+    strategy: Strategy,
+    backend: Backend,
+) -> Result<(Tensor, Vec<Tensor>)> {
+    let spec = parse(expr).map_err(|e| anyhow!("{e}"))?;
+    if spec.n_inputs() < 2 {
+        return Err(anyhow!(
+            "training steps need at least 2 inputs (got {})",
+            spec.n_inputs()
+        ));
+    }
+    let refs: Vec<&Tensor> = tensors.iter().collect();
+    let dims: Vec<Vec<usize>> = refs.iter().map(|t| t.shape().to_vec()).collect();
+    let opts = PlanOptions {
+        strategy,
+        backend,
+        training: true,
+        ..Default::default()
+    };
+    let compiled = cache.get_or_compile_parsed(expr, &spec, &dims, &opts)?;
+    let ad = PathAutodiff::from_compiled(compiled);
+    let meter = MemoryMeter::new();
+    let tape = ad.forward_with_tape(&refs, policy, ws, &meter)?;
+    let grads = ad.backward(&tape, dout, ws, &meter)?;
+    Ok((tape.output, grads))
 }
 
 fn worker_loop(
@@ -501,9 +620,10 @@ fn worker_loop(
     metrics: Arc<ServiceMetrics>,
     cache: Arc<PlanCache>,
 ) {
-    // One reusable workspace per worker thread: compiled plans of any shape
-    // run against it, and it only ever grows.
-    let mut ws = Workspace::new();
+    // One reusable training workspace per worker thread: compiled plans of
+    // any shape run against it (training requests tape into the same arena
+    // inference uses), and it only ever grows.
+    let mut ws = TrainWorkspace::new();
     loop {
         let msg = {
             let rx = wrx.lock().unwrap();
@@ -523,7 +643,7 @@ fn worker_loop(
                 let x = Tensor::from_vec(&shape, data);
                 let mut inputs: Vec<&Tensor> = vec![&x];
                 inputs.extend(item.factors.iter());
-                let result = item.plan.run(&inputs, &mut ws);
+                let result = item.plan.run(&inputs, ws.base_mut());
                 match result {
                     Ok(y) => {
                         // Split along axis 0 back to requesters.
@@ -555,6 +675,26 @@ fn worker_loop(
             }) => {
                 let t0 = Instant::now();
                 let result = eval_adhoc(&cache, &mut ws, &expr, &tensors, strategy, backend);
+                match &result {
+                    Ok(_) => metrics.note_done(t0.elapsed()),
+                    Err(_) => metrics.note_error(),
+                }
+                let _ = respond.send(result);
+                metrics.note_exec_time(t0.elapsed());
+            }
+            Ok(WorkMsg::Train {
+                expr,
+                tensors,
+                dout,
+                policy,
+                respond,
+                strategy,
+                backend,
+            }) => {
+                let t0 = Instant::now();
+                let result = eval_train(
+                    &cache, &mut ws, &expr, &tensors, &dout, policy, strategy, backend,
+                );
                 match &result {
                     Ok(_) => metrics.note_done(t0.elapsed()),
                     Err(_) => metrics.note_error(),

@@ -171,6 +171,65 @@ fn adhoc_expression_evaluation() {
 }
 
 #[test]
+fn train_request_matches_direct_forward_backward() {
+    use crate::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
+    use crate::exec::TrainWorkspace;
+    use crate::planner::{plan_with, PlanOptions};
+
+    let service = EvalService::start(ServiceConfig::default(), vec![]).unwrap();
+    let h = service.handle();
+    let mut rng = Rng::new(9);
+    let expr = "ij,jk->ik";
+    let a = Tensor::rand(&[3, 4], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&[4, 5], -1.0, 1.0, &mut rng);
+    let dout = Tensor::rand(&[3, 5], -1.0, 1.0, &mut rng);
+
+    let (y, grads) = h
+        .train(
+            expr,
+            vec![a.clone(), b.clone()],
+            dout.clone(),
+            CkptPolicy::Sqrt,
+        )
+        .unwrap();
+
+    // Direct training step with the same (training-cost) plan options.
+    let spec = crate::einsum::parse(expr).unwrap();
+    let sized =
+        crate::einsum::SizedSpec::new(spec, vec![vec![3, 4], vec![4, 5]]).unwrap();
+    let plan = plan_with(
+        &sized,
+        &PlanOptions {
+            training: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let ad = PathAutodiff::new(&plan).unwrap();
+    let mut ws = TrainWorkspace::new();
+    let meter = MemoryMeter::new();
+    let d = dout.clone();
+    let (want_y, want_grads) = ad
+        .forward_backward(&[&a, &b], |_| d.clone(), CkptPolicy::Sqrt, &mut ws, &meter)
+        .unwrap();
+    y.assert_close(&want_y, 1e-5);
+    assert_eq!(grads.len(), 2);
+    for (g, w) in grads.iter().zip(want_grads.iter()) {
+        g.assert_close(w, 1e-5);
+    }
+
+    // Single-input expressions are rejected with an error, not a hang.
+    let res = h.train(
+        "ij->j",
+        vec![Tensor::zeros(&[2, 3])],
+        Tensor::zeros(&[3]),
+        CkptPolicy::StoreAll,
+    );
+    assert!(res.is_err());
+    service.shutdown();
+}
+
+#[test]
 fn mixed_shapes_do_not_cross_batch() {
     let mut rng = Rng::new(6);
     let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);

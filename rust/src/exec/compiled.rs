@@ -25,13 +25,28 @@
 //!   the worker pool — the previously single-threaded stretch of the hot
 //!   path.
 //!
+//! # Training engine
+//!
+//! The same compile-once philosophy covers training: a compiled plan
+//! lazily builds one [`TrainLayout`] per checkpoint policy
+//! ([`crate::autodiff::CkptPolicy`]) by *simulating* the stored-forward +
+//! backward schedule (including checkpoint-segment recomputes) against a
+//! compile-time arena allocator, assigning a slot to every input copy,
+//! tape value and cotangent. [`CompiledPlan::train_forward`] /
+//! [`CompiledPlan::train_backward`] replay that schedule against a
+//! caller-held [`TrainWorkspace`] — zero steady-state heap allocations on
+//! both backends, gradients bit-identical to the per-value heap tape
+//! (`tests/train_parity.rs` replays the old algorithm and compares bits).
+//! [`crate::autodiff::PathAutodiff`] is the user-facing wrapper.
+//!
 //! # Workspace ownership
 //!
 //! A [`Workspace`] is plan-agnostic scratch capacity: it grows to fit
 //! whatever plan runs against it and holds no results between calls, so one
 //! workspace per thread serves any number of compiled plans (the
 //! coordinator gives each worker one). It is `Send` but not shareable —
-//! runs need `&mut`.
+//! runs need `&mut`. A [`TrainWorkspace`] extends it with the training
+//! arena (shared with the inference value arena) and backward scratch.
 //!
 //! # Invalidation
 //!
@@ -49,17 +64,18 @@
 //! `Tensor::permute` accumulation orders exactly, and the step kernels are
 //! the same code both paths execute.
 
+use crate::autodiff::CkptPolicy;
 use crate::einsum::{parse, ConvKind, EinsumSpec, SizedSpec};
 use crate::exec::atom::{canonicalize, Atom, AtomKernel};
 use crate::exec::{Backend, ExecOptions};
 use crate::parallel::Pool;
 use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
-use crate::tensor::{permute_into, sum_axis_into, Tensor};
+use crate::tensor::{gather_into, permute_into, strides_for, sum_axis_into, Tensor};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Where a step operand's flat data lives at run time.
 #[derive(Debug, Clone)]
@@ -101,6 +117,62 @@ fn canon_op(dims: &[usize], presum: &[usize], perm: &[usize]) -> CanonOp {
     }
 }
 
+/// Fused VJP un-canonicalization recipe for one operand: the cotangent the
+/// backward kernels produce is in the operand's *canonical* flat layout;
+/// gathering it back to the operand's natural layout is an inverse permute
+/// followed by re-broadcasting every pre-summed axis. Both collapse into a
+/// single strided gather (broadcast axes carry stride 0), resolved at
+/// compile time so the replay allocates nothing.
+#[derive(Debug, Clone)]
+struct GradGather {
+    /// The operand's natural (working-list) shape.
+    out_shape: Vec<usize>,
+    /// Per output axis, its stride into the canonical flat buffer
+    /// (0 = broadcast of a pre-summed axis).
+    strides: Vec<usize>,
+}
+
+/// Build the [`GradGather`] for an operand with natural shape `dims`,
+/// pre-summed axes `presum` (descending, as the atom records them) and
+/// canonical permutation `perm`. Element-for-element identical to
+/// `permute(invert(perm))` followed by ascending `broadcast_axis` calls —
+/// the allocating path the heap tape used.
+fn grad_gather(dims: &[usize], presum: &[usize], perm: &[usize]) -> GradGather {
+    let rank = dims.len();
+    let mut is_presum = vec![false; rank];
+    for &ax in presum {
+        is_presum[ax] = true;
+    }
+    let post_shape: Vec<usize> = (0..rank)
+        .filter(|&ax| !is_presum[ax])
+        .map(|ax| dims[ax])
+        .collect();
+    // Canonical buffer shape and row-major strides.
+    let cs: Vec<usize> = perm.iter().map(|&p| post_shape[p]).collect();
+    let sc = strides_for(&cs);
+    let inv = invert_perm(perm);
+    let mut strides = vec![0usize; rank];
+    let mut post_ax = 0usize;
+    for (ax, stride) in strides.iter_mut().enumerate() {
+        if !is_presum[ax] {
+            *stride = sc[inv[post_ax]];
+            post_ax += 1;
+        }
+    }
+    GradGather {
+        out_shape: dims.to_vec(),
+        strides,
+    }
+}
+
+fn invert_perm(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
 /// One fully-resolved step of a compiled plan.
 #[derive(Debug, Clone)]
 pub struct CompiledStep {
@@ -118,6 +190,12 @@ pub struct CompiledStep {
     /// Whether `atom.out_perm` is the identity (raw layout == working-list
     /// layout), precomputed so replays skip the per-run check.
     out_identity: bool,
+    /// Inverse of `atom.out_perm`: takes a working-list-layout cotangent
+    /// back to the raw kernel layout the backward kernels consume.
+    inv_out_perm: Vec<usize>,
+    /// VJP un-canonicalization gathers for the two operands.
+    grad_a: GradGather,
+    grad_b: GradGather,
     atom: Atom,
     kernel: AtomKernel,
 }
@@ -184,6 +262,99 @@ impl Workspace {
 fn grow(buf: &mut Vec<f32>, len: usize) {
     if buf.len() < len {
         buf.resize(len, 0.0);
+    }
+}
+
+/// Reusable scratch memory for **training** steps: a [`Workspace`] (whose
+/// value arena doubles as the tape/cotangent arena — training and inference
+/// share one allocation) plus the backward-only scratch buffers. Create one
+/// per thread (layers own one; coordinator workers own one), hand it to
+/// every [`CompiledPlan::train_forward`] / [`CompiledPlan::train_backward`]
+/// pair; like the inference workspace it grows to the largest plan it has
+/// served and the steady state allocates nothing.
+///
+/// The arena holds live tape state between a taped forward and its
+/// backward. Every taped forward — and any mutable access to the inference
+/// half via [`TrainWorkspace::base_mut`] — bumps the workspace epoch, which
+/// invalidates previously issued tapes (their backward then fails with a
+/// clear error instead of reading clobbered data).
+#[derive(Debug)]
+pub struct TrainWorkspace {
+    /// Inference workspace; `base.values` is also the training arena.
+    base: Workspace,
+    /// Cotangent of operand a in canonical layout (backward kernels).
+    scratch_da: Vec<f32>,
+    /// Cotangent of operand b in canonical layout.
+    scratch_db: Vec<f32>,
+    /// Step-output cotangent permuted to raw kernel layout.
+    scratch_dout: Vec<f32>,
+    /// Bumped by every taped forward (and `base_mut`); tapes record the
+    /// epoch they were produced under.
+    epoch: u64,
+    /// Process-unique workspace identity: tapes are bound to the workspace
+    /// whose arena holds them, so a backward against a *different*
+    /// workspace (even one at the same epoch) is rejected instead of
+    /// silently replaying that workspace's resident tape.
+    id: u64,
+}
+
+impl Default for TrainWorkspace {
+    fn default() -> Self {
+        TrainWorkspace::new()
+    }
+}
+
+impl TrainWorkspace {
+    pub fn new() -> TrainWorkspace {
+        static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+        TrainWorkspace {
+            base: Workspace::new(),
+            scratch_da: Vec::new(),
+            scratch_db: Vec::new(),
+            scratch_dout: Vec::new(),
+            epoch: 0,
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// Process-unique identity of this workspace (see
+    /// [`crate::autodiff::PathAutodiff::backward_into`]).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The inference [`Workspace`] sharing this training workspace's arena.
+    /// Taking it invalidates any outstanding tape (an inference run reuses
+    /// — and clobbers — the tape's arena ranges).
+    pub fn base_mut(&mut self) -> &mut Workspace {
+        self.epoch = self.epoch.wrapping_add(1);
+        &mut self.base
+    }
+
+    /// Epoch of the most recent taped forward (see
+    /// [`crate::autodiff::PathAutodiff::forward_with_tape_into`]).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Invalidate any outstanding tape without running anything.
+    pub fn invalidate(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+    }
+
+    /// Total capacity currently held, in bytes.
+    pub fn bytes(&self) -> usize {
+        self.base.bytes()
+            + std::mem::size_of::<f32>()
+                * (self.scratch_da.len() + self.scratch_db.len() + self.scratch_dout.len())
+    }
+
+    fn ensure_train(&mut self, plan: &CompiledPlan, layout: &TrainLayout) {
+        self.base.ensure(plan);
+        grow(&mut self.base.values, layout.arena_len);
+        grow(&mut self.scratch_da, plan.scratch_a_len);
+        grow(&mut self.scratch_db, plan.scratch_b_len);
+        grow(&mut self.scratch_dout, plan.scratch_out_len);
     }
 }
 
@@ -280,12 +451,18 @@ pub struct CompiledPlan {
     /// Value-arena range and shape of the root intermediate (pre final_perm).
     root: Range<usize>,
     root_shape: Vec<usize>,
+    /// Inverse of `plan.final_perm` (output cotangent → root layout).
+    inv_final_perm: Option<Vec<usize>>,
     steps: Vec<CompiledStep>,
     values_len: usize,
     scratch_a_len: usize,
     scratch_b_len: usize,
     scratch_out_len: usize,
     presum_len: usize,
+    /// Per-policy training layouts (StoreAll / Sqrt / None), built lazily
+    /// and cached on the compiled entry so every [`crate::autodiff`] tape
+    /// over it shares one layout.
+    train: [OnceLock<Arc<TrainLayout>>; 3],
 }
 
 impl CompiledPlan {
@@ -392,6 +569,8 @@ impl CompiledPlan {
             node_range[n + k] = Some(out.clone());
             let canon_a = canon_op(&step.sized.dims[0], &atom.presum_a, &atom.perm_a);
             let canon_b = canon_op(&step.sized.dims[1], &atom.presum_b, &atom.perm_b);
+            let grad_a = grad_gather(&step.sized.dims[0], &atom.presum_a, &atom.perm_a);
+            let grad_b = grad_gather(&step.sized.dims[1], &atom.presum_b, &atom.perm_b);
             steps.push(CompiledStep {
                 lhs_node: l,
                 rhs_node: r,
@@ -401,6 +580,9 @@ impl CompiledPlan {
                 canon_b,
                 out,
                 out_identity: is_identity(&atom.out_perm),
+                inv_out_perm: invert_perm(&atom.out_perm),
+                grad_a,
+                grad_b,
                 atom,
                 kernel,
             });
@@ -417,12 +599,14 @@ impl CompiledPlan {
         let opts = ExecOptions {
             backend: plan.backend,
         };
+        let inv_final_perm = plan.final_perm.as_ref().map(|p| invert_perm(p));
         Ok(CompiledPlan {
             opts,
             in_dims,
             out_shape,
             root,
             root_shape,
+            inv_final_perm,
             values_len: arena.len,
             scratch_a_len: sa,
             scratch_b_len: sb,
@@ -430,6 +614,7 @@ impl CompiledPlan {
             presum_len: sp,
             steps,
             plan,
+            train: Default::default(),
         })
     }
 
@@ -675,6 +860,591 @@ fn canonicalize_into(
         permute_into(summed, &op.post_shape, &op.perm, dst, pool);
     }
     true
+}
+
+// ---------------------------------------------------------------------------
+// Training engine: per-policy liveness layouts + allocation-free
+// forward-with-tape / backward execution
+// ---------------------------------------------------------------------------
+
+/// Where one step's gradient contribution lands in the training arena.
+#[derive(Debug, Clone)]
+struct GradTarget {
+    range: Range<usize>,
+    /// First contribution for this node: gather-write. Otherwise the gather
+    /// accumulates onto the resident cotangent (same elementwise result as
+    /// the heap tape's `add_assign`).
+    fresh: bool,
+}
+
+/// One forward (or recompute) step placement: which compiled step to run
+/// and where its operands/output live in the arena at that point.
+#[derive(Debug, Clone)]
+struct TrainStepLoc {
+    k: usize,
+    a: Range<usize>,
+    b: Range<usize>,
+    out: Range<usize>,
+}
+
+/// One backward step: checkpoint-segment recomputes to replay first, then
+/// the VJP with fully-resolved operand/cotangent/target ranges.
+#[derive(Debug, Clone)]
+struct TrainBwdStep {
+    k: usize,
+    recompute: Vec<TrainStepLoc>,
+    a: Range<usize>,
+    b: Range<usize>,
+    /// Cotangent of this step's output (working-list layout).
+    dnode: Range<usize>,
+    da: GradTarget,
+    db: GradTarget,
+}
+
+/// A training-mode liveness layout: arena slots for every input copy, tape
+/// value (per the checkpoint policy, including the transient peaks of
+/// recompute segments) and cotangent, plus the fully-resolved forward and
+/// backward schedules. Built once per `(CompiledPlan, CkptPolicy)` by
+/// [`CompiledPlan::train_layout`]; replaying it against a caller-held
+/// [`TrainWorkspace`] performs zero steady-state heap allocations.
+///
+/// The layout is produced by *simulating* the heap tape's exact schedule —
+/// stored forward under the policy's keep-set, then the backward with its
+/// deterministic checkpoint-segment recomputes — against a compile-time
+/// arena allocator, so every value/cotangent gets a range whose lifetime
+/// matches the heap path's and whose space is reused as soon as its
+/// occupant dies. `arena_bytes` is therefore the training step's peak tape
+/// footprint (the quantity the paper's Table 3 bounds), reported by
+/// [`crate::autodiff::MemoryMeter`] as a high-water mark.
+#[derive(Debug)]
+pub struct TrainLayout {
+    policy: CkptPolicy,
+    input_ranges: Vec<Range<usize>>,
+    fwd: Vec<TrainStepLoc>,
+    /// Root value range (pre final_perm) — the taped output source.
+    root: Range<usize>,
+    /// Cotangent slot of the root (the backward's entry point).
+    droot: Range<usize>,
+    bwd: Vec<TrainBwdStep>,
+    /// Cotangent ranges of the `n` inputs after the backward completes.
+    input_grads: Vec<Range<usize>>,
+    /// Arena high-water mark, in elements.
+    arena_len: usize,
+}
+
+impl TrainLayout {
+    /// Checkpoint policy this layout was built for.
+    pub fn policy(&self) -> CkptPolicy {
+        self.policy
+    }
+
+    /// Arena high-water mark in elements: the peak number of f32 slots live
+    /// at any point of the forward+backward schedule.
+    pub fn arena_elems(&self) -> usize {
+        self.arena_len
+    }
+
+    /// Arena high-water mark in bytes — the peak tape memory of a training
+    /// step under this policy.
+    pub fn arena_bytes(&self) -> usize {
+        self.arena_len * std::mem::size_of::<f32>()
+    }
+}
+
+/// Recursively place the recompute of `node` (a step output) from its
+/// nearest resident ancestors, appending the steps in execution order —
+/// the compile-time mirror of the heap tape's `recompute`.
+fn plan_recompute(
+    plan: &CompiledPlan,
+    node: usize,
+    arena: &mut ArenaAlloc,
+    val_range: &mut [Option<Range<usize>>],
+    out: &mut Vec<TrainStepLoc>,
+) {
+    let n = plan.plan.n_inputs;
+    debug_assert!(node >= n, "input values stay resident for the whole tape");
+    let k = node - n;
+    let (l, r) = (plan.steps[k].lhs_node, plan.steps[k].rhs_node);
+    for dep in [l, r] {
+        if val_range[dep].is_none() {
+            plan_recompute(plan, dep, arena, val_range, out);
+        }
+    }
+    let a = val_range[l].clone().expect("recompute dep resident");
+    let b = val_range[r].clone().expect("recompute dep resident");
+    let o = arena.alloc(plan.node_elems(node));
+    val_range[node] = Some(o.clone());
+    out.push(TrainStepLoc { k, a, b, out: o });
+}
+
+/// Execute one compiled step against the training arena: canonicalize both
+/// operands through the workspace kernels, run the forward kernels into the
+/// raw scratch, then write the working-list-layout result into its arena
+/// range. Mirrors the inference loop of [`CompiledPlan::run_into_with`]
+/// exactly, so step outputs are bit-identical to it (and to the heap tape
+/// this engine replaces).
+#[allow(clippy::too_many_arguments)]
+fn exec_arena_step(
+    step: &CompiledStep,
+    a_rng: &Range<usize>,
+    b_rng: &Range<usize>,
+    out_rng: &Range<usize>,
+    values: &mut [f32],
+    scratch_a: &mut [f32],
+    scratch_b: &mut [f32],
+    scratch_out: &mut [f32],
+    presum0: &mut [f32],
+    presum1: &mut [f32],
+    pool: Option<&Pool>,
+    opts: &ExecOptions,
+) {
+    let (a_len, b_len, raw_len) = step.atom.canonical_lens();
+    let a_src = &values[a_rng.clone()];
+    let b_src = &values[b_rng.clone()];
+    let a_canon = canonicalize_into(
+        a_src,
+        &step.canon_a,
+        &mut scratch_a[..a_len],
+        presum0,
+        presum1,
+        pool,
+    );
+    let b_canon = canonicalize_into(
+        b_src,
+        &step.canon_b,
+        &mut scratch_b[..b_len],
+        presum0,
+        presum1,
+        pool,
+    );
+    let av: &[f32] = if a_canon { &scratch_a[..a_len] } else { a_src };
+    let bv: &[f32] = if b_canon { &scratch_b[..b_len] } else { b_src };
+    for v in scratch_out[..raw_len].iter_mut() {
+        *v = 0.0;
+    }
+    step.atom
+        .forward_into(&step.kernel, av, bv, &mut scratch_out[..raw_len], opts);
+    // The output range may alias a just-freed operand range — safe because
+    // every operand read completed into `scratch_out` above.
+    let dst = &mut values[out_rng.clone()];
+    if step.out_identity {
+        dst.copy_from_slice(&scratch_out[..raw_len]);
+    } else {
+        permute_into(
+            &scratch_out[..raw_len],
+            &step.atom.raw_out_dims,
+            &step.atom.out_perm,
+            dst,
+            pool,
+        );
+    }
+}
+
+impl CompiledPlan {
+    /// Flat element count of a DAG node's value (inputs `0..n`, then step
+    /// outputs in working-list layout).
+    fn node_elems(&self, node: usize) -> usize {
+        let n = self.plan.n_inputs;
+        if node < n {
+            self.in_dims[node].iter().product()
+        } else {
+            self.steps[node - n].atom.out_shape.iter().product()
+        }
+    }
+
+    /// Is `node` read by any step ≥ `after`?
+    fn node_needed_after(&self, node: usize, after: usize) -> bool {
+        self.steps[after..]
+            .iter()
+            .any(|s| s.lhs_node == node || s.rhs_node == node)
+    }
+
+    /// The training-mode liveness layout for `policy`, built once and
+    /// cached on the compiled entry (all tapes over this plan share it).
+    pub fn train_layout(&self, policy: CkptPolicy) -> Arc<TrainLayout> {
+        let slot = match policy {
+            CkptPolicy::StoreAll => &self.train[0],
+            CkptPolicy::Sqrt => &self.train[1],
+            CkptPolicy::None => &self.train[2],
+        };
+        Arc::clone(slot.get_or_init(|| Arc::new(self.build_train_layout(policy))))
+    }
+
+    /// Simulate the heap tape's forward+backward schedule under `policy`
+    /// against a compile-time arena, recording every step's operand/output
+    /// ranges (including recompute segments) and every cotangent's slot.
+    fn build_train_layout(&self, policy: CkptPolicy) -> TrainLayout {
+        let n = self.plan.n_inputs;
+        let ksteps = self.steps.len();
+        // Which step outputs the stored forward retains (identical to the
+        // heap tape's keep-set so gradients stay bit-identical).
+        let keep: Vec<bool> = match policy {
+            CkptPolicy::StoreAll => vec![true; ksteps],
+            CkptPolicy::None => vec![false; ksteps],
+            CkptPolicy::Sqrt => {
+                let seg = (ksteps as f64).sqrt().ceil() as usize;
+                (0..ksteps).map(|k| seg != 0 && k % seg == seg - 1).collect()
+            }
+        };
+
+        let mut arena = ArenaAlloc::new();
+        let mut val_range: Vec<Option<Range<usize>>> = vec![None; n + ksteps];
+        let mut grad_range: Vec<Option<Range<usize>>> = vec![None; n + ksteps];
+
+        // Inputs are copied into arena slots and stay resident for the
+        // whole step (the backward reads them for VJPs and recomputes).
+        let input_ranges: Vec<Range<usize>> = (0..n)
+            .map(|i| {
+                let r = arena.alloc(self.node_elems(i));
+                val_range[i] = Some(r.clone());
+                r
+            })
+            .collect();
+
+        // Stored forward: place every step output; free non-kept operands
+        // once no later forward step reads them. Dying operands are freed
+        // *before* the output is placed — the kernels stage results in
+        // scratch and write back only after all operand reads complete, so
+        // the output may reuse their space.
+        let mut fwd = Vec::with_capacity(ksteps);
+        for k in 0..ksteps {
+            let (l, r) = (self.steps[k].lhs_node, self.steps[k].rhs_node);
+            let a = val_range[l].clone().expect("operand resident");
+            let b = val_range[r].clone().expect("operand resident");
+            for node in [l, r] {
+                if node >= n && !keep[node - n] && !self.node_needed_after(node, k + 1) {
+                    if let Some(dead) = val_range[node].take() {
+                        arena.free(dead);
+                    }
+                }
+            }
+            let out = arena.alloc(self.node_elems(n + k));
+            val_range[n + k] = Some(out.clone());
+            fwd.push(TrainStepLoc { k, a, b, out });
+        }
+        let root_node = n + ksteps - 1;
+        // Post-forward sweep: everything non-kept still resident (beyond
+        // the root) is dropped before the backward begins.
+        for k in 0..ksteps {
+            let node = n + k;
+            if node != root_node && !keep[k] {
+                if let Some(dead) = val_range[node].take() {
+                    arena.free(dead);
+                }
+            }
+        }
+        let root = val_range[root_node].clone().expect("root resident");
+
+        // Backward schedule, steps in reverse. Per step: recompute missing
+        // operands from the nearest checkpoints, consume the output
+        // cotangent, free the output value, then place the operand
+        // cotangents (which may reuse the just-freed space — the gathers
+        // run only after the backward kernels finished reading).
+        let droot = arena.alloc(self.node_elems(root_node));
+        grad_range[root_node] = Some(droot.clone());
+        let mut bwd = Vec::with_capacity(ksteps);
+        for k in (0..ksteps).rev() {
+            let (l, r) = (self.steps[k].lhs_node, self.steps[k].rhs_node);
+            let mut recompute = Vec::new();
+            for node in [l, r] {
+                if val_range[node].is_none() {
+                    plan_recompute(self, node, &mut arena, &mut val_range, &mut recompute);
+                }
+            }
+            let a = val_range[l].clone().expect("operand resident");
+            let b = val_range[r].clone().expect("operand resident");
+            let o = n + k;
+            let dnode = grad_range[o].take().expect("cotangent for step output");
+            arena.free(dnode.clone());
+            if let Some(dead) = val_range[o].take() {
+                arena.free(dead);
+            }
+            let da = match grad_range[l].clone() {
+                Some(range) => GradTarget {
+                    range,
+                    fresh: false,
+                },
+                None => {
+                    let range = arena.alloc(self.node_elems(l));
+                    grad_range[l] = Some(range.clone());
+                    GradTarget { range, fresh: true }
+                }
+            };
+            let db = match grad_range[r].clone() {
+                Some(range) => GradTarget {
+                    range,
+                    fresh: false,
+                },
+                None => {
+                    let range = arena.alloc(self.node_elems(r));
+                    grad_range[r] = Some(range.clone());
+                    GradTarget { range, fresh: true }
+                }
+            };
+            bwd.push(TrainBwdStep {
+                k,
+                recompute,
+                a,
+                b,
+                dnode,
+                da,
+                db,
+            });
+        }
+        let input_grads: Vec<Range<usize>> = (0..n)
+            .map(|i| {
+                // `compile_arc` rejects plans with unconsumed inputs, so by
+                // construction every input received a cotangent above.
+                grad_range[i]
+                    .clone()
+                    .expect("compile guarantees every input is consumed by a step")
+            })
+            .collect();
+        TrainLayout {
+            policy,
+            input_ranges,
+            fwd,
+            root,
+            droot,
+            bwd,
+            input_grads,
+            arena_len: arena.len,
+        }
+    }
+
+    /// Run the taped forward of a training step: copy the inputs into their
+    /// arena slots, execute every step into its tape range per the layout's
+    /// schedule, and write the (final-permuted) output into `out`. Returns
+    /// the workspace epoch identifying the tape this call left resident —
+    /// [`CompiledPlan::train_backward`] consumes it. Allocation-free after
+    /// workspace warm-up; results are bit-identical to the heap tape.
+    pub fn train_forward(
+        &self,
+        layout: &TrainLayout,
+        inputs: &[&Tensor],
+        ws: &mut TrainWorkspace,
+        out: &mut Tensor,
+    ) -> Result<u64> {
+        self.validate(inputs)?;
+        if out.shape() != &self.out_shape[..] {
+            return Err(anyhow!(
+                "output tensor has shape {:?}, plan produces {:?}",
+                out.shape(),
+                self.out_shape
+            ));
+        }
+        ws.ensure_train(self, layout);
+        ws.epoch = ws.epoch.wrapping_add(1);
+        let epoch = ws.epoch;
+        let sized;
+        let canon_pool: Option<&Pool> = match self.opts.backend {
+            Backend::Scalar => None,
+            Backend::Parallel { threads: 0 } => Some(Pool::global()),
+            Backend::Parallel { threads } => {
+                sized = Pool::sized(threads);
+                Some(sized.as_ref())
+            }
+        };
+        let TrainWorkspace { base, .. } = ws;
+        let Workspace {
+            values,
+            scratch_a,
+            scratch_b,
+            scratch_out,
+            presum0,
+            presum1,
+        } = base;
+        for (i, t) in inputs.iter().enumerate() {
+            values[layout.input_ranges[i].clone()].copy_from_slice(t.data());
+        }
+        for loc in &layout.fwd {
+            exec_arena_step(
+                &self.steps[loc.k],
+                &loc.a,
+                &loc.b,
+                &loc.out,
+                values,
+                scratch_a,
+                scratch_b,
+                scratch_out,
+                presum0,
+                presum1,
+                canon_pool,
+                &self.opts,
+            );
+        }
+        let root = &values[layout.root.clone()];
+        match &self.plan.final_perm {
+            Some(p) => permute_into(root, &self.root_shape, p, out.data_mut(), canon_pool),
+            None => out.data_mut().copy_from_slice(root),
+        }
+        Ok(epoch)
+    }
+
+    /// Run the backward of a taped training step: seed the root cotangent
+    /// from `dout`, replay the layout's reverse schedule (recomputing
+    /// checkpoint segments in place), and write ∂L/∂input into the
+    /// caller-provided `grads` (one tensor per input, natural shapes).
+    /// Allocation-free after workspace warm-up; gradients are bit-identical
+    /// to the heap tape's.
+    pub fn train_backward(
+        &self,
+        layout: &TrainLayout,
+        dout: &Tensor,
+        ws: &mut TrainWorkspace,
+        grads: &mut [Tensor],
+    ) -> Result<()> {
+        if dout.shape() != &self.out_shape[..] {
+            return Err(anyhow!(
+                "output cotangent has shape {:?}, plan produces {:?}",
+                dout.shape(),
+                self.out_shape
+            ));
+        }
+        if grads.len() != self.plan.n_inputs {
+            return Err(anyhow!(
+                "expected {} gradient tensors, got {}",
+                self.plan.n_inputs,
+                grads.len()
+            ));
+        }
+        for (i, g) in grads.iter().enumerate() {
+            if g.shape() != &self.in_dims[i][..] {
+                return Err(anyhow!(
+                    "gradient {} has shape {:?} but input {} has shape {:?}",
+                    i,
+                    g.shape(),
+                    i,
+                    self.in_dims[i]
+                ));
+            }
+        }
+        ws.ensure_train(self, layout);
+        let sized;
+        let canon_pool: Option<&Pool> = match self.opts.backend {
+            Backend::Scalar => None,
+            Backend::Parallel { threads: 0 } => Some(Pool::global()),
+            Backend::Parallel { threads } => {
+                sized = Pool::sized(threads);
+                Some(sized.as_ref())
+            }
+        };
+        let TrainWorkspace {
+            base,
+            scratch_da,
+            scratch_db,
+            scratch_dout,
+            ..
+        } = ws;
+        let Workspace {
+            values,
+            scratch_a,
+            scratch_b,
+            scratch_out,
+            presum0,
+            presum1,
+        } = base;
+        // Seed the root cotangent (undoing the final permutation).
+        {
+            let dst = &mut values[layout.droot.clone()];
+            match &self.inv_final_perm {
+                Some(inv) => permute_into(dout.data(), dout.shape(), inv, dst, canon_pool),
+                None => dst.copy_from_slice(dout.data()),
+            }
+        }
+        for bstep in &layout.bwd {
+            for rloc in &bstep.recompute {
+                exec_arena_step(
+                    &self.steps[rloc.k],
+                    &rloc.a,
+                    &rloc.b,
+                    &rloc.out,
+                    values,
+                    scratch_a,
+                    scratch_b,
+                    scratch_out,
+                    presum0,
+                    presum1,
+                    canon_pool,
+                    &self.opts,
+                );
+            }
+            let step = &self.steps[bstep.k];
+            let (a_len, b_len, raw_len) = step.atom.canonical_lens();
+            let a_src = &values[bstep.a.clone()];
+            let b_src = &values[bstep.b.clone()];
+            let a_canon = canonicalize_into(
+                a_src,
+                &step.canon_a,
+                &mut scratch_a[..a_len],
+                presum0,
+                presum1,
+                canon_pool,
+            );
+            let b_canon = canonicalize_into(
+                b_src,
+                &step.canon_b,
+                &mut scratch_b[..b_len],
+                presum0,
+                presum1,
+                canon_pool,
+            );
+            let d_src = &values[bstep.dnode.clone()];
+            let dv: &[f32] = if step.out_identity {
+                d_src
+            } else {
+                permute_into(
+                    d_src,
+                    &step.atom.out_shape,
+                    &step.inv_out_perm,
+                    &mut scratch_dout[..raw_len],
+                    canon_pool,
+                );
+                &scratch_dout[..raw_len]
+            };
+            let av: &[f32] = if a_canon { &scratch_a[..a_len] } else { a_src };
+            let bv: &[f32] = if b_canon { &scratch_b[..b_len] } else { b_src };
+            for v in scratch_da[..a_len].iter_mut() {
+                *v = 0.0;
+            }
+            for v in scratch_db[..b_len].iter_mut() {
+                *v = 0.0;
+            }
+            step.atom.backward_into(
+                &step.kernel,
+                av,
+                bv,
+                dv,
+                &mut scratch_da[..a_len],
+                &mut scratch_db[..b_len],
+                &self.opts,
+            );
+            // Un-canonicalize the operand cotangents straight into their
+            // arena slots (the backward kernels finished every read of
+            // `av`/`bv`/`dv` above, so targets may reuse freed space).
+            gather_into(
+                &scratch_da[..a_len],
+                &step.grad_a.out_shape,
+                &step.grad_a.strides,
+                &mut values[bstep.da.range.clone()],
+                !bstep.da.fresh,
+                canon_pool,
+            );
+            gather_into(
+                &scratch_db[..b_len],
+                &step.grad_b.out_shape,
+                &step.grad_b.strides,
+                &mut values[bstep.db.range.clone()],
+                !bstep.db.fresh,
+                canon_pool,
+            );
+        }
+        for (i, g) in grads.iter_mut().enumerate() {
+            g.data_mut()
+                .copy_from_slice(&values[layout.input_grads[i].clone()]);
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------

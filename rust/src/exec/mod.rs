@@ -43,7 +43,8 @@ mod reference;
 
 pub use atom::{canonicalize, conv_triples, Atom, AtomKernel, ConvAxis};
 pub use compiled::{
-    compile_expr, CompiledPlan, PlanCache, PlanKey, Workspace, DEFAULT_PLAN_CACHE_CAPACITY,
+    compile_expr, CompiledPlan, PlanCache, PlanKey, TrainLayout, TrainWorkspace, Workspace,
+    DEFAULT_PLAN_CACHE_CAPACITY,
 };
 pub use reference::naive_eval;
 

@@ -6,6 +6,7 @@
 use super::Table;
 use crate::autodiff::{MemoryMeter, PathAutodiff};
 use crate::einsum::{parse, SizedSpec};
+use crate::exec::TrainWorkspace;
 use crate::nn::EvalConfig;
 use crate::planner::{plan_with, PlanOptions};
 use crate::tensor::Tensor;
@@ -32,6 +33,7 @@ pub fn peak_bytes(spec: &TnnLayerSpec, eval: EvalConfig, b: usize, hp: usize, wp
     .unwrap();
     let ad = PathAutodiff::new(&plan).unwrap();
     let meter = MemoryMeter::new();
+    let mut ws = TrainWorkspace::new();
     let mut inputs: Vec<&Tensor> = vec![&x];
     inputs.extend(factors.iter());
     let _ = ad
@@ -39,6 +41,7 @@ pub fn peak_bytes(spec: &TnnLayerSpec, eval: EvalConfig, b: usize, hp: usize, wp
             &inputs,
             |o| Tensor::full(o.shape(), 1.0),
             eval.ckpt,
+            &mut ws,
             &meter,
         )
         .unwrap();

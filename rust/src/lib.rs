@@ -64,6 +64,28 @@
 //! compiled forward, and the coordinator shares compiled entries across
 //! workers through [`exec::PlanCache`].
 //!
+//! ## Training path
+//!
+//! The training loop — the workload the paper actually benchmarks — has
+//! the same steady-state guarantees. A compiled plan lazily builds one
+//! [`exec::TrainLayout`] per checkpoint policy
+//! ([`autodiff::CkptPolicy`]): a compile-time arena layout assigning
+//! slots to every tape value, recompute-segment transient and cotangent
+//! of the stored-forward + backward schedule. The autodiff executor
+//! ([`autodiff::PathAutodiff`]) replays that schedule against a
+//! caller-held [`TrainWorkspace`] (whose arena is shared with inference),
+//! so a repeated `forward_with_tape_into` + `backward_into` training step
+//! performs **zero heap allocations** on both backends after warm-up,
+//! with gradients bit-identical to the per-value heap tape it replaced
+//! (`bench_hotpath` asserts both and emits `BENCH_train.json`; layers own
+//! a training workspace, and the coordinator serves ad-hoc training
+//! requests on its workers' workspaces).
+//!
+//! [`autodiff::MemoryMeter`] reports each step's arena high-water mark
+//! (the paper's Table 3 peak-memory quantity) — `StoreAll` > `Sqrt` in
+//! peak, `Sqrt`/`None` pay segment recomputes instead, exactly the §3.3
+//! trade-off.
+//!
 //! ## Backend selection
 //!
 //! Every execution entry point is parameterized by [`ExecOptions`] carrying
@@ -125,7 +147,7 @@ pub mod util;
 pub use einsum::{EinsumSpec, ModeKind, SizedSpec};
 pub use exec::{
     compile_expr, conv_einsum, conv_einsum_with, pairwise, Backend, CompiledPlan, ExecOptions,
-    PlanCache, Workspace,
+    PlanCache, TrainLayout, TrainWorkspace, Workspace,
 };
 pub use parallel::Pool;
 pub use planner::{contract_path, Plan, PlanOptions, Strategy};

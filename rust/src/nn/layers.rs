@@ -6,7 +6,7 @@
 use crate::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff, Tape};
 use crate::einsum::parse;
 use crate::einsum::SizedSpec;
-use crate::exec::{CompiledPlan, Workspace};
+use crate::exec::{CompiledPlan, TrainWorkspace, Workspace};
 use crate::planner::{plan_with, PlanOptions, Strategy};
 use crate::tensor::Tensor;
 use crate::tnn::TnnLayerSpec;
@@ -109,7 +109,14 @@ pub struct TensorialConv2d {
     /// their plans instead of thrashing, while arbitrary-shape churn stays
     /// memory-bounded.
     compiled: LruCache<(usize, usize, usize), Arc<CompiledPlan>>,
-    /// Reusable workspace for inference-mode forwards.
+    /// Reusable training workspace owned by the layer: the tape of a train
+    /// forward lives in its arena until `backward` consumes it.
+    /// Recompile-on-shape-change reuses it unchanged: the workspace is
+    /// plan-agnostic and only ever grows.
+    tws: TrainWorkspace,
+    /// Separate inference workspace, so an eval forward between a train
+    /// forward and its backward (e.g. a mid-epoch validation pass) cannot
+    /// clobber the pending tape's arena.
     ws: Workspace,
     tape: Option<Tape>,
     cached_x_shape: Vec<usize>,
@@ -130,6 +137,7 @@ impl TensorialConv2d {
             grads,
             eval,
             compiled: LruCache::new(GEOMETRY_PLAN_CACHE_CAPACITY),
+            tws: TrainWorkspace::new(),
             ws: Workspace::new(),
             tape: None,
             cached_x_shape: Vec::new(),
@@ -183,20 +191,25 @@ impl Layer for TensorialConv2d {
         let mut inputs: Vec<&Tensor> = vec![&x_reshaped];
         inputs.extend(self.factors.iter());
         if train {
+            // Taped forward out of the layer-held training arena: the tape
+            // lives in `tws` until backward consumes it, and the step
+            // allocates only the output tensor.
             let ad = PathAutodiff::from_compiled(Arc::clone(&compiled));
             let tape = ad
-                .forward_with_tape(&inputs, ckpt, &self.meter)
+                .forward_with_tape(&inputs, ckpt, &mut self.tws, &self.meter)
                 .expect("forward");
             let out = tape.output.clone();
             self.tape = Some(tape);
             out.reshape(&[b, self.spec.t, hp, wp])
         } else {
             // Steady-state inference: replay the compiled plan against the
-            // layer-held workspace — no planning, no canonicalization
-            // analysis, no per-intermediate allocation. Meter the footprint
-            // this call actually needs (inputs + the plan's workspace
-            // requirement + output), not the workspace's lifetime-grown
-            // capacity, so peak_bytes() stays comparable across geometries.
+            // layer-held inference workspace (kept separate from the
+            // training arena so a pending tape survives eval forwards) —
+            // no planning, no canonicalization analysis, no
+            // per-intermediate allocation. Meter the footprint this call
+            // actually needs (inputs + the plan's workspace requirement +
+            // output), not the workspace's lifetime-grown capacity, so
+            // peak_bytes() stays comparable across geometries.
             let input_bytes: usize = inputs.iter().map(|t| t.bytes()).sum();
             let out = compiled.run(&inputs, &mut self.ws).expect("forward");
             let transient = input_bytes + compiled.workspace_bytes() + out.bytes();
@@ -212,12 +225,15 @@ impl Layer for TensorialConv2d {
             self.cached_x_shape[2],
             self.cached_x_shape[3],
         );
-        let compiled = self.compiled_for(b, hp, wp);
-        let ad = PathAutodiff::from_compiled(compiled);
-        let mut tape = self.tape.take().expect("backward without forward");
+        let tape = self.tape.take().expect("backward without forward");
+        // Replay the exact compiled plan the tape was produced by (held in
+        // the tape token) — re-fetching from the LRU could recompile a
+        // structurally identical but distinct entry if enough other
+        // geometries ran since the forward, which the tape would reject.
+        let ad = PathAutodiff::from_compiled(Arc::clone(tape.token().plan()));
         let dy_shaped = dy.clone().reshape(&self.spec.output_shape(b, hp, wp));
         let grads = ad
-            .backward(&mut tape, &dy_shaped, &self.meter)
+            .backward(&tape, &dy_shaped, &mut self.tws, &self.meter)
             .expect("backward");
         // grads[0] is ∂L/∂x (reshaped); the rest are factor grads.
         for (g, acc) in grads[1..].iter().zip(self.grads.iter_mut()) {

@@ -16,12 +16,16 @@
 //! [`Pool::run_chunks`] splits the output into fixed-size chunks and
 //! publishes one *job* (an erased pointer to the caller's closure) to the
 //! pool's job slot. Workers and the calling thread then claim chunk indices
-//! from a shared cursor until none remain; the caller blocks until every
-//! claimed chunk has finished executing. Chunks are claimed dynamically, so
-//! load balances even when per-chunk work is uneven, and every chunk is a
-//! deterministic function of its index — results are bit-identical
-//! regardless of which thread runs which chunk, and identical to serial
-//! execution.
+//! from a shared **lock-free atomic cursor** — each fetch grabs a *batch*
+//! of up to `claim` consecutive indices (sized so every participant still
+//! gets several fetches per job), so fine-grained regions with hundreds of
+//! tiny chunks pay one atomic add per batch instead of a mutex round-trip
+//! per chunk. The caller blocks until every chunk has finished executing
+//! (an atomic `remaining` counter; the last finisher signals completion).
+//! Chunks are claimed dynamically, so load balances even when per-chunk
+//! work is uneven, and every chunk is a deterministic function of its
+//! index — results are bit-identical regardless of which thread runs which
+//! chunk, and identical to serial execution.
 //!
 //! Workers are started lazily on the first parallel region and live until
 //! the pool is dropped ([`Pool::global`] and the [`Pool::sized`] registry
@@ -47,16 +51,19 @@
 //!
 //! The job slot stores a type-erased raw pointer to a closure living on the
 //! caller's stack. This is sound because `run_chunks` does not return until
-//! `completed == n_chunks && in_flight == 0` — i.e. until no thread can
-//! still dereference the pointer — and late-waking workers re-check the
-//! job epoch under the slot mutex before touching anything. Distinct chunk
-//! indices map to disjoint sub-slices of the output, so no two threads ever
-//! alias the same `&mut [f32]`.
+//! every chunk has executed (`remaining == 0`) **and** every worker that
+//! joined the job has left its claim loop (`participants == 0`) — i.e.
+//! until no thread can still dereference the pointer. Workers only join a
+//! job (and bump `participants`) under the slot mutex while the job is
+//! still published, so a stale worker can never reach the atomic cursor of
+//! a later job with an old `JobRef`. Distinct chunk indices map to disjoint
+//! sub-slices of the output, so no two threads ever alias the same
+//! `&mut [f32]`.
 
 use std::any::Any;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -113,20 +120,22 @@ unsafe fn call_chunk<F: Fn(usize, &mut [f32]) + Sync>(data: *const (), i: usize)
 }
 
 /// Mutex-protected dispatch state shared between the caller and workers.
-/// All transitions happen under the lock; chunk *execution* happens outside
-/// it, so the lock is held only for index bookkeeping.
+/// The lock is taken only at job boundaries — publish, join, leave, panic —
+/// never per chunk: claiming runs on the lock-free cursor in [`Shared`].
 struct JobSlot {
     /// Monotone job counter; workers remember the last epoch they joined so
     /// a stale wake-up never re-enters a finished job.
     epoch: u64,
     job: Option<JobRef>,
     n_chunks: usize,
-    /// Next unclaimed chunk index.
-    next_chunk: usize,
-    /// Chunks whose execution has finished (success or panic).
-    completed: usize,
-    /// Threads currently executing a claimed chunk.
-    in_flight: usize,
+    /// Chunk indices grabbed per cursor fetch (≥ 1): sized at publish so
+    /// every participant still gets several fetches (dynamic balancing)
+    /// while fine-grained regions amortize the claim traffic.
+    claim: usize,
+    /// Workers currently inside the claim loop for this epoch (the
+    /// publishing caller is tracked separately — it waits for this to reach
+    /// zero before invalidating the job pointer).
+    participants: usize,
     /// First panic payload from a chunk closure; the publishing caller
     /// re-raises it via `resume_unwind`, preserving the original message.
     panic: Option<Box<dyn Any + Send>>,
@@ -139,6 +148,15 @@ struct Shared {
     work_cv: Condvar,
     /// The publishing caller parks here waiting for completion.
     done_cv: Condvar,
+    /// Next unclaimed chunk index. Claims are plain `fetch_add`s of the
+    /// job's `claim` batch size — no lock. Reset under the slot mutex at
+    /// publish time; only threads that joined the current epoch (under the
+    /// mutex) ever touch it, so overshooting past `n_chunks` is the only
+    /// steady-state artifact and is harmless.
+    cursor: AtomicUsize,
+    /// Chunks not yet fully executed. The thread that finishes the last
+    /// chunk takes the slot lock and signals `done_cv`.
+    remaining: AtomicUsize,
 }
 
 impl Shared {
@@ -148,70 +166,89 @@ impl Shared {
                 epoch: 0,
                 job: None,
                 n_chunks: 0,
-                next_chunk: 0,
-                completed: 0,
-                in_flight: 0,
+                claim: 1,
+                participants: 0,
                 panic: None,
                 shutdown: false,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(0),
         }
     }
 }
 
-/// Claim and execute chunks of the job published at `epoch` until none
-/// remain. Run by the caller and by every woken worker; safe to call even
-/// after the job has drained (returns immediately).
-fn execute_chunks(shared: &Shared, job: JobRef, epoch: u64) {
+/// Claim and execute chunk batches of the published job until the cursor is
+/// exhausted. Run by the caller and by every joined worker. Lock-free on
+/// the claim path; the slot mutex is touched only to record a panic or to
+/// signal completion of the final chunk.
+fn execute_chunks(shared: &Shared, job: JobRef, n_chunks: usize, claim: usize) {
     loop {
-        let i = {
-            let mut slot = shared.slot.lock().unwrap();
-            if slot.epoch != epoch || slot.job.is_none() || slot.next_chunk >= slot.n_chunks {
-                return;
-            }
-            let i = slot.next_chunk;
-            slot.next_chunk += 1;
-            slot.in_flight += 1;
-            i
-        };
-        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, i) }));
-        let mut slot = shared.slot.lock().unwrap();
-        slot.in_flight -= 1;
-        slot.completed += 1;
-        if let Err(payload) = result {
-            // Keep the first payload; the publishing caller re-raises it.
-            slot.panic.get_or_insert(payload);
+        let start = shared.cursor.fetch_add(claim, Ordering::AcqRel);
+        if start >= n_chunks {
+            return;
         }
-        if slot.completed >= slot.n_chunks && slot.in_flight == 0 {
+        let end = (start + claim).min(n_chunks);
+        let mut first_panic: Option<Box<dyn Any + Send>> = None;
+        for i in start..end {
+            let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, i) }));
+            if let Err(payload) = result {
+                // Keep the first payload; the publishing caller re-raises it.
+                first_panic.get_or_insert(payload);
+            }
+        }
+        if let Some(payload) = first_panic {
+            shared.slot.lock().unwrap().panic.get_or_insert(payload);
+        }
+        let done = end - start;
+        if shared.remaining.fetch_sub(done, Ordering::AcqRel) == done {
+            // Last chunk finished. Taking the lock before notifying pairs
+            // with the publisher's predicate re-check, so the wake-up can
+            // never be lost.
+            let _guard = shared.slot.lock().unwrap();
             shared.done_cv.notify_all();
         }
     }
 }
 
 /// Worker body: park on the condvar until a new job epoch appears (or
-/// shutdown), then help drain its chunks.
+/// shutdown), join it (under the mutex — this is what makes the raw job
+/// pointer sound), help drain its chunk batches, then leave.
 fn worker_loop(shared: Arc<Shared>) {
     let mut seen = 0u64;
     loop {
-        let (job, epoch) = {
+        let (job, epoch, n_chunks, claim) = {
             let mut slot = shared.slot.lock().unwrap();
             loop {
                 if slot.shutdown {
                     return;
                 }
                 if let Some(job) = slot.job {
-                    if slot.epoch != seen && slot.next_chunk < slot.n_chunks {
-                        break (job, slot.epoch);
+                    if slot.epoch != seen && shared.cursor.load(Ordering::Relaxed) < slot.n_chunks
+                    {
+                        slot.participants += 1;
+                        break (job, slot.epoch, slot.n_chunks, slot.claim);
                     }
                 }
                 slot = shared.work_cv.wait(slot).unwrap();
             }
         };
         seen = epoch;
-        execute_chunks(&shared, job, epoch);
+        execute_chunks(&shared, job, n_chunks, claim);
+        let mut slot = shared.slot.lock().unwrap();
+        slot.participants -= 1;
+        if slot.participants == 0 {
+            shared.done_cv.notify_all();
+        }
     }
 }
+
+/// Target number of cursor fetches per participant and job: high enough
+/// that dynamic balancing still works when per-chunk work is uneven, low
+/// enough that a fine-grained region (hundreds of tiny chunks) claims many
+/// indices per atomic fetch.
+const CLAIM_FETCHES_PER_THREAD: usize = 4;
 
 /// A persistent worker pool: `threads - 1` parked worker threads (started
 /// lazily; the calling thread is the remaining participant) plus a `busy`
@@ -317,12 +354,14 @@ impl Pool {
     /// be shorter) and invoke `f(chunk_index, chunk)` on every chunk, fanned
     /// out across the persistent workers plus the calling thread.
     ///
-    /// Chunks are claimed dynamically from a shared cursor, so uneven
-    /// per-chunk work still balances. Falls back to serial execution on the
-    /// calling thread when the budget is 1, there is only one chunk, or the
-    /// pool is already busy (nested or concurrent use) — never blocks
-    /// waiting for the pool. Steady-state dispatch performs no heap
-    /// allocation.
+    /// Chunks are claimed dynamically from a shared lock-free cursor in
+    /// batches of up to `n_chunks / (threads ·` a small constant `)` indices
+    /// per fetch, so uneven per-chunk work still balances while fine-grained
+    /// regions do not pay per-chunk synchronization. Falls back to serial
+    /// execution on the calling thread when the budget is 1, there is only
+    /// one chunk, or the pool is already busy (nested or concurrent use) —
+    /// never blocks waiting for the pool. Steady-state dispatch performs no
+    /// heap allocation.
     ///
     /// If `f` panics on any chunk, the remaining chunks still complete (or
     /// drain) and the panic is re-raised on the calling thread.
@@ -350,16 +389,17 @@ impl Pool {
             data: &ctx as *const ChunkJob<F> as *const (),
             call: call_chunk::<F>,
         };
-        let epoch = {
+        let claim = (n_chunks / (self.threads * CLAIM_FETCHES_PER_THREAD)).max(1);
+        {
             let mut slot = shared.slot.lock().unwrap();
-            slot.epoch += 1;
+            slot.epoch = slot.epoch.wrapping_add(1);
             slot.job = Some(job);
             slot.n_chunks = n_chunks;
-            slot.next_chunk = 0;
-            slot.completed = 0;
+            slot.claim = claim;
             slot.panic = None;
-            slot.epoch
-        };
+            shared.cursor.store(0, Ordering::Release);
+            shared.remaining.store(n_chunks, Ordering::Release);
+        }
         // Wake only as many workers as the job can use (the caller takes
         // chunks too): a small region on a wide pool must not thundering-
         // herd every parked worker. A worker that misses its wake-up (e.g.
@@ -372,14 +412,15 @@ impl Pool {
         }
         // The caller is a full participant: even if every worker is slow to
         // wake (or failed to spawn), the job completes.
-        execute_chunks(shared, job, epoch);
+        execute_chunks(shared, job, n_chunks, claim);
         let panic = {
             let mut slot = shared.slot.lock().unwrap();
-            while slot.completed < slot.n_chunks || slot.in_flight > 0 {
+            // Wait until every chunk has executed AND every joined worker
+            // has left its claim loop — only then is the stack-held job
+            // safe to invalidate (no thread can still hold the pointer).
+            while shared.remaining.load(Ordering::Acquire) > 0 || slot.participants > 0 {
                 slot = shared.done_cv.wait(slot).unwrap();
             }
-            // Clear the job before releasing the lock so a late-waking
-            // worker can never observe a dangling pointer.
             slot.job = None;
             slot.panic.take()
         };
@@ -493,6 +534,25 @@ mod tests {
             });
             for (k, &v) in data.iter().enumerate() {
                 assert_eq!(v, (round * 10_000 + (k / 16) * 100 + (k % 16)) as f32);
+            }
+        }
+        assert!(!pool.busy.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn fine_grained_many_chunks_use_batched_claims_correctly() {
+        // 1024 tiny chunks on 4 threads → the cursor hands out batches of
+        // 64 indices per fetch; every chunk must still run exactly once.
+        let pool = Pool::new(4);
+        let mut data = vec![0.0f32; 1024 * 3];
+        for round in 0..20usize {
+            pool.run_chunks(&mut data, 3, |i, c| {
+                for (k, v) in c.iter_mut().enumerate() {
+                    *v = (round * 100_000 + i * 10 + k) as f32;
+                }
+            });
+            for (k, &v) in data.iter().enumerate() {
+                assert_eq!(v, (round * 100_000 + (k / 3) * 10 + (k % 3)) as f32);
             }
         }
         assert!(!pool.busy.load(Ordering::SeqCst));

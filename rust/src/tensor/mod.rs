@@ -501,6 +501,98 @@ fn permute_gather(
     }
 }
 
+/// Strided gather into `out` (row-major over `out_shape`): output element
+/// `i` reads `src` at the offset `Σ_ax idx_ax · strides[ax]`, where a
+/// stride may be **0** — this is how the training engine fuses the VJP
+/// un-canonicalization (inverse permute + re-broadcast of pre-summed axes)
+/// into one pass with no intermediate tensors. With `accumulate`, values
+/// are added (`out[i] += …`) instead of stored — the gradient-accumulation
+/// case, elementwise identical to materializing the gather and running
+/// [`Tensor::add_assign`]. Each output element is touched exactly once, so
+/// the pooled path is bit-identical to the serial one.
+pub fn gather_into(
+    src: &[f32],
+    out_shape: &[usize],
+    strides: &[usize],
+    out: &mut [f32],
+    accumulate: bool,
+    pool: Option<&Pool>,
+) {
+    let rank = out_shape.len();
+    assert_eq!(strides.len(), rank, "stride rank mismatch");
+    assert_eq!(
+        out.len(),
+        out_shape.iter().product::<usize>(),
+        "out length does not match out_shape"
+    );
+    if out.is_empty() {
+        return;
+    }
+    let parallel = match pool {
+        Some(p) => p.threads() > 1 && out.len() >= PAR_CANON_MIN_ELEMS,
+        None => false,
+    };
+    if parallel {
+        let p = pool.expect("parallel implies pool");
+        let chunk = (out.len() + p.threads() - 1) / p.threads();
+        p.run_chunks(out, chunk, |ci, c| {
+            if rank <= MAX_STACK_RANK {
+                let mut idx = [0usize; MAX_STACK_RANK];
+                gather_span(src, c, ci * chunk, out_shape, strides, accumulate, &mut idx[..rank]);
+            } else {
+                let mut idx = vec![0usize; rank];
+                gather_span(src, c, ci * chunk, out_shape, strides, accumulate, &mut idx);
+            }
+        });
+    } else if rank <= MAX_STACK_RANK {
+        let mut idx = [0usize; MAX_STACK_RANK];
+        gather_span(src, out, 0, out_shape, strides, accumulate, &mut idx[..rank]);
+    } else {
+        let mut idx = vec![0usize; rank];
+        gather_span(src, out, 0, out_shape, strides, accumulate, &mut idx);
+    }
+}
+
+/// Gather `out.len()` strided elements starting at linear output index
+/// `start`, tracking the source offset incrementally (odometer; zero
+/// strides simply never move it).
+#[allow(clippy::too_many_arguments)]
+fn gather_span(
+    src: &[f32],
+    out: &mut [f32],
+    start: usize,
+    shape: &[usize],
+    strides: &[usize],
+    accumulate: bool,
+    idx: &mut [usize],
+) {
+    let rank = shape.len();
+    let mut rem = start;
+    let mut off = 0usize;
+    for ax in (0..rank).rev() {
+        let d = shape[ax];
+        idx[ax] = rem % d;
+        rem /= d;
+        off += idx[ax] * strides[ax];
+    }
+    for slot in out.iter_mut() {
+        if accumulate {
+            *slot += src[off];
+        } else {
+            *slot = src[off];
+        }
+        for ax in (0..rank).rev() {
+            idx[ax] += 1;
+            off += strides[ax];
+            if idx[ax] < shape[ax] {
+                break;
+            }
+            off -= strides[ax] * shape[ax];
+            idx[ax] = 0;
+        }
+    }
+}
+
 /// Sum `src` (row-major, `shape`) over `axis` into `out`
 /// (`out.len() == src.len() / shape[axis]`). `out` is zeroed first; per
 /// output element the summation order over the axis matches
@@ -767,6 +859,47 @@ mod tests {
         let mut out = vec![0.0f32; want.len()];
         sum_axis_into(lead.data(), lead.shape(), 0, &mut out, Some(&pool));
         assert_eq!(out.as_slice(), want.data());
+    }
+
+    #[test]
+    fn gather_into_reproduces_inverse_permute_plus_broadcast() {
+        // The VJP un-canonicalization shape: canon = post.permute(perm),
+        // gathered back to post order with a broadcast axis re-inserted.
+        let post = Tensor::iota(&[3, 4]);
+        let canon = post.permute(&[1, 0]); // shape [4, 3]
+        // want = canon.permute(inv).broadcast_axis(1, 5) → shape [3, 5, 4]
+        let want = canon.permute(&[1, 0]).broadcast_axis(1, 5);
+        // strides into canon's flat data: canon strides [3, 1]; axis 0 of
+        // the output is canon axis 1 (stride 1), axis 1 broadcast (0),
+        // axis 2 is canon axis 0 (stride 3).
+        let mut out = vec![0.0f32; 3 * 5 * 4];
+        gather_into(canon.data(), &[3, 5, 4], &[1, 0, 3], &mut out, false, None);
+        assert_eq!(out.as_slice(), want.data());
+        // accumulate adds elementwise on top of existing contents
+        let mut acc = vec![1.0f32; 3 * 5 * 4];
+        gather_into(canon.data(), &[3, 5, 4], &[1, 0, 3], &mut acc, true, None);
+        for (a, w) in acc.iter().zip(want.data()) {
+            assert_eq!(*a, 1.0 + w);
+        }
+        // scalar (rank-0) gather
+        let mut s = vec![0.0f32];
+        gather_into(&[7.5], &[], &[], &mut s, false, None);
+        assert_eq!(s[0], 7.5);
+    }
+
+    #[test]
+    fn parallel_gather_into_matches_serial() {
+        let mut rng = Rng::new(11);
+        let t = Tensor::rand(&[64, 512], -1.0, 1.0, &mut rng);
+        // broadcast a middle axis of 3: out[i, j, k] = t[i, k]
+        let shape = [64usize, 3, 512];
+        let strides = [512usize, 0, 1];
+        let mut serial = vec![0.0f32; 64 * 3 * 512];
+        gather_into(t.data(), &shape, &strides, &mut serial, false, None);
+        let pool = Pool::new(4);
+        let mut par = vec![0.0f32; 64 * 3 * 512];
+        gather_into(t.data(), &shape, &strides, &mut par, false, Some(&pool));
+        assert_eq!(par, serial);
     }
 
     #[test]

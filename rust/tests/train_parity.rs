@@ -1,0 +1,274 @@
+//! Property tests for the workspace-backed training tape: the
+//! arena-scheduled `forward_with_tape` + `backward` must be
+//! **bit-identical** to the heap tape it replaced — across all four
+//! convolution varieties × {StoreAll, Sqrt, None} checkpoint policies ×
+//! scalar/parallel backends × 100 re-runs against one workspace — and its
+//! gradients must agree with central finite differences. The heap
+//! reference (`testsupport/heap_tape.rs`, shared with `bench_hotpath`)
+//! replays the pre-refactor algorithm step by step over the same compiled
+//! plan through the public atom API.
+
+use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
+use conv_einsum::einsum::ConvKind;
+use conv_einsum::util::rng::Rng;
+use conv_einsum::{compile_expr, Backend, PlanOptions, Tensor, TrainWorkspace, Workspace};
+use std::sync::Arc;
+
+#[path = "../testsupport/heap_tape.rs"]
+mod heap_tape;
+use heap_tape::heap_forward_backward;
+
+const KINDS: [ConvKind; 4] = [
+    ConvKind::Same,
+    ConvKind::Valid,
+    ConvKind::Full,
+    ConvKind::Circular,
+];
+
+const POLICIES: [CkptPolicy; 3] = [CkptPolicy::StoreAll, CkptPolicy::Sqrt, CkptPolicy::None];
+
+/// A 4-input expression whose conv mode `x` is 2-input (so every
+/// [`ConvKind`] is legal) with a contraction tail — 3 pairwise steps, so
+/// Sqrt/None genuinely checkpoint and recompute.
+fn grid_case() -> (&'static str, Vec<Vec<usize>>) {
+    (
+        "bsx,tsx,tu,uv->bvx|x",
+        vec![vec![2, 3, 9], vec![4, 3, 3], vec![4, 5], vec![5, 3]],
+    )
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|x| x.to_bits()).collect()
+}
+
+fn opts_for(kind: ConvKind, backend: Backend) -> PlanOptions {
+    PlanOptions {
+        training: true,
+        conv_kinds: Some(vec![kind]),
+        backend,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn workspace_tape_bit_identical_to_heap_tape_full_grid_100_reruns() {
+    // All four ConvKinds × three checkpoint policies × scalar/parallel
+    // backends × 100 re-runs against one long-lived workspace: output and
+    // every gradient must reproduce the heap tape bit-for-bit, every time.
+    let (expr, dims) = grid_case();
+    for kind in KINDS {
+        for backend in [Backend::Scalar, Backend::Parallel { threads: 2 }] {
+            let compiled =
+                Arc::new(compile_expr(expr, &dims, &opts_for(kind, backend)).unwrap());
+            let mut rng = Rng::new(81);
+            let ins: Vec<Tensor> = dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+            let refs: Vec<&Tensor> = ins.iter().collect();
+            let dout = Tensor::rand(compiled.out_shape(), -1.0, 1.0, &mut rng);
+            let ad = PathAutodiff::from_compiled(Arc::clone(&compiled));
+            let mut ws = TrainWorkspace::new();
+            let meter = MemoryMeter::new();
+            for policy in POLICIES {
+                let (want_y, want_g) = heap_forward_backward(&compiled, &refs, &dout, policy);
+                for rerun in 0..100 {
+                    let d = dout.clone();
+                    let (y, g) = ad
+                        .forward_backward(&refs, |_| d.clone(), policy, &mut ws, &meter)
+                        .unwrap();
+                    assert_eq!(
+                        bits(&y),
+                        bits(&want_y),
+                        "{kind:?} {backend:?} {policy:?} rerun {rerun}: output diverged"
+                    );
+                    for (i, (gi, wi)) in g.iter().zip(want_g.iter()).enumerate() {
+                        assert_eq!(
+                            bits(gi),
+                            bits(wi),
+                            "{kind:?} {backend:?} {policy:?} rerun {rerun}: grad {i} diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn workspace_tape_gradients_match_finite_differences_full_grid() {
+    // Central finite differences on L = Σ out ⊙ dout for a few probe
+    // coordinates per input, across every kind × policy × backend.
+    let (expr, dims) = grid_case();
+    for kind in KINDS {
+        for backend in [Backend::Scalar, Backend::Parallel { threads: 2 }] {
+            let opts = opts_for(kind, backend);
+            let compiled = Arc::new(compile_expr(expr, &dims, &opts).unwrap());
+            let mut rng = Rng::new(82);
+            let ins: Vec<Tensor> = dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+            let dout = Tensor::rand(compiled.out_shape(), -1.0, 1.0, &mut rng);
+            let ad = PathAutodiff::from_compiled(Arc::clone(&compiled));
+            let mut ws = TrainWorkspace::new();
+            let meter = MemoryMeter::new();
+
+            let loss = |ins: &[Tensor]| -> f32 {
+                let refs: Vec<&Tensor> = ins.iter().collect();
+                let mut fws = Workspace::new();
+                let o = compiled.run(&refs, &mut fws).unwrap();
+                o.data().iter().zip(dout.data()).map(|(a, b)| a * b).sum()
+            };
+
+            for policy in POLICIES {
+                let refs: Vec<&Tensor> = ins.iter().collect();
+                let d = dout.clone();
+                let (_y, grads) = ad
+                    .forward_backward(&refs, |_| d.clone(), policy, &mut ws, &meter)
+                    .unwrap();
+                let eps = 1e-2f32;
+                for input_idx in 0..ins.len() {
+                    let len = ins[input_idx].len();
+                    for k in [0usize, len / 2, len - 1] {
+                        let mut p = ins.clone();
+                        p[input_idx].data_mut()[k] += eps;
+                        let mut m = ins.clone();
+                        m[input_idx].data_mut()[k] -= eps;
+                        let fd = (loss(&p) - loss(&m)) / (2.0 * eps);
+                        let an = grads[input_idx].data()[k];
+                        assert!(
+                            (fd - an).abs() < 3e-2 * (1.0 + an.abs()),
+                            "{kind:?} {backend:?} {policy:?} input {input_idx} coord {k}: \
+                             fd={fd} analytic={an}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multiway_circular_conv_path_matches_heap_tape() {
+    // A CP-style expression with a multi-way circular conv mode: pairwise
+    // steps carry explicit wrap moduli, which the arena replay must honour
+    // exactly like the heap tape.
+    let expr = "bsh,rt,rs,rh->bth|h";
+    let dims = vec![vec![2, 2, 6], vec![3, 2], vec![3, 2], vec![3, 3]];
+    let opts = PlanOptions {
+        training: true,
+        ..Default::default()
+    };
+    let compiled = Arc::new(compile_expr(expr, &dims, &opts).unwrap());
+    let mut rng = Rng::new(83);
+    let ins: Vec<Tensor> = dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+    let refs: Vec<&Tensor> = ins.iter().collect();
+    let dout = Tensor::rand(compiled.out_shape(), -1.0, 1.0, &mut rng);
+    let ad = PathAutodiff::from_compiled(Arc::clone(&compiled));
+    let mut ws = TrainWorkspace::new();
+    let meter = MemoryMeter::new();
+    for policy in POLICIES {
+        let (want_y, want_g) = heap_forward_backward(&compiled, &refs, &dout, policy);
+        let d = dout.clone();
+        let (y, g) = ad
+            .forward_backward(&refs, |_| d.clone(), policy, &mut ws, &meter)
+            .unwrap();
+        assert_eq!(bits(&y), bits(&want_y), "{policy:?}: output diverged");
+        for (i, (gi, wi)) in g.iter().zip(want_g.iter()).enumerate() {
+            assert_eq!(bits(gi), bits(wi), "{policy:?}: grad {i} diverged");
+        }
+    }
+}
+
+#[test]
+fn one_workspace_serves_alternating_plans() {
+    // Alternate two different plans (different arena layouts, different
+    // scratch sizes) against one TrainWorkspace: results must stay
+    // bit-identical to each plan's heap reference — the arena only grows
+    // and carries no state between steps.
+    let (expr_a, dims_a) = grid_case();
+    let expr_b = "bsh,rt,rs,rh->bth|h";
+    let dims_b = vec![vec![2, 2, 6], vec![3, 2], vec![3, 2], vec![3, 3]];
+    let opts = PlanOptions {
+        training: true,
+        ..Default::default()
+    };
+    let ca = Arc::new(
+        compile_expr(
+            expr_a,
+            &dims_a,
+            &PlanOptions {
+                conv_kinds: Some(vec![ConvKind::Same]),
+                ..opts.clone()
+            },
+        )
+        .unwrap(),
+    );
+    let cb = Arc::new(compile_expr(expr_b, &dims_b, &opts).unwrap());
+    let mut rng = Rng::new(84);
+    let ins_a: Vec<Tensor> = dims_a.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+    let ins_b: Vec<Tensor> = dims_b.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+    let refs_a: Vec<&Tensor> = ins_a.iter().collect();
+    let refs_b: Vec<&Tensor> = ins_b.iter().collect();
+    let dout_a = Tensor::rand(ca.out_shape(), -1.0, 1.0, &mut rng);
+    let dout_b = Tensor::rand(cb.out_shape(), -1.0, 1.0, &mut rng);
+    let (want_ya, want_ga) = heap_forward_backward(&ca, &refs_a, &dout_a, CkptPolicy::Sqrt);
+    let (want_yb, want_gb) = heap_forward_backward(&cb, &refs_b, &dout_b, CkptPolicy::Sqrt);
+
+    let ad_a = PathAutodiff::from_compiled(Arc::clone(&ca));
+    let ad_b = PathAutodiff::from_compiled(Arc::clone(&cb));
+    let mut ws = TrainWorkspace::new();
+    let meter = MemoryMeter::new();
+    for _ in 0..10 {
+        let d = dout_a.clone();
+        let (y, g) = ad_a
+            .forward_backward(&refs_a, |_| d.clone(), CkptPolicy::Sqrt, &mut ws, &meter)
+            .unwrap();
+        assert_eq!(bits(&y), bits(&want_ya));
+        for (gi, wi) in g.iter().zip(want_ga.iter()) {
+            assert_eq!(bits(gi), bits(wi));
+        }
+        let d = dout_b.clone();
+        let (y, g) = ad_b
+            .forward_backward(&refs_b, |_| d.clone(), CkptPolicy::Sqrt, &mut ws, &meter)
+            .unwrap();
+        assert_eq!(bits(&y), bits(&want_yb));
+        for (gi, wi) in g.iter().zip(want_gb.iter()) {
+            assert_eq!(bits(gi), bits(wi));
+        }
+    }
+}
+
+#[test]
+fn into_variants_match_allocating_variants() {
+    // The allocation-free `_into` entry points must produce the same bits
+    // as the convenience wrappers.
+    let (expr, dims) = grid_case();
+    let opts = opts_for(ConvKind::Same, Backend::Scalar);
+    let compiled = Arc::new(compile_expr(expr, &dims, &opts).unwrap());
+    let mut rng = Rng::new(85);
+    let ins: Vec<Tensor> = dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+    let refs: Vec<&Tensor> = ins.iter().collect();
+    let dout = Tensor::rand(compiled.out_shape(), -1.0, 1.0, &mut rng);
+    let ad = PathAutodiff::from_compiled(Arc::clone(&compiled));
+    let meter = MemoryMeter::new();
+
+    let mut ws = TrainWorkspace::new();
+    let d = dout.clone();
+    let (want_y, want_g) = ad
+        .forward_backward(&refs, |_| d.clone(), CkptPolicy::Sqrt, &mut ws, &meter)
+        .unwrap();
+
+    let mut out = Tensor::zeros(compiled.out_shape());
+    let mut grads: Vec<Tensor> = dims.iter().map(|d| Tensor::zeros(d)).collect();
+    for _ in 0..5 {
+        let token = ad
+            .forward_with_tape_into(&refs, CkptPolicy::Sqrt, &mut ws, &mut out, &meter)
+            .unwrap();
+        ad.backward_into(&token, &dout, &mut ws, &mut grads, &meter)
+            .unwrap();
+        assert_eq!(bits(&out), bits(&want_y));
+        for (gi, wi) in grads.iter().zip(want_g.iter()) {
+            assert_eq!(bits(gi), bits(wi));
+        }
+    }
+}

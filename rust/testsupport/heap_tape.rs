@@ -1,0 +1,134 @@
+//! Heap-tape reference: the pre-workspace training algorithm (every tape
+//! value, recompute and cotangent individually heap-allocated), replayed
+//! over the same compiled plan through the public atom API. Shared —
+//! via `#[path]` inclusion — by `tests/train_parity.rs` (bit-parity
+//! property suite) and `benches/bench_hotpath.rs` (timing baseline +
+//! parity assertion), so there is exactly one definition of what "the old
+//! algorithm" is.
+
+use conv_einsum::autodiff::CkptPolicy;
+use conv_einsum::exec::CompiledPlan;
+use conv_einsum::Tensor;
+
+fn run_step(compiled: &CompiledPlan, k: usize, vals: &mut [Option<Tensor>]) {
+    let n = compiled.n_inputs();
+    let st = compiled.step(k);
+    let (l, r) = st.nodes();
+    let a = vals[l].as_ref().expect("lhs value live");
+    let b = vals[r].as_ref().expect("rhs value live");
+    let out = st
+        .atom()
+        .execute_with_kernel(st.kernel_tables(), a, b, compiled.exec_options());
+    vals[n + k] = Some(out);
+}
+
+fn needed_after(compiled: &CompiledPlan, node: usize, after: usize) -> bool {
+    (after..compiled.n_steps()).any(|k| {
+        let (l, r) = compiled.step(k).nodes();
+        l == node || r == node
+    })
+}
+
+fn recompute(compiled: &CompiledPlan, node: usize, vals: &mut Vec<Option<Tensor>>) {
+    let n = compiled.n_inputs();
+    let k = node - n;
+    let (l, r) = compiled.step(k).nodes();
+    for dep in [l, r] {
+        if vals[dep].is_none() {
+            recompute(compiled, dep, vals);
+        }
+    }
+    run_step(compiled, k, vals);
+}
+
+fn invert(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+/// The pre-refactor heap tape, step by step: stored forward under the
+/// policy's keep-set, then the backward with checkpoint-segment
+/// recomputes. The workspace tape must reproduce this bit-for-bit.
+pub fn heap_forward_backward(
+    compiled: &CompiledPlan,
+    inputs: &[&Tensor],
+    dout: &Tensor,
+    policy: CkptPolicy,
+) -> (Tensor, Vec<Tensor>) {
+    let n = compiled.n_inputs();
+    let ksteps = compiled.n_steps();
+    let root = n + ksteps - 1;
+    let keep: Vec<bool> = match policy {
+        CkptPolicy::StoreAll => vec![true; ksteps],
+        CkptPolicy::None => vec![false; ksteps],
+        CkptPolicy::Sqrt => {
+            let seg = (ksteps as f64).sqrt().ceil() as usize;
+            (0..ksteps).map(|k| seg != 0 && k % seg == seg - 1).collect()
+        }
+    };
+    // Stored forward.
+    let mut vals: Vec<Option<Tensor>> = vec![None; n + ksteps];
+    for (i, t) in inputs.iter().enumerate() {
+        vals[i] = Some((*t).clone());
+    }
+    for k in 0..ksteps {
+        run_step(compiled, k, &mut vals);
+        let (l, r) = compiled.step(k).nodes();
+        for node in [l, r] {
+            let is_input = node < n;
+            let is_kept = !is_input && keep[node - n];
+            if !is_input && !is_kept && !needed_after(compiled, node, k + 1) {
+                vals[node] = None;
+            }
+        }
+    }
+    for k in 0..ksteps {
+        let node = n + k;
+        if node != root && !keep[k] && vals[node].is_some() {
+            vals[node] = None;
+        }
+    }
+    let root_val = vals[root].clone().expect("root");
+    let output = match &compiled.plan().final_perm {
+        Some(p) => root_val.permute(p),
+        None => root_val.clone(),
+    };
+    // Backward with segment recomputes.
+    let droot = match &compiled.plan().final_perm {
+        Some(p) => dout.permute(&invert(p)),
+        None => dout.clone(),
+    };
+    let mut grads: Vec<Option<Tensor>> = vec![None; n + ksteps];
+    grads[root] = Some(droot);
+    for k in (0..ksteps).rev() {
+        let (l, r) = compiled.step(k).nodes();
+        for node in [l, r] {
+            if vals[node].is_none() {
+                recompute(compiled, node, &mut vals);
+            }
+        }
+        let st = compiled.step(k);
+        let dnode = grads[n + k].take().expect("cotangent for step output");
+        let a = vals[l].as_ref().unwrap();
+        let b = vals[r].as_ref().unwrap();
+        let (da, db) =
+            st.atom()
+                .vjp_with_kernel(st.kernel_tables(), a, b, &dnode, compiled.exec_options());
+        match &mut grads[l] {
+            Some(existing) => existing.add_assign(&da),
+            slot @ None => *slot = Some(da),
+        }
+        match &mut grads[r] {
+            Some(existing) => existing.add_assign(&db),
+            slot @ None => *slot = Some(db),
+        }
+        vals[n + k] = None;
+    }
+    let input_grads: Vec<Tensor> = (0..n)
+        .map(|i| grads[i].take().expect("every input gets a gradient"))
+        .collect();
+    (output, input_grads)
+}
