@@ -9,11 +9,14 @@
 //! backends), persistent-pool dispatch latency, small-atom and
 //! fine-grained-region throughput vs a scoped-spawn baseline plus
 //! allocations-per-replay on both backends (dumped to `BENCH_pool.json`),
-//! and coordinator request throughput with batching on vs off.
+//! and coordinator request throughput — infer / train / mixed traffic at
+//! 1/2/4 workers, adaptive batching vs the unbatched (`max_batch = 1`)
+//! baseline (dumped to `BENCH_coordinator.json`).
 //!
 //! With `CONV_EINSUM_BENCH_ASSERT_ONLY=1` only the zero-allocation
-//! assertions run (fast; used by the CI release-test job).
-use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
+//! assertions run (fast; used by the CI release-test job) — inference,
+//! single training steps, and coalesced training batches.
+use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff, TrainSegment};
 use conv_einsum::coordinator::{EvalService, ServiceConfig};
 use conv_einsum::einsum::{parse, SizedSpec};
 use conv_einsum::exec::{pairwise, pairwise_with};
@@ -28,8 +31,10 @@ use conv_einsum::{
     compile_expr, conv_einsum_with, Backend, ExecOptions, Tensor, TrainWorkspace, Workspace,
 };
 use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Heap-tape reference (shared with `tests/train_parity.rs`): the
 /// pre-workspace training algorithm, the baseline the workspace tape is
@@ -194,13 +199,90 @@ fn train_zero_alloc_assertions() {
     }
 }
 
+/// Coalesced-training zero-allocation assertions: a repeated **batched**
+/// train step (several segments replayed through one layout against one
+/// workspace — the coordinator's unified-scheduler hot path) must not
+/// allocate after warm-up, StoreAll and Sqrt, scalar and parallel.
+fn train_batch_zero_alloc_assertions() {
+    let mut rng = Rng::new(11);
+    let layer = build_layer(Decomp::Cp, 1, 16, 16, 3, 3, 0.5).unwrap();
+    let factors = layer.init_factors(&mut rng);
+    let n_seg = 4usize;
+    for backend in [Backend::Scalar, Backend::Parallel { threads: 2 }] {
+        let opts = PlanOptions {
+            training: true,
+            backend,
+            ..Default::default()
+        };
+        let xs: Vec<Tensor> = (0..n_seg)
+            .map(|_| Tensor::rand(&layer.input_shape(2, 12, 12), -1.0, 1.0, &mut rng))
+            .collect();
+        let dims: Vec<Vec<usize>> = std::iter::once(xs[0].shape().to_vec())
+            .chain(factors.iter().map(|f| f.shape().to_vec()))
+            .collect();
+        let compiled = Arc::new(compile_expr(&layer.expr, &dims, &opts).unwrap());
+        let ad = PathAutodiff::from_compiled(Arc::clone(&compiled));
+        let douts: Vec<Tensor> = (0..n_seg)
+            .map(|_| Tensor::full(compiled.out_shape(), 1.0))
+            .collect();
+        let in_refs: Vec<Vec<&Tensor>> = xs
+            .iter()
+            .map(|x| {
+                let mut v: Vec<&Tensor> = vec![x];
+                v.extend(factors.iter());
+                v
+            })
+            .collect();
+        let mut outs: Vec<Tensor> = (0..n_seg)
+            .map(|_| Tensor::zeros(compiled.out_shape()))
+            .collect();
+        let mut grads: Vec<Vec<Tensor>> = (0..n_seg)
+            .map(|_| dims.iter().map(|d| Tensor::zeros(d)).collect())
+            .collect();
+        let meter = MemoryMeter::new();
+        let mut ws = TrainWorkspace::new();
+        for policy in [CkptPolicy::StoreAll, CkptPolicy::Sqrt] {
+            let mut segs: Vec<TrainSegment> = in_refs
+                .iter()
+                .zip(douts.iter())
+                .zip(outs.iter_mut())
+                .zip(grads.iter_mut())
+                .map(|(((r, d), o), g)| TrainSegment {
+                    inputs: r.as_slice(),
+                    dout: d,
+                    out: o,
+                    grads: g.as_mut_slice(),
+                })
+                .collect();
+            for _ in 0..3 {
+                ad.train_step_batch_into(&mut segs, policy, &mut ws, &meter)
+                    .unwrap();
+            }
+            let a0 = allocs();
+            for _ in 0..20 {
+                ad.train_step_batch_into(&mut segs, policy, &mut ws, &meter)
+                    .unwrap();
+            }
+            let steady = allocs() - a0;
+            assert_eq!(
+                steady, 0,
+                "batched train steady state must not allocate \
+                 ({backend:?} {policy:?}: {steady} allocs across 20 batched steps)"
+            );
+            println!("batched-train zero-alloc OK: {backend:?} {policy:?} ({n_seg} segments)");
+        }
+    }
+}
+
 fn main() {
     // CI fast path: only the zero-allocation assertions (inference +
-    // training), then exit — used by the release-test job.
+    // training + coalesced training batches), then exit — used by the
+    // release-test job.
     if std::env::var("CONV_EINSUM_BENCH_ASSERT_ONLY").is_ok() {
         inference_zero_alloc_assertions();
         train_zero_alloc_assertions();
-        println!("zero-allocation assertions passed (inference + training)");
+        train_batch_zero_alloc_assertions();
+        println!("zero-allocation assertions passed (inference + training + batched training)");
         return;
     }
 
@@ -498,8 +580,10 @@ fn main() {
         "train-step heap allocations: heap tape {heap_allocs} per step, \
          workspace tape {ws_allocs} across 20 steps"
     );
-    // Full assertion grid: StoreAll and Sqrt on both backends.
+    // Full assertion grid: StoreAll and Sqrt on both backends, single and
+    // coalesced-batch steps.
     train_zero_alloc_assertions();
+    train_batch_zero_alloc_assertions();
 
     let train_report = Json::obj(vec![
         ("bench", Json::str("train_workspace")),
@@ -712,34 +796,133 @@ fn main() {
     std::fs::write("BENCH_pool.json", pool_report.encode_pretty()).ok();
     println!("wrote BENCH_pool.json");
 
-    // coordinator throughput, batching on vs off
-    println!();
-    for max_batch in [1usize, 8] {
-        let layer = build_layer(Decomp::Cp, 1, 16, 8, 3, 3, 0.5).unwrap();
-        let factors = layer.init_factors(&mut rng);
-        let service = EvalService::start(
-            ServiceConfig { max_batch, workers: 2, ..Default::default() },
-            vec![("cp".into(), layer.expr.clone(), factors)],
-        )
-        .unwrap();
-        let h = service.handle();
-        let n_req = 64;
-        let t0 = std::time::Instant::now();
-        let rxs: Vec<_> = (0..n_req)
-            .map(|_| {
-                let x = Tensor::rand(&[1, 8, 16, 16], -1.0, 1.0, &mut rng);
-                h.submit("cp", x).unwrap()
-            })
-            .collect();
-        for rx in rxs {
+    // ---- coordinator throughput: batched vs unbatched, infer/train mixes --
+    println!("\n== coordinator throughput: unified batching scheduler ==");
+    let clayer = build_layer(Decomp::Cp, 1, 16, 8, 3, 3, 0.5).unwrap();
+    let cfactors = clayer.init_factors(&mut rng);
+    let x_shape = clayer.input_shape(1, 16, 16);
+    let cdims: Vec<Vec<usize>> = std::iter::once(x_shape.clone())
+        .chain(cfactors.iter().map(|f| f.shape().to_vec()))
+        .collect();
+    let train_out_shape = compile_expr(
+        &clayer.expr,
+        &cdims,
+        &PlanOptions {
+            training: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .out_shape()
+    .to_vec();
+    let mut coord = BTreeMap::new();
+    coord.insert("bench".to_string(), Json::str("coordinator_batching"));
+    coord.insert("n_requests".to_string(), Json::num(48.0));
+    for workers in [1usize, 2, 4] {
+        for mode in ["infer", "train", "mixed"] {
+            let batched = coordinator_rps(
+                workers,
+                8,
+                mode,
+                &clayer.expr,
+                &cfactors,
+                &x_shape,
+                &train_out_shape,
+                &mut rng,
+            );
+            let unbatched = coordinator_rps(
+                workers,
+                1,
+                mode,
+                &clayer.expr,
+                &cfactors,
+                &x_shape,
+                &train_out_shape,
+                &mut rng,
+            );
+            println!("  -> {mode} w={workers}: batched {:.2}x vs unbatched", batched / unbatched);
+            coord.insert(format!("{mode}_w{workers}_batched_rps"), Json::num(batched));
+            coord.insert(format!("{mode}_w{workers}_unbatched_rps"), Json::num(unbatched));
+            coord.insert(format!("{mode}_w{workers}_speedup"), Json::num(batched / unbatched));
+        }
+    }
+    std::fs::write("BENCH_coordinator.json", Json::Obj(coord).encode_pretty()).ok();
+    println!("wrote BENCH_coordinator.json");
+}
+
+/// Drive one coordinator configuration with a burst of `infer` / `train` /
+/// `mixed` traffic and return requests per second. `max_batch = 1` is the
+/// unbatched baseline (the adaptive controller is bounded to singles);
+/// `max_batch = 8` lets the pool-aware controller coalesce under load.
+#[allow(clippy::too_many_arguments)]
+fn coordinator_rps(
+    workers: usize,
+    max_batch: usize,
+    mode: &str,
+    layer_expr: &str,
+    factors: &[Tensor],
+    x_shape: &[usize],
+    train_out_shape: &[usize],
+    rng: &mut Rng,
+) -> f64 {
+    let service = EvalService::start(
+        ServiceConfig {
+            workers,
+            max_batch,
+            batch_timeout: Duration::from_millis(2),
+            ..Default::default()
+        },
+        vec![("cp".into(), layer_expr.to_string(), factors.to_vec())],
+    )
+    .unwrap();
+    let h = service.handle();
+    let n_req = 48usize;
+    let xs: Vec<Tensor> = (0..n_req)
+        .map(|_| Tensor::rand(x_shape, -1.0, 1.0, rng))
+        .collect();
+    let dout = Tensor::full(train_out_shape, 1.0);
+    let burst = || {
+        let mut eval_rx = Vec::new();
+        let mut train_rx = Vec::new();
+        for (i, x) in xs.iter().enumerate() {
+            let train = match mode {
+                "train" => true,
+                "infer" => false,
+                _ => i % 2 == 1,
+            };
+            if train {
+                let mut tensors = vec![x.clone()];
+                tensors.extend(factors.iter().cloned());
+                train_rx.push(
+                    h.submit_train(layer_expr, tensors, dout.clone(), CkptPolicy::StoreAll)
+                        .unwrap(),
+                );
+            } else {
+                eval_rx.push(h.submit("cp", x.clone()).unwrap());
+            }
+        }
+        for rx in eval_rx {
             rx.recv().unwrap().unwrap();
         }
-        let dt = t0.elapsed();
-        println!(
-            "coordinator max_batch={max_batch}: {n_req} req in {dt:?} ({:.0} req/s) | {}",
-            n_req as f64 / dt.as_secs_f64(),
-            h.metrics().report()
-        );
-        service.shutdown();
-    }
+        for rx in train_rx {
+            rx.recv().unwrap().unwrap();
+        }
+    };
+    // Untimed warm-up burst: populate the per-geometry layer plan caches and
+    // the shared training plan cache, so the timed window measures steady-
+    // state serving, not first-time planning+compilation (which the batched
+    // config would otherwise pay once per coalesced batch geometry while the
+    // unbatched baseline pays it only for batch size 1).
+    burst();
+    let t0 = std::time::Instant::now();
+    burst();
+    let dt = t0.elapsed();
+    let rps = n_req as f64 / dt.as_secs_f64();
+    println!(
+        "coordinator {mode:>5} w={workers} max_batch={max_batch}: {n_req} req in {dt:?} \
+         ({rps:.0} req/s) | {}",
+        h.metrics().report()
+    );
+    service.shutdown();
+    rps
 }

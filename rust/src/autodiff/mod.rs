@@ -35,6 +35,18 @@
 //! workspace epoch and invalidates outstanding tapes — their backward
 //! fails with a clear error instead of reading clobbered arena ranges.
 //!
+//! # Batched training steps
+//!
+//! The coordinator coalesces same-expression training requests the way it
+//! coalesces inference requests; [`PathAutodiff::train_step_batch_into`]
+//! is the engine entry point: a batch of [`TrainSegment`]s replays through
+//! one cached [`crate::exec::TrainLayout`] against one workspace, segment
+//! by segment in slice order (each segment's tape is consumed before the
+//! next is laid, so batch epochs advance per segment and stale tokens are
+//! rejected). Gradients are **bit-identical** to individually submitted
+//! steps — input gradients split along the batch mode, weight gradients
+//! accumulated per segment, never across segments.
+//!
 //! Each step replays with the compiled plan's hoisted execution options,
 //! so under a parallel backend both the taped forward and the backward VJP
 //! fan out over the **persistent worker pool** ([`crate::parallel::Pool`])
@@ -61,8 +73,9 @@ use anyhow::{anyhow, Result};
 use std::cell::RefCell;
 use std::sync::Arc;
 
-/// Checkpointing policy for the backward pass.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Checkpointing policy for the backward pass. (`Hash` so the coordinator's
+/// batching scheduler can group pending training requests by policy.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CkptPolicy {
     /// Keep every intermediate (PyTorch autograd default; "naive w/o ckpt").
     StoreAll,
@@ -394,6 +407,67 @@ impl PathAutodiff {
         meter.free(layout.arena_bytes());
         Ok(())
     }
+
+    /// Run a **coalesced batch** of training steps — one per
+    /// [`TrainSegment`] — through this plan's single cached
+    /// [`crate::exec::TrainLayout`] against one workspace. This is the
+    /// engine half of the coordinator's unified batching scheduler: a batch
+    /// of same-expression, same-shape training requests (conceptually one
+    /// request concatenated along the batch mode) replays segment by
+    /// segment in slice order, each segment's tape living in — and being
+    /// consumed from — the shared arena before the next is laid.
+    ///
+    /// # Gradient contract (segment accumulation order)
+    ///
+    /// Segments are executed strictly in slice order, and every segment's
+    /// gradients — the batch-mode slice of ∂L/∂x *and* its own weight
+    /// gradients — are accumulated entirely within that segment's replay,
+    /// never summed across segments. Batched and individually submitted
+    /// requests therefore produce **bit-identical** outputs, input
+    /// gradients and per-segment weight gradients
+    /// (`tests/batch_train_parity.rs` asserts this across ConvKinds ×
+    /// backends × batch sizes), and the steady state performs **zero heap
+    /// allocations** on both backends (`bench_hotpath` asserts it).
+    ///
+    /// Every segment bumps the workspace epoch (forward) and consumes its
+    /// tape (backward), so any [`TapeToken`] issued before the batch — or
+    /// captured mid-batch — is invalid afterwards: a stale backward errors
+    /// instead of reading a later segment's arena state.
+    pub fn train_step_batch_into(
+        &self,
+        segments: &mut [TrainSegment<'_>],
+        policy: CkptPolicy,
+        ws: &mut TrainWorkspace,
+        meter: &MemoryMeter,
+    ) -> Result<()> {
+        let layout = self.compiled.train_layout(policy);
+        for seg in segments.iter_mut() {
+            self.compiled
+                .train_step(&layout, seg.inputs, seg.dout, ws, seg.out, seg.grads)?;
+            // One balanced peak record per segment: the batch's peak equals
+            // a single step's (segments share the arena serially).
+            meter.alloc(layout.arena_bytes());
+            meter.free(layout.arena_bytes());
+        }
+        Ok(())
+    }
+}
+
+/// One request of a coalesced training batch
+/// ([`PathAutodiff::train_step_batch_into`]): the segment's inputs and
+/// output cotangent, plus caller-held destinations for its forward output
+/// and per-input gradients (all in natural shapes; contents overwritten).
+/// Holding the destinations across calls keeps the repeated batched step
+/// allocation-free.
+pub struct TrainSegment<'a> {
+    /// Inputs of this segment, matching the compiled plan's shapes.
+    pub inputs: &'a [&'a Tensor],
+    /// Output cotangent seeding this segment's backward.
+    pub dout: &'a Tensor,
+    /// Receives the forward output (shape [`CompiledPlan::out_shape`]).
+    pub out: &'a mut Tensor,
+    /// Receives ∂L/∂input for every input of this segment.
+    pub grads: &'a mut [Tensor],
 }
 
 #[cfg(test)]

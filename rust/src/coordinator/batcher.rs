@@ -1,0 +1,696 @@
+//! The unified batching scheduler: one queueing/grouping/flushing engine
+//! for **both** request kinds the coordinator serves.
+//!
+//! Inference evals and training steps of the same expression are the same
+//! einsum family differing only in the batch-carrying operand, so they
+//! share one scheduler: pending requests are keyed by *compatibility
+//! group* — `(layer, input shape)` for inference, `(expression, input
+//! shapes, checkpoint policy)` for training — and each group batches
+//! independently. Interleaved traffic of different shapes therefore never
+//! starves batch formation (the pre-unification router flushed the whole
+//! partial batch whenever an incompatible shape arrived, so an
+//! alternating-shape stream degenerated to batch size 1).
+//!
+//! # Adaptive, pool-aware batch sizing
+//!
+//! How long to hold a partial batch is a latency/throughput trade the
+//! right answer to which depends on whether anything else is running. The
+//! [`AdaptiveController`] derives both limits from live utilization —
+//! the fraction of coordinator workers busy
+//! ([`ServiceMetrics::inflight`]) combined with the executor pool's
+//! activity ([`crate::parallel::Pool::utilization`]):
+//!
+//! * **idle** (utilization ≈ 0): flush early and small — a lone request
+//!   dispatches immediately, batch size 1, zero added latency;
+//! * **saturated** (utilization ≈ 1): hold up to the configured timeout
+//!   and coalesce up to the configured maximum — workers are busy anyway,
+//!   so queued requests amortize plan lookup and dispatch.
+//!
+//! [`crate::coordinator::ServiceConfig::max_batch`] and
+//! [`crate::coordinator::ServiceConfig::batch_timeout`] are **bounds** on
+//! the controller, not fixed operating points.
+//!
+//! # Flushing and dispatch
+//!
+//! A group flushes when it reaches the controller's current target size
+//! (at push) or when its oldest request has waited the controller's
+//! current hold time (at the router's deadline tick); flushed groups are
+//! split into chunks of at most the configured `max_batch`. [`dispatch`]
+//! turns a flushed group into worker messages: inference batches get their
+//! compiled plan here (per-layer LRU plan cache, keyed by total batch ×
+//! spatial size), training batches carry expression + policy and compile
+//! through the workers' shared [`crate::exec::PlanCache`].
+
+use super::{ServiceConfig, ServiceMetrics, WorkItem, WorkMsg};
+use crate::autodiff::CkptPolicy;
+use crate::einsum::{parse, SizedSpec};
+use crate::exec::{Backend, CompiledPlan};
+use crate::planner::{plan_with, PlanOptions, Strategy};
+use crate::tensor::Tensor;
+use crate::util::lru::LruCache;
+use anyhow::{anyhow, Result};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Bound on each layer's per-geometry compiled-plan cache: enough for a
+/// realistic batch/spatial mix per layer while keeping client-controlled
+/// geometry churn from growing resident memory without limit (the shared
+/// ad-hoc [`crate::exec::PlanCache`] is bounded separately).
+pub const LAYER_PLAN_CACHE_CAPACITY: usize = 16;
+
+/// A registered tensorial layer: expression + factor weights.
+pub(crate) struct LayerEntry {
+    pub(crate) expr: String,
+    pub(crate) factors: Vec<Tensor>,
+    /// Per-(batch, height, width) compiled-plan cache, LRU-bounded at
+    /// [`LAYER_PLAN_CACHE_CAPACITY`]; each entry carries its hoisted
+    /// `ExecOptions`, so every replay uses one consistent backend.
+    pub(crate) plans: LruCache<(usize, usize, usize), Arc<CompiledPlan>>,
+}
+
+/// One in-flight inference request.
+pub(crate) struct Pending {
+    pub(crate) x: Tensor,
+    pub(crate) respond: SyncSender<Result<Tensor>>,
+    pub(crate) enqueued: Instant,
+}
+
+/// One in-flight training-step request.
+pub(crate) struct TrainPending {
+    pub(crate) tensors: Vec<Tensor>,
+    pub(crate) dout: Tensor,
+    pub(crate) policy: CkptPolicy,
+    pub(crate) respond: SyncSender<Result<(Tensor, Vec<Tensor>)>>,
+    pub(crate) enqueued: Instant,
+}
+
+/// Maps live utilization to batch-formation limits, bounded by the service
+/// config (see the module docs for the policy).
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    max_batch: usize,
+    max_hold: Duration,
+}
+
+impl AdaptiveController {
+    /// A controller bounded by `max_batch` requests per batch (clamped to
+    /// ≥ 1) and `max_hold` of added queueing latency.
+    pub fn new(max_batch: usize, max_hold: Duration) -> AdaptiveController {
+        AdaptiveController {
+            max_batch: max_batch.max(1),
+            max_hold,
+        }
+    }
+
+    /// Requests a group should accumulate before flushing, at the given
+    /// utilization (clamped to `[0, 1]`): 1 when idle, rising linearly to
+    /// the configured maximum when saturated.
+    pub fn target_batch(&self, utilization: f64) -> usize {
+        let u = utilization.clamp(0.0, 1.0);
+        1 + ((self.max_batch - 1) as f64 * u).round() as usize
+    }
+
+    /// How long a partial group may hold its oldest request before a
+    /// deadline flush, at the given utilization: zero when idle (flush
+    /// immediately), rising linearly to the configured timeout.
+    pub fn hold(&self, utilization: f64) -> Duration {
+        self.max_hold.mul_f64(utilization.clamp(0.0, 1.0))
+    }
+
+    /// The hard per-batch bound (the config's `max_batch`).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+}
+
+/// Shape-compatibility group key: requests in one group can execute as one
+/// batched replay.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum GroupKey {
+    Eval {
+        layer: String,
+        shape: Vec<usize>,
+    },
+    Train {
+        expr: String,
+        dims: Vec<Vec<usize>>,
+        policy: CkptPolicy,
+    },
+}
+
+enum GroupItems {
+    Eval(Vec<Pending>),
+    Train(Vec<TrainPending>),
+}
+
+impl GroupItems {
+    fn len(&self) -> usize {
+        match self {
+            GroupItems::Eval(v) => v.len(),
+            GroupItems::Train(v) => v.len(),
+        }
+    }
+}
+
+struct PendingGroup {
+    items: GroupItems,
+    /// Enqueue time of the oldest pending request (deadline anchor).
+    oldest: Instant,
+}
+
+/// A flushed, shape-compatible batch ready for dispatch.
+pub(crate) enum ReadyBatch {
+    Eval {
+        layer: String,
+        items: Vec<Pending>,
+    },
+    Train {
+        expr: String,
+        policy: CkptPolicy,
+        items: Vec<TrainPending>,
+    },
+}
+
+impl ReadyBatch {
+    fn len(&self) -> usize {
+        match self {
+            ReadyBatch::Eval { items, .. } => items.len(),
+            ReadyBatch::Train { items, .. } => items.len(),
+        }
+    }
+}
+
+/// The scheduler state: per-group pending queues plus the adaptive
+/// controller. Owned by the router thread; not shared.
+pub(crate) struct Batcher {
+    groups: HashMap<GroupKey, PendingGroup>,
+    controller: AdaptiveController,
+}
+
+impl Batcher {
+    pub(crate) fn new(controller: AdaptiveController) -> Batcher {
+        Batcher {
+            groups: HashMap::new(),
+            controller,
+        }
+    }
+
+    /// Queue an inference request; returns a batch if its group reached the
+    /// controller's current target size. One map access per request — the
+    /// router serializes every request through this path.
+    pub(crate) fn push_eval(
+        &mut self,
+        layer: &str,
+        p: Pending,
+        utilization: f64,
+    ) -> Option<ReadyBatch> {
+        let target = self.controller.target_batch(utilization);
+        let key = GroupKey::Eval {
+            layer: layer.to_string(),
+            shape: p.x.shape().to_vec(),
+        };
+        match self.groups.entry(key) {
+            Entry::Vacant(slot) => {
+                if target <= 1 {
+                    // Idle service: flush the lone request without touching
+                    // the map at all.
+                    let GroupKey::Eval { layer, .. } = slot.into_key() else {
+                        unreachable!("eval push built an eval key")
+                    };
+                    return Some(ReadyBatch::Eval {
+                        layer,
+                        items: vec![p],
+                    });
+                }
+                let oldest = p.enqueued;
+                slot.insert(PendingGroup {
+                    items: GroupItems::Eval(vec![p]),
+                    oldest,
+                });
+                None
+            }
+            Entry::Occupied(mut e) => {
+                match &mut e.get_mut().items {
+                    GroupItems::Eval(v) => v.push(p),
+                    GroupItems::Train(_) => unreachable!("eval key holds eval items"),
+                }
+                if e.get().items.len() >= target {
+                    let (key, group) = e.remove_entry();
+                    Some(ready(key, group.items))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Queue a training-step request; returns a batch if its group reached
+    /// the controller's current target size.
+    pub(crate) fn push_train(
+        &mut self,
+        expr: &str,
+        p: TrainPending,
+        utilization: f64,
+    ) -> Option<ReadyBatch> {
+        let target = self.controller.target_batch(utilization);
+        let key = GroupKey::Train {
+            expr: expr.to_string(),
+            dims: p.tensors.iter().map(|t| t.shape().to_vec()).collect(),
+            policy: p.policy,
+        };
+        match self.groups.entry(key) {
+            Entry::Vacant(slot) => {
+                if target <= 1 {
+                    let GroupKey::Train { expr, policy, .. } = slot.into_key() else {
+                        unreachable!("train push built a train key")
+                    };
+                    return Some(ReadyBatch::Train {
+                        expr,
+                        policy,
+                        items: vec![p],
+                    });
+                }
+                let oldest = p.enqueued;
+                slot.insert(PendingGroup {
+                    items: GroupItems::Train(vec![p]),
+                    oldest,
+                });
+                None
+            }
+            Entry::Occupied(mut e) => {
+                match &mut e.get_mut().items {
+                    GroupItems::Train(v) => v.push(p),
+                    GroupItems::Eval(_) => unreachable!("train key holds train items"),
+                }
+                if e.get().items.len() >= target {
+                    let (key, group) = e.remove_entry();
+                    Some(ready(key, group.items))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    fn take(&mut self, key: &GroupKey) -> Option<ReadyBatch> {
+        self.groups
+            .remove_entry(key)
+            .map(|(k, g)| ready(k, g.items))
+    }
+
+    /// Flush every group whose oldest request has waited at least the
+    /// controller's current hold time, split into chunks of at most the
+    /// configured `max_batch`.
+    pub(crate) fn due(&mut self, now: Instant, utilization: f64) -> Vec<ReadyBatch> {
+        let hold = self.controller.hold(utilization);
+        let due_keys: Vec<GroupKey> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| g.oldest + hold <= now)
+            .map(|(k, _)| k.clone())
+            .collect();
+        let mut out = Vec::new();
+        for key in due_keys {
+            if let Some(batch) = self.take(&key) {
+                split_ready(batch, self.controller.max_batch(), &mut out);
+            }
+        }
+        out
+    }
+
+    /// Flush everything pending (shutdown drain), chunked by `max_batch`.
+    pub(crate) fn drain(&mut self) -> Vec<ReadyBatch> {
+        let keys: Vec<GroupKey> = self.groups.keys().cloned().collect();
+        let mut out = Vec::new();
+        for key in keys {
+            if let Some(batch) = self.take(&key) {
+                split_ready(batch, self.controller.max_batch(), &mut out);
+            }
+        }
+        out
+    }
+
+    /// The earliest deadline across pending groups at the given
+    /// utilization, or `None` when nothing is pending.
+    pub(crate) fn next_deadline(&self, utilization: f64) -> Option<Instant> {
+        let hold = self.controller.hold(utilization);
+        self.groups.values().map(|g| g.oldest + hold).min()
+    }
+
+    /// Total requests currently pending across all groups.
+    pub(crate) fn pending_len(&self) -> usize {
+        self.groups.values().map(|g| g.items.len()).sum()
+    }
+}
+
+/// Rebuild a flushed group into a [`ReadyBatch`] from its (owned) key.
+fn ready(key: GroupKey, items: GroupItems) -> ReadyBatch {
+    match (key, items) {
+        (GroupKey::Eval { layer, .. }, GroupItems::Eval(items)) => {
+            ReadyBatch::Eval { layer, items }
+        }
+        (GroupKey::Train { expr, policy, .. }, GroupItems::Train(items)) => {
+            ReadyBatch::Train {
+                expr,
+                policy,
+                items,
+            }
+        }
+        _ => unreachable!("group kind always matches its key kind"),
+    }
+}
+
+/// Split `items` into consecutive chunks of at most `cap`, preserving
+/// submission order (the documented segment order of batched training).
+fn split_items<T>(mut items: Vec<T>, cap: usize) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    while items.len() > cap {
+        let rest = items.split_off(cap);
+        out.push(std::mem::replace(&mut items, rest));
+    }
+    out.push(items);
+    out
+}
+
+/// Defensive only: the push path flushes a group the moment it reaches the
+/// (≤ `cap`) target, so today's deadline/drain flushes never exceed `cap`
+/// — but the cap is the config's hard contract, so enforce it here rather
+/// than assume every future flush policy preserves the invariant.
+fn split_ready(batch: ReadyBatch, cap: usize, out: &mut Vec<ReadyBatch>) {
+    if batch.len() <= cap {
+        out.push(batch);
+        return;
+    }
+    match batch {
+        ReadyBatch::Eval { layer, items } => {
+            for chunk in split_items(items, cap) {
+                out.push(ReadyBatch::Eval {
+                    layer: layer.clone(),
+                    items: chunk,
+                });
+            }
+        }
+        ReadyBatch::Train {
+            expr,
+            policy,
+            items,
+        } => {
+            for chunk in split_items(items, cap) {
+                out.push(ReadyBatch::Train {
+                    expr: expr.clone(),
+                    policy,
+                    items: chunk,
+                });
+            }
+        }
+    }
+}
+
+/// Turn a flushed batch into a worker message: look up (or compile) the
+/// layer plan for inference batches, record batch/queue metrics, and send.
+/// Planning failures are routed back to every requester as errors.
+pub(crate) fn dispatch(
+    batch: ReadyBatch,
+    registry: &mut HashMap<String, LayerEntry>,
+    wtx: &SyncSender<WorkMsg>,
+    metrics: &ServiceMetrics,
+    config: &ServiceConfig,
+) {
+    match batch {
+        ReadyBatch::Eval { layer, items } => {
+            if items.is_empty() {
+                return;
+            }
+            let entry = registry.get_mut(&layer).expect("layer exists");
+            // All requests in a group share the single-example shape;
+            // derive the batched plan for the combined batch size. Reject
+            // inputs too low-rank to carry (batch, …, h, w) instead of
+            // panicking the router thread on the key computation below.
+            let bshape = items[0].x.shape().to_vec();
+            if bshape.len() < 2 {
+                for p in items {
+                    metrics.note_error();
+                    let _ = p.respond.send(Err(anyhow!(
+                        "layer input must have rank >= 2 (batch plus spatial modes), \
+                         got shape {bshape:?}"
+                    )));
+                }
+                return;
+            }
+            let total_b: usize = items.iter().map(|p| p.x.shape()[0]).sum();
+            let key = (total_b, bshape[bshape.len() - 2], bshape[bshape.len() - 1]);
+            let cached = entry.plans.get(&key).cloned();
+            let plan = match cached {
+                Some(p) => p,
+                None => {
+                    match plan_layer(entry, total_b, &bshape, config.strategy, config.backend) {
+                        Ok(p) => {
+                            let p = Arc::new(p);
+                            // LRU-bounded: geometry churn past the capacity
+                            // evicts the least-recently-served shape.
+                            entry.plans.insert(key, Arc::clone(&p));
+                            metrics.note_plan_miss();
+                            p
+                        }
+                        Err(e) => {
+                            let msg = format!("planning failed: {e}");
+                            for p in items {
+                                metrics.note_error();
+                                let _ = p.respond.send(Err(anyhow!("{msg}")));
+                            }
+                            return;
+                        }
+                    }
+                }
+            };
+            metrics.note_batch(items.len());
+            for p in &items {
+                metrics.note_queue_wait(p.enqueued.elapsed());
+            }
+            metrics.note_dispatched();
+            let _ = wtx.send(WorkMsg::Batch(WorkItem {
+                layer,
+                plan,
+                factors: Arc::new(entry.factors.clone()),
+                requests: items,
+            }));
+        }
+        ReadyBatch::Train {
+            expr,
+            policy,
+            items,
+        } => {
+            if items.is_empty() {
+                return;
+            }
+            metrics.note_train_batch(items.len());
+            for p in &items {
+                metrics.note_queue_wait(p.enqueued.elapsed());
+            }
+            metrics.note_dispatched();
+            let _ = wtx.send(WorkMsg::TrainBatch {
+                expr,
+                policy,
+                items,
+                strategy: config.strategy,
+                backend: config.backend,
+            });
+        }
+    }
+}
+
+pub(crate) fn plan_layer(
+    entry: &LayerEntry,
+    batch: usize,
+    single_shape: &[usize],
+    strategy: Strategy,
+    backend: Backend,
+) -> Result<CompiledPlan, String> {
+    let spec = parse(&entry.expr).map_err(|e| e.to_string())?;
+    let mut x_dims = single_shape.to_vec();
+    x_dims[0] = batch;
+    let mut dims = vec![x_dims];
+    dims.extend(entry.factors.iter().map(|f| f.shape().to_vec()));
+    let sized = SizedSpec::new(spec, dims)?;
+    let plan = plan_with(
+        &sized,
+        &PlanOptions {
+            strategy,
+            backend,
+            ..Default::default()
+        },
+    )?;
+    CompiledPlan::compile_arc(Arc::new(plan)).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn controller() -> AdaptiveController {
+        AdaptiveController::new(8, Duration::from_millis(10))
+    }
+
+    fn eval_pending(shape: &[usize]) -> Pending {
+        let (tx, _rx) = sync_channel(1);
+        // Keep the receiver alive is unnecessary here: scheduler tests never
+        // send responses.
+        Pending {
+            x: Tensor::zeros(shape),
+            respond: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    fn train_pending(dims: &[Vec<usize>]) -> TrainPending {
+        let (tx, _rx) = sync_channel(1);
+        TrainPending {
+            tensors: dims.iter().map(|d| Tensor::zeros(d)).collect(),
+            dout: Tensor::zeros(&[1]),
+            policy: CkptPolicy::StoreAll,
+            respond: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn controller_is_monotone_and_bounded_by_config() {
+        let c = controller();
+        assert_eq!(c.target_batch(0.0), 1, "idle -> flush singles");
+        assert_eq!(c.target_batch(1.0), 8, "saturated -> config bound");
+        assert_eq!(c.target_batch(5.0), 8, "clamped above 1.0");
+        assert_eq!(c.hold(0.0), Duration::ZERO, "idle -> no added latency");
+        assert_eq!(c.hold(1.0), Duration::from_millis(10));
+        let mut last_b = 0usize;
+        let mut last_h = Duration::ZERO;
+        for step in 0..=10 {
+            let u = step as f64 / 10.0;
+            let b = c.target_batch(u);
+            let h = c.hold(u);
+            assert!(b >= last_b && b >= 1 && b <= 8, "target monotone in [1, max]");
+            assert!(h >= last_h && h <= Duration::from_millis(10), "hold monotone bounded");
+            last_b = b;
+            last_h = h;
+        }
+    }
+
+    #[test]
+    fn idle_utilization_flushes_immediately() {
+        let mut b = Batcher::new(controller());
+        let flushed = b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 0.0);
+        assert!(flushed.is_some(), "idle service must not queue a lone request");
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn saturated_utilization_holds_until_target() {
+        let mut b = Batcher::new(controller());
+        for i in 0..7 {
+            assert!(
+                b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0).is_none(),
+                "request {i} must queue under saturation"
+            );
+        }
+        let batch = b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0);
+        match batch {
+            Some(ReadyBatch::Eval { items, .. }) => assert_eq!(items.len(), 8),
+            _ => panic!("8th request must flush a full batch"),
+        }
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn interleaved_shapes_batch_independently() {
+        // The starvation fix: alternating shapes (and kinds) accumulate in
+        // separate groups instead of flushing each other out.
+        let mut b = Batcher::new(controller());
+        for _ in 0..3 {
+            assert!(b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0).is_none());
+            assert!(b.push_eval("l", eval_pending(&[1, 3, 6, 6]), 1.0).is_none());
+            assert!(b
+                .push_train("ij,jk->ik", train_pending(&[vec![2, 3], vec![3, 4]]), 1.0)
+                .is_none());
+        }
+        assert_eq!(b.pending_len(), 9, "three independent groups of three");
+        // Each group completes to its target independently.
+        for _ in 0..4 {
+            assert!(b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0).is_none());
+        }
+        let batch = b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0);
+        match batch {
+            Some(ReadyBatch::Eval { items, .. }) => {
+                assert_eq!(items.len(), 8);
+                assert!(items.iter().all(|p| p.x.shape() == &[1, 3, 4, 4]));
+            }
+            _ => panic!("shape-[4,4] group must flush alone"),
+        }
+        assert_eq!(b.pending_len(), 6, "other groups untouched");
+    }
+
+    #[test]
+    fn deadline_flush_respects_hold_and_caps_chunks() {
+        // A hold long enough that scheduler pauses cannot make it elapse.
+        let mut b = Batcher::new(AdaptiveController::new(4, Duration::from_secs(30)));
+        for _ in 0..10 {
+            let _ = b.push_train("ij,jk->ik", train_pending(&[vec![2, 3], vec![3, 4]]), 1.0);
+        }
+        // Group flushed once at 4+4; 2 remain pending.
+        assert_eq!(b.pending_len(), 2);
+        // Not yet due under full hold.
+        assert!(b.due(Instant::now(), 1.0).is_empty());
+        // Due once the hold elapses (or immediately at utilization 0).
+        let batches = b.due(Instant::now(), 0.0);
+        assert_eq!(batches.len(), 1);
+        match &batches[0] {
+            ReadyBatch::Train { items, policy, .. } => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(*policy, CkptPolicy::StoreAll);
+            }
+            _ => panic!("train batch expected"),
+        }
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn drain_chunks_by_config_bound() {
+        let mut b = Batcher::new(AdaptiveController::new(4, Duration::from_millis(5)));
+        for _ in 0..9 {
+            // Utilization above 1 clamps; nothing flushes below 4... but the
+            // 4th and 8th pushes do. Use a fresh group each time via shapes?
+            // Simpler: push with utilization that never triggers (cap 4
+            // reached at pushes 4 and 8), so drain sees the remainder plus
+            // verify chunking on a long tail.
+            let _ = b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0);
+        }
+        // pushes 4 and 8 flushed; one request remains.
+        assert_eq!(b.pending_len(), 1);
+        let drained = b.drain();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].len(), 1);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn split_items_preserves_order() {
+        let chunks = split_items((0..10).collect::<Vec<_>>(), 4);
+        assert_eq!(chunks, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]);
+        let whole = split_items(vec![1, 2], 4);
+        assert_eq!(whole, vec![vec![1, 2]]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_group() {
+        let mut b = Batcher::new(controller());
+        assert!(b.next_deadline(1.0).is_none());
+        let _ = b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0);
+        let d1 = b.next_deadline(1.0).expect("one group pending");
+        std::thread::sleep(Duration::from_millis(2));
+        let _ = b.push_eval("l", eval_pending(&[1, 3, 6, 6]), 1.0);
+        let d2 = b.next_deadline(1.0).expect("two groups pending");
+        assert_eq!(d1, d2, "deadline anchored to the oldest request");
+    }
+}

@@ -1,28 +1,77 @@
-//! Service metrics: atomic counters + latency histograms, with cheap
-//! snapshots for reporting.
+//! Service metrics: atomic counters, a batch-size histogram, and latency
+//! histograms (end-to-end, queue wait, execution), with cheap snapshots
+//! for reporting. The in-flight gauge doubles as the utilization signal
+//! the adaptive batching controller reads.
 
 use crate::util::timing::LatencyHisto;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Batch-size histogram buckets: index = exact batch size for sizes
+/// `1..BATCH_SIZE_BUCKETS-1`, with the last bucket counting everything at
+/// or above it (index 0 is unused — batches have at least one request).
+pub const BATCH_SIZE_BUCKETS: usize = 33;
+
 /// Shared metrics for the evaluation service.
-#[derive(Default)]
 pub struct ServiceMetrics {
     submitted: AtomicU64,
+    infer_submitted: AtomicU64,
+    train_submitted: AtomicU64,
     completed: AtomicU64,
     errors: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
+    train_batches: AtomicU64,
+    train_batched_requests: AtomicU64,
     plan_misses: AtomicU64,
     queue_depth: AtomicUsize,
+    /// Work messages dispatched to workers and not yet finished — the
+    /// coordinator half of the utilization signal driving adaptive batch
+    /// sizing (the other half is [`crate::parallel::Pool::utilization`]).
+    inflight: AtomicUsize,
+    /// Sizes of every flushed batch (inference and training alike).
+    batch_sizes: [AtomicU64; BATCH_SIZE_BUCKETS],
     latency: Mutex<LatencyHisto>,
+    /// Router-queue residency per request: enqueue → dispatch to a worker.
+    queue_wait: Mutex<LatencyHisto>,
     exec_time: Mutex<LatencyHisto>,
 }
 
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        ServiceMetrics {
+            submitted: AtomicU64::new(0),
+            infer_submitted: AtomicU64::new(0),
+            train_submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            train_batches: AtomicU64::new(0),
+            train_batched_requests: AtomicU64::new(0),
+            plan_misses: AtomicU64::new(0),
+            queue_depth: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            batch_sizes: std::array::from_fn(|_| AtomicU64::new(0)),
+            latency: Mutex::new(LatencyHisto::default()),
+            queue_wait: Mutex::new(LatencyHisto::default()),
+            exec_time: Mutex::new(LatencyHisto::default()),
+        }
+    }
+}
+
 impl ServiceMetrics {
-    pub fn note_submit(&self) {
+    /// An inference request (layer eval or ad-hoc expression) entered.
+    pub fn note_infer_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.infer_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A training-step request entered.
+    pub fn note_train_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.train_submitted.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn note_done(&self, latency: Duration) {
@@ -34,10 +83,30 @@ impl ServiceMetrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    fn note_batch_size(&self, size: usize) {
+        let bucket = size.min(BATCH_SIZE_BUCKETS - 1);
+        self.batch_sizes[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An inference batch of `size` requests was flushed to a worker.
     pub fn note_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests
             .fetch_add(size as u64, Ordering::Relaxed);
+        self.note_batch_size(size);
+    }
+
+    /// A training batch of `size` requests was flushed to a worker.
+    pub fn note_train_batch(&self, size: usize) {
+        self.train_batches.fetch_add(1, Ordering::Relaxed);
+        self.train_batched_requests
+            .fetch_add(size as u64, Ordering::Relaxed);
+        self.note_batch_size(size);
+    }
+
+    /// Record one request's router-queue residency (enqueue → dispatch).
+    pub fn note_queue_wait(&self, d: Duration) {
+        self.queue_wait.lock().unwrap().record(d);
     }
 
     pub fn note_plan_miss(&self) {
@@ -52,12 +121,32 @@ impl ServiceMetrics {
         self.queue_depth.store(depth, Ordering::Relaxed);
     }
 
+    /// A work message left the router for the worker channel.
+    pub fn note_dispatched(&self) {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker finished a work message (paired with
+    /// [`ServiceMetrics::note_dispatched`]).
+    pub fn note_work_done(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Work messages currently dispatched and unfinished.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let latency = self.latency.lock().unwrap().clone();
+        let queue = self.queue_wait.lock().unwrap().clone();
         let exec = self.exec_time.lock().unwrap().clone();
         let batches = self.batches.load(Ordering::Relaxed);
+        let train_batches = self.train_batches.load(Ordering::Relaxed);
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
+            infer_submitted: self.infer_submitted.load(Ordering::Relaxed),
+            train_submitted: self.train_submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             batches,
@@ -66,11 +155,26 @@ impl ServiceMetrics {
             } else {
                 self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
             },
+            train_batches,
+            mean_train_batch_size: if train_batches == 0 {
+                0.0
+            } else {
+                self.train_batched_requests.load(Ordering::Relaxed) as f64 / train_batches as f64
+            },
+            batch_sizes: self
+                .batch_sizes
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
             latency_p50_us: latency.percentile_us(50.0),
             latency_p99_us: latency.percentile_us(99.0),
             latency_mean_us: latency.mean_us(),
+            queue_p50_us: queue.percentile_us(50.0),
+            queue_p99_us: queue.percentile_us(99.0),
+            queue_mean_us: queue.mean_us(),
             exec_mean_us: exec.mean_us(),
         }
     }
@@ -80,31 +184,57 @@ impl ServiceMetrics {
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
+    /// Inference submissions (layer evals + ad-hoc expressions).
+    pub infer_submitted: u64,
+    /// Training-step submissions.
+    pub train_submitted: u64,
     pub completed: u64,
     pub errors: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
+    /// Coalesced training batches flushed.
+    pub train_batches: u64,
+    pub mean_train_batch_size: f64,
+    /// Batch-size histogram over all flushed batches (inference and
+    /// training): `batch_sizes[s]` counts batches of exactly `s` requests
+    /// for `s < BATCH_SIZE_BUCKETS - 1`; the last entry counts larger ones.
+    pub batch_sizes: Vec<u64>,
     pub plan_misses: u64,
     pub queue_depth: usize,
+    /// Work messages dispatched and unfinished at snapshot time.
+    pub inflight: usize,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
     pub latency_mean_us: f64,
+    /// Router-queue residency (enqueue → dispatch) percentiles.
+    pub queue_p50_us: f64,
+    pub queue_p99_us: f64,
+    pub queue_mean_us: f64,
     pub exec_mean_us: f64,
 }
 
 impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
-            "requests: {} submitted, {} completed, {} errors | batches: {} (mean size {:.2}, {} plan misses) | latency: p50 {:.0}us p99 {:.0}us mean {:.0}us | exec mean {:.0}us",
+            "requests: {} submitted ({} infer / {} train), {} completed, {} errors | \
+             batches: {} infer (mean size {:.2}), {} train (mean size {:.2}), {} plan misses | \
+             latency: p50 {:.0}us p99 {:.0}us mean {:.0}us | queue: p50 {:.0}us mean {:.0}us | \
+             exec mean {:.0}us",
             self.submitted,
+            self.infer_submitted,
+            self.train_submitted,
             self.completed,
             self.errors,
             self.batches,
             self.mean_batch_size,
+            self.train_batches,
+            self.mean_train_batch_size,
             self.plan_misses,
             self.latency_p50_us,
             self.latency_p99_us,
             self.latency_mean_us,
+            self.queue_p50_us,
+            self.queue_mean_us,
             self.exec_mean_us,
         )
     }

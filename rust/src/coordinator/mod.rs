@@ -1,35 +1,48 @@
 //! The L3 coordinator: a multi-threaded evaluation service for tensorial
-//! layers — request router, dynamic batcher, worker pool, plan cache,
-//! metrics and backpressure (vLLM-router-style, adapted to layer-evaluation
-//! traffic).
+//! layers — request router, **unified batching scheduler**, worker pool,
+//! plan cache, metrics and backpressure (vLLM-router-style, adapted to
+//! layer-evaluation traffic).
 //!
 //! Clients register tensorial layers once (expression + factor weights) and
-//! submit single-example evaluations; the router coalesces same-layer
-//! requests into one batched conv_einsum execution (the batch mode `b` of
-//! the layer string) up to `max_batch` or `batch_timeout`, whichever first.
-//! Workers execute along the planner's FLOPs-optimal path on the native
-//! engine, or via a PJRT artifact when one is registered for the layer.
+//! submit single-example evaluations; ad-hoc expressions and ad-hoc
+//! **training steps** ride the same pipeline. One scheduler (the `batcher`
+//! submodule) owns queueing, shape-compatibility grouping, deadline
+//! flushing and plan lookup for *both* request kinds: inference requests of
+//! one layer and shape coalesce along the batch mode `b` into a single
+//! batched replay, and same-expression training requests coalesce the same
+//! way — a flushed training batch replays through one cached
+//! [`crate::exec::TrainLayout`] against the worker's [`TrainWorkspace`],
+//! one fused [`CompiledPlan::train_step`] per request in submission order
+//! (per-request error isolation), with input gradients split along the
+//! batch mode and weight gradients accumulated per segment — so batched
+//! and individually submitted training steps are **bit-identical**. The
+//! gradient contract, and the engine-level batch entry point library
+//! callers use directly, is
+//! [`crate::autodiff::PathAutodiff::train_step_batch_into`].
+//!
+//! Batch formation is **pool-aware and adaptive**
+//! ([`AdaptiveController`]): the router sizes batches and flush deadlines
+//! from live utilization — its own workers' in-flight count and the
+//! executor pool's activity ([`crate::parallel::Pool::utilization`]). An
+//! idle service flushes lone requests immediately (no added latency); a
+//! saturated one holds partial batches up to
+//! [`ServiceConfig::batch_timeout`] and coalesces up to
+//! [`ServiceConfig::max_batch`] — the config bounds the controller instead
+//! of fixing its operating point. Pending queues are keyed per
+//! `(layer, shape)` / `(expression, shapes, policy)` group, so interleaved
+//! traffic of incompatible shapes batches independently instead of
+//! flushing each other out.
 //!
 //! Layer evaluation is **compile-once, run-many**: every `(layer, batch,
 //! spatial)` key is planned and lowered to a [`CompiledPlan`] once and held
 //! in a per-layer LRU cache bounded at [`LAYER_PLAN_CACHE_CAPACITY`]
 //! geometries (with [`ServiceConfig::backend`] hoisted onto the cached
-//! entry, so batch-level and step-level pool arbitration always see one
-//! consistent backend per entry), and ad-hoc expressions share a
-//! service-wide [`PlanCache`] keyed by `(expr, dims, backend, strategy)`.
-//! Each worker thread owns one reusable [`TrainWorkspace`] that survives
-//! across requests (the worker threads — like the executor's pool workers
-//! — are persistent), so steady-state execution allocates only the output
-//! tensors.
-//!
-//! Besides inference, the service accepts **training-step requests**
-//! ([`ServiceHandle::submit_train`]): a forward-with-tape + backward of an
-//! ad-hoc expression under a checkpoint policy, returning the output and
-//! ∂L/∂input for every input. Training requests run through the same
-//! compile-once cache (with the training cost model) and share the same
-//! per-worker arena as inference — the tape lives in the worker's
-//! [`TrainWorkspace`] for the duration of the request, so a steady stream
-//! of train steps allocates only the returned tensors.
+//! entry), and ad-hoc expressions — inference and training alike — share a
+//! service-wide [`PlanCache`] keyed by `(expr, dims, backend, strategy,
+//! training, conv kinds)`. Each worker thread owns one reusable
+//! [`TrainWorkspace`] plus a reusable batch-staging tensor (inference
+//! batches concatenate into it via [`crate::tensor::concat_into`]), so
+//! steady-state execution allocates only the returned tensors.
 //!
 //! Workers and the executor's intra-step parallelism share one pool: each
 //! compiled plan carries [`ServiceConfig::backend`], and under the default
@@ -44,17 +57,20 @@
 //! arbitration — but their workers add to the global pool's, so prefer the
 //! default backend outside benchmarking.
 
+mod batcher;
 mod metrics;
 
-pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use batcher::{AdaptiveController, LAYER_PLAN_CACHE_CAPACITY};
+pub use metrics::{MetricsSnapshot, ServiceMetrics, BATCH_SIZE_BUCKETS};
 
-use crate::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
+use crate::autodiff::CkptPolicy;
 use crate::einsum::{parse, SizedSpec};
 use crate::exec::{Backend, CompiledPlan, PlanCache, TrainWorkspace};
-use crate::planner::{plan_with, PlanOptions, Strategy};
-use crate::tensor::Tensor;
-use crate::util::lru::LruCache;
+use crate::parallel::Pool;
+use crate::planner::Strategy;
+use crate::tensor::{concat_into, Tensor};
 use anyhow::{anyhow, Result};
+use batcher::{dispatch, Batcher, LayerEntry, Pending, TrainPending};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
@@ -62,14 +78,17 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Service configuration.
+/// Service configuration. `max_batch` and `batch_timeout` bound the
+/// adaptive batching controller ([`AdaptiveController`]); the actual batch
+/// size and flush deadline at any moment are derived from live pool
+/// utilization within those bounds.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Worker threads executing batches.
     pub workers: usize,
-    /// Maximum requests coalesced into one batch.
+    /// Upper bound on requests coalesced into one batch.
     pub max_batch: usize,
-    /// Maximum time the batcher holds a partial batch.
+    /// Upper bound on how long the scheduler holds a partial batch.
     pub batch_timeout: Duration,
     /// Router inbox capacity (backpressure: submit blocks when full).
     pub queue_capacity: usize,
@@ -95,29 +114,6 @@ impl Default for ServiceConfig {
     }
 }
 
-/// Bound on each layer's per-geometry compiled-plan cache: enough for a
-/// realistic batch/spatial mix per layer while keeping client-controlled
-/// geometry churn from growing resident memory without limit (the shared
-/// ad-hoc [`PlanCache`] is bounded separately).
-pub const LAYER_PLAN_CACHE_CAPACITY: usize = 16;
-
-/// A registered tensorial layer: expression + weights.
-struct LayerEntry {
-    expr: String,
-    factors: Vec<Tensor>,
-    /// Per-(batch, height, width) compiled-plan cache, LRU-bounded at
-    /// [`LAYER_PLAN_CACHE_CAPACITY`]; each entry carries its hoisted
-    /// `ExecOptions`, so every replay uses one consistent backend.
-    plans: LruCache<(usize, usize, usize), Arc<CompiledPlan>>,
-}
-
-/// One in-flight request.
-struct Pending {
-    x: Tensor,
-    respond: SyncSender<Result<Tensor>>,
-    enqueued: Instant,
-}
-
 enum Msg {
     Eval {
         layer: String,
@@ -130,10 +126,7 @@ enum Msg {
     },
     Train {
         expr: String,
-        tensors: Vec<Tensor>,
-        dout: Tensor,
-        policy: CkptPolicy,
-        respond: SyncSender<Result<(Tensor, Vec<Tensor>)>>,
+        pending: TrainPending,
     },
     Shutdown,
 }
@@ -159,7 +152,7 @@ impl ServiceHandle {
             x
         };
         let (rtx, rrx) = sync_channel(1);
-        self.metrics.note_submit();
+        self.metrics.note_infer_submit();
         self.tx
             .send(Msg::Eval {
                 layer: layer.to_string(),
@@ -180,7 +173,7 @@ impl ServiceHandle {
         tensors: Vec<Tensor>,
     ) -> Result<Receiver<Result<Tensor>>> {
         let (rtx, rrx) = sync_channel(1);
-        self.metrics.note_submit();
+        self.metrics.note_infer_submit();
         self.tx
             .send(Msg::AdHoc {
                 expr: expr.to_string(),
@@ -194,8 +187,14 @@ impl ServiceHandle {
     /// Evaluate an ad-hoc **training step**: forward-with-tape + backward
     /// of `expr` at the given inputs under `policy`, seeded with the output
     /// cotangent `dout`. Returns the forward output and ∂L/∂input for
-    /// every input. Runs on a worker's training workspace — the same arena
-    /// its inference requests use.
+    /// every input.
+    ///
+    /// Training requests flow through the same batching scheduler as
+    /// inference: same-expression, same-shape, same-policy steps are
+    /// coalesced and replayed through one cached
+    /// [`crate::exec::TrainLayout`] on a worker's training workspace, with
+    /// results bit-identical to submitting each step alone (see the module
+    /// docs).
     pub fn submit_train(
         &self,
         expr: &str,
@@ -204,14 +203,17 @@ impl ServiceHandle {
         policy: CkptPolicy,
     ) -> Result<Receiver<Result<(Tensor, Vec<Tensor>)>>> {
         let (rtx, rrx) = sync_channel(1);
-        self.metrics.note_submit();
+        self.metrics.note_train_submit();
         self.tx
             .send(Msg::Train {
                 expr: expr.to_string(),
-                tensors,
-                dout,
-                policy,
-                respond: rtx,
+                pending: TrainPending {
+                    tensors,
+                    dout,
+                    policy,
+                    respond: rtx,
+                    enqueued: Instant::now(),
+                },
             })
             .map_err(|_| anyhow!("service stopped"))?;
         Ok(rrx)
@@ -250,7 +252,7 @@ pub struct EvalService {
     stop: Arc<AtomicBool>,
 }
 
-/// A batch dispatched to workers.
+/// An inference batch dispatched to workers.
 struct WorkItem {
     layer: String,
     plan: Arc<CompiledPlan>,
@@ -267,12 +269,13 @@ enum WorkMsg {
         strategy: Strategy,
         backend: Backend,
     },
-    Train {
+    /// A coalesced batch of same-expression training steps: compiled once
+    /// through the shared cache, then replayed segment by segment against
+    /// the worker's training workspace.
+    TrainBatch {
         expr: String,
-        tensors: Vec<Tensor>,
-        dout: Tensor,
         policy: CkptPolicy,
-        respond: SyncSender<Result<(Tensor, Vec<Tensor>)>>,
+        items: Vec<TrainPending>,
         strategy: Strategy,
         backend: Backend,
     },
@@ -290,7 +293,8 @@ impl EvalService {
         let (wtx, wrx) = sync_channel::<WorkMsg>(config.workers * 2);
         let wrx = Arc::new(Mutex::new(wrx));
         let stop = Arc::new(AtomicBool::new(false));
-        // Compiled-plan cache shared by all workers (ad-hoc expressions).
+        // Compiled-plan cache shared by all workers (ad-hoc expressions and
+        // training steps).
         let cache = Arc::new(PlanCache::new());
 
         let mut registry: HashMap<String, LayerEntry> = HashMap::new();
@@ -301,7 +305,7 @@ impl EvalService {
                 LayerEntry {
                     expr,
                     factors,
-                    plans: LruCache::new(LAYER_PLAN_CACHE_CAPACITY),
+                    plans: crate::util::lru::LruCache::new(LAYER_PLAN_CACHE_CAPACITY),
                 },
             );
         }
@@ -353,6 +357,24 @@ impl EvalService {
     }
 }
 
+/// Router poll cap while no deadlines are pending.
+const IDLE_TICK: Duration = Duration::from_millis(50);
+
+/// Live utilization in `[0, 1]`: the larger of the coordinator workers'
+/// in-flight fraction and the executor pool's activity. This is the signal
+/// the adaptive controller sizes batches from — idle means "nothing gains
+/// from waiting, flush now"; saturated means "workers are busy anyway,
+/// coalesce".
+fn service_utilization(metrics: &ServiceMetrics, config: &ServiceConfig) -> f64 {
+    let worker_u = metrics.inflight() as f64 / config.workers.max(1) as f64;
+    let pool_u = match config.backend {
+        Backend::Scalar => 0.0,
+        Backend::Parallel { threads: 0 } => Pool::global().utilization(),
+        Backend::Parallel { threads } => Pool::sized(threads).utilization(),
+    };
+    worker_u.max(pool_u).clamp(0.0, 1.0)
+}
+
 fn router_loop(
     rx: Receiver<Msg>,
     wtx: SyncSender<WorkMsg>,
@@ -360,101 +382,26 @@ fn router_loop(
     config: ServiceConfig,
     metrics: Arc<ServiceMetrics>,
 ) {
-    // Per-layer pending queues awaiting batch formation.
-    let mut queues: HashMap<String, Vec<Pending>> = HashMap::new();
-    let mut deadline: Option<Instant> = None;
-
-    let flush = |registry: &mut HashMap<String, LayerEntry>,
-                 layer_name: &str,
-                 batch: Vec<Pending>,
-                 wtx: &SyncSender<WorkMsg>,
-                 metrics: &ServiceMetrics,
-                 strategy: Strategy,
-                 backend: Backend| {
-        if batch.is_empty() {
-            return;
-        }
-        let entry = registry.get_mut(layer_name).expect("layer exists");
-        // All requests in a bucket share the single-example shape; derive
-        // the batched plan for the combined batch size.
-        let bshape = batch[0].x.shape().to_vec();
-        let total_b: usize = batch.iter().map(|p| p.x.shape()[0]).sum();
-        let key = (total_b, bshape[bshape.len() - 2], bshape[bshape.len() - 1]);
-        let cached = entry.plans.get(&key).cloned();
-        let plan = match cached {
-            Some(p) => p,
-            None => {
-                let planned = plan_layer(entry, total_b, &bshape, strategy, backend);
-                match planned {
-                    Ok(p) => {
-                        let p = Arc::new(p);
-                        // LRU-bounded: geometry churn past the capacity
-                        // evicts the least-recently-served shape.
-                        entry.plans.insert(key, Arc::clone(&p));
-                        metrics.note_plan_miss();
-                        p
-                    }
-                    Err(e) => {
-                        let msg = format!("planning failed: {e}");
-                        for p in batch {
-                            let _ = p.respond.send(Err(anyhow!("{msg}")));
-                        }
-                        return;
-                    }
-                }
-            }
-        };
-        metrics.note_batch(batch.len());
-        let item = WorkItem {
-            layer: layer_name.to_string(),
-            plan,
-            factors: Arc::new(entry.factors.clone()),
-            requests: batch,
-        };
-        let _ = wtx.send(WorkMsg::Batch(item));
-    };
-
+    let mut batcher = Batcher::new(AdaptiveController::new(
+        config.max_batch,
+        config.batch_timeout,
+    ));
     loop {
-        let timeout = deadline
+        let util = service_utilization(&metrics, &config);
+        let timeout = batcher
+            .next_deadline(util)
             .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
+            .unwrap_or(IDLE_TICK);
+        let msg = rx.recv_timeout(timeout);
+        let util = service_utilization(&metrics, &config);
+        match msg {
             Ok(Msg::Eval { layer, pending }) => {
                 if !registry.contains_key(&layer) {
-                    let _ = pending.respond.send(Err(anyhow!("unknown layer '{layer}'")));
-                    continue;
-                }
-                // Mixed shapes cannot batch together: flush incompatible.
-                let q = queues.entry(layer.clone()).or_default();
-                if let Some(first) = q.first() {
-                    if first.x.shape() != pending.x.shape() {
-                        let old = std::mem::take(q);
-                        flush(
-                            &mut registry,
-                            &layer,
-                            old,
-                            &wtx,
-                            &metrics,
-                            config.strategy,
-                            config.backend,
-                        );
-                    }
-                }
-                let q = queues.entry(layer.clone()).or_default();
-                q.push(pending);
-                if q.len() >= config.max_batch {
-                    let old = std::mem::take(q);
-                    flush(
-                        &mut registry,
-                        &layer,
-                        old,
-                        &wtx,
-                        &metrics,
-                        config.strategy,
-                        config.backend,
-                    );
-                } else if deadline.is_none() {
-                    deadline = Some(Instant::now() + config.batch_timeout);
+                    let _ = pending
+                        .respond
+                        .send(Err(anyhow!("unknown layer '{layer}'")));
+                } else if let Some(batch) = batcher.push_eval(&layer, pending, util) {
+                    dispatch(batch, &mut registry, &wtx, &metrics, &config);
                 }
             }
             Ok(Msg::AdHoc {
@@ -462,6 +409,7 @@ fn router_loop(
                 tensors,
                 respond,
             }) => {
+                metrics.note_dispatched();
                 let _ = wtx.send(WorkMsg::AdHoc {
                     expr,
                     tensors,
@@ -470,84 +418,27 @@ fn router_loop(
                     backend: config.backend,
                 });
             }
-            Ok(Msg::Train {
-                expr,
-                tensors,
-                dout,
-                policy,
-                respond,
-            }) => {
-                let _ = wtx.send(WorkMsg::Train {
-                    expr,
-                    tensors,
-                    dout,
-                    policy,
-                    respond,
-                    strategy: config.strategy,
-                    backend: config.backend,
-                });
+            Ok(Msg::Train { expr, pending }) => {
+                if let Some(batch) = batcher.push_train(&expr, pending, util) {
+                    dispatch(batch, &mut registry, &wtx, &metrics, &config);
+                }
             }
             Ok(Msg::Shutdown) => break,
-            Err(RecvTimeoutError::Timeout) => {
-                // Flush everything pending.
-                for (layer, q) in queues.iter_mut() {
-                    let old = std::mem::take(q);
-                    flush(
-                        &mut registry,
-                        layer,
-                        old,
-                        &wtx,
-                        &metrics,
-                        config.strategy,
-                        config.backend,
-                    );
-                }
-                deadline = None;
-            }
+            Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
-        metrics.set_queue_depth(queues.values().map(Vec::len).sum());
+        for batch in batcher.due(Instant::now(), util) {
+            dispatch(batch, &mut registry, &wtx, &metrics, &config);
+        }
+        metrics.set_queue_depth(batcher.pending_len());
     }
     // Drain on shutdown.
-    for (layer, q) in queues.iter_mut() {
-        let old = std::mem::take(q);
-        flush(
-            &mut registry,
-            layer,
-            old,
-            &wtx,
-            &metrics,
-            config.strategy,
-            config.backend,
-        );
+    for batch in batcher.drain() {
+        dispatch(batch, &mut registry, &wtx, &metrics, &config);
     }
     for _ in 0..8 {
         let _ = wtx.send(WorkMsg::Stop);
     }
-}
-
-fn plan_layer(
-    entry: &LayerEntry,
-    batch: usize,
-    single_shape: &[usize],
-    strategy: Strategy,
-    backend: Backend,
-) -> Result<CompiledPlan, String> {
-    let spec = parse(&entry.expr).map_err(|e| e.to_string())?;
-    let mut x_dims = single_shape.to_vec();
-    x_dims[0] = batch;
-    let mut dims = vec![x_dims];
-    dims.extend(entry.factors.iter().map(|f| f.shape().to_vec()));
-    let sized = SizedSpec::new(spec, dims)?;
-    let plan = plan_with(
-        &sized,
-        &PlanOptions {
-            strategy,
-            backend,
-            ..Default::default()
-        },
-    )?;
-    CompiledPlan::compile_arc(Arc::new(plan)).map_err(|e| e.to_string())
 }
 
 /// Evaluate an ad-hoc expression through the shared compile-once cache
@@ -563,7 +454,7 @@ fn eval_adhoc(
     backend: Backend,
 ) -> Result<Tensor> {
     let refs: Vec<&Tensor> = tensors.iter().collect();
-    let opts = PlanOptions {
+    let opts = crate::planner::PlanOptions {
         strategy,
         backend,
         ..Default::default()
@@ -578,20 +469,16 @@ fn eval_adhoc(
     compiled.run(&refs, ws.base_mut())
 }
 
-/// Run an ad-hoc training step on the worker's training workspace: plan +
-/// compile (training cost model) through the shared cache, then
-/// forward-with-tape + backward under the requested checkpoint policy.
-#[allow(clippy::too_many_arguments)]
-fn eval_train(
+/// Parse + plan + compile a training batch's expression once through the
+/// shared cache (the training cost model), validating that it has a
+/// pairwise path at all.
+fn prepare_train(
     cache: &PlanCache,
-    ws: &mut TrainWorkspace,
     expr: &str,
-    tensors: &[Tensor],
-    dout: &Tensor,
-    policy: CkptPolicy,
+    items: &[TrainPending],
     strategy: Strategy,
     backend: Backend,
-) -> Result<(Tensor, Vec<Tensor>)> {
+) -> Result<Arc<CompiledPlan>> {
     let spec = parse(expr).map_err(|e| anyhow!("{e}"))?;
     if spec.n_inputs() < 2 {
         return Err(anyhow!(
@@ -599,20 +486,17 @@ fn eval_train(
             spec.n_inputs()
         ));
     }
-    let refs: Vec<&Tensor> = tensors.iter().collect();
-    let dims: Vec<Vec<usize>> = refs.iter().map(|t| t.shape().to_vec()).collect();
-    let opts = PlanOptions {
+    let first = items
+        .first()
+        .ok_or_else(|| anyhow!("empty training batch"))?;
+    let dims: Vec<Vec<usize>> = first.tensors.iter().map(|t| t.shape().to_vec()).collect();
+    let opts = crate::planner::PlanOptions {
         strategy,
         backend,
         training: true,
         ..Default::default()
     };
-    let compiled = cache.get_or_compile_parsed(expr, &spec, &dims, &opts)?;
-    let ad = PathAutodiff::from_compiled(compiled);
-    let meter = MemoryMeter::new();
-    let tape = ad.forward_with_tape(&refs, policy, ws, &meter)?;
-    let grads = ad.backward(&tape, dout, ws, &meter)?;
-    Ok((tape.output, grads))
+    cache.get_or_compile_parsed(expr, &spec, &dims, &opts)
 }
 
 fn worker_loop(
@@ -621,9 +505,12 @@ fn worker_loop(
     cache: Arc<PlanCache>,
 ) {
     // One reusable training workspace per worker thread: compiled plans of
-    // any shape run against it (training requests tape into the same arena
-    // inference uses), and it only ever grows.
+    // any shape run against it (training batches tape into the same arena
+    // inference uses), and it only ever grows. The staging tensor receives
+    // each inference batch's concatenated inputs — same-shape steady-state
+    // traffic reuses it without allocating.
     let mut ws = TrainWorkspace::new();
+    let mut stage: Option<Tensor> = None;
     loop {
         let msg = {
             let rx = wrx.lock().unwrap();
@@ -632,26 +519,30 @@ fn worker_loop(
         match msg {
             Ok(WorkMsg::Batch(item)) => {
                 let t0 = Instant::now();
-                // Concatenate the batch along axis 0.
-                let bsum: usize = item.requests.iter().map(|p| p.x.shape()[0]).sum();
+                // Concatenate the batch along axis 0 into the reusable
+                // staging tensor.
+                let sizes: Vec<usize> = item.requests.iter().map(|p| p.x.shape()[0]).collect();
+                let bsum: usize = sizes.iter().sum();
                 let mut shape = item.requests[0].x.shape().to_vec();
                 shape[0] = bsum;
-                let mut data = Vec::with_capacity(shape.iter().product());
-                for p in &item.requests {
-                    data.extend_from_slice(p.x.data());
+                let reuse = matches!(&stage, Some(t) if t.shape() == &shape[..]);
+                if !reuse {
+                    stage = Some(Tensor::zeros(&shape));
                 }
-                let x = Tensor::from_vec(&shape, data);
-                let mut inputs: Vec<&Tensor> = vec![&x];
+                let x = stage.as_mut().expect("staging tensor present");
+                {
+                    let parts: Vec<&Tensor> = item.requests.iter().map(|p| &p.x).collect();
+                    concat_into(&parts, x);
+                }
+                let x = stage.as_ref().expect("staging tensor present");
+                let mut inputs: Vec<&Tensor> = vec![x];
                 inputs.extend(item.factors.iter());
                 let result = item.plan.run(&inputs, ws.base_mut());
                 match result {
                     Ok(y) => {
                         // Split along axis 0 back to requesters.
-                        let mut offset = 0usize;
-                        for p in item.requests {
-                            let nb = p.x.shape()[0];
-                            let part = y.slice_axis(0, offset, offset + nb);
-                            offset += nb;
+                        let parts = y.split_axis0(&sizes);
+                        for (p, part) in item.requests.into_iter().zip(parts) {
                             metrics.note_done(p.enqueued.elapsed());
                             let _ = p.respond.send(Ok(part));
                         }
@@ -664,6 +555,7 @@ fn worker_loop(
                         }
                     }
                 }
+                metrics.note_work_done();
                 metrics.note_exec_time(t0.elapsed());
             }
             Ok(WorkMsg::AdHoc {
@@ -680,26 +572,53 @@ fn worker_loop(
                     Err(_) => metrics.note_error(),
                 }
                 let _ = respond.send(result);
+                metrics.note_work_done();
                 metrics.note_exec_time(t0.elapsed());
             }
-            Ok(WorkMsg::Train {
+            Ok(WorkMsg::TrainBatch {
                 expr,
-                tensors,
-                dout,
                 policy,
-                respond,
+                items,
                 strategy,
                 backend,
             }) => {
                 let t0 = Instant::now();
-                let result = eval_train(
-                    &cache, &mut ws, &expr, &tensors, &dout, policy, strategy, backend,
-                );
-                match &result {
-                    Ok(_) => metrics.note_done(t0.elapsed()),
-                    Err(_) => metrics.note_error(),
+                match prepare_train(&cache, &expr, &items, strategy, backend) {
+                    Ok(compiled) => {
+                        // One layout, one workspace, one segment per request
+                        // in submission order — the batched replay.
+                        let layout = compiled.train_layout(policy);
+                        for p in items {
+                            let refs: Vec<&Tensor> = p.tensors.iter().collect();
+                            let mut out = Tensor::zeros(compiled.out_shape());
+                            let mut grads: Vec<Tensor> = compiled
+                                .in_dims()
+                                .iter()
+                                .map(|d| Tensor::zeros(d))
+                                .collect();
+                            let res = compiled
+                                .train_step(&layout, &refs, &p.dout, &mut ws, &mut out, &mut grads);
+                            match res {
+                                Ok(()) => {
+                                    metrics.note_done(p.enqueued.elapsed());
+                                    let _ = p.respond.send(Ok((out, grads)));
+                                }
+                                Err(e) => {
+                                    metrics.note_error();
+                                    let _ = p.respond.send(Err(e));
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("{e}");
+                        for p in items {
+                            metrics.note_error();
+                            let _ = p.respond.send(Err(anyhow!("{msg}")));
+                        }
+                    }
                 }
-                let _ = respond.send(result);
+                metrics.note_work_done();
                 metrics.note_exec_time(t0.elapsed());
             }
             Ok(WorkMsg::Stop) | Err(_) => break,

@@ -230,6 +230,174 @@ fn train_request_matches_direct_forward_backward() {
 }
 
 #[test]
+fn train_requests_coalesce_into_batches_with_exact_results() {
+    use crate::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
+    use crate::exec::{compile_expr, TrainWorkspace};
+    use crate::planner::PlanOptions;
+    use std::time::Duration;
+
+    // One worker, big enough steps that the router outruns the worker: a
+    // steady same-expression training stream must coalesce (observable via
+    // the batch-size histogram) with results identical to direct engine
+    // execution.
+    let expr = "bsx,tsx,tu,uv->bvx|x";
+    let dims: Vec<Vec<usize>> = vec![vec![4, 8, 32], vec![16, 8, 3], vec![16, 32], vec![32, 8]];
+    let opts = PlanOptions {
+        training: true,
+        ..Default::default()
+    };
+    let compiled = std::sync::Arc::new(compile_expr(expr, &dims, &opts).unwrap());
+    let ad = PathAutodiff::from_compiled(std::sync::Arc::clone(&compiled));
+
+    let service = EvalService::start(
+        ServiceConfig {
+            workers: 1,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(20),
+            ..Default::default()
+        },
+        vec![],
+    )
+    .unwrap();
+    let h = service.handle();
+    let mut rng = Rng::new(21);
+    let n_req = 16usize;
+    let reqs: Vec<(Vec<Tensor>, Tensor)> = (0..n_req)
+        .map(|_| {
+            let ins: Vec<Tensor> = dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+            let dout = Tensor::rand(compiled.out_shape(), -1.0, 1.0, &mut rng);
+            (ins, dout)
+        })
+        .collect();
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(ins, dout)| {
+            h.submit_train(expr, ins.clone(), dout.clone(), CkptPolicy::Sqrt)
+                .unwrap()
+        })
+        .collect();
+
+    let mut ws = TrainWorkspace::new();
+    let meter = MemoryMeter::new();
+    for ((ins, dout), rx) in reqs.iter().zip(rxs) {
+        let (y, grads) = rx.recv().unwrap().unwrap();
+        let refs: Vec<&Tensor> = ins.iter().collect();
+        let d = dout.clone();
+        let (want_y, want_g) = ad
+            .forward_backward(&refs, |_| d.clone(), CkptPolicy::Sqrt, &mut ws, &meter)
+            .unwrap();
+        y.assert_close(&want_y, 1e-6);
+        assert_eq!(grads.len(), want_g.len());
+        for (g, w) in grads.iter().zip(want_g.iter()) {
+            g.assert_close(w, 1e-6);
+        }
+    }
+
+    let m = h.metrics();
+    assert_eq!(m.train_submitted, n_req as u64);
+    assert_eq!(m.completed, n_req as u64);
+    assert!(
+        m.train_batches < n_req as u64,
+        "{n_req} streamed train steps must coalesce into fewer batches (got {})",
+        m.train_batches
+    );
+    assert!(m.mean_train_batch_size > 1.0);
+    assert!(
+        m.batch_sizes[2..].iter().any(|&c| c > 0),
+        "batch-size histogram must record a coalesced (size >= 2) batch: {:?}",
+        m.batch_sizes
+    );
+    service.shutdown();
+}
+
+#[test]
+fn alternating_shapes_batch_independently_without_starvation() {
+    // The pre-unification router flushed the whole partial batch whenever an
+    // incompatible shape arrived, so an alternating-shape stream never
+    // formed batches. Grouped queues must batch each shape independently.
+    let mut rng = Rng::new(22);
+    let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+    let service = EvalService::start(
+        ServiceConfig {
+            workers: 1,
+            max_batch: 4,
+            batch_timeout: std::time::Duration::from_millis(30),
+            ..Default::default()
+        },
+        vec![(name, expr.clone(), factors.clone())],
+    )
+    .unwrap();
+    let h = service.handle();
+    let n_pairs = 8usize;
+    let xs: Vec<Tensor> = (0..2 * n_pairs)
+        .map(|i| {
+            let hw = if i % 2 == 0 { 6 } else { 10 };
+            Tensor::rand(&[1, 3, hw, hw], -1.0, 1.0, &mut rng)
+        })
+        .collect();
+    let rxs: Vec<_> = xs.iter().map(|x| h.submit("cp", x.clone()).unwrap()).collect();
+    for (x, rx) in xs.iter().zip(rxs) {
+        let y = rx.recv().unwrap().unwrap();
+        let mut inputs = vec![x];
+        inputs.extend(factors.iter());
+        let want = conv_einsum(&expr, &inputs).unwrap();
+        y.assert_close(&want, 1e-4);
+    }
+    let m = h.metrics();
+    assert_eq!(m.completed, 2 * n_pairs as u64);
+    assert!(
+        m.batches < 2 * n_pairs as u64,
+        "interleaved shapes must still coalesce per shape group (got {} batches for {} requests)",
+        m.batches,
+        2 * n_pairs
+    );
+    assert!(m.mean_batch_size > 1.0);
+    service.shutdown();
+}
+
+#[test]
+fn metrics_expose_queue_latency_kind_counters_and_batch_histogram() {
+    use crate::autodiff::CkptPolicy;
+
+    let mut rng = Rng::new(23);
+    let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+    let service =
+        EvalService::start(ServiceConfig::default(), vec![(name, expr, factors)]).unwrap();
+    let h = service.handle();
+    for _ in 0..2 {
+        let x = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+        h.eval("cp", x).unwrap();
+    }
+    let a = Tensor::rand(&[3, 4], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand(&[4, 5], -1.0, 1.0, &mut rng);
+    h.submit_adhoc("ij,jk->ik", vec![a.clone(), b.clone()])
+        .unwrap()
+        .recv()
+        .unwrap()
+        .unwrap();
+    let dout = Tensor::rand(&[3, 5], -1.0, 1.0, &mut rng);
+    h.train("ij,jk->ik", vec![a, b], dout, CkptPolicy::StoreAll)
+        .unwrap();
+
+    let m = h.metrics();
+    assert_eq!(m.infer_submitted, 3, "two layer evals + one ad-hoc");
+    assert_eq!(m.train_submitted, 1);
+    assert_eq!(m.submitted, 4);
+    assert_eq!(m.completed, 4);
+    // Every flushed batch (infer + train) lands in exactly one histogram
+    // bucket; ad-hoc requests bypass batching.
+    let histo_total: u64 = m.batch_sizes.iter().sum();
+    assert_eq!(histo_total, m.batches + m.train_batches);
+    assert!(m.batches >= 1 && m.train_batches >= 1);
+    // Queue residency was recorded for every batched request.
+    assert!(m.queue_p50_us >= 0.0 && m.queue_p99_us >= m.queue_p50_us);
+    // The responder races the worker's in-flight decrement by design, so
+    // at most the just-answered message may still read as in flight.
+    assert!(m.inflight <= 1, "drained service shows no backlog");
+    service.shutdown();
+}
+
+#[test]
 fn mixed_shapes_do_not_cross_batch() {
     let mut rng = Rng::new(6);
     let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);

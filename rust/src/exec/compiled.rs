@@ -1445,6 +1445,36 @@ impl CompiledPlan {
         }
         Ok(())
     }
+
+    /// One **fused training step**: taped forward immediately followed by
+    /// its backward, with the tape consumed inside the call (the workspace
+    /// epoch is bumped on entry and again on exit, so any
+    /// [`crate::autodiff::TapeToken`] issued before — or observed during —
+    /// this step is rejected by a later `backward_into` instead of
+    /// replaying clobbered arena state).
+    ///
+    /// This is the per-segment executor of the coalesced training batches
+    /// the coordinator forms ([`crate::autodiff::PathAutodiff::train_step_batch_into`]
+    /// is the layer-level wrapper): it skips the token round-trip of the
+    /// split `forward_with_tape` / `backward` API, and like those entry
+    /// points it performs zero heap allocations after workspace warm-up and
+    /// produces bit-identical outputs and gradients.
+    pub fn train_step(
+        &self,
+        layout: &TrainLayout,
+        inputs: &[&Tensor],
+        dout: &Tensor,
+        ws: &mut TrainWorkspace,
+        out: &mut Tensor,
+        grads: &mut [Tensor],
+    ) -> Result<()> {
+        self.train_forward(layout, inputs, ws, out)?;
+        let result = self.train_backward(layout, dout, ws, grads);
+        // Consume the tape even on a failed backward: a retry must re-run
+        // the forward rather than read half-consumed arena state.
+        ws.invalidate();
+        result
+    }
 }
 
 // ---------------------------------------------------------------------------

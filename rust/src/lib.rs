@@ -30,7 +30,8 @@
 //! * a **training substrate** ([`nn`]) used by the paper-reproduction
 //!   benches (Tables 1–7, Figures 3–4);
 //! * a **coordinator** ([`coordinator`]) serving batched layer-evaluation
-//!   requests, and a **PJRT runtime** ([`runtime`]) that loads the AOT
+//!   *and training-step* requests through one unified, pool-aware batching
+//!   scheduler, and a **PJRT runtime** ([`runtime`]) that loads the AOT
 //!   JAX/Pallas artifacts produced by `python/compile/aot.py`.
 //!
 //! ## Compile once, run many
@@ -85,6 +86,27 @@
 //! (the paper's Table 3 peak-memory quantity) — `StoreAll` > `Sqrt` in
 //! peak, `Sqrt`/`None` pay segment recomputes instead, exactly the §3.3
 //! trade-off.
+//!
+//! ## Unified request batching
+//!
+//! The coordinator coalesces **training requests like inference
+//! requests**: one scheduler groups pending work by shape-compatibility
+//! key (`(layer, shape)` for evals, `(expression, shapes, policy)` for
+//! train steps — interleaved shapes batch independently), and a flushed
+//! training batch replays through a single cached [`exec::TrainLayout`]
+//! against one worker workspace, one fused `CompiledPlan::train_step` per
+//! request in submission order
+//! ([`autodiff::PathAutodiff::train_step_batch_into`] is the engine-level
+//! batch entry point with the same contract). Input gradients split along the batch
+//! mode and weight gradients accumulate per segment, so batched and
+//! individually submitted training steps are **bit-identical**
+//! (`tests/batch_train_parity.rs`) with zero steady-state heap
+//! allocations on both backends. Batch sizing is **adaptive and
+//! pool-aware** ([`coordinator::AdaptiveController`]): an idle service
+//! flushes lone requests immediately, a saturated one (workers busy,
+//! [`parallel::Pool::utilization`] high) holds partial batches up to the
+//! configured bounds. `bench_hotpath` records infer/train/mixed
+//! throughput vs the unbatched baseline in `BENCH_coordinator.json`.
 //!
 //! ## Backend selection
 //!

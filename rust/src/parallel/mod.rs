@@ -157,6 +157,11 @@ struct Shared {
     /// Chunks not yet fully executed. The thread that finishes the last
     /// chunk takes the slot lock and signals `done_cv`.
     remaining: AtomicUsize,
+    /// Threads currently inside a claim loop (workers that joined the job
+    /// plus the publishing caller) — the instantaneous activity level read
+    /// by [`Pool::utilization`]. Relaxed: it is a monitoring signal, not a
+    /// synchronization edge.
+    active: AtomicUsize,
 }
 
 impl Shared {
@@ -175,6 +180,7 @@ impl Shared {
             done_cv: Condvar::new(),
             cursor: AtomicUsize::new(0),
             remaining: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
         }
     }
 }
@@ -235,7 +241,9 @@ fn worker_loop(shared: Arc<Shared>) {
             }
         };
         seen = epoch;
+        shared.active.fetch_add(1, Ordering::Relaxed);
         execute_chunks(&shared, job, n_chunks, claim);
+        shared.active.fetch_sub(1, Ordering::Relaxed);
         let mut slot = shared.slot.lock().unwrap();
         slot.participants -= 1;
         if slot.participants == 0 {
@@ -329,6 +337,27 @@ impl Pool {
         self.threads
     }
 
+    /// Instantaneous fraction of the thread budget currently executing a
+    /// parallel region, in `[0.0, 1.0]`. Best-effort monitoring probe (a
+    /// pair of relaxed atomic loads — callable at any frequency from any
+    /// thread): the coordinator's adaptive batching controller reads it to
+    /// decide whether to flush small batches early (idle pool) or hold for
+    /// larger ones (saturated pool). A serial fallback caused by the pool
+    /// being busy still reads non-zero through the `busy` flag; regions
+    /// that bypass the pool machinery entirely (single-thread budgets,
+    /// single-chunk jobs) are invisible to the probe — callers wanting a
+    /// complete picture combine it with their own in-flight accounting, as
+    /// the coordinator does.
+    pub fn utilization(&self) -> f64 {
+        let busy = usize::from(self.busy.load(Ordering::Relaxed));
+        let active = self
+            .shared
+            .get()
+            .map(|s| s.active.load(Ordering::Relaxed))
+            .unwrap_or(0);
+        (active.max(busy) as f64 / self.threads as f64).min(1.0)
+    }
+
     /// Lazily start the worker threads (budget − 1 of them; the caller is
     /// the last participant). Spawn failures degrade the pool silently —
     /// the dynamic chunk cursor means the caller alone still completes
@@ -412,7 +441,9 @@ impl Pool {
         }
         // The caller is a full participant: even if every worker is slow to
         // wake (or failed to spawn), the job completes.
+        shared.active.fetch_add(1, Ordering::Relaxed);
         execute_chunks(shared, job, n_chunks, claim);
+        shared.active.fetch_sub(1, Ordering::Relaxed);
         let panic = {
             let mut slot = shared.slot.lock().unwrap();
             // Wait until every chunk has executed AND every joined worker
@@ -639,5 +670,29 @@ mod tests {
     #[test]
     fn default_threads_is_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn utilization_probe_reflects_activity() {
+        let pool = Pool::new(4);
+        assert_eq!(pool.utilization(), 0.0, "idle pool before first job");
+        let peak = Mutex::new(0.0f64);
+        let mut data = vec![0.0f32; 1 << 14];
+        pool.run_chunks(&mut data, 1 << 11, |_, c| {
+            // Probed from inside a chunk: at least this thread is active
+            // (and the caller's busy flag is set), so the reading is > 0.
+            let u = pool.utilization();
+            let mut m = peak.lock().unwrap();
+            if u > *m {
+                *m = u;
+            }
+            for v in c.iter_mut() {
+                *v = 1.0;
+            }
+        });
+        let seen = *peak.lock().unwrap();
+        assert!(seen > 0.0, "utilization must be positive mid-job (saw {seen})");
+        assert!(seen <= 1.0);
+        assert_eq!(pool.utilization(), 0.0, "idle again after the job drains");
     }
 }

@@ -8,11 +8,16 @@
 //! [`Tensor::data_mut`] copies only when the payload is actually shared.
 //!
 //! Besides the allocating `Tensor` methods, this module exposes the
-//! workspace kernels [`permute_into`] and [`sum_axis_into`] that write into
-//! caller-provided buffers (and optionally fan out over a
-//! [`crate::parallel::Pool`]) — the allocation-free canonicalization
-//! pre-pass used by the compiled execution engine
-//! ([`crate::exec::CompiledPlan`]).
+//! workspace kernels [`permute_into`], [`sum_axis_into`] and
+//! [`gather_into`] that write into caller-provided buffers (and optionally
+//! fan out over a [`crate::parallel::Pool`]) — the allocation-free
+//! canonicalization pre-pass used by the compiled execution engine
+//! ([`crate::exec::CompiledPlan`]) — plus axis-0 batch-formation
+//! primitives in allocating and allocation-free pairs:
+//! [`Tensor::concat_axis0`] / [`concat_into`] and [`Tensor::split_axis0`]
+//! / [`split_axis0_into`]. The coordinator coalesces requests with
+//! [`concat_into`] (into a reusable staging tensor) and hands each request
+//! its slice of the batched result with [`Tensor::split_axis0`].
 
 use crate::kernels::{add8, axpy8};
 use crate::parallel::Pool;
@@ -253,6 +258,43 @@ impl Tensor {
             shape,
             data: Arc::new(out),
         }
+    }
+
+    /// Concatenate `parts` along axis 0 (the batch mode of layer
+    /// expressions). All parts must share the trailing shape; the result's
+    /// leading extent is the sum of the parts'. This is the coordinator's
+    /// batch-formation primitive — see [`concat_into`] for the
+    /// allocation-free variant against a caller-held destination.
+    pub fn concat_axis0(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty(), "concat_axis0 needs at least one part");
+        let mut shape = parts[0].shape().to_vec();
+        assert!(!shape.is_empty(), "concat_axis0 needs rank >= 1");
+        shape[0] = parts.iter().map(|p| p.shape()[0]).sum();
+        let mut out = Tensor::zeros(&shape);
+        concat_into(parts, &mut out);
+        out
+    }
+
+    /// Split along axis 0 into consecutive chunks of the given leading
+    /// extents (which must sum to this tensor's leading extent) — the
+    /// inverse of [`Tensor::concat_axis0`], used to hand each request of a
+    /// coalesced batch its slice of the batched result.
+    pub fn split_axis0(&self, sizes: &[usize]) -> Vec<Tensor> {
+        assert!(!self.shape.is_empty(), "split_axis0 needs rank >= 1");
+        assert_eq!(
+            sizes.iter().sum::<usize>(),
+            self.shape[0],
+            "split sizes must sum to the leading extent"
+        );
+        let mut off = 0usize;
+        sizes
+            .iter()
+            .map(|&b| {
+                let t = self.slice_axis(0, off, off + b);
+                off += b;
+                t
+            })
+            .collect()
     }
 
     /// Zero-pad `axis` with `before` zeros in front and `after` behind.
@@ -593,6 +635,50 @@ fn gather_span(
     }
 }
 
+/// Concatenate `parts` along axis 0 into the caller-held `out`
+/// (allocation-free; copy-on-write duplicates `out`'s payload once if it is
+/// shared). All parts must share `out`'s trailing shape and their leading
+/// extents must sum to `out`'s — axis-0 concatenation of row-major tensors
+/// is a straight sequential copy, so the batched buffer holds each part's
+/// rows contiguously in part order.
+pub fn concat_into(parts: &[&Tensor], out: &mut Tensor) {
+    assert!(!parts.is_empty(), "concat_into needs at least one part");
+    let tail = &parts[0].shape()[1..];
+    let mut total = 0usize;
+    for p in parts {
+        assert!(!p.shape().is_empty(), "concat_into needs rank >= 1");
+        assert_eq!(&p.shape()[1..], tail, "concat_into parts must share trailing shape");
+        total += p.shape()[0];
+    }
+    assert!(!out.shape().is_empty(), "concat_into needs rank >= 1");
+    assert_eq!(out.shape()[0], total, "out leading extent must equal the sum of parts'");
+    assert_eq!(&out.shape()[1..], tail, "out trailing shape must match the parts'");
+    let dst = out.data_mut();
+    let mut off = 0usize;
+    for p in parts {
+        dst[off..off + p.len()].copy_from_slice(p.data());
+        off += p.len();
+    }
+}
+
+/// Split `src` along axis 0 into the caller-held `outs` (allocation-free):
+/// each destination receives the next `outs[i].shape()[0]` leading rows.
+/// The inverse of [`concat_into`]; leading extents must sum to `src`'s and
+/// trailing shapes must match.
+pub fn split_axis0_into(src: &Tensor, outs: &mut [Tensor]) {
+    assert!(!src.shape().is_empty(), "split_axis0_into needs rank >= 1");
+    let tail = &src.shape()[1..];
+    let total: usize = outs.iter().map(|o| o.shape()[0]).sum();
+    assert_eq!(src.shape()[0], total, "split extents must sum to src's leading extent");
+    let mut off = 0usize;
+    for o in outs.iter_mut() {
+        assert_eq!(&o.shape()[1..], tail, "split parts must share src's trailing shape");
+        let n = o.len();
+        o.data_mut().copy_from_slice(&src.data()[off..off + n]);
+        off += n;
+    }
+}
+
 /// Sum `src` (row-major, `shape`) over `axis` into `out`
 /// (`out.len() == src.len() / shape[axis]`). `out` is zeroed first; per
 /// output element the summation order over the axis matches
@@ -900,6 +986,42 @@ mod tests {
         let mut par = vec![0.0f32; 64 * 3 * 512];
         gather_into(t.data(), &shape, &strides, &mut par, false, Some(&pool));
         assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn concat_and_split_axis0_roundtrip() {
+        let a = Tensor::iota(&[2, 3]);
+        let b = a.map(|x| x + 100.0).slice_axis(0, 0, 1); // shape [1, 3]
+        let c = a.map(|x| x + 200.0); // shape [2, 3]
+        let cat = Tensor::concat_axis0(&[&a, &b, &c]);
+        assert_eq!(cat.shape(), &[5, 3]);
+        assert_eq!(&cat.data()[..6], a.data());
+        assert_eq!(&cat.data()[6..9], b.data());
+        assert_eq!(&cat.data()[9..], c.data());
+        // allocation-free variant into a held destination
+        let mut out = Tensor::zeros(&[5, 3]);
+        concat_into(&[&a, &b, &c], &mut out);
+        assert_eq!(out.data(), cat.data());
+        // split returns the original parts
+        let parts = cat.split_axis0(&[2, 1, 2]);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].data(), a.data());
+        assert_eq!(parts[1].data(), b.data());
+        assert_eq!(parts[2].data(), c.data());
+        // allocation-free split into held destinations
+        let mut outs = vec![Tensor::zeros(&[2, 3]), Tensor::zeros(&[1, 3]), Tensor::zeros(&[2, 3])];
+        split_axis0_into(&cat, &mut outs);
+        assert_eq!(outs[0].data(), a.data());
+        assert_eq!(outs[1].data(), b.data());
+        assert_eq!(outs[2].data(), c.data());
+    }
+
+    #[test]
+    #[should_panic]
+    fn concat_axis0_rejects_mismatched_tails() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 4]);
+        let _ = Tensor::concat_axis0(&[&a, &b]);
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Property tests for coalesced training batches: a batch of independent
+//! training requests replayed through one `TrainLayout` against one
+//! workspace ([`PathAutodiff::train_step_batch_into`]) must produce outputs,
+//! input gradients (the batch-mode slices) and **per-segment weight
+//! gradients** bit-identical to submitting every request individually —
+//! across all four convolution varieties × scalar/parallel backends ×
+//! batch sizes {1, 2, 4, 7} × {StoreAll, Sqrt} checkpoint policies — and
+//! tape tokens must be invalidated across batch epochs.
+
+use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff, TrainSegment};
+use conv_einsum::einsum::ConvKind;
+use conv_einsum::util::rng::Rng;
+use conv_einsum::{compile_expr, Backend, PlanOptions, Tensor, TrainWorkspace};
+use std::sync::Arc;
+
+const KINDS: [ConvKind; 4] = [
+    ConvKind::Same,
+    ConvKind::Valid,
+    ConvKind::Full,
+    ConvKind::Circular,
+];
+
+const BATCH_SIZES: [usize; 4] = [1, 2, 4, 7];
+
+const POLICIES: [CkptPolicy; 2] = [CkptPolicy::StoreAll, CkptPolicy::Sqrt];
+
+/// A 4-input expression whose conv mode `x` is 2-input (so every
+/// [`ConvKind`] is legal) with a contraction tail — 3 pairwise steps, so
+/// checkpointing policies genuinely recompute. Input 0 carries the batch
+/// mode `b`; inputs 1–3 are the "weights" whose per-segment gradients the
+/// batched replay must keep separate.
+fn grid_case() -> (&'static str, Vec<Vec<usize>>) {
+    (
+        "bsx,tsx,tu,uv->bvx|x",
+        vec![vec![2, 3, 9], vec![4, 3, 3], vec![4, 5], vec![5, 3]],
+    )
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|x| x.to_bits()).collect()
+}
+
+fn opts_for(kind: ConvKind, backend: Backend) -> PlanOptions {
+    PlanOptions {
+        training: true,
+        conv_kinds: Some(vec![kind]),
+        backend,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn batched_train_steps_bit_identical_to_individual_submission_full_grid() {
+    let (expr, dims) = grid_case();
+    for kind in KINDS {
+        for backend in [Backend::Scalar, Backend::Parallel { threads: 2 }] {
+            let compiled =
+                Arc::new(compile_expr(expr, &dims, &opts_for(kind, backend)).unwrap());
+            let ad = PathAutodiff::from_compiled(Arc::clone(&compiled));
+            let mut rng = Rng::new(91);
+            for &k in &BATCH_SIZES {
+                // k independent requests: distinct inputs, distinct weights,
+                // distinct cotangents.
+                let reqs: Vec<(Vec<Tensor>, Tensor)> = (0..k)
+                    .map(|_| {
+                        let ins: Vec<Tensor> = dims
+                            .iter()
+                            .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+                            .collect();
+                        let dout = Tensor::rand(compiled.out_shape(), -1.0, 1.0, &mut rng);
+                        (ins, dout)
+                    })
+                    .collect();
+                for policy in POLICIES {
+                    // Individual submission: each request alone, the way the
+                    // pre-batching coordinator served the stream.
+                    let mut ws_ref = TrainWorkspace::new();
+                    let meter = MemoryMeter::new();
+                    let mut want: Vec<(Tensor, Vec<Tensor>)> = Vec::new();
+                    for (ins, dout) in &reqs {
+                        let refs: Vec<&Tensor> = ins.iter().collect();
+                        let d = dout.clone();
+                        let yg = ad
+                            .forward_backward(&refs, |_| d.clone(), policy, &mut ws_ref, &meter)
+                            .unwrap();
+                        want.push(yg);
+                    }
+                    // Coalesced batch: one layout, one workspace, segments
+                    // in submission order.
+                    let refs: Vec<Vec<&Tensor>> =
+                        reqs.iter().map(|(ins, _)| ins.iter().collect()).collect();
+                    let mut outs: Vec<Tensor> =
+                        (0..k).map(|_| Tensor::zeros(compiled.out_shape())).collect();
+                    let mut grads: Vec<Vec<Tensor>> = (0..k)
+                        .map(|_| dims.iter().map(|d| Tensor::zeros(d)).collect())
+                        .collect();
+                    let mut ws = TrainWorkspace::new();
+                    let mut segs: Vec<TrainSegment> = refs
+                        .iter()
+                        .zip(reqs.iter())
+                        .zip(outs.iter_mut())
+                        .zip(grads.iter_mut())
+                        .map(|(((r, req), o), g)| TrainSegment {
+                            inputs: r.as_slice(),
+                            dout: &req.1,
+                            out: o,
+                            grads: g.as_mut_slice(),
+                        })
+                        .collect();
+                    ad.train_step_batch_into(&mut segs, policy, &mut ws, &meter)
+                        .unwrap();
+                    drop(segs);
+                    for i in 0..k {
+                        assert_eq!(
+                            bits(&outs[i]),
+                            bits(&want[i].0),
+                            "{kind:?} {backend:?} {policy:?} k={k} segment {i}: output diverged"
+                        );
+                        for (j, (gi, wi)) in
+                            grads[i].iter().zip(want[i].1.iter()).enumerate()
+                        {
+                            assert_eq!(
+                                bits(gi),
+                                bits(wi),
+                                "{kind:?} {backend:?} {policy:?} k={k} segment {i}: \
+                                 grad {j} diverged (weight grads must accumulate per segment)"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stale_tape_rejected_across_batch_epochs() {
+    let (expr, dims) = grid_case();
+    let compiled = Arc::new(
+        compile_expr(expr, &dims, &opts_for(ConvKind::Same, Backend::Scalar)).unwrap(),
+    );
+    let ad = PathAutodiff::from_compiled(Arc::clone(&compiled));
+    let mut rng = Rng::new(92);
+    let ins: Vec<Tensor> = dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+    let refs: Vec<&Tensor> = ins.iter().collect();
+    let dout = Tensor::rand(compiled.out_shape(), -1.0, 1.0, &mut rng);
+    let meter = MemoryMeter::new();
+    let mut ws = TrainWorkspace::new();
+
+    // Take a tape token, then run a coalesced batch over the same
+    // workspace: the batch advances the epoch per segment, so the old
+    // token's backward must be rejected, not silently replay segment state.
+    let mut out = Tensor::zeros(compiled.out_shape());
+    let token = ad
+        .forward_with_tape_into(&refs, CkptPolicy::StoreAll, &mut ws, &mut out, &meter)
+        .unwrap();
+
+    let reqs: Vec<(Vec<Tensor>, Tensor)> = (0..2)
+        .map(|_| {
+            let ins: Vec<Tensor> = dims
+                .iter()
+                .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+                .collect();
+            (ins, Tensor::rand(compiled.out_shape(), -1.0, 1.0, &mut rng))
+        })
+        .collect();
+    let seg_refs: Vec<Vec<&Tensor>> = reqs.iter().map(|(i, _)| i.iter().collect()).collect();
+    let mut outs: Vec<Tensor> = (0..2).map(|_| Tensor::zeros(compiled.out_shape())).collect();
+    let mut grads: Vec<Vec<Tensor>> = (0..2)
+        .map(|_| dims.iter().map(|d| Tensor::zeros(d)).collect())
+        .collect();
+    let mut segs: Vec<TrainSegment> = seg_refs
+        .iter()
+        .zip(reqs.iter())
+        .zip(outs.iter_mut())
+        .zip(grads.iter_mut())
+        .map(|(((r, req), o), g)| TrainSegment {
+            inputs: r.as_slice(),
+            dout: &req.1,
+            out: o,
+            grads: g.as_mut_slice(),
+        })
+        .collect();
+    ad.train_step_batch_into(&mut segs, CkptPolicy::StoreAll, &mut ws, &meter)
+        .unwrap();
+    drop(segs);
+
+    let mut stale_grads: Vec<Tensor> = dims.iter().map(|d| Tensor::zeros(d)).collect();
+    let err = ad
+        .backward_into(&token, &dout, &mut ws, &mut stale_grads, &meter)
+        .expect_err("token from before the batch must be invalid after it");
+    assert!(
+        err.to_string().contains("invalidated"),
+        "stale-tape error should say so: {err}"
+    );
+}
