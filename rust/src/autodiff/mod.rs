@@ -85,6 +85,13 @@ pub enum CkptPolicy {
     None,
 }
 
+impl CkptPolicy {
+    /// All policies, in the order [`crate::exec::CompiledPlan`] caches
+    /// their training layouts. [`crate::exec::CompiledPlan::verify`]
+    /// iterates this to statically check every layout.
+    pub const ALL: [CkptPolicy; 3] = [CkptPolicy::StoreAll, CkptPolicy::Sqrt, CkptPolicy::None];
+}
+
 /// Tracks live tensor bytes during an evaluation, recording the peak.
 /// This is the quantity Table 3 bounds with GPU memory.
 #[derive(Debug, Default)]

@@ -56,6 +56,13 @@
 //! ([`crate::parallel::Pool::sized`]), which carry the same busy-flag
 //! arbitration — but their workers add to the global pool's, so prefer the
 //! default backend outside benchmarking.
+//!
+//! Every plan the service caches is **statically verified** before it is
+//! shared: [`PlanCache`] runs the [`crate::verify`] plan verifier
+//! ([`CompiledPlan::verify`]) on insertion (and debug/test builds verify
+//! at compile time), so a schedule with an unsound workspace layout,
+//! out-of-bounds gather table or stale kernel accumulation-order version
+//! never reaches a worker.
 
 mod batcher;
 mod metrics;

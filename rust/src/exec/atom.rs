@@ -56,6 +56,7 @@ pub struct ConvAxis {
 }
 
 /// Build the triple table for one conv axis.
+// alloc-ok(fn): table construction runs once per atom at compile/lowering time.
 pub fn conv_triples(
     kind: ConvKind,
     ia: usize,
@@ -136,6 +137,7 @@ pub struct Atom {
 /// `moduli` optionally overrides the circular wrap modulus per entry of
 /// `spec.conv` (needed when this op is a step inside a multi-way convolution
 /// whose feature size lives on a tensor not participating in this step).
+// alloc-ok(fn): canonicalization analysis runs once per step at compile time.
 pub fn canonicalize(sized: &SizedSpec, moduli: &[Option<usize>]) -> Atom {
     assert_eq!(sized.spec.n_inputs(), 2, "atom requires exactly 2 inputs");
     assert!(moduli.is_empty() || moduli.len() == sized.spec.conv.len());
@@ -325,12 +327,21 @@ pub struct AtomKernel {
     fwd: std::sync::OnceLock<(Vec<(u32, u32, u32)>, Vec<(u32, u32, u32, u32)>)>,
     combined: std::sync::OnceLock<Vec<(u32, u32, u32)>>,
     step: StepKernel,
+    /// [`crate::kernels::ACCUM_ORDER_VERSION`] captured when this holder
+    /// was built; [`crate::exec::CompiledPlan::verify`] checks it so stale
+    /// compiled steps cannot silently mix accumulation orders.
+    pub(crate) order_version: u32,
 }
 
 impl AtomKernel {
     /// The microkernel family selected for this atom's inner loops.
     pub fn step(&self) -> StepKernel {
         self.step
+    }
+
+    /// The accumulation-order version this holder was built under.
+    pub fn order_version(&self) -> u32 {
+        self.order_version
     }
 
     /// Forward tables (head triples + last-axis runs); conv atoms only.
@@ -384,6 +395,7 @@ impl Atom {
             fwd: std::sync::OnceLock::new(),
             combined: std::sync::OnceLock::new(),
             step: self.select_kernel(),
+            order_version: crate::kernels::ACCUM_ORDER_VERSION,
         }
     }
 
@@ -410,6 +422,7 @@ impl Atom {
     /// Build the flattened combined triple table: offsets into the a-conv
     /// block, b-conv block and out-conv block for every contributing
     /// combination across all conv axes.
+    // alloc-ok(fn): built at most once per atom (cached in the OnceLock).
     fn combined_triples(&self) -> Vec<(u32, u32, u32)> {
         let mut combined: Vec<(u32, u32, u32)> = vec![(0, 0, 0)];
         for c in &self.conv {
@@ -433,6 +446,7 @@ impl Atom {
     /// consecutive feature indices `ia` map to consecutive outputs `p`, so
     /// the innermost loop becomes a vectorizable axpy over slices instead of
     /// per-element gather/scatter.
+    // alloc-ok(fn): built at most once per atom (cached in the OnceLock).
     fn head_and_runs(&self) -> (Vec<(u32, u32, u32)>, Vec<(u32, u32, u32, u32)>) {
         debug_assert!(!self.conv.is_empty());
         let head_axes = &self.conv[..self.conv.len() - 1];
@@ -492,6 +506,8 @@ impl Atom {
     }
 
     /// Execute the atom with precomputed kernel tables.
+    // alloc-ok(fn): one-shot entry point; the hot path is `forward_into`
+    // through a caller-held workspace.
     pub fn execute_with_kernel(
         &self,
         kernel: &AtomKernel,
@@ -677,6 +693,8 @@ impl Atom {
     }
 
     /// Vector–Jacobian product with precomputed kernel tables.
+    // alloc-ok(fn): one-shot entry point; the hot path is `backward_into`
+    // through a caller-held workspace.
     pub fn vjp_with_kernel(
         &self,
         kernel: &AtomKernel,
@@ -876,6 +894,7 @@ impl Atom {
     }
 }
 
+// alloc-ok(fn): compile-time helper (one-shot vjp un-canonicalization).
 fn invert_perm(perm: &[usize]) -> Vec<usize> {
     let mut inv = vec![0usize; perm.len()];
     for (i, &p) in perm.iter().enumerate() {

@@ -79,7 +79,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 /// Where a step operand's flat data lives at run time.
 #[derive(Debug, Clone)]
-enum Operand {
+pub(crate) enum Operand {
     /// Caller-provided input tensor `i`.
     Input(usize),
     /// Intermediate produced by an earlier step, at this value-arena range.
@@ -101,6 +101,7 @@ struct CanonOp {
     identity: bool,
 }
 
+// alloc-ok(fn): canonicalization recipes are resolved once at compile time.
 fn canon_op(dims: &[usize], presum: &[usize], perm: &[usize]) -> CanonOp {
     let mut shape = dims.to_vec();
     let mut sums = Vec::with_capacity(presum.len());
@@ -124,12 +125,12 @@ fn canon_op(dims: &[usize], presum: &[usize], perm: &[usize]) -> CanonOp {
 /// single strided gather (broadcast axes carry stride 0), resolved at
 /// compile time so the replay allocates nothing.
 #[derive(Debug, Clone)]
-struct GradGather {
+pub(crate) struct GradGather {
     /// The operand's natural (working-list) shape.
-    out_shape: Vec<usize>,
+    pub(crate) out_shape: Vec<usize>,
     /// Per output axis, its stride into the canonical flat buffer
     /// (0 = broadcast of a pre-summed axis).
-    strides: Vec<usize>,
+    pub(crate) strides: Vec<usize>,
 }
 
 /// Build the [`GradGather`] for an operand with natural shape `dims`,
@@ -137,6 +138,7 @@ struct GradGather {
 /// canonical permutation `perm`. Element-for-element identical to
 /// `permute(invert(perm))` followed by ascending `broadcast_axis` calls —
 /// the allocating path the heap tape used.
+// alloc-ok(fn): gather tables are resolved once at compile time.
 fn grad_gather(dims: &[usize], presum: &[usize], perm: &[usize]) -> GradGather {
     let rank = dims.len();
     let mut is_presum = vec![false; rank];
@@ -165,6 +167,7 @@ fn grad_gather(dims: &[usize], presum: &[usize], perm: &[usize]) -> GradGather {
     }
 }
 
+// alloc-ok(fn): compile-time helper.
 fn invert_perm(perm: &[usize]) -> Vec<usize> {
     let mut inv = vec![0usize; perm.len()];
     for (i, &p) in perm.iter().enumerate() {
@@ -177,27 +180,27 @@ fn invert_perm(perm: &[usize]) -> Vec<usize> {
 #[derive(Debug, Clone)]
 pub struct CompiledStep {
     /// DAG node ids (inputs are `0..n`; step `k` produces node `n + k`).
-    lhs_node: usize,
-    rhs_node: usize,
+    pub(crate) lhs_node: usize,
+    pub(crate) rhs_node: usize,
     /// Run-time locations of the operands' flat data.
-    lhs_src: Operand,
-    rhs_src: Operand,
+    pub(crate) lhs_src: Operand,
+    pub(crate) rhs_src: Operand,
     /// Canonicalization recipes for the two operands.
     canon_a: CanonOp,
     canon_b: CanonOp,
     /// Value-arena range receiving this step's output (post `out_perm`).
-    out: Range<usize>,
+    pub(crate) out: Range<usize>,
     /// Whether `atom.out_perm` is the identity (raw layout == working-list
     /// layout), precomputed so replays skip the per-run check.
     out_identity: bool,
     /// Inverse of `atom.out_perm`: takes a working-list-layout cotangent
     /// back to the raw kernel layout the backward kernels consume.
-    inv_out_perm: Vec<usize>,
+    pub(crate) inv_out_perm: Vec<usize>,
     /// VJP un-canonicalization gathers for the two operands.
-    grad_a: GradGather,
-    grad_b: GradGather,
-    atom: Atom,
-    kernel: AtomKernel,
+    pub(crate) grad_a: GradGather,
+    pub(crate) grad_b: GradGather,
+    pub(crate) atom: Atom,
+    pub(crate) kernel: AtomKernel,
 }
 
 impl CompiledStep {
@@ -305,6 +308,7 @@ impl Default for TrainWorkspace {
 }
 
 impl TrainWorkspace {
+    // alloc-ok(fn): workspace construction is one-time warm-up, not replay.
     pub fn new() -> TrainWorkspace {
         static NEXT_ID: AtomicU64 = AtomicU64::new(1);
         TrainWorkspace {
@@ -370,6 +374,7 @@ struct ArenaAlloc {
 }
 
 impl ArenaAlloc {
+    // alloc-ok(fn): the arena allocator itself runs only at compile time.
     fn new() -> ArenaAlloc {
         ArenaAlloc {
             len: 0,
@@ -404,6 +409,7 @@ impl ArenaAlloc {
         start..self.len
     }
 
+    // alloc-ok(fn): the arena allocator itself runs only at compile time.
     fn free(&mut self, r: Range<usize>) {
         if r.start == r.end {
             return;
@@ -421,8 +427,53 @@ impl ArenaAlloc {
     }
 }
 
+/// Reject plans whose shape arithmetic could overflow `usize` before the
+/// lowering loop multiplies it unchecked. Per step, every internal product
+/// the lowering computes (canonical buffer lengths, triple-table
+/// capacities, raw output length) is bounded by `∏ dims[0] · ∏ dims[1]` —
+/// per conv axis the output extent satisfies `ia + ib − 1 ≤ ia · ib` — so a
+/// checked product per step, plus a checked running total with headroom for
+/// the training arena (values + cotangents + input copies), covers the
+/// layout computation. Degenerate huge dims surface a structured error here
+/// instead of wrapping into a silently undersized arena.
+fn check_dims_no_overflow(plan: &Plan) -> Result<()> {
+    let prod = |dims: &[usize]| dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d));
+    let mut total: usize = 0;
+    for (k, step) in plan.steps.iter().enumerate() {
+        let bound = prod(&step.sized.dims[0])
+            .zip(prod(&step.sized.dims[1]))
+            .and_then(|(a, b)| a.checked_mul(b))
+            .ok_or_else(|| {
+                anyhow!(
+                    "step {k} of '{}': element-count product of {:?} × {:?} overflows \
+                     usize; refusing to compile a layout from wrapped sizes",
+                    plan.expr,
+                    step.sized.dims[0],
+                    step.sized.dims[1]
+                )
+            })?;
+        total = total.checked_add(bound).ok_or_else(|| {
+            anyhow!(
+                "plan '{}': cumulative arena footprint overflows usize at step {k}",
+                plan.expr
+            )
+        })?;
+    }
+    // Training holds, per node, at most one value and one cotangent slot,
+    // and each step touches ≤ 3 node-sized buffers (two operands, one
+    // output) — 6× the per-step bound total covers the peak.
+    total.checked_mul(6).ok_or_else(|| {
+        anyhow!(
+            "plan '{}': training arena footprint (values + cotangents) overflows usize",
+            plan.expr
+        )
+    })?;
+    Ok(())
+}
+
 /// Largest intermediate produced while pre-summing `presum` axes (descending
 /// order) out of a tensor of `dims`; 0 when no pre-summing happens.
+// alloc-ok(fn): compile-time scratch sizing.
 fn presum_chain_max(dims: &[usize], presum: &[usize]) -> usize {
     if presum.is_empty() {
         return 0;
@@ -442,19 +493,19 @@ fn presum_chain_max(dims: &[usize], presum: &[usize]) -> usize {
 /// [`Arc`] (the coordinator and layer caches do).
 #[derive(Debug, Clone)]
 pub struct CompiledPlan {
-    plan: Arc<Plan>,
+    pub(crate) plan: Arc<Plan>,
     /// Execution options hoisted out of the per-call path: every run of this
     /// compiled entry uses one consistent backend.
     opts: ExecOptions,
-    in_dims: Vec<Vec<usize>>,
+    pub(crate) in_dims: Vec<Vec<usize>>,
     out_shape: Vec<usize>,
     /// Value-arena range and shape of the root intermediate (pre final_perm).
-    root: Range<usize>,
+    pub(crate) root: Range<usize>,
     root_shape: Vec<usize>,
     /// Inverse of `plan.final_perm` (output cotangent → root layout).
-    inv_final_perm: Option<Vec<usize>>,
-    steps: Vec<CompiledStep>,
-    values_len: usize,
+    pub(crate) inv_final_perm: Option<Vec<usize>>,
+    pub(crate) steps: Vec<CompiledStep>,
+    pub(crate) values_len: usize,
     scratch_a_len: usize,
     scratch_b_len: usize,
     scratch_out_len: usize,
@@ -473,6 +524,8 @@ impl CompiledPlan {
     }
 
     /// Lower a plan into a compiled program.
+    // alloc-ok(fn): lowering runs once per (expression, shapes); replays are
+    // allocation-free.
     pub fn compile_arc(plan: Arc<Plan>) -> Result<CompiledPlan> {
         let n = plan.n_inputs;
         if n < 2 {
@@ -517,6 +570,10 @@ impl CompiledPlan {
             .enumerate()
             .map(|(i, d)| d.ok_or_else(|| anyhow!("input {i} is not consumed by any step")))
             .collect::<Result<_>>()?;
+
+        // Shape-arithmetic overflow guard: everything below multiplies
+        // extents unchecked, so degenerate huge dims must be rejected first.
+        check_dims_no_overflow(&plan)?;
 
         // Liveness: last step at which each node is read.
         let mut last_use = vec![0usize; n + ksteps];
@@ -600,7 +657,7 @@ impl CompiledPlan {
             backend: plan.backend,
         };
         let inv_final_perm = plan.final_perm.as_ref().map(|p| invert_perm(p));
-        Ok(CompiledPlan {
+        let compiled = CompiledPlan {
             opts,
             in_dims,
             out_shape,
@@ -615,7 +672,18 @@ impl CompiledPlan {
             steps,
             plan,
             train: Default::default(),
-        })
+        };
+        // Debug/test builds statically verify every freshly lowered plan
+        // (arena liveness, permutations, gathers, FLOP totals, kernel order
+        // versions — see `crate::verify`). Release callers get the same
+        // check on [`PlanCache`] insertion or on demand via
+        // [`CompiledPlan::verify`].
+        if cfg!(debug_assertions) {
+            compiled
+                .verify()
+                .map_err(|e| anyhow!("freshly compiled plan failed verification: {e}"))?;
+        }
+        Ok(compiled)
     }
 
     // ---- accessors -------------------------------------------------------
@@ -869,36 +937,36 @@ fn canonicalize_into(
 
 /// Where one step's gradient contribution lands in the training arena.
 #[derive(Debug, Clone)]
-struct GradTarget {
-    range: Range<usize>,
+pub(crate) struct GradTarget {
+    pub(crate) range: Range<usize>,
     /// First contribution for this node: gather-write. Otherwise the gather
     /// accumulates onto the resident cotangent (same elementwise result as
     /// the heap tape's `add_assign`).
-    fresh: bool,
+    pub(crate) fresh: bool,
 }
 
 /// One forward (or recompute) step placement: which compiled step to run
 /// and where its operands/output live in the arena at that point.
 #[derive(Debug, Clone)]
-struct TrainStepLoc {
-    k: usize,
-    a: Range<usize>,
-    b: Range<usize>,
-    out: Range<usize>,
+pub(crate) struct TrainStepLoc {
+    pub(crate) k: usize,
+    pub(crate) a: Range<usize>,
+    pub(crate) b: Range<usize>,
+    pub(crate) out: Range<usize>,
 }
 
 /// One backward step: checkpoint-segment recomputes to replay first, then
 /// the VJP with fully-resolved operand/cotangent/target ranges.
 #[derive(Debug, Clone)]
-struct TrainBwdStep {
-    k: usize,
-    recompute: Vec<TrainStepLoc>,
-    a: Range<usize>,
-    b: Range<usize>,
+pub(crate) struct TrainBwdStep {
+    pub(crate) k: usize,
+    pub(crate) recompute: Vec<TrainStepLoc>,
+    pub(crate) a: Range<usize>,
+    pub(crate) b: Range<usize>,
     /// Cotangent of this step's output (working-list layout).
-    dnode: Range<usize>,
-    da: GradTarget,
-    db: GradTarget,
+    pub(crate) dnode: Range<usize>,
+    pub(crate) da: GradTarget,
+    pub(crate) db: GradTarget,
 }
 
 /// A training-mode liveness layout: arena slots for every input copy, tape
@@ -916,20 +984,20 @@ struct TrainBwdStep {
 /// occupant dies. `arena_bytes` is therefore the training step's peak tape
 /// footprint (the quantity the paper's Table 3 bounds), reported by
 /// [`crate::autodiff::MemoryMeter`] as a high-water mark.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct TrainLayout {
     policy: CkptPolicy,
-    input_ranges: Vec<Range<usize>>,
-    fwd: Vec<TrainStepLoc>,
+    pub(crate) input_ranges: Vec<Range<usize>>,
+    pub(crate) fwd: Vec<TrainStepLoc>,
     /// Root value range (pre final_perm) — the taped output source.
-    root: Range<usize>,
+    pub(crate) root: Range<usize>,
     /// Cotangent slot of the root (the backward's entry point).
-    droot: Range<usize>,
-    bwd: Vec<TrainBwdStep>,
+    pub(crate) droot: Range<usize>,
+    pub(crate) bwd: Vec<TrainBwdStep>,
     /// Cotangent ranges of the `n` inputs after the backward completes.
-    input_grads: Vec<Range<usize>>,
+    pub(crate) input_grads: Vec<Range<usize>>,
     /// Arena high-water mark, in elements.
-    arena_len: usize,
+    pub(crate) arena_len: usize,
 }
 
 impl TrainLayout {
@@ -1073,6 +1141,8 @@ impl CompiledPlan {
     /// Simulate the heap tape's forward+backward schedule under `policy`
     /// against a compile-time arena, recording every step's operand/output
     /// ranges (including recompute segments) and every cotangent's slot.
+    // alloc-ok(fn): layout simulation runs once per (plan, policy) and is
+    // cached; training replays are allocation-free.
     fn build_train_layout(&self, policy: CkptPolicy) -> TrainLayout {
         let n = self.plan.n_inputs;
         let ksteps = self.steps.len();
@@ -1500,6 +1570,7 @@ pub struct PlanKey {
 }
 
 impl PlanKey {
+    // alloc-ok(fn): cache-key construction happens per lookup, not per replay.
     fn new(expr: &str, dims: &[Vec<usize>], opts: &PlanOptions) -> PlanKey {
         PlanKey {
             expr: expr.to_string(),
@@ -1596,6 +1667,14 @@ impl PlanCache {
         // racing compilers of the same key converge on whichever inserts
         // first.
         let compiled = Arc::new(compile()?);
+        // Cached entries are replayed many times by many workers, so verify
+        // them statically even in release builds (debug builds already
+        // verified inside `compile_arc`; the check is idempotent).
+        if !cfg!(debug_assertions) {
+            compiled
+                .verify()
+                .map_err(|e| anyhow!("compiled plan failed verification: {e}"))?;
+        }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.map.lock().unwrap();
         if !map.contains_key(&key) && map.len() >= self.capacity {
@@ -1642,12 +1721,14 @@ impl PlanCache {
 /// Parse + size + plan + compile in one call (≥ 2 inputs; single-input
 /// expressions have no pairwise path and go through
 /// [`crate::exec::conv_einsum`] directly).
+// alloc-ok(fn): one-shot parse + plan + compile entry point.
 pub fn compile_expr(expr: &str, dims: &[Vec<usize>], opts: &PlanOptions) -> Result<CompiledPlan> {
     let spec = parse(expr).map_err(|e| anyhow!("{e}"))?;
     compile_spec(spec, dims, opts)
 }
 
 /// As [`compile_expr`] starting from an already-parsed spec.
+// alloc-ok(fn): one-shot plan + compile entry point.
 pub fn compile_spec(
     spec: EinsumSpec,
     dims: &[Vec<usize>],

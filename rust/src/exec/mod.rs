@@ -208,6 +208,8 @@ pub fn conv_einsum(expr: &str, inputs: &[&Tensor]) -> Result<Tensor> {
 
 /// As [`conv_einsum`] with explicit planning options (strategy, training
 /// cost model, cost caps, convolution varieties, execution backend).
+// alloc-ok(fn): one-shot parse + plan + execute wrapper; repeat callers use
+// the compiled engine.
 pub fn conv_einsum_with(expr: &str, inputs: &[&Tensor], opts: &PlanOptions) -> Result<Tensor> {
     let spec = parse(expr).map_err(|e| anyhow!("{e}"))?;
     let dims: Vec<Vec<usize>> = inputs.iter().map(|t| t.shape().to_vec()).collect();
@@ -227,6 +229,7 @@ pub fn conv_einsum_with(expr: &str, inputs: &[&Tensor], opts: &PlanOptions) -> R
 }
 
 /// Evaluate a 1-input expression (self-sums + permutation).
+// alloc-ok(fn): degenerate 1-input path, not part of the compiled hot loop.
 pub fn single_input_eval(sized: &SizedSpec, x: &Tensor) -> Tensor {
     let spec = &sized.spec;
     let modes = &spec.inputs[0];

@@ -16,6 +16,8 @@
 //!   crops; Valid shifts by `filt−1` and crops; Circular wraps modulo the
 //!   feature (max occurrence) size. True convolution, not correlation.
 
+// alloc-ok(file): test-only oracle, never on a hot path.
+
 use crate::einsum::{ConvKind, ModeId, SizedSpec};
 use crate::tensor::{for_each_index, Tensor};
 

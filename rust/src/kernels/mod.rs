@@ -38,6 +38,17 @@
 /// Lane width of the hand-unrolled kernels (one 256-bit register of `f32`).
 pub const LANES: usize = 8;
 
+/// Version tag of the normative accumulation order documented above.
+///
+/// Every compiled step's kernel-table holder
+/// ([`crate::exec::AtomKernel`]) records the version current at lowering
+/// time, and [`crate::exec::CompiledPlan::verify`] rejects plans whose
+/// steps carry a stale tag. **Bump this constant whenever the documented
+/// accumulation order changes** (e.g. a future explicit-SIMD variant that
+/// reassociates differently) — stale compiled artifacts then fail
+/// verification instead of silently breaking cross-backend bit-identity.
+pub const ACCUM_ORDER_VERSION: u32 = 1;
+
 /// Which microkernel family a compiled step's inner loops use. Chosen once
 /// per step at compile/lowering time (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

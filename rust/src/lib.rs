@@ -139,6 +139,29 @@
 //! the shared pool (e.g. several coordinator workers) are arbitrated by the
 //! pool itself: one fans out, the rest run serially — never oversubscribing.
 //!
+//! ## Correctness & static analysis
+//!
+//! The engine's invariants are machine-checked, not just documented
+//! (`INVARIANTS.md` is the catalogue):
+//!
+//! * [`verify`] — a static plan verifier ([`CompiledPlan::verify`])
+//!   simulates every compiled schedule (inference and all three
+//!   checkpoint-policy training layouts) and proves arena-slot
+//!   disjointness, def-before-use dataflow, in-bounds permutations and
+//!   gather tables, overflow-free offset arithmetic, planner-cost/FLOP
+//!   agreement, and accumulation-order version pinning. It runs
+//!   automatically after every compile in debug/test builds and on every
+//!   [`exec::PlanCache`] insertion in release builds.
+//! * [`verify::pool_model`] — a deterministic exhaustive-interleaving
+//!   model checker for the [`parallel::Pool`] epoch/claim/notify protocol
+//!   (no lost wakeups, no double-claimed or unclaimed chunks, no
+//!   deadlock), run as an ordinary test.
+//! * `tools/hotpath_lint.rs` — a source lint (CI job plus the
+//!   `tests/static_analysis.rs` gate) that forbids allocation constructs
+//!   and undocumented `unsafe` in the hot-path modules (`exec`,
+//!   `kernels`, `parallel`, `tensor`) outside `// alloc-ok:` annotated
+//!   sites.
+//!
 //! ## Cargo features
 //!
 //! * `pjrt` (off by default): compiles the XLA-backed [`runtime`] that
@@ -150,6 +173,8 @@
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured record.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod autodiff;
 pub mod coordinator;
@@ -165,6 +190,7 @@ pub mod runtime;
 pub mod tensor;
 pub mod tnn;
 pub mod util;
+pub mod verify;
 
 pub use einsum::{EinsumSpec, ModeKind, SizedSpec};
 pub use exec::{
@@ -174,3 +200,4 @@ pub use exec::{
 pub use parallel::Pool;
 pub use planner::{contract_path, Plan, PlanOptions, Strategy};
 pub use tensor::Tensor;
+pub use verify::{SimContext, VerifyError};

@@ -89,6 +89,9 @@ pub fn default_threads() -> usize {
 #[derive(Clone, Copy)]
 struct JobRef {
     data: *const (),
+    // SAFETY contract of `call`: `data` must point at the live `ChunkJob`
+    // the shim was monomorphized for (upheld by `run_chunks`, which blocks
+    // until every participant is done with the pointee).
     call: unsafe fn(*const (), usize),
 }
 
@@ -112,11 +115,20 @@ struct ChunkJob<F> {
 /// `len` describe a valid `f32` buffer, and no other thread may hold chunk
 /// index `i` (guaranteed by the claim cursor).
 unsafe fn call_chunk<F: Fn(usize, &mut [f32]) + Sync>(data: *const (), i: usize) {
-    let job = &*(data as *const ChunkJob<F>);
+    // SAFETY: the caller contract guarantees `data` points at a live
+    // `ChunkJob<F>` (the publishing `run_chunks` frame blocks until every
+    // participant is done, so the pointee outlives this call).
+    let job = unsafe { &*(data as *const ChunkJob<F>) };
     let start = i * job.chunk;
     let end = (start + job.chunk).min(job.len);
-    let slice = std::slice::from_raw_parts_mut(job.base.add(start), end - start);
-    (*job.f)(i, slice);
+    // SAFETY: `base`/`len` describe a valid `f32` buffer (they come from a
+    // live `&mut [f32]` held by the publisher), `start <= end <= len` by
+    // construction, and the claim cursor hands index `i` to exactly one
+    // thread, so this `&mut` sub-slice is never aliased.
+    let slice = unsafe { std::slice::from_raw_parts_mut(job.base.add(start), end - start) };
+    // SAFETY: `job.f` points at the publisher's live closure; `F: Sync`
+    // makes shared calls from multiple worker threads sound.
+    unsafe { (*job.f)(i, slice) };
 }
 
 /// Mutex-protected dispatch state shared between the caller and workers.
@@ -198,6 +210,10 @@ fn execute_chunks(shared: &Shared, job: JobRef, n_chunks: usize, claim: usize) {
         let end = (start + claim).min(n_chunks);
         let mut first_panic: Option<Box<dyn Any + Send>> = None;
         for i in start..end {
+            // SAFETY: `job.data` outlives this call (the publisher blocks
+            // until `remaining == 0 && participants == 0`), and `i` was
+            // claimed from the cursor by this thread alone, satisfying
+            // `call_chunk`'s contract.
             let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, i) }));
             if let Err(payload) = result {
                 // Keep the first payload; the publishing caller re-raises it.
@@ -294,7 +310,7 @@ impl Pool {
             threads: threads.max(1),
             busy: AtomicBool::new(false),
             shared: OnceLock::new(),
-            handles: Mutex::new(Vec::new()),
+            handles: Mutex::new(Vec::new()), // alloc-ok: one-time pool construction
         }
     }
 
@@ -369,6 +385,7 @@ impl Pool {
             for i in 0..self.threads - 1 {
                 let s = Arc::clone(&shared);
                 if let Ok(h) = std::thread::Builder::new()
+                    // alloc-ok: one-time lazy worker spawn, not steady state
                     .name(format!("conv-einsum-pool-{i}"))
                     .spawn(move || worker_loop(s))
                 {

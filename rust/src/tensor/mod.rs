@@ -43,6 +43,7 @@ impl fmt::Debug for Tensor {
 }
 
 /// Row-major strides for `shape`.
+// alloc-ok(fn): returns a fresh stride table; hot paths precompute it.
 pub fn strides_for(shape: &[usize]) -> Vec<usize> {
     let mut strides = vec![1usize; shape.len()];
     for i in (0..shape.len().saturating_sub(1)).rev() {
@@ -51,10 +52,66 @@ pub fn strides_for(shape: &[usize]) -> Vec<usize> {
     strides
 }
 
+/// A shape whose element count (or a stride) overflows `usize` — a
+/// degenerate or corrupted shape, never a representable tensor. Surfaced as
+/// a structured error so layout computations ([`checked_elems`],
+/// [`checked_strides_for`], `CompiledPlan` lowering) reject such shapes
+/// instead of wrapping silently in release builds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeOverflow {
+    pub shape: Vec<usize>,
+}
+
+impl fmt::Display for ShapeOverflow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "shape {:?} has an element count that overflows usize",
+            self.shape
+        )
+    }
+}
+
+impl std::error::Error for ShapeOverflow {}
+
+/// Element count of `shape`, or [`ShapeOverflow`] when the product does not
+/// fit a `usize` (in release builds the unchecked product would wrap and
+/// silently size a buffer wrong).
+// alloc-ok(fn): allocates only on the error path.
+pub fn checked_elems(shape: &[usize]) -> Result<usize, ShapeOverflow> {
+    shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| ShapeOverflow {
+            shape: shape.to_vec(),
+        })
+}
+
+/// As [`strides_for`], rejecting shapes whose strides overflow `usize`.
+// alloc-ok(fn): returns a fresh stride table; hot paths precompute it.
+pub fn checked_strides_for(shape: &[usize]) -> Result<Vec<usize>, ShapeOverflow> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1]
+            .checked_mul(shape[i + 1])
+            .ok_or_else(|| ShapeOverflow {
+                shape: shape.to_vec(),
+            })?;
+    }
+    Ok(strides)
+}
+
+/// Panicking wrapper over [`checked_elems`] for the allocating
+/// constructors: a clear shape-overflow message beats a wrapped size.
+fn elems_or_panic(shape: &[usize]) -> usize {
+    checked_elems(shape).unwrap_or_else(|e| panic!("{e}"))
+}
+
 impl Tensor {
     /// All-zero tensor.
+    // alloc-ok(fn): allocating constructor.
     pub fn zeros(shape: &[usize]) -> Tensor {
-        let n: usize = shape.iter().product();
+        let n = elems_or_panic(shape);
         Tensor {
             shape: shape.to_vec(),
             data: Arc::new(vec![0.0; n]),
@@ -62,8 +119,9 @@ impl Tensor {
     }
 
     /// Tensor filled with `v`.
+    // alloc-ok(fn): allocating constructor.
     pub fn full(shape: &[usize], v: f32) -> Tensor {
-        let n: usize = shape.iter().product();
+        let n = elems_or_panic(shape);
         Tensor {
             shape: shape.to_vec(),
             data: Arc::new(vec![v; n]),
@@ -71,9 +129,10 @@ impl Tensor {
     }
 
     /// Build from data; length must match the shape product.
+    // alloc-ok(fn): allocating constructor.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(
-            shape.iter().product::<usize>(),
+            elems_or_panic(shape),
             data.len(),
             "shape {:?} incompatible with {} elements",
             shape,
@@ -86,6 +145,7 @@ impl Tensor {
     }
 
     /// Scalar (rank-0) tensor.
+    // alloc-ok(fn): allocating constructor.
     pub fn scalar(v: f32) -> Tensor {
         Tensor {
             shape: vec![],
@@ -94,8 +154,9 @@ impl Tensor {
     }
 
     /// Uniform random in [lo, hi).
+    // alloc-ok(fn): allocating constructor.
     pub fn rand(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Tensor {
-        let n: usize = shape.iter().product();
+        let n = elems_or_panic(shape);
         Tensor {
             shape: shape.to_vec(),
             data: Arc::new(rng.fill_uniform(n, lo, hi)),
@@ -103,8 +164,9 @@ impl Tensor {
     }
 
     /// Normal(mean, std) random.
+    // alloc-ok(fn): allocating constructor.
     pub fn randn(shape: &[usize], mean: f32, std: f32, rng: &mut Rng) -> Tensor {
-        let n: usize = shape.iter().product();
+        let n = elems_or_panic(shape);
         Tensor {
             shape: shape.to_vec(),
             data: Arc::new((0..n).map(|_| rng.normal_f32(mean, std)).collect()),
@@ -112,8 +174,9 @@ impl Tensor {
     }
 
     /// Values 0,1,2,... (testing helper).
+    // alloc-ok(fn): allocating constructor.
     pub fn iota(shape: &[usize]) -> Tensor {
-        let n: usize = shape.iter().product();
+        let n = elems_or_panic(shape);
         Tensor {
             shape: shape.to_vec(),
             data: Arc::new((0..n).map(|i| i as f32).collect()),
@@ -175,9 +238,10 @@ impl Tensor {
     // ---- layout ops ------------------------------------------------------
 
     /// Reinterpret with a new shape of equal element count. O(1).
+    // alloc-ok(fn): clones only the shape metadata, never the payload.
     pub fn reshape(mut self, shape: &[usize]) -> Tensor {
         assert_eq!(
-            shape.iter().product::<usize>(),
+            elems_or_panic(shape),
             self.data.len(),
             "reshape {:?} -> {:?} changes element count",
             self.shape,
@@ -190,6 +254,7 @@ impl Tensor {
     /// Materializing axis permutation: output axis `i` is input axis
     /// `perm[i]`. Identity permutations (and rank ≤ 1) return a copy-free
     /// clone — O(1) layout-metadata sharing, no element gather.
+    // alloc-ok(fn): materializing layout op; hot paths use `permute_into`.
     pub fn permute(&self, perm: &[usize]) -> Tensor {
         assert_eq!(perm.len(), self.shape.len());
         let rank = perm.len();
@@ -206,6 +271,7 @@ impl Tensor {
     }
 
     /// Sum over one axis.
+    // alloc-ok(fn): materializing reduction; hot paths use `sum_axis_into`.
     pub fn sum_axis(&self, axis: usize) -> Tensor {
         assert!(axis < self.shape.len());
         let outer: usize = self.shape[..axis].iter().product();
@@ -221,6 +287,7 @@ impl Tensor {
     }
 
     /// Insert a broadcast axis of size `size` at `axis` (repeats data).
+    // alloc-ok(fn): materializing layout op, not on the compiled hot path.
     pub fn broadcast_axis(&self, axis: usize, size: usize) -> Tensor {
         assert!(axis <= self.shape.len());
         let outer: usize = self.shape[..axis].iter().product();
@@ -241,6 +308,7 @@ impl Tensor {
     }
 
     /// Slice `axis` to the half-open range [start, stop).
+    // alloc-ok(fn): materializing layout op, not on the compiled hot path.
     pub fn slice_axis(&self, axis: usize, start: usize, stop: usize) -> Tensor {
         assert!(axis < self.shape.len() && start <= stop && stop <= self.shape[axis]);
         let outer: usize = self.shape[..axis].iter().product();
@@ -265,6 +333,8 @@ impl Tensor {
     /// leading extent is the sum of the parts'. This is the coordinator's
     /// batch-formation primitive — see [`concat_into`] for the
     /// allocation-free variant against a caller-held destination.
+    // alloc-ok(fn): allocating batch formation; the coordinator's steady
+    // state uses `concat_into` against a reused staging tensor.
     pub fn concat_axis0(parts: &[&Tensor]) -> Tensor {
         assert!(!parts.is_empty(), "concat_axis0 needs at least one part");
         let mut shape = parts[0].shape().to_vec();
@@ -279,6 +349,8 @@ impl Tensor {
     /// extents (which must sum to this tensor's leading extent) — the
     /// inverse of [`Tensor::concat_axis0`], used to hand each request of a
     /// coalesced batch its slice of the batched result.
+    // alloc-ok(fn): allocating split; the steady state uses
+    // `split_axis0_into` against caller-held destinations.
     pub fn split_axis0(&self, sizes: &[usize]) -> Vec<Tensor> {
         assert!(!self.shape.is_empty(), "split_axis0 needs rank >= 1");
         assert_eq!(
@@ -298,6 +370,7 @@ impl Tensor {
     }
 
     /// Zero-pad `axis` with `before` zeros in front and `after` behind.
+    // alloc-ok(fn): materializing layout op, not on the compiled hot path.
     pub fn pad_axis(&self, axis: usize, before: usize, after: usize) -> Tensor {
         if before == 0 && after == 0 {
             return self.clone();
@@ -323,6 +396,7 @@ impl Tensor {
     // ---- elementwise -----------------------------------------------------
 
     /// Elementwise map.
+    // alloc-ok(fn): materializing elementwise op for tests and setup code.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
         Tensor {
             shape: self.shape.clone(),
@@ -397,6 +471,7 @@ impl Tensor {
 }
 
 /// Iterate all multi-indices of `shape` in row-major order, calling `f`.
+// alloc-ok(fn): odometer buffer; used by tests and reference paths only.
 pub fn for_each_index(shape: &[usize], mut f: impl FnMut(&[usize])) {
     if shape.iter().any(|&d| d == 0) {
         return;
@@ -479,8 +554,8 @@ pub fn permute_into(
         (&shape_buf[..rank], &stride_buf[..rank])
     } else {
         let in_strides = strides_for(shape);
-        shape_vec = perm.iter().map(|&p| shape[p]).collect();
-        stride_vec = perm.iter().map(|&p| in_strides[p]).collect();
+        shape_vec = perm.iter().map(|&p| shape[p]).collect(); // alloc-ok: rank > MAX_STACK_RANK fallback
+        stride_vec = perm.iter().map(|&p| in_strides[p]).collect(); // alloc-ok: rank > MAX_STACK_RANK fallback
         (&shape_vec, &stride_vec)
     };
 
@@ -496,7 +571,7 @@ pub fn permute_into(
                 let mut idx = [0usize; MAX_STACK_RANK];
                 permute_gather(src, c, ci * chunk, new_shape, strides, &mut idx[..rank]);
             } else {
-                let mut idx = vec![0usize; rank];
+                let mut idx = vec![0usize; rank]; // alloc-ok: rank > MAX_STACK_RANK fallback
                 permute_gather(src, c, ci * chunk, new_shape, strides, &mut idx);
             }
         });
@@ -504,7 +579,7 @@ pub fn permute_into(
         let mut idx = [0usize; MAX_STACK_RANK];
         permute_gather(src, out, 0, new_shape, strides, &mut idx[..rank]);
     } else {
-        let mut idx = vec![0usize; rank];
+        let mut idx = vec![0usize; rank]; // alloc-ok: rank > MAX_STACK_RANK fallback
         permute_gather(src, out, 0, new_shape, strides, &mut idx);
     }
 }
@@ -582,7 +657,7 @@ pub fn gather_into(
                 let mut idx = [0usize; MAX_STACK_RANK];
                 gather_span(src, c, ci * chunk, out_shape, strides, accumulate, &mut idx[..rank]);
             } else {
-                let mut idx = vec![0usize; rank];
+                let mut idx = vec![0usize; rank]; // alloc-ok: rank > MAX_STACK_RANK fallback
                 gather_span(src, c, ci * chunk, out_shape, strides, accumulate, &mut idx);
             }
         });
@@ -590,7 +665,7 @@ pub fn gather_into(
         let mut idx = [0usize; MAX_STACK_RANK];
         gather_span(src, out, 0, out_shape, strides, accumulate, &mut idx[..rank]);
     } else {
-        let mut idx = vec![0usize; rank];
+        let mut idx = vec![0usize; rank]; // alloc-ok: rank > MAX_STACK_RANK fallback
         gather_span(src, out, 0, out_shape, strides, accumulate, &mut idx);
     }
 }
@@ -769,6 +844,26 @@ mod tests {
     fn strides_row_major() {
         assert_eq!(strides_for(&[2, 3, 4]), vec![12, 4, 1]);
         assert_eq!(strides_for(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn checked_shape_arithmetic_rejects_overflow() {
+        assert_eq!(checked_elems(&[2, 3, 4]), Ok(24));
+        assert_eq!(checked_elems(&[]), Ok(1));
+        assert_eq!(checked_strides_for(&[2, 3, 4]), Ok(vec![12, 4, 1]));
+        let huge = [usize::MAX, 2];
+        let err = checked_elems(&huge).unwrap_err();
+        assert_eq!(err.shape, huge.to_vec());
+        assert!(err.to_string().contains("overflows usize"));
+        // Strides multiply trailing extents, so overflow needs two huge dims
+        // behind the leading axis.
+        assert!(checked_strides_for(&[2, usize::MAX, usize::MAX]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows usize")]
+    fn zeros_rejects_overflowing_shape() {
+        let _ = Tensor::zeros(&[usize::MAX, usize::MAX]);
     }
 
     #[test]

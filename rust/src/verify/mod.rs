@@ -1,0 +1,697 @@
+//! Static invariant verifier for compiled plans and the pool protocol.
+//!
+//! The engine's load-bearing guarantees — liveness-packed arena layouts,
+//! in-bounds gather tables, the normative accumulation order that keeps
+//! scalar and parallel backends bit-identical, FLOP totals that match the
+//! planner's chosen tree — are enforced dynamically by parity tests and the
+//! counting allocator in `bench_hotpath`. This module proves them
+//! *statically*, before any data flows:
+//!
+//! * [`CompiledPlan::verify`] walks a freshly lowered plan and each of its
+//!   [`TrainLayout`]s (all three [`CkptPolicy`]s) and checks, without
+//!   executing a single kernel, that
+//!   - every permutation table (`out_perm`, `inv_out_perm`, `final_perm`,
+//!     `inv_final_perm`) is an in-bounds permutation and inverses actually
+//!     invert ([`VerifyError::BadPermutation`]);
+//!   - every [`GradGather`] stride table stays inside the canonical operand
+//!     buffer it gathers from, with all offset arithmetic `checked_mul`
+//!     ([`VerifyError::GatherOutOfBounds`], [`VerifyError::OffsetOverflow`]);
+//!   - every step's kernel holder carries the current
+//!     [`crate::kernels::ACCUM_ORDER_VERSION`] and the kernel family the
+//!     atom would select ([`VerifyError::KernelOrderVersion`]);
+//!   - the step sequence's recomputed FLOP total matches the planner's
+//!     per-step and whole-plan cost estimates
+//!     ([`VerifyError::FlopMismatch`]);
+//!   - a dataflow simulation of the inference schedule and of every
+//!     training schedule (stored forward, checkpoint-segment recomputes,
+//!     backward with cotangent accumulation) proves that each read sees a
+//!     range written earlier and still live, and that no fresh write
+//!     clobbers a range a later event still reads
+//!     ([`VerifyError::ReadBeforeWrite`],
+//!     [`VerifyError::OverlappingLiveSlots`],
+//!     [`VerifyError::SlotOutOfBounds`]).
+//!
+//! Debug/test builds run the verifier automatically after every
+//! `CompiledPlan::compile_arc`; release builds verify on [`PlanCache`]
+//! insertion (cached entries amortize the cost) or on demand.
+//!
+//! [`pool_model`] is the companion checker for the runtime side: an
+//! exhaustive-interleaving model of the [`crate::parallel::Pool`]
+//! epoch/claim/notify protocol.
+//!
+//! [`PlanCache`]: crate::exec::PlanCache
+
+pub mod pool_model;
+
+use crate::autodiff::CkptPolicy;
+use crate::exec::compiled::{Operand, TrainLayout};
+use crate::exec::CompiledPlan;
+use crate::kernels::ACCUM_ORDER_VERSION;
+use std::fmt;
+use std::ops::Range;
+
+/// Which schedule a dataflow-simulation error was found in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimContext {
+    /// The inference schedule ([`CompiledPlan::run`]).
+    Inference,
+    /// The training schedule for this checkpoint policy.
+    Train(CkptPolicy),
+}
+
+impl fmt::Display for SimContext {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimContext::Inference => write!(f, "inference schedule"),
+            SimContext::Train(p) => write!(f, "training schedule ({p:?})"),
+        }
+    }
+}
+
+/// A statically detected violation of a compiled-plan invariant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VerifyError {
+    /// A fresh write clobbers an arena range that a later event still reads.
+    OverlappingLiveSlots {
+        context: SimContext,
+        /// DAG node being written (grad nodes offset by `n + ksteps`).
+        writer: usize,
+        /// Node whose live range the write overlaps.
+        clobbered: usize,
+    },
+    /// An event reads a node whose value is not resident at that range
+    /// (never written, already clobbered, or written somewhere else) — this
+    /// covers read-after-free and step reordering.
+    ReadBeforeWrite { context: SimContext, node: usize },
+    /// An arena range extends past the arena (or is inverted).
+    SlotOutOfBounds { context: SimContext, node: usize },
+    /// A permutation table is not a permutation, or an inverse table does
+    /// not invert its forward table.
+    BadPermutation {
+        step: Option<usize>,
+        what: &'static str,
+    },
+    /// A gather stride table can address past its canonical source buffer.
+    GatherOutOfBounds { step: usize, operand: char },
+    /// Offset/extent arithmetic overflows `usize`.
+    OffsetOverflow {
+        step: Option<usize>,
+        what: &'static str,
+    },
+    /// Recomputed FLOPs disagree with the planner's cost estimate
+    /// (`step: None` is the whole-plan total).
+    FlopMismatch {
+        step: Option<usize>,
+        expected: f64,
+        found: f64,
+    },
+    /// A step's kernel holder carries a stale accumulation-order version.
+    KernelOrderVersion {
+        step: usize,
+        found: u32,
+        expected: u32,
+    },
+    /// Structural inconsistency not covered by a more specific variant.
+    Malformed { what: String },
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::OverlappingLiveSlots {
+                context,
+                writer,
+                clobbered,
+            } => write!(
+                f,
+                "{context}: write of node {writer} clobbers the live arena range of \
+                 node {clobbered}"
+            ),
+            VerifyError::ReadBeforeWrite { context, node } => write!(
+                f,
+                "{context}: node {node} is read at a range where its value is not \
+                 resident (unproduced, reordered, or already clobbered)"
+            ),
+            VerifyError::SlotOutOfBounds { context, node } => {
+                write!(f, "{context}: arena range of node {node} is out of bounds")
+            }
+            VerifyError::BadPermutation { step, what } => match step {
+                Some(k) => write!(f, "step {k}: {what} is not a valid permutation/inverse"),
+                None => write!(f, "{what} is not a valid permutation/inverse"),
+            },
+            VerifyError::GatherOutOfBounds { step, operand } => write!(
+                f,
+                "step {step}: grad gather for operand {operand} can address past its \
+                 canonical buffer"
+            ),
+            VerifyError::OffsetOverflow { step, what } => match step {
+                Some(k) => write!(f, "step {k}: {what} overflows usize"),
+                None => write!(f, "{what} overflows usize"),
+            },
+            VerifyError::FlopMismatch {
+                step,
+                expected,
+                found,
+            } => match step {
+                Some(k) => write!(
+                    f,
+                    "step {k}: planner cost {found} != recomputed FLOPs {expected}"
+                ),
+                None => write!(f, "plan cost {found} != recomputed FLOP total {expected}"),
+            },
+            VerifyError::KernelOrderVersion {
+                step,
+                found,
+                expected,
+            } => write!(
+                f,
+                "step {step}: kernel accumulation-order version {found} != current \
+                 version {expected} (stale compiled artifact?)"
+            ),
+            VerifyError::Malformed { what } => write!(f, "malformed compiled plan: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+fn checked_product(dims: &[usize]) -> Option<usize> {
+    dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d))
+}
+
+fn is_permutation(perm: &[usize]) -> bool {
+    let mut seen = vec![false; perm.len()];
+    for &p in perm {
+        if p >= perm.len() || seen[p] {
+            return false;
+        }
+        seen[p] = true;
+    }
+    true
+}
+
+fn inverts(perm: &[usize], inv: &[usize]) -> bool {
+    inv.len() == perm.len() && perm.iter().enumerate().all(|(i, &p)| inv[p] == i)
+}
+
+// ---------------------------------------------------------------------------
+// Dataflow simulation
+// ---------------------------------------------------------------------------
+
+/// One arena access of a schedule, in program order. `node` is a DAG node id
+/// (inputs `0..n`, step `k` output `n + k`) or, in training schedules, a
+/// cotangent id `n + ksteps + node`.
+#[derive(Debug, Clone)]
+enum Ev {
+    Read {
+        node: usize,
+        range: Range<usize>,
+    },
+    Write {
+        node: usize,
+        range: Range<usize>,
+        /// `true` overwrites (evicting whatever lived there); `false`
+        /// accumulates onto a resident value (read-modify-write).
+        fresh: bool,
+    },
+}
+
+fn overlaps(a: &Range<usize>, b: &Range<usize>) -> bool {
+    a.start < b.end && b.start < a.end
+}
+
+/// Does any event at `events[from..]` read node `x` before its next fresh
+/// write? (An accumulating write counts as a read.)
+fn read_before_next_fresh_write(events: &[Ev], from: usize, x: usize) -> bool {
+    for ev in &events[from..] {
+        match ev {
+            Ev::Read { node, .. } if *node == x => return true,
+            Ev::Write { node, fresh, .. } if *node == x => return !fresh,
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Replay a schedule's arena accesses symbolically, proving every read sees
+/// a live value and no write clobbers one. `elems(node)` gives the expected
+/// flat length of each node's value.
+fn simulate(
+    context: SimContext,
+    events: &[Ev],
+    n_nodes: usize,
+    arena_len: usize,
+    elems: impl Fn(usize) -> Result<usize, VerifyError>,
+) -> Result<(), VerifyError> {
+    let mut resident: Vec<Option<Range<usize>>> = vec![None; n_nodes];
+    for (i, ev) in events.iter().enumerate() {
+        let (node, range) = match ev {
+            Ev::Read { node, range } | Ev::Write { node, range, .. } => (*node, range),
+        };
+        if range.start > range.end || range.end > arena_len {
+            return Err(VerifyError::SlotOutOfBounds { context, node });
+        }
+        if range.end - range.start != elems(node)? {
+            return Err(VerifyError::Malformed {
+                what: format!(
+                    "{context}: node {node} accessed with range length {} but its value \
+                     has {} elements",
+                    range.end - range.start,
+                    elems(node)?
+                ),
+            });
+        }
+        match ev {
+            Ev::Read { .. } => {
+                if resident[node] != Some(range.clone()) {
+                    return Err(VerifyError::ReadBeforeWrite { context, node });
+                }
+            }
+            Ev::Write { fresh: false, .. } => {
+                // Accumulation is a read-modify-write of a resident value.
+                if resident[node] != Some(range.clone()) {
+                    return Err(VerifyError::ReadBeforeWrite { context, node });
+                }
+            }
+            Ev::Write { fresh: true, .. } => {
+                for x in 0..n_nodes {
+                    if x == node {
+                        continue;
+                    }
+                    if let Some(rx) = &resident[x] {
+                        if overlaps(rx, range) {
+                            if read_before_next_fresh_write(events, i + 1, x) {
+                                return Err(VerifyError::OverlappingLiveSlots {
+                                    context,
+                                    writer: node,
+                                    clobbered: x,
+                                });
+                            }
+                            resident[x] = None;
+                        }
+                    }
+                }
+                resident[node] = Some(range.clone());
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Plan walking
+// ---------------------------------------------------------------------------
+
+impl CompiledPlan {
+    /// Flat element count of a DAG node's value, checked.
+    fn verify_node_elems(&self, node: usize) -> Result<usize, VerifyError> {
+        let n = self.plan.n_inputs;
+        let dims: &[usize] = if node < n {
+            &self.in_dims[node]
+        } else {
+            &self.steps[node - n].atom.out_shape
+        };
+        checked_product(dims).ok_or(VerifyError::OffsetOverflow {
+            step: None,
+            what: "node element count",
+        })
+    }
+
+    /// Per-step structural checks: permutations, gather tables, kernel
+    /// selection and accumulation-order version.
+    fn verify_steps(&self) -> Result<(), VerifyError> {
+        let n = self.plan.n_inputs;
+        let ksteps = self.steps.len();
+        for (k, step) in self.steps.iter().enumerate() {
+            let atom = &step.atom;
+            // Permutations.
+            if !is_permutation(&atom.out_perm) {
+                return Err(VerifyError::BadPermutation {
+                    step: Some(k),
+                    what: "atom.out_perm",
+                });
+            }
+            if !inverts(&atom.out_perm, &step.inv_out_perm) {
+                return Err(VerifyError::BadPermutation {
+                    step: Some(k),
+                    what: "inv_out_perm",
+                });
+            }
+            if atom.out_shape.len() != atom.out_perm.len()
+                || atom
+                    .out_perm
+                    .iter()
+                    .enumerate()
+                    .any(|(i, &p)| atom.out_shape[i] != atom.raw_out_dims[p])
+            {
+                return Err(VerifyError::Malformed {
+                    what: format!("step {k}: out_shape does not match permuted raw_out_dims"),
+                });
+            }
+            // Operand bookkeeping: sources must agree with the DAG node ids.
+            for (node, src, name) in [
+                (step.lhs_node, &step.lhs_src, "lhs"),
+                (step.rhs_node, &step.rhs_src, "rhs"),
+            ] {
+                if node >= n + ksteps {
+                    return Err(VerifyError::Malformed {
+                        what: format!("step {k}: {name} node id {node} out of range"),
+                    });
+                }
+                match src {
+                    Operand::Input(i) => {
+                        if *i != node || node >= n {
+                            return Err(VerifyError::Malformed {
+                                what: format!(
+                                    "step {k}: {name} input operand disagrees with node id"
+                                ),
+                            });
+                        }
+                    }
+                    Operand::Value(_) => {
+                        if node < n {
+                            return Err(VerifyError::Malformed {
+                                what: format!(
+                                    "step {k}: {name} value operand names an input node"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+            // Kernel family + accumulation-order version.
+            if step.kernel.step() != atom.select_kernel() {
+                return Err(VerifyError::Malformed {
+                    what: format!("step {k}: kernel family differs from the atom's selection"),
+                });
+            }
+            if step.kernel.order_version != ACCUM_ORDER_VERSION {
+                return Err(VerifyError::KernelOrderVersion {
+                    step: k,
+                    found: step.kernel.order_version,
+                    expected: ACCUM_ORDER_VERSION,
+                });
+            }
+            // Gather tables: the backward gathers operand cotangents out of
+            // the canonical scratch buffers; every addressable offset must
+            // stay inside them.
+            let dims = &self.plan.steps[k].sized.dims;
+            let pa = checked_product(&atom.conv.iter().map(|c| c.ia).collect::<Vec<_>>());
+            let pb = checked_product(&atom.conv.iter().map(|c| c.ib).collect::<Vec<_>>());
+            let canon_len = |free: usize, pconv: Option<usize>| {
+                pconv
+                    .and_then(|p| checked_product(&[atom.g, free, atom.s, p]))
+                    .ok_or(VerifyError::OffsetOverflow {
+                        step: Some(k),
+                        what: "canonical buffer length",
+                    })
+            };
+            let a_len = canon_len(atom.t, pa)?;
+            let b_len = canon_len(atom.n, pb)?;
+            for (grad, natural, len, name) in [
+                (&step.grad_a, &dims[0], a_len, 'a'),
+                (&step.grad_b, &dims[1], b_len, 'b'),
+            ] {
+                if grad.out_shape != *natural || grad.strides.len() != grad.out_shape.len() {
+                    return Err(VerifyError::Malformed {
+                        what: format!(
+                            "step {k}: grad gather for operand {name} has shape {:?}, \
+                             operand has {:?}",
+                            grad.out_shape, natural
+                        ),
+                    });
+                }
+                // Max addressable offset: Σ (d − 1) · stride, checked.
+                let mut max_off: usize = 0;
+                for (&d, &stride) in grad.out_shape.iter().zip(&grad.strides) {
+                    if d == 0 {
+                        continue;
+                    }
+                    let overflow = || VerifyError::OffsetOverflow {
+                        step: Some(k),
+                        what: "grad gather offset",
+                    };
+                    let term = (d - 1).checked_mul(stride).ok_or_else(overflow)?;
+                    max_off = max_off.checked_add(term).ok_or_else(overflow)?;
+                }
+                let empty = grad.out_shape.iter().any(|&d| d == 0);
+                if !empty && max_off >= len {
+                    return Err(VerifyError::GatherOutOfBounds { step: k, operand: name });
+                }
+            }
+        }
+        // Final permutation.
+        match (&self.plan.final_perm, &self.inv_final_perm) {
+            (None, None) => {}
+            (Some(p), Some(inv)) => {
+                if !is_permutation(p) || !inverts(p, inv) {
+                    return Err(VerifyError::BadPermutation {
+                        step: None,
+                        what: "final_perm/inv_final_perm",
+                    });
+                }
+            }
+            _ => {
+                return Err(VerifyError::Malformed {
+                    what: "final_perm and inv_final_perm presence disagree".to_string(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Dataflow simulation of the inference schedule: per step, operand
+    /// reads then the output write; finally the root copy-out.
+    fn verify_inference_dataflow(&self) -> Result<(), VerifyError> {
+        let n = self.plan.n_inputs;
+        let ksteps = self.steps.len();
+        let mut events: Vec<Ev> = Vec::with_capacity(3 * ksteps + 1);
+        for (k, step) in self.steps.iter().enumerate() {
+            for (node, src) in [(step.lhs_node, &step.lhs_src), (step.rhs_node, &step.rhs_src)] {
+                if let Operand::Value(r) = src {
+                    events.push(Ev::Read {
+                        node,
+                        range: r.clone(),
+                    });
+                }
+            }
+            events.push(Ev::Write {
+                node: n + k,
+                range: step.out.clone(),
+                fresh: true,
+            });
+        }
+        let root_node = n + ksteps - 1;
+        events.push(Ev::Read {
+            node: root_node,
+            range: self.root.clone(),
+        });
+        simulate(
+            SimContext::Inference,
+            &events,
+            n + ksteps,
+            self.values_len,
+            |node| self.verify_node_elems(node),
+        )
+    }
+
+    /// Recompute every step's FLOPs from its compiled atom (independently of
+    /// the planner's cost analysis) and compare against the recorded
+    /// per-step and whole-plan costs.
+    fn verify_flops(&self) -> Result<(), VerifyError> {
+        let training = self.plan.training;
+        let mut total = 0.0f64;
+        for (k, step) in self.steps.iter().enumerate() {
+            let atom = &step.atom;
+            let base = atom.g as f64 * atom.t as f64 * atom.n as f64 * atom.s as f64;
+            let fwd: f64 = atom
+                .conv
+                .iter()
+                .map(|c| c.ia as f64 * c.ib as f64)
+                .product::<f64>()
+                * base;
+            let expected = if training {
+                let g1: f64 = atom
+                    .conv
+                    .iter()
+                    .map(|c| c.out as f64 * c.ib as f64)
+                    .product::<f64>()
+                    * base;
+                let g2: f64 = atom
+                    .conv
+                    .iter()
+                    .map(|c| c.out as f64 * c.ia as f64)
+                    .product::<f64>()
+                    * base;
+                fwd + g1 + g2
+            } else {
+                fwd
+            };
+            let found = self.plan.steps[k].cost;
+            if (expected - found).abs() > 1e-6 * expected.abs().max(1.0) {
+                return Err(VerifyError::FlopMismatch {
+                    step: Some(k),
+                    expected,
+                    found,
+                });
+            }
+            total += expected;
+        }
+        let found = self.plan.cost;
+        if (total - found).abs() > 1e-6 * total.abs().max(1.0) {
+            return Err(VerifyError::FlopMismatch {
+                step: None,
+                expected: total,
+                found,
+            });
+        }
+        Ok(())
+    }
+
+    /// Dataflow simulation of one training layout: input copies, stored
+    /// forward, root copy-out, cotangent seed, backward (with recompute
+    /// segments and cotangent accumulation), input-gradient copy-out.
+    ///
+    /// Public so tests can verify (or refute) mutated clones of a layout
+    /// directly — the cached layouts on a compiled plan are immutable.
+    pub fn verify_train_layout(&self, layout: &TrainLayout) -> Result<(), VerifyError> {
+        let n = self.plan.n_inputs;
+        let ksteps = self.steps.len();
+        let context = SimContext::Train(layout.policy());
+        // Grad node of DAG node `x` is `n + ksteps + x`.
+        let gid = |x: usize| n + ksteps + x;
+        let malformed = |what: String| VerifyError::Malformed { what };
+        if layout.fwd.len() != ksteps {
+            return Err(malformed(format!(
+                "{context}: forward schedule has {} steps, plan has {ksteps}",
+                layout.fwd.len()
+            )));
+        }
+        if layout.input_ranges.len() != n || layout.input_grads.len() != n {
+            return Err(malformed(format!(
+                "{context}: input range tables do not cover all {n} inputs"
+            )));
+        }
+        let step_nodes = |k: usize| -> Result<(usize, usize), VerifyError> {
+            if k >= ksteps {
+                return Err(VerifyError::Malformed {
+                    what: format!("{context}: schedule names step {k}, plan has {ksteps}"),
+                });
+            }
+            Ok((self.steps[k].lhs_node, self.steps[k].rhs_node))
+        };
+
+        let mut events: Vec<Ev> = Vec::new();
+        for (i, r) in layout.input_ranges.iter().enumerate() {
+            events.push(Ev::Write {
+                node: i,
+                range: r.clone(),
+                fresh: true,
+            });
+        }
+        for loc in &layout.fwd {
+            let (l, r) = step_nodes(loc.k)?;
+            events.push(Ev::Read {
+                node: l,
+                range: loc.a.clone(),
+            });
+            events.push(Ev::Read {
+                node: r,
+                range: loc.b.clone(),
+            });
+            events.push(Ev::Write {
+                node: n + loc.k,
+                range: loc.out.clone(),
+                fresh: true,
+            });
+        }
+        let root_node = n + ksteps - 1;
+        events.push(Ev::Read {
+            node: root_node,
+            range: layout.root.clone(),
+        });
+        events.push(Ev::Write {
+            node: gid(root_node),
+            range: layout.droot.clone(),
+            fresh: true,
+        });
+        for bstep in &layout.bwd {
+            for rloc in &bstep.recompute {
+                let (l, r) = step_nodes(rloc.k)?;
+                events.push(Ev::Read {
+                    node: l,
+                    range: rloc.a.clone(),
+                });
+                events.push(Ev::Read {
+                    node: r,
+                    range: rloc.b.clone(),
+                });
+                events.push(Ev::Write {
+                    node: n + rloc.k,
+                    range: rloc.out.clone(),
+                    fresh: true,
+                });
+            }
+            let (l, r) = step_nodes(bstep.k)?;
+            events.push(Ev::Read {
+                node: l,
+                range: bstep.a.clone(),
+            });
+            events.push(Ev::Read {
+                node: r,
+                range: bstep.b.clone(),
+            });
+            events.push(Ev::Read {
+                node: gid(n + bstep.k),
+                range: bstep.dnode.clone(),
+            });
+            events.push(Ev::Write {
+                node: gid(l),
+                range: bstep.da.range.clone(),
+                fresh: bstep.da.fresh,
+            });
+            events.push(Ev::Write {
+                node: gid(r),
+                range: bstep.db.range.clone(),
+                fresh: bstep.db.fresh,
+            });
+        }
+        for (i, r) in layout.input_grads.iter().enumerate() {
+            events.push(Ev::Read {
+                node: gid(i),
+                range: r.clone(),
+            });
+        }
+        let n_nodes = 2 * (n + ksteps);
+        simulate(context, &events, n_nodes, layout.arena_len, |node| {
+            let value_node = if node >= n + ksteps {
+                node - (n + ksteps)
+            } else {
+                node
+            };
+            self.verify_node_elems(value_node)
+        })
+    }
+
+    /// Statically verify every invariant of this compiled plan: per-step
+    /// structure (permutations, gather bounds, kernel order versions), the
+    /// inference dataflow, the FLOP accounting, and the training dataflow
+    /// under all three checkpoint policies. See the module docs for the full
+    /// catalogue; `INVARIANTS.md` maps each invariant to its check.
+    ///
+    /// Runs automatically after every compile in debug/test builds and on
+    /// [`crate::exec::PlanCache`] insertion in release builds.
+    pub fn verify(&self) -> Result<(), VerifyError> {
+        self.verify_steps()?;
+        self.verify_inference_dataflow()?;
+        self.verify_flops()?;
+        for policy in CkptPolicy::ALL {
+            let layout = self.train_layout(policy);
+            self.verify_train_layout(&layout)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,694 @@
+//! Exhaustive-interleaving model checker for the [`crate::parallel::Pool`]
+//! epoch/claim/notify protocol (std-only, loom-style but hand-rolled).
+//!
+//! The pool's dispatch protocol is the one piece of the engine whose
+//! correctness argument is genuinely concurrent: a caller publishes a job
+//! under the slot mutex, wakes a bounded number of workers *without* the
+//! lock, and then caller + workers race on a lock-free atomic chunk cursor
+//! until an atomic `remaining` counter hits zero. Unit tests exercise a few
+//! schedules per run; this module instead **enumerates every schedule** of a
+//! faithful finite-state model of the protocol for small configurations
+//! (1–3 workers × 1–4 chunks × 1–3 back-to-back jobs) and proves, for each:
+//!
+//! * **no double-claimed chunk** — no chunk index is ever executed twice
+//!   within a job (the claim cursor hands each index to exactly one thread);
+//! * **no lost chunk** — when the publisher's completion wait returns, every
+//!   chunk of the job has executed exactly once;
+//! * **no stale execution** — a worker never runs a chunk while the slot
+//!   holds a different epoch than the one it joined (the raw job pointer is
+//!   only ever dereferenced while its publishing stack frame is pinned);
+//! * **no lost wakeup / deadlock** — from every reachable state some thread
+//!   can move, and every terminal state has the publisher finished, all
+//!   jobs' chunks drained, and all workers shut down. The protocol's
+//!   unlocked `work_cv` notifies *can* be lost — the model shows this is
+//!   benign (the publisher participates and drains) — while the `done_cv`
+//!   notifies are lock-paired so the publisher's sleep is never stranded.
+//!
+//! # Modeling fidelity
+//!
+//! Each transition is one atomic action of the real protocol. The two
+//! subtleties that make condvar protocols wrong in practice are modeled
+//! explicitly:
+//!
+//! * a condvar wait is **two** transitions — evaluate the predicate while
+//!   holding the mutex, then atomically (enqueue on the wait set + release
+//!   the mutex). Atomic operations by other threads (e.g. the `remaining`
+//!   decrement) can interleave between them, exactly as on real hardware;
+//!   a notify performed *without* the mutex can therefore fire in that
+//!   window and be lost, while a notify performed *with* the mutex held
+//!   cannot — which is precisely the discipline the real code follows for
+//!   `done_cv`.
+//! * `notify_one` nondeterministically wakes **any** parked waiter (the
+//!   checker branches over all choices), and a notify with no waiters is a
+//!   no-op, not a credit.
+//!
+//! Known, deliberate simplifications: spurious wakeups are not injected
+//! (every wait sits in a while-loop re-check, so they can only add benign
+//! schedules, not remove any modeled here); chunk-closure panics are not
+//! modeled (the panic path only adds a lock-protected payload hand-off);
+//! memory ordering is sequentially consistent (all cross-thread data in the
+//! model is either mutex-protected or a single atomic cell).
+//!
+//! # Bug injection
+//!
+//! [`Bug`] variants re-introduce classic mistakes — splitting the atomic
+//! claim `fetch_add` into a load + store, or dropping the participant-exit
+//! notify — and the tests assert the checker catches each one, which is the
+//! evidence that the passing runs are meaningful.
+
+use std::collections::HashSet;
+
+/// Upper bounds of the finite model (publisher + up to 3 workers, ≤ 4
+/// chunks). Configurations beyond these are rejected, not truncated.
+const MAX_WORKERS: usize = 3;
+const MAX_CHUNKS: usize = 4;
+const MAX_THREADS: usize = MAX_WORKERS + 1;
+
+/// Cap on explored states; hitting it is reported, never silently ignored.
+const MAX_STATES: usize = 20_000_000;
+
+/// A model configuration: how many workers, chunks per job, cursor claim
+/// batch size, and back-to-back jobs (sequential jobs exercise the
+/// epoch-staleness protocol).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Config {
+    pub workers: usize,
+    pub chunks: usize,
+    pub claim: usize,
+    pub jobs: usize,
+    pub bug: Option<Bug>,
+}
+
+impl Config {
+    /// A correct-protocol configuration (no injected bug).
+    pub fn new(workers: usize, chunks: usize, claim: usize, jobs: usize) -> Config {
+        Config {
+            workers,
+            chunks,
+            claim,
+            jobs,
+            bug: None,
+        }
+    }
+}
+
+/// Deliberately injected protocol mistakes, used to prove the checker has
+/// teeth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bug {
+    /// Replace the atomic claim `fetch_add` with a separate load and store,
+    /// re-creating the lost-update race the atomic exists to prevent.
+    SplitClaimFetch,
+    /// Drop the `done_cv` notify a leaving worker issues when
+    /// `participants` reaches zero, re-creating a stranded publisher.
+    NoLeaveNotify,
+}
+
+/// A property violation found on some schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    /// A chunk index was executed more than once within one job.
+    DoubleClaim { chunk: usize },
+    /// The publisher's completion wait returned with a chunk unexecuted.
+    UnclaimedChunk { chunk: usize },
+    /// A worker executed a chunk under an epoch other than the one it
+    /// joined (the raw job pointer would be dangling or retargeted).
+    StaleExecution { worker: usize },
+    /// A reachable state where no thread can move but the run is not
+    /// complete — a lost wakeup or other deadlock.
+    Deadlock,
+    /// The configuration exceeded the model's state budget (not a protocol
+    /// violation; shrink the configuration).
+    StateSpaceExceeded,
+    /// The configuration exceeds the model's hard bounds.
+    BadConfig(&'static str),
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::DoubleClaim { chunk } => {
+                write!(f, "chunk {chunk} executed more than once in a single job")
+            }
+            Violation::UnclaimedChunk { chunk } => {
+                write!(f, "publisher completed with chunk {chunk} never executed")
+            }
+            Violation::StaleExecution { worker } => {
+                write!(f, "worker {worker} executed a chunk of a stale epoch")
+            }
+            Violation::Deadlock => {
+                write!(f, "reachable state with no enabled transition before completion")
+            }
+            Violation::StateSpaceExceeded => {
+                write!(f, "state budget of {MAX_STATES} exceeded")
+            }
+            Violation::BadConfig(what) => write!(f, "unsupported configuration: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for Violation {}
+
+/// Statistics from an exhaustive run that found no violation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelStats {
+    /// Distinct states reached (the whole reachable graph was explored).
+    pub states: usize,
+}
+
+/// Program counter of one modeled thread. Thread 0 is the publisher
+/// (`run_chunks`); threads 1.. are pool workers (`worker_loop`). The
+/// `Fetch`/`Exec`/… claim-loop states are shared by both roles
+/// (`execute_chunks` in the real code); the thread index decides where the
+/// loop exits to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Pc {
+    // Publisher: publish one job under the mutex, then wake workers.
+    PLockPublish,
+    PPublish,
+    PNotifyWork,
+    // Publisher: completion wait (predicate eval and enqueue are separate
+    // transitions — see module docs).
+    PWaitLock,
+    PWaitEval,
+    PWaitEnqueue,
+    PParked,
+    PReacquire,
+    PFinish,
+    // Publisher: pool drop — set shutdown under the mutex, notify unlocked.
+    PShutdownLock,
+    PShutdownSet,
+    PShutdownNotify,
+    PDone,
+    // Worker: park/join loop.
+    WLock,
+    WEval,
+    WEnqueue,
+    WParked,
+    WReacquire,
+    WLeaveLock,
+    WLeave,
+    WDone,
+    // Shared claim loop (`execute_chunks`).
+    Fetch,
+    FetchStore,
+    Exec,
+    DecRemaining,
+    DoneLock,
+    DoneNotify,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Thread {
+    pc: Pc,
+    /// Worker: last epoch joined/drained (`seen` in the real code).
+    seen: u8,
+    /// Claimed batch `[start, end)` of the current fetch.
+    start: u8,
+    end: u8,
+    /// Publisher: `work_cv` notifies still to send for this job.
+    notifies: u8,
+    /// `Bug::SplitClaimFetch` only: cursor value loaded but not yet stored.
+    pending: u8,
+}
+
+/// One global state of the model. `n_chunks`/`claim` live in [`Config`]
+/// (they are re-published identically every job), so the state holds only
+/// what varies.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct State {
+    /// Which thread holds the slot mutex.
+    mutex: Option<u8>,
+    epoch: u8,
+    published: bool,
+    shutdown: bool,
+    participants: u8,
+    /// The lock-free claim cursor (saturating; overshoot is part of the
+    /// real protocol).
+    cursor: u8,
+    remaining: u8,
+    /// Bitmask of workers parked on `work_cv`.
+    work_waiters: u8,
+    /// Publisher parked on `done_cv`.
+    done_wait: bool,
+    /// Jobs fully published-and-finished so far.
+    job_idx: u8,
+    /// Execution count per chunk of the current job.
+    exec: [u8; MAX_CHUNKS],
+    threads: [Thread; MAX_THREADS],
+}
+
+const IDLE: Thread = Thread {
+    pc: Pc::WDone,
+    seen: 0,
+    start: 0,
+    end: 0,
+    notifies: 0,
+    pending: 0,
+};
+
+/// Where a thread's claim loop exits to once the cursor is exhausted.
+fn exit_pc(t: usize) -> Pc {
+    if t == 0 {
+        Pc::PWaitLock
+    } else {
+        Pc::WLeaveLock
+    }
+}
+
+/// Wake the publisher if it is parked on `done_cv` (a `notify_all`; the
+/// publisher is the only `done_cv` waiter).
+fn notify_done(s: &mut State) {
+    if s.done_wait {
+        s.done_wait = false;
+        s.threads[0].pc = Pc::PReacquire;
+    }
+}
+
+/// Compute the successor states of letting thread `t` take its next atomic
+/// action. `Ok(None)` means the thread is currently blocked (mutex held
+/// elsewhere, parked, or finished); `Ok(Some(succs))` enumerates every
+/// nondeterministic outcome; `Err` reports a property violation.
+fn step(cfg: &Config, s: &State, t: usize) -> Result<Option<Vec<State>>, Violation> {
+    let th = s.threads[t];
+    let chunks = cfg.chunks as u8;
+    let claim = cfg.claim as u8;
+    match th.pc {
+        // ---- blocked-forever / externally-woken states ----
+        Pc::PParked | Pc::WParked | Pc::PDone | Pc::WDone => Ok(None),
+
+        // ---- mutex acquisition ----
+        Pc::PLockPublish
+        | Pc::PWaitLock
+        | Pc::PReacquire
+        | Pc::PShutdownLock
+        | Pc::WLock
+        | Pc::WReacquire
+        | Pc::WLeaveLock
+        | Pc::DoneLock => {
+            if s.mutex.is_some() {
+                return Ok(None);
+            }
+            let mut n = s.clone();
+            n.mutex = Some(t as u8);
+            n.threads[t].pc = match th.pc {
+                Pc::PLockPublish => Pc::PPublish,
+                // A condvar wait returns holding the mutex; re-evaluate the
+                // predicate (while-loop in the real code).
+                Pc::PWaitLock | Pc::PReacquire => Pc::PWaitEval,
+                Pc::PShutdownLock => Pc::PShutdownSet,
+                Pc::WLock | Pc::WReacquire => Pc::WEval,
+                Pc::WLeaveLock => Pc::WLeave,
+                Pc::DoneLock => Pc::DoneNotify,
+                _ => unreachable!(),
+            };
+            Ok(Some(vec![n]))
+        }
+
+        // ---- publisher: publish one job ----
+        Pc::PPublish => {
+            // Everything under the slot mutex, exactly as `run_chunks`:
+            // bump the epoch, publish the job, reset cursor and remaining.
+            // No other thread can observe the cursor mid-publish: claim
+            // loops require participation, and the previous job's wait
+            // ensured participants == 0.
+            let mut n = s.clone();
+            n.epoch = n.epoch.wrapping_add(1);
+            n.published = true;
+            n.cursor = 0;
+            n.remaining = chunks;
+            n.exec = [0; MAX_CHUNKS];
+            n.threads[t].notifies = (cfg.chunks - 1).min(cfg.workers) as u8;
+            n.threads[t].pc = Pc::PNotifyWork;
+            n.mutex = None;
+            Ok(Some(vec![n]))
+        }
+        Pc::PNotifyWork => {
+            // `wake` unlocked notify_one calls. Each wakes an arbitrary
+            // parked worker (branch over all), or is lost if none is
+            // parked — the real protocol tolerates that because the
+            // publisher participates.
+            if th.notifies == 0 {
+                let mut n = s.clone();
+                n.threads[t].pc = Pc::Fetch;
+                return Ok(Some(vec![n]));
+            }
+            let mut out = Vec::new();
+            if s.work_waiters == 0 {
+                let mut n = s.clone();
+                n.threads[t].notifies -= 1;
+                out.push(n);
+            } else {
+                for w in 1..=cfg.workers {
+                    if s.work_waiters & (1 << w) != 0 {
+                        let mut n = s.clone();
+                        n.threads[t].notifies -= 1;
+                        n.work_waiters &= !(1 << w);
+                        n.threads[w].pc = Pc::WReacquire;
+                        out.push(n);
+                    }
+                }
+            }
+            Ok(Some(out))
+        }
+
+        // ---- shared claim loop ----
+        Pc::Fetch => {
+            let mut n = s.clone();
+            if cfg.bug == Some(Bug::SplitClaimFetch) {
+                // Injected race: load the cursor now, store it back later.
+                n.threads[t].pending = s.cursor;
+                n.threads[t].pc = Pc::FetchStore;
+                return Ok(Some(vec![n]));
+            }
+            // The real `fetch_add(claim, AcqRel)`: one atomic action.
+            let start = s.cursor;
+            n.cursor = s.cursor.saturating_add(claim);
+            if start >= chunks {
+                n.threads[t].pc = exit_pc(t);
+            } else {
+                n.threads[t].start = start;
+                n.threads[t].end = (start + claim).min(chunks);
+                n.threads[t].pc = Pc::Exec;
+            }
+            Ok(Some(vec![n]))
+        }
+        Pc::FetchStore => {
+            // Second half of the injected split fetch: blind store of
+            // load + claim, losing any concurrent increment.
+            let mut n = s.clone();
+            let start = th.pending;
+            n.cursor = th.pending.saturating_add(claim);
+            if start >= chunks {
+                n.threads[t].pc = exit_pc(t);
+            } else {
+                n.threads[t].start = start;
+                n.threads[t].end = (start + claim).min(chunks);
+                n.threads[t].pc = Pc::Exec;
+            }
+            Ok(Some(vec![n]))
+        }
+        Pc::Exec => {
+            // Executing the claimed batch. A worker must still be inside
+            // the epoch it joined — otherwise the real code would be
+            // dereferencing a dangling or retargeted job pointer.
+            if t != 0 && (th.seen != s.epoch || !s.published) {
+                return Err(Violation::StaleExecution { worker: t });
+            }
+            let mut n = s.clone();
+            for i in th.start..th.end {
+                n.exec[i as usize] += 1;
+                if n.exec[i as usize] > 1 {
+                    return Err(Violation::DoubleClaim { chunk: i as usize });
+                }
+            }
+            n.threads[t].pc = Pc::DecRemaining;
+            Ok(Some(vec![n]))
+        }
+        Pc::DecRemaining => {
+            // `remaining.fetch_sub(done, AcqRel) == done` → last finisher.
+            let done = th.end - th.start;
+            let rem = match s.remaining.checked_sub(done) {
+                Some(r) => r,
+                // Underflow means some chunk was decremented twice.
+                None => return Err(Violation::DoubleClaim { chunk: th.start as usize }),
+            };
+            let mut n = s.clone();
+            n.remaining = rem;
+            n.threads[t].pc = if rem == 0 { Pc::DoneLock } else { Pc::Fetch };
+            Ok(Some(vec![n]))
+        }
+        Pc::DoneNotify => {
+            // Last finisher: notify_all(done_cv) while HOLDING the slot
+            // mutex. Because the publisher's predicate-eval and enqueue
+            // also hold the mutex, this notify serializes against them and
+            // can never land in the eval→enqueue window — the lost-wakeup
+            // freedom the checker proves.
+            let mut n = s.clone();
+            notify_done(&mut n);
+            n.mutex = None;
+            n.threads[t].pc = Pc::Fetch;
+            Ok(Some(vec![n]))
+        }
+
+        // ---- publisher: completion wait ----
+        Pc::PWaitEval => {
+            let mut n = s.clone();
+            n.threads[t].pc = if s.remaining > 0 || s.participants > 0 {
+                Pc::PWaitEnqueue
+            } else {
+                Pc::PFinish
+            };
+            Ok(Some(vec![n]))
+        }
+        Pc::PWaitEnqueue => {
+            // Atomically enqueue on done_cv and release the mutex.
+            let mut n = s.clone();
+            n.done_wait = true;
+            n.mutex = None;
+            n.threads[t].pc = Pc::PParked;
+            Ok(Some(vec![n]))
+        }
+        Pc::PFinish => {
+            // `run_chunks` returns here: remaining == 0 and participants
+            // == 0 under the mutex. THE core property: every chunk of the
+            // job ran exactly once.
+            for i in 0..cfg.chunks {
+                if s.exec[i] != 1 {
+                    return Err(if s.exec[i] == 0 {
+                        Violation::UnclaimedChunk { chunk: i }
+                    } else {
+                        Violation::DoubleClaim { chunk: i }
+                    });
+                }
+            }
+            let mut n = s.clone();
+            n.published = false; // slot.job = None
+            n.mutex = None;
+            n.job_idx += 1;
+            n.threads[t].pc = if (n.job_idx as usize) < cfg.jobs {
+                Pc::PLockPublish
+            } else {
+                Pc::PShutdownLock
+            };
+            Ok(Some(vec![n]))
+        }
+
+        // ---- publisher: pool drop ----
+        Pc::PShutdownSet => {
+            let mut n = s.clone();
+            n.shutdown = true;
+            n.mutex = None;
+            n.threads[t].pc = Pc::PShutdownNotify;
+            Ok(Some(vec![n]))
+        }
+        Pc::PShutdownNotify => {
+            // Unlocked notify_all(work_cv). Safe despite being unlocked:
+            // `shutdown` was set under the mutex, so a worker that is not
+            // yet parked will observe it at its next locked re-check.
+            let mut n = s.clone();
+            for w in 1..=cfg.workers {
+                if n.work_waiters & (1 << w) != 0 {
+                    n.threads[w].pc = Pc::WReacquire;
+                }
+            }
+            n.work_waiters = 0;
+            n.threads[t].pc = Pc::PDone;
+            Ok(Some(vec![n]))
+        }
+
+        // ---- worker: park/join loop ----
+        Pc::WEval => {
+            let mut n = s.clone();
+            if s.shutdown {
+                n.mutex = None;
+                n.threads[t].pc = Pc::WDone;
+            } else if s.published && s.epoch != th.seen && s.cursor < chunks {
+                // Join the job under the mutex: this is what pins the raw
+                // job pointer for this worker's whole claim loop.
+                n.participants += 1;
+                n.threads[t].seen = s.epoch;
+                n.mutex = None;
+                n.threads[t].pc = Pc::Fetch;
+            } else {
+                n.threads[t].pc = Pc::WEnqueue;
+            }
+            Ok(Some(vec![n]))
+        }
+        Pc::WEnqueue => {
+            let mut n = s.clone();
+            n.work_waiters |= 1 << t;
+            n.mutex = None;
+            n.threads[t].pc = Pc::WParked;
+            Ok(Some(vec![n]))
+        }
+        Pc::WLeave => {
+            let mut n = s.clone();
+            n.participants -= 1;
+            if n.participants == 0 && cfg.bug != Some(Bug::NoLeaveNotify) {
+                // notify_all(done_cv) under the mutex: the publisher's
+                // participants-drained wakeup.
+                notify_done(&mut n);
+            }
+            n.mutex = None;
+            n.threads[t].pc = Pc::WLock;
+            Ok(Some(vec![n]))
+        }
+    }
+}
+
+/// Exhaustively explore every schedule of `cfg` and check all protocol
+/// properties. Returns statistics if no reachable state violates them.
+pub fn check_pool_protocol(cfg: &Config) -> Result<ModelStats, Violation> {
+    if cfg.workers > MAX_WORKERS {
+        return Err(Violation::BadConfig("workers > 3"));
+    }
+    if cfg.chunks == 0 || cfg.chunks > MAX_CHUNKS {
+        return Err(Violation::BadConfig("chunks must be in 1..=4"));
+    }
+    if cfg.claim == 0 || cfg.claim > MAX_CHUNKS {
+        return Err(Violation::BadConfig("claim must be in 1..=4"));
+    }
+    if cfg.jobs == 0 || cfg.jobs > 3 {
+        return Err(Violation::BadConfig("jobs must be in 1..=3"));
+    }
+
+    let mut threads = [IDLE; MAX_THREADS];
+    threads[0] = Thread {
+        pc: Pc::PLockPublish,
+        ..IDLE
+    };
+    for w in 1..=cfg.workers {
+        threads[w] = Thread {
+            pc: Pc::WLock,
+            ..IDLE
+        };
+    }
+    let init = State {
+        mutex: None,
+        epoch: 0,
+        published: false,
+        shutdown: false,
+        participants: 0,
+        cursor: 0,
+        remaining: 0,
+        work_waiters: 0,
+        done_wait: false,
+        job_idx: 0,
+        exec: [0; MAX_CHUNKS],
+        threads,
+    };
+
+    let mut visited: HashSet<State> = HashSet::new();
+    let mut stack: Vec<State> = Vec::new();
+    visited.insert(init.clone());
+    stack.push(init);
+
+    while let Some(s) = stack.pop() {
+        let mut any_enabled = false;
+        for t in 0..=cfg.workers {
+            if let Some(succs) = step(cfg, &s, t)? {
+                any_enabled = true;
+                for n in succs {
+                    if visited.insert(n.clone()) {
+                        if visited.len() > MAX_STATES {
+                            return Err(Violation::StateSpaceExceeded);
+                        }
+                        stack.push(n);
+                    }
+                }
+            }
+        }
+        if !any_enabled {
+            // Terminal state: the only acceptable one is "everything done".
+            let complete = s.threads[0].pc == Pc::PDone
+                && (1..=cfg.workers).all(|w| s.threads[w].pc == Pc::WDone);
+            if !complete {
+                return Err(Violation::Deadlock);
+            }
+            debug_assert_eq!(s.job_idx as usize, cfg.jobs);
+        }
+    }
+    Ok(ModelStats {
+        states: visited.len(),
+    })
+}
+
+/// The standard verification sweep run in CI: every correct-protocol
+/// configuration the model supports at claim 1, plus a batched-claim
+/// configuration. Returns total states explored across all configurations.
+pub fn check_standard_configs() -> Result<ModelStats, Violation> {
+    let mut states = 0;
+    for workers in 1..=2 {
+        for chunks in 1..=3 {
+            for jobs in 1..=2 {
+                states += check_pool_protocol(&Config::new(workers, chunks, 1, jobs))?.states;
+            }
+        }
+    }
+    // Batched claims: each fetch grabs 2 indices, tail batch is short.
+    states += check_pool_protocol(&Config::new(2, 3, 2, 1))?.states;
+    // Three sequential jobs: the seen-epoch staleness protocol.
+    states += check_pool_protocol(&Config::new(1, 2, 1, 3))?.states;
+    Ok(ModelStats { states })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correct_protocol_is_exhaustively_safe() {
+        let stats = check_standard_configs().expect("pool protocol must verify");
+        // The sweep must be a real exploration, not a degenerate one.
+        assert!(
+            stats.states > 10_000,
+            "suspiciously small state space: {}",
+            stats.states
+        );
+    }
+
+    #[test]
+    fn three_workers_one_job_verifies() {
+        let stats = check_pool_protocol(&Config::new(3, 3, 1, 1)).expect("must verify");
+        assert!(stats.states > 1_000);
+    }
+
+    #[test]
+    fn split_claim_fetch_is_caught() {
+        // Breaking the claim fetch_add into load + store must surface as a
+        // double-claimed (or, downstream, lost) chunk.
+        let cfg = Config {
+            bug: Some(Bug::SplitClaimFetch),
+            ..Config::new(2, 2, 1, 1)
+        };
+        match check_pool_protocol(&cfg) {
+            Err(Violation::DoubleClaim { .. }) | Err(Violation::UnclaimedChunk { .. }) => {}
+            other => panic!("expected a claim violation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_leave_notify_is_caught_as_deadlock() {
+        // Without the participants-drained notify the publisher can park
+        // forever: worker decrements participants to zero silently after
+        // the publisher re-enqueued.
+        let cfg = Config {
+            bug: Some(Bug::NoLeaveNotify),
+            ..Config::new(1, 2, 1, 1)
+        };
+        assert_eq!(check_pool_protocol(&cfg), Err(Violation::Deadlock));
+    }
+
+    #[test]
+    fn oversized_configs_are_rejected_not_truncated() {
+        assert!(matches!(
+            check_pool_protocol(&Config::new(9, 2, 1, 1)),
+            Err(Violation::BadConfig(_))
+        ));
+        assert!(matches!(
+            check_pool_protocol(&Config::new(1, 0, 1, 1)),
+            Err(Violation::BadConfig(_))
+        ));
+    }
+}

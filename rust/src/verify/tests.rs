@@ -1,0 +1,270 @@
+//! Mutation tests for the static plan verifier: every valid compiled plan
+//! must verify clean, and each class of corruption must be rejected with its
+//! specific error variant. The corruptions are the verifier's "bug
+//! injections" — evidence that a passing [`CompiledPlan::verify`] means
+//! something.
+
+use super::*;
+use crate::einsum::ConvKind;
+use crate::exec::compile_expr;
+use crate::planner::{PlanOptions, Strategy};
+use std::sync::Arc;
+
+/// A 2-input convolutional plan over the given variety pair.
+fn conv_plan(kind: ConvKind) -> CompiledPlan {
+    let opts = PlanOptions {
+        conv_kinds: Some(vec![kind, kind]),
+        ..PlanOptions::default()
+    };
+    compile_expr(
+        "bsxy,tsxy->btxy|xy",
+        &[vec![2, 3, 6, 5], vec![4, 3, 3, 3]],
+        &opts,
+    )
+    .expect("conv plan must compile")
+}
+
+/// A 3-step matmul chain with equal-size intermediates (so a step reorder
+/// is caught by the dataflow simulation, not by a shape mismatch).
+fn chain_plan() -> CompiledPlan {
+    let opts = PlanOptions {
+        strategy: Strategy::LeftToRight,
+        ..PlanOptions::default()
+    };
+    compile_expr(
+        "ij,jk,kl,lm->im",
+        &[vec![2, 3], vec![3, 4], vec![4, 4], vec![4, 5]],
+        &opts,
+    )
+    .expect("chain plan must compile")
+}
+
+// ---------------------------------------------------------------------------
+// Valid plans pass
+// ---------------------------------------------------------------------------
+
+#[test]
+fn valid_plans_verify_across_all_conv_kinds() {
+    for kind in [
+        ConvKind::Circular,
+        ConvKind::Same,
+        ConvKind::Valid,
+        ConvKind::Full,
+    ] {
+        let cp = conv_plan(kind);
+        cp.verify()
+            .unwrap_or_else(|e| panic!("{kind:?} plan must verify: {e}"));
+    }
+}
+
+#[test]
+fn valid_plans_verify_across_strategies_and_training() {
+    for strategy in [Strategy::Optimal, Strategy::Greedy, Strategy::LeftToRight] {
+        for training in [false, true] {
+            let opts = PlanOptions {
+                strategy,
+                training,
+                ..PlanOptions::default()
+            };
+            let cp = compile_expr(
+                "ij,jk,kl->il",
+                &[vec![3, 4], vec![4, 5], vec![5, 2]],
+                &opts,
+            )
+            .expect("must compile");
+            cp.verify().unwrap_or_else(|e| {
+                panic!("{strategy:?} training={training} plan must verify: {e}")
+            });
+        }
+    }
+}
+
+#[test]
+fn multiway_circular_plan_verifies() {
+    let cp = compile_expr(
+        "isx,stx,tjx->ijx|x",
+        &[vec![2, 3, 5], vec![3, 4, 5], vec![4, 2, 5]],
+        &PlanOptions::default(),
+    )
+    .expect("multi-way circular plan must compile");
+    cp.verify().expect("must verify");
+}
+
+// ---------------------------------------------------------------------------
+// Mutations are rejected with the right variant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutation_plan_cost_inflation_is_flop_mismatch() {
+    let mut cp = conv_plan(ConvKind::Same);
+    Arc::make_mut(&mut cp.plan).cost += 1.0e12;
+    assert!(matches!(
+        cp.verify(),
+        Err(VerifyError::FlopMismatch { step: None, .. })
+    ));
+}
+
+#[test]
+fn mutation_step_cost_inflation_is_per_step_flop_mismatch() {
+    let mut cp = conv_plan(ConvKind::Same);
+    Arc::make_mut(&mut cp.plan).steps[0].cost += 1.0e9;
+    assert!(matches!(
+        cp.verify(),
+        Err(VerifyError::FlopMismatch { step: Some(0), .. })
+    ));
+}
+
+#[test]
+fn mutation_stale_kernel_version_is_rejected() {
+    let mut cp = conv_plan(ConvKind::Circular);
+    cp.steps[0].kernel.order_version = ACCUM_ORDER_VERSION + 999;
+    match cp.verify() {
+        Err(VerifyError::KernelOrderVersion {
+            step: 0,
+            found,
+            expected,
+        }) => {
+            assert_eq!(found, ACCUM_ORDER_VERSION + 999);
+            assert_eq!(expected, ACCUM_ORDER_VERSION);
+        }
+        other => panic!("expected KernelOrderVersion, got {other:?}"),
+    }
+}
+
+#[test]
+fn mutation_truncated_inverse_permutation_is_rejected() {
+    let mut cp = conv_plan(ConvKind::Full);
+    cp.steps[0].inv_out_perm.pop();
+    assert_eq!(
+        cp.verify(),
+        Err(VerifyError::BadPermutation {
+            step: Some(0),
+            what: "inv_out_perm",
+        })
+    );
+}
+
+#[test]
+fn mutation_wild_gather_stride_is_out_of_bounds() {
+    let mut cp = conv_plan(ConvKind::Same);
+    // Point some axis of extent ≥ 2 at a stride of a full canonical-buffer
+    // length: the last addressable element lands past the buffer.
+    let grad = &mut cp.steps[0].grad_a;
+    let ax = grad
+        .out_shape
+        .iter()
+        .position(|&d| d >= 2)
+        .expect("operand has a non-trivial axis");
+    grad.strides[ax] = usize::MAX / 4;
+    match cp.verify() {
+        Err(VerifyError::GatherOutOfBounds { step: 0, operand }) => assert_eq!(operand, 'a'),
+        other => panic!("expected GatherOutOfBounds, got {other:?}"),
+    }
+}
+
+#[test]
+fn mutation_overflowing_gather_stride_is_offset_overflow() {
+    let mut cp = conv_plan(ConvKind::Same);
+    let grad = &mut cp.steps[0].grad_b;
+    let ax = grad
+        .out_shape
+        .iter()
+        .position(|&d| d >= 2)
+        .expect("operand has a non-trivial axis");
+    // (d − 1) · MAX overflows the checked multiply before any bound check.
+    grad.strides[ax] = usize::MAX;
+    assert_eq!(
+        cp.verify(),
+        Err(VerifyError::OffsetOverflow {
+            step: Some(0),
+            what: "grad gather offset",
+        })
+    );
+}
+
+#[test]
+fn mutation_reordered_steps_are_read_before_write() {
+    let mut cp = chain_plan();
+    assert!(cp.steps.len() >= 3, "left-to-right chain has 3 steps");
+    // Swap the first two steps in both the compiled program and the plan it
+    // mirrors (so every per-step structural and cost check still matches and
+    // the *schedule* is the only corruption). Step 1 consumes step 0's
+    // intermediate, so the swapped schedule reads it before it exists. The
+    // chain's dims make both intermediates the same size — a pure
+    // use-before-def, not a shape mismatch.
+    cp.steps.swap(0, 1);
+    Arc::make_mut(&mut cp.plan).steps.swap(0, 1);
+    assert!(matches!(
+        cp.verify(),
+        Err(VerifyError::ReadBeforeWrite {
+            context: SimContext::Inference,
+            ..
+        })
+    ));
+}
+
+#[test]
+fn mutation_overlapping_training_slots_are_rejected() {
+    let cp = conv_plan(ConvKind::Same);
+    let mut layout = (*cp.train_layout(CkptPolicy::StoreAll)).clone();
+    // Relocate the first forward output onto input 0's live slot (same
+    // length, so only the liveness invariant is violated). Input 0 is read
+    // again by the backward, so the clobber must be fatal.
+    let out_len = layout.fwd[0].out.len();
+    let start = layout.input_ranges[0].start;
+    layout.fwd[0].out = start..start + out_len;
+    assert!(matches!(
+        cp.verify_train_layout(&layout),
+        Err(VerifyError::OverlappingLiveSlots {
+            context: SimContext::Train(CkptPolicy::StoreAll),
+            ..
+        })
+    ));
+    // The unmutated layout still verifies (the clone was independent).
+    for policy in CkptPolicy::ALL {
+        cp.verify_train_layout(&cp.train_layout(policy))
+            .expect("unmutated layout must verify");
+    }
+}
+
+#[test]
+fn mutation_truncated_final_permutation_is_rejected() {
+    // A plan whose output order forces a final permutation.
+    let mut cp = compile_expr(
+        "ij,jk->ki",
+        &[vec![3, 4], vec![4, 5]],
+        &PlanOptions::default(),
+    )
+    .expect("must compile");
+    assert!(
+        cp.inv_final_perm.is_some(),
+        "transposed output must carry a final permutation"
+    );
+    cp.inv_final_perm = None;
+    assert!(matches!(
+        cp.verify(),
+        Err(VerifyError::Malformed { .. }) | Err(VerifyError::BadPermutation { .. })
+    ));
+}
+
+// ---------------------------------------------------------------------------
+// Error formatting is stable enough to grep in CI logs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn verify_errors_display_their_context() {
+    let e = VerifyError::OverlappingLiveSlots {
+        context: SimContext::Train(CkptPolicy::Sqrt),
+        writer: 7,
+        clobbered: 2,
+    };
+    let msg = e.to_string();
+    assert!(msg.contains("training schedule"), "{msg}");
+    assert!(msg.contains("node 7"), "{msg}");
+    let e = VerifyError::KernelOrderVersion {
+        step: 3,
+        found: 0,
+        expected: ACCUM_ORDER_VERSION,
+    };
+    assert!(e.to_string().contains("accumulation-order version"));
+}

@@ -1,0 +1,126 @@
+//! The static-analysis gate, runnable as an ordinary test target (CI runs
+//! the same three checks as a dedicated job):
+//!
+//! 1. the hot-path allocation / unsafe-hygiene lint over `src/exec`,
+//!    `src/kernels`, `src/parallel`, `src/tensor` (`tools/hotpath_lint.rs`);
+//! 2. the exhaustive pool-protocol model checker
+//!    ([`conv_einsum::verify::pool_model`]);
+//! 3. the static plan verifier ([`CompiledPlan::verify`]) over a corpus of
+//!    compiled plans spanning strategies, conv varieties and training
+//!    modes — plus the overflow-hardening regression for degenerate dims.
+
+use conv_einsum::einsum::ConvKind;
+use conv_einsum::verify::pool_model;
+use conv_einsum::{compile_expr, PlanOptions, Strategy};
+use std::process::Command;
+
+#[test]
+fn hotpath_lint_is_clean() {
+    let out = Command::new(env!("CARGO_BIN_EXE_hotpath-lint"))
+        .arg(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("hotpath-lint binary must run");
+    assert!(
+        out.status.success(),
+        "hotpath-lint found violations:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+#[test]
+fn pool_protocol_model_is_exhaustively_safe() {
+    let stats = pool_model::check_standard_configs()
+        .unwrap_or_else(|v| panic!("pool protocol violation: {v:?}"));
+    assert!(
+        stats.states > 10_000,
+        "state space suspiciously small: {}",
+        stats.states
+    );
+}
+
+#[test]
+fn plan_corpus_verifies() {
+    // (expression, dims, multiway) corpus spanning the operation classes
+    // the engine compiles: matmul chains, batch modes, grouped conv atoms,
+    // multi-way conv paths, and transposed outputs. `multiway` marks
+    // expressions whose conv modes occur in more than two inputs — those
+    // are circular-only (paper Appendix B), so variety overrides are
+    // skipped for them.
+    let corpus: &[(&str, &[&[usize]], bool)] = &[
+        ("ij,jk->ik", &[&[7, 3], &[3, 5]], false),
+        ("ij,jk->ki", &[&[4, 6], &[6, 2]], false),
+        ("ij,jk,kl,lm->im", &[&[2, 5], &[5, 4], &[4, 4], &[4, 3]], false),
+        ("bi,bi->b", &[&[5, 3], &[5, 3]], false),
+        ("bsxy,tsxy->btxy|xy", &[&[2, 3, 6, 5], &[4, 3, 3, 3]], false),
+        ("isx,stx,tjx->ijx|x", &[&[2, 3, 5], &[3, 4, 5], &[4, 2, 5]], true),
+        ("ix,jx->ijx|x", &[&[3, 8], &[2, 3]], false),
+    ];
+    let kinds = [
+        None,
+        Some(ConvKind::Circular),
+        Some(ConvKind::Same),
+        Some(ConvKind::Valid),
+        Some(ConvKind::Full),
+    ];
+    let mut verified = 0usize;
+    for &(expr, dims, multiway) in corpus {
+        let dims: Vec<Vec<usize>> = dims.iter().map(|d| d.to_vec()).collect();
+        // one ConvKind per conv mode (parallel to the pipe list)
+        let n_conv_modes = expr.split('|').nth(1).map_or(0, str::len);
+        for kind in kinds {
+            // conv-kind overrides only make sense for conv expressions, and
+            // multi-way conv modes admit only circular padding
+            if kind.is_some() && n_conv_modes == 0 {
+                continue;
+            }
+            if multiway && !matches!(kind, None | Some(ConvKind::Circular)) {
+                continue;
+            }
+            for strategy in [Strategy::Optimal, Strategy::Greedy, Strategy::LeftToRight] {
+                for training in [false, true] {
+                    let opts = PlanOptions {
+                        strategy,
+                        training,
+                        conv_kinds: kind.map(|k| vec![k; n_conv_modes]),
+                        ..PlanOptions::default()
+                    };
+                    let cp = match compile_expr(expr, &dims, &opts) {
+                        Ok(cp) => cp,
+                        Err(e) => panic!("{expr} ({kind:?}, {strategy:?}) must compile: {e}"),
+                    };
+                    cp.verify().unwrap_or_else(|e| {
+                        panic!(
+                            "{expr} ({kind:?}, {strategy:?}, training={training}) \
+                             failed verification: {e}"
+                        )
+                    });
+                    verified += 1;
+                }
+            }
+        }
+    }
+    assert!(verified >= 60, "corpus too small: {verified} plans");
+}
+
+#[test]
+fn degenerate_huge_dims_are_rejected_not_wrapped() {
+    // Element counts that overflow usize must surface as structured compile
+    // errors (checked shape arithmetic), never wrap into a bogus layout.
+    let huge = usize::MAX / 2;
+    let err = compile_expr(
+        "ij,jk->ik",
+        &[vec![huge, huge], vec![huge, huge]],
+        &PlanOptions::default(),
+    )
+    .expect_err("overflowing dims must not compile");
+    let msg = format!("{err:#}").to_ascii_lowercase();
+    assert!(
+        msg.contains("overflow"),
+        "error should name the overflow: {msg}"
+    );
+
+    // The tensor-level checked helpers agree.
+    assert!(conv_einsum::tensor::checked_elems(&[huge, huge]).is_err());
+    assert!(conv_einsum::tensor::checked_elems(&[4, 4]).is_ok());
+}

@@ -1,0 +1,380 @@
+//! Hot-path allocation and unsafe-hygiene lint.
+//!
+//! Scans the steady-state modules (`src/exec`, `src/kernels`,
+//! `src/parallel`, `src/tensor`) and fails when it finds:
+//!
+//! * an **allocation construct** (`Vec::new`, `vec!`, `Box::new`,
+//!   `format!`, `.collect(`, `.to_vec(`, …) outside a site annotated with
+//!   `// alloc-ok:` — the engine's hot loops are allocation-free by
+//!   design (compiled plans replay against caller-held workspaces), and
+//!   every deliberate exception must say why;
+//! * an **`unsafe` keyword** without a `SAFETY:` comment on the same line
+//!   or within the few lines above it.
+//!
+//! Annotation grammar (all inside ordinary `//` comments):
+//!
+//! * `// alloc-ok: <reason>` — allows the same line, or the next code
+//!   line when the comment stands alone;
+//! * `// alloc-ok(fn): <reason>` — allows the body of the next block
+//!   (idiomatically: placed directly above a function, it allows that
+//!   whole function);
+//! * `// alloc-ok(file): <reason>` — allows the entire file (reserved
+//!   for test-only oracles that live beside hot code).
+//!
+//! `tests.rs` files and `#[cfg(test)]` blocks are skipped: tests may
+//! allocate freely. The scanner is line-based and deliberately simple —
+//! it strips comments and string/char literals before matching, tracks
+//! brace depth for block scopes, and over-reports rather than
+//! under-reports on pathological formatting (an annotation fixes any
+//! false positive and documents the site in the same stroke).
+//!
+//! Run via `cargo run --bin hotpath-lint` (CI) or through
+//! `tests/static_analysis.rs`.
+
+use std::env;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Directories under the manifest root whose `.rs` files are hot-path.
+const HOT_DIRS: &[&str] = &["src/exec", "src/kernels", "src/parallel", "src/tensor"];
+
+/// Allocation constructs forbidden on hot paths. Matched against
+/// comment- and literal-stripped source text.
+const ALLOC_PATTERNS: &[&str] = &[
+    "Vec::new",
+    "Vec::with_capacity",
+    "vec!",
+    "Box::new",
+    "String::new",
+    "String::with_capacity",
+    "String::from",
+    "format!",
+    ".to_vec(",
+    ".to_string(",
+    ".to_owned(",
+    ".collect(",
+];
+
+/// How many comment lines above an `unsafe` may carry its SAFETY note.
+const SAFETY_LOOKBACK: usize = 8;
+
+#[derive(Debug)]
+pub struct Finding {
+    pub file: PathBuf,
+    pub line: usize,
+    pub what: String,
+}
+
+fn main() -> ExitCode {
+    // Optional explicit root (for linting a checkout from elsewhere);
+    // defaults to the crate the binary was built from.
+    let root = env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .or_else(|| env::var("CARGO_MANIFEST_DIR").ok().map(PathBuf::from))
+        .unwrap_or_else(|| PathBuf::from("."));
+
+    let mut files_scanned = 0usize;
+    let mut findings = Vec::new();
+    for dir in HOT_DIRS {
+        let path = root.join(dir);
+        if !path.is_dir() {
+            eprintln!("hotpath-lint: missing hot dir {}", path.display());
+            return ExitCode::FAILURE;
+        }
+        scan_dir(&path, &mut findings, &mut files_scanned);
+    }
+
+    if findings.is_empty() {
+        println!(
+            "hotpath-lint: clean ({} files across {} hot dirs)",
+            files_scanned,
+            HOT_DIRS.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for f in &findings {
+            eprintln!("{}:{}: {}", f.file.display(), f.line, f.what);
+        }
+        eprintln!(
+            "hotpath-lint: {} violation(s) in {} files scanned",
+            findings.len(),
+            files_scanned
+        );
+        ExitCode::FAILURE
+    }
+}
+
+fn scan_dir(dir: &Path, findings: &mut Vec<Finding>, files_scanned: &mut usize) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            findings.push(Finding {
+                file: dir.to_path_buf(),
+                line: 0,
+                what: format!("unreadable directory: {e}"),
+            });
+            return;
+        }
+    };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    paths.sort();
+    for path in paths {
+        if path.is_dir() {
+            scan_dir(&path, findings, files_scanned);
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name == "tests.rs" {
+                continue; // test modules allocate freely
+            }
+            *files_scanned += 1;
+            match fs::read_to_string(&path) {
+                Ok(src) => scan_file(&path, &src, findings),
+                Err(e) => findings.push(Finding {
+                    file: path.clone(),
+                    line: 0,
+                    what: format!("unreadable file: {e}"),
+                }),
+            }
+        }
+    }
+}
+
+/// Per-file scan state machine.
+fn scan_file(path: &Path, src: &str, findings: &mut Vec<Finding>) {
+    let file_allowed = src.contains("alloc-ok(file):");
+
+    let mut depth = 0usize;
+    let mut in_block_comment = false;
+
+    // `#[cfg(test)]` skipping: armed by the attribute, engaged at the next
+    // `{`, released when depth returns to the entry level.
+    let mut cfg_test_armed = false;
+    let mut cfg_test_depth: Option<usize> = None;
+
+    // `alloc-ok(fn)` scoping: armed by the annotation, engaged at the next
+    // `{`, released when depth returns to the entry level.
+    let mut fn_allow_armed = false;
+    let mut fn_allow_depth: Option<usize> = None;
+
+    // `alloc-ok:` on a standalone comment line allows the next code line.
+    let mut line_allow_pending = false;
+
+    // Rolling window of recent comment text for the SAFETY lookback.
+    let mut recent_comments: Vec<String> = Vec::new();
+
+    for (i, raw) in src.lines().enumerate() {
+        let lineno = i + 1;
+        let (code, comment, still_in_block) = split_code_comment(raw, in_block_comment);
+        in_block_comment = still_in_block;
+        let code_trim = code.trim();
+
+        let in_test_block = cfg_test_depth.is_some();
+        let in_fn_allow = fn_allow_depth.is_some();
+
+        // -- annotations (read from the comment text) ----------------------
+        let has_fn_allow_here = comment.contains("alloc-ok(fn):");
+        let has_line_allow_here = comment.contains("alloc-ok:");
+        if has_fn_allow_here {
+            fn_allow_armed = true;
+        }
+
+        // -- cfg(test) arming ---------------------------------------------
+        if code.contains("#[cfg(test)]") {
+            cfg_test_armed = true;
+        }
+
+        // -- checks on this line (before brace accounting, so the line
+        //    that *opens* an allowed/skipped block is itself governed by
+        //    the surrounding scope) --------------------------------------
+        let allocation_checked = !file_allowed
+            && !in_test_block
+            && !in_fn_allow
+            && !has_line_allow_here
+            && !line_allow_pending;
+        if allocation_checked && !code_trim.is_empty() {
+            for pat in ALLOC_PATTERNS {
+                if code.contains(pat) {
+                    findings.push(Finding {
+                        file: path.to_path_buf(),
+                        line: lineno,
+                        what: format!(
+                            "allocation construct `{pat}` on a hot path \
+                             (annotate with `// alloc-ok: <reason>` if deliberate)"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // `unsafe` hygiene applies everywhere, annotations or not (tests
+        // included: an undocumented unsafe block is never fine).
+        if contains_word(&code, "unsafe") {
+            let documented = has_safety(&comment)
+                || recent_comments
+                    .iter()
+                    .rev()
+                    .take(SAFETY_LOOKBACK)
+                    .any(|c| has_safety(c));
+            if !documented {
+                findings.push(Finding {
+                    file: path.to_path_buf(),
+                    line: lineno,
+                    what: "`unsafe` without a SAFETY comment on or above it".to_string(),
+                });
+            }
+        }
+
+        // -- brace accounting ---------------------------------------------
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if cfg_test_armed && cfg_test_depth.is_none() {
+                        cfg_test_armed = false;
+                        cfg_test_depth = Some(depth - 1);
+                    }
+                    if fn_allow_armed && fn_allow_depth.is_none() {
+                        fn_allow_armed = false;
+                        fn_allow_depth = Some(depth - 1);
+                    }
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if cfg_test_depth == Some(depth) {
+                        cfg_test_depth = None;
+                    }
+                    if fn_allow_depth == Some(depth) {
+                        fn_allow_depth = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // -- bookkeeping for the next line --------------------------------
+        line_allow_pending = has_line_allow_here && code_trim.is_empty();
+        if code_trim.is_empty() && !comment.is_empty() {
+            recent_comments.push(comment);
+        } else if !comment.is_empty() {
+            // a trailing comment still counts for lookback
+            recent_comments.push(comment);
+        } else if !code_trim.is_empty() {
+            // code with no comment breaks a SAFETY/annotation run only
+            // partially: keep the window rolling but record a blank so a
+            // SAFETY note can't act at a distance across real code.
+            recent_comments.push(String::new());
+        }
+        if recent_comments.len() > SAFETY_LOOKBACK * 2 {
+            recent_comments.drain(..recent_comments.len() - SAFETY_LOOKBACK * 2);
+        }
+    }
+}
+
+fn has_safety(comment: &str) -> bool {
+    let c = comment.to_ascii_lowercase();
+    c.contains("safety")
+}
+
+/// Whole-word containment (so `AssertUnwindSafe` or an identifier like
+/// `unsafety` never trips the check).
+fn contains_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident_char(bytes[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident_char(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Split a source line into (code-with-literals-masked, comment-text).
+/// Handles `//` comments, `/* */` block comments (possibly spanning
+/// lines), string literals with escapes, and char literals — all masked
+/// out of the code half so patterns never match inside them. Returns the
+/// block-comment state for the next line.
+fn split_code_comment(raw: &str, mut in_block: bool) -> (String, String, bool) {
+    let mut code = String::with_capacity(raw.len());
+    let mut comment = String::new();
+    let chars: Vec<char> = raw.chars().collect();
+    let mut i = 0usize;
+    while i < chars.len() {
+        if in_block {
+            if chars[i] == '*' && i + 1 < chars.len() && chars[i + 1] == '/' {
+                in_block = false;
+                i += 2;
+            } else {
+                comment.push(chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+        let c = chars[i];
+        match c {
+            '/' if i + 1 < chars.len() && chars[i + 1] == '/' => {
+                // line comment: the rest is comment text
+                comment.push_str(&raw[raw.char_indices().nth(i).map(|(b, _)| b).unwrap_or(0)..]);
+                return (code, comment, false);
+            }
+            '/' if i + 1 < chars.len() && chars[i + 1] == '*' => {
+                in_block = true;
+                i += 2;
+            }
+            '"' => {
+                // string literal: skip to the unescaped closing quote
+                i += 1;
+                while i < chars.len() {
+                    match chars[i] {
+                        '\\' => i += 2,
+                        '"' => {
+                            i += 1;
+                            break;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                code.push('"');
+                code.push('"');
+            }
+            '\'' => {
+                // char literal vs lifetime: a char literal closes within a
+                // few chars (`'x'`, `'\n'`, `'\u{1F600}'` is rare enough to
+                // over-approximate); a lifetime never has a closing quote
+                // before a non-ident char.
+                let mut j = i + 1;
+                if j < chars.len() && chars[j] == '\\' {
+                    j += 2;
+                    while j < chars.len() && chars[j] != '\'' {
+                        j += 1;
+                    }
+                    i = (j + 1).min(chars.len());
+                    code.push('\'');
+                    code.push('\'');
+                } else if j + 1 < chars.len() && chars[j + 1] == '\'' {
+                    i = j + 2; // simple 'x'
+                    code.push('\'');
+                    code.push('\'');
+                } else {
+                    code.push(c); // lifetime tick
+                    i += 1;
+                }
+            }
+            _ => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    (code, comment, in_block)
+}
