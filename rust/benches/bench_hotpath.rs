@@ -1,4 +1,8 @@
-//! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf): executor
+//! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf): per-variant
+//! microkernel throughput (GEMM-shaped contraction + conv atom GFLOP/s at
+//! small/medium/large geometries for every runtime-dispatchable kernel
+//! variant, dumped to `BENCH_kernels.json` with the dispatched-vs-portable
+//! large-GEMM speedup and a tiny-K non-regression assertion), executor
 //! throughput on the two atoms (contraction GFLOP/s, conv atom GFLOP/s),
 //! scalar-vs-parallel backend scaling across 1/2/4/8-thread pools, CP/TT
 //! layer steps under both backends, compiled-vs-uncompiled training steps
@@ -20,7 +24,7 @@ use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff, TrainSegment}
 use conv_einsum::coordinator::{EvalService, ServiceConfig};
 use conv_einsum::einsum::{parse, SizedSpec};
 use conv_einsum::exec::{pairwise, pairwise_with};
-use conv_einsum::kernels::axpy8;
+use conv_einsum::kernels::{axpy8, dispatch};
 use conv_einsum::parallel::{default_threads, Pool};
 use conv_einsum::planner::{contract_path, PlanOptions};
 use conv_einsum::tnn::{build_layer, Decomp};
@@ -274,6 +278,129 @@ fn train_batch_zero_alloc_assertions() {
     }
 }
 
+/// Per-variant microkernel throughput: the GEMM-shaped contraction and the
+/// conv atom at small/medium/large geometries, once for every kernel
+/// variant the host can run (portable always included), dumped to
+/// `BENCH_kernels.json` together with the dispatched-vs-portable speedup
+/// on the large GEMM — the number the dispatch layer is measured by.
+///
+/// The tiny-K (`s < LANES`) contraction is also timed per variant and
+/// *asserted* not to regress under SIMD dispatch: every variant
+/// short-circuits that shape to the same straight scalar loop, so its
+/// throughput must stay within noise of the portable baseline.
+fn kernel_variant_benches(rng: &mut Rng) {
+    println!("== kernel variants: per-variant GEMM / conv-atom throughput ==");
+    let dispatched = dispatch::selected().variant;
+    println!("dispatched variant: {}", dispatched.name());
+    let mut report = BTreeMap::new();
+    report.insert("bench".to_string(), Json::str("kernel_variants"));
+    report.insert("dispatched".to_string(), Json::str(dispatched.name()));
+
+    // GEMM-shaped contraction "gts,gns->gtn": all three geometries are
+    // large enough to engage a variant's packed path where it has one; the
+    // tiny-K shape (s < LANES) exercises the short-circuit instead.
+    let gemm_shapes = [
+        ("small", 1usize, 32usize, 32usize, 32usize),
+        ("medium", 2, 128, 128, 128),
+        ("large", 4, 256, 256, 256),
+    ];
+    let tiny_shape = (2usize, 64usize, 64usize, 5usize);
+    // Conv atom "bshw,tshw->bthw|hw" (standard conv layer).
+    let conv_shapes = [
+        ("small", 1usize, 4usize, 8usize, 12usize, 3usize),
+        ("medium", 2, 8, 8, 24, 3),
+        ("large", 4, 16, 16, 32, 3),
+    ];
+    let scalar_opts = ExecOptions::scalar();
+    let mut gemm_large: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut tiny_gflops: BTreeMap<&'static str, f64> = BTreeMap::new();
+    for variant in dispatch::available() {
+        dispatch::force_variant(Some(variant));
+        let name = variant.name();
+        for (size, g, t, n, s) in gemm_shapes {
+            let spec = SizedSpec::new(
+                parse("gts,gns->gtn").unwrap(),
+                vec![vec![g, t, s], vec![g, n, s]],
+            )
+            .unwrap();
+            let a = Tensor::rand(&[g, t, s], -1.0, 1.0, rng);
+            let b = Tensor::rand(&[g, n, s], -1.0, 1.0, rng);
+            let smp = bench(&format!("gemm {size} {g}x{t}x{n}x{s} [{name}]"), 2, 10, || {
+                let _ = pairwise_with(&spec, &a, &b, &[], &scalar_opts);
+            });
+            let gf = gflops((g * t * n * s) as f64, smp.median_secs());
+            println!("{}\n  -> {gf:.2} GFLOP/s", smp.report());
+            report.insert(format!("gemm_{size}_{name}_gflops"), Json::num(gf));
+            if size == "large" {
+                gemm_large.insert(name, gf);
+            }
+        }
+        {
+            let (g, t, n, s) = tiny_shape;
+            let spec = SizedSpec::new(
+                parse("gts,gns->gtn").unwrap(),
+                vec![vec![g, t, s], vec![g, n, s]],
+            )
+            .unwrap();
+            let a = Tensor::rand(&[g, t, s], -1.0, 1.0, rng);
+            let b = Tensor::rand(&[g, n, s], -1.0, 1.0, rng);
+            let smp = bench(&format!("gemm tiny-K {g}x{t}x{n}x{s} [{name}]"), 20, 100, || {
+                let _ = pairwise_with(&spec, &a, &b, &[], &scalar_opts);
+            });
+            let gf = gflops((g * t * n * s) as f64, smp.median_secs());
+            println!("{}\n  -> {gf:.2} GFLOP/s", smp.report());
+            report.insert(format!("gemm_tiny_k_{name}_gflops"), Json::num(gf));
+            tiny_gflops.insert(name, gf);
+        }
+        for (size, bb, ss, tt, hh, kk) in conv_shapes {
+            let spec = SizedSpec::new(
+                parse("bshw,tshw->bthw|hw").unwrap(),
+                vec![vec![bb, ss, hh, hh], vec![tt, ss, kk, kk]],
+            )
+            .unwrap();
+            let x = Tensor::rand(&[bb, ss, hh, hh], -1.0, 1.0, rng);
+            let w = Tensor::rand(&[tt, ss, kk, kk], -1.0, 1.0, rng);
+            let label = format!("conv {size} b{bb} s{ss} t{tt} {hh}^2 k{kk} [{name}]");
+            let smp = bench(&label, 2, 10, || {
+                let _ = pairwise_with(&spec, &x, &w, &[], &scalar_opts);
+            });
+            let mults = (bb * ss * tt * hh * hh * kk * kk) as f64;
+            let gf = gflops(mults, smp.median_secs());
+            println!("{}\n  -> {gf:.2} GFLOP/s", smp.report());
+            report.insert(format!("conv_{size}_{name}_gflops"), Json::num(gf));
+        }
+    }
+    dispatch::force_variant(None);
+
+    let portable_large = gemm_large["portable"];
+    let dispatched_large = gemm_large[dispatched.name()];
+    let speedup = dispatched_large / portable_large;
+    println!(
+        "  -> large GEMM: dispatched ({}) {dispatched_large:.2} GFLOP/s, \
+         portable {portable_large:.2} GFLOP/s, speedup {speedup:.2}x",
+        dispatched.name()
+    );
+    report.insert("gemm_large_portable_gflops".to_string(), Json::num(portable_large));
+    report.insert("gemm_large_dispatched_gflops".to_string(), Json::num(dispatched_large));
+    report.insert("gemm_large_speedup_vs_portable".to_string(), Json::num(speedup));
+
+    // Tiny-K non-regression pin: the short-circuit is the same unfused
+    // scalar loop on every variant, so SIMD dispatch must not slow the
+    // small-atom path down (0.5x floor absorbs timer noise).
+    let tiny_portable = tiny_gflops["portable"];
+    for (name, gf) in &tiny_gflops {
+        assert!(
+            *gf >= 0.5 * tiny_portable,
+            "tiny-K path regressed under variant dispatch: \
+             {name} {gf:.2} GFLOP/s vs portable {tiny_portable:.2} GFLOP/s"
+        );
+    }
+    println!("  -> tiny-K short-circuit holds across variants (no dispatch regression)");
+
+    std::fs::write("BENCH_kernels.json", Json::Obj(report).encode_pretty()).ok();
+    println!("wrote BENCH_kernels.json\n");
+}
+
 fn main() {
     // CI fast path: only the zero-allocation assertions (inference +
     // training + coalesced training batches), then exit — used by the
@@ -287,6 +414,10 @@ fn main() {
     }
 
     let mut rng = Rng::new(3);
+
+    // Per-variant microkernel section first: it forces variants globally
+    // and restores auto-detection before any other section compiles plans.
+    kernel_variant_benches(&mut rng);
 
     // contraction atom: batched matmul via "gts,gns->gtn"
     let (g, t, n, s) = (4usize, 96usize, 96usize, 96usize);

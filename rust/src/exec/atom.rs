@@ -24,20 +24,29 @@
 //! [`Atom::execute_with`] exploits this with [`crate::exec::Backend`]:
 //!
 //! * `Backend::Scalar` — the single-threaded loop nest;
-//! * `Backend::Parallel` — the same kernels dispatched one output row per
-//!   task across the persistent worker pool ([`crate::parallel::Pool`]).
+//! * `Backend::Parallel` — the same kernels dispatched one output row (or,
+//!   on the packed GEMM path, one microtile row band) per task across the
+//!   persistent worker pool ([`crate::parallel::Pool`]).
 //!
-//! Both backends drive their inner loops through the explicit 8-lane
-//! microkernels in [`crate::kernels`] ([`dot8`] for contractions,
-//! [`axpy_run`] for convolution runs), chosen per atom by
-//! [`Atom::select_kernel`] when the [`AtomKernel`] holder is built. Because
-//! the kernels fix their accumulation order and per-row loop nests match,
-//! scalar and parallel results are **bit-identical** on every path —
-//! contractions included.
+//! Both backends draw their inner loops from the process-selected
+//! [`crate::kernels::dispatch::KernelTable`], pinned into the [`AtomKernel`]
+//! holder when it is built. Pure contractions route per shape: a straight
+//! scalar loop for tiny contraction depths (`s <` [`LANES`]), the variant's
+//! packed cache-blocked GEMM ([`gemm_packed`] over workspace-owned
+//! [`PackBufs`]) when [`crate::kernels::dispatch::GemmParams::engages`]
+//! says the shape warrants packing, and the unblocked per-row dot/axpy
+//! loops otherwise. Convolutions run the run-coalesced axpy kernels
+//! ([`crate::kernels::axpy_run`]). Every routing predicate depends only on
+//! the shape and the selected table — never on the backend — and parallel
+//! partitions land on the same accumulation boundaries the serial loops
+//! use, so scalar and parallel results are **bit-identical** on every path
+//! for a fixed variant.
 
 use crate::einsum::{ConvKind, ModeId, SizedSpec};
 use crate::exec::{Backend, ExecOptions};
-use crate::kernels::{axpy8, axpy_run, dot8, LANES, StepKernel};
+use crate::kernels::dispatch::{self, GemmParams, KernelTable, Variant};
+use crate::kernels::pack::{pack_a, pack_b};
+use crate::kernels::{axpy_run, LANES, StepKernel};
 use crate::parallel::Pool;
 use crate::tensor::Tensor;
 
@@ -312,6 +321,26 @@ fn canonical_input(x: &Tensor, presum: &[usize], perm: &[usize]) -> Tensor {
 /// (benchmarks and tests rely on it).
 const AUTO_PARALLEL_MIN_WORK: usize = 1 << 13;
 
+/// Auto-backend threshold for contraction atoms when the selected variant
+/// carries a packed GEMM: the microtile path clears small matmuls so fast
+/// on one thread that pool dispatch only starts paying for itself a few
+/// times later than on the unblocked kernels.
+const AUTO_PARALLEL_MIN_WORK_GEMM: usize = 1 << 15;
+
+/// Packing scratch for the cache-blocked GEMM path. On the hot replay
+/// paths these borrow the `pack_a`/`pack_b` buffers owned by the
+/// workspace ([`crate::exec::Workspace`] / the training arena), keeping
+/// steady-state execution allocation-free; one-shot entry points pass
+/// short-lived locals. Conv atoms and variants without a packed GEMM never
+/// touch them, so empty slices are fine whenever [`Atom::pack_lens`]
+/// returns zeros.
+pub struct PackBufs<'a> {
+    /// A-panel buffer (at least `pack_lens().0` floats).
+    pub a: &'a mut [f32],
+    /// B-panel buffer (at least `pack_lens().1` floats).
+    pub b: &'a mut [f32],
+}
+
 /// Kernel tables for one [`Atom`], built lazily per direction and cached:
 /// the head-axes triple table and run-coalesced last conv axis driving the
 /// forward kernels, and the fully combined triple table driving the
@@ -320,13 +349,14 @@ const AUTO_PARALLEL_MIN_WORK: usize = 1 << 13;
 /// caller ([`crate::exec::CompiledPlan`], the autodiff tape) initializes
 /// each at most once. The tables are unused for pure contractions (the
 /// matmul kernels need none), but every holder carries the [`StepKernel`]
-/// selected for the atom — the per-step microkernel choice resolved at
-/// compile/lowering time. Build the holder with [`Atom::kernel`].
+/// selected for the atom and the microkernel [`KernelTable`] (variant)
+/// pinned at build time. Build the holder with [`Atom::kernel`].
 #[derive(Debug, Clone)]
 pub struct AtomKernel {
     fwd: std::sync::OnceLock<(Vec<(u32, u32, u32)>, Vec<(u32, u32, u32, u32)>)>,
     combined: std::sync::OnceLock<Vec<(u32, u32, u32)>>,
     step: StepKernel,
+    table: &'static KernelTable,
     /// [`crate::kernels::ACCUM_ORDER_VERSION`] captured when this holder
     /// was built; [`crate::exec::CompiledPlan::verify`] checks it so stale
     /// compiled steps cannot silently mix accumulation orders.
@@ -342,6 +372,19 @@ impl AtomKernel {
     /// The accumulation-order version this holder was built under.
     pub fn order_version(&self) -> u32 {
         self.order_version
+    }
+
+    /// The microkernel table pinned when this holder was built.
+    pub fn table(&self) -> &'static KernelTable {
+        self.table
+    }
+
+    /// The kernel variant pinned when this holder was built.
+    /// [`crate::exec::CompiledPlan::verify`] compares it against the
+    /// process selection so a plan never replays under a different
+    /// accumulation order than it was pinned to.
+    pub fn variant(&self) -> Variant {
+        self.table.variant
     }
 
     /// Forward tables (head triples + last-axis runs); conv atoms only.
@@ -386,26 +429,67 @@ impl Atom {
         )
     }
 
-    /// Create the (lazily-populated) kernel-table holder for this atom,
-    /// carrying the per-step microkernel selection. Holding one per
-    /// compiled step — instead of rebuilding tables on every execution —
-    /// is what makes [`crate::exec::CompiledPlan`] replays cheap.
+    /// Packing-buffer lengths `(pack_a_len, pack_b_len)` the cache-blocked
+    /// GEMM path may need for this atom under `table`: zeros for conv atoms
+    /// and for variants without a packed GEMM. Sized as the elementwise max
+    /// over the three matmul orientations the atom can run — forward
+    /// `C(t×n) += A(t×s)·B(n×s)ᵀ`, backward `da(t×s) += D(t×n)·B(n×s)` and
+    /// `db(n×s) += Dᵀ(n×t)·A(t×s)` — counting only orientations whose shape
+    /// actually engages the packed path. The `+ LANES` term bounds the
+    /// microtile row rounding for any `mr <= LANES`.
+    pub fn pack_lens(&self, table: &KernelTable) -> (usize, usize) {
+        if !self.conv.is_empty() {
+            return (0, 0);
+        }
+        let gp = match table.gemm {
+            Some(gp) => gp,
+            None => return (0, 0),
+        };
+        let (t, n, s) = (self.t, self.n, self.s);
+        // (rows m, output columns, contraction depth) per orientation.
+        let shapes = [(t, n, s), (t, s, n), (n, s, t)];
+        let mut a_len = 0usize;
+        let mut b_len = 0usize;
+        for (m, ncols, k) in shapes {
+            if !gp.engages(m, ncols, k) {
+                continue;
+            }
+            let kc = gp.kc.min(k);
+            a_len = a_len.max((m + LANES) * kc);
+            b_len = b_len.max((ncols / gp.nr) * gp.nr * kc);
+        }
+        (a_len, b_len)
+    }
+
+    /// Create the (lazily-populated) kernel-table holder for this atom
+    /// against the process-selected microkernel variant, carrying the
+    /// per-step microkernel selection. Holding one per compiled step —
+    /// instead of rebuilding tables on every execution — is what makes
+    /// [`crate::exec::CompiledPlan`] replays cheap.
     pub fn kernel(&self) -> AtomKernel {
+        self.kernel_for(dispatch::selected())
+    }
+
+    /// Create the holder against an explicit microkernel table (per-variant
+    /// test/bench plumbing; normal callers use [`Atom::kernel`]).
+    pub fn kernel_for(&self, table: &'static KernelTable) -> AtomKernel {
         AtomKernel {
             fwd: std::sync::OnceLock::new(),
             combined: std::sync::OnceLock::new(),
             step: self.select_kernel(),
+            table,
             order_version: crate::kernels::ACCUM_ORDER_VERSION,
         }
     }
 
     /// Select the microkernel family for this atom's inner loops: pure
-    /// contractions run per-group matmuls over [`dot8`] rows; convolutions
-    /// pick the wide (8-lane blocked) axpy when the last conv axis can
-    /// produce runs long enough to fill a lane block, and the narrow
-    /// (block-setup-free, bit-identical) variant otherwise. Run length on
-    /// the last axis is bounded by `min(Iₐ, I_out)` — unit-stride `(ia, p)`
-    /// successions cannot outrun either extent.
+    /// contractions run matmuls ([`StepKernel::MatmulDot8`], upgraded per
+    /// shape to the packed GEMM at execution time); convolutions pick the
+    /// wide (8-lane blocked) axpy when the last conv axis can produce runs
+    /// long enough to fill a lane block, and the narrow (block-setup-free,
+    /// bit-identical) variant otherwise. Run length on the last axis is
+    /// bounded by `min(Iₐ, I_out)` — unit-stride `(ia, p)` successions
+    /// cannot outrun either extent.
     pub fn select_kernel(&self) -> StepKernel {
         match self.conv.last() {
             None => StepKernel::MatmulDot8,
@@ -493,6 +577,16 @@ impl Atom {
         (head, runs)
     }
 
+    /// The auto-backend work threshold for this atom under `kernel`'s
+    /// variant (see [`AUTO_PARALLEL_MIN_WORK`] / the GEMM-specific bar).
+    fn auto_parallel_min_work(&self, kernel: &AtomKernel) -> usize {
+        if self.conv.is_empty() && kernel.table.gemm.is_some() {
+            AUTO_PARALLEL_MIN_WORK_GEMM
+        } else {
+            AUTO_PARALLEL_MIN_WORK
+        }
+    }
+
     /// Execute the atom: `out = f(a, b)` (default backend).
     pub fn execute(&self, a: &Tensor, b: &Tensor) -> Tensor {
         self.execute_with(a, b, &ExecOptions::default())
@@ -523,7 +617,14 @@ impl Atom {
         let av = ac.data();
         let bv = bc.data();
         let mut out = vec![0.0f32; out_len];
-        self.forward_into(kernel, av, bv, &mut out, opts);
+        let (pa_len, pb_len) = self.pack_lens(kernel.table());
+        let mut pack_a_buf = vec![0.0f32; pa_len];
+        let mut pack_b_buf = vec![0.0f32; pb_len];
+        let mut packs = PackBufs {
+            a: &mut pack_a_buf,
+            b: &mut pack_b_buf,
+        };
+        self.forward_into(kernel, av, bv, &mut out, &mut packs, opts);
         Tensor::from_vec(&[out_len], out)
             .reshape(&self.raw_out_dims)
             .permute(&self.out_perm)
@@ -531,7 +632,9 @@ impl Atom {
 
     /// Run the forward kernels on pre-canonicalized flat inputs, writing
     /// into `out` (which the caller must have zeroed), honouring the
-    /// backend. This is the workspace-level entry point used by
+    /// backend. `packs` supplies the packing scratch for the cache-blocked
+    /// GEMM path (see [`Atom::pack_lens`]; empty slices are fine when the
+    /// lengths are zero). This is the workspace-level entry point used by
     /// [`crate::exec::CompiledPlan`].
     pub fn forward_into(
         &self,
@@ -539,14 +642,15 @@ impl Atom {
         av: &[f32],
         bv: &[f32],
         out: &mut [f32],
+        packs: &mut PackBufs<'_>,
         opts: &ExecOptions,
     ) {
         match opts.backend {
-            Backend::Scalar => self.forward_scalar(kernel, av, bv, out),
+            Backend::Scalar => self.forward_impl(kernel, av, bv, out, packs, None),
             Backend::Parallel { threads }
-                if threads == 0 && self.flop_estimate() < AUTO_PARALLEL_MIN_WORK =>
+                if threads == 0 && self.flop_estimate() < self.auto_parallel_min_work(kernel) =>
             {
-                self.forward_scalar(kernel, av, bv, out)
+                self.forward_impl(kernel, av, bv, out, packs, None)
             }
             Backend::Parallel { threads } => {
                 let sized;
@@ -556,23 +660,101 @@ impl Atom {
                     sized = Pool::sized(threads);
                     sized.as_ref()
                 };
-                self.forward_parallel(kernel, av, bv, out, pool);
+                self.forward_impl(kernel, av, bv, out, packs, Some(pool));
             }
         }
     }
 
-    /// Original single-threaded forward kernels.
-    fn forward_scalar(&self, kernel: &AtomKernel, av: &[f32], bv: &[f32], out: &mut [f32]) {
+    /// The forward kernels, serial (`pool: None`) or row-parallel. The
+    /// backends share one routing decision and one set of microkernels, and
+    /// parallel partitions coincide with serial accumulation boundaries
+    /// (one output row per task on the unblocked paths, one microtile row
+    /// band on the packed GEMM path), so results are bit-identical per
+    /// element either way.
+    fn forward_impl(
+        &self,
+        kernel: &AtomKernel,
+        av: &[f32],
+        bv: &[f32],
+        out: &mut [f32],
+        packs: &mut PackBufs<'_>,
+        pool: Option<&Pool>,
+    ) {
         let (pa, pb, po) = self.conv_sizes();
         let (g, t, n, s) = (self.g, self.t, self.n, self.s);
+        let table = kernel.table;
         if self.conv.is_empty() {
-            // Pure contraction/batch/outer: per-group matmul
-            // out[g,t,n] = Σ_s A[g,t,s]·B[g,n,s]  (dot of contiguous rows).
-            for gi in 0..g {
-                let a_g = &av[gi * t * s..(gi + 1) * t * s];
-                let b_g = &bv[gi * n * s..(gi + 1) * n * s];
-                let o_g = &mut out[gi * t * n..(gi + 1) * t * n];
-                matmul_nt(a_g, b_g, o_g, t, n, s);
+            // Pure contraction/batch/outer: out[g,t,n] = Σ_s A[g,t,s]·B[g,n,s].
+            if s < LANES {
+                // Tiny-K short-circuit: a straight unfused scalar loop in
+                // every variant. Bit-identical to the v1 dot8 order (whose
+                // lane blocks are empty below LANES and whose tail is this
+                // exact sequential sum), and cheaper than re-entering a
+                // blocked kernel that can never fill a lane.
+                match pool {
+                    Some(pool) => pool.run_chunks(out, n, |row, crow| {
+                        let ti = row % t;
+                        let gi = row / t;
+                        let arow = &av[(gi * t + ti) * s..(gi * t + ti + 1) * s];
+                        let b_g = &bv[gi * n * s..(gi + 1) * n * s];
+                        for (ni, c) in crow.iter_mut().enumerate() {
+                            let brow = &b_g[ni * s..(ni + 1) * s];
+                            let mut acc = 0.0f32;
+                            for (x, y) in arow.iter().zip(brow) {
+                                acc += x * y;
+                            }
+                            *c += acc;
+                        }
+                    }),
+                    None => {
+                        for gi in 0..g {
+                            let a_g = &av[gi * t * s..(gi + 1) * t * s];
+                            let b_g = &bv[gi * n * s..(gi + 1) * n * s];
+                            let o_g = &mut out[gi * t * n..(gi + 1) * t * n];
+                            for ti in 0..t {
+                                let arow = &a_g[ti * s..(ti + 1) * s];
+                                let crow = &mut o_g[ti * n..(ti + 1) * n];
+                                for (ni, c) in crow.iter_mut().enumerate() {
+                                    let brow = &b_g[ni * s..(ni + 1) * s];
+                                    let mut acc = 0.0f32;
+                                    for (x, y) in arow.iter().zip(brow) {
+                                        acc += x * y;
+                                    }
+                                    *c += acc;
+                                }
+                            }
+                        }
+                    }
+                }
+            } else if let Some(gp) = table.gemm.filter(|gp| gp.engages(t, n, s)) {
+                // Packed cache-blocked GEMM per group.
+                for gi in 0..g {
+                    let a_g = &av[gi * t * s..(gi + 1) * t * s];
+                    let b_g = &bv[gi * n * s..(gi + 1) * n * s];
+                    let o_g = &mut out[gi * t * n..(gi + 1) * t * n];
+                    gemm_packed(&gp, a_g, s, 1, b_g, 1, s, o_g, t, n, s, packs, pool);
+                }
+            } else {
+                // Unblocked per-row fallback: one dot per output element.
+                match pool {
+                    Some(pool) => pool.run_chunks(out, n, |row, crow| {
+                        let ti = row % t;
+                        let gi = row / t;
+                        let arow = &av[(gi * t + ti) * s..(gi * t + ti + 1) * s];
+                        let b_g = &bv[gi * n * s..(gi + 1) * n * s];
+                        for (ni, c) in crow.iter_mut().enumerate() {
+                            *c += (table.dot)(arow, &b_g[ni * s..(ni + 1) * s]);
+                        }
+                    }),
+                    None => {
+                        for gi in 0..g {
+                            let a_g = &av[gi * t * s..(gi + 1) * t * s];
+                            let b_g = &bv[gi * n * s..(gi + 1) * n * s];
+                            let o_g = &mut out[gi * t * n..(gi + 1) * t * n];
+                            matmul_nt(table, a_g, b_g, o_g, t, n, s);
+                        }
+                    }
+                }
             }
         } else {
             // §Perf run-coalesced kernel: head axes via triple table, last
@@ -582,17 +764,20 @@ impl Atom {
             let (head, runs) = kernel.fwd_tables(self);
             let last = self.conv.last().unwrap();
             let (la, lb, lo) = (last.ia, last.ib, last.out);
-            for gi in 0..g {
-                for ti in 0..t {
-                    for ni in 0..n {
-                        let ob = ((gi * t + ti) * n + ni) * po;
+            match pool {
+                Some(pool) => {
+                    // One task per conv output row out[g,t,n,·] (length po).
+                    pool.run_chunks(out, po, |row, orow_buf| {
+                        let ni = row % n;
+                        let ti = (row / n) % t;
+                        let gi = row / (n * t);
                         for si in 0..s {
                             let abase = ((gi * t + ti) * s + si) * pa;
                             let bbase = ((gi * n + ni) * s + si) * pb;
                             for &(ao, bo, poo) in head {
                                 let arow = abase + ao as usize * la;
                                 let brow = bbase + bo as usize * lb;
-                                let orow = ob + poo as usize * lo;
+                                let obase = poo as usize * lo;
                                 for &(ib, ia0, p0, len) in runs {
                                     let w = bv[brow + ib as usize];
                                     if w == 0.0 {
@@ -600,75 +785,44 @@ impl Atom {
                                     }
                                     let asl =
                                         &av[arow + ia0 as usize..arow + (ia0 + len) as usize];
-                                    let osl = &mut out
-                                        [orow + p0 as usize..orow + (p0 + len) as usize];
-                                    axpy_run(sk, w, asl, osl);
+                                    let osl = &mut orow_buf
+                                        [obase + p0 as usize..obase + (p0 + len) as usize];
+                                    axpy_run(table, sk, w, asl, osl);
+                                }
+                            }
+                        }
+                    });
+                }
+                None => {
+                    for gi in 0..g {
+                        for ti in 0..t {
+                            for ni in 0..n {
+                                let ob = ((gi * t + ti) * n + ni) * po;
+                                for si in 0..s {
+                                    let abase = ((gi * t + ti) * s + si) * pa;
+                                    let bbase = ((gi * n + ni) * s + si) * pb;
+                                    for &(ao, bo, poo) in head {
+                                        let arow = abase + ao as usize * la;
+                                        let brow = bbase + bo as usize * lb;
+                                        let orow = ob + poo as usize * lo;
+                                        for &(ib, ia0, p0, len) in runs {
+                                            let w = bv[brow + ib as usize];
+                                            if w == 0.0 {
+                                                continue;
+                                            }
+                                            let asl = &av
+                                                [arow + ia0 as usize..arow + (ia0 + len) as usize];
+                                            let osl = &mut out
+                                                [orow + p0 as usize..orow + (p0 + len) as usize];
+                                            axpy_run(table, sk, w, asl, osl);
+                                        }
+                                    }
                                 }
                             }
                         }
                     }
                 }
             }
-        }
-    }
-
-    /// Row-parallel forward: one task per output row `out[g,t,n,·]`,
-    /// dispatched over the persistent worker pool. Every row runs the same
-    /// microkernels in the same per-row loop nest as the scalar path, so
-    /// results are bit-identical to `forward_scalar` per element —
-    /// contraction and convolution cases alike.
-    fn forward_parallel(
-        &self,
-        kernel: &AtomKernel,
-        av: &[f32],
-        bv: &[f32],
-        out: &mut [f32],
-        pool: &Pool,
-    ) {
-        let (pa, pb, po) = self.conv_sizes();
-        let (t, n, s) = (self.t, self.n, self.s);
-        if self.conv.is_empty() {
-            // One task per output row out[g,t,·] (length n): the dot8
-            // microkernel with the A row L1-resident across the B panel.
-            pool.run_chunks(out, n, |row, crow| {
-                let ti = row % t;
-                let gi = row / t;
-                let arow = &av[(gi * t + ti) * s..(gi * t + ti + 1) * s];
-                let b_g = &bv[gi * n * s..(gi + 1) * n * s];
-                for (ni, c) in crow.iter_mut().enumerate() {
-                    *c += dot8(arow, &b_g[ni * s..(ni + 1) * s]);
-                }
-            });
-        } else {
-            let sk = kernel.step();
-            let (head, runs) = kernel.fwd_tables(self);
-            let last = self.conv.last().unwrap();
-            let (la, lb, lo) = (last.ia, last.ib, last.out);
-            // One task per conv output row out[g,t,n,·] (length po).
-            pool.run_chunks(out, po, |row, orow_buf| {
-                let ni = row % n;
-                let ti = (row / n) % t;
-                let gi = row / (n * t);
-                for si in 0..s {
-                    let abase = ((gi * t + ti) * s + si) * pa;
-                    let bbase = ((gi * n + ni) * s + si) * pb;
-                    for &(ao, bo, poo) in head {
-                        let arow = abase + ao as usize * la;
-                        let brow = bbase + bo as usize * lb;
-                        let obase = poo as usize * lo;
-                        for &(ib, ia0, p0, len) in runs {
-                            let w = bv[brow + ib as usize];
-                            if w == 0.0 {
-                                continue;
-                            }
-                            let asl = &av[arow + ia0 as usize..arow + (ia0 + len) as usize];
-                            let osl =
-                                &mut orow_buf[obase + p0 as usize..obase + (p0 + len) as usize];
-                            axpy_run(sk, w, asl, osl);
-                        }
-                    }
-                }
-            });
         }
     }
 
@@ -714,7 +868,14 @@ impl Atom {
         let dv = dout_c.data();
         let mut da = vec![0.0f32; av.len()];
         let mut db = vec![0.0f32; bv.len()];
-        self.backward_into(kernel, av, bv, dv, &mut da, &mut db, opts);
+        let (pa_len, pb_len) = self.pack_lens(kernel.table());
+        let mut pack_a_buf = vec![0.0f32; pa_len];
+        let mut pack_b_buf = vec![0.0f32; pb_len];
+        let mut packs = PackBufs {
+            a: &mut pack_a_buf,
+            b: &mut pack_b_buf,
+        };
+        self.backward_into(kernel, av, bv, dv, &mut da, &mut db, &mut packs, opts);
 
         // Undo canonicalization: permute back, then re-broadcast pre-summed
         // axes (∂/∂x of a sum over an axis broadcasts the cotangent).
@@ -736,7 +897,8 @@ impl Atom {
 
     /// Run the backward kernels on pre-canonicalized flat data, accumulating
     /// into `da`/`db` (which the caller must have zeroed), honouring the
-    /// backend.
+    /// backend. `packs` supplies the packing scratch for the cache-blocked
+    /// GEMM path (see [`Atom::pack_lens`]).
     #[allow(clippy::too_many_arguments)]
     pub fn backward_into(
         &self,
@@ -746,14 +908,15 @@ impl Atom {
         dv: &[f32],
         da: &mut [f32],
         db: &mut [f32],
+        packs: &mut PackBufs<'_>,
         opts: &ExecOptions,
     ) {
         match opts.backend {
-            Backend::Scalar => self.backward_scalar(kernel, av, bv, dv, da, db),
+            Backend::Scalar => self.backward_impl(kernel, av, bv, dv, da, db, packs, None),
             Backend::Parallel { threads }
-                if threads == 0 && self.flop_estimate() < AUTO_PARALLEL_MIN_WORK =>
+                if threads == 0 && self.flop_estimate() < self.auto_parallel_min_work(kernel) =>
             {
-                self.backward_scalar(kernel, av, bv, dv, da, db)
+                self.backward_impl(kernel, av, bv, dv, da, db, packs, None)
             }
             Backend::Parallel { threads } => {
                 let sized;
@@ -763,13 +926,21 @@ impl Atom {
                     sized = Pool::sized(threads);
                     sized.as_ref()
                 };
-                self.backward_parallel(kernel, av, bv, dv, da, db, pool);
+                self.backward_impl(kernel, av, bv, dv, da, db, packs, Some(pool));
             }
         }
     }
 
-    /// Original single-threaded backward kernels.
-    fn backward_scalar(
+    /// The backward kernels, serial (`pool: None`) or row-parallel. `da`
+    /// and `db` route through the packed GEMM independently (each is its
+    /// own matmul orientation); the unblocked fallbacks keep the v1 loop
+    /// nests. Parallelism is racing-free by construction — `da` is
+    /// partitioned over `(g, t)` blocks (each task owns `da[g,t,·,·]` and
+    /// reduces over `n`), `db` over `(g, n)` blocks (reducing over `t`),
+    /// and the packed path over microtile row bands — and every partition
+    /// preserves the serial per-element accumulation order.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_impl(
         &self,
         kernel: &AtomKernel,
         av: &[f32],
@@ -777,119 +948,131 @@ impl Atom {
         dv: &[f32],
         da: &mut [f32],
         db: &mut [f32],
+        packs: &mut PackBufs<'_>,
+        pool: Option<&Pool>,
     ) {
         let (pa, pb, po) = self.conv_sizes();
         let (g, t, n, s) = (self.g, self.t, self.n, self.s);
+        let table = kernel.table;
         if self.conv.is_empty() {
-            // da[g,t,s] = Σ_n dout[g,t,n]·B[g,n,s]
-            // db[g,n,s] = Σ_t dout[g,t,n]·A[g,t,s]
-            for gi in 0..g {
-                let d_g = &dv[gi * t * n..(gi + 1) * t * n];
-                let a_g = &av[gi * t * s..(gi + 1) * t * s];
-                let b_g = &bv[gi * n * s..(gi + 1) * n * s];
-                let da_g = &mut da[gi * t * s..(gi + 1) * t * s];
-                let db_g = &mut db[gi * n * s..(gi + 1) * n * s];
-                // da = dout(t×n) · B(n×s)
-                matmul_nn(d_g, b_g, da_g, t, s, n);
-                // db = doutᵀ(n×t) · A(t×s)
-                matmul_tn(d_g, a_g, db_g, n, s, t);
+            // da[g,t,s] = Σ_n dout[g,t,n]·B[g,n,s]  — D(t×n) · B(n×s).
+            if let Some(gp) = table.gemm.filter(|gp| gp.engages(t, s, n)) {
+                for gi in 0..g {
+                    let d_g = &dv[gi * t * n..(gi + 1) * t * n];
+                    let b_g = &bv[gi * n * s..(gi + 1) * n * s];
+                    let da_g = &mut da[gi * t * s..(gi + 1) * t * s];
+                    gemm_packed(&gp, d_g, n, 1, b_g, s, 1, da_g, t, s, n, packs, pool);
+                }
+            } else {
+                match pool {
+                    Some(pool) => pool.run_chunks(da, s, |row, da_row| {
+                        let ti = row % t;
+                        let gi = row / t;
+                        for ni in 0..n {
+                            let dval = dv[(gi * t + ti) * n + ni];
+                            if dval == 0.0 {
+                                continue;
+                            }
+                            let brow = &bv[(gi * n + ni) * s..(gi * n + ni + 1) * s];
+                            (table.axpy)(dval, brow, da_row);
+                        }
+                    }),
+                    None => {
+                        for gi in 0..g {
+                            let d_g = &dv[gi * t * n..(gi + 1) * t * n];
+                            let b_g = &bv[gi * n * s..(gi + 1) * n * s];
+                            let da_g = &mut da[gi * t * s..(gi + 1) * t * s];
+                            matmul_nn(table, d_g, b_g, da_g, t, s, n);
+                        }
+                    }
+                }
+            }
+            // db[g,n,s] = Σ_t dout[g,t,n]·A[g,t,s]  — Dᵀ(n×t) · A(t×s).
+            if let Some(gp) = table.gemm.filter(|gp| gp.engages(n, s, t)) {
+                for gi in 0..g {
+                    let d_g = &dv[gi * t * n..(gi + 1) * t * n];
+                    let a_g = &av[gi * t * s..(gi + 1) * t * s];
+                    let db_g = &mut db[gi * n * s..(gi + 1) * n * s];
+                    gemm_packed(&gp, d_g, 1, n, a_g, s, 1, db_g, n, s, t, packs, pool);
+                }
+            } else {
+                match pool {
+                    Some(pool) => pool.run_chunks(db, s, |row, db_row| {
+                        let ni = row % n;
+                        let gi = row / n;
+                        for ti in 0..t {
+                            let dval = dv[(gi * t + ti) * n + ni];
+                            if dval == 0.0 {
+                                continue;
+                            }
+                            let arow = &av[(gi * t + ti) * s..(gi * t + ti + 1) * s];
+                            (table.axpy)(dval, arow, db_row);
+                        }
+                    }),
+                    None => {
+                        for gi in 0..g {
+                            let d_g = &dv[gi * t * n..(gi + 1) * t * n];
+                            let a_g = &av[gi * t * s..(gi + 1) * t * s];
+                            let db_g = &mut db[gi * n * s..(gi + 1) * n * s];
+                            matmul_tn(table, d_g, a_g, db_g, n, s, t);
+                        }
+                    }
+                }
             }
         } else {
             let combined = kernel.combined_table(self);
-            for gi in 0..g {
-                for ti in 0..t {
-                    for ni in 0..n {
-                        let ob = ((gi * t + ti) * n + ni) * po;
-                        for si in 0..s {
-                            let abase = ((gi * t + ti) * s + si) * pa;
-                            let bbase = ((gi * n + ni) * s + si) * pb;
-                            for &(ao, bo, poo) in combined {
-                                let do_ = dv[ob + poo as usize];
-                                da[abase + ao as usize] += do_ * bv[bbase + bo as usize];
-                                db[bbase + bo as usize] += do_ * av[abase + ao as usize];
+            match pool {
+                Some(pool) => {
+                    pool.run_chunks(da, s * pa, |row, da_block| {
+                        let ti = row % t;
+                        let gi = row / t;
+                        for ni in 0..n {
+                            let ob = ((gi * t + ti) * n + ni) * po;
+                            for si in 0..s {
+                                let bbase = ((gi * n + ni) * s + si) * pb;
+                                let abase = si * pa;
+                                for &(ao, bo, poo) in combined {
+                                    da_block[abase + ao as usize] +=
+                                        dv[ob + poo as usize] * bv[bbase + bo as usize];
+                                }
+                            }
+                        }
+                    });
+                    pool.run_chunks(db, s * pb, |row, db_block| {
+                        let ni = row % n;
+                        let gi = row / n;
+                        for ti in 0..t {
+                            let ob = ((gi * t + ti) * n + ni) * po;
+                            for si in 0..s {
+                                let abase = ((gi * t + ti) * s + si) * pa;
+                                let bbase = si * pb;
+                                for &(ao, bo, poo) in combined {
+                                    db_block[bbase + bo as usize] +=
+                                        dv[ob + poo as usize] * av[abase + ao as usize];
+                                }
+                            }
+                        }
+                    });
+                }
+                None => {
+                    for gi in 0..g {
+                        for ti in 0..t {
+                            for ni in 0..n {
+                                let ob = ((gi * t + ti) * n + ni) * po;
+                                for si in 0..s {
+                                    let abase = ((gi * t + ti) * s + si) * pa;
+                                    let bbase = ((gi * n + ni) * s + si) * pb;
+                                    for &(ao, bo, poo) in combined {
+                                        let do_ = dv[ob + poo as usize];
+                                        da[abase + ao as usize] += do_ * bv[bbase + bo as usize];
+                                        db[bbase + bo as usize] += do_ * av[abase + ao as usize];
+                                    }
+                                }
                             }
                         }
                     }
                 }
             }
-        }
-    }
-
-    /// Row-parallel backward: two passes, each racing-free by construction —
-    /// `da` is partitioned over `(g, t)` blocks (each task owns
-    /// `da[g,t,·,·]` and reduces over `n`), `db` over `(g, n)` blocks
-    /// (reducing over `t`). Per-element accumulation order matches the
-    /// scalar kernel, so results are bit-identical.
-    #[allow(clippy::too_many_arguments)]
-    fn backward_parallel(
-        &self,
-        kernel: &AtomKernel,
-        av: &[f32],
-        bv: &[f32],
-        dv: &[f32],
-        da: &mut [f32],
-        db: &mut [f32],
-        pool: &Pool,
-    ) {
-        let (pa, pb, po) = self.conv_sizes();
-        let (t, n, s) = (self.t, self.n, self.s);
-        if self.conv.is_empty() {
-            pool.run_chunks(da, s, |row, da_row| {
-                let ti = row % t;
-                let gi = row / t;
-                for ni in 0..n {
-                    let dval = dv[(gi * t + ti) * n + ni];
-                    if dval == 0.0 {
-                        continue;
-                    }
-                    let brow = &bv[(gi * n + ni) * s..(gi * n + ni + 1) * s];
-                    axpy8(dval, brow, da_row);
-                }
-            });
-            pool.run_chunks(db, s, |row, db_row| {
-                let ni = row % n;
-                let gi = row / n;
-                for ti in 0..t {
-                    let dval = dv[(gi * t + ti) * n + ni];
-                    if dval == 0.0 {
-                        continue;
-                    }
-                    let arow = &av[(gi * t + ti) * s..(gi * t + ti + 1) * s];
-                    axpy8(dval, arow, db_row);
-                }
-            });
-        } else {
-            let combined = kernel.combined_table(self);
-            pool.run_chunks(da, s * pa, |row, da_block| {
-                let ti = row % t;
-                let gi = row / t;
-                for ni in 0..n {
-                    let ob = ((gi * t + ti) * n + ni) * po;
-                    for si in 0..s {
-                        let bbase = ((gi * n + ni) * s + si) * pb;
-                        let abase = si * pa;
-                        for &(ao, bo, poo) in combined {
-                            da_block[abase + ao as usize] +=
-                                dv[ob + poo as usize] * bv[bbase + bo as usize];
-                        }
-                    }
-                }
-            });
-            pool.run_chunks(db, s * pb, |row, db_block| {
-                let ni = row % n;
-                let gi = row / n;
-                for ti in 0..t {
-                    let ob = ((gi * t + ti) * n + ni) * po;
-                    for si in 0..s {
-                        let abase = ((gi * t + ti) * s + si) * pa;
-                        let bbase = si * pb;
-                        for &(ao, bo, poo) in combined {
-                            db_block[bbase + bo as usize] +=
-                                dv[ob + poo as usize] * av[abase + ao as usize];
-                        }
-                    }
-                }
-            });
         }
     }
 }
@@ -903,22 +1086,119 @@ fn invert_perm(perm: &[usize]) -> Vec<usize> {
     inv
 }
 
-/// C(t×n) = A(t×s) · B(n×s)ᵀ — rows of both operands contiguous, each
-/// entry a [`dot8`] in the normative 8-lane order (matching the parallel
-/// backend's per-row microkernel bit-for-bit).
-pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], t: usize, n: usize, s: usize) {
+/// Cache-blocked packed GEMM: `C(m×n) += A(m×k) · B(k×n)`, with the
+/// operands read through generic `(row, col)` strides (a transposed
+/// operand is expressed by swapping its strides, so all three matmul
+/// orientations share this one driver).
+///
+/// Structure: the contracted index is blocked by `gp.kc`; per block the A
+/// slice is packed into zero-padded `mr`-row tiles and the full `nr`-column
+/// tiles of B into column-interleaved panels, then the register-blocked
+/// microtile kernel sweeps row bands × column tiles, with the ragged
+/// `n % nr` column edge computed by a scalar-FMA loop straight from the
+/// strided B source. Each output element is one pure FMA chain over `k`
+/// ascending (C is stored and reloaded exactly at block boundaries), so
+/// the result is invariant under the tiling — and under the row-band
+/// parallelism: with `pool`, bands of `mr` rows are dispatched over the
+/// workers, the same boundaries the serial sweep uses, making parallel
+/// output bit-identical to serial.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed(
+    gp: &GemmParams,
+    a: &[f32],
+    a_rs: usize,
+    a_cs: usize,
+    b: &[f32],
+    b_rs: usize,
+    b_cs: usize,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    packs: &mut PackBufs<'_>,
+    pool: Option<&Pool>,
+) {
+    let (mr, nr) = (gp.mr, gp.nr);
+    let n_full = (n / nr) * nr;
+    let m_tiles = (m + mr - 1) / mr;
+    debug_assert!(packs.a.len() >= m_tiles * mr * gp.kc.min(k));
+    debug_assert!(packs.b.len() >= n_full * gp.kc.min(k));
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = gp.kc.min(k - k0);
+        pack_a(a, a_rs, a_cs, m, k0, kc, mr, packs.a);
+        pack_b(b, b_rs, b_cs, n_full, k0, kc, nr, packs.b);
+        let pa_panel = &packs.a[..m_tiles * mr * kc];
+        let pb_panel = &packs.b[..n_full * kc];
+        let band = |tile: usize, c_band: &mut [f32]| {
+            let i0 = tile * mr;
+            let rows = mr.min(m - i0);
+            let pa_tile = &pa_panel[tile * mr * kc..(tile + 1) * mr * kc];
+            for jt in 0..n_full / nr {
+                let j0 = jt * nr;
+                let pb_tile = &pb_panel[jt * nr * kc..(jt + 1) * nr * kc];
+                (gp.panel)(pa_tile, pb_tile, &mut c_band[j0..], n, rows, kc);
+            }
+            // Ragged column edge: the same pure FMA chain per element,
+            // reading B straight from its strided source.
+            for r in 0..rows {
+                for j in n_full..n {
+                    let mut acc = c_band[r * n + j];
+                    for kk in 0..kc {
+                        acc = pa_tile[kk * mr + r].mul_add(b[(k0 + kk) * b_rs + j * b_cs], acc);
+                    }
+                    c_band[r * n + j] = acc;
+                }
+            }
+        };
+        match pool {
+            Some(pool) if m > mr => pool.run_chunks(c, mr * n, band),
+            _ => {
+                for tile in 0..m_tiles {
+                    let i0 = tile * mr;
+                    let rows = mr.min(m - i0);
+                    band(tile, &mut c[i0 * n..(i0 + rows) * n]);
+                }
+            }
+        }
+        k0 += kc;
+    }
+}
+
+/// `C(t×n) += A(t×s) · B(n×s)ᵀ` — rows of both operands contiguous, each
+/// entry one `table.dot` in the variant's normative order (matching the
+/// parallel backend's per-row loop bit-for-bit). This is the unblocked
+/// fallback; [`Atom::forward_into`] routes tiny and GEMM-sized shapes to
+/// the straight scalar loop / the packed path before reaching it.
+pub fn matmul_nt(
+    table: &KernelTable,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    t: usize,
+    n: usize,
+    s: usize,
+) {
     for ti in 0..t {
         let arow = &a[ti * s..(ti + 1) * s];
         let crow = &mut c[ti * n..(ti + 1) * n];
         for ni in 0..n {
             let brow = &b[ni * s..(ni + 1) * s];
-            crow[ni] += dot8(arow, brow);
+            crow[ni] += (table.dot)(arow, brow);
         }
     }
 }
 
-/// C(t×s) = A(t×n) · B(n×s) — accumulating [`axpy8`] rows.
-pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], t: usize, s: usize, n: usize) {
+/// `C(t×s) += A(t×n) · B(n×s)` — accumulating `table.axpy` rows.
+pub fn matmul_nn(
+    table: &KernelTable,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    t: usize,
+    s: usize,
+    n: usize,
+) {
     for ti in 0..t {
         let arow = &a[ti * n..(ti + 1) * n];
         let crow = &mut c[ti * s..(ti + 1) * s];
@@ -928,13 +1208,21 @@ pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], t: usize, s: usize, n: usi
                 continue;
             }
             let brow = &b[ni * s..(ni + 1) * s];
-            axpy8(av, brow, crow);
+            (table.axpy)(av, brow, crow);
         }
     }
 }
 
-/// C(n×s) = A(t×n)ᵀ · B(t×s) — accumulating [`axpy8`] rows.
-pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], n: usize, s: usize, t: usize) {
+/// `C(n×s) += A(t×n)ᵀ · B(t×s)` — accumulating `table.axpy` rows.
+pub fn matmul_tn(
+    table: &KernelTable,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    n: usize,
+    s: usize,
+    t: usize,
+) {
     for ti in 0..t {
         let arow = &a[ti * n..(ti + 1) * n];
         let brow = &b[ti * s..(ti + 1) * s];
@@ -944,7 +1232,7 @@ pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], n: usize, s: usize, t: usi
                 continue;
             }
             let crow = &mut c[ni * s..(ni + 1) * s];
-            axpy8(av, brow, crow);
+            (table.axpy)(av, brow, crow);
         }
     }
 }

@@ -66,7 +66,7 @@
 
 use crate::autodiff::CkptPolicy;
 use crate::einsum::{parse, ConvKind, EinsumSpec, SizedSpec};
-use crate::exec::atom::{canonicalize, Atom, AtomKernel};
+use crate::exec::atom::{canonicalize, Atom, AtomKernel, PackBufs};
 use crate::exec::{Backend, ExecOptions};
 use crate::parallel::Pool;
 use crate::planner::{plan_with, Plan, PlanOptions, Strategy};
@@ -234,6 +234,11 @@ pub struct Workspace {
     /// Ping-pong buffers for pre-sum chains.
     presum0: Vec<f32>,
     presum1: Vec<f32>,
+    /// Packing panels for the cache-blocked GEMM path (see
+    /// [`crate::exec::atom::PackBufs`]); empty when the selected kernel
+    /// variant carries no packed GEMM or no step's shape engages it.
+    pack_a: Vec<f32>,
+    pack_b: Vec<f32>,
 }
 
 impl Workspace {
@@ -249,7 +254,9 @@ impl Workspace {
                 + self.scratch_b.len()
                 + self.scratch_out.len()
                 + self.presum0.len()
-                + self.presum1.len())
+                + self.presum1.len()
+                + self.pack_a.len()
+                + self.pack_b.len())
     }
 
     fn ensure(&mut self, plan: &CompiledPlan) {
@@ -259,6 +266,8 @@ impl Workspace {
         grow(&mut self.scratch_out, plan.scratch_out_len);
         grow(&mut self.presum0, plan.presum_len);
         grow(&mut self.presum1, plan.presum_len);
+        grow(&mut self.pack_a, plan.pack_a_len);
+        grow(&mut self.pack_b, plan.pack_b_len);
     }
 }
 
@@ -510,6 +519,10 @@ pub struct CompiledPlan {
     scratch_b_len: usize,
     scratch_out_len: usize,
     presum_len: usize,
+    /// GEMM packing-panel capacities (maxed over steps; zero when no step
+    /// engages the packed path under the pinned kernel variant).
+    pack_a_len: usize,
+    pack_b_len: usize,
     /// Per-policy training layouts (StoreAll / Sqrt / None), built lazily
     /// and cached on the compiled entry so every [`crate::autodiff`] tape
     /// over it shares one layout.
@@ -587,6 +600,7 @@ impl CompiledPlan {
         let mut node_range: Vec<Option<Range<usize>>> = vec![None; n + ksteps];
         let mut steps: Vec<CompiledStep> = Vec::with_capacity(ksteps);
         let (mut sa, mut sb, mut so, mut sp) = (0usize, 0usize, 0usize, 0usize);
+        let (mut pka, mut pkb) = (0usize, 0usize);
         for (k, step) in plan.steps.iter().enumerate() {
             let (l, r) = node_pairs[k];
             let atom = canonicalize(&step.sized, &step.moduli);
@@ -595,6 +609,9 @@ impl CompiledPlan {
             sa = sa.max(a_len);
             sb = sb.max(b_len);
             so = so.max(raw_len);
+            let (pa_len, pb_len) = atom.pack_lens(kernel.table());
+            pka = pka.max(pa_len);
+            pkb = pkb.max(pb_len);
             sp = sp.max(presum_chain_max(&step.sized.dims[0], &atom.presum_a));
             sp = sp.max(presum_chain_max(&step.sized.dims[1], &atom.presum_b));
 
@@ -669,6 +686,8 @@ impl CompiledPlan {
             scratch_b_len: sb,
             scratch_out_len: so,
             presum_len: sp,
+            pack_a_len: pka,
+            pack_b_len: pkb,
             steps,
             plan,
             train: Default::default(),
@@ -724,6 +743,14 @@ impl CompiledPlan {
         &self.out_shape
     }
 
+    /// Overwrite one step's recorded accumulation-order version so tests
+    /// can exercise the [`CompiledPlan::verify`] rejection path without
+    /// depending on a real cross-version plan artifact.
+    #[doc(hidden)]
+    pub fn poison_kernel_order_version_for_tests(&mut self, step: usize, version: u32) {
+        self.steps[step].kernel.order_version = version;
+    }
+
     /// Peak workspace footprint (bytes) a run of this plan requires.
     pub fn workspace_bytes(&self) -> usize {
         std::mem::size_of::<f32>()
@@ -731,7 +758,9 @@ impl CompiledPlan {
                 + self.scratch_a_len
                 + self.scratch_b_len
                 + self.scratch_out_len
-                + 2 * self.presum_len)
+                + 2 * self.presum_len
+                + self.pack_a_len
+                + self.pack_b_len)
     }
 
     // ---- execution -------------------------------------------------------
@@ -811,7 +840,13 @@ impl CompiledPlan {
             scratch_out,
             presum0,
             presum1,
+            pack_a,
+            pack_b,
         } = ws;
+        let mut packs = PackBufs {
+            a: pack_a,
+            b: pack_b,
+        };
 
         for step in &self.steps {
             let (a_len, b_len, raw_len) = step.atom.canonical_lens();
@@ -852,8 +887,14 @@ impl CompiledPlan {
             for v in scratch_out[..raw_len].iter_mut() {
                 *v = 0.0;
             }
-            step.atom
-                .forward_into(&step.kernel, av, bv, &mut scratch_out[..raw_len], opts);
+            step.atom.forward_into(
+                &step.kernel,
+                av,
+                bv,
+                &mut scratch_out[..raw_len],
+                &mut packs,
+                opts,
+            );
             // Raw kernel layout → working-list layout, into the value arena.
             let dst = &mut values[step.out.clone()];
             if step.out_identity {
@@ -1063,6 +1104,7 @@ fn exec_arena_step(
     scratch_out: &mut [f32],
     presum0: &mut [f32],
     presum1: &mut [f32],
+    packs: &mut PackBufs<'_>,
     pool: Option<&Pool>,
     opts: &ExecOptions,
 ) {
@@ -1090,8 +1132,14 @@ fn exec_arena_step(
     for v in scratch_out[..raw_len].iter_mut() {
         *v = 0.0;
     }
-    step.atom
-        .forward_into(&step.kernel, av, bv, &mut scratch_out[..raw_len], opts);
+    step.atom.forward_into(
+        &step.kernel,
+        av,
+        bv,
+        &mut scratch_out[..raw_len],
+        packs,
+        opts,
+    );
     // The output range may alias a just-freed operand range — safe because
     // every operand read completed into `scratch_out` above.
     let dst = &mut values[out_rng.clone()];
@@ -1323,7 +1371,13 @@ impl CompiledPlan {
             scratch_out,
             presum0,
             presum1,
+            pack_a,
+            pack_b,
         } = base;
+        let mut packs = PackBufs {
+            a: pack_a,
+            b: pack_b,
+        };
         for (i, t) in inputs.iter().enumerate() {
             values[layout.input_ranges[i].clone()].copy_from_slice(t.data());
         }
@@ -1339,6 +1393,7 @@ impl CompiledPlan {
                 scratch_out,
                 presum0,
                 presum1,
+                &mut packs,
                 canon_pool,
                 &self.opts,
             );
@@ -1413,7 +1468,13 @@ impl CompiledPlan {
             scratch_out,
             presum0,
             presum1,
+            pack_a,
+            pack_b,
         } = base;
+        let mut packs = PackBufs {
+            a: pack_a,
+            b: pack_b,
+        };
         // Seed the root cotangent (undoing the final permutation).
         {
             let dst = &mut values[layout.droot.clone()];
@@ -1435,6 +1496,7 @@ impl CompiledPlan {
                     scratch_out,
                     presum0,
                     presum1,
+                    &mut packs,
                     canon_pool,
                     &self.opts,
                 );
@@ -1487,6 +1549,7 @@ impl CompiledPlan {
                 dv,
                 &mut scratch_da[..a_len],
                 &mut scratch_db[..b_len],
+                &mut packs,
                 &self.opts,
             );
             // Un-canonicalize the operand cotangents straight into their

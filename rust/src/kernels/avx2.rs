@@ -1,0 +1,325 @@
+//! Explicit AVX2 + FMA microkernels (`x86_64` only), selected at runtime by
+//! [`crate::kernels::dispatch`] after `is_x86_feature_detected!` confirms
+//! both features.
+//!
+//! # Accumulation order (normative for the `Avx2Fma` variant)
+//!
+//! * [`dot`] — 8 fused lanes per block (`acc[l] = fma(a, b, acc[l])`), the
+//!   same pairwise lane combine as the portable variant, then a fused
+//!   sequential ragged tail (`total = fma(a[i], b[i], total)`).
+//! * [`axpy`] — each element updated exactly once with a single fused
+//!   multiply-add (`out[i] = fma(w, a[i], out[i])`), vector body and scalar
+//!   tail alike.
+//! * [`add`] — plain addition, no reassociation: bit-identical to the
+//!   portable [`crate::kernels::portable::add8`].
+//! * [`panel`] — the 6×16 GEMM microtile: for every output element the
+//!   accumulator is *loaded from C* and updated by one pure FMA chain over
+//!   `k` ascending, so the result per element is independent of the
+//!   `MR`/`NR` tiling, the `KC` blocking (C is stored and reloaded
+//!   exactly), and any row partitioning across worker threads.
+//!
+//! Scalar edges use [`f32::mul_add`], which the IEEE contract makes
+//! bit-identical to the hardware FMA the vector body performs — the scalar
+//! column-edge loop in the GEMM driver therefore extends the exact same
+//! per-element chains.
+//!
+//! Every intrinsic call sits in an explicit `unsafe` block (the crate
+//! denies `unsafe_op_in_unsafe_fn`) with its obligation discharged in a
+//! `SAFETY:` comment; `tools/hotpath_lint.rs` additionally checks that
+//! every `#[target_feature]` function here is declared `unsafe fn`.
+
+// On newer toolchains arch intrinsics are safe to call inside a matching
+// `#[target_feature]` context, which would flag the explicit blocks below
+// as unused; older toolchains (through the crate's 1.70 MSRV) require them.
+#![allow(unused_unsafe)]
+
+use super::LANES;
+use core::arch::x86_64::{
+    _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps,
+    _mm256_storeu_ps,
+};
+
+/// Microtile rows of the packed GEMM kernel (12 of 16 ymm registers hold
+/// accumulators: 6 rows × 2 halves of 16 columns).
+pub const MR: usize = 6;
+/// Microtile columns (two 8-lane registers wide).
+pub const NR: usize = 16;
+
+/// Safe entry installed in the `Avx2Fma` [`crate::kernels::dispatch::KernelTable`].
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: this function is only reachable through the table returned by
+    // `dispatch::table_for(Variant::Avx2Fma)`, which is handed out only
+    // after `is_x86_feature_detected!` confirmed "avx2" and "fma".
+    unsafe { dot_avx2(a, b) }
+}
+
+/// Safe entry installed in the `Avx2Fma` [`crate::kernels::dispatch::KernelTable`].
+pub fn axpy(w: f32, a: &[f32], out: &mut [f32]) {
+    // SAFETY: reachable only via the detection-gated Avx2Fma table (see
+    // `dot` above).
+    unsafe { axpy_avx2(w, a, out) }
+}
+
+/// Safe entry installed in the `Avx2Fma` [`crate::kernels::dispatch::KernelTable`].
+pub fn add(out: &mut [f32], a: &[f32]) {
+    // SAFETY: reachable only via the detection-gated Avx2Fma table (see
+    // `dot` above).
+    unsafe { add_avx2(out, a) }
+}
+
+/// Safe entry installed in the `Avx2Fma` [`crate::kernels::dispatch::GemmParams`].
+pub fn panel(pa: &[f32], pb: &[f32], c: &mut [f32], cs: usize, rows: usize, kc: usize) {
+    // SAFETY: reachable only via the detection-gated Avx2Fma table (see
+    // `dot` above).
+    unsafe { panel_avx2(pa, pb, c, cs, rows, kc) }
+}
+
+/// # Safety
+///
+/// Requires AVX2 and FMA; the caller must have verified CPU support (the
+/// safe wrappers above are only installed after feature detection).
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let blocks = a.len() / LANES;
+    let split = blocks * LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    // SAFETY: no memory preconditions; AVX2 is enabled on this function.
+    let mut acc = unsafe { _mm256_setzero_ps() };
+    for k in 0..blocks {
+        // SAFETY: `k * LANES + LANES <= split <= len` for both slices, so
+        // the unaligned 8-float loads stay in bounds.
+        unsafe {
+            let x = _mm256_loadu_ps(ap.add(k * LANES));
+            let y = _mm256_loadu_ps(bp.add(k * LANES));
+            acc = _mm256_fmadd_ps(x, y, acc);
+        }
+    }
+    let mut lanes = [0.0f32; LANES];
+    // SAFETY: `lanes` holds exactly 8 f32s; unaligned store is permitted.
+    unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), acc) };
+    let mut total = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    for i in split..a.len() {
+        total = a[i].mul_add(b[i], total);
+    }
+    total
+}
+
+/// # Safety
+///
+/// Requires AVX2 and FMA; the caller must have verified CPU support.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_avx2(w: f32, a: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    let blocks = out.len() / LANES;
+    let split = blocks * LANES;
+    let ap = a.as_ptr();
+    let op = out.as_mut_ptr();
+    // SAFETY: no memory preconditions for the broadcast.
+    let wv = unsafe { _mm256_set1_ps(w) };
+    for k in 0..blocks {
+        // SAFETY: `k * LANES + LANES <= split <= len` keeps loads and the
+        // store in bounds; `a` and `out` are distinct slices (&/&mut), so
+        // the accesses never alias.
+        unsafe {
+            let x = _mm256_loadu_ps(ap.add(k * LANES));
+            let o = _mm256_loadu_ps(op.add(k * LANES));
+            _mm256_storeu_ps(op.add(k * LANES), _mm256_fmadd_ps(wv, x, o));
+        }
+    }
+    for i in split..out.len() {
+        out[i] = w.mul_add(a[i], out[i]);
+    }
+}
+
+/// # Safety
+///
+/// Requires AVX2; the caller must have verified CPU support.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn add_avx2(out: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    let blocks = out.len() / LANES;
+    let split = blocks * LANES;
+    let ap = a.as_ptr();
+    let op = out.as_mut_ptr();
+    for k in 0..blocks {
+        // SAFETY: in-bounds as in `axpy_avx2`; distinct slices, no aliasing.
+        unsafe {
+            let x = _mm256_loadu_ps(ap.add(k * LANES));
+            let o = _mm256_loadu_ps(op.add(k * LANES));
+            _mm256_storeu_ps(op.add(k * LANES), _mm256_add_ps(o, x));
+        }
+    }
+    for i in split..out.len() {
+        out[i] += a[i];
+    }
+}
+
+/// The 6×16 FMA microtile over packed panels: `C[r][j]` is loaded, updated
+/// by `kc` fused multiply-adds in `k`-ascending order, and stored back.
+/// Rows `rows..MR` read the A panel's zero padding into never-stored
+/// accumulators.
+///
+/// # Safety
+///
+/// Requires AVX2 and FMA; the caller must have verified CPU support, and
+/// must pass panels with `pa.len() >= kc * MR`, `pb.len() >= kc * NR`,
+/// `1 <= rows <= MR`, `cs >= NR` and `c.len() >= (rows - 1) * cs + NR`
+/// (all debug-asserted).
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn panel_avx2(pa: &[f32], pb: &[f32], c: &mut [f32], cs: usize, rows: usize, kc: usize) {
+    debug_assert!(rows >= 1 && rows <= MR);
+    debug_assert!(cs >= NR);
+    debug_assert!(pa.len() >= kc * MR);
+    debug_assert!(pb.len() >= kc * NR);
+    debug_assert!(c.len() >= (rows - 1) * cs + NR);
+    // SAFETY: no memory preconditions.
+    let zero = unsafe { _mm256_setzero_ps() };
+    let mut acc = [[zero; 2]; MR];
+    let cp = c.as_mut_ptr();
+    for (r, accr) in acc.iter_mut().enumerate().take(rows) {
+        // SAFETY: `r < rows`, so `r * cs + NR <= c.len()` (asserted above).
+        unsafe {
+            accr[0] = _mm256_loadu_ps(cp.add(r * cs));
+            accr[1] = _mm256_loadu_ps(cp.add(r * cs + LANES));
+        }
+    }
+    let pap = pa.as_ptr();
+    let pbp = pb.as_ptr();
+    for k in 0..kc {
+        // SAFETY: `k < kc` and the panel-length asserts above keep every
+        // load in bounds (`k * NR + NR <= kc * NR`, `k * MR + MR <= kc * MR`).
+        unsafe {
+            let b0 = _mm256_loadu_ps(pbp.add(k * NR));
+            let b1 = _mm256_loadu_ps(pbp.add(k * NR + LANES));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*pap.add(k * MR + r));
+                accr[0] = _mm256_fmadd_ps(av, b0, accr[0]);
+                accr[1] = _mm256_fmadd_ps(av, b1, accr[1]);
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(rows) {
+        // SAFETY: `r < rows`, bounds as for the loads above; rows are
+        // `cs >= NR` apart, so the two stores per row never overlap another
+        // row's.
+        unsafe {
+            _mm256_storeu_ps(cp.add(r * cs), accr[0]);
+            _mm256_storeu_ps(cp.add(r * cs + LANES), accr[1]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn supported() -> bool {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+
+    /// Scalar emulation of the AVX2 dot order: fused lanes, pairwise
+    /// combine, fused sequential tail.
+    fn dot_reference(a: &[f32], b: &[f32]) -> f32 {
+        let blocks = a.len() / LANES;
+        let mut acc = [0.0f32; LANES];
+        for k in 0..blocks {
+            for (l, accl) in acc.iter_mut().enumerate() {
+                *accl = a[k * LANES + l].mul_add(b[k * LANES + l], *accl);
+            }
+        }
+        let mut total = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+            + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for i in blocks * LANES..a.len() {
+            total = a[i].mul_add(b[i], total);
+        }
+        total
+    }
+
+    #[test]
+    fn dot_matches_scalar_fma_emulation_on_ragged_lengths() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(301);
+        for len in 0..=41 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_reference(&a, &b).to_bits(),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_fma_on_ragged_lengths() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(302);
+        for len in 0..=41 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let w = rng.normal_f32(0.0, 2.0);
+            let mut got = init.clone();
+            axpy(w, &a, &mut got);
+            for (i, g) in got.iter().enumerate() {
+                let want = w.mul_add(a[i], init[i]);
+                assert_eq!(g.to_bits(), want.to_bits(), "len {len} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_bit_identical_to_portable() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(303);
+        for len in 0..=41 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut got = init.clone();
+            add(&mut got, &a);
+            let mut want = init;
+            crate::kernels::portable::add8(&mut want, &a);
+            for (g, w_) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w_.to_bits(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_matches_pure_fma_chain() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(304);
+        for rows in 1..=MR {
+            let kc = 7;
+            let pa: Vec<f32> = (0..kc * MR).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let pb: Vec<f32> = (0..kc * NR).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let c0: Vec<f32> = (0..rows * NR).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut c = c0.clone();
+            panel(&pa, &pb, &mut c, NR, rows, kc);
+            for r in 0..rows {
+                for j in 0..NR {
+                    let mut want = c0[r * NR + j];
+                    for k in 0..kc {
+                        want = pa[k * MR + r].mul_add(pb[k * NR + j], want);
+                    }
+                    assert_eq!(
+                        c[r * NR + j].to_bits(),
+                        want.to_bits(),
+                        "rows {rows} r {r} j {j}"
+                    );
+                }
+            }
+        }
+    }
+}

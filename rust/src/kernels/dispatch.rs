@@ -1,0 +1,369 @@
+//! One-time runtime selection of the microkernel variant.
+//!
+//! The crate ships three implementations of its hot inner loops (see the
+//! [`crate::kernels`] module docs for the accumulation-order contract):
+//!
+//! * **`Portable`** — the original hand-unrolled 8-lane kernels
+//!   ([`crate::kernels::dot8`] and friends), compiled for any target and
+//!   carrying accumulation order v1 semantics. No packed GEMM
+//!   ([`KernelTable::gemm`] is `None`).
+//! * **`Avx2Fma`** — explicit AVX2 + FMA intrinsics with a 6×16
+//!   register-blocked GEMM microtile over cache-blocked packed panels
+//!   (`x86_64` only, gated on `is_x86_feature_detected!("avx2")` and
+//!   `"fma"`).
+//! * **`Neon`** — explicit NEON intrinsics with an 8×8 microtile
+//!   (`aarch64` only, where NEON is a baseline feature).
+//!
+//! # Selection rules
+//!
+//! [`selected`] resolves the process-wide variant exactly once:
+//!
+//! 1. a test/bench override installed via [`force_variant`] (hidden API,
+//!    single-process use only) wins;
+//! 2. else the `CONV_EINSUM_KERNEL_VARIANT` environment variable
+//!    ([`VARIANT_ENV`]) is honoured — `portable`/`scalar`, `avx2` (or
+//!    `avx2fma`/`avx2+fma`), `neon`; any other value falls through to
+//!    auto-detection;
+//! 3. else CPU features are detected: `Avx2Fma` when AVX2 and FMA are both
+//!    present, `Neon` on `aarch64`, `Portable` otherwise.
+//!
+//! The result is cached in a `OnceLock`, so every `AtomKernel` built in
+//! the process — on both the scalar and the parallel backend — uses the
+//! same table; that is what lets the bit-identical scalar-vs-parallel
+//! contract be stated *per variant*. Requesting a variant the host cannot
+//! run (e.g. `avx2` on a non-AVX2 CPU) silently degrades to `Portable`
+//! through [`table_for`] — the table constructors are the only way to
+//! reach the `target_feature` entry points, which keeps the unsafe
+//! feature-gated calls sound by construction.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+use super::avx2;
+#[cfg(target_arch = "aarch64")]
+use super::neon;
+use super::{portable, LANES};
+
+/// Environment variable consulted (once, at first kernel build) to pin the
+/// kernel variant: `portable` / `scalar`, `avx2` / `avx2fma` / `avx2+fma`,
+/// or `neon`. Unknown values fall back to auto-detection.
+pub const VARIANT_ENV: &str = "CONV_EINSUM_KERNEL_VARIANT";
+
+/// Depth of one cache-blocked GEMM slice: panels cover `KC` values of the
+/// contracted index at a time, sized so an A panel (`mr · KC` floats) and
+/// the B tile row it streams against stay L1/L2-resident.
+pub const KC: usize = 256;
+
+/// Minimum `m · n · k` multiply count before the packed GEMM path engages;
+/// below this the packing traffic costs more than the microtile saves and
+/// the unblocked per-row loops win.
+pub const PACK_MIN_FLOPS: usize = 1 << 14;
+
+/// Signature of the dot-product kernel (`a · b`).
+pub type DotFn = fn(&[f32], &[f32]) -> f32;
+/// Signature of the axpy kernel (`out[i] += w * a[i]`).
+pub type AxpyFn = fn(f32, &[f32], &mut [f32]);
+/// Signature of the accumulate kernel (`out[i] += a[i]`).
+pub type AddFn = fn(&mut [f32], &[f32]);
+/// Signature of the GEMM microtile: `panel(pa, pb, c, cs, rows, kc)`
+/// updates the `rows × nr` tile of C (row stride `cs`) from `mr`-row /
+/// `nr`-column packed panels, one pure FMA chain per element.
+pub type PanelFn = fn(&[f32], &[f32], &mut [f32], usize, usize, usize);
+
+/// The three microkernel implementations. `Ord` on preference is not
+/// defined — use [`selected`]/[`table_for`] to resolve one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Hand-unrolled autovectorizer-friendly kernels; runs anywhere.
+    Portable,
+    /// Explicit AVX2 + FMA intrinsics (`x86_64` with both features).
+    Avx2Fma,
+    /// Explicit NEON intrinsics (`aarch64`).
+    Neon,
+}
+
+impl Variant {
+    /// Stable lowercase name (used in logs, benches, and verify errors).
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Portable => "portable",
+            Variant::Avx2Fma => "avx2fma",
+            Variant::Neon => "neon",
+        }
+    }
+}
+
+/// Parameters of a variant's packed-GEMM path.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmParams {
+    /// Microtile rows (register-block height).
+    pub mr: usize,
+    /// Microtile columns (register-block width).
+    pub nr: usize,
+    /// Cache-block depth along the contracted index.
+    pub kc: usize,
+    /// The register-blocked microtile kernel.
+    pub panel: PanelFn,
+}
+
+impl GemmParams {
+    /// Whether the packed path should run a matmul of logical shape
+    /// `m × k · k × n`: the contraction must be deep enough to vectorize
+    /// (`k >= LANES`), wide enough for at least one full column tile, and
+    /// large enough overall to amortize the packing copies.
+    pub fn engages(&self, m: usize, n: usize, k: usize) -> bool {
+        k >= LANES && n >= self.nr && m.saturating_mul(n).saturating_mul(k) >= PACK_MIN_FLOPS
+    }
+}
+
+/// A resolved set of kernel entry points. Tables are `'static`: the safe
+/// wrappers inside only ever reach `target_feature` code after the
+/// constructors here have verified CPU support.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelTable {
+    /// Which implementation this table carries.
+    pub variant: Variant,
+    /// Whether `dot`/`axpy` (and the GEMM path) contract with fused
+    /// multiply-adds. Scalar edge loops in callers must match: fused
+    /// variants use `f32::mul_add`, unfused use `a * b + c`.
+    pub fused: bool,
+    /// Dot product in this variant's normative order.
+    pub dot: DotFn,
+    /// `out += w * a` in this variant's normative order.
+    pub axpy: AxpyFn,
+    /// `out += a` (bit-identical across all variants).
+    pub add: AddFn,
+    /// Packed cache-blocked GEMM, when the variant has one.
+    pub gemm: Option<GemmParams>,
+}
+
+/// The always-available fallback; byte-for-byte the accumulation orders of
+/// kernel version v1.
+static PORTABLE: KernelTable = KernelTable {
+    variant: Variant::Portable,
+    fused: false,
+    dot: portable::dot8,
+    axpy: portable::axpy8,
+    add: portable::add8,
+    gemm: None,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_FMA: KernelTable = KernelTable {
+    variant: Variant::Avx2Fma,
+    fused: true,
+    dot: avx2::dot,
+    axpy: avx2::axpy,
+    add: avx2::add,
+    gemm: Some(GemmParams {
+        mr: avx2::MR,
+        nr: avx2::NR,
+        kc: KC,
+        panel: avx2::panel,
+    }),
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: KernelTable = KernelTable {
+    variant: Variant::Neon,
+    fused: true,
+    dot: neon::dot,
+    axpy: neon::axpy,
+    add: neon::add,
+    gemm: Some(GemmParams {
+        mr: neon::MR,
+        nr: neon::NR,
+        kc: KC,
+        panel: neon::panel,
+    }),
+};
+
+/// Test/bench override: 0 = none, 1 = portable, 2 = avx2fma, 3 = neon.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+/// The process-wide default, resolved once from env + detection.
+static DEFAULT: OnceLock<&'static KernelTable> = OnceLock::new();
+
+/// The table for `v`, degraded to `Portable` when the host cannot run it.
+/// This is the only constructor of non-portable tables, which makes the
+/// `target_feature` entry points inside them sound: a table exists only if
+/// detection succeeded.
+pub fn table_for(v: Variant) -> &'static KernelTable {
+    match v {
+        Variant::Portable => &PORTABLE,
+        Variant::Avx2Fma => avx2_table(),
+        Variant::Neon => neon_table(),
+    }
+}
+
+fn avx2_table() -> &'static KernelTable {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return &AVX2_FMA;
+        }
+    }
+    &PORTABLE
+}
+
+fn neon_table() -> &'static KernelTable {
+    #[cfg(target_arch = "aarch64")]
+    {
+        return &NEON;
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    &PORTABLE
+}
+
+/// The variant every kernel built in this process uses (see the module
+/// docs for the resolution order). Cheap after the first call: one relaxed
+/// atomic load plus a `OnceLock` read.
+pub fn selected() -> &'static KernelTable {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => return table_for(Variant::Portable),
+        2 => return table_for(Variant::Avx2Fma),
+        3 => return table_for(Variant::Neon),
+        _ => {}
+    }
+    DEFAULT.get_or_init(|| match env_choice() {
+        Some(v) => table_for(v),
+        None => detect(),
+    })
+}
+
+/// Pin the process to a variant (`None` restores env/auto selection).
+///
+/// Test/bench plumbing only: plans compiled while a force is active embed
+/// the forced table, and `CompiledPlan::verify` rejects replaying them
+/// after the selection changes — so only force in single-process contexts
+/// (the per-variant parity suite, the kernel bench section) and restore
+/// before touching anything else.
+#[doc(hidden)]
+pub fn force_variant(v: Option<Variant>) {
+    let code = match v {
+        None => 0,
+        Some(Variant::Portable) => 1,
+        Some(Variant::Avx2Fma) => 2,
+        Some(Variant::Neon) => 3,
+    };
+    FORCED.store(code, Ordering::Relaxed);
+}
+
+/// Variants this host can actually run, preferred first (`Portable` is
+/// always last and always present).
+// alloc-ok(fn): cold introspection helper for tests and benches; never
+// called on the execution hot path.
+pub fn available() -> Vec<Variant> {
+    let mut v = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            v.push(Variant::Avx2Fma);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        v.push(Variant::Neon);
+    }
+    v.push(Variant::Portable);
+    v
+}
+
+fn env_choice() -> Option<Variant> {
+    let raw = std::env::var(VARIANT_ENV).ok()?;
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "portable" | "scalar" => Some(Variant::Portable),
+        "avx2" | "avx2fma" | "avx2+fma" => Some(Variant::Avx2Fma),
+        "neon" => Some(Variant::Neon),
+        _ => None,
+    }
+}
+
+fn detect() -> &'static KernelTable {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return &AVX2_FMA;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return &NEON;
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    &PORTABLE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portable_table_is_always_available() {
+        let t = table_for(Variant::Portable);
+        assert_eq!(t.variant, Variant::Portable);
+        assert!(!t.fused);
+        assert!(t.gemm.is_none());
+    }
+
+    #[test]
+    fn table_for_degrades_to_portable_when_unavailable() {
+        // Whichever of the SIMD variants the host lacks must degrade; the
+        // one it has must come back as itself with a packed GEMM.
+        let avail = available();
+        for v in [Variant::Avx2Fma, Variant::Neon] {
+            let t = table_for(v);
+            if avail.contains(&v) {
+                assert_eq!(t.variant, v);
+                assert!(t.fused);
+                let gp = t.gemm.expect("SIMD variants carry a packed GEMM");
+                assert!(gp.mr >= 1 && gp.nr >= LANES && gp.kc == KC);
+            } else {
+                assert_eq!(t.variant, Variant::Portable);
+            }
+        }
+    }
+
+    #[test]
+    fn available_ends_with_portable() {
+        let avail = available();
+        assert_eq!(*avail.last().unwrap(), Variant::Portable);
+        assert!(avail.len() <= 2);
+    }
+
+    #[test]
+    fn engages_requires_depth_width_and_volume() {
+        let gp = GemmParams {
+            mr: 6,
+            nr: 16,
+            kc: KC,
+            panel: |_, _, _, _, _, _| {},
+        };
+        // Too shallow: k < LANES.
+        assert!(!gp.engages(1000, 1000, LANES - 1));
+        // Too narrow: n < nr.
+        assert!(!gp.engages(1000, 15, 1000));
+        // Too small overall.
+        assert!(!gp.engages(4, 16, 8));
+        // Large and GEMM-shaped.
+        assert!(gp.engages(96, 96, 96));
+        // Saturating volume never wraps around.
+        assert!(gp.engages(usize::MAX, usize::MAX, usize::MAX));
+    }
+
+    #[test]
+    fn forced_variant_overrides_and_restores() {
+        force_variant(Some(Variant::Portable));
+        assert_eq!(selected().variant, Variant::Portable);
+        force_variant(None);
+        // Back to env/auto: whatever it is, it must be host-available.
+        assert!(available().contains(&selected().variant));
+    }
+}

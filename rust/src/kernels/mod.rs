@@ -1,28 +1,56 @@
-//! Explicit 8-lane `f32` microkernels for the executor's inner loops.
+//! Microkernels for the executor's inner loops, with one-time runtime
+//! variant dispatch.
 //!
 //! The planner minimizes FLOPs, but the paper's wall-clock claims only
-//! materialize if each atom executes near hardware peak. These kernels
-//! replace reliance on autovectorization with hand-unrolled 8-wide blocks
-//! (one AVX/NEON-register-width of `f32`s) written so the backend compiles
-//! them to packed SIMD: fixed-size `chunks_exact` bodies with no bounds
-//! checks and independent accumulator lanes.
+//! materialize if each atom executes near hardware peak. The crate ships
+//! three kernel *variants* (see [`dispatch::Variant`]): the portable
+//! hand-unrolled 8-lane code that leans on the autovectorizer, and
+//! explicit AVX2+FMA / NEON implementations that add fused multiply-adds
+//! and a register-blocked, cache-blocked packed GEMM for the matmul-shaped
+//! atom loops. [`dispatch::selected`] resolves one variant per process
+//! (feature detection, overridable via the `CONV_EINSUM_KERNEL_VARIANT`
+//! env var), and every kernel table built afterwards uses it.
 //!
-//! # Accumulation order (normative)
+//! # Accumulation order v2 (normative, per variant)
 //!
 //! Floating-point addition is not associative, so every kernel fixes its
-//! accumulation order *as part of its contract* — the scalar and parallel
-//! backends, and the compiled-plan replay, all call these same kernels, so
-//! results are bit-identical across backends by construction:
+//! accumulation order *as part of its contract*. Since v2 the contract is
+//! stated **per variant**: the scalar and parallel backends, and the
+//! compiled-plan replay, all draw their kernels from the same
+//! process-selected [`dispatch::KernelTable`], so results are bit-identical
+//! across backends *for a fixed variant* — not across variants or ISAs
+//! (the AVX2/NEON variants contract with fused multiply-adds, which round
+//! once where the portable code rounds twice).
 //!
-//! * [`axpy8`] / [`add8`] touch each output element exactly once
-//!   (`out[i] += w * a[i]`), so unrolling performs no reassociation at all —
-//!   they are bit-identical to the naive element loop.
-//! * [`dot8`] accumulates block `k` lane-wise into 8 independent lanes
-//!   (`acc[l] += a[8k + l] * b[8k + l]`), then combines lanes pairwise as
-//!   `((acc0+acc1)+(acc2+acc3)) + ((acc4+acc5)+(acc6+acc7))`, then folds the
-//!   ragged tail sequentially onto that total in index order. Any scalar
-//!   emulation of this order reproduces the result bit-for-bit (the
-//!   property suite checks ragged lengths 0..=41).
+//! Orders common to all variants:
+//!
+//! * **axpy / add** touch each output element exactly once
+//!   (`out[i] += w * a[i]`, fused to `out[i] = fma(w, a[i], out[i])` on
+//!   FMA variants); no reassociation ever. `add` performs no
+//!   multiplication, so it is bit-identical across *all* variants.
+//! * **dot** accumulates 8 logical lanes per block
+//!   (`acc[l] ⊕= a[8k + l] · b[8k + l]`, where `⊕` is fused on FMA
+//!   variants), combines lanes pairwise as
+//!   `((acc0+acc1)+(acc2+acc3)) + ((acc4+acc5)+(acc6+acc7))`, then folds
+//!   the ragged tail sequentially in index order.
+//! * **packed GEMM** (AVX2/NEON only; engages per
+//!   [`dispatch::GemmParams::engages`]): each output element is one pure
+//!   FMA chain over the contracted index in ascending order, with the
+//!   accumulator loaded from and stored back to C at cache-block
+//!   boundaries. Loads and stores are exact, so the result per element is
+//!   independent of the microtile size, the `KC` blocking, and how rows
+//!   are partitioned across worker threads — which is what keeps the
+//!   scalar-vs-parallel contract intact on the packed path. Scalar edge
+//!   loops use [`f32::mul_add`] (IEEE single rounding, bit-identical to
+//!   the vector FMA). The packed path does **not** skip zero operands the
+//!   way the portable axpy fallbacks do, so on non-finite data
+//!   (`0 · ∞`, NaN payloads) the variants may differ; the contract
+//!   quantifies over finite inputs.
+//!
+//! The portable variant's orders are byte-for-byte those of accumulation
+//! order v1 ([`dot8`], [`axpy8`], [`add8`] remain exported under their v1
+//! names); forcing `CONV_EINSUM_KERNEL_VARIANT=portable` reproduces v1
+//! results exactly.
 //!
 //! # Per-step selection
 //!
@@ -32,10 +60,29 @@
 //! [`StepKernel::MatmulDot8`]; convolutions with last-axis runs long enough
 //! to fill 8-lane blocks → [`StepKernel::ConvRunsWide`], otherwise
 //! [`StepKernel::ConvRunsNarrow`]). Wide and narrow axpy variants are
-//! bit-identical — the choice only avoids block-setup overhead on runs that
-//! can never fill a lane block.
+//! bit-identical within a variant — the choice only avoids block-setup
+//! overhead on runs that can never fill a lane block. The kernel table
+//! holder also pins the *variant* selected at build time, and
+//! [`crate::exec::CompiledPlan::verify`] rejects replaying a plan under a
+//! different selection.
 
-/// Lane width of the hand-unrolled kernels (one 256-bit register of `f32`).
+mod portable;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+pub(crate) mod pack;
+
+pub mod dispatch;
+
+pub use portable::{add8, axpy8, dot8};
+
+use dispatch::KernelTable;
+
+/// Lane width of the 8-lane blocked kernels (one 256-bit register of
+/// `f32`, or two NEON registers).
 pub const LANES: usize = 8;
 
 /// Version tag of the normative accumulation order documented above.
@@ -44,117 +91,75 @@ pub const LANES: usize = 8;
 /// ([`crate::exec::AtomKernel`]) records the version current at lowering
 /// time, and [`crate::exec::CompiledPlan::verify`] rejects plans whose
 /// steps carry a stale tag. **Bump this constant whenever the documented
-/// accumulation order changes** (e.g. a future explicit-SIMD variant that
-/// reassociates differently) — stale compiled artifacts then fail
+/// accumulation order changes** — stale compiled artifacts then fail
 /// verification instead of silently breaking cross-backend bit-identity.
-pub const ACCUM_ORDER_VERSION: u32 = 1;
+///
+/// History: **v1** — single portable variant (unfused 8-lane orders).
+/// **v2** — per-variant contract: runtime-dispatched AVX2+FMA/NEON
+/// variants with fused contractions and a packed cache-blocked GEMM;
+/// bit-identity quantifies over (variant, input), not ISA.
+pub const ACCUM_ORDER_VERSION: u32 = 2;
 
 /// Which microkernel family a compiled step's inner loops use. Chosen once
 /// per step at compile/lowering time (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StepKernel {
-    /// Pure contraction: per-group matmul over [`dot8`] rows.
+    /// Pure contraction: per-group matmul over the variant's dot rows,
+    /// upgraded to the packed cache-blocked GEMM when the selected variant
+    /// has one and the shape warrants it.
     MatmulDot8,
-    /// Convolution whose last-axis runs can fill 8-lane blocks: [`axpy8`].
+    /// Convolution whose last-axis runs can fill 8-lane blocks: the
+    /// variant's axpy kernel.
     ConvRunsWide,
     /// Convolution with short (ragged) runs: plain element axpy — the same
-    /// per-element order as [`axpy8`], minus the block prologue.
+    /// per-element order as the variant's axpy, minus the block prologue.
     ConvRunsNarrow,
 }
 
-/// `out[i] += w * a[i]` over 8-lane blocks plus a sequential tail.
-/// Bit-identical to the naive element loop (each element is touched once).
+/// Dot product using the process-selected variant (see [`dispatch`]).
 #[inline]
-pub fn axpy8(w: f32, a: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(a.len(), out.len());
-    let blocks = out.len() / LANES;
-    let split = blocks * LANES;
-    let (a_main, a_tail) = a.split_at(split);
-    let (o_main, o_tail) = out.split_at_mut(split);
-    for (o, s) in o_main.chunks_exact_mut(LANES).zip(a_main.chunks_exact(LANES)) {
-        o[0] += w * s[0];
-        o[1] += w * s[1];
-        o[2] += w * s[2];
-        o[3] += w * s[3];
-        o[4] += w * s[4];
-        o[5] += w * s[5];
-        o[6] += w * s[6];
-        o[7] += w * s[7];
-    }
-    for (o, s) in o_tail.iter_mut().zip(a_tail) {
-        *o += w * s;
-    }
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    (dispatch::selected().dot)(a, b)
 }
 
-/// `out[i] += a[i]` over 8-lane blocks plus a sequential tail.
-/// Bit-identical to the naive element loop.
+/// `out[i] += w * a[i]` using the process-selected variant.
 #[inline]
-pub fn add8(out: &mut [f32], a: &[f32]) {
-    debug_assert_eq!(a.len(), out.len());
-    let blocks = out.len() / LANES;
-    let split = blocks * LANES;
-    let (a_main, a_tail) = a.split_at(split);
-    let (o_main, o_tail) = out.split_at_mut(split);
-    for (o, s) in o_main.chunks_exact_mut(LANES).zip(a_main.chunks_exact(LANES)) {
-        o[0] += s[0];
-        o[1] += s[1];
-        o[2] += s[2];
-        o[3] += s[3];
-        o[4] += s[4];
-        o[5] += s[5];
-        o[6] += s[6];
-        o[7] += s[7];
-    }
-    for (o, s) in o_tail.iter_mut().zip(a_tail) {
-        *o += s;
-    }
+pub fn axpy(w: f32, a: &[f32], out: &mut [f32]) {
+    (dispatch::selected().axpy)(w, a, out)
 }
 
-/// Dot product in the normative 8-lane blocked order (see module docs):
-/// lane-parallel block accumulation, pairwise lane combine, sequential
-/// ragged tail.
+/// `out[i] += a[i]` using the process-selected variant (bit-identical
+/// across all variants).
 #[inline]
-pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let blocks = a.len() / LANES;
-    let split = blocks * LANES;
-    let (a_main, a_tail) = a.split_at(split);
-    let (b_main, b_tail) = b.split_at(split);
-    let mut acc = [0.0f32; LANES];
-    for (x, y) in a_main.chunks_exact(LANES).zip(b_main.chunks_exact(LANES)) {
-        acc[0] += x[0] * y[0];
-        acc[1] += x[1] * y[1];
-        acc[2] += x[2] * y[2];
-        acc[3] += x[3] * y[3];
-        acc[4] += x[4] * y[4];
-        acc[5] += x[5] * y[5];
-        acc[6] += x[6] * y[6];
-        acc[7] += x[7] * y[7];
-    }
-    let mut total =
-        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for (x, y) in a_tail.iter().zip(b_tail) {
-        total += x * y;
-    }
-    total
+pub fn add(out: &mut [f32], a: &[f32]) {
+    (dispatch::selected().add)(out, a)
 }
 
-/// Axpy dispatched by the step's selected kernel. Both arms compute the
-/// same per-element result bit-for-bit; narrow runs skip the block setup.
+/// Axpy dispatched by the step's selected kernel, drawing from `table`.
+/// Both arms compute the same per-element result bit-for-bit within a
+/// variant; narrow runs skip the block setup, and the element loop fuses
+/// exactly when the table's vector kernels do.
 #[inline]
-pub fn axpy_run(kind: StepKernel, w: f32, a: &[f32], out: &mut [f32]) {
+pub fn axpy_run(table: &KernelTable, kind: StepKernel, w: f32, a: &[f32], out: &mut [f32]) {
     match kind {
         StepKernel::ConvRunsNarrow => {
-            for (o, s) in out.iter_mut().zip(a) {
-                *o += w * s;
+            if table.fused {
+                for (o, s) in out.iter_mut().zip(a) {
+                    *o = w.mul_add(*s, *o);
+                }
+            } else {
+                for (o, s) in out.iter_mut().zip(a) {
+                    *o += w * s;
+                }
             }
         }
-        _ => axpy8(w, a, out),
+        _ => (table.axpy)(w, a, out),
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::dispatch::{table_for, Variant};
     use super::*;
     use crate::util::rng::Rng;
 
@@ -225,18 +230,61 @@ mod tests {
     }
 
     #[test]
-    fn axpy_run_variants_agree_bitwise() {
+    fn axpy_run_variants_agree_bitwise_per_table() {
         let mut rng = Rng::new(104);
-        for len in [0usize, 1, 3, 7, 8, 9, 23] {
-            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-            let mut wide = init.clone();
-            let mut narrow = init.clone();
-            axpy_run(StepKernel::ConvRunsWide, 1.5, &a, &mut wide);
-            axpy_run(StepKernel::ConvRunsNarrow, 1.5, &a, &mut narrow);
-            for (x, y) in wide.iter().zip(&narrow) {
-                assert_eq!(x.to_bits(), y.to_bits(), "len {len}");
+        let tables = [table_for(Variant::Portable), dispatch::selected()];
+        for table in tables {
+            for len in [0usize, 1, 3, 7, 8, 9, 23] {
+                let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let mut wide = init.clone();
+                let mut narrow = init.clone();
+                axpy_run(table, StepKernel::ConvRunsWide, 1.5, &a, &mut wide);
+                axpy_run(table, StepKernel::ConvRunsNarrow, 1.5, &a, &mut narrow);
+                for (x, y) in wide.iter().zip(&narrow) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "variant {} len {len}",
+                        table.variant.name()
+                    );
+                }
             }
         }
+    }
+
+    #[test]
+    fn add_is_bit_identical_across_variants() {
+        let mut rng = Rng::new(105);
+        for len in [0usize, 1, 7, 8, 9, 33] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut portable_out = init.clone();
+            add8(&mut portable_out, &a);
+            for v in dispatch::available() {
+                let mut got = init.clone();
+                (table_for(v).add)(&mut got, &a);
+                for (g, w_) in got.iter().zip(&portable_out) {
+                    assert_eq!(g.to_bits(), w_.to_bits(), "variant {} len {len}", v.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_wrappers_use_selected_table() {
+        let mut rng = Rng::new(106);
+        let a: Vec<f32> = (0..19).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..19).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let table = dispatch::selected();
+        assert_eq!(dot(&a, &b).to_bits(), (table.dot)(&a, &b).to_bits());
+        let mut x = b.clone();
+        let mut y = b.clone();
+        axpy(0.75, &a, &mut x);
+        (table.axpy)(0.75, &a, &mut y);
+        assert_eq!(x, y);
+        add(&mut x, &a);
+        (table.add)(&mut y, &a);
+        assert_eq!(x, y);
     }
 }

@@ -1,0 +1,309 @@
+//! Explicit NEON microkernels (`aarch64` only). NEON is a baseline feature
+//! of every `aarch64` target the crate supports, so
+//! [`crate::kernels::dispatch`] selects this variant unconditionally there
+//! (the `CONV_EINSUM_KERNEL_VARIANT=portable` override still forces the
+//! fallback).
+//!
+//! # Accumulation order (normative for the `Neon` variant)
+//!
+//! The orders mirror the AVX2+FMA variant with 4-lane registers:
+//!
+//! * [`dot`] — two 4-lane fused accumulators form the same 8 logical lanes
+//!   as the portable kernel (`acc[l] = fma(a, b, acc[l])` per 8-element
+//!   block), combined pairwise, then a fused sequential ragged tail.
+//! * [`axpy`] — each element updated exactly once with a single fused
+//!   multiply-add, vector body and scalar tail alike.
+//! * [`add`] — plain addition, no reassociation: bit-identical to the
+//!   portable [`crate::kernels::portable::add8`].
+//! * [`panel`] — the 8×8 GEMM microtile: per output element one pure FMA
+//!   chain over `k` ascending with the accumulator loaded from and stored
+//!   back to C, invariant under tiling, `KC` blocking, and row
+//!   partitioning.
+//!
+//! Scalar edges use [`f32::mul_add`], bit-identical to the hardware
+//! `vfmaq_f32` the vector body performs on the same operands.
+//!
+//! Every intrinsic call sits in an explicit `unsafe` block (the crate
+//! denies `unsafe_op_in_unsafe_fn`) with a `SAFETY:` comment;
+//! `tools/hotpath_lint.rs` additionally checks that every
+//! `#[target_feature]` function here is declared `unsafe fn`.
+
+// On newer toolchains arch intrinsics are safe to call inside a matching
+// `#[target_feature]` context, which would flag the explicit blocks below
+// as unused; older toolchains (through the crate's 1.70 MSRV) require them.
+#![allow(unused_unsafe)]
+
+use super::LANES;
+use core::arch::aarch64::{vaddq_f32, vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32};
+
+/// NEON register width in `f32` lanes.
+const VL: usize = 4;
+
+/// Microtile rows of the packed GEMM kernel (16 of 32 q registers hold
+/// accumulators: 8 rows × 2 halves of 8 columns).
+pub const MR: usize = 8;
+/// Microtile columns (two 4-lane registers wide).
+pub const NR: usize = 8;
+
+/// Safe entry installed in the `Neon` [`crate::kernels::dispatch::KernelTable`].
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: NEON is a baseline feature of the `aarch64` targets this
+    // module is compiled for; `dispatch::table_for` re-checks availability
+    // before handing out this table.
+    unsafe { dot_neon(a, b) }
+}
+
+/// Safe entry installed in the `Neon` [`crate::kernels::dispatch::KernelTable`].
+pub fn axpy(w: f32, a: &[f32], out: &mut [f32]) {
+    // SAFETY: NEON is baseline on `aarch64` (see `dot` above).
+    unsafe { axpy_neon(w, a, out) }
+}
+
+/// Safe entry installed in the `Neon` [`crate::kernels::dispatch::KernelTable`].
+pub fn add(out: &mut [f32], a: &[f32]) {
+    // SAFETY: NEON is baseline on `aarch64` (see `dot` above).
+    unsafe { add_neon(out, a) }
+}
+
+/// Safe entry installed in the `Neon` [`crate::kernels::dispatch::GemmParams`].
+pub fn panel(pa: &[f32], pb: &[f32], c: &mut [f32], cs: usize, rows: usize, kc: usize) {
+    // SAFETY: NEON is baseline on `aarch64` (see `dot` above).
+    unsafe { panel_neon(pa, pb, c, cs, rows, kc) }
+}
+
+/// # Safety
+///
+/// Requires NEON (baseline on `aarch64`; enabled via `target_feature`).
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let blocks = a.len() / LANES;
+    let split = blocks * LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    // SAFETY: the broadcast has no memory preconditions.
+    let mut acc_lo = unsafe { vdupq_n_f32(0.0) };
+    let mut acc_hi = acc_lo;
+    for k in 0..blocks {
+        // SAFETY: `k * LANES + LANES <= split <= len` for both slices, so
+        // the two 4-float loads per operand stay in bounds.
+        unsafe {
+            let x0 = vld1q_f32(ap.add(k * LANES));
+            let x1 = vld1q_f32(ap.add(k * LANES + VL));
+            let y0 = vld1q_f32(bp.add(k * LANES));
+            let y1 = vld1q_f32(bp.add(k * LANES + VL));
+            acc_lo = vfmaq_f32(acc_lo, x0, y0);
+            acc_hi = vfmaq_f32(acc_hi, x1, y1);
+        }
+    }
+    let mut lanes = [0.0f32; LANES];
+    // SAFETY: `lanes` holds exactly 8 f32s, split into two 4-float stores.
+    unsafe {
+        vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+        vst1q_f32(lanes.as_mut_ptr().add(VL), acc_hi);
+    }
+    let mut total = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    for i in split..a.len() {
+        total = a[i].mul_add(b[i], total);
+    }
+    total
+}
+
+/// # Safety
+///
+/// Requires NEON (baseline on `aarch64`).
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(w: f32, a: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    let blocks = out.len() / VL;
+    let split = blocks * VL;
+    let ap = a.as_ptr();
+    let op = out.as_mut_ptr();
+    // SAFETY: the broadcast has no memory preconditions.
+    let wv = unsafe { vdupq_n_f32(w) };
+    for k in 0..blocks {
+        // SAFETY: `k * VL + VL <= split <= len` keeps the load and store in
+        // bounds; `a` and `out` are distinct slices (&/&mut), no aliasing.
+        unsafe {
+            let x = vld1q_f32(ap.add(k * VL));
+            let o = vld1q_f32(op.add(k * VL));
+            vst1q_f32(op.add(k * VL), vfmaq_f32(o, wv, x));
+        }
+    }
+    for i in split..out.len() {
+        out[i] = w.mul_add(a[i], out[i]);
+    }
+}
+
+/// # Safety
+///
+/// Requires NEON (baseline on `aarch64`).
+#[target_feature(enable = "neon")]
+unsafe fn add_neon(out: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    let blocks = out.len() / VL;
+    let split = blocks * VL;
+    let ap = a.as_ptr();
+    let op = out.as_mut_ptr();
+    for k in 0..blocks {
+        // SAFETY: in-bounds as in `axpy_neon`; distinct slices, no aliasing.
+        unsafe {
+            let x = vld1q_f32(ap.add(k * VL));
+            let o = vld1q_f32(op.add(k * VL));
+            vst1q_f32(op.add(k * VL), vaddq_f32(o, x));
+        }
+    }
+    for i in split..out.len() {
+        out[i] += a[i];
+    }
+}
+
+/// The 8×8 FMA microtile over packed panels: `C[r][j]` is loaded, updated
+/// by `kc` fused multiply-adds in `k`-ascending order, and stored back.
+/// Rows `rows..MR` read the A panel's zero padding into never-stored
+/// accumulators.
+///
+/// # Safety
+///
+/// Requires NEON (baseline on `aarch64`); the caller must pass panels with
+/// `pa.len() >= kc * MR`, `pb.len() >= kc * NR`, `1 <= rows <= MR`,
+/// `cs >= NR` and `c.len() >= (rows - 1) * cs + NR` (all debug-asserted).
+#[target_feature(enable = "neon")]
+unsafe fn panel_neon(pa: &[f32], pb: &[f32], c: &mut [f32], cs: usize, rows: usize, kc: usize) {
+    debug_assert!(rows >= 1 && rows <= MR);
+    debug_assert!(cs >= NR);
+    debug_assert!(pa.len() >= kc * MR);
+    debug_assert!(pb.len() >= kc * NR);
+    debug_assert!(c.len() >= (rows - 1) * cs + NR);
+    // SAFETY: the broadcast has no memory preconditions.
+    let zero = unsafe { vdupq_n_f32(0.0) };
+    let mut acc = [[zero; 2]; MR];
+    let cp = c.as_mut_ptr();
+    for (r, accr) in acc.iter_mut().enumerate().take(rows) {
+        // SAFETY: `r < rows`, so `r * cs + NR <= c.len()` (asserted above).
+        unsafe {
+            accr[0] = vld1q_f32(cp.add(r * cs));
+            accr[1] = vld1q_f32(cp.add(r * cs + VL));
+        }
+    }
+    let pap = pa.as_ptr();
+    let pbp = pb.as_ptr();
+    for k in 0..kc {
+        // SAFETY: `k < kc` and the panel-length asserts above keep every
+        // load in bounds (`k * NR + NR <= kc * NR`, `k * MR + MR <= kc * MR`).
+        unsafe {
+            let b0 = vld1q_f32(pbp.add(k * NR));
+            let b1 = vld1q_f32(pbp.add(k * NR + VL));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = vdupq_n_f32(*pap.add(k * MR + r));
+                accr[0] = vfmaq_f32(accr[0], av, b0);
+                accr[1] = vfmaq_f32(accr[1], av, b1);
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(rows) {
+        // SAFETY: `r < rows`, bounds as for the loads above; rows are
+        // `cs >= NR` apart, so stores to different rows never overlap.
+        unsafe {
+            vst1q_f32(cp.add(r * cs), accr[0]);
+            vst1q_f32(cp.add(r * cs + VL), accr[1]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Scalar emulation of the NEON dot order (identical lane structure to
+    /// the AVX2 variant): fused lanes, pairwise combine, fused tail.
+    fn dot_reference(a: &[f32], b: &[f32]) -> f32 {
+        let blocks = a.len() / LANES;
+        let mut acc = [0.0f32; LANES];
+        for k in 0..blocks {
+            for (l, accl) in acc.iter_mut().enumerate() {
+                *accl = a[k * LANES + l].mul_add(b[k * LANES + l], *accl);
+            }
+        }
+        let mut total = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+            + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for i in blocks * LANES..a.len() {
+            total = a[i].mul_add(b[i], total);
+        }
+        total
+    }
+
+    #[test]
+    fn dot_matches_scalar_fma_emulation_on_ragged_lengths() {
+        let mut rng = Rng::new(311);
+        for len in 0..=41 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_reference(&a, &b).to_bits(),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_fma_on_ragged_lengths() {
+        let mut rng = Rng::new(312);
+        for len in 0..=41 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let w = rng.normal_f32(0.0, 2.0);
+            let mut got = init.clone();
+            axpy(w, &a, &mut got);
+            for (i, g) in got.iter().enumerate() {
+                let want = w.mul_add(a[i], init[i]);
+                assert_eq!(g.to_bits(), want.to_bits(), "len {len} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_bit_identical_to_portable() {
+        let mut rng = Rng::new(313);
+        for len in 0..=41 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut got = init.clone();
+            add(&mut got, &a);
+            let mut want = init;
+            crate::kernels::portable::add8(&mut want, &a);
+            for (g, w_) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w_.to_bits(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_matches_pure_fma_chain() {
+        let mut rng = Rng::new(314);
+        for rows in 1..=MR {
+            let kc = 7;
+            let pa: Vec<f32> = (0..kc * MR).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let pb: Vec<f32> = (0..kc * NR).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let c0: Vec<f32> = (0..rows * NR).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut c = c0.clone();
+            panel(&pa, &pb, &mut c, NR, rows, kc);
+            for r in 0..rows {
+                for j in 0..NR {
+                    let mut want = c0[r * NR + j];
+                    for k in 0..kc {
+                        want = pa[k * MR + r].mul_add(pb[k * NR + j], want);
+                    }
+                    assert_eq!(
+                        c[r * NR + j].to_bits(),
+                        want.to_bits(),
+                        "rows {rows} r {r} j {j}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Cache-blocked panel packing for the register-blocked GEMM microkernels.
+//!
+//! The packed matmul path (see [`crate::kernels::dispatch::GemmParams`])
+//! copies the operands of one `KC`-deep slice of the contraction into
+//! contiguous, microkernel-friendly panels before the FMA microtile loop
+//! runs over them:
+//!
+//! * the A panel interleaves `mr` rows per tile —
+//!   `dst[tile·mr·kc + k·mr + r] = A[tile·mr + r][k0 + k]` — so the
+//!   microkernel broadcasts one element per row with a unit-stride walk;
+//!   rows past `m` in the last tile are **zero-filled** (the microkernel
+//!   computes them into never-stored accumulators, and `0 · b + 0 = 0`
+//!   raises no signal);
+//! * the B panel interleaves `nr` columns per tile —
+//!   `dst[jt·nr·kc + k·nr + j] = B[k0 + k][jt·nr + j]` — so each microtile
+//!   step loads `nr` consecutive floats. Only *full* column tiles are
+//!   packed; the ragged `n % nr` column edge is computed by the scalar-FMA
+//!   edge loop in the driver straight from the strided source.
+//!
+//! Both functions take generic `(row, col)` strides, which is what lets the
+//! three matmul orientations (`NT`, `NN`, `TN`) share one packing routine:
+//! an operand is "transposed" by swapping the strides, never by copying
+//! twice. Every element of the destination prefix in use is overwritten on
+//! every call (including the zero padding), so pack buffers need no
+//! clearing between replays.
+
+/// Pack the `kc`-deep slice (columns `k0..k0 + kc` of the logical
+/// `m × k` operand `A`, where `A[i][k] = src[i * rs + k * cs]`) into
+/// row-interleaved tiles of `mr` rows. `dst` must hold at least
+/// `ceil(m / mr) * mr * kc` elements.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a(
+    src: &[f32],
+    rs: usize,
+    cs: usize,
+    m: usize,
+    k0: usize,
+    kc: usize,
+    mr: usize,
+    dst: &mut [f32],
+) {
+    let m_tiles = (m + mr - 1) / mr;
+    debug_assert!(dst.len() >= m_tiles * mr * kc);
+    for tile in 0..m_tiles {
+        let i0 = tile * mr;
+        let rows = mr.min(m - i0);
+        let d = &mut dst[tile * mr * kc..(tile + 1) * mr * kc];
+        for kk in 0..kc {
+            let col = (k0 + kk) * cs;
+            let (live, pad) = d[kk * mr..(kk + 1) * mr].split_at_mut(rows);
+            for (r, slot) in live.iter_mut().enumerate() {
+                *slot = src[(i0 + r) * rs + col];
+            }
+            for slot in pad.iter_mut() {
+                *slot = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack the `kc`-deep slice (rows `k0..k0 + kc` of the logical `k × n`
+/// operand `B`, where `B[k][j] = src[k * rs + j * cs]`) into
+/// column-interleaved tiles of `nr` columns, full tiles only
+/// (`n_full % nr == 0`). `dst` must hold at least `n_full * kc` elements.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b(
+    src: &[f32],
+    rs: usize,
+    cs: usize,
+    n_full: usize,
+    k0: usize,
+    kc: usize,
+    nr: usize,
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(n_full % nr, 0);
+    debug_assert!(dst.len() >= n_full * kc);
+    for jt in 0..n_full / nr {
+        let j0 = jt * nr;
+        let d = &mut dst[jt * nr * kc..(jt + 1) * nr * kc];
+        for kk in 0..kc {
+            let row = (k0 + kk) * rs;
+            let drow = &mut d[kk * nr..(kk + 1) * nr];
+            for (jj, slot) in drow.iter_mut().enumerate() {
+                *slot = src[row + (j0 + jj) * cs];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_interleaves_and_zero_pads() {
+        // 5×4 row-major A, mr = 2: three tiles, last padded with one row.
+        let m = 5;
+        let k = 4;
+        let src: Vec<f32> = (0..m * k).map(|v| v as f32).collect();
+        let mr = 2;
+        let mut dst = vec![-1.0f32; 3 * mr * k];
+        pack_a(&src, k, 1, m, 0, k, mr, &mut dst);
+        for tile in 0..3 {
+            for kk in 0..k {
+                for r in 0..mr {
+                    let i = tile * mr + r;
+                    let want = if i < m { src[i * k + kk] } else { 0.0 };
+                    assert_eq!(dst[tile * mr * k + kk * mr + r], want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_interleaves_full_tiles() {
+        // 3×8 row-major B, nr = 4: two full tiles.
+        let k = 3;
+        let n = 8;
+        let src: Vec<f32> = (0..k * n).map(|v| (v as f32) * 0.5).collect();
+        let nr = 4;
+        let mut dst = vec![-1.0f32; n * k];
+        pack_b(&src, n, 1, n, 0, k, nr, &mut dst);
+        for jt in 0..2 {
+            for kk in 0..k {
+                for jj in 0..nr {
+                    let j = jt * nr + jj;
+                    assert_eq!(dst[jt * nr * k + kk * nr + jj], src[kk * n + j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_handles_strided_transposed_views() {
+        // A_std[i][k] = src[k * 3 + i] (a 4×3 matrix read as its transpose).
+        let src: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let (m, k) = (3, 4);
+        let mr = 4;
+        let mut dst = vec![0.0f32; mr * k];
+        pack_a(&src, 1, 3, m, 0, k, mr, &mut dst);
+        for kk in 0..k {
+            for r in 0..m {
+                assert_eq!(dst[kk * mr + r], src[kk * 3 + r]);
+            }
+            assert_eq!(dst[kk * mr + 3], 0.0);
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Portable 8-lane `f32` microkernels — the fallback [`crate::kernels::dispatch::Variant`]
+//! and the baseline every explicit-SIMD variant is benchmarked against.
+//!
+//! These are the original hand-unrolled kernels: fixed-size `chunks_exact`
+//! bodies with no bounds checks and independent accumulator lanes, written
+//! so the autovectorizer compiles them to packed SIMD on any target. Their
+//! accumulation orders are *normative for the portable variant* (see the
+//! [`crate::kernels`] module docs for the v2 per-variant contract):
+//!
+//! * [`axpy8`] / [`add8`] touch each output element exactly once
+//!   (`out[i] += w * a[i]`), so unrolling performs no reassociation at all —
+//!   they are bit-identical to the naive element loop.
+//! * [`dot8`] accumulates block `k` lane-wise into 8 independent lanes
+//!   (`acc[l] += a[8k + l] * b[8k + l]`), then combines lanes pairwise as
+//!   `((acc0+acc1)+(acc2+acc3)) + ((acc4+acc5)+(acc6+acc7))`, then folds the
+//!   ragged tail sequentially onto that total in index order. Any scalar
+//!   emulation of this order reproduces the result bit-for-bit (the
+//!   property suite checks ragged lengths 0..=41).
+//!
+//! The portable variant carries no packed-GEMM microkernel
+//! ([`crate::kernels::dispatch::KernelTable::gemm`] is `None`): the matmul
+//! paths in [`crate::exec::atom`] fall back to the unblocked
+//! [`dot8`]-per-row / [`axpy8`]-per-row loops, exactly as in accumulation
+//! order v1.
+
+use super::LANES;
+
+/// `out[i] += w * a[i]` over 8-lane blocks plus a sequential tail.
+/// Bit-identical to the naive element loop (each element is touched once).
+#[inline]
+pub fn axpy8(w: f32, a: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    let blocks = out.len() / LANES;
+    let split = blocks * LANES;
+    let (a_main, a_tail) = a.split_at(split);
+    let (o_main, o_tail) = out.split_at_mut(split);
+    for (o, s) in o_main.chunks_exact_mut(LANES).zip(a_main.chunks_exact(LANES)) {
+        o[0] += w * s[0];
+        o[1] += w * s[1];
+        o[2] += w * s[2];
+        o[3] += w * s[3];
+        o[4] += w * s[4];
+        o[5] += w * s[5];
+        o[6] += w * s[6];
+        o[7] += w * s[7];
+    }
+    for (o, s) in o_tail.iter_mut().zip(a_tail) {
+        *o += w * s;
+    }
+}
+
+/// `out[i] += a[i]` over 8-lane blocks plus a sequential tail.
+/// Bit-identical to the naive element loop.
+#[inline]
+pub fn add8(out: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    let blocks = out.len() / LANES;
+    let split = blocks * LANES;
+    let (a_main, a_tail) = a.split_at(split);
+    let (o_main, o_tail) = out.split_at_mut(split);
+    for (o, s) in o_main.chunks_exact_mut(LANES).zip(a_main.chunks_exact(LANES)) {
+        o[0] += s[0];
+        o[1] += s[1];
+        o[2] += s[2];
+        o[3] += s[3];
+        o[4] += s[4];
+        o[5] += s[5];
+        o[6] += s[6];
+        o[7] += s[7];
+    }
+    for (o, s) in o_tail.iter_mut().zip(a_tail) {
+        *o += s;
+    }
+}
+
+/// Dot product in the portable variant's 8-lane blocked order (see module
+/// docs): lane-parallel block accumulation, pairwise lane combine,
+/// sequential ragged tail.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let blocks = a.len() / LANES;
+    let split = blocks * LANES;
+    let (a_main, a_tail) = a.split_at(split);
+    let (b_main, b_tail) = b.split_at(split);
+    let mut acc = [0.0f32; LANES];
+    for (x, y) in a_main.chunks_exact(LANES).zip(b_main.chunks_exact(LANES)) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+        acc[4] += x[4] * y[4];
+        acc[5] += x[5] * y[5];
+        acc[6] += x[6] * y[6];
+        acc[7] += x[7] * y[7];
+    }
+    let mut total =
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (x, y) in a_tail.iter().zip(b_tail) {
+        total += x * y;
+    }
+    total
+}

@@ -16,7 +16,7 @@
 //! * a **multi-threaded execution backend** ([`parallel`]): the atom's
 //!   independent per-`(group, output-row)` GEMM-shaped blocks are dispatched
 //!   across a shared persistent worker pool (std-only, no dependencies),
-//!   through the explicit 8-lane SIMD microkernels in [`kernels`];
+//!   through the runtime-dispatched SIMD microkernels in [`kernels`];
 //! * the **tnn-cost model** (paper Appendix B, Eq. 5–8) with training-mode
 //!   costs `cost(f) + cost(g1) + cost(g2)` in [`cost`];
 //! * the **optimal sequencer** (paper §3.2) — an exact netcon-equivalent
@@ -125,11 +125,14 @@
 //!   ([`parallel::Pool::sized`], useful for benchmarking scaling).
 //! * [`Backend::Scalar`] — the single-threaded kernels.
 //!
-//! Both backends execute their inner loops through the explicit 8-lane
-//! SIMD microkernels in [`kernels`] (`dot8` / `axpy8` with a fixed,
-//! documented accumulation order), selected per compiled step when its
-//! kernel tables are built — so scalar and parallel results are
-//! **bit-identical on every path**, contractions included.
+//! Both backends execute their inner loops through the runtime-dispatched
+//! SIMD microkernels in [`kernels`] (portable / AVX2+FMA / NEON variants
+//! plus a packed cache-blocked GEMM, each with a fixed, documented
+//! accumulation order — see [`kernels::dispatch`]), with the selected
+//! variant pinned per compiled step when its kernel tables are built — so
+//! scalar and parallel results are **bit-identical on every path for a
+//! fixed variant**, contractions included. `CONV_EINSUM_KERNEL_VARIANT`
+//! overrides detection (e.g. `portable` forces the fallback kernels).
 //!
 //! Plans record their backend ([`planner::PlanOptions::backend`] →
 //! [`planner::Plan::backend`]), so [`exec::execute_path`], the coordinator's
@@ -149,7 +152,8 @@
 //!   checkpoint-policy training layouts) and proves arena-slot
 //!   disjointness, def-before-use dataflow, in-bounds permutations and
 //!   gather tables, overflow-free offset arithmetic, planner-cost/FLOP
-//!   agreement, and accumulation-order version pinning. It runs
+//!   agreement, and accumulation-order version + kernel-variant pinning.
+//!   It runs
 //!   automatically after every compile in debug/test builds and on every
 //!   [`exec::PlanCache`] insertion in release builds.
 //! * [`verify::pool_model`] — a deterministic exhaustive-interleaving

@@ -19,7 +19,7 @@
 //! [`concat_into`] (into a reusable staging tensor) and hands each request
 //! its slice of the batched result with [`Tensor::split_axis0`].
 
-use crate::kernels::{add8, axpy8};
+use crate::kernels::dispatch;
 use crate::parallel::Pool;
 use crate::util::rng::Rng;
 use std::fmt;
@@ -408,7 +408,7 @@ impl Tensor {
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
         let d = Arc::make_mut(&mut self.data);
-        add8(d, &other.data);
+        (dispatch::selected().add)(d, &other.data);
     }
 
     /// In-place `self *= s`.
@@ -424,7 +424,7 @@ impl Tensor {
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
         let d = Arc::make_mut(&mut self.data);
-        axpy8(alpha, &other.data, d);
+        (dispatch::selected().axpy)(alpha, &other.data, d);
     }
 
     /// Sum of all elements.
@@ -772,6 +772,10 @@ pub fn sum_axis_into(
     let inner: usize = shape[axis + 1..].iter().product();
     assert_eq!(src.len(), outer * mid * inner, "src length mismatch");
     assert_eq!(out.len(), outer * inner, "out length mismatch");
+    // Pure adds carry no fused-multiply ordering, so the dispatched `add`
+    // is bit-identical to the portable kernel on every variant — the
+    // sum_axis parity promise above holds regardless of selection.
+    let add = dispatch::selected().add;
     let parallel = match pool {
         Some(p) => p.threads() > 1 && out.len() >= PAR_CANON_MIN_ELEMS && inner > 0,
         None => false,
@@ -790,7 +794,7 @@ pub fn sum_axis_into(
             }
             for m in 0..mid {
                 let base = m * inner + i0;
-                add8(c, &src[base..base + clen]);
+                add(c, &src[base..base + clen]);
             }
         });
     } else if parallel {
@@ -810,7 +814,7 @@ pub fn sum_axis_into(
                 }
                 for m in 0..mid {
                     let base = (o * mid + m) * inner;
-                    add8(block, &src[base..base + inner]);
+                    add(block, &src[base..base + inner]);
                 }
             }
         });
@@ -822,7 +826,7 @@ pub fn sum_axis_into(
             for m in 0..mid {
                 let sbase = (o * mid + m) * inner;
                 let dbase = o * inner;
-                add8(&mut out[dbase..dbase + inner], &src[sbase..sbase + inner]);
+                add(&mut out[dbase..dbase + inner], &src[sbase..sbase + inner]);
             }
         }
     }

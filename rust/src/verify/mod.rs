@@ -17,8 +17,10 @@
 //!     buffer it gathers from, with all offset arithmetic `checked_mul`
 //!     ([`VerifyError::GatherOutOfBounds`], [`VerifyError::OffsetOverflow`]);
 //!   - every step's kernel holder carries the current
-//!     [`crate::kernels::ACCUM_ORDER_VERSION`] and the kernel family the
-//!     atom would select ([`VerifyError::KernelOrderVersion`]);
+//!     [`crate::kernels::ACCUM_ORDER_VERSION`], the kernel family the atom
+//!     would select, and the microkernel variant the process selected
+//!     ([`VerifyError::KernelOrderVersion`],
+//!     [`VerifyError::KernelVariantMismatch`]);
 //!   - the step sequence's recomputed FLOP total matches the planner's
 //!     per-step and whole-plan cost estimates
 //!     ([`VerifyError::FlopMismatch`]);
@@ -111,6 +113,14 @@ pub enum VerifyError {
         found: u32,
         expected: u32,
     },
+    /// A step's kernel holder is pinned to a different microkernel variant
+    /// than the one currently selected for the process — replaying it would
+    /// mix accumulation orders across steps.
+    KernelVariantMismatch {
+        step: usize,
+        found: &'static str,
+        selected: &'static str,
+    },
     /// Structural inconsistency not covered by a more specific variant.
     Malformed { what: String },
 }
@@ -167,6 +177,16 @@ impl fmt::Display for VerifyError {
                 f,
                 "step {step}: kernel accumulation-order version {found} != current \
                  version {expected} (stale compiled artifact?)"
+            ),
+            VerifyError::KernelVariantMismatch {
+                step,
+                found,
+                selected,
+            } => write!(
+                f,
+                "step {step}: kernel pinned to variant '{found}' but the process \
+                 selected '{selected}' (plan compiled under a different kernel \
+                 selection?)"
             ),
             VerifyError::Malformed { what } => write!(f, "malformed compiled plan: {what}"),
         }
@@ -390,6 +410,14 @@ impl CompiledPlan {
                     step: k,
                     found: step.kernel.order_version,
                     expected: ACCUM_ORDER_VERSION,
+                });
+            }
+            let selected = crate::kernels::dispatch::selected();
+            if step.kernel.variant() != selected.variant {
+                return Err(VerifyError::KernelVariantMismatch {
+                    step: k,
+                    found: step.kernel.variant().name(),
+                    selected: selected.variant.name(),
                 });
             }
             // Gather tables: the backward gathers operand cotangents out of

@@ -1,0 +1,266 @@
+//! Per-variant parity suite for the runtime-dispatched microkernels.
+//!
+//! The v2 accumulation contract is stated *per variant*: for every kernel
+//! variant the host can run (plus the always-present portable fallback),
+//! scalar and parallel backends must produce bit-identical outputs and
+//! gradients — across all four convolution varieties, the tiny-K /
+//! packed-GEMM / unblocked contraction routings, and the training engine
+//! under {StoreAll, Sqrt} checkpoint policies. The suite also pins the
+//! verifier's rejection of stale compiled artifacts (wrong
+//! accumulation-order version, wrong pinned variant).
+//!
+//! Forcing a variant is process-global, so everything runs inside ONE
+//! `#[test]` (this integration binary contains nothing else) and the
+//! force is cleared at the end.
+
+use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
+use conv_einsum::einsum::{parse, ConvKind, SizedSpec};
+use conv_einsum::exec::{pairwise_vjp_with, pairwise_with};
+use conv_einsum::kernels::dispatch::{self, Variant};
+use conv_einsum::kernels::{ACCUM_ORDER_VERSION, LANES};
+use conv_einsum::util::rng::Rng;
+use conv_einsum::{
+    compile_expr, Backend, ExecOptions, PlanOptions, Tensor, TrainWorkspace, VerifyError,
+};
+use std::sync::Arc;
+
+const KINDS: [ConvKind; 4] = [
+    ConvKind::Same,
+    ConvKind::Valid,
+    ConvKind::Full,
+    ConvKind::Circular,
+];
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|x| x.to_bits()).collect()
+}
+
+fn conv_spec(kind: ConvKind) -> SizedSpec {
+    SizedSpec::with_kinds(
+        parse("bsx,tsx->btx|x").unwrap(),
+        vec![vec![2, 3, 11], vec![4, 3, 3]],
+        vec![kind],
+    )
+    .unwrap()
+}
+
+fn contraction_spec(g: usize, t: usize, n: usize, s: usize) -> SizedSpec {
+    SizedSpec::new(
+        parse("gts,gns->gtn").unwrap(),
+        vec![vec![g, t, s], vec![g, n, s]],
+    )
+    .unwrap()
+}
+
+/// Plain unfused row-major oracle for `out[g,t,n] = Σ_s a·b` — the exact
+/// order the tiny-K short-circuit promises on every variant (and the v1
+/// `dot8` order for `s < LANES`, whose lane blocks are empty there).
+fn tiny_k_oracle(a: &Tensor, b: &Tensor, g: usize, t: usize, n: usize, s: usize) -> Vec<u32> {
+    let av = a.data();
+    let bv = b.data();
+    let mut out = vec![0.0f32; g * t * n];
+    for gi in 0..g {
+        for ti in 0..t {
+            for ni in 0..n {
+                let mut acc = 0.0f32;
+                for si in 0..s {
+                    acc += av[(gi * t + ti) * s + si] * bv[(gi * n + ni) * s + si];
+                }
+                out[(gi * t + ti) * n + ni] = acc;
+            }
+        }
+    }
+    out.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Convolution forward + VJP: scalar vs pool, all four kinds.
+fn conv_parity(variant: Variant) {
+    for kind in KINDS {
+        let s = conv_spec(kind);
+        let mut rng = Rng::new(311);
+        let a = Tensor::rand(&s.dims[0], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&s.dims[1], -1.0, 1.0, &mut rng);
+        let want = pairwise_with(&s, &a, &b, &[], &ExecOptions::scalar());
+        let dout = Tensor::rand(want.shape(), -1.0, 1.0, &mut rng);
+        let (da_s, db_s) = pairwise_vjp_with(&s, &a, &b, &dout, &[], &ExecOptions::scalar());
+        for workers in [1usize, 2, 4] {
+            let opts = ExecOptions::parallel(workers);
+            let got = pairwise_with(&s, &a, &b, &[], &opts);
+            assert_eq!(
+                bits(&got),
+                bits(&want),
+                "{} {kind:?} forward workers={workers}",
+                variant.name()
+            );
+            let (da_p, db_p) = pairwise_vjp_with(&s, &a, &b, &dout, &[], &opts);
+            assert_eq!(
+                bits(&da_p),
+                bits(&da_s),
+                "{} {kind:?} da workers={workers}",
+                variant.name()
+            );
+            assert_eq!(
+                bits(&db_p),
+                bits(&db_s),
+                "{} {kind:?} db workers={workers}",
+                variant.name()
+            );
+        }
+    }
+}
+
+/// Pure contractions across all three routings (tiny-K short-circuit,
+/// packed cache-blocked GEMM, unblocked per-row fallback): scalar vs pool
+/// bit-identical, and the tiny-K path equal to the unfused oracle on
+/// every variant.
+fn contraction_parity(variant: Variant) {
+    // (g, t, n, s): tiny-K (s < LANES); GEMM-sized with ragged m/n/k
+    // (engages every packed orientation on AVX2 and NEON); small fallback
+    // (deep enough to vectorize, too narrow/small to pack).
+    let shapes = [(2usize, 5usize, 6usize, 5usize), (4, 48, 40, 33), (2, 8, 5, 16)];
+    for (g, t, n, s) in shapes {
+        let spec = contraction_spec(g, t, n, s);
+        let mut rng = Rng::new(313);
+        let a = Tensor::rand(&[g, t, s], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&[g, n, s], -1.0, 1.0, &mut rng);
+        let want = pairwise_with(&spec, &a, &b, &[], &ExecOptions::scalar());
+        if s < LANES {
+            assert_eq!(
+                bits(&want),
+                tiny_k_oracle(&a, &b, g, t, n, s),
+                "{} tiny-K path must be the plain unfused loop",
+                variant.name()
+            );
+        }
+        let dout = Tensor::rand(want.shape(), -1.0, 1.0, &mut rng);
+        let (da_s, db_s) = pairwise_vjp_with(&spec, &a, &b, &dout, &[], &ExecOptions::scalar());
+        for workers in [1usize, 2, 4] {
+            let opts = ExecOptions::parallel(workers);
+            let got = pairwise_with(&spec, &a, &b, &[], &opts);
+            assert_eq!(
+                bits(&got),
+                bits(&want),
+                "{} gts({g},{t},{n},{s}) forward workers={workers}",
+                variant.name()
+            );
+            let (da_p, db_p) = pairwise_vjp_with(&spec, &a, &b, &dout, &[], &opts);
+            assert_eq!(
+                bits(&da_p),
+                bits(&da_s),
+                "{} gts({g},{t},{n},{s}) da workers={workers}",
+                variant.name()
+            );
+            assert_eq!(
+                bits(&db_p),
+                bits(&db_s),
+                "{} gts({g},{t},{n},{s}) db workers={workers}",
+                variant.name()
+            );
+        }
+    }
+}
+
+/// Training engine: all four kinds × {StoreAll, Sqrt}, scalar vs parallel
+/// plans — outputs and every gradient bit-identical.
+fn training_parity(variant: Variant) {
+    let expr = "bsx,tsx,tu,uv->bvx|x";
+    let dims = vec![vec![2, 3, 9], vec![4, 3, 3], vec![4, 5], vec![5, 3]];
+    for kind in KINDS {
+        let opts_for = |backend| PlanOptions {
+            training: true,
+            conv_kinds: Some(vec![kind]),
+            backend,
+            ..Default::default()
+        };
+        let scalar = Arc::new(compile_expr(expr, &dims, &opts_for(Backend::Scalar)).unwrap());
+        let parallel = Arc::new(
+            compile_expr(expr, &dims, &opts_for(Backend::Parallel { threads: 2 })).unwrap(),
+        );
+        let mut rng = Rng::new(317);
+        let ins: Vec<Tensor> = dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+        let refs: Vec<&Tensor> = ins.iter().collect();
+        let dout = Tensor::rand(scalar.out_shape(), -1.0, 1.0, &mut rng);
+        let ad_s = PathAutodiff::from_compiled(Arc::clone(&scalar));
+        let ad_p = PathAutodiff::from_compiled(Arc::clone(&parallel));
+        let mut ws = TrainWorkspace::new();
+        let meter = MemoryMeter::new();
+        for policy in [CkptPolicy::StoreAll, CkptPolicy::Sqrt] {
+            let d = dout.clone();
+            let (y_s, g_s) = ad_s
+                .forward_backward(&refs, |_| d.clone(), policy, &mut ws, &meter)
+                .unwrap();
+            let d = dout.clone();
+            let (y_p, g_p) = ad_p
+                .forward_backward(&refs, |_| d.clone(), policy, &mut ws, &meter)
+                .unwrap();
+            assert_eq!(
+                bits(&y_p),
+                bits(&y_s),
+                "{} {kind:?} {policy:?}: training output diverged",
+                variant.name()
+            );
+            for (i, (gp, gs)) in g_p.iter().zip(g_s.iter()).enumerate() {
+                assert_eq!(
+                    bits(gp),
+                    bits(gs),
+                    "{} {kind:?} {policy:?}: grad {i} diverged",
+                    variant.name()
+                );
+            }
+        }
+    }
+}
+
+/// Verifier rejection: a stale accumulation-order version and a
+/// cross-variant replay must both fail `CompiledPlan::verify`.
+fn verify_rejects_stale_artifacts() {
+    let opts = PlanOptions::default();
+    let dims = vec![vec![2, 24, 16], vec![2, 24, 16]];
+
+    dispatch::force_variant(Some(Variant::Portable));
+    let mut plan = compile_expr("gts,gns->gtn", &dims, &opts).unwrap();
+    plan.verify().unwrap();
+    plan.poison_kernel_order_version_for_tests(0, ACCUM_ORDER_VERSION - 1);
+    match plan.verify() {
+        Err(VerifyError::KernelOrderVersion { step, found, expected }) => {
+            assert_eq!(step, 0);
+            assert_eq!(found, ACCUM_ORDER_VERSION - 1);
+            assert_eq!(expected, ACCUM_ORDER_VERSION);
+        }
+        other => panic!("expected KernelOrderVersion rejection, got {other:?}"),
+    }
+
+    // A plan pinned to portable replayed under a different process
+    // selection must be rejected (only exercisable on hosts with a SIMD
+    // variant; portable-only hosts re-select portable and stay valid).
+    let plan = compile_expr("gts,gns->gtn", &dims, &opts).unwrap();
+    dispatch::force_variant(None);
+    if dispatch::selected().variant != Variant::Portable {
+        match plan.verify() {
+            Err(VerifyError::KernelVariantMismatch { step, found, selected }) => {
+                assert_eq!(step, 0);
+                assert_eq!(found, "portable");
+                assert_eq!(selected, dispatch::selected().variant.name());
+            }
+            other => panic!("expected KernelVariantMismatch rejection, got {other:?}"),
+        }
+    } else {
+        plan.verify().unwrap();
+    }
+}
+
+#[test]
+fn per_variant_bit_identity_and_verifier_pinning() {
+    // `available()` lists the host's preferred variant first and always
+    // ends with Portable, so the loop covers every runnable variant plus
+    // the forced-portable (v1-order) configuration.
+    for variant in dispatch::available() {
+        dispatch::force_variant(Some(variant));
+        assert_eq!(dispatch::selected().variant, variant, "force must stick");
+        conv_parity(variant);
+        contraction_parity(variant);
+        training_parity(variant);
+    }
+    verify_rejects_stale_artifacts();
+    dispatch::force_variant(None);
+}

@@ -9,7 +9,12 @@
 //!   design (compiled plans replay against caller-held workspaces), and
 //!   every deliberate exception must say why;
 //! * an **`unsafe` keyword** without a `SAFETY:` comment on the same line
-//!   or within the few lines above it.
+//!   or within the few lines above it;
+//! * a **`#[target_feature(...)]` function not declared `unsafe`** — on
+//!   newer toolchains safe `target_feature` functions are callable from
+//!   ordinary safe code with no feature check, so every SIMD variant entry
+//!   point must be an `unsafe fn` reached only through its
+//!   detection-gated dispatch wrapper.
 //!
 //! Annotation grammar (all inside ordinary `//` comments):
 //!
@@ -161,6 +166,10 @@ fn scan_file(path: &Path, src: &str, findings: &mut Vec<Finding>) {
     // `alloc-ok:` on a standalone comment line allows the next code line.
     let mut line_allow_pending = false;
 
+    // `#[target_feature(...)]` arming: the next line introducing a `fn`
+    // must declare it `unsafe` (disarmed once that fn is seen).
+    let mut target_feature_armed = false;
+
     // Rolling window of recent comment text for the SAFETY lookback.
     let mut recent_comments: Vec<String> = Vec::new();
 
@@ -183,6 +192,23 @@ fn scan_file(path: &Path, src: &str, findings: &mut Vec<Finding>) {
         // -- cfg(test) arming ---------------------------------------------
         if code.contains("#[cfg(test)]") {
             cfg_test_armed = true;
+        }
+
+        // -- target_feature hygiene ---------------------------------------
+        if code.contains("#[target_feature(") {
+            target_feature_armed = true;
+        }
+        if target_feature_armed && contains_word(&code, "fn") {
+            if !contains_word(&code, "unsafe") {
+                findings.push(Finding {
+                    file: path.to_path_buf(),
+                    line: lineno,
+                    what: "`#[target_feature]` function must be declared `unsafe` \
+                           (call it only through a detection-gated dispatch wrapper)"
+                        .to_string(),
+                });
+            }
+            target_feature_armed = false;
         }
 
         // -- checks on this line (before brace accounting, so the line
