@@ -30,6 +30,20 @@
 //! [`crate::coordinator::ServiceConfig::batch_timeout`] are **bounds** on
 //! the controller, not fixed operating points.
 //!
+//! # Admission control and deadlines
+//!
+//! Pending work is bounded by an explicit budget
+//! ([`crate::coordinator::ServiceConfig::max_pending`] requests and
+//! [`crate::coordinator::ServiceConfig::max_pending_bytes`] of payload):
+//! a push that would exceed either returns
+//! [`PushOutcome::Rejected`], and the router answers the caller with a
+//! structured `Overloaded` error after first trying to make room by
+//! shedding expired work ([`Batcher::shed_expired`]) — under sustained
+//! overload the oldest (already-expired) requests are dropped first.
+//! Every request may carry an absolute deadline; [`dispatch`] sheds
+//! expired requests with `DeadlineExceeded` instead of handing them to a
+//! worker.
+//!
 //! # Flushing and dispatch
 //!
 //! A group flushes when it reaches the controller's current target size
@@ -41,14 +55,13 @@
 //! spatial size), training batches carry expression + policy and compile
 //! through the workers' shared [`crate::exec::PlanCache`].
 
-use super::{ServiceConfig, ServiceMetrics, WorkItem, WorkMsg};
+use super::{Inflight, ServiceConfig, ServiceError, ServiceMetrics, WorkItem, WorkMsg};
 use crate::autodiff::CkptPolicy;
 use crate::einsum::{parse, SizedSpec};
 use crate::exec::{Backend, CompiledPlan};
 use crate::planner::{plan_with, PlanOptions, Strategy};
 use crate::tensor::Tensor;
 use crate::util::lru::LruCache;
-use anyhow::{anyhow, Result};
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::mpsc::SyncSender;
@@ -71,20 +84,74 @@ pub(crate) struct LayerEntry {
     pub(crate) plans: LruCache<(usize, usize, usize), Arc<CompiledPlan>>,
 }
 
-/// One in-flight inference request.
-pub(crate) struct Pending {
-    pub(crate) x: Tensor,
-    pub(crate) respond: SyncSender<Result<Tensor>>,
-    pub(crate) enqueued: Instant,
+/// Payload bytes of a tensor (`f32` elements) — the unit of the pending
+/// byte budget and the `pending_bytes` gauge.
+pub(crate) fn tensor_bytes(t: &Tensor) -> usize {
+    t.len() * std::mem::size_of::<f32>()
 }
 
-/// One in-flight training-step request.
+/// Common view of a pending request used by deadline and budget logic.
+pub(crate) trait PendingRequest {
+    /// Inflight-table id (the key to this request's responder).
+    fn id(&self) -> u64;
+    /// Absolute deadline, if the service configures one.
+    fn deadline(&self) -> Option<Instant>;
+    /// Payload bytes charged against the pending byte budget.
+    fn bytes(&self) -> usize;
+    /// Whether the deadline has passed at `now`.
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline().is_some_and(|d| now >= d)
+    }
+}
+
+/// One in-flight inference request, answered through the service's
+/// [`Inflight`] table by id (the responder never travels with the work, so
+/// shutdown can terminally answer every request no matter where it is).
+pub(crate) struct Pending {
+    pub(crate) x: Tensor,
+    pub(crate) id: u64,
+    pub(crate) enqueued: Instant,
+    pub(crate) deadline: Option<Instant>,
+    /// Crash-retry count so far (bounded by
+    /// [`crate::coordinator::ServiceConfig::max_retries`]).
+    pub(crate) retries: u32,
+    /// Retry backoff: the router holds the request until this instant.
+    pub(crate) not_before: Option<Instant>,
+}
+
+impl PendingRequest for Pending {
+    fn id(&self) -> u64 {
+        self.id
+    }
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+    fn bytes(&self) -> usize {
+        tensor_bytes(&self.x)
+    }
+}
+
+/// One in-flight training-step request. Training steps mutate workspace
+/// state and are therefore **never retried** — no retry fields.
 pub(crate) struct TrainPending {
     pub(crate) tensors: Vec<Tensor>,
     pub(crate) dout: Tensor,
     pub(crate) policy: CkptPolicy,
-    pub(crate) respond: SyncSender<Result<(Tensor, Vec<Tensor>)>>,
+    pub(crate) id: u64,
     pub(crate) enqueued: Instant,
+    pub(crate) deadline: Option<Instant>,
+}
+
+impl PendingRequest for TrainPending {
+    fn id(&self) -> u64 {
+        self.id
+    }
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+    fn bytes(&self) -> usize {
+        self.tensors.iter().map(tensor_bytes).sum::<usize>() + tensor_bytes(&self.dout)
+    }
 }
 
 /// Maps live utilization to batch-formation limits, bounded by the service
@@ -153,12 +220,48 @@ impl GroupItems {
             GroupItems::Train(v) => v.len(),
         }
     }
+
+    /// Drop expired items, recording their ids in `shed`; returns the
+    /// payload bytes freed.
+    fn shed_expired(&mut self, now: Instant, shed: &mut Vec<u64>) -> usize {
+        let mut freed = 0usize;
+        match self {
+            GroupItems::Eval(v) => v.retain(|p| {
+                if p.expired(now) {
+                    shed.push(p.id);
+                    freed += p.bytes();
+                    false
+                } else {
+                    true
+                }
+            }),
+            GroupItems::Train(v) => v.retain(|p| {
+                if p.expired(now) {
+                    shed.push(p.id);
+                    freed += p.bytes();
+                    false
+                } else {
+                    true
+                }
+            }),
+        }
+        freed
+    }
+
+    fn oldest(&self) -> Option<Instant> {
+        match self {
+            GroupItems::Eval(v) => v.iter().map(|p| p.enqueued).min(),
+            GroupItems::Train(v) => v.iter().map(|p| p.enqueued).min(),
+        }
+    }
 }
 
 struct PendingGroup {
     items: GroupItems,
     /// Enqueue time of the oldest pending request (deadline anchor).
     oldest: Instant,
+    /// Payload bytes held by this group (budget accounting).
+    bytes: usize,
 }
 
 /// A flushed, shape-compatible batch ready for dispatch.
@@ -183,19 +286,51 @@ impl ReadyBatch {
     }
 }
 
-/// The scheduler state: per-group pending queues plus the adaptive
-/// controller. Owned by the router thread; not shared.
+/// What happened to a pushed request.
+pub(crate) enum PushOutcome<T> {
+    /// Its group reached the target size (or the service is idle) and
+    /// flushed into this batch.
+    Ready(ReadyBatch),
+    /// Queued in its group; no batch formed yet.
+    Queued,
+    /// Admission control: the pending budget is exhausted. The request is
+    /// handed back so the router can shed expired work and retry, or
+    /// answer `Overloaded`.
+    Rejected(T),
+}
+
+/// The scheduler state: per-group pending queues, the adaptive controller,
+/// and the admission budget. Owned by the router thread; not shared.
 pub(crate) struct Batcher {
     groups: HashMap<GroupKey, PendingGroup>,
     controller: AdaptiveController,
+    /// Admission budget: maximum queued requests across all groups.
+    max_pending: usize,
+    /// Admission budget: maximum queued payload bytes across all groups.
+    max_pending_bytes: usize,
+    pending_reqs: usize,
+    pending_bytes: usize,
 }
 
 impl Batcher {
-    pub(crate) fn new(controller: AdaptiveController) -> Batcher {
+    pub(crate) fn new(
+        controller: AdaptiveController,
+        max_pending: usize,
+        max_pending_bytes: usize,
+    ) -> Batcher {
         Batcher {
             groups: HashMap::new(),
             controller,
+            max_pending,
+            max_pending_bytes,
+            pending_reqs: 0,
+            pending_bytes: 0,
         }
+    }
+
+    fn over_budget(&self, extra_bytes: usize) -> bool {
+        self.pending_reqs + 1 > self.max_pending
+            || self.pending_bytes + extra_bytes > self.max_pending_bytes
     }
 
     /// Queue an inference request; returns a batch if its group reached the
@@ -206,42 +341,59 @@ impl Batcher {
         layer: &str,
         p: Pending,
         utilization: f64,
-    ) -> Option<ReadyBatch> {
+    ) -> PushOutcome<Pending> {
         let target = self.controller.target_batch(utilization);
         let key = GroupKey::Eval {
             layer: layer.to_string(),
             shape: p.x.shape().to_vec(),
         };
+        let bytes = p.bytes();
+        let over = self.over_budget(bytes);
         match self.groups.entry(key) {
             Entry::Vacant(slot) => {
                 if target <= 1 {
-                    // Idle service: flush the lone request without touching
-                    // the map at all.
+                    // Idle service: flush the lone request without queueing
+                    // it (immediate flushes never consume pending budget).
                     let GroupKey::Eval { layer, .. } = slot.into_key() else {
                         unreachable!("eval push built an eval key")
                     };
-                    return Some(ReadyBatch::Eval {
+                    return PushOutcome::Ready(ReadyBatch::Eval {
                         layer,
                         items: vec![p],
                     });
                 }
+                if over {
+                    return PushOutcome::Rejected(p);
+                }
                 let oldest = p.enqueued;
+                self.pending_reqs += 1;
+                self.pending_bytes += bytes;
                 slot.insert(PendingGroup {
                     items: GroupItems::Eval(vec![p]),
                     oldest,
+                    bytes,
                 });
-                None
+                PushOutcome::Queued
             }
             Entry::Occupied(mut e) => {
-                match &mut e.get_mut().items {
+                if over {
+                    return PushOutcome::Rejected(p);
+                }
+                self.pending_reqs += 1;
+                self.pending_bytes += bytes;
+                let group = e.get_mut();
+                group.bytes += bytes;
+                match &mut group.items {
                     GroupItems::Eval(v) => v.push(p),
                     GroupItems::Train(_) => unreachable!("eval key holds eval items"),
                 }
                 if e.get().items.len() >= target {
                     let (key, group) = e.remove_entry();
-                    Some(ready(key, group.items))
+                    self.pending_reqs -= group.items.len();
+                    self.pending_bytes -= group.bytes;
+                    PushOutcome::Ready(ready(key, group.items))
                 } else {
-                    None
+                    PushOutcome::Queued
                 }
             }
         }
@@ -254,51 +406,70 @@ impl Batcher {
         expr: &str,
         p: TrainPending,
         utilization: f64,
-    ) -> Option<ReadyBatch> {
+    ) -> PushOutcome<TrainPending> {
         let target = self.controller.target_batch(utilization);
         let key = GroupKey::Train {
             expr: expr.to_string(),
             dims: p.tensors.iter().map(|t| t.shape().to_vec()).collect(),
             policy: p.policy,
         };
+        let bytes = p.bytes();
+        let over = self.over_budget(bytes);
         match self.groups.entry(key) {
             Entry::Vacant(slot) => {
                 if target <= 1 {
                     let GroupKey::Train { expr, policy, .. } = slot.into_key() else {
                         unreachable!("train push built a train key")
                     };
-                    return Some(ReadyBatch::Train {
+                    return PushOutcome::Ready(ReadyBatch::Train {
                         expr,
                         policy,
                         items: vec![p],
                     });
                 }
+                if over {
+                    return PushOutcome::Rejected(p);
+                }
                 let oldest = p.enqueued;
+                self.pending_reqs += 1;
+                self.pending_bytes += bytes;
                 slot.insert(PendingGroup {
                     items: GroupItems::Train(vec![p]),
                     oldest,
+                    bytes,
                 });
-                None
+                PushOutcome::Queued
             }
             Entry::Occupied(mut e) => {
-                match &mut e.get_mut().items {
+                if over {
+                    return PushOutcome::Rejected(p);
+                }
+                self.pending_reqs += 1;
+                self.pending_bytes += bytes;
+                let group = e.get_mut();
+                group.bytes += bytes;
+                match &mut group.items {
                     GroupItems::Train(v) => v.push(p),
                     GroupItems::Eval(_) => unreachable!("train key holds train items"),
                 }
                 if e.get().items.len() >= target {
                     let (key, group) = e.remove_entry();
-                    Some(ready(key, group.items))
+                    self.pending_reqs -= group.items.len();
+                    self.pending_bytes -= group.bytes;
+                    PushOutcome::Ready(ready(key, group.items))
                 } else {
-                    None
+                    PushOutcome::Queued
                 }
             }
         }
     }
 
     fn take(&mut self, key: &GroupKey) -> Option<ReadyBatch> {
-        self.groups
-            .remove_entry(key)
-            .map(|(k, g)| ready(k, g.items))
+        self.groups.remove_entry(key).map(|(k, g)| {
+            self.pending_reqs -= g.items.len();
+            self.pending_bytes -= g.bytes;
+            ready(k, g.items)
+        })
     }
 
     /// Flush every group whose oldest request has waited at least the
@@ -333,6 +504,32 @@ impl Batcher {
         out
     }
 
+    /// Shed every queued request whose deadline has passed — the
+    /// lowest-priority work under overload — freeing its budget. Returns
+    /// the shed ids for the router to answer with `DeadlineExceeded`.
+    pub(crate) fn shed_expired(&mut self, now: Instant) -> Vec<u64> {
+        let mut shed = Vec::new();
+        let mut freed_reqs = 0usize;
+        let mut freed_bytes = 0usize;
+        self.groups.retain(|_, g| {
+            let before = g.items.len();
+            let bytes = g.items.shed_expired(now, &mut shed);
+            g.bytes -= bytes;
+            freed_reqs += before - g.items.len();
+            freed_bytes += bytes;
+            match g.items.oldest() {
+                Some(o) => {
+                    g.oldest = o;
+                    true
+                }
+                None => false,
+            }
+        });
+        self.pending_reqs -= freed_reqs;
+        self.pending_bytes -= freed_bytes;
+        shed
+    }
+
     /// The earliest deadline across pending groups at the given
     /// utilization, or `None` when nothing is pending.
     pub(crate) fn next_deadline(&self, utilization: f64) -> Option<Instant> {
@@ -342,7 +539,13 @@ impl Batcher {
 
     /// Total requests currently pending across all groups.
     pub(crate) fn pending_len(&self) -> usize {
-        self.groups.values().map(|g| g.items.len()).sum()
+        self.pending_reqs
+    }
+
+    /// Total payload bytes currently pending across all groups (the
+    /// `pending_bytes` gauge the router publishes each tick).
+    pub(crate) fn pending_bytes(&self) -> usize {
+        self.pending_bytes
     }
 }
 
@@ -409,18 +612,45 @@ fn split_ready(batch: ReadyBatch, cap: usize, out: &mut Vec<ReadyBatch>) {
     }
 }
 
-/// Turn a flushed batch into a worker message: look up (or compile) the
-/// layer plan for inference batches, record batch/queue metrics, and send.
-/// Planning failures are routed back to every requester as errors.
+/// Drop already-expired requests from a flushed batch, answering each with
+/// `DeadlineExceeded` — a worker never receives dead work.
+fn shed_batch<T: PendingRequest>(
+    items: Vec<T>,
+    now: Instant,
+    metrics: &ServiceMetrics,
+    inflight: &Inflight,
+) -> Vec<T> {
+    let mut kept = Vec::with_capacity(items.len());
+    for p in items {
+        if p.expired(now) {
+            metrics.note_deadline_expired();
+            inflight.fail(p.id(), ServiceError::DeadlineExceeded);
+        } else {
+            kept.push(p);
+        }
+    }
+    kept
+}
+
+/// Turn a flushed batch into a worker message: shed expired requests, look
+/// up (or compile) the layer plan for inference batches, record
+/// batch/queue metrics, and send. Planning failures are routed back to
+/// every requester as structured errors through the inflight table.
+/// `send_deadline` bounds the worker-channel send during shutdown drain
+/// (see [`super::send_work`]); `None` means block (backpressure).
 pub(crate) fn dispatch(
     batch: ReadyBatch,
     registry: &mut HashMap<String, LayerEntry>,
     wtx: &SyncSender<WorkMsg>,
     metrics: &ServiceMetrics,
     config: &ServiceConfig,
+    inflight: &Inflight,
+    send_deadline: Option<Instant>,
 ) {
+    let now = Instant::now();
     match batch {
         ReadyBatch::Eval { layer, items } => {
+            let items = shed_batch(items, now, metrics, inflight);
             if items.is_empty() {
                 return;
             }
@@ -432,11 +662,13 @@ pub(crate) fn dispatch(
             let bshape = items[0].x.shape().to_vec();
             if bshape.len() < 2 {
                 for p in items {
-                    metrics.note_error();
-                    let _ = p.respond.send(Err(anyhow!(
-                        "layer input must have rank >= 2 (batch plus spatial modes), \
-                         got shape {bshape:?}"
-                    )));
+                    inflight.fail(
+                        p.id,
+                        ServiceError::BadRequest(format!(
+                            "layer input must have rank >= 2 (batch plus spatial modes), \
+                             got shape {bshape:?}"
+                        )),
+                    );
                 }
                 return;
             }
@@ -458,8 +690,7 @@ pub(crate) fn dispatch(
                         Err(e) => {
                             let msg = format!("planning failed: {e}");
                             for p in items {
-                                metrics.note_error();
-                                let _ = p.respond.send(Err(anyhow!("{msg}")));
+                                inflight.fail(p.id, ServiceError::Engine(msg.clone()));
                             }
                             return;
                         }
@@ -470,19 +701,25 @@ pub(crate) fn dispatch(
             for p in &items {
                 metrics.note_queue_wait(p.enqueued.elapsed());
             }
-            metrics.note_dispatched();
-            let _ = wtx.send(WorkMsg::Batch(WorkItem {
-                layer,
-                plan,
-                factors: Arc::new(entry.factors.clone()),
-                requests: items,
-            }));
+            super::send_work(
+                wtx,
+                WorkMsg::Batch(WorkItem {
+                    layer,
+                    plan,
+                    factors: Arc::new(entry.factors.clone()),
+                    requests: items,
+                }),
+                send_deadline,
+                metrics,
+                inflight,
+            );
         }
         ReadyBatch::Train {
             expr,
             policy,
             items,
         } => {
+            let items = shed_batch(items, now, metrics, inflight);
             if items.is_empty() {
                 return;
             }
@@ -490,14 +727,19 @@ pub(crate) fn dispatch(
             for p in &items {
                 metrics.note_queue_wait(p.enqueued.elapsed());
             }
-            metrics.note_dispatched();
-            let _ = wtx.send(WorkMsg::TrainBatch {
-                expr,
-                policy,
-                items,
-                strategy: config.strategy,
-                backend: config.backend,
-            });
+            super::send_work(
+                wtx,
+                WorkMsg::TrainBatch {
+                    expr,
+                    policy,
+                    items,
+                    strategy: config.strategy,
+                    backend: config.backend,
+                },
+                send_deadline,
+                metrics,
+                inflight,
+            );
         }
     }
 }
@@ -529,32 +771,39 @@ pub(crate) fn plan_layer(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::sync_channel;
 
     fn controller() -> AdaptiveController {
         AdaptiveController::new(8, Duration::from_millis(10))
     }
 
-    fn eval_pending(shape: &[usize]) -> Pending {
-        let (tx, _rx) = sync_channel(1);
-        // Keep the receiver alive is unnecessary here: scheduler tests never
-        // send responses.
+    fn batcher() -> Batcher {
+        Batcher::new(controller(), 1024, 1 << 30)
+    }
+
+    fn eval_pending(id: u64, shape: &[usize]) -> Pending {
         Pending {
             x: Tensor::zeros(shape),
-            respond: tx,
+            id,
             enqueued: Instant::now(),
+            deadline: None,
+            retries: 0,
+            not_before: None,
         }
     }
 
-    fn train_pending(dims: &[Vec<usize>]) -> TrainPending {
-        let (tx, _rx) = sync_channel(1);
+    fn train_pending(id: u64, dims: &[Vec<usize>]) -> TrainPending {
         TrainPending {
             tensors: dims.iter().map(|d| Tensor::zeros(d)).collect(),
             dout: Tensor::zeros(&[1]),
             policy: CkptPolicy::StoreAll,
-            respond: tx,
+            id,
             enqueued: Instant::now(),
+            deadline: None,
         }
+    }
+
+    fn queued<T>(outcome: &PushOutcome<T>) -> bool {
+        matches!(outcome, PushOutcome::Queued)
     }
 
     #[test]
@@ -580,49 +829,64 @@ mod tests {
 
     #[test]
     fn idle_utilization_flushes_immediately() {
-        let mut b = Batcher::new(controller());
-        let flushed = b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 0.0);
-        assert!(flushed.is_some(), "idle service must not queue a lone request");
+        let mut b = batcher();
+        let flushed = b.push_eval("l", eval_pending(0, &[1, 3, 4, 4]), 0.0);
+        assert!(
+            matches!(flushed, PushOutcome::Ready(_)),
+            "idle service must not queue a lone request"
+        );
         assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.pending_bytes(), 0);
     }
 
     #[test]
     fn saturated_utilization_holds_until_target() {
-        let mut b = Batcher::new(controller());
+        let mut b = batcher();
         for i in 0..7 {
             assert!(
-                b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0).is_none(),
+                queued(&b.push_eval("l", eval_pending(i, &[1, 3, 4, 4]), 1.0)),
                 "request {i} must queue under saturation"
             );
         }
-        let batch = b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0);
+        let batch = b.push_eval("l", eval_pending(7, &[1, 3, 4, 4]), 1.0);
         match batch {
-            Some(ReadyBatch::Eval { items, .. }) => assert_eq!(items.len(), 8),
+            PushOutcome::Ready(ReadyBatch::Eval { items, .. }) => assert_eq!(items.len(), 8),
             _ => panic!("8th request must flush a full batch"),
         }
         assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.pending_bytes(), 0, "flush releases the byte budget");
     }
 
     #[test]
     fn interleaved_shapes_batch_independently() {
         // The starvation fix: alternating shapes (and kinds) accumulate in
         // separate groups instead of flushing each other out.
-        let mut b = Batcher::new(controller());
-        for _ in 0..3 {
-            assert!(b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0).is_none());
-            assert!(b.push_eval("l", eval_pending(&[1, 3, 6, 6]), 1.0).is_none());
-            assert!(b
-                .push_train("ij,jk->ik", train_pending(&[vec![2, 3], vec![3, 4]]), 1.0)
-                .is_none());
+        let mut b = batcher();
+        for i in 0..3 {
+            assert!(queued(&b.push_eval("l", eval_pending(i, &[1, 3, 4, 4]), 1.0)));
+            assert!(queued(&b.push_eval(
+                "l",
+                eval_pending(10 + i, &[1, 3, 6, 6]),
+                1.0
+            )));
+            assert!(queued(&b.push_train(
+                "ij,jk->ik",
+                train_pending(20 + i, &[vec![2, 3], vec![3, 4]]),
+                1.0
+            )));
         }
         assert_eq!(b.pending_len(), 9, "three independent groups of three");
         // Each group completes to its target independently.
-        for _ in 0..4 {
-            assert!(b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0).is_none());
+        for i in 0..4 {
+            assert!(queued(&b.push_eval(
+                "l",
+                eval_pending(30 + i, &[1, 3, 4, 4]),
+                1.0
+            )));
         }
-        let batch = b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0);
+        let batch = b.push_eval("l", eval_pending(40, &[1, 3, 4, 4]), 1.0);
         match batch {
-            Some(ReadyBatch::Eval { items, .. }) => {
+            PushOutcome::Ready(ReadyBatch::Eval { items, .. }) => {
                 assert_eq!(items.len(), 8);
                 assert!(items.iter().all(|p| p.x.shape() == &[1, 3, 4, 4]));
             }
@@ -634,9 +898,17 @@ mod tests {
     #[test]
     fn deadline_flush_respects_hold_and_caps_chunks() {
         // A hold long enough that scheduler pauses cannot make it elapse.
-        let mut b = Batcher::new(AdaptiveController::new(4, Duration::from_secs(30)));
-        for _ in 0..10 {
-            let _ = b.push_train("ij,jk->ik", train_pending(&[vec![2, 3], vec![3, 4]]), 1.0);
+        let mut b = Batcher::new(
+            AdaptiveController::new(4, Duration::from_secs(30)),
+            1024,
+            1 << 30,
+        );
+        for i in 0..10 {
+            let _ = b.push_train(
+                "ij,jk->ik",
+                train_pending(i, &[vec![2, 3], vec![3, 4]]),
+                1.0,
+            );
         }
         // Group flushed once at 4+4; 2 remain pending.
         assert_eq!(b.pending_len(), 2);
@@ -657,21 +929,22 @@ mod tests {
 
     #[test]
     fn drain_chunks_by_config_bound() {
-        let mut b = Batcher::new(AdaptiveController::new(4, Duration::from_millis(5)));
-        for _ in 0..9 {
-            // Utilization above 1 clamps; nothing flushes below 4... but the
-            // 4th and 8th pushes do. Use a fresh group each time via shapes?
-            // Simpler: push with utilization that never triggers (cap 4
-            // reached at pushes 4 and 8), so drain sees the remainder plus
-            // verify chunking on a long tail.
-            let _ = b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0);
+        let mut b = Batcher::new(
+            AdaptiveController::new(4, Duration::from_millis(5)),
+            1024,
+            1 << 30,
+        );
+        for i in 0..9 {
+            // Cap 4 is reached at pushes 4 and 8; one request remains for
+            // the drain to pick up.
+            let _ = b.push_eval("l", eval_pending(i, &[1, 3, 4, 4]), 1.0);
         }
-        // pushes 4 and 8 flushed; one request remains.
         assert_eq!(b.pending_len(), 1);
         let drained = b.drain();
         assert_eq!(drained.len(), 1);
         assert_eq!(drained[0].len(), 1);
         assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.pending_bytes(), 0);
     }
 
     #[test]
@@ -684,13 +957,77 @@ mod tests {
 
     #[test]
     fn next_deadline_tracks_oldest_group() {
-        let mut b = Batcher::new(controller());
+        let mut b = batcher();
         assert!(b.next_deadline(1.0).is_none());
-        let _ = b.push_eval("l", eval_pending(&[1, 3, 4, 4]), 1.0);
+        let _ = b.push_eval("l", eval_pending(0, &[1, 3, 4, 4]), 1.0);
         let d1 = b.next_deadline(1.0).expect("one group pending");
         std::thread::sleep(Duration::from_millis(2));
-        let _ = b.push_eval("l", eval_pending(&[1, 3, 6, 6]), 1.0);
+        let _ = b.push_eval("l", eval_pending(1, &[1, 3, 6, 6]), 1.0);
         let d2 = b.next_deadline(1.0).expect("two groups pending");
         assert_eq!(d1, d2, "deadline anchored to the oldest request");
+    }
+
+    #[test]
+    fn count_budget_rejects_and_hands_back_the_request() {
+        let mut b = Batcher::new(controller(), 2, 1 << 30);
+        assert!(queued(&b.push_eval("l", eval_pending(0, &[1, 3, 4, 4]), 1.0)));
+        assert!(queued(&b.push_eval("l", eval_pending(1, &[1, 3, 4, 4]), 1.0)));
+        match b.push_eval("l", eval_pending(2, &[1, 3, 4, 4]), 1.0) {
+            PushOutcome::Rejected(p) => assert_eq!(p.id, 2, "rejected request comes back"),
+            _ => panic!("third request must exceed the count budget"),
+        }
+        assert_eq!(b.pending_len(), 2, "rejection leaves the queue untouched");
+    }
+
+    #[test]
+    fn byte_budget_rejects_before_count_budget() {
+        let one = tensor_bytes(&Tensor::zeros(&[1, 3, 4, 4]));
+        let mut b = Batcher::new(controller(), 1024, 2 * one);
+        assert!(queued(&b.push_eval("l", eval_pending(0, &[1, 3, 4, 4]), 1.0)));
+        assert!(queued(&b.push_eval("l", eval_pending(1, &[1, 3, 4, 4]), 1.0)));
+        assert_eq!(b.pending_bytes(), 2 * one);
+        assert!(matches!(
+            b.push_eval("l", eval_pending(2, &[1, 3, 4, 4]), 1.0),
+            PushOutcome::Rejected(_)
+        ));
+        // Training payloads charge all inputs plus the cotangent.
+        let tp = train_pending(3, &[vec![2, 3], vec![3, 4]]);
+        assert_eq!(tp.bytes(), (6 + 12 + 1) * 4);
+    }
+
+    #[test]
+    fn immediate_flush_bypasses_the_budget() {
+        // A zero budget still serves an idle service: lone requests flush
+        // without ever being queued.
+        let mut b = Batcher::new(controller(), 0, 0);
+        assert!(matches!(
+            b.push_eval("l", eval_pending(0, &[1, 3, 4, 4]), 0.0),
+            PushOutcome::Ready(_)
+        ));
+        // ...but queueing under saturation is rejected outright.
+        assert!(matches!(
+            b.push_eval("l", eval_pending(1, &[1, 3, 4, 4]), 1.0),
+            PushOutcome::Rejected(_)
+        ));
+    }
+
+    #[test]
+    fn shed_expired_frees_budget_and_reports_ids() {
+        let mut b = batcher();
+        let now = Instant::now();
+        let mut expired = eval_pending(7, &[1, 3, 4, 4]);
+        expired.deadline = Some(now - Duration::from_millis(1));
+        let mut live = eval_pending(8, &[1, 3, 6, 6]);
+        live.deadline = Some(now + Duration::from_secs(60));
+        assert!(queued(&b.push_eval("l", expired, 1.0)));
+        assert!(queued(&b.push_eval("l", live, 1.0)));
+        let before_bytes = b.pending_bytes();
+        let shed = b.shed_expired(Instant::now());
+        assert_eq!(shed, vec![7], "only the expired request is shed");
+        assert_eq!(b.pending_len(), 1);
+        assert!(b.pending_bytes() < before_bytes);
+        // The emptied group is gone: its deadline no longer drives ticks.
+        let d = b.next_deadline(1.0).expect("live group remains");
+        assert!(d > now);
     }
 }

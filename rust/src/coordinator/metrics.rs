@@ -25,7 +25,17 @@ pub struct ServiceMetrics {
     train_batches: AtomicU64,
     train_batched_requests: AtomicU64,
     plan_misses: AtomicU64,
+    /// Worker threads resurrected after a panic (supervision).
+    worker_restarts: AtomicU64,
+    /// Requests shed because their absolute deadline passed before dispatch.
+    deadline_expired: AtomicU64,
+    /// Requests rejected at submit time by admission control.
+    overload_rejected: AtomicU64,
+    /// Inference requests re-queued after a worker died mid-batch.
+    retries: AtomicU64,
     queue_depth: AtomicUsize,
+    /// Bytes held by pending (undispatched) request payloads.
+    pending_bytes: AtomicUsize,
     /// Work messages dispatched to workers and not yet finished — the
     /// coordinator half of the utilization signal driving adaptive batch
     /// sizing (the other half is [`crate::parallel::Pool::utilization`]).
@@ -51,7 +61,12 @@ impl Default for ServiceMetrics {
             train_batches: AtomicU64::new(0),
             train_batched_requests: AtomicU64::new(0),
             plan_misses: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            overload_rejected: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
             queue_depth: AtomicUsize::new(0),
+            pending_bytes: AtomicUsize::new(0),
             inflight: AtomicUsize::new(0),
             batch_sizes: std::array::from_fn(|_| AtomicU64::new(0)),
             latency: Mutex::new(LatencyHisto::default()),
@@ -113,12 +128,54 @@ impl ServiceMetrics {
         self.plan_misses.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A panicked worker thread was resurrected by the supervisor.
+    pub fn note_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Worker restarts so far (regression tests assert capacity recovery).
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
+    }
+
+    /// A request was shed with `DeadlineExceeded` instead of dispatched.
+    pub fn note_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was rejected at submit time with `Overloaded`.
+    pub fn note_overload_rejected(&self) {
+        self.overload_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An inference request was re-queued after a worker crash.
+    pub fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Update the pending-payload byte gauge (set by the router each tick).
+    pub fn set_pending_bytes(&self, bytes: usize) {
+        self.pending_bytes.store(bytes, Ordering::Relaxed);
+    }
+
     pub fn note_exec_time(&self, d: Duration) {
         self.exec_time.lock().unwrap().record(d);
     }
 
     pub fn set_queue_depth(&self, depth: usize) {
         self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    /// Requests pending in the router (gauge, set by the router each tick);
+    /// the submit-side admission check reads this to reject early.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Bytes held by pending request payloads (gauge, set by the router
+    /// each tick); the submit-side admission check reads this.
+    pub fn pending_bytes(&self) -> usize {
+        self.pending_bytes.load(Ordering::Relaxed)
     }
 
     /// A work message left the router for the worker channel.
@@ -167,7 +224,12 @@ impl ServiceMetrics {
                 .map(|c| c.load(Ordering::Relaxed))
                 .collect(),
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            overload_rejected: self.overload_rejected.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            pending_bytes: self.pending_bytes.load(Ordering::Relaxed),
             inflight: self.inflight.load(Ordering::Relaxed),
             latency_p50_us: latency.percentile_us(50.0),
             latency_p99_us: latency.percentile_us(99.0),
@@ -200,7 +262,17 @@ pub struct MetricsSnapshot {
     /// for `s < BATCH_SIZE_BUCKETS - 1`; the last entry counts larger ones.
     pub batch_sizes: Vec<u64>,
     pub plan_misses: u64,
+    /// Worker threads resurrected after a panic.
+    pub worker_restarts: u64,
+    /// Requests shed with `DeadlineExceeded` before dispatch.
+    pub deadline_expired: u64,
+    /// Requests rejected with `Overloaded` at submit time.
+    pub overload_rejected: u64,
+    /// Inference requests re-queued after a worker crash.
+    pub retries: u64,
     pub queue_depth: usize,
+    /// Bytes held by pending (undispatched) request payloads.
+    pub pending_bytes: usize,
     /// Work messages dispatched and unfinished at snapshot time.
     pub inflight: usize,
     pub latency_p50_us: f64,
@@ -218,6 +290,8 @@ impl MetricsSnapshot {
         format!(
             "requests: {} submitted ({} infer / {} train), {} completed, {} errors | \
              batches: {} infer (mean size {:.2}), {} train (mean size {:.2}), {} plan misses | \
+             faults: {} restarts, {} deadline-expired, {} overload-rejected, {} retries | \
+             pending {} bytes | \
              latency: p50 {:.0}us p99 {:.0}us mean {:.0}us | queue: p50 {:.0}us mean {:.0}us | \
              exec mean {:.0}us",
             self.submitted,
@@ -230,6 +304,11 @@ impl MetricsSnapshot {
             self.train_batches,
             self.mean_train_batch_size,
             self.plan_misses,
+            self.worker_restarts,
+            self.deadline_expired,
+            self.overload_rejected,
+            self.retries,
+            self.pending_bytes,
             self.latency_p50_us,
             self.latency_p99_us,
             self.latency_mean_us,

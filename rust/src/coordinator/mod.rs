@@ -33,6 +33,49 @@
 //! traffic of incompatible shapes batches independently instead of
 //! flushing each other out.
 //!
+//! # Fault tolerance
+//!
+//! The service guarantees **exactly one terminal outcome per request**: a
+//! result tensor or a structured [`ServiceError`] — never a hung receiver,
+//! no matter which thread panics or when shutdown lands. The mechanism is
+//! the central in-flight table: every submitted request registers a
+//! responder under a fresh id before it enters the pipeline, work messages
+//! carry only ids, and *removing the table entry is the commit point* —
+//! whichever path (worker completion, deadline shed, overload rejection,
+//! crash handling, shutdown sweep) removes the entry first delivers the
+//! one response, and every later path finds the entry gone and does
+//! nothing.
+//!
+//! * **Worker supervision** — each worker runs its loop under
+//!   `catch_unwind`; a panic is contained at the message boundary, its
+//!   workspace and staging state are discarded (a fresh incarnation starts
+//!   clean), the restart is counted
+//!   ([`MetricsSnapshot::worker_restarts`]) and restarts back off
+//!   exponentially. Idempotent inference requests in the dying batch are
+//!   re-queued for a bounded number of retries
+//!   ([`ServiceConfig::max_retries`], with backoff); training steps are
+//!   **never silently replayed** — unfinished ones fail fast with
+//!   [`ServiceError::WorkerCrashed`].
+//! * **Deadlines** — [`ServiceConfig::request_deadline`] stamps every
+//!   request with an absolute deadline; the scheduler and the workers shed
+//!   expired requests with [`ServiceError::DeadlineExceeded`] instead of
+//!   executing them.
+//! * **Admission control** — pending work is bounded by
+//!   [`ServiceConfig::max_pending`] requests and
+//!   [`ServiceConfig::max_pending_bytes`] of payload. At the budget the
+//!   router first sheds expired (oldest) work to make room, then rejects
+//!   with [`ServiceError::Overloaded`] — explicit, immediate rejection
+//!   instead of unbounded queue growth.
+//! * **Graceful drain** — [`EvalService::shutdown`] stops admission,
+//!   flushes everything pending, bounds the drain by
+//!   [`ServiceConfig::drain_timeout`], joins what finished and answers
+//!   every remaining request [`ServiceError::Shutdown`].
+//!
+//! The failure paths are exercised deterministically through the seeded
+//! [`crate::faults`] registry (cargo feature `fault-injection`; named
+//! sites `worker.eval.pre`, `worker.train.pre`, `worker.adhoc.pre`,
+//! `parallel.run_chunks.pre`) — see `tests/chaos.rs`.
+//!
 //! Layer evaluation is **compile-once, run-many**: every `(layer, batch,
 //! spatial)` key is planned and lowered to a [`CompiledPlan`] once and held
 //! in a per-layer LRU cache bounded at [`LAYER_PLAN_CACHE_CAPACITY`]
@@ -77,13 +120,184 @@ use crate::parallel::Pool;
 use crate::planner::Strategy;
 use crate::tensor::{concat_into, Tensor};
 use anyhow::{anyhow, Result};
-use batcher::{dispatch, Batcher, LayerEntry, Pending, TrainPending};
+use batcher::{
+    dispatch, tensor_bytes, Batcher, LayerEntry, Pending, PendingRequest, PushOutcome, ReadyBatch,
+    TrainPending,
+};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Terminal request outcomes the service can report. Every submitted
+/// request ends in exactly one `Ok` result or exactly one of these —
+/// the liveness contract enforced by the in-flight table (module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The requested layer name was never registered.
+    UnknownLayer(String),
+    /// The request itself is malformed (e.g. an input of unusable rank).
+    BadRequest(String),
+    /// The request's absolute deadline passed before it could execute.
+    DeadlineExceeded,
+    /// Admission control: the pending budget is exhausted.
+    Overloaded,
+    /// A worker died executing the request and it could not be (or must
+    /// not be — training) retried. Carries the panic message.
+    WorkerCrashed(String),
+    /// The service shut down before the request completed.
+    Shutdown,
+    /// The engine reported a planning or execution error.
+    Engine(String),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::UnknownLayer(name) => write!(f, "unknown layer '{name}'"),
+            ServiceError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ServiceError::DeadlineExceeded => {
+                write!(f, "deadline exceeded: request expired before execution")
+            }
+            ServiceError::Overloaded => write!(f, "overloaded: pending budget exhausted"),
+            ServiceError::WorkerCrashed(m) => write!(f, "worker crashed: {m}"),
+            ServiceError::Shutdown => {
+                write!(f, "service shut down before the request completed")
+            }
+            ServiceError::Engine(m) => write!(f, "execution failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Terminal outcome of a training-step request: the forward output and
+/// per-input gradients, or a [`ServiceError`].
+pub type TrainResult = std::result::Result<(Tensor, Vec<Tensor>), ServiceError>;
+/// Terminal outcome of an inference request.
+pub type InferResult = std::result::Result<Tensor, ServiceError>;
+
+/// The responder half of a registered request, typed by request kind.
+enum Responder {
+    Infer(SyncSender<InferResult>),
+    Train(SyncSender<TrainResult>),
+}
+
+/// The in-flight request table: the single source of truth for which
+/// requests still owe a response. Work messages carry only request ids;
+/// the capacity-1 response channel lives here until some path commits the
+/// terminal outcome by removing the entry (see the module docs). All
+/// completion accounting (`completed`/`errors`, latency) flows through
+/// this table, so `completed + errors == submitted` once drained.
+pub(crate) struct Inflight {
+    next: AtomicU64,
+    table: Mutex<HashMap<u64, Responder>>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl Inflight {
+    fn new(metrics: Arc<ServiceMetrics>) -> Inflight {
+        Inflight {
+            next: AtomicU64::new(0),
+            table: Mutex::new(HashMap::new()),
+            metrics,
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, HashMap<u64, Responder>> {
+        // A fault-injected panic can unwind through a holder; poisoning
+        // must never wedge request completion for everyone else.
+        self.table.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn register_infer(&self) -> (u64, Receiver<InferResult>) {
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = sync_channel(1);
+        self.lock().insert(id, Responder::Infer(tx));
+        (id, rx)
+    }
+
+    fn register_train(&self) -> (u64, Receiver<TrainResult>) {
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = sync_channel(1);
+        self.lock().insert(id, Responder::Train(tx));
+        (id, rx)
+    }
+
+    /// Deliver an inference outcome. Entry removal is the exactly-once
+    /// commit point; returns `false` if the request was already answered.
+    /// The send can never block (capacity-1 channel, one send per entry)
+    /// and a gone receiver is the caller's loss alone.
+    pub(crate) fn complete_infer(&self, id: u64, enqueued: Instant, result: InferResult) -> bool {
+        let Some(entry) = self.lock().remove(&id) else {
+            return false;
+        };
+        match &result {
+            Ok(_) => self.metrics.note_done(enqueued.elapsed()),
+            Err(_) => self.metrics.note_error(),
+        }
+        if let Responder::Infer(tx) = entry {
+            let _ = tx.try_send(result);
+        }
+        true
+    }
+
+    /// Deliver a training outcome (same contract as
+    /// [`Inflight::complete_infer`]).
+    pub(crate) fn complete_train(&self, id: u64, enqueued: Instant, result: TrainResult) -> bool {
+        let Some(entry) = self.lock().remove(&id) else {
+            return false;
+        };
+        match &result {
+            Ok(_) => self.metrics.note_done(enqueued.elapsed()),
+            Err(_) => self.metrics.note_error(),
+        }
+        if let Responder::Train(tx) = entry {
+            let _ = tx.try_send(result);
+        }
+        true
+    }
+
+    /// Terminally fail a request of either kind.
+    pub(crate) fn fail(&self, id: u64, err: ServiceError) -> bool {
+        let Some(entry) = self.lock().remove(&id) else {
+            return false;
+        };
+        self.metrics.note_error();
+        match entry {
+            Responder::Infer(tx) => {
+                let _ = tx.try_send(Err(err));
+            }
+            Responder::Train(tx) => {
+                let _ = tx.try_send(Err(err));
+            }
+        }
+        true
+    }
+
+    /// Fail every still-registered request — the final shutdown sweep that
+    /// makes "no request ever ends without a terminal response" hold even
+    /// for requests stranded by a wedged worker or a mid-flight submit.
+    pub(crate) fn fail_all(&self, err: ServiceError) -> usize {
+        let drained: Vec<Responder> = self.lock().drain().map(|(_, r)| r).collect();
+        let n = drained.len();
+        for r in drained {
+            self.metrics.note_error();
+            match r {
+                Responder::Infer(tx) => {
+                    let _ = tx.try_send(Err(err.clone()));
+                }
+                Responder::Train(tx) => {
+                    let _ = tx.try_send(Err(err.clone()));
+                }
+            }
+        }
+        n
+    }
+}
 
 /// Service configuration. `max_batch` and `batch_timeout` bound the
 /// adaptive batching controller ([`AdaptiveController`]); the actual batch
@@ -104,6 +318,22 @@ pub struct ServiceConfig {
     /// Execution backend recorded on every plan (see module docs on pool
     /// sharing between workers and intra-step parallelism).
     pub backend: Backend,
+    /// End-to-end deadline stamped on every request at submit; expired
+    /// requests are shed with [`ServiceError::DeadlineExceeded`] instead
+    /// of executed. `None` (the default) disables deadlines.
+    pub request_deadline: Option<Duration>,
+    /// Crash-retry bound for idempotent inference requests whose worker
+    /// died mid-batch (training steps are never retried).
+    pub max_retries: u32,
+    /// Admission budget: maximum requests queued in the scheduler before
+    /// new work is rejected with [`ServiceError::Overloaded`].
+    pub max_pending: usize,
+    /// Admission budget: maximum payload bytes queued in the scheduler.
+    pub max_pending_bytes: usize,
+    /// Hard bound on the shutdown drain: past it, undelivered work and
+    /// unfinished requests are answered [`ServiceError::Shutdown`] and
+    /// wedged workers are abandoned rather than joined.
+    pub drain_timeout: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -117,7 +347,35 @@ impl Default for ServiceConfig {
             queue_capacity: 256,
             strategy: Strategy::Optimal,
             backend: Backend::default(),
+            request_deadline: None,
+            max_retries: 2,
+            max_pending: 4096,
+            max_pending_bytes: 1 << 28,
+            drain_timeout: Duration::from_secs(10),
         }
+    }
+}
+
+/// An ad-hoc expression request (unbatched path). Like [`Pending`], it
+/// carries only its inflight id — never a responder.
+pub(crate) struct AdHocPending {
+    pub(crate) tensors: Vec<Tensor>,
+    pub(crate) id: u64,
+    pub(crate) enqueued: Instant,
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) retries: u32,
+    pub(crate) not_before: Option<Instant>,
+}
+
+impl PendingRequest for AdHocPending {
+    fn id(&self) -> u64 {
+        self.id
+    }
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+    fn bytes(&self) -> usize {
+        self.tensors.iter().map(tensor_bytes).sum()
     }
 }
 
@@ -128,8 +386,7 @@ enum Msg {
     },
     AdHoc {
         expr: String,
-        tensors: Vec<Tensor>,
-        respond: SyncSender<Result<Tensor>>,
+        pending: AdHocPending,
     },
     Train {
         expr: String,
@@ -143,34 +400,72 @@ enum Msg {
 pub struct ServiceHandle {
     tx: SyncSender<Msg>,
     metrics: Arc<ServiceMetrics>,
+    inflight: Arc<Inflight>,
+    stop: Arc<AtomicBool>,
+    cfg: Arc<ServiceConfig>,
 }
 
 impl ServiceHandle {
+    /// Submit-side admission: reject before registering anything when the
+    /// service is stopping or the router's published pending gauges are
+    /// over budget. The gauge check is a conservative fast path (gauges
+    /// update once per router tick); the authoritative budget lives in the
+    /// scheduler.
+    fn admit(&self) -> std::result::Result<(), ServiceError> {
+        if self.stop.load(Ordering::SeqCst) {
+            return Err(ServiceError::Shutdown);
+        }
+        if self.metrics.queue_depth() >= self.cfg.max_pending
+            || self.metrics.pending_bytes() > self.cfg.max_pending_bytes
+        {
+            self.metrics.note_overload_rejected();
+            return Err(ServiceError::Overloaded);
+        }
+        Ok(())
+    }
+
+    fn deadline_from(&self, now: Instant) -> Option<Instant> {
+        self.cfg.request_deadline.map(|d| now + d)
+    }
+
     /// Evaluate a registered layer on a single example `[1, S, H', W']`
     /// (or `[S, H', W']`, auto-expanded). Blocks if the router is saturated
-    /// (backpressure). Returns a receiver for the result.
-    pub fn submit(&self, layer: &str, x: Tensor) -> Result<Receiver<Result<Tensor>>> {
+    /// (backpressure). Returns a receiver that is **guaranteed** to yield
+    /// exactly one terminal `Result` (see the module docs).
+    pub fn submit(
+        &self,
+        layer: &str,
+        x: Tensor,
+    ) -> std::result::Result<Receiver<InferResult>, ServiceError> {
         let x = if x.rank() == 3 {
             let mut shape = vec![1];
             shape.extend_from_slice(x.shape());
-            let s2 = shape.clone();
-            x.reshape(&s2)
+            x.reshape(&shape)
         } else {
             x
         };
-        let (rtx, rrx) = sync_channel(1);
+        self.admit()?;
+        let (id, rrx) = self.inflight.register_infer();
         self.metrics.note_infer_submit();
-        self.tx
-            .send(Msg::Eval {
-                layer: layer.to_string(),
-                pending: Pending {
-                    x,
-                    respond: rtx,
-                    enqueued: Instant::now(),
-                },
-            })
-            .map_err(|_| anyhow!("service stopped"))?;
-        Ok(rrx)
+        let now = Instant::now();
+        let pending = Pending {
+            x,
+            id,
+            enqueued: now,
+            deadline: self.deadline_from(now),
+            retries: 0,
+            not_before: None,
+        };
+        match self.tx.send(Msg::Eval {
+            layer: layer.to_string(),
+            pending,
+        }) {
+            Ok(()) => Ok(rrx),
+            Err(_) => {
+                self.inflight.fail(id, ServiceError::Shutdown);
+                Err(ServiceError::Shutdown)
+            }
+        }
     }
 
     /// Evaluate an ad-hoc conv_einsum expression (unbatched path).
@@ -178,17 +473,29 @@ impl ServiceHandle {
         &self,
         expr: &str,
         tensors: Vec<Tensor>,
-    ) -> Result<Receiver<Result<Tensor>>> {
-        let (rtx, rrx) = sync_channel(1);
+    ) -> std::result::Result<Receiver<InferResult>, ServiceError> {
+        self.admit()?;
+        let (id, rrx) = self.inflight.register_infer();
         self.metrics.note_infer_submit();
-        self.tx
-            .send(Msg::AdHoc {
-                expr: expr.to_string(),
-                tensors,
-                respond: rtx,
-            })
-            .map_err(|_| anyhow!("service stopped"))?;
-        Ok(rrx)
+        let now = Instant::now();
+        let pending = AdHocPending {
+            tensors,
+            id,
+            enqueued: now,
+            deadline: self.deadline_from(now),
+            retries: 0,
+            not_before: None,
+        };
+        match self.tx.send(Msg::AdHoc {
+            expr: expr.to_string(),
+            pending,
+        }) {
+            Ok(()) => Ok(rrx),
+            Err(_) => {
+                self.inflight.fail(id, ServiceError::Shutdown);
+                Err(ServiceError::Shutdown)
+            }
+        }
     }
 
     /// Evaluate an ad-hoc **training step**: forward-with-tape + backward
@@ -201,29 +508,38 @@ impl ServiceHandle {
     /// coalesced and replayed through one cached
     /// [`crate::exec::TrainLayout`] on a worker's training workspace, with
     /// results bit-identical to submitting each step alone (see the module
-    /// docs).
+    /// docs). Unlike inference, a training step whose worker crashes is
+    /// never replayed — it fails fast with
+    /// [`ServiceError::WorkerCrashed`].
     pub fn submit_train(
         &self,
         expr: &str,
         tensors: Vec<Tensor>,
         dout: Tensor,
         policy: CkptPolicy,
-    ) -> Result<Receiver<Result<(Tensor, Vec<Tensor>)>>> {
-        let (rtx, rrx) = sync_channel(1);
+    ) -> std::result::Result<Receiver<TrainResult>, ServiceError> {
+        self.admit()?;
+        let (id, rrx) = self.inflight.register_train();
         self.metrics.note_train_submit();
-        self.tx
-            .send(Msg::Train {
-                expr: expr.to_string(),
-                pending: TrainPending {
-                    tensors,
-                    dout,
-                    policy,
-                    respond: rtx,
-                    enqueued: Instant::now(),
-                },
-            })
-            .map_err(|_| anyhow!("service stopped"))?;
-        Ok(rrx)
+        let now = Instant::now();
+        let pending = TrainPending {
+            tensors,
+            dout,
+            policy,
+            id,
+            enqueued: now,
+            deadline: self.deadline_from(now),
+        };
+        match self.tx.send(Msg::Train {
+            expr: expr.to_string(),
+            pending,
+        }) {
+            Ok(()) => Ok(rrx),
+            Err(_) => {
+                self.inflight.fail(id, ServiceError::Shutdown);
+                Err(ServiceError::Shutdown)
+            }
+        }
     }
 
     /// Convenience: submit a training step and wait.
@@ -233,17 +549,21 @@ impl ServiceHandle {
         tensors: Vec<Tensor>,
         dout: Tensor,
         policy: CkptPolicy,
-    ) -> Result<(Tensor, Vec<Tensor>)> {
-        self.submit_train(expr, tensors, dout, policy)?
-            .recv()
-            .map_err(|_| anyhow!("service dropped response"))?
+    ) -> TrainResult {
+        match self.submit_train(expr, tensors, dout, policy)?.recv() {
+            Ok(r) => r,
+            // Defensive: the responder is dropped without an answer only if
+            // the terminal send itself raced a vanished process state.
+            Err(_) => Err(ServiceError::Shutdown),
+        }
     }
 
     /// Convenience: submit and wait.
-    pub fn eval(&self, layer: &str, x: Tensor) -> Result<Tensor> {
-        self.submit(layer, x)?
-            .recv()
-            .map_err(|_| anyhow!("service dropped response"))?
+    pub fn eval(&self, layer: &str, x: Tensor) -> InferResult {
+        match self.submit(layer, x)?.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServiceError::Shutdown),
+        }
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -251,7 +571,7 @@ impl ServiceHandle {
     }
 }
 
-/// The evaluation service: router thread + worker pool.
+/// The evaluation service: router thread + supervised worker pool.
 pub struct EvalService {
     handle: ServiceHandle,
     router: Option<JoinHandle<()>>,
@@ -260,19 +580,18 @@ pub struct EvalService {
 }
 
 /// An inference batch dispatched to workers.
-struct WorkItem {
-    layer: String,
-    plan: Arc<CompiledPlan>,
-    factors: Arc<Vec<Tensor>>,
-    requests: Vec<Pending>,
+pub(crate) struct WorkItem {
+    pub(crate) layer: String,
+    pub(crate) plan: Arc<CompiledPlan>,
+    pub(crate) factors: Arc<Vec<Tensor>>,
+    pub(crate) requests: Vec<Pending>,
 }
 
-enum WorkMsg {
+pub(crate) enum WorkMsg {
     Batch(WorkItem),
     AdHoc {
         expr: String,
-        tensors: Vec<Tensor>,
-        respond: SyncSender<Result<Tensor>>,
+        pending: AdHocPending,
         strategy: Strategy,
         backend: Backend,
     },
@@ -289,6 +608,71 @@ enum WorkMsg {
     Stop,
 }
 
+/// Send a work message to the worker channel. `deadline: None` blocks
+/// (normal-path backpressure); `Some(d)` bounds the send during shutdown
+/// drain so a wedged worker pool cannot hang the router forever. An
+/// undeliverable message terminally answers every request it carries with
+/// [`ServiceError::Shutdown`] — work is never silently dropped.
+pub(crate) fn send_work(
+    wtx: &SyncSender<WorkMsg>,
+    msg: WorkMsg,
+    deadline: Option<Instant>,
+    metrics: &ServiceMetrics,
+    inflight: &Inflight,
+) {
+    let is_stop = matches!(msg, WorkMsg::Stop);
+    let failed = match deadline {
+        None => wtx.send(msg).err().map(|e| e.0),
+        Some(d) => {
+            let mut msg = msg;
+            loop {
+                match wtx.try_send(msg) {
+                    Ok(()) => break None,
+                    Err(TrySendError::Disconnected(m)) => break Some(m),
+                    Err(TrySendError::Full(m)) => {
+                        if Instant::now() >= d {
+                            break Some(m);
+                        }
+                        msg = m;
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+        }
+    };
+    match failed {
+        None => {
+            // Stop markers are not work: they must not skew the in-flight
+            // utilization gauge.
+            if !is_stop {
+                metrics.note_dispatched();
+            }
+        }
+        Some(m) => fail_work_msg(m, inflight, ServiceError::Shutdown),
+    }
+}
+
+/// Terminally answer every request carried by an undeliverable work
+/// message.
+pub(crate) fn fail_work_msg(msg: WorkMsg, inflight: &Inflight, err: ServiceError) {
+    match msg {
+        WorkMsg::Batch(item) => {
+            for p in item.requests {
+                inflight.fail(p.id, err.clone());
+            }
+        }
+        WorkMsg::AdHoc { pending, .. } => {
+            inflight.fail(pending.id, err);
+        }
+        WorkMsg::TrainBatch { items, .. } => {
+            for p in items {
+                inflight.fail(p.id, err.clone());
+            }
+        }
+        WorkMsg::Stop => {}
+    }
+}
+
 impl EvalService {
     /// Start the service with the given registered layers.
     pub fn start(
@@ -296,6 +680,7 @@ impl EvalService {
         layers: Vec<(String, String, Vec<Tensor>)>, // (name, expr, factors)
     ) -> Result<EvalService> {
         let metrics = Arc::new(ServiceMetrics::default());
+        let inflight = Arc::new(Inflight::new(Arc::clone(&metrics)));
         let (tx, rx) = sync_channel::<Msg>(config.queue_capacity);
         let (wtx, wrx) = sync_channel::<WorkMsg>(config.workers * 2);
         let wrx = Arc::new(Mutex::new(wrx));
@@ -317,30 +702,43 @@ impl EvalService {
             );
         }
 
-        // Worker pool.
+        // Supervised worker pool. Workers hold a feedback sender into the
+        // router so a dying incarnation can re-queue idempotent requests.
         let mut workers = Vec::new();
         for wid in 0..config.workers.max(1) {
-            let wrx = Arc::clone(&wrx);
-            let metrics = Arc::clone(&metrics);
-            let cache = Arc::clone(&cache);
+            let ctx = WorkerCtx {
+                wrx: Arc::clone(&wrx),
+                metrics: Arc::clone(&metrics),
+                cache: Arc::clone(&cache),
+                inflight: Arc::clone(&inflight),
+                feedback: tx.clone(),
+                max_retries: config.max_retries,
+            };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("conv-einsum-worker-{wid}"))
-                    .spawn(move || worker_loop(wrx, metrics, cache))
+                    .spawn(move || worker_thread(ctx))
                     .expect("spawn worker"),
             );
         }
 
         // Router thread.
         let router_metrics = Arc::clone(&metrics);
+        let router_inflight = Arc::clone(&inflight);
         let cfg = config.clone();
         let router = std::thread::Builder::new()
             .name("conv-einsum-router".to_string())
-            .spawn(move || router_loop(rx, wtx, registry, cfg, router_metrics))
+            .spawn(move || router_loop(rx, wtx, registry, cfg, router_metrics, router_inflight))
             .expect("spawn router");
 
         Ok(EvalService {
-            handle: ServiceHandle { tx, metrics },
+            handle: ServiceHandle {
+                tx,
+                metrics,
+                inflight,
+                stop: Arc::clone(&stop),
+                cfg: Arc::new(config),
+            },
             router: Some(router),
             workers,
             stop,
@@ -351,16 +749,40 @@ impl EvalService {
         self.handle.clone()
     }
 
-    /// Graceful shutdown: drain queues, stop threads.
+    /// Graceful shutdown: stop admitting, flush and answer everything
+    /// pending, stop the threads. Bounded by
+    /// [`ServiceConfig::drain_timeout`]: a worker wedged past it is
+    /// abandoned (its thread dies with the process) and every request
+    /// still unfinished is answered [`ServiceError::Shutdown`] — shutdown
+    /// never hangs and never strands a receiver.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         let _ = self.handle.tx.send(Msg::Shutdown);
         if let Some(r) = self.router.take() {
             let _ = r.join();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        // The router's drain sent each worker a Stop (bounded send); join
+        // with a hard timeout so a wedged worker cannot hang us.
+        let deadline = Instant::now() + self.handle.cfg.drain_timeout;
+        let mut pending: Vec<JoinHandle<()>> = self.workers.drain(..).collect();
+        while !pending.is_empty() && Instant::now() < deadline {
+            let mut still = Vec::with_capacity(pending.len());
+            for w in pending {
+                if w.is_finished() {
+                    let _ = w.join();
+                } else {
+                    still.push(w);
+                }
+            }
+            pending = still;
+            if !pending.is_empty() {
+                std::thread::sleep(Duration::from_millis(1));
+            }
         }
+        drop(pending);
+        // Final sweep: whatever nobody answered — requests stranded in a
+        // wedged worker, submits that raced the stop flag — fails here.
+        self.handle.inflight.fail_all(ServiceError::Shutdown);
     }
 }
 
@@ -382,70 +804,222 @@ fn service_utilization(metrics: &ServiceMetrics, config: &ServiceConfig) -> f64 
     worker_u.max(pool_u).clamp(0.0, 1.0)
 }
 
+/// The router's mutable state, grouped so routing logic can live in
+/// methods (single messages, retry releases and the shutdown drain all
+/// share one code path).
+struct RouterState {
+    batcher: Batcher,
+    registry: HashMap<String, LayerEntry>,
+    /// Crash-retried requests held for their backoff (`not_before`).
+    delayed: Vec<(Instant, Msg)>,
+    wtx: SyncSender<WorkMsg>,
+    config: ServiceConfig,
+    metrics: Arc<ServiceMetrics>,
+    inflight: Arc<Inflight>,
+}
+
+impl RouterState {
+    fn dispatch(&mut self, batch: ReadyBatch, deadline: Option<Instant>) {
+        dispatch(
+            batch,
+            &mut self.registry,
+            &self.wtx,
+            &self.metrics,
+            &self.config,
+            &self.inflight,
+            deadline,
+        );
+    }
+
+    /// Shed queued expired work, answering each shed request.
+    fn shed_expired(&mut self, now: Instant) {
+        for id in self.batcher.shed_expired(now) {
+            self.metrics.note_deadline_expired();
+            self.inflight.fail(id, ServiceError::DeadlineExceeded);
+        }
+    }
+
+    fn publish_gauges(&self) {
+        self.metrics.set_queue_depth(self.batcher.pending_len());
+        self.metrics.set_pending_bytes(self.batcher.pending_bytes());
+    }
+
+    /// Route one message. Rejected pushes first shed expired work to make
+    /// room (oldest-first under overload), then answer `Overloaded`.
+    fn route(&mut self, msg: Msg, util: f64) {
+        match msg {
+            Msg::Eval { layer, pending } => {
+                if let Some(t) = pending.not_before {
+                    if t > Instant::now() {
+                        self.delayed.push((t, Msg::Eval { layer, pending }));
+                        return;
+                    }
+                }
+                if !self.registry.contains_key(&layer) {
+                    self.inflight
+                        .fail(pending.id, ServiceError::UnknownLayer(layer));
+                    return;
+                }
+                match self.batcher.push_eval(&layer, pending, util) {
+                    PushOutcome::Ready(b) => self.dispatch(b, None),
+                    PushOutcome::Queued => {}
+                    PushOutcome::Rejected(p) => {
+                        self.shed_expired(Instant::now());
+                        match self.batcher.push_eval(&layer, p, util) {
+                            PushOutcome::Ready(b) => self.dispatch(b, None),
+                            PushOutcome::Queued => {}
+                            PushOutcome::Rejected(p) => {
+                                self.metrics.note_overload_rejected();
+                                self.inflight.fail(p.id, ServiceError::Overloaded);
+                            }
+                        }
+                    }
+                }
+            }
+            Msg::AdHoc { expr, pending } => {
+                if let Some(t) = pending.not_before {
+                    if t > Instant::now() {
+                        self.delayed.push((t, Msg::AdHoc { expr, pending }));
+                        return;
+                    }
+                }
+                send_work(
+                    &self.wtx,
+                    WorkMsg::AdHoc {
+                        expr,
+                        pending,
+                        strategy: self.config.strategy,
+                        backend: self.config.backend,
+                    },
+                    None,
+                    &self.metrics,
+                    &self.inflight,
+                );
+            }
+            Msg::Train { expr, pending } => match self.batcher.push_train(&expr, pending, util) {
+                PushOutcome::Ready(b) => self.dispatch(b, None),
+                PushOutcome::Queued => {}
+                PushOutcome::Rejected(p) => {
+                    self.shed_expired(Instant::now());
+                    match self.batcher.push_train(&expr, p, util) {
+                        PushOutcome::Ready(b) => self.dispatch(b, None),
+                        PushOutcome::Queued => {}
+                        PushOutcome::Rejected(p) => {
+                            self.metrics.note_overload_rejected();
+                            self.inflight.fail(p.id, ServiceError::Overloaded);
+                        }
+                    }
+                }
+            },
+            Msg::Shutdown => {}
+        }
+    }
+
+    /// Re-route retry-held requests whose backoff has elapsed.
+    fn release_delayed(&mut self, now: Instant, util: f64) {
+        let mut i = 0;
+        while i < self.delayed.len() {
+            if self.delayed[i].0 <= now {
+                let (_, mut msg) = self.delayed.swap_remove(i);
+                clear_not_before(&mut msg);
+                self.route(msg, util);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Shutdown drain: final routing pass for retry-held requests (backoff
+    /// waived — a prompt final attempt beats a missed one), flush every
+    /// pending group, release the workers. Every send is bounded by the
+    /// drain deadline; what cannot be delivered is answered `Shutdown`.
+    fn drain(mut self) {
+        let deadline = Instant::now() + self.config.drain_timeout;
+        let delayed = std::mem::take(&mut self.delayed);
+        for (_, mut msg) in delayed {
+            clear_not_before(&mut msg);
+            self.route(msg, 1.0);
+        }
+        for batch in self.batcher.drain() {
+            self.dispatch(batch, Some(deadline));
+        }
+        for _ in 0..self.config.workers.max(1) {
+            send_work(
+                &self.wtx,
+                WorkMsg::Stop,
+                Some(deadline),
+                &self.metrics,
+                &self.inflight,
+            );
+        }
+        self.publish_gauges();
+    }
+}
+
+fn clear_not_before(msg: &mut Msg) {
+    match msg {
+        Msg::Eval { pending, .. } => pending.not_before = None,
+        Msg::AdHoc { pending, .. } => pending.not_before = None,
+        Msg::Train { .. } | Msg::Shutdown => {}
+    }
+}
+
 fn router_loop(
     rx: Receiver<Msg>,
     wtx: SyncSender<WorkMsg>,
-    mut registry: HashMap<String, LayerEntry>,
+    registry: HashMap<String, LayerEntry>,
     config: ServiceConfig,
     metrics: Arc<ServiceMetrics>,
+    inflight: Arc<Inflight>,
 ) {
-    let mut batcher = Batcher::new(AdaptiveController::new(
-        config.max_batch,
-        config.batch_timeout,
-    ));
+    let mut st = RouterState {
+        batcher: Batcher::new(
+            AdaptiveController::new(config.max_batch, config.batch_timeout),
+            config.max_pending,
+            config.max_pending_bytes,
+        ),
+        registry,
+        delayed: Vec::new(),
+        wtx,
+        config,
+        metrics,
+        inflight,
+    };
     loop {
-        let util = service_utilization(&metrics, &config);
-        let timeout = batcher
-            .next_deadline(util)
+        let util = service_utilization(&st.metrics, &st.config);
+        let next = [
+            st.batcher.next_deadline(util),
+            st.delayed.iter().map(|(t, _)| *t).min(),
+        ]
+        .into_iter()
+        .flatten()
+        .min();
+        let timeout = next
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(IDLE_TICK);
         let msg = rx.recv_timeout(timeout);
-        let util = service_utilization(&metrics, &config);
-        match msg {
-            Ok(Msg::Eval { layer, pending }) => {
-                if !registry.contains_key(&layer) {
-                    let _ = pending
-                        .respond
-                        .send(Err(anyhow!("unknown layer '{layer}'")));
-                } else if let Some(batch) = batcher.push_eval(&layer, pending, util) {
-                    dispatch(batch, &mut registry, &wtx, &metrics, &config);
-                }
+        let util = service_utilization(&st.metrics, &st.config);
+        let stopping = match msg {
+            Ok(Msg::Shutdown) => true,
+            Ok(m) => {
+                st.route(m, util);
+                false
             }
-            Ok(Msg::AdHoc {
-                expr,
-                tensors,
-                respond,
-            }) => {
-                metrics.note_dispatched();
-                let _ = wtx.send(WorkMsg::AdHoc {
-                    expr,
-                    tensors,
-                    respond,
-                    strategy: config.strategy,
-                    backend: config.backend,
-                });
-            }
-            Ok(Msg::Train { expr, pending }) => {
-                if let Some(batch) = batcher.push_train(&expr, pending, util) {
-                    dispatch(batch, &mut registry, &wtx, &metrics, &config);
-                }
-            }
-            Ok(Msg::Shutdown) => break,
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => false,
+            Err(RecvTimeoutError::Disconnected) => true,
+        };
+        let now = Instant::now();
+        st.release_delayed(now, util);
+        st.shed_expired(now);
+        if stopping {
+            break;
         }
-        for batch in batcher.due(Instant::now(), util) {
-            dispatch(batch, &mut registry, &wtx, &metrics, &config);
+        for batch in st.batcher.due(Instant::now(), util) {
+            st.dispatch(batch, None);
         }
-        metrics.set_queue_depth(batcher.pending_len());
+        st.publish_gauges();
     }
-    // Drain on shutdown.
-    for batch in batcher.drain() {
-        dispatch(batch, &mut registry, &wtx, &metrics, &config);
-    }
-    for _ in 0..8 {
-        let _ = wtx.send(WorkMsg::Stop);
-    }
+    st.drain();
 }
 
 /// Evaluate an ad-hoc expression through the shared compile-once cache
@@ -506,12 +1080,49 @@ fn prepare_train(
     cache.get_or_compile_parsed(expr, &spec, &dims, &opts)
 }
 
-fn worker_loop(
+/// Everything a worker incarnation needs, bundled for the supervisor.
+struct WorkerCtx {
     wrx: Arc<Mutex<Receiver<WorkMsg>>>,
     metrics: Arc<ServiceMetrics>,
     cache: Arc<PlanCache>,
-) {
-    // One reusable training workspace per worker thread: compiled plans of
+    inflight: Arc<Inflight>,
+    /// Back into the router: crash-retried requests re-enter the pipeline
+    /// here (`try_send` only — a dying worker never blocks on a full
+    /// inbox, it fails the request instead).
+    feedback: SyncSender<Msg>,
+    max_retries: u32,
+}
+
+enum WorkerExit {
+    /// Clean stop (Stop marker or closed channel).
+    Stop,
+    /// A message handler panicked; the supervisor restarts the loop.
+    Crashed,
+}
+
+/// The worker supervisor: run the loop, and when an incarnation crashes,
+/// count the restart, back off exponentially against crash loops
+/// (consecutive crashes reset on any successfully handled message), and
+/// start a fresh incarnation — with a fresh workspace and staging tensor,
+/// so no state a panic may have half-written is ever reused.
+fn worker_thread(ctx: WorkerCtx) {
+    let mut consecutive: u32 = 0;
+    loop {
+        match worker_loop(&ctx, &mut consecutive) {
+            WorkerExit::Stop => break,
+            WorkerExit::Crashed => {
+                ctx.metrics.note_worker_restart();
+                consecutive += 1;
+                std::thread::sleep(Duration::from_millis(1u64 << consecutive.min(6)));
+            }
+        }
+    }
+}
+
+/// One supervised incarnation of the worker loop: returns at the first
+/// caught panic (or a clean stop), never unwinds.
+fn worker_loop(ctx: &WorkerCtx, consecutive: &mut u32) -> WorkerExit {
+    // One reusable training workspace per incarnation: compiled plans of
     // any shape run against it (training batches tape into the same arena
     // inference uses), and it only ever grows. The staging tensor receives
     // each inference batch's concatenated inputs — same-shape steady-state
@@ -520,67 +1131,28 @@ fn worker_loop(
     let mut stage: Option<Tensor> = None;
     loop {
         let msg = {
-            let rx = wrx.lock().unwrap();
+            let rx = ctx.wrx.lock().unwrap_or_else(PoisonError::into_inner);
             rx.recv()
         };
-        match msg {
+        let crashed = match msg {
             Ok(WorkMsg::Batch(item)) => {
                 let t0 = Instant::now();
-                // Concatenate the batch along axis 0 into the reusable
-                // staging tensor.
-                let sizes: Vec<usize> = item.requests.iter().map(|p| p.x.shape()[0]).collect();
-                let bsum: usize = sizes.iter().sum();
-                let mut shape = item.requests[0].x.shape().to_vec();
-                shape[0] = bsum;
-                let reuse = matches!(&stage, Some(t) if t.shape() == &shape[..]);
-                if !reuse {
-                    stage = Some(Tensor::zeros(&shape));
-                }
-                let x = stage.as_mut().expect("staging tensor present");
-                {
-                    let parts: Vec<&Tensor> = item.requests.iter().map(|p| &p.x).collect();
-                    concat_into(&parts, x);
-                }
-                let x = stage.as_ref().expect("staging tensor present");
-                let mut inputs: Vec<&Tensor> = vec![x];
-                inputs.extend(item.factors.iter());
-                let result = item.plan.run(&inputs, ws.base_mut());
-                match result {
-                    Ok(y) => {
-                        // Split along axis 0 back to requesters.
-                        let parts = y.split_axis0(&sizes);
-                        for (p, part) in item.requests.into_iter().zip(parts) {
-                            metrics.note_done(p.enqueued.elapsed());
-                            let _ = p.respond.send(Ok(part));
-                        }
-                    }
-                    Err(e) => {
-                        let msg = format!("layer '{}' failed: {e}", item.layer);
-                        for p in item.requests {
-                            metrics.note_error();
-                            let _ = p.respond.send(Err(anyhow!("{msg}")));
-                        }
-                    }
-                }
-                metrics.note_work_done();
-                metrics.note_exec_time(t0.elapsed());
+                let crashed = run_eval_batch(ctx, &mut ws, &mut stage, item);
+                ctx.metrics.note_work_done();
+                ctx.metrics.note_exec_time(t0.elapsed());
+                crashed
             }
             Ok(WorkMsg::AdHoc {
                 expr,
-                tensors,
-                respond,
+                pending,
                 strategy,
                 backend,
             }) => {
                 let t0 = Instant::now();
-                let result = eval_adhoc(&cache, &mut ws, &expr, &tensors, strategy, backend);
-                match &result {
-                    Ok(_) => metrics.note_done(t0.elapsed()),
-                    Err(_) => metrics.note_error(),
-                }
-                let _ = respond.send(result);
-                metrics.note_work_done();
-                metrics.note_exec_time(t0.elapsed());
+                let crashed = run_adhoc(ctx, &mut ws, expr, pending, strategy, backend);
+                ctx.metrics.note_work_done();
+                ctx.metrics.note_exec_time(t0.elapsed());
+                crashed
             }
             Ok(WorkMsg::TrainBatch {
                 expr,
@@ -590,45 +1162,305 @@ fn worker_loop(
                 backend,
             }) => {
                 let t0 = Instant::now();
-                match prepare_train(&cache, &expr, &items, strategy, backend) {
-                    Ok(compiled) => {
-                        // One layout, one workspace, one segment per request
-                        // in submission order — the batched replay.
-                        let layout = compiled.train_layout(policy);
-                        for p in items {
-                            let refs: Vec<&Tensor> = p.tensors.iter().collect();
-                            let mut out = Tensor::zeros(compiled.out_shape());
-                            let mut grads: Vec<Tensor> = compiled
-                                .in_dims()
-                                .iter()
-                                .map(|d| Tensor::zeros(d))
-                                .collect();
-                            let res = compiled
-                                .train_step(&layout, &refs, &p.dout, &mut ws, &mut out, &mut grads);
-                            match res {
-                                Ok(()) => {
-                                    metrics.note_done(p.enqueued.elapsed());
-                                    let _ = p.respond.send(Ok((out, grads)));
-                                }
-                                Err(e) => {
-                                    metrics.note_error();
-                                    let _ = p.respond.send(Err(e));
-                                }
-                            }
-                        }
+                let crashed = run_train_batch(ctx, &mut ws, expr, policy, items, strategy, backend);
+                ctx.metrics.note_work_done();
+                ctx.metrics.note_exec_time(t0.elapsed());
+                crashed
+            }
+            Ok(WorkMsg::Stop) | Err(_) => return WorkerExit::Stop,
+        };
+        if crashed {
+            return WorkerExit::Crashed;
+        }
+        *consecutive = 0;
+    }
+}
+
+/// A worker died mid-batch: re-queue each idempotent inference request for
+/// a bounded, backed-off retry through the router — or answer
+/// `WorkerCrashed` when retries are exhausted or the router is unreachable
+/// (`try_send`: a crashed worker never blocks).
+fn crash_requeue_evals(ctx: &WorkerCtx, layer: &str, requests: Vec<Pending>, panic_msg: &str) {
+    let now = Instant::now();
+    for mut p in requests {
+        if p.retries < ctx.max_retries {
+            p.retries += 1;
+            p.not_before = Some(now + Duration::from_millis(1u64 << p.retries.min(6)));
+            let id = p.id;
+            let msg = Msg::Eval {
+                layer: layer.to_string(),
+                pending: p,
+            };
+            match ctx.feedback.try_send(msg) {
+                Ok(()) => ctx.metrics.note_retry(),
+                Err(_) => {
+                    ctx.inflight
+                        .fail(id, ServiceError::WorkerCrashed(panic_msg.to_string()));
+                }
+            }
+        } else {
+            ctx.inflight
+                .fail(p.id, ServiceError::WorkerCrashed(panic_msg.to_string()));
+        }
+    }
+}
+
+/// Ad-hoc variant of [`crash_requeue_evals`].
+fn crash_requeue_adhoc(ctx: &WorkerCtx, expr: String, mut p: AdHocPending, panic_msg: &str) {
+    if p.retries < ctx.max_retries {
+        p.retries += 1;
+        p.not_before = Some(Instant::now() + Duration::from_millis(1u64 << p.retries.min(6)));
+        let id = p.id;
+        match ctx.feedback.try_send(Msg::AdHoc { expr, pending: p }) {
+            Ok(()) => ctx.metrics.note_retry(),
+            Err(_) => {
+                ctx.inflight
+                    .fail(id, ServiceError::WorkerCrashed(panic_msg.to_string()));
+            }
+        }
+    } else {
+        ctx.inflight
+            .fail(p.id, ServiceError::WorkerCrashed(panic_msg.to_string()));
+    }
+}
+
+/// Execute one inference batch. Three phases, each fault-contained:
+/// the injection gate (a panic here models a worker dying before touching
+/// any state), the deadline shed, and the guarded execution. Returns
+/// `true` if the incarnation must be restarted.
+fn run_eval_batch(
+    ctx: &WorkerCtx,
+    ws: &mut TrainWorkspace,
+    stage: &mut Option<Tensor>,
+    item: WorkItem,
+) -> bool {
+    let WorkItem {
+        layer,
+        plan,
+        factors,
+        mut requests,
+    } = item;
+    match catch_unwind(|| crate::faults::point("worker.eval.pre")) {
+        Ok(false) => {}
+        Ok(true) => {
+            for p in requests {
+                ctx.inflight.fail(
+                    p.id,
+                    ServiceError::Engine("injected fault at worker.eval.pre".to_string()),
+                );
+            }
+            return false;
+        }
+        Err(payload) => {
+            let msg = crate::parallel::describe_panic(payload.as_ref());
+            crash_requeue_evals(ctx, &layer, requests, &msg);
+            return true;
+        }
+    }
+    // Requests that expired while queued or in the worker channel are
+    // shed, not executed.
+    let now = Instant::now();
+    requests.retain(|p| {
+        if p.expired(now) {
+            ctx.metrics.note_deadline_expired();
+            ctx.inflight.fail(p.id, ServiceError::DeadlineExceeded);
+            false
+        } else {
+            true
+        }
+    });
+    if requests.is_empty() {
+        return false;
+    }
+    let sizes: Vec<usize> = requests.iter().map(|p| p.x.shape()[0]).collect();
+    let run = || -> InferResult {
+        // Concatenate the batch along axis 0 into the reusable staging
+        // tensor.
+        let bsum: usize = sizes.iter().sum();
+        let mut shape = requests[0].x.shape().to_vec();
+        shape[0] = bsum;
+        let reuse = matches!(&*stage, Some(t) if t.shape() == &shape[..]);
+        if !reuse {
+            *stage = Some(Tensor::zeros(&shape));
+        }
+        let x = stage.as_mut().expect("staging tensor present");
+        {
+            let parts: Vec<&Tensor> = requests.iter().map(|p| &p.x).collect();
+            concat_into(&parts, x);
+        }
+        let x = stage.as_ref().expect("staging tensor present");
+        let mut inputs: Vec<&Tensor> = vec![x];
+        inputs.extend(factors.iter());
+        plan.run(&inputs, ws.base_mut())
+            .map_err(|e| ServiceError::Engine(format!("layer '{layer}' failed: {e}")))
+    };
+    match catch_unwind(AssertUnwindSafe(run)) {
+        Ok(Ok(y)) => {
+            // Split along axis 0 back to requesters.
+            let parts = y.split_axis0(&sizes);
+            for (p, part) in requests.into_iter().zip(parts) {
+                ctx.inflight.complete_infer(p.id, p.enqueued, Ok(part));
+            }
+            false
+        }
+        Ok(Err(e)) => {
+            for p in requests {
+                ctx.inflight.complete_infer(p.id, p.enqueued, Err(e.clone()));
+            }
+            false
+        }
+        Err(payload) => {
+            let msg = crate::parallel::describe_panic(payload.as_ref());
+            crash_requeue_evals(ctx, &layer, requests, &msg);
+            true
+        }
+    }
+}
+
+/// Execute one ad-hoc request (same three-phase structure as
+/// [`run_eval_batch`]).
+fn run_adhoc(
+    ctx: &WorkerCtx,
+    ws: &mut TrainWorkspace,
+    expr: String,
+    pending: AdHocPending,
+    strategy: Strategy,
+    backend: Backend,
+) -> bool {
+    match catch_unwind(|| crate::faults::point("worker.adhoc.pre")) {
+        Ok(false) => {}
+        Ok(true) => {
+            ctx.inflight.fail(
+                pending.id,
+                ServiceError::Engine("injected fault at worker.adhoc.pre".to_string()),
+            );
+            return false;
+        }
+        Err(payload) => {
+            let msg = crate::parallel::describe_panic(payload.as_ref());
+            crash_requeue_adhoc(ctx, expr, pending, &msg);
+            return true;
+        }
+    }
+    if pending.expired(Instant::now()) {
+        ctx.metrics.note_deadline_expired();
+        ctx.inflight.fail(pending.id, ServiceError::DeadlineExceeded);
+        return false;
+    }
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        eval_adhoc(&ctx.cache, ws, &expr, &pending.tensors, strategy, backend)
+            .map_err(|e| ServiceError::Engine(e.to_string()))
+    }));
+    match result {
+        Ok(r) => {
+            ctx.inflight.complete_infer(pending.id, pending.enqueued, r);
+            false
+        }
+        Err(payload) => {
+            let msg = crate::parallel::describe_panic(payload.as_ref());
+            crash_requeue_adhoc(ctx, expr, pending, &msg);
+            true
+        }
+    }
+}
+
+/// Execute one training batch. Training steps are never replayed: on a
+/// crash, every request not yet answered fails fast with `WorkerCrashed`
+/// (already-completed segments keep their delivered results — per-request
+/// isolation).
+fn run_train_batch(
+    ctx: &WorkerCtx,
+    ws: &mut TrainWorkspace,
+    expr: String,
+    policy: CkptPolicy,
+    mut items: Vec<TrainPending>,
+    strategy: Strategy,
+    backend: Backend,
+) -> bool {
+    match catch_unwind(|| crate::faults::point("worker.train.pre")) {
+        Ok(false) => {}
+        Ok(true) => {
+            for p in items {
+                ctx.inflight.fail(
+                    p.id,
+                    ServiceError::Engine("injected fault at worker.train.pre".to_string()),
+                );
+            }
+            return false;
+        }
+        Err(payload) => {
+            let msg = crate::parallel::describe_panic(payload.as_ref());
+            for p in items {
+                ctx.inflight
+                    .fail(p.id, ServiceError::WorkerCrashed(msg.clone()));
+            }
+            return true;
+        }
+    }
+    let now = Instant::now();
+    items.retain(|p| {
+        if p.expired(now) {
+            ctx.metrics.note_deadline_expired();
+            ctx.inflight.fail(p.id, ServiceError::DeadlineExceeded);
+            false
+        } else {
+            true
+        }
+    });
+    if items.is_empty() {
+        return false;
+    }
+    // `done` tracks delivery progress across the unwind boundary: segments
+    // completed before a panic stay delivered, the rest fail.
+    let mut done = 0usize;
+    let result = catch_unwind(AssertUnwindSafe(
+        || -> std::result::Result<(), ServiceError> {
+            let compiled = prepare_train(&ctx.cache, &expr, &items, strategy, backend)
+                .map_err(|e| ServiceError::Engine(e.to_string()))?;
+            // One layout, one workspace, one segment per request in
+            // submission order — the batched replay.
+            let layout = compiled.train_layout(policy);
+            while done < items.len() {
+                let p = &items[done];
+                let refs: Vec<&Tensor> = p.tensors.iter().collect();
+                let mut out = Tensor::zeros(compiled.out_shape());
+                let mut grads: Vec<Tensor> = compiled
+                    .in_dims()
+                    .iter()
+                    .map(|d| Tensor::zeros(d))
+                    .collect();
+                let res = compiled
+                    .train_step(&layout, &refs, &p.dout, ws, &mut out, &mut grads)
+                    .map_err(|e| ServiceError::Engine(e.to_string()));
+                match res {
+                    Ok(()) => {
+                        ctx.inflight.complete_train(p.id, p.enqueued, Ok((out, grads)));
                     }
                     Err(e) => {
-                        let msg = format!("{e}");
-                        for p in items {
-                            metrics.note_error();
-                            let _ = p.respond.send(Err(anyhow!("{msg}")));
-                        }
+                        ctx.inflight.complete_train(p.id, p.enqueued, Err(e));
                     }
                 }
-                metrics.note_work_done();
-                metrics.note_exec_time(t0.elapsed());
+                done += 1;
             }
-            Ok(WorkMsg::Stop) | Err(_) => break,
+            Ok(())
+        },
+    ));
+    match result {
+        Ok(Ok(())) => false,
+        Ok(Err(e)) => {
+            // Whole-batch preparation failed before any segment ran.
+            for p in &items[done..] {
+                ctx.inflight.fail(p.id, e.clone());
+            }
+            false
+        }
+        Err(payload) => {
+            let msg = crate::parallel::describe_panic(payload.as_ref());
+            for p in &items[done..] {
+                ctx.inflight
+                    .fail(p.id, ServiceError::WorkerCrashed(msg.clone()));
+            }
+            true
         }
     }
 }

@@ -264,7 +264,8 @@ fn train_requests_coalesce_into_batches_with_exact_results() {
     let n_req = 16usize;
     let reqs: Vec<(Vec<Tensor>, Tensor)> = (0..n_req)
         .map(|_| {
-            let ins: Vec<Tensor> = dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+            let ins: Vec<Tensor> =
+                dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
             let dout = Tensor::rand(compiled.out_shape(), -1.0, 1.0, &mut rng);
             (ins, dout)
         })
@@ -483,4 +484,220 @@ fn layer_plan_cache_evicts_lru_geometry() {
     eval_spatial(5, &mut rng);
     assert_eq!(h.metrics().plan_misses, misses_after_fill + 1);
     service.shutdown();
+}
+
+#[test]
+fn shutdown_answers_every_pending_request_and_rejects_new_ones() {
+    let mut rng = Rng::new(31);
+    let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+    let service = EvalService::start(
+        ServiceConfig {
+            workers: 1,
+            max_batch: 8,
+            batch_timeout: std::time::Duration::from_millis(50),
+            ..Default::default()
+        },
+        vec![(name, expr, factors)],
+    )
+    .unwrap();
+    let h = service.handle();
+    let rxs: Vec<_> = (0..12)
+        .map(|_| {
+            let x = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+            h.submit("cp", x).unwrap()
+        })
+        .collect();
+    service.shutdown();
+    // The liveness contract: every receiver yields exactly one terminal
+    // outcome across shutdown — flushed-and-served or failed `Shutdown` —
+    // and none dangles.
+    let mut ok = 0u64;
+    let mut errs = 0u64;
+    for rx in rxs {
+        match rx.recv_timeout(std::time::Duration::from_secs(10)) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(e)) => {
+                assert_eq!(e, ServiceError::Shutdown, "drain failures are structured");
+                errs += 1;
+            }
+            Err(_) => panic!("request left dangling across shutdown"),
+        }
+    }
+    assert_eq!(ok + errs, 12);
+    let m = h.metrics();
+    assert_eq!(m.completed + m.errors, m.submitted, "unaccounted terminal outcomes");
+    // Post-shutdown submissions are rejected outright, not enqueued.
+    let post = h.submit("cp", Tensor::zeros(&[1, 3, 6, 6]));
+    assert!(matches!(post, Err(ServiceError::Shutdown)));
+}
+
+/// Fault-injected failure paths (cargo feature `fault-injection`; see
+/// `tests/chaos.rs` for the randomized schedules). These install plans in
+/// the process-global fault registry, so they serialize on
+/// [`crate::faults::test_serial`] — and the CI chaos job runs the whole
+/// binary single-threaded so unrelated tests never trip an installed rule.
+#[cfg(feature = "fault-injection")]
+mod faulted {
+    use super::*;
+    use crate::faults::{self, FaultAction, FaultPlan, Schedule};
+    use std::time::Duration;
+
+    #[test]
+    fn worker_panic_recovers_capacity_with_bounded_retry() {
+        let _g = faults::test_serial();
+        faults::install(FaultPlan::new(11).rule(
+            "worker.eval.pre",
+            Schedule::Nth(0),
+            FaultAction::Panic,
+        ));
+        let mut rng = Rng::new(41);
+        let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+        let service = EvalService::start(
+            ServiceConfig {
+                workers: 2,
+                max_retries: 2,
+                ..Default::default()
+            },
+            vec![(name, expr.clone(), factors.clone())],
+        )
+        .unwrap();
+        let h = service.handle();
+        // The first dispatch panics its worker; the request is re-queued
+        // and the second attempt answers it.
+        let x = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+        let y = h.eval("cp", x.clone()).unwrap();
+        let mut inputs = vec![&x];
+        inputs.extend(factors.iter());
+        y.assert_close(&conv_einsum(&expr, &inputs).unwrap(), 1e-4);
+        let m = h.metrics();
+        assert_eq!(m.worker_restarts, 1, "the panicked incarnation restarted");
+        assert_eq!(m.retries, 1, "the in-flight request was re-queued once");
+        // No silent capacity loss: the service keeps answering at full
+        // strength after the crash.
+        for _ in 0..8 {
+            let x = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+            h.eval("cp", x).unwrap();
+        }
+        assert_eq!(h.metrics().completed, 9);
+        faults::clear();
+        service.shutdown();
+    }
+
+    #[test]
+    fn injected_error_routes_structured_engine_err() {
+        let _g = faults::test_serial();
+        faults::install(FaultPlan::new(12).rule(
+            "worker.eval.pre",
+            Schedule::Nth(0),
+            FaultAction::Error,
+        ));
+        let mut rng = Rng::new(42);
+        let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+        let service =
+            EvalService::start(ServiceConfig::default(), vec![(name, expr, factors)]).unwrap();
+        let h = service.handle();
+        let err = h.eval("cp", Tensor::zeros(&[1, 3, 6, 6])).unwrap_err();
+        match err {
+            ServiceError::Engine(m) => assert!(m.contains("worker.eval.pre"), "wrong site: {m}"),
+            other => panic!("expected an injected engine error, got {other}"),
+        }
+        faults::clear();
+        service.shutdown();
+    }
+
+    #[test]
+    fn deadline_expiry_is_shed_and_counted() {
+        let _g = faults::test_serial();
+        // Every batch stalls 50ms at the gate; a 10ms deadline therefore
+        // expires deterministically before execution.
+        faults::install(FaultPlan::new(13).rule(
+            "worker.eval.pre",
+            Schedule::Every(1),
+            FaultAction::Delay(Duration::from_millis(50)),
+        ));
+        let mut rng = Rng::new(43);
+        let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+        let service = EvalService::start(
+            ServiceConfig {
+                workers: 1,
+                request_deadline: Some(Duration::from_millis(10)),
+                ..Default::default()
+            },
+            vec![(name, expr, factors)],
+        )
+        .unwrap();
+        let h = service.handle();
+        let x = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+        let err = h.eval("cp", x).unwrap_err();
+        assert_eq!(err, ServiceError::DeadlineExceeded);
+        assert!(h.metrics().deadline_expired >= 1);
+        faults::clear();
+        service.shutdown();
+    }
+
+    #[test]
+    fn overload_rejects_with_budget_and_gauges() {
+        let _g = faults::test_serial();
+        // Pin the lone worker on a slow ad-hoc request so utilization is 1
+        // and subsequent evals queue instead of flushing immediately.
+        faults::install(FaultPlan::new(14).rule(
+            "worker.adhoc.pre",
+            Schedule::Nth(0),
+            FaultAction::Delay(Duration::from_millis(200)),
+        ));
+        let mut rng = Rng::new(44);
+        let (name, expr, factors, _spec) = cp_layer("cp", &mut rng);
+        let service = EvalService::start(
+            ServiceConfig {
+                workers: 1,
+                max_batch: 8,
+                batch_timeout: Duration::from_millis(300),
+                max_pending: 2,
+                backend: crate::exec::Backend::Scalar,
+                ..Default::default()
+            },
+            vec![(name, expr, factors)],
+        )
+        .unwrap();
+        let h = service.handle();
+        let a = Tensor::rand(&[3, 4], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&[4, 5], -1.0, 1.0, &mut rng);
+        let busy = h.submit_adhoc("ij,jk->ik", vec![a, b]).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let rx1 = h.submit("cp", Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng)).unwrap();
+        let rx2 = h.submit("cp", Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng)).unwrap();
+        // The pending budget (2 requests) is exhausted: the third request
+        // is rejected — either at the submit fast path (gauge) or by the
+        // router's authoritative budget — never silently queued.
+        let third = h.submit("cp", Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng));
+        match third {
+            Err(ServiceError::Overloaded) => {}
+            Ok(rx) => {
+                let r = rx
+                    .recv_timeout(Duration::from_secs(5))
+                    .expect("rejected request still gets a terminal answer");
+                let rejected = matches!(r, Err(ServiceError::Overloaded));
+                assert!(rejected, "third request must be rejected by admission control");
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        // While the two admitted evals wait, the pending gauges are live.
+        let t0 = std::time::Instant::now();
+        let mut saw_bytes = false;
+        while t0.elapsed() < Duration::from_secs(2) {
+            if h.metrics().pending_bytes > 0 {
+                saw_bytes = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(saw_bytes, "pending_bytes gauge must reflect queued payloads");
+        assert!(h.metrics().overload_rejected >= 1);
+        // Admitted work is unaffected by the rejection.
+        busy.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        rx1.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        rx2.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        faults::clear();
+        service.shutdown();
+    }
 }

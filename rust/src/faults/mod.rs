@@ -1,0 +1,377 @@
+//! Deterministic fault injection for robustness testing (std-only).
+//!
+//! A process-wide registry of **named fault sites**. Production code marks
+//! the places where failure is interesting — e.g.
+//! `faults::point("worker.eval.pre")` just before a coordinator worker
+//! executes a batch — and a test installs a seeded [`FaultPlan`] describing
+//! *when* each site fires and *what* it does:
+//!
+//! * [`FaultAction::Panic`] — panic with a recognizable message (exercises
+//!   worker supervision and panic containment);
+//! * [`FaultAction::Delay`] — sleep for a fixed duration (exercises request
+//!   deadlines and the drain timeout);
+//! * [`FaultAction::Error`] — `point` returns `true` and the caller turns
+//!   that into a structured `Err` (exercises error routing and retry
+//!   semantics).
+//!
+//! Schedules are **deterministic**: counted triggers ([`Schedule::Nth`],
+//! [`Schedule::First`], [`Schedule::Every`]) fire on exact per-site hit
+//! indices, and probabilistic triggers ([`Schedule::Prob`]) draw from a
+//! per-rule [`crate::util::rng::Rng`] forked from the plan seed — the k-th
+//! hit of a site makes the same decision in every run with that seed. (With
+//! several worker threads the *assignment* of requests to hit indices can
+//! vary with scheduling; the chaos suite's invariants — every request
+//! terminates, successful results are bit-identical — hold for every
+//! assignment, and fully deterministic replays pin `workers: 1`.)
+//!
+//! # Zero cost when disabled
+//!
+//! The whole registry is compiled only under the `fault-injection` cargo
+//! feature. Without it, [`point`] is an `#[inline(always)]` constant
+//! `false`, so every `if faults::point(..) { .. }` branch folds away and
+//! the zero-allocation hot paths are untouched (the release CI job keeps
+//! asserting them with the feature off).
+//!
+//! # Poisoning
+//!
+//! [`point`] never panics or sleeps while holding the registry lock, and
+//! every lock acquisition shrugs off poisoning — an injected panic
+//! unwinding through a caller can never wedge the registry for other
+//! threads.
+
+#[cfg(feature = "fault-injection")]
+pub use enabled::{clear, hits, injected, install, point, test_serial};
+
+#[cfg(not(feature = "fault-injection"))]
+pub use disabled::{clear, hits, injected, install, point};
+
+use std::time::Duration;
+
+/// What a fault site does when its schedule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic with message `"injected fault: panic at <site>"`.
+    Panic,
+    /// Sleep for the given duration, then report "no fault" (`false`).
+    Delay(Duration),
+    /// Report a forced failure: [`point`] returns `true` and the caller
+    /// responds with a structured error.
+    Error,
+}
+
+/// When a fault rule fires, in terms of the site's per-process hit count
+/// (0-based: the first execution of a site is hit 0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// Fire exactly once, on hit `n`.
+    Nth(u64),
+    /// Fire on hits `0..n`.
+    First(u64),
+    /// Fire on every `k`-th hit (`k >= 1`): hits `k-1, 2k-1, ...`.
+    Every(u64),
+    /// Fire independently on each hit with probability `p`, drawn from a
+    /// per-rule deterministic RNG forked from the plan seed.
+    Prob(f64),
+}
+
+/// A seeded set of fault rules, installed process-wide via [`install`].
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<(String, Schedule, FaultAction)>,
+}
+
+impl FaultPlan {
+    /// An empty plan; probabilistic rules fork their RNG streams from
+    /// `seed` and the rule's site name.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rules: Vec::new(),
+        }
+    }
+
+    /// Add a rule. Multiple rules may target the same site; on each hit
+    /// they are evaluated in insertion order and the first that fires wins.
+    pub fn rule(mut self, site: &str, schedule: Schedule, action: FaultAction) -> FaultPlan {
+        self.rules.push((site.to_string(), schedule, action));
+        self
+    }
+
+    /// The plan seed (used to fork per-rule RNG streams).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+#[cfg(feature = "fault-injection")]
+mod enabled {
+    use super::{FaultAction, FaultPlan, Schedule};
+    use crate::util::rng::Rng;
+    use std::collections::HashMap;
+    use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+    struct Rule {
+        schedule: Schedule,
+        action: FaultAction,
+        rng: Rng,
+    }
+
+    #[derive(Default)]
+    struct SiteState {
+        rules: Vec<Rule>,
+        hits: u64,
+        injected: u64,
+    }
+
+    #[derive(Default)]
+    struct Registry {
+        sites: HashMap<String, SiteState>,
+    }
+
+    fn registry() -> MutexGuard<'static, Registry> {
+        static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+        REGISTRY
+            .get_or_init(|| Mutex::new(Registry::default()))
+            .lock()
+            // An injected panic may unwind through arbitrary callers;
+            // poisoning must never disable the registry for other threads.
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Derive a stable per-rule RNG stream from the plan seed and the
+    /// site name (FNV-1a over the name, mixed into the seed).
+    fn rule_rng(seed: u64, site: &str, index: usize) -> Rng {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in site.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Rng::new(seed ^ h ^ ((index as u64) << 32))
+    }
+
+    /// Install `plan`, replacing any previous plan and resetting all hit /
+    /// injection counters.
+    pub fn install(plan: FaultPlan) {
+        let mut reg = registry();
+        reg.sites.clear();
+        for (i, (site, schedule, action)) in plan.rules.iter().enumerate() {
+            let state = reg.sites.entry(site.clone()).or_default();
+            state.rules.push(Rule {
+                schedule: *schedule,
+                action: *action,
+                rng: rule_rng(plan.seed, site, i),
+            });
+        }
+    }
+
+    /// Remove every rule and reset all counters.
+    pub fn clear() {
+        registry().sites.clear();
+    }
+
+    /// Times `site` has been executed since the last [`install`]/[`clear`]
+    /// (counted even for sites with no rules).
+    pub fn hits(site: &str) -> u64 {
+        registry().sites.get(site).map(|s| s.hits).unwrap_or(0)
+    }
+
+    /// Times a fault actually fired at `site`.
+    pub fn injected(site: &str) -> u64 {
+        registry()
+            .sites
+            .get(site)
+            .map(|s| s.injected)
+            .unwrap_or(0)
+    }
+
+    /// Serialize tests that install process-wide fault plans: the registry
+    /// is global, so concurrent test threads with different plans would
+    /// interfere. Hold the returned guard for the duration of the test.
+    pub fn test_serial() -> MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Execute fault site `site`: decide under the registry lock whether a
+    /// rule fires, then act **outside** the lock — panic for
+    /// [`FaultAction::Panic`], sleep for [`FaultAction::Delay`], and return
+    /// `true` for [`FaultAction::Error`] (the caller produces the error).
+    /// Returns `false` when nothing fires.
+    pub fn point(site: &str) -> bool {
+        let fired = {
+            let mut reg = registry();
+            let Some(state) = reg.sites.get_mut(site) else {
+                return false;
+            };
+            let hit = state.hits;
+            state.hits += 1;
+            let mut fired = None;
+            for rule in state.rules.iter_mut() {
+                let fire = match rule.schedule {
+                    Schedule::Nth(n) => hit == n,
+                    Schedule::First(n) => hit < n,
+                    Schedule::Every(k) => k >= 1 && (hit + 1) % k == 0,
+                    Schedule::Prob(p) => rule.rng.bool(p),
+                };
+                if fire {
+                    fired = Some(rule.action);
+                    break;
+                }
+            }
+            if fired.is_some() {
+                state.injected += 1;
+            }
+            fired
+        };
+        match fired {
+            None => false,
+            Some(FaultAction::Error) => true,
+            Some(FaultAction::Delay(d)) => {
+                std::thread::sleep(d);
+                false
+            }
+            Some(FaultAction::Panic) => {
+                panic!("injected fault: panic at {site}");
+            }
+        }
+    }
+}
+
+#[cfg(not(feature = "fault-injection"))]
+mod disabled {
+    use super::FaultPlan;
+
+    /// No-op without the `fault-injection` feature: a constant `false` the
+    /// optimizer folds away, keeping the hot path untouched.
+    #[inline(always)]
+    pub fn point(_site: &str) -> bool {
+        false
+    }
+
+    /// No-op without the `fault-injection` feature.
+    #[inline(always)]
+    pub fn install(_plan: FaultPlan) {}
+
+    /// No-op without the `fault-injection` feature.
+    #[inline(always)]
+    pub fn clear() {}
+
+    /// Always 0 without the `fault-injection` feature.
+    #[inline(always)]
+    pub fn hits(_site: &str) -> u64 {
+        0
+    }
+
+    /// Always 0 without the `fault-injection` feature.
+    #[inline(always)]
+    pub fn injected(_site: &str) -> u64 {
+        0
+    }
+}
+
+#[cfg(all(test, feature = "fault-injection"))]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::time::Instant;
+
+    // The registry is process-global; tests touching it serialize on the
+    // shared gate so parallel test threads never see each other's plans.
+    fn gate() -> std::sync::MutexGuard<'static, ()> {
+        test_serial()
+    }
+
+    #[test]
+    fn unregistered_site_is_silent() {
+        let _g = gate();
+        clear();
+        assert!(!point("no.such.site"));
+        assert_eq!(hits("no.such.site"), 0);
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let _g = gate();
+        install(FaultPlan::new(1).rule("s", Schedule::Nth(2), FaultAction::Error));
+        let fired: Vec<bool> = (0..5).map(|_| point("s")).collect();
+        assert_eq!(fired, vec![false, false, true, false, false]);
+        assert_eq!(hits("s"), 5);
+        assert_eq!(injected("s"), 1);
+        clear();
+    }
+
+    #[test]
+    fn every_fires_periodically_and_first_fires_prefix() {
+        let _g = gate();
+        install(
+            FaultPlan::new(2)
+                .rule("e", Schedule::Every(3), FaultAction::Error)
+                .rule("f", Schedule::First(2), FaultAction::Error),
+        );
+        let e: Vec<bool> = (0..7).map(|_| point("e")).collect();
+        assert_eq!(e, vec![false, false, true, false, false, true, false]);
+        let f: Vec<bool> = (0..4).map(|_| point("f")).collect();
+        assert_eq!(f, vec![true, true, false, false]);
+        clear();
+    }
+
+    #[test]
+    fn prob_stream_is_deterministic_per_seed() {
+        let _g = gate();
+        let run = |seed: u64| -> Vec<bool> {
+            install(FaultPlan::new(seed).rule("p", Schedule::Prob(0.5), FaultAction::Error));
+            (0..64).map(|_| point("p")).collect()
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a, b, "same seed, same decision stream");
+        let c = run(8);
+        assert_ne!(a, c, "different seed should diverge somewhere in 64 draws");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x));
+        clear();
+    }
+
+    #[test]
+    fn panic_action_panics_with_site_name_and_registry_survives() {
+        let _g = gate();
+        install(FaultPlan::new(3).rule("boom", Schedule::Nth(0), FaultAction::Panic));
+        let err = catch_unwind(AssertUnwindSafe(|| point("boom"))).unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("injected fault: panic at boom"), "got {msg:?}");
+        // Registry still answers after the panic (no poisoning wedge).
+        assert_eq!(injected("boom"), 1);
+        assert!(!point("boom"), "Nth(0) already fired");
+        clear();
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_reports_no_fault() {
+        let _g = gate();
+        install(FaultPlan::new(4).rule(
+            "slow",
+            Schedule::Nth(0),
+            FaultAction::Delay(Duration::from_millis(20)),
+        ));
+        let t0 = Instant::now();
+        assert!(!point("slow"), "delay is not a forced error");
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        clear();
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let _g = gate();
+        install(
+            FaultPlan::new(5)
+                .rule("s", Schedule::Nth(0), FaultAction::Error)
+                .rule("s", Schedule::First(10), FaultAction::Panic),
+        );
+        // Hit 0: the Error rule fires first — no panic.
+        assert!(point("s"));
+        clear();
+    }
+}

@@ -31,8 +31,11 @@
 //!   benches (Tables 1–7, Figures 3–4);
 //! * a **coordinator** ([`coordinator`]) serving batched layer-evaluation
 //!   *and training-step* requests through one unified, pool-aware batching
-//!   scheduler, and a **PJRT runtime** ([`runtime`]) that loads the AOT
-//!   JAX/Pallas artifacts produced by `python/compile/aot.py`.
+//!   scheduler — fault-tolerant: supervised workers, request deadlines,
+//!   admission control and graceful drain, exercised deterministically by
+//!   the [`faults`] injection registry (cargo feature `fault-injection`) —
+//!   and a **PJRT runtime** ([`runtime`]) that loads the AOT JAX/Pallas
+//!   artifacts produced by `python/compile/aot.py`.
 //!
 //! ## Compile once, run many
 //!
@@ -186,6 +189,7 @@ pub mod cost;
 pub mod einsum;
 pub mod exec;
 pub mod experiments;
+pub mod faults;
 pub mod kernels;
 pub mod nn;
 pub mod parallel;

@@ -84,6 +84,24 @@ pub fn default_threads() -> usize {
         })
 }
 
+/// Human-readable identity of a caught panic payload: the `&str` or
+/// `String` message when present (the common cases — `panic!` with a
+/// literal or a formatted message), a fixed fallback otherwise. The pool
+/// preserves panic identity by re-raising the original payload
+/// (`resume_unwind`); callers that must *report* a panic instead of
+/// re-raising it — the coordinator's worker supervisor building structured
+/// `WorkerCrashed` errors — extract the message with this.
+// alloc-ok(fn): cold path — runs only after a caught panic.
+pub fn describe_panic(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
 /// Type-erased reference to the in-flight job: a data pointer to the
 /// caller's [`ChunkJob`] plus a monomorphized shim that executes one chunk.
 #[derive(Clone, Copy)]
@@ -416,6 +434,11 @@ impl Pool {
         F: Fn(usize, &mut [f32]) + Sync,
     {
         assert!(chunk > 0, "chunk size must be positive");
+        // Chaos-test fault site (compiles to a constant `false` without the
+        // `fault-injection` feature): an injected panic here unwinds out of
+        // the publisher before any job state is touched, exercising
+        // panic-identity propagation through the callers' containment.
+        let _ = crate::faults::point("parallel.run_chunks.pre");
         let n_chunks = (out.len() + chunk - 1) / chunk;
         if self.threads <= 1 || n_chunks <= 1 || self.busy.swap(true, Ordering::Acquire) {
             for (i, c) in out.chunks_mut(chunk).enumerate() {

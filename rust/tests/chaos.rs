@@ -1,0 +1,306 @@
+//! Chaos suite: deterministic fault schedules against the coordinator.
+//!
+//! Each test installs a seeded [`FaultPlan`] (cargo feature
+//! `fault-injection`) and drives a mixed inference + training workload
+//! through [`EvalService`], then checks the service's liveness and
+//! correctness contract:
+//!
+//! - **exactly-once**: every submitted request observes exactly one
+//!   terminal outcome — a result or a structured [`ServiceError`] — never
+//!   a hung or dropped receiver;
+//! - **bit-identity**: any request that *does* succeed under faults
+//!   returns bits identical to a fault-free run of the same workload
+//!   (scalar backend, `max_batch: 1`, so no batching variance);
+//! - **conservation**: after drain, `completed + errors == submitted`;
+//! - **clean drain**: `shutdown()` returns and answers all stragglers.
+//!
+//! Fault plans mutate process-global state, so every test holds
+//! [`faults::test_serial`]; the CI chaos job additionally runs the suite
+//! with `--test-threads=1`.
+
+#![cfg(feature = "fault-injection")]
+
+use conv_einsum::autodiff::CkptPolicy;
+use conv_einsum::coordinator::{EvalService, InferResult, ServiceConfig, ServiceError, TrainResult};
+use conv_einsum::exec::conv_einsum;
+use conv_einsum::faults::{self, FaultAction, FaultPlan, Schedule};
+use conv_einsum::tnn::{build_layer, Decomp};
+use conv_einsum::util::rng::Rng;
+use conv_einsum::{Backend, Tensor};
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One generated request. Inputs are built deterministically from the
+/// seed so the fault-free and faulted runs see identical payloads.
+enum Op {
+    Eval(Tensor),
+    Adhoc(Vec<Tensor>),
+    Train(Vec<Tensor>, Tensor),
+}
+
+enum Rx {
+    Infer(Receiver<InferResult>),
+    Train(Receiver<TrainResult>),
+}
+
+/// Terminal outcome flattened to comparable bits (`None` = error).
+type Outcome = Result<Vec<u32>, ServiceError>;
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|x| x.to_bits()).collect()
+}
+
+fn layer() -> (String, Vec<Tensor>, Vec<usize>) {
+    let spec = build_layer(Decomp::Cp, 1, 4, 3, 3, 3, 1.0).unwrap();
+    let factors = spec.init_factors(&mut Rng::new(9));
+    // Output shape for the canonical eval input, used to size `dout`.
+    let x = Tensor::zeros(&[1, 3, 6, 6]);
+    let mut inputs = vec![&x];
+    inputs.extend(factors.iter());
+    let y = conv_einsum(&spec.expr, &inputs).unwrap();
+    (spec.expr.clone(), factors, y.shape().to_vec())
+}
+
+fn build_ops(seed: u64, factors: &[Tensor], dout_shape: &[usize]) -> Vec<Op> {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9).wrapping_add(1));
+    (0..24)
+        .map(|_| match rng.below(4) {
+            0 | 1 => Op::Eval(Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng)),
+            2 => Op::Adhoc(vec![
+                Tensor::rand(&[3, 4], -1.0, 1.0, &mut rng),
+                Tensor::rand(&[4, 5], -1.0, 1.0, &mut rng),
+            ]),
+            _ => {
+                let mut tensors = vec![Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng)];
+                tensors.extend(factors.iter().cloned());
+                let dout = Tensor::rand(dout_shape, -1.0, 1.0, &mut rng);
+                Op::Train(tensors, dout)
+            }
+        })
+        .collect()
+}
+
+fn chaos_config() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        // One request per batch + scalar backend: successful faulted
+        // results must be bit-identical to the fault-free run.
+        max_batch: 1,
+        batch_timeout: Duration::from_millis(1),
+        backend: Backend::Scalar,
+        max_retries: 2,
+        request_deadline: Some(Duration::from_secs(5)),
+        ..Default::default()
+    }
+}
+
+/// Submit every op, wait for every terminal outcome, shut down, and check
+/// the conservation law. Panics (fails the test) if any receiver hangs.
+fn run_workload(expr: &str, factors: &[Tensor], ops: &[Op]) -> Vec<Outcome> {
+    let service = EvalService::start(
+        chaos_config(),
+        vec![("cp".to_string(), expr.to_string(), factors.to_vec())],
+    )
+    .unwrap();
+    let h = service.handle();
+    let rxs: Vec<Rx> = ops
+        .iter()
+        .map(|op| match op {
+            Op::Eval(x) => Rx::Infer(h.submit("cp", x.clone()).unwrap()),
+            Op::Adhoc(ts) => Rx::Infer(h.submit_adhoc("ij,jk->ik", ts.clone()).unwrap()),
+            Op::Train(ts, dout) => Rx::Train(
+                h.submit_train(expr, ts.clone(), dout.clone(), CkptPolicy::StoreAll).unwrap(),
+            ),
+        })
+        .collect();
+    let outcomes: Vec<Outcome> = rxs
+        .into_iter()
+        .enumerate()
+        .map(|(i, rx)| match rx {
+            Rx::Infer(rx) => match rx.recv_timeout(RECV_TIMEOUT) {
+                Ok(Ok(y)) => Ok(bits(&y)),
+                Ok(Err(e)) => Err(e),
+                Err(_) => panic!("request {i} never reached a terminal outcome"),
+            },
+            Rx::Train(rx) => match rx.recv_timeout(RECV_TIMEOUT) {
+                Ok(Ok((y, grads))) => {
+                    let mut all = bits(&y);
+                    for g in &grads {
+                        all.extend(bits(g));
+                    }
+                    Ok(all)
+                }
+                Ok(Err(e)) => Err(e),
+                Err(_) => panic!("train request {i} never reached a terminal outcome"),
+            },
+        })
+        .collect();
+    let m = h.metrics();
+    assert_eq!(m.completed + m.errors, m.submitted, "unaccounted terminal outcomes");
+    service.shutdown();
+    outcomes
+}
+
+fn assert_fault_err_is_structured(i: usize, e: &ServiceError) {
+    let allowed = matches!(e, ServiceError::WorkerCrashed(_))
+        || matches!(e, ServiceError::DeadlineExceeded)
+        || matches!(e, ServiceError::Engine(m) if m.contains("injected fault"));
+    assert!(allowed, "request {i}: unexpected error under faults: {e}");
+}
+
+/// The tentpole chaos property: across a grid of fixed seeds, random
+/// panic/delay/error schedules never lose a request, and every success is
+/// bit-identical to the fault-free run.
+#[test]
+fn seeded_fault_schedules_never_lose_a_request() {
+    let _g = faults::test_serial();
+    let (expr, factors, dout_shape) = layer();
+    for seed in [1u64, 7, 23, 101] {
+        let ops = build_ops(seed, &factors, &dout_shape);
+
+        // Reference: identical workload, no faults — everything succeeds.
+        faults::clear();
+        let reference = run_workload(&expr, &factors, &ops);
+        let reference: Vec<Vec<u32>> = reference
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.unwrap_or_else(|e| panic!("fault-free request {i} failed: {e}")))
+            .collect();
+
+        // Faulted: same workload under a seeded schedule of panics,
+        // stalls, and forced errors on every worker site.
+        let train_action = if seed % 2 == 0 {
+            FaultAction::Error
+        } else {
+            FaultAction::Panic
+        };
+        faults::install(
+            FaultPlan::new(seed)
+                .rule("worker.eval.pre", Schedule::Prob(0.25), FaultAction::Panic)
+                .rule(
+                    "worker.adhoc.pre",
+                    Schedule::Prob(0.25),
+                    FaultAction::Delay(Duration::from_millis(3)),
+                )
+                .rule("worker.train.pre", Schedule::Prob(0.25), train_action),
+        );
+        let faulted = run_workload(&expr, &factors, &ops);
+        faults::clear();
+
+        for (i, (got, want)) in faulted.iter().zip(&reference).enumerate() {
+            match got {
+                Ok(b) => assert_eq!(b, want, "seed {seed} req {i}: bits differ vs clean run"),
+                Err(e) => assert_fault_err_is_structured(i, e),
+            }
+        }
+    }
+}
+
+/// Shutdown racing in-flight faulted work still answers every receiver:
+/// flushed-and-served, or a structured `Shutdown` error. Nothing dangles.
+#[test]
+fn shutdown_mid_flight_under_faults_answers_everything() {
+    let _g = faults::test_serial();
+    faults::install(
+        FaultPlan::new(5)
+            .rule(
+                "worker.eval.pre",
+                Schedule::Every(2),
+                FaultAction::Delay(Duration::from_millis(10)),
+            )
+            .rule(
+                "worker.train.pre",
+                Schedule::Every(3),
+                FaultAction::Delay(Duration::from_millis(10)),
+            ),
+    );
+    let (expr, factors, dout_shape) = layer();
+    let service = EvalService::start(
+        ServiceConfig {
+            workers: 2,
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(20),
+            backend: Backend::Scalar,
+            ..Default::default()
+        },
+        vec![("cp".to_string(), expr.clone(), factors.clone())],
+    )
+    .unwrap();
+    let h = service.handle();
+    let mut rng = Rng::new(77);
+    let mut rxs = Vec::new();
+    for _ in 0..16 {
+        let x = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+        rxs.push(Rx::Infer(h.submit("cp", x).unwrap()));
+    }
+    for _ in 0..4 {
+        let mut tensors = vec![Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng)];
+        tensors.extend(factors.iter().cloned());
+        let dout = Tensor::rand(&dout_shape, -1.0, 1.0, &mut rng);
+        rxs.push(Rx::Train(h.submit_train(&expr, tensors, dout, CkptPolicy::StoreAll).unwrap()));
+    }
+    service.shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let terminal_err = |e: ServiceError| {
+            assert_eq!(e, ServiceError::Shutdown, "request {i}: drain failure taxonomy");
+        };
+        match rx {
+            Rx::Infer(rx) => match rx.recv_timeout(RECV_TIMEOUT) {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => terminal_err(e),
+                Err(_) => panic!("request {i} left dangling across shutdown"),
+            },
+            Rx::Train(rx) => match rx.recv_timeout(RECV_TIMEOUT) {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => terminal_err(e),
+                Err(_) => panic!("train request {i} left dangling across shutdown"),
+            },
+        }
+    }
+    let m = h.metrics();
+    assert_eq!(m.completed + m.errors, m.submitted);
+    faults::clear();
+}
+
+/// A deterministic stall longer than the deadline sheds every request
+/// with `DeadlineExceeded` — counted once each, retried never.
+#[test]
+fn deadline_storm_sheds_every_request() {
+    let _g = faults::test_serial();
+    faults::install(FaultPlan::new(3).rule(
+        "worker.eval.pre",
+        Schedule::Every(1),
+        FaultAction::Delay(Duration::from_millis(30)),
+    ));
+    let (expr, factors, _) = layer();
+    let service = EvalService::start(
+        ServiceConfig {
+            workers: 1,
+            request_deadline: Some(Duration::from_millis(5)),
+            backend: Backend::Scalar,
+            ..Default::default()
+        },
+        vec![("cp".to_string(), expr, factors)],
+    )
+    .unwrap();
+    let h = service.handle();
+    let mut rng = Rng::new(13);
+    let rxs: Vec<_> = (0..6)
+        .map(|_| {
+            let x = Tensor::rand(&[1, 3, 6, 6], -1.0, 1.0, &mut rng);
+            h.submit("cp", x).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx
+            .recv_timeout(RECV_TIMEOUT)
+            .unwrap_or_else(|_| panic!("request {i} never answered"));
+        let shed = matches!(r, Err(ServiceError::DeadlineExceeded));
+        assert!(shed, "request {i}: expected a deadline shed");
+    }
+    assert_eq!(h.metrics().deadline_expired, 6);
+    faults::clear();
+    service.shutdown();
+}
