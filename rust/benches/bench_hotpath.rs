@@ -2,7 +2,11 @@
 //! microkernel throughput (GEMM-shaped contraction + conv atom GFLOP/s at
 //! small/medium/large geometries for every runtime-dispatchable kernel
 //! variant, dumped to `BENCH_kernels.json` with the dispatched-vs-portable
-//! large-GEMM speedup and a tiny-K non-regression assertion), executor
+//! large-GEMM speedup and a tiny-K non-regression assertion), the
+//! measured-vs-FLOPs planner sweep (skewed GEMM geometries on the parallel
+//! backend, calibrated through the plan tournament, dumped to
+//! `BENCH_planner.json`; all candidates are asserted bit-identical and the
+//! measured planner must pick the tournament winner), executor
 //! throughput on the two atoms (contraction GFLOP/s, conv atom GFLOP/s),
 //! scalar-vs-parallel backend scaling across 1/2/4/8-thread pools, CP/TT
 //! layer steps under both backends, compiled-vs-uncompiled training steps
@@ -19,20 +23,24 @@
 //!
 //! With `CONV_EINSUM_BENCH_ASSERT_ONLY=1` only the zero-allocation
 //! assertions run (fast; used by the CI release-test job) — inference,
-//! single training steps, and coalesced training batches.
+//! single training steps, coalesced training batches, and measured-plan
+//! replays.
 use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff, TrainSegment};
 use conv_einsum::coordinator::{EvalService, ServiceConfig};
+use conv_einsum::cost::tuning;
 use conv_einsum::einsum::{parse, SizedSpec};
 use conv_einsum::exec::{pairwise, pairwise_with};
 use conv_einsum::kernels::{axpy8, dispatch};
 use conv_einsum::parallel::{default_threads, Pool};
-use conv_einsum::planner::{contract_path, PlanOptions};
+use conv_einsum::planner::{candidate_plans, contract_path, PlanOptions, Strategy};
 use conv_einsum::tnn::{build_layer, Decomp};
+use conv_einsum::tune::{calibrate_expr, CalibrationSpec};
 use conv_einsum::util::json::Json;
 use conv_einsum::util::rng::Rng;
 use conv_einsum::util::timing::bench;
 use conv_einsum::{
-    compile_expr, conv_einsum_with, Backend, ExecOptions, Tensor, TrainWorkspace, Workspace,
+    compile_expr, conv_einsum_with, Backend, CompiledPlan, ExecOptions, Tensor, TrainWorkspace,
+    Workspace,
 };
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
@@ -278,6 +286,63 @@ fn train_batch_zero_alloc_assertions() {
     }
 }
 
+/// Measured-plan zero-allocation assertions: a plan ranked by
+/// `Strategy::Measured` replays through the same compiled engine as an
+/// analytic plan, so its steady state must be just as allocation-free.
+/// A tiny in-process calibration pass seeds real measurements first, so
+/// the compiled plan is genuinely measurement-ranked (and carries a
+/// tuning-generation stamp), not an analytic-fallback plan in disguise.
+fn measured_zero_alloc_assertions() {
+    let mut rng = Rng::new(13);
+    let layer = build_layer(Decomp::Cp, 1, 16, 16, 3, 3, 0.5).unwrap();
+    let factors = layer.init_factors(&mut rng);
+    let xin = Tensor::rand(&layer.input_shape(4, 16, 16), -1.0, 1.0, &mut rng);
+    let mut inputs: Vec<&Tensor> = vec![&xin];
+    inputs.extend(factors.iter());
+    let dims: Vec<Vec<usize>> = inputs.iter().map(|t| t.shape().to_vec()).collect();
+    let spec = CalibrationSpec {
+        top_k: 2,
+        warmup: 1,
+        iters: 2,
+        persist: false,
+        seed: 5,
+    };
+    for backend in [Backend::Scalar, Backend::Parallel { threads: 2 }] {
+        let calib_opts = PlanOptions {
+            backend,
+            ..Default::default()
+        };
+        calibrate_expr(&layer.expr, &dims, &calib_opts, &spec).unwrap();
+        let opts = PlanOptions {
+            strategy: Strategy::Measured { top_k: 2 },
+            backend,
+            ..Default::default()
+        };
+        let compiled = compile_expr(&layer.expr, &dims, &opts).unwrap();
+        assert!(
+            compiled.plan().tuning_generation.is_some(),
+            "measured plan must carry a tuning-generation stamp"
+        );
+        let mut ws = Workspace::new();
+        let mut out = Tensor::zeros(compiled.out_shape());
+        for _ in 0..3 {
+            compiled.run_into(&inputs, &mut ws, &mut out).unwrap();
+        }
+        let a0 = allocs();
+        for _ in 0..50 {
+            compiled.run_into(&inputs, &mut ws, &mut out).unwrap();
+        }
+        let steady = allocs() - a0;
+        assert_eq!(
+            steady, 0,
+            "measured-plan steady state must not allocate \
+             ({backend:?}: {steady} across 50 replays)"
+        );
+        println!("measured-plan zero-alloc OK: {backend:?}");
+    }
+    tuning::global().clear();
+}
+
 /// Per-variant microkernel throughput: the GEMM-shaped contraction and the
 /// conv atom at small/medium/large geometries, once for every kernel
 /// variant the host can run (portable always included), dumped to
@@ -401,6 +466,135 @@ fn kernel_variant_benches(rng: &mut Rng) {
     println!("wrote BENCH_kernels.json\n");
 }
 
+/// Measured-vs-FLOPs planner sweep (`BENCH_planner.json`): skewed GEMMs
+/// where the analytic cost model ties a contraction tree with its mirror
+/// but the parallel backend does not — the canonical orientation splits
+/// the output into `t` parallel row-chunks, so `t` below the pool width
+/// leaves workers idle, while the mirror's `n`-row split stays balanced.
+/// The tournament times both orientations, the measured planner must pick
+/// the tournament winner, and all candidates are *asserted* bit-identical
+/// first (portable kernels are forced, making the mirror exact), so the
+/// wall-clock choice can never change results. Wins are counted and
+/// reported, not asserted: timing noise on a loaded host must not fail
+/// the bench.
+fn planner_measured_benches() {
+    println!("== measured planner: FLOPs-optimal vs measured-cost plans ==");
+    // Portable kernels: every candidate orientation is bit-identical, so
+    // the tournament is a pure scheduling comparison.
+    dispatch::force_variant(Some(dispatch::Variant::Portable));
+    tuning::global().clear();
+    let threads = 4usize;
+    let backend = Backend::Parallel { threads };
+    let geometries: &[(&str, &[&[usize]])] = &[
+        ("ij,jk->ik", &[&[3, 1024], &[1024, 1024]]),
+        ("ij,jk->ik", &[&[2, 1536], &[1536, 768]]),
+        ("ij,jk->ik", &[&[6, 896], &[896, 896]]),
+    ];
+    let spec = CalibrationSpec {
+        top_k: 1,
+        warmup: 2,
+        iters: 9,
+        persist: false,
+        seed: 17,
+    };
+    let mut rows = Vec::new();
+    let mut wins = 0usize;
+    for (expr, dim_slices) in geometries {
+        let dims: Vec<Vec<usize>> = dim_slices.iter().map(|d| d.to_vec()).collect();
+        let opts = PlanOptions {
+            backend,
+            ..Default::default()
+        };
+        // Bit-identity gate: every tournament candidate must agree on the
+        // output exactly before wall-clock is allowed to choose.
+        let sized = SizedSpec::new(parse(expr).unwrap(), dims.clone()).unwrap();
+        let cands = candidate_plans(&sized, &opts, 1).unwrap();
+        assert_eq!(
+            cands.len(),
+            2,
+            "skewed GEMM should offer a canonical tree plus its mirror"
+        );
+        let compiled: Vec<CompiledPlan> = cands
+            .iter()
+            .map(|p| CompiledPlan::compile_arc(Arc::new(p.clone())).unwrap())
+            .collect();
+        let mut rng = Rng::new(17);
+        let probes: Vec<Tensor> = dims
+            .iter()
+            .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+            .collect();
+        let inputs: Vec<&Tensor> = probes.iter().collect();
+        let mut ws = Workspace::new();
+        let mut ref_out = Tensor::zeros(compiled[0].out_shape());
+        compiled[0].run_into(&inputs, &mut ws, &mut ref_out).unwrap();
+        for cp in &compiled[1..] {
+            let mut out = Tensor::zeros(cp.out_shape());
+            cp.run_into(&inputs, &mut ws, &mut out).unwrap();
+            let identical = ref_out
+                .data()
+                .iter()
+                .zip(out.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(
+                identical,
+                "tournament candidates must be bit-identical ({expr} {dims:?})"
+            );
+        }
+        // Tournament: time both orientations, record the measurements,
+        // then let the measured planner rank from the live cache.
+        let rep = calibrate_expr(expr, &dims, &opts, &spec).unwrap();
+        let mopts = PlanOptions {
+            strategy: Strategy::Measured { top_k: 1 },
+            backend,
+            ..Default::default()
+        };
+        let measured = compile_expr(expr, &dims, &mopts).unwrap();
+        assert_eq!(
+            measured.plan().signature(),
+            rep.candidates[rep.best].signature,
+            "measured planner must pick the tournament winner"
+        );
+        let flops_secs = rep.candidates[0].fwd_secs;
+        let measured_secs = rep.candidates[rep.best].fwd_secs;
+        let speedup = flops_secs / measured_secs;
+        if rep.best != 0 {
+            wins += 1;
+        }
+        println!(
+            "  {expr} {dims:?}: flops-best {flops_secs:.3e}s, measured \
+             {measured_secs:.3e}s ({speedup:.2}x, winner #{})",
+            rep.best
+        );
+        rows.push(Json::obj(vec![
+            ("expr", Json::str(*expr)),
+            ("dims", Json::str(format!("{dims:?}"))),
+            ("flops_best_secs", Json::num(flops_secs)),
+            ("measured_secs", Json::num(measured_secs)),
+            ("speedup", Json::num(speedup)),
+            ("winner", Json::num(rep.best as f64)),
+            (
+                "winner_signature",
+                Json::str(&rep.candidates[rep.best].signature),
+            ),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+    }
+    let total = geometries.len();
+    println!("  -> measured plan beat the FLOPs-optimal plan on {wins}/{total} geometries");
+    let out_report = Json::obj(vec![
+        ("bench", Json::str("planner_measured")),
+        ("backend", Json::str(format!("parallel-{threads}"))),
+        ("kernel_variant", Json::str("portable")),
+        ("measured_wins", Json::num(wins as f64)),
+        ("geometries_total", Json::num(total as f64)),
+        ("geometries", Json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_planner.json", out_report.encode_pretty()).ok();
+    println!("wrote BENCH_planner.json\n");
+    tuning::global().clear();
+    dispatch::force_variant(None);
+}
+
 fn main() {
     // CI fast path: only the zero-allocation assertions (inference +
     // training + coalesced training batches), then exit — used by the
@@ -409,7 +603,11 @@ fn main() {
         inference_zero_alloc_assertions();
         train_zero_alloc_assertions();
         train_batch_zero_alloc_assertions();
-        println!("zero-allocation assertions passed (inference + training + batched training)");
+        measured_zero_alloc_assertions();
+        println!(
+            "zero-allocation assertions passed \
+             (inference + training + batched training + measured plans)"
+        );
         return;
     }
 
@@ -418,6 +616,12 @@ fn main() {
     // Per-variant microkernel section first: it forces variants globally
     // and restores auto-detection before any other section compiles plans.
     kernel_variant_benches(&mut rng);
+
+    // Measured-planner tournament sweep: forces the portable variant and
+    // seeds (then clears) the global tuning cache, restoring both before
+    // the sections below compile plans.
+    planner_measured_benches();
+    measured_zero_alloc_assertions();
 
     // contraction atom: batched matmul via "gts,gns->gtn"
     let (g, t, n, s) = (4usize, 96usize, 96usize, 96usize);

@@ -117,8 +117,9 @@ use crate::autodiff::CkptPolicy;
 use crate::einsum::{parse, SizedSpec};
 use crate::exec::{Backend, CompiledPlan, PlanCache, TrainWorkspace};
 use crate::parallel::Pool;
-use crate::planner::Strategy;
+use crate::planner::{PlanOptions, Strategy};
 use crate::tensor::{concat_into, Tensor};
+use crate::tune::{calibrate_expr, CalibrationReport, CalibrationSpec};
 use anyhow::{anyhow, Result};
 use batcher::{
     dispatch, tensor_bytes, Batcher, LayerEntry, Pending, PendingRequest, PushOutcome, ReadyBatch,
@@ -127,7 +128,7 @@ use batcher::{
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -577,6 +578,11 @@ pub struct EvalService {
     router: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
+    /// `(name, expr, factor shapes)` of every registered layer, kept on
+    /// the service side (the registry itself moves into the router) so
+    /// [`EvalService::calibrate_registered`] can rebuild calibration
+    /// geometries without a router round-trip.
+    calib_layers: Vec<(String, String, Vec<Vec<usize>>)>,
 }
 
 /// An inference batch dispatched to workers.
@@ -689,6 +695,19 @@ impl EvalService {
         // training steps).
         let cache = Arc::new(PlanCache::new());
 
+        // Layer geometries survive on the service side for background
+        // calibration; the registry itself moves into the router below.
+        let calib_layers: Vec<(String, String, Vec<Vec<usize>>)> = layers
+            .iter()
+            .map(|(name, expr, factors)| {
+                (
+                    name.clone(),
+                    expr.clone(),
+                    factors.iter().map(|f| f.shape().to_vec()).collect(),
+                )
+            })
+            .collect();
+
         let mut registry: HashMap<String, LayerEntry> = HashMap::new();
         for (name, expr, factors) in layers {
             parse(&expr).map_err(|e| anyhow!("layer '{name}': {e}"))?;
@@ -742,11 +761,71 @@ impl EvalService {
             router: Some(router),
             workers,
             stop,
+            calib_layers,
         })
     }
 
     pub fn handle(&self) -> ServiceHandle {
         self.handle.clone()
+    }
+
+    /// Opt-in background calibration over the registered layers: for each
+    /// `(layer name, example input shape)` pair, run the measured-cost
+    /// plan tournament ([`crate::tune::calibrate_expr`]) for that layer's
+    /// expression at `[input shape, factor shapes...]` on this service's
+    /// configured backend, recording measurements into the global tuning
+    /// cache as each layer finishes.
+    ///
+    /// The pass runs on its own thread — serving traffic continues
+    /// untouched, though calibration replays do compete for the shared
+    /// worker pool, so schedule it during warm-up or off-peak. Outcomes
+    /// stream per layer on the returned channel (an unknown layer name
+    /// reports an error rather than being skipped silently); drop the
+    /// receiver to let the pass finish unobserved. Once a layer's
+    /// measurements land, `Strategy::Measured` compiles for that geometry
+    /// rank by wall-clock, and previously compiled measured plans go
+    /// stale (their tuning-generation stamp no longer verifies).
+    pub fn calibrate_registered(
+        &self,
+        examples: &[(String, Vec<usize>)],
+        spec: CalibrationSpec,
+    ) -> Receiver<(String, std::result::Result<CalibrationReport, String>)> {
+        let (tx, rx) = channel();
+        let jobs: Vec<(String, std::result::Result<(String, Vec<Vec<usize>>), String>)> = examples
+            .iter()
+            .map(|(name, xshape)| {
+                let job = match self.calib_layers.iter().find(|(n, _, _)| n == name) {
+                    Some((_, expr, factor_dims)) => {
+                        let mut dims = Vec::with_capacity(1 + factor_dims.len());
+                        dims.push(xshape.clone());
+                        dims.extend(factor_dims.iter().cloned());
+                        Ok((expr.clone(), dims))
+                    }
+                    None => Err(format!("layer '{name}' is not registered")),
+                };
+                (name.clone(), job)
+            })
+            .collect();
+        let opts = PlanOptions {
+            strategy: Strategy::Measured { top_k: spec.top_k },
+            backend: self.handle.cfg.backend,
+            ..PlanOptions::default()
+        };
+        std::thread::Builder::new()
+            .name("conv-einsum-calibrate".to_string())
+            .spawn(move || {
+                for (name, job) in jobs {
+                    let outcome = match job {
+                        Ok((expr, dims)) => calibrate_expr(&expr, &dims, &opts, &spec),
+                        Err(e) => Err(e),
+                    };
+                    // A dropped receiver doesn't stop the pass: the cache
+                    // still benefits, reporting just goes unobserved.
+                    let _ = tx.send((name, outcome));
+                }
+            })
+            .expect("spawn calibrator");
+        rx
     }
 
     /// Graceful shutdown: stop admitting, flush and answer everything

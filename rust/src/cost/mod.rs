@@ -25,8 +25,21 @@
 //!
 //! which reproduces the paper's standard-conv2d example
 //! (`cost(f)=O(BHWXYTS)`, `cost(g1)=O(BHWX'Y'TS)`, `cost(g2)=O(BXYX'Y'TS)`).
+//!
+//! # Autotuning
+//!
+//! Analytic multiply counts are the planner's *default* ranking, not its
+//! only one. The [`tuning`] submodule holds the persistent measured-cost
+//! cache behind `Strategy::Measured`: calibration times candidate plans
+//! on the live pool, records wall-clock per execution context
+//! (expression, dims, backend, pool width, kernel variant, mode), and
+//! [`tuning::blend_scores`] folds those seconds back into plan ranking —
+//! falling back to the analytic FLOPs here whenever a context has no
+//! measurements.
 
 use crate::einsum::{ConvKind, SizedSpec};
+
+pub mod tuning;
 
 /// The merged dimension groups of one pairwise operation — everything the
 /// cost model needs to price it.

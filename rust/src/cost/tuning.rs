@@ -1,0 +1,655 @@
+//! Persistent measured-cost tuning cache backing [`Strategy::Measured`].
+//!
+//! The analytic tnn-cost model in [`crate::cost`] ranks candidate
+//! contraction trees by multiply count, but FLOPs-optimal is not always
+//! wall-clock-optimal under the parallel backend and SIMD-dispatched
+//! kernels: parallelizable rows and packing-eligible shapes differ per
+//! tree. This module closes the loop. Calibration
+//! ([`crate::tune::calibrate_expr`]) times the top-k candidate plans of a
+//! geometry on the live worker pool and records each plan's wall-clock
+//! here, keyed by the full execution context — expression, input dims,
+//! backend, resolved pool width, selected kernel variant, and
+//! training/inference mode — so a measurement never leaks across a
+//! context where it would not reproduce. Planning with
+//! [`Strategy::Measured`] then blends the recorded seconds back into plan
+//! ranking via [`blend_scores`]: measured candidates score by their
+//! median wall-clock, unmeasured siblings extrapolate through the
+//! context's median seconds-per-FLOP ratio, and a context with no
+//! measurements at all falls back to analytic FLOPs unchanged.
+//!
+//! # Persistence
+//!
+//! The cache serializes through [`crate::util::json`] in the same
+//! artifact shape as the `BENCH_*.json` files. When the
+//! `CONV_EINSUM_TUNING_CACHE` environment variable ([`TUNING_CACHE_ENV`])
+//! names a path, the process-global cache ([`global`]) loads it at first
+//! access and calibration passes save back to it. A missing, truncated,
+//! or otherwise corrupted cache file never fails planning: loading
+//! degrades to an empty cache (analytic-FLOPs behavior) and reports the
+//! parse error to the caller of [`TuningCache::load_path`] only.
+//!
+//! # Generations and staleness
+//!
+//! Every mutation of the *global* cache (recording a measurement, loading
+//! a file, installing a GEMM tuning) bumps a process-wide generation
+//! counter ([`generation`]). Plans selected by measurement carry the
+//! generation they were scored under
+//! ([`crate::planner::Plan::tuning_generation`]);
+//! `CompiledPlan::verify()` rejects a measured plan whose stamp no longer
+//! matches, and the `PlanCache` key includes the generation so stale
+//! measured plans age out instead of being served. Local
+//! [`TuningCache`] instances (tests, offline analysis) never touch the
+//! generation.
+//!
+//! # Per-geometry GEMM tunings
+//!
+//! Besides plan timings the cache carries per-geometry GEMM blocking
+//! overrides ([`GemmTuning`]): tuned `kc` depth and packed-path
+//! engagement threshold for a specific `(m, n, k)` contraction geometry.
+//! Loading the global cache installs them into
+//! [`crate::kernels::dispatch`], where kernel resolution
+//! ([`crate::kernels::dispatch::resolved_gemm`]) consults them per
+//! compiled step; static defaults apply everywhere else.
+//!
+//! [`Strategy::Measured`]: crate::planner::Strategy::Measured
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::kernels::dispatch;
+use crate::util::json::{self, Json};
+
+/// Environment variable naming the persistent tuning-cache file consulted
+/// by [`global`] at first access and written by calibration passes.
+pub const TUNING_CACHE_ENV: &str = "CONV_EINSUM_TUNING_CACHE";
+
+/// Artifact identifier stored in the cache file's `"kind"` field.
+pub const CACHE_KIND: &str = "conv_einsum_tuning_cache";
+
+/// Current cache-file format version.
+pub const CACHE_VERSION: u64 = 1;
+
+/// Process-wide tuning generation. Starts at 1 so a stamp of 0 can mean
+/// "not a measured plan" in `PlanCache` keys.
+static GENERATION: AtomicU64 = AtomicU64::new(1);
+
+/// The current tuning generation: bumped whenever the global cache's
+/// contents change. Measured plans are stamped with this value and
+/// rejected by `CompiledPlan::verify()` once it moves on.
+pub fn generation() -> u64 {
+    GENERATION.load(Ordering::SeqCst)
+}
+
+fn bump_generation() {
+    GENERATION.fetch_add(1, Ordering::SeqCst);
+}
+
+/// One calibration measurement for a single candidate plan in a single
+/// execution context.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    /// Median wall-clock of one forward replay, seconds.
+    pub fwd_secs: f64,
+    /// Median wall-clock of one fused train step (forward + backward),
+    /// seconds; `None` when calibration only timed inference.
+    pub train_secs: Option<f64>,
+    /// The plan's analytic cost (training-mode multiplies when the plan
+    /// was built for training), kept so seconds-per-FLOP extrapolation
+    /// has a denominator.
+    pub cost: f64,
+}
+
+impl Measurement {
+    /// The seconds relevant to a plan of the given mode: train-step time
+    /// when available and training, forward time otherwise.
+    pub fn secs(&self, training: bool) -> f64 {
+        match (training, self.train_secs) {
+            (true, Some(t)) => t,
+            _ => self.fwd_secs,
+        }
+    }
+}
+
+/// The execution context a measurement is valid for. Any change of pool
+/// width, backend, kernel variant, or mode lands in a different context,
+/// which is how measured plans re-score instead of replaying stale data.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CalibKey {
+    /// Canonical rendered expression.
+    pub expr: String,
+    /// Input dims, in input order.
+    pub dims: Vec<Vec<usize>>,
+    /// Backend family name (`"scalar"` / `"parallel"`).
+    pub backend: String,
+    /// Resolved worker count (1 for scalar; `Parallel { threads: 0 }`
+    /// resolves through [`crate::parallel::default_threads`]).
+    pub threads: usize,
+    /// Selected kernel variant name at key-construction time.
+    pub variant: String,
+    /// Whether the measurements describe train steps.
+    pub training: bool,
+}
+
+impl CalibKey {
+    /// Build the key for the *current* process state: resolves the live
+    /// pool width and the selected kernel variant.
+    pub fn current(
+        expr: &str,
+        dims: &[Vec<usize>],
+        backend: crate::exec::Backend,
+        training: bool,
+    ) -> CalibKey {
+        let (backend_name, threads) = match backend {
+            crate::exec::Backend::Scalar => ("scalar", 1),
+            crate::exec::Backend::Parallel { threads: 0 } => {
+                ("parallel", crate::parallel::default_threads())
+            }
+            crate::exec::Backend::Parallel { threads } => ("parallel", threads),
+        };
+        CalibKey {
+            expr: expr.to_string(),
+            dims: dims.to_vec(),
+            backend: backend_name.to_string(),
+            threads,
+            variant: dispatch::selected().variant.name().to_string(),
+            training,
+        }
+    }
+
+    /// Stable string id used as the context key in the cache (and in the
+    /// JSON artifact).
+    pub fn context_id(&self) -> String {
+        let dims = self
+            .dims
+            .iter()
+            .map(|d| {
+                d.iter()
+                    .map(|x| x.to_string())
+                    .collect::<Vec<_>>()
+                    .join("x")
+            })
+            .collect::<Vec<_>>()
+            .join(";");
+        format!(
+            "{} | dims={} | backend={} | threads={} | variant={} | train={}",
+            self.expr, dims, self.backend, self.threads, self.variant, self.training
+        )
+    }
+}
+
+/// A per-geometry GEMM blocking override: for contractions of logical
+/// shape `m × k · k × n`, use cache-block depth `kc` and engage the packed
+/// path at `min_flops` multiplies instead of the static defaults.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmTuning {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Tuned cache-block depth (clamped to ≥ 1 on install).
+    pub kc: usize,
+    /// Tuned packed-path engagement threshold (`m·n·k` multiplies).
+    pub min_flops: usize,
+}
+
+impl GemmTuning {
+    fn to_dispatch(self) -> ((usize, usize, usize), dispatch::TunedGemm) {
+        (
+            (self.m, self.n, self.k),
+            dispatch::TunedGemm {
+                kc: self.kc,
+                min_flops: self.min_flops,
+            },
+        )
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    /// context id → (plan signature → measurement).
+    contexts: HashMap<String, HashMap<String, Measurement>>,
+    /// Per-geometry GEMM blocking overrides.
+    gemm: Vec<GemmTuning>,
+}
+
+/// Measured-cost cache: plan wall-clock measurements grouped by execution
+/// context, plus per-geometry GEMM tunings. The process-global instance
+/// ([`global`]) is the one consulted by planning; constructing local
+/// instances is cheap and never touches global state.
+#[derive(Default)]
+pub struct TuningCache {
+    inner: Mutex<Inner>,
+}
+
+static GLOBAL: OnceLock<TuningCache> = OnceLock::new();
+static GLOBAL_LOADED: OnceLock<()> = OnceLock::new();
+
+/// The process-global tuning cache. On first access, loads the file named
+/// by [`TUNING_CACHE_ENV`] if set; a missing or corrupted file silently
+/// yields an empty cache (planning falls back to analytic FLOPs).
+pub fn global() -> &'static TuningCache {
+    let cache = GLOBAL.get_or_init(TuningCache::default);
+    GLOBAL_LOADED.get_or_init(|| {
+        if let Some(path) = env_path() {
+            let _ = cache.load_path(&path);
+        }
+    });
+    cache
+}
+
+/// The configured persistent cache path, if any.
+pub fn env_path() -> Option<String> {
+    match std::env::var(TUNING_CACHE_ENV) {
+        Ok(p) if !p.trim().is_empty() => Some(p),
+        _ => None,
+    }
+}
+
+impl TuningCache {
+    pub fn new() -> TuningCache {
+        TuningCache::default()
+    }
+
+    /// Whether this is the process-global instance (only the global
+    /// instance bumps the tuning generation or installs GEMM tunings
+    /// into the kernel dispatcher).
+    fn is_global(&self) -> bool {
+        GLOBAL.get().is_some_and(|g| std::ptr::eq(g, self))
+    }
+
+    /// Record one candidate measurement under a context.
+    pub fn record(&self, ctx_id: &str, signature: &str, m: Measurement) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner
+                .contexts
+                .entry(ctx_id.to_string())
+                .or_default()
+                .insert(signature.to_string(), m);
+        }
+        if self.is_global() {
+            bump_generation();
+        }
+    }
+
+    /// All measurements recorded under a context (empty on miss).
+    pub fn measurements(&self, ctx_id: &str) -> HashMap<String, Measurement> {
+        let inner = self.inner.lock().unwrap();
+        inner.contexts.get(ctx_id).cloned().unwrap_or_default()
+    }
+
+    /// One measurement, if present.
+    pub fn lookup(&self, ctx_id: &str, signature: &str) -> Option<Measurement> {
+        let inner = self.inner.lock().unwrap();
+        inner.contexts.get(ctx_id)?.get(signature).copied()
+    }
+
+    /// Number of contexts with at least one measurement.
+    pub fn context_count(&self) -> usize {
+        self.inner.lock().unwrap().contexts.len()
+    }
+
+    /// Total measurement count across contexts.
+    pub fn len(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.contexts.values().map(|c| c.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0 && self.inner.lock().unwrap().gemm.is_empty()
+    }
+
+    /// Install (or replace) a per-geometry GEMM tuning. On the global
+    /// cache this also pushes the tuning into the kernel dispatcher and
+    /// bumps the generation (plans compiled under the old blocking are
+    /// stale: engagement thresholds affect which kernel path runs).
+    pub fn set_gemm_tuning(&self, t: GemmTuning) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            match inner
+                .gemm
+                .iter_mut()
+                .find(|g| (g.m, g.n, g.k) == (t.m, t.n, t.k))
+            {
+                Some(slot) => *slot = t,
+                None => inner.gemm.push(t),
+            }
+        }
+        if self.is_global() {
+            dispatch::set_gemm_tunings(&[t.to_dispatch()]);
+            bump_generation();
+        }
+    }
+
+    /// The recorded GEMM tunings.
+    pub fn gemm_tunings(&self) -> Vec<GemmTuning> {
+        self.inner.lock().unwrap().gemm.clone()
+    }
+
+    /// Drop all contents. The global cache also clears the dispatcher's
+    /// tuned-geometry registry and bumps the generation.
+    pub fn clear(&self) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.contexts.clear();
+            inner.gemm.clear();
+        }
+        if self.is_global() {
+            dispatch::clear_gemm_tunings();
+            bump_generation();
+        }
+    }
+
+    /// Serialize to the `BENCH_*.json`-shaped artifact.
+    pub fn to_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let mut contexts = BTreeMap::new();
+        for (ctx, sigs) in &inner.contexts {
+            let mut entries = BTreeMap::new();
+            for (sig, m) in sigs {
+                entries.insert(
+                    sig.clone(),
+                    Json::obj(vec![
+                        ("fwd_secs", Json::num(m.fwd_secs)),
+                        (
+                            "train_secs",
+                            m.train_secs.map(Json::num).unwrap_or(Json::Null),
+                        ),
+                        ("cost", Json::num(m.cost)),
+                    ]),
+                );
+            }
+            contexts.insert(ctx.clone(), Json::Obj(entries));
+        }
+        let gemm: Vec<Json> = inner
+            .gemm
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("m", Json::num(t.m as f64)),
+                    ("n", Json::num(t.n as f64)),
+                    ("k", Json::num(t.k as f64)),
+                    ("kc", Json::num(t.kc as f64)),
+                    ("min_flops", Json::num(t.min_flops as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("kind", Json::str(CACHE_KIND)),
+            ("version", Json::num(CACHE_VERSION as f64)),
+            ("contexts", Json::Obj(contexts)),
+            ("gemm", Json::Arr(gemm)),
+        ])
+    }
+
+    /// Merge a parsed artifact into this cache. Tolerant of partially
+    /// malformed entries (they are skipped); errors only on a value that
+    /// is not a cache object at all. Returns the number of measurements
+    /// merged. On the global cache, installs GEMM tunings into the
+    /// dispatcher and bumps the generation once.
+    pub fn load_json(&self, v: &Json) -> Result<usize, String> {
+        let obj = v.as_obj().ok_or("tuning cache: top level is not an object")?;
+        if let Some(kind) = obj.get("kind").and_then(|k| k.as_str()) {
+            if kind != CACHE_KIND {
+                return Err(format!("tuning cache: unexpected kind '{kind}'"));
+            }
+        }
+        let mut loaded = 0usize;
+        let mut tunings: Vec<GemmTuning> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(contexts) = obj.get("contexts").and_then(|c| c.as_obj()) {
+                for (ctx, sigs) in contexts {
+                    let Some(sigs) = sigs.as_obj() else { continue };
+                    for (sig, entry) in sigs {
+                        let (Some(fwd), Some(cost)) = (
+                            entry.get("fwd_secs").and_then(|x| x.as_f64()),
+                            entry.get("cost").and_then(|x| x.as_f64()),
+                        ) else {
+                            continue; // malformed entry: skip, don't fail
+                        };
+                        let train_secs = entry.get("train_secs").and_then(|x| x.as_f64());
+                        inner.contexts.entry(ctx.clone()).or_default().insert(
+                            sig.clone(),
+                            Measurement {
+                                fwd_secs: fwd,
+                                train_secs,
+                                cost,
+                            },
+                        );
+                        loaded += 1;
+                    }
+                }
+            }
+            if let Some(gemm) = obj.get("gemm").and_then(|g| g.as_arr()) {
+                for entry in gemm {
+                    let fields = ["m", "n", "k", "kc", "min_flops"]
+                        .map(|f| entry.get(f).and_then(|x| x.as_usize()));
+                    let [Some(m), Some(n), Some(k), Some(kc), Some(min_flops)] = fields else {
+                        continue; // malformed entry: skip
+                    };
+                    let t = GemmTuning {
+                        m,
+                        n,
+                        k,
+                        kc,
+                        min_flops,
+                    };
+                    match inner
+                        .gemm
+                        .iter_mut()
+                        .find(|g| (g.m, g.n, g.k) == (t.m, t.n, t.k))
+                    {
+                        Some(slot) => *slot = t,
+                        None => inner.gemm.push(t),
+                    }
+                    tunings.push(t);
+                }
+            }
+        }
+        if self.is_global() {
+            if !tunings.is_empty() {
+                let converted: Vec<_> = tunings.iter().map(|t| t.to_dispatch()).collect();
+                dispatch::set_gemm_tunings(&converted);
+            }
+            if loaded > 0 || !tunings.is_empty() {
+                bump_generation();
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Load a cache file. A missing or unparseable file returns `Err` and
+    /// leaves the cache unchanged — callers fall back to analytic FLOPs.
+    pub fn load_path(&self, path: &str) -> Result<usize, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("tuning cache: cannot read {path}: {e}"))?;
+        let v = json::parse(&text).map_err(|e| format!("tuning cache: {path}: {e}"))?;
+        self.load_json(&v)
+    }
+
+    /// Write the cache artifact to a file (pretty-printed, deterministic
+    /// key order).
+    pub fn save_to(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_json().encode_pretty())
+            .map_err(|e| format!("tuning cache: cannot write {path}: {e}"))
+    }
+}
+
+/// Blend measured data into candidate ranking.
+///
+/// `candidates` carries `(signature, analytic cost)` per candidate plan,
+/// FLOPs-ascending with the canonical FLOPs-best first. Returns one score
+/// per candidate, lower is better:
+///
+/// * no measurement in this context at all → the analytic costs,
+///   unchanged (pure-FLOPs fallback, so ranking is exactly the analytic
+///   ranking);
+/// * otherwise → seconds: a measured candidate scores its recorded
+///   wall-clock, an unmeasured one extrapolates `cost × median
+///   seconds-per-FLOP` over the measured siblings.
+pub fn blend_scores(
+    candidates: &[(String, f64)],
+    measured: &HashMap<String, Measurement>,
+    training: bool,
+) -> Vec<f64> {
+    let mut ratios: Vec<f64> = candidates
+        .iter()
+        .filter_map(|(sig, cost)| measured.get(sig).map(|m| m.secs(training) / cost.max(1.0)))
+        .collect();
+    if ratios.is_empty() {
+        return candidates.iter().map(|(_, c)| *c).collect();
+    }
+    ratios.sort_by(|a, b| a.total_cmp(b));
+    let secs_per_flop = ratios[ratios.len() / 2];
+    candidates
+        .iter()
+        .map(|(sig, cost)| match measured.get(sig) {
+            Some(m) => m.secs(training),
+            None => cost.max(1.0) * secs_per_flop,
+        })
+        .collect()
+}
+
+/// Index of the best (lowest) score; ties resolve to the earliest
+/// candidate, which keeps selection deterministic and biased toward the
+/// FLOPs-best tree.
+pub fn select_index(scores: &[f64]) -> usize {
+    let mut best = 0usize;
+    for (i, s) in scores.iter().enumerate().skip(1) {
+        if s.total_cmp(&scores[best]) == std::cmp::Ordering::Less {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(fwd: f64, train: Option<f64>, cost: f64) -> Measurement {
+        Measurement {
+            fwd_secs: fwd,
+            train_secs: train,
+            cost,
+        }
+    }
+
+    #[test]
+    fn blend_empty_context_is_pure_flops() {
+        let cands = vec![("a".to_string(), 100.0), ("b".to_string(), 200.0)];
+        let scores = blend_scores(&cands, &HashMap::new(), false);
+        assert_eq!(scores, vec![100.0, 200.0]);
+        assert_eq!(select_index(&scores), 0);
+    }
+
+    #[test]
+    fn blend_prefers_measured_wall_clock_over_flops() {
+        // FLOPs say `a` (cheaper); measurement says `b` is faster.
+        let cands = vec![("a".to_string(), 100.0), ("b".to_string(), 100.0)];
+        let mut measured = HashMap::new();
+        measured.insert("a".to_string(), m(2e-3, None, 100.0));
+        measured.insert("b".to_string(), m(1e-3, None, 100.0));
+        let scores = blend_scores(&cands, &measured, false);
+        assert_eq!(select_index(&scores), 1);
+    }
+
+    #[test]
+    fn blend_extrapolates_unmeasured_by_secs_per_flop() {
+        let cands = vec![("a".to_string(), 100.0), ("b".to_string(), 400.0)];
+        let mut measured = HashMap::new();
+        measured.insert("a".to_string(), m(1e-3, None, 100.0)); // 1e-5 s/flop
+        let scores = blend_scores(&cands, &measured, false);
+        assert!((scores[0] - 1e-3).abs() < 1e-12);
+        assert!((scores[1] - 4e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blend_uses_train_secs_in_training_mode() {
+        let cands = vec![("a".to_string(), 100.0), ("b".to_string(), 100.0)];
+        let mut measured = HashMap::new();
+        // Forward prefers `a`, train step prefers `b`.
+        measured.insert("a".to_string(), m(1e-3, Some(9e-3), 100.0));
+        measured.insert("b".to_string(), m(2e-3, Some(3e-3), 100.0));
+        assert_eq!(select_index(&blend_scores(&cands, &measured, false)), 0);
+        assert_eq!(select_index(&blend_scores(&cands, &measured, true)), 1);
+    }
+
+    #[test]
+    fn select_index_ties_break_to_first() {
+        assert_eq!(select_index(&[1.0, 1.0, 0.5, 0.5]), 2);
+        assert_eq!(select_index(&[1.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn calib_key_resolves_scalar_threads_to_one() {
+        let k = CalibKey::current(
+            "ij,jk->ik",
+            &[vec![2, 3], vec![3, 4]],
+            crate::exec::Backend::Scalar,
+            false,
+        );
+        assert_eq!(k.threads, 1);
+        assert!(k.context_id().contains("backend=scalar"));
+        assert!(k.context_id().contains("dims=2x3;3x4"));
+    }
+
+    #[test]
+    fn local_cache_round_trips_and_never_touches_generation() {
+        let g0 = generation();
+        let cache = TuningCache::new();
+        cache.record("ctx", "sig-a", m(1e-3, Some(3e-3), 42.0));
+        cache.record("ctx", "sig-b", m(2e-3, None, 84.0));
+        cache.set_gemm_tuning(GemmTuning {
+            m: 8,
+            n: 512,
+            k: 256,
+            kc: 128,
+            min_flops: 1 << 12,
+        });
+        let text = cache.to_json().encode_pretty();
+        let back = TuningCache::new();
+        let n = back.load_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(back.lookup("ctx", "sig-a"), cache.lookup("ctx", "sig-a"));
+        assert_eq!(back.lookup("ctx", "sig-b"), cache.lookup("ctx", "sig-b"));
+        assert_eq!(back.gemm_tunings(), cache.gemm_tunings());
+        assert_eq!(generation(), g0, "local caches must not bump the generation");
+    }
+
+    #[test]
+    fn corrupted_artifacts_are_rejected_without_panicking() {
+        let cache = TuningCache::new();
+        assert!(cache.load_json(&Json::Num(3.0)).is_err());
+        assert!(cache
+            .load_json(&Json::obj(vec![("kind", Json::str("other"))]))
+            .is_err());
+        assert!(cache.load_path("/nonexistent/tuning.json").is_err());
+        assert!(cache.is_empty());
+        // Malformed sub-entries are skipped, well-formed ones load.
+        let mixed = Json::obj(vec![
+            ("kind", Json::str(CACHE_KIND)),
+            (
+                "contexts",
+                Json::obj(vec![(
+                    "ctx",
+                    Json::obj(vec![
+                        ("bad", Json::obj(vec![("fwd_secs", Json::str("oops"))])),
+                        (
+                            "good",
+                            Json::obj(vec![
+                                ("fwd_secs", Json::num(1e-3)),
+                                ("cost", Json::num(10.0)),
+                            ]),
+                        ),
+                    ]),
+                )]),
+            ),
+            ("gemm", Json::arr(vec![Json::str("not-a-tuning")])),
+        ]);
+        assert_eq!(cache.load_json(&mixed).unwrap(), 1);
+        assert!(cache.lookup("ctx", "good").is_some());
+        assert!(cache.lookup("ctx", "bad").is_none());
+    }
+}

@@ -357,6 +357,12 @@ pub struct AtomKernel {
     combined: std::sync::OnceLock<Vec<(u32, u32, u32)>>,
     step: StepKernel,
     table: &'static KernelTable,
+    /// GEMM parameters resolved for this atom's forward geometry when the
+    /// holder was built: the table's static defaults with any per-geometry
+    /// tuning from [`dispatch::resolved_gemm`] applied. `None` for conv
+    /// atoms and GEMM-less variants. Embedding the resolved copy keeps
+    /// replays free of registry lookups.
+    gemm: Option<GemmParams>,
     /// [`crate::kernels::ACCUM_ORDER_VERSION`] captured when this holder
     /// was built; [`crate::exec::CompiledPlan::verify`] checks it so stale
     /// compiled steps cannot silently mix accumulation orders.
@@ -385,6 +391,12 @@ impl AtomKernel {
     /// accumulation order than it was pinned to.
     pub fn variant(&self) -> Variant {
         self.table.variant
+    }
+
+    /// The GEMM parameters resolved for this atom (static defaults or the
+    /// per-geometry tuned override captured at build time).
+    pub fn gemm(&self) -> Option<GemmParams> {
+        self.gemm
     }
 
     /// Forward tables (head triples + last-axis runs); conv atoms only.
@@ -436,12 +448,14 @@ impl Atom {
     /// `C(t×n) += A(t×s)·B(n×s)ᵀ`, backward `da(t×s) += D(t×n)·B(n×s)` and
     /// `db(n×s) += Dᵀ(n×t)·A(t×s)` — counting only orientations whose shape
     /// actually engages the packed path. The `+ LANES` term bounds the
-    /// microtile row rounding for any `mr <= LANES`.
-    pub fn pack_lens(&self, table: &KernelTable) -> (usize, usize) {
+    /// microtile row rounding for any `mr <= LANES`. Uses the holder's
+    /// *resolved* GEMM parameters, so tuned per-geometry `kc` / engagement
+    /// thresholds size the scratch consistently with execution.
+    pub fn pack_lens(&self, kernel: &AtomKernel) -> (usize, usize) {
         if !self.conv.is_empty() {
             return (0, 0);
         }
-        let gp = match table.gemm {
+        let gp = match kernel.gemm {
             Some(gp) => gp,
             None => return (0, 0),
         };
@@ -473,11 +487,17 @@ impl Atom {
     /// Create the holder against an explicit microkernel table (per-variant
     /// test/bench plumbing; normal callers use [`Atom::kernel`]).
     pub fn kernel_for(&self, table: &'static KernelTable) -> AtomKernel {
+        let gemm = if self.conv.is_empty() {
+            dispatch::resolved_gemm(table, self.t, self.n, self.s)
+        } else {
+            None
+        };
         AtomKernel {
             fwd: std::sync::OnceLock::new(),
             combined: std::sync::OnceLock::new(),
             step: self.select_kernel(),
             table,
+            gemm,
             order_version: crate::kernels::ACCUM_ORDER_VERSION,
         }
     }
@@ -580,7 +600,7 @@ impl Atom {
     /// The auto-backend work threshold for this atom under `kernel`'s
     /// variant (see [`AUTO_PARALLEL_MIN_WORK`] / the GEMM-specific bar).
     fn auto_parallel_min_work(&self, kernel: &AtomKernel) -> usize {
-        if self.conv.is_empty() && kernel.table.gemm.is_some() {
+        if self.conv.is_empty() && kernel.gemm.is_some() {
             AUTO_PARALLEL_MIN_WORK_GEMM
         } else {
             AUTO_PARALLEL_MIN_WORK
@@ -617,7 +637,7 @@ impl Atom {
         let av = ac.data();
         let bv = bc.data();
         let mut out = vec![0.0f32; out_len];
-        let (pa_len, pb_len) = self.pack_lens(kernel.table());
+        let (pa_len, pb_len) = self.pack_lens(kernel);
         let mut pack_a_buf = vec![0.0f32; pa_len];
         let mut pack_b_buf = vec![0.0f32; pb_len];
         let mut packs = PackBufs {
@@ -726,7 +746,7 @@ impl Atom {
                         }
                     }
                 }
-            } else if let Some(gp) = table.gemm.filter(|gp| gp.engages(t, n, s)) {
+            } else if let Some(gp) = kernel.gemm.filter(|gp| gp.engages(t, n, s)) {
                 // Packed cache-blocked GEMM per group.
                 for gi in 0..g {
                     let a_g = &av[gi * t * s..(gi + 1) * t * s];
@@ -868,7 +888,7 @@ impl Atom {
         let dv = dout_c.data();
         let mut da = vec![0.0f32; av.len()];
         let mut db = vec![0.0f32; bv.len()];
-        let (pa_len, pb_len) = self.pack_lens(kernel.table());
+        let (pa_len, pb_len) = self.pack_lens(kernel);
         let mut pack_a_buf = vec![0.0f32; pa_len];
         let mut pack_b_buf = vec![0.0f32; pb_len];
         let mut packs = PackBufs {
@@ -956,7 +976,7 @@ impl Atom {
         let table = kernel.table;
         if self.conv.is_empty() {
             // da[g,t,s] = Σ_n dout[g,t,n]·B[g,n,s]  — D(t×n) · B(n×s).
-            if let Some(gp) = table.gemm.filter(|gp| gp.engages(t, s, n)) {
+            if let Some(gp) = kernel.gemm.filter(|gp| gp.engages(t, s, n)) {
                 for gi in 0..g {
                     let d_g = &dv[gi * t * n..(gi + 1) * t * n];
                     let b_g = &bv[gi * n * s..(gi + 1) * n * s];
@@ -988,7 +1008,7 @@ impl Atom {
                 }
             }
             // db[g,n,s] = Σ_t dout[g,t,n]·A[g,t,s]  — Dᵀ(n×t) · A(t×s).
-            if let Some(gp) = table.gemm.filter(|gp| gp.engages(n, s, t)) {
+            if let Some(gp) = kernel.gemm.filter(|gp| gp.engages(n, s, t)) {
                 for gi in 0..g {
                     let d_g = &dv[gi * t * n..(gi + 1) * t * n];
                     let a_g = &av[gi * t * s..(gi + 1) * t * s];

@@ -609,7 +609,7 @@ impl CompiledPlan {
             sa = sa.max(a_len);
             sb = sb.max(b_len);
             so = so.max(raw_len);
-            let (pa_len, pb_len) = atom.pack_lens(kernel.table());
+            let (pa_len, pb_len) = atom.pack_lens(&kernel);
             pka = pka.max(pa_len);
             pkb = pkb.max(pb_len);
             sp = sp.max(presum_chain_max(&step.sized.dims[0], &atom.presum_a));
@@ -1630,6 +1630,12 @@ pub struct PlanKey {
     pub cost_cap_bits: Option<u64>,
     /// `PlanOptions::max_dp_inputs` (flips Optimal to Greedy above it).
     pub max_dp_inputs: usize,
+    /// Tuning-cache generation at key construction: the current global
+    /// generation for `Strategy::Measured` (so calibration invalidates
+    /// cached measured plans — post-calibration lookups miss and
+    /// recompile against fresh measurements), `0` for every analytic
+    /// strategy, whose selection never reads the tuning cache.
+    pub tuning_generation: u64,
 }
 
 impl PlanKey {
@@ -1644,6 +1650,10 @@ impl PlanKey {
             conv_kinds: opts.conv_kinds.clone(),
             cost_cap_bits: opts.cost_cap.map(f64::to_bits),
             max_dp_inputs: opts.max_dp_inputs,
+            tuning_generation: match opts.strategy {
+                Strategy::Measured { .. } => crate::cost::tuning::generation(),
+                _ => 0,
+            },
         }
     }
 }

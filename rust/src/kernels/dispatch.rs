@@ -36,8 +36,9 @@
 //! reach the `target_feature` entry points, which keeps the unsafe
 //! feature-gated calls sound by construction.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
+use std::sync::{OnceLock, RwLock};
 
 #[cfg(target_arch = "x86_64")]
 use super::avx2;
@@ -101,8 +102,15 @@ pub struct GemmParams {
     pub mr: usize,
     /// Microtile columns (register-block width).
     pub nr: usize,
-    /// Cache-block depth along the contracted index.
+    /// Cache-block depth along the contracted index. [`KC`] by default;
+    /// per-geometry tunings from the tuning cache may override it (a pure
+    /// blocking change — the accumulation order, and therefore the result
+    /// bits, are invariant under `kc`).
     pub kc: usize,
+    /// Engagement threshold in `m·n·k` multiplies ([`PACK_MIN_FLOPS`] by
+    /// default, per-geometry tunable). Unlike `kc`, changing this flips
+    /// which kernel path runs, so tuned plans are generation-stamped.
+    pub min_flops: usize,
     /// The register-blocked microtile kernel.
     pub panel: PanelFn,
 }
@@ -113,7 +121,7 @@ impl GemmParams {
     /// (`k >= LANES`), wide enough for at least one full column tile, and
     /// large enough overall to amortize the packing copies.
     pub fn engages(&self, m: usize, n: usize, k: usize) -> bool {
-        k >= LANES && n >= self.nr && m.saturating_mul(n).saturating_mul(k) >= PACK_MIN_FLOPS
+        k >= LANES && n >= self.nr && m.saturating_mul(n).saturating_mul(k) >= self.min_flops
     }
 }
 
@@ -160,6 +168,7 @@ static AVX2_FMA: KernelTable = KernelTable {
         mr: avx2::MR,
         nr: avx2::NR,
         kc: KC,
+        min_flops: PACK_MIN_FLOPS,
         panel: avx2::panel,
     }),
 };
@@ -175,6 +184,7 @@ static NEON: KernelTable = KernelTable {
         mr: neon::MR,
         nr: neon::NR,
         kc: KC,
+        min_flops: PACK_MIN_FLOPS,
         panel: neon::panel,
     }),
 };
@@ -274,6 +284,57 @@ pub fn available() -> Vec<Variant> {
     v
 }
 
+/// A tuned per-geometry blocking override (mirror of
+/// `cost::tuning::GemmTuning`'s payload, kept dependency-free here).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TunedGemm {
+    /// Tuned cache-block depth (clamped to ≥ 1).
+    pub kc: usize,
+    /// Tuned packed-path engagement threshold (`m·n·k` multiplies).
+    pub min_flops: usize,
+}
+
+/// Per-geometry blocking overrides installed from the tuning cache, keyed
+/// by the forward contraction geometry `(m, n, k)`. Read once per compiled
+/// step when its kernel is resolved — never on the replay hot path.
+static TUNED: OnceLock<RwLock<HashMap<(usize, usize, usize), TunedGemm>>> = OnceLock::new();
+
+fn tuned_map() -> &'static RwLock<HashMap<(usize, usize, usize), TunedGemm>> {
+    TUNED.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// Install per-geometry GEMM tunings (cold path: called when the tuning
+/// cache loads or records a tuning, not during execution).
+pub fn set_gemm_tunings(entries: &[((usize, usize, usize), TunedGemm)]) {
+    let mut map = tuned_map().write().unwrap();
+    for &(geom, t) in entries {
+        map.insert(geom, t);
+    }
+}
+
+/// Drop all per-geometry tunings (tests and cache clears).
+pub fn clear_gemm_tunings() {
+    tuned_map().write().unwrap().clear();
+}
+
+/// The GEMM parameters a compiled step of forward geometry `m × k · k × n`
+/// should embed under `table`: the table's static defaults with any tuned
+/// per-geometry `kc` / engagement threshold applied. `None` when the
+/// variant has no packed path (portable). Resolved once per compiled
+/// step; the embedded copy keeps replays lock-free.
+pub fn resolved_gemm(table: &KernelTable, m: usize, n: usize, k: usize) -> Option<GemmParams> {
+    let base = table.gemm?;
+    let tuned = tuned_map().read().unwrap().get(&(m, n, k)).copied();
+    match tuned {
+        Some(t) => Some(GemmParams {
+            kc: t.kc.max(1),
+            min_flops: t.min_flops,
+            ..base
+        }),
+        None => Some(base),
+    }
+}
+
 fn env_choice() -> Option<Variant> {
     let raw = std::env::var(VARIANT_ENV).ok()?;
     match raw.trim().to_ascii_lowercase().as_str() {
@@ -344,6 +405,7 @@ mod tests {
             mr: 6,
             nr: 16,
             kc: KC,
+            min_flops: PACK_MIN_FLOPS,
             panel: |_, _, _, _, _, _| {},
         };
         // Too shallow: k < LANES.
@@ -356,6 +418,62 @@ mod tests {
         assert!(gp.engages(96, 96, 96));
         // Saturating volume never wraps around.
         assert!(gp.engages(usize::MAX, usize::MAX, usize::MAX));
+    }
+
+    #[test]
+    fn tuned_geometry_overrides_resolved_gemm() {
+        // A geometry no other test compiles: tuning it cannot perturb
+        // concurrently running plan tests.
+        let geom = (7777usize, 13usize, 9999usize);
+        let table = KernelTable {
+            variant: Variant::Portable,
+            fused: false,
+            dot: portable::dot8,
+            axpy: portable::axpy8,
+            add: portable::add8,
+            gemm: Some(GemmParams {
+                mr: 6,
+                nr: 16,
+                kc: KC,
+                min_flops: PACK_MIN_FLOPS,
+                panel: |_, _, _, _, _, _| {},
+            }),
+        };
+        // Untuned: static defaults come back.
+        let base = resolved_gemm(&table, geom.0, geom.1, geom.2).unwrap();
+        assert_eq!(base.kc, KC);
+        assert_eq!(base.min_flops, PACK_MIN_FLOPS);
+        // Tuned: kc and min_flops override, microtile shape untouched.
+        set_gemm_tunings(&[(
+            geom,
+            TunedGemm {
+                kc: 64,
+                min_flops: 1 << 10,
+            },
+        )]);
+        let tuned = resolved_gemm(&table, geom.0, geom.1, geom.2).unwrap();
+        assert_eq!(tuned.kc, 64);
+        assert_eq!(tuned.min_flops, 1 << 10);
+        assert_eq!(tuned.mr, base.mr);
+        assert_eq!(tuned.nr, base.nr);
+        // Other geometries are untouched; a gemm-less table stays None.
+        let other = resolved_gemm(&table, 1, 2, 3).unwrap();
+        assert_eq!(other.kc, KC);
+        assert!(resolved_gemm(&PORTABLE, geom.0, geom.1, geom.2).is_none());
+        // A zero kc is clamped rather than dividing the blocking by zero.
+        set_gemm_tunings(&[(
+            geom,
+            TunedGemm {
+                kc: 0,
+                min_flops: 1,
+            },
+        )]);
+        assert_eq!(resolved_gemm(&table, geom.0, geom.1, geom.2).unwrap().kc, 1);
+        clear_gemm_tunings();
+        assert_eq!(
+            resolved_gemm(&table, geom.0, geom.1, geom.2).unwrap().kc,
+            KC
+        );
     }
 
     #[test]

@@ -145,6 +145,21 @@
 //! the shared pool (e.g. several coordinator workers) are arbitrated by the
 //! pool itself: one fans out, the rest run serially — never oversubscribing.
 //!
+//! ## Autotuning
+//!
+//! [`Strategy::Measured`] replaces the analytic FLOPs ranking with
+//! measured wall-clock: [`tune::calibrate_expr`] times the planner's
+//! top-k candidate trees (plus bit-compatible orientation mirrors) on
+//! the live backend and records the results in a persistent
+//! [`cost::tuning`] cache (`CONV_EINSUM_TUNING_CACHE`), which also
+//! carries per-geometry packed-GEMM blocking overrides
+//! ([`kernels::dispatch::resolved_gemm`]). Measured plans are stamped
+//! with the cache generation; recalibration invalidates them through
+//! [`CompiledPlan::verify`] and [`exec::PlanCache`] keys, and unmeasured
+//! contexts fall back to the analytic ranking. The coordinator can
+//! calibrate its registered layers in the background
+//! (`EvalService::calibrate_registered`).
+//!
 //! ## Correctness & static analysis
 //!
 //! The engine's invariants are machine-checked, not just documented
@@ -197,6 +212,7 @@ pub mod planner;
 pub mod runtime;
 pub mod tensor;
 pub mod tnn;
+pub mod tune;
 pub mod util;
 pub mod verify;
 
@@ -206,6 +222,9 @@ pub use exec::{
     PlanCache, TrainLayout, TrainWorkspace, Workspace,
 };
 pub use parallel::Pool;
-pub use planner::{contract_path, Plan, PlanOptions, Strategy};
+pub use planner::{
+    candidate_plans, contract_path, ParseStrategyError, Plan, PlanOptions, Strategy,
+};
 pub use tensor::Tensor;
+pub use tune::{calibrate_expr, CalibrationReport, CalibrationSpec};
 pub use verify::{SimContext, VerifyError};

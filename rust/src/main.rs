@@ -42,7 +42,7 @@ fn print_usage() {
         "conv-einsum — representation and fast evaluation of multilinear \
          operations in convolutional TNNs\n\n\
          subcommands:\n  \
-         plan <expr> --dims \"d,d;d,d\" [--json] [--strategy optimal|greedy|ltr] [--training] [--cap N]\n  \
+         plan <expr> --dims \"d,d;d,d\" [--json] [--strategy optimal|greedy|ltr|measured[:K]] [--training] [--cap N]\n  \
          flops-table [--batch N]     reproduce paper Table 2 (FLOPs per CP layer of ResNet-34)\n  \
          train [--decomp CP|TK|TT|TR|BT|HT] [--m M] [--cr CR] [--epochs N] [--mode conv_einsum|naive_ckpt|naive_no_ckpt]\n  \
          serve [--requests N] [--max-batch N]\n  \
@@ -84,12 +84,10 @@ fn cmd_plan(args: &[String]) -> Result<()> {
     let dims = parse_dims(
         flag_value(args, "--dims").ok_or_else(|| anyhow!("--dims required"))?,
     )?;
-    let strategy = match flag_value(args, "--strategy").unwrap_or("optimal") {
-        "optimal" => Strategy::Optimal,
-        "greedy" => Strategy::Greedy,
-        "ltr" | "left-to-right" => Strategy::LeftToRight,
-        other => return Err(anyhow!("unknown strategy '{other}'")),
-    };
+    let strategy: Strategy = flag_value(args, "--strategy")
+        .unwrap_or("optimal")
+        .parse()
+        .map_err(|e| anyhow!("{e}"))?;
     let opts = PlanOptions {
         strategy,
         training: has_flag(args, "--training"),

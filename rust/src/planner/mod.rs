@@ -12,6 +12,15 @@
 //! * [`Strategy::Greedy`] — cheapest-pair-first heuristic, for very large
 //!   networks.
 //! * [`Strategy::LeftToRight`] — the paper's naive baseline.
+//! * [`Strategy::Measured`] — measured-cost selection: the top-k
+//!   FLOPs-ranked trees (a k-best extension of the same subset DP) plus
+//!   their bit-compatible orientation mirrors are scored against the
+//!   persistent tuning cache ([`crate::cost::tuning`]); wall-clock
+//!   measurements recorded by calibration (`crate::tune`) override the
+//!   analytic ranking, and a context with no measurements degrades to
+//!   exactly the analytic choice. Selected plans carry a
+//!   [`Plan::tuning_generation`] stamp so `CompiledPlan::verify()`
+//!   rejects them once the cache moves on.
 //!
 //! A [`PlanOptions::cost_cap`] restricts the search to trees whose every
 //! step costs at most the cap — the "orange path" of the paper's Figure 2.
@@ -20,11 +29,15 @@ mod subspec;
 
 pub use subspec::{analyze_merge, step_sized_spec, Merge, NetCtx, SubSpec};
 
-use crate::cost::flat_cost;
+use crate::cost::{flat_cost, tuning, MergeDims};
 use crate::einsum::{parse, ConvKind, SizedSpec};
 use crate::exec::Backend;
 use crate::util::json::Json;
 use crate::util::sci;
+
+/// Default candidate count for `Strategy::Measured` (the bare `"measured"`
+/// strategy string).
+pub const DEFAULT_MEASURED_TOP_K: usize = 4;
 
 /// Evaluation-order search strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -35,16 +48,67 @@ pub enum Strategy {
     Greedy,
     /// Naive left-to-right evaluation — the paper's baseline.
     LeftToRight,
+    /// Measured-cost tournament over the `top_k` FLOPs-best trees and
+    /// their orientation mirrors, ranked by the tuning cache (analytic
+    /// FLOPs on cache miss).
+    Measured {
+        /// How many FLOPs-ranked trees enter the tournament (≥ 1).
+        top_k: usize,
+    },
 }
 
 impl std::fmt::Display for Strategy {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let s = match self {
-            Strategy::Optimal => "optimal",
-            Strategy::Greedy => "greedy",
-            Strategy::LeftToRight => "left-to-right",
-        };
-        f.write_str(s)
+        match self {
+            Strategy::Optimal => f.write_str("optimal"),
+            Strategy::Greedy => f.write_str("greedy"),
+            Strategy::LeftToRight => f.write_str("left-to-right"),
+            Strategy::Measured { top_k } => write!(f, "measured:{top_k}"),
+        }
+    }
+}
+
+/// Structured error for an unrecognized [`Strategy`] string: unknown
+/// strategies are rejected, never silently defaulted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseStrategyError {
+    /// The rejected input, verbatim.
+    pub input: String,
+}
+
+impl std::fmt::Display for ParseStrategyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown strategy '{}' (expected optimal | greedy | ltr | left-to-right | measured[:K])",
+            self.input
+        )
+    }
+}
+
+impl std::error::Error for ParseStrategyError {}
+
+impl std::str::FromStr for Strategy {
+    type Err = ParseStrategyError;
+
+    /// Inverse of `Display` (with the `ltr` shorthand and a bare
+    /// `measured` defaulting to [`DEFAULT_MEASURED_TOP_K`]). `measured:K`
+    /// requires `K ≥ 1`.
+    fn from_str(s: &str) -> Result<Strategy, ParseStrategyError> {
+        match s.trim() {
+            "optimal" => Ok(Strategy::Optimal),
+            "greedy" => Ok(Strategy::Greedy),
+            "ltr" | "left-to-right" => Ok(Strategy::LeftToRight),
+            "measured" => Ok(Strategy::Measured {
+                top_k: DEFAULT_MEASURED_TOP_K,
+            }),
+            other => match other.strip_prefix("measured:").map(str::parse::<usize>) {
+                Some(Ok(top_k)) if top_k >= 1 => Ok(Strategy::Measured { top_k }),
+                _ => Err(ParseStrategyError {
+                    input: s.to_string(),
+                }),
+            },
+        }
     }
 }
 
@@ -123,12 +187,31 @@ pub struct Plan {
     /// Peak simultaneously-live elements during forward execution
     /// (inputs + working list + current output).
     pub peak_mem_elems: f64,
+    /// For measured-strategy plans: the [`crate::cost::tuning`] generation
+    /// the selection was scored under. `CompiledPlan::verify()` rejects
+    /// the plan once the global cache's generation moves past it (the
+    /// measurements it was ranked by are stale). `None` for analytic
+    /// strategies, which never depend on cache contents.
+    pub tuning_generation: Option<u64>,
 }
 
 impl Plan {
     /// Speedup of this plan over left-to-right.
     pub fn speedup_vs_naive(&self) -> f64 {
         self.naive_cost / self.cost.max(1.0)
+    }
+
+    /// Orientation-sensitive identity of the evaluation order: one entry
+    /// per step carrying the working-list operand positions and the
+    /// step's rendered 2-input expression (which distinguishes mirrored
+    /// lhs/rhs orders). This is the measurement key inside a tuning-cache
+    /// context — stable across processes for a fixed expression + dims.
+    pub fn signature(&self) -> String {
+        let mut s = String::new();
+        for st in &self.steps {
+            s.push_str(&format!("{}x{}:{};", st.lhs, st.rhs, st.expr));
+        }
+        s
     }
 
     /// Paper-Figure-1b-style report.
@@ -196,6 +279,9 @@ pub fn plan_with(sized: &SizedSpec, opts: &PlanOptions) -> Result<Plan, String> 
     if n > 63 {
         return Err(format!("too many inputs ({n} > 63)"));
     }
+    if let Strategy::Measured { top_k } = opts.strategy {
+        return measured_plan(sized, opts, top_k);
+    }
     // Re-bind conv kinds if the options override them.
     let owned;
     let sized = match &opts.conv_kinds {
@@ -213,6 +299,7 @@ pub fn plan_with(sized: &SizedSpec, opts: &PlanOptions) -> Result<Plan, String> 
         .ok_or("internal: LTR tree must be feasible")?;
 
     let tree = match opts.strategy {
+        Strategy::Measured { .. } => unreachable!("measured planning dispatched above"),
         Strategy::LeftToRight => ltr_tree.clone(),
         Strategy::Greedy => greedy_tree(&ctx, n, opts.training),
         Strategy::Optimal => {
@@ -413,6 +500,263 @@ fn greedy_tree(ctx: &NetCtx, n: usize, training: bool) -> Tree {
 }
 
 // ---------------------------------------------------------------------------
+// Measured-cost planning (Strategy::Measured)
+// ---------------------------------------------------------------------------
+
+/// One entry of the k-best DP: a candidate tree for a subset, as the cost
+/// plus the split and the indices of the child entries it composes.
+#[derive(Debug, Clone, Copy)]
+struct KbEntry {
+    cost: f64,
+    l: u64,
+    r: u64,
+    li: u32,
+    ri: u32,
+}
+
+/// k-best extension of [`optimal_tree`]: per subset mask, keep the `k`
+/// cheapest candidate trees instead of one. Entries compose child entries
+/// by index, so every kept entry reconstructs a distinct tree (the
+/// orientation dedupe of the base DP carries over: a split and its swap
+/// are never both enumerated). Returned cost-ascending; index 0 is the
+/// FLOPs-optimal tree of [`optimal_tree`].
+fn k_best_trees(
+    ctx: &NetCtx,
+    n: usize,
+    training: bool,
+    cap: Option<f64>,
+    k: usize,
+) -> Result<Vec<Tree>, String> {
+    if n > MAX_DP_INPUTS_HARD {
+        return Err(format!(
+            "exact subset DP limited to {MAX_DP_INPUTS_HARD} inputs (got {n}); \
+             use Strategy::Greedy or lower max_dp_inputs"
+        ));
+    }
+    let k = k.max(1);
+    let full: u64 = 1u64
+        .checked_shl(n as u32)
+        .map(|v| v - 1)
+        .ok_or_else(|| format!("subset DP mask overflow for {n} inputs"))?;
+    let size = 1usize << n;
+    let mut entries: Vec<Vec<KbEntry>> = vec![Vec::new(); size];
+    let mut subs: Vec<Option<SubSpec>> = vec![None; size];
+    for i in 0..n {
+        entries[1 << i].push(KbEntry {
+            cost: 0.0,
+            l: 0,
+            r: 0,
+            li: 0,
+            ri: 0,
+        });
+        subs[1 << i] = Some(ctx.leaf(i));
+    }
+    for mask in 1..=full {
+        if mask.count_ones() < 2 {
+            continue;
+        }
+        if subs[mask as usize].is_none() {
+            subs[mask as usize] = Some(ctx.subset(mask));
+        }
+        let low = mask & mask.wrapping_neg();
+        let mut cands: Vec<KbEntry> = Vec::new();
+        let mut s = (mask - 1) & mask;
+        while s != 0 {
+            if s & low != 0 {
+                let t = mask ^ s;
+                if !entries[s as usize].is_empty() && !entries[t as usize].is_empty() {
+                    let sa = subs[s as usize].get_or_insert_with(|| ctx.subset(s));
+                    let sa = sa.clone();
+                    let sb = subs[t as usize].get_or_insert_with(|| ctx.subset(t));
+                    let merge = analyze_merge(ctx, &sa, sb);
+                    let step = merge.dims.mults(training);
+                    if cap.map_or(true, |c| step <= c) {
+                        for (li, el) in entries[s as usize].iter().enumerate() {
+                            for (ri, er) in entries[t as usize].iter().enumerate() {
+                                cands.push(KbEntry {
+                                    cost: el.cost + er.cost + step,
+                                    l: s,
+                                    r: t,
+                                    li: li as u32,
+                                    ri: ri as u32,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            s = (s - 1) & mask;
+        }
+        cands.sort_by(|a, b| a.cost.total_cmp(&b.cost));
+        cands.truncate(k);
+        entries[mask as usize] = cands;
+    }
+    if entries[full as usize].is_empty() {
+        return Err("no feasible evaluation path under the cost cap".to_string());
+    }
+    let mut trees = Vec::with_capacity(entries[full as usize].len());
+    for i in 0..entries[full as usize].len() {
+        let mut splits = Vec::new();
+        kb_collect(&entries, full, i, &mut splits);
+        trees.push(Tree { splits, root: full });
+    }
+    Ok(trees)
+}
+
+/// Reconstruct entry `idx` of `mask` into a bottom-up split list
+/// (children before parents, matching [`optimal_tree`]'s output shape).
+fn kb_collect(entries: &[Vec<KbEntry>], mask: u64, idx: usize, splits: &mut Vec<(u64, u64, u64)>) {
+    if mask.count_ones() < 2 {
+        return;
+    }
+    let e = entries[mask as usize][idx];
+    kb_collect(entries, e.l, e.li as usize, splits);
+    kb_collect(entries, e.r, e.ri as usize, splits);
+    splits.push((mask, e.l, e.r));
+}
+
+/// Whether swapping lhs/rhs of a contraction step preserves result bits
+/// under the currently selected kernel table.
+///
+/// A mirrored step computes `dot(b_row, a_row)` where the original
+/// computes `dot(a_row, b_row)` — bit-identical, since multiplication
+/// commutes and the accumulation order over the contracted index is the
+/// same. The one thing a swap *can* change is kernel-path routing: the
+/// packed-GEMM engagement predicate is orientation-sensitive, and the
+/// packed path accumulates in a different (pure-FMA-chain) order than
+/// the unblocked loops. So a swap is safe iff both orientations route
+/// identically on the forward *and* both backward geometries, under each
+/// orientation's own resolved (possibly per-geometry-tuned) parameters.
+/// Conv steps are never mirrored: the conv triple tables and `Same`
+/// output extents are asymmetric in the operands.
+fn mirror_safe(dims: &MergeDims) -> bool {
+    if !dims.conv.is_empty() {
+        return false;
+    }
+    let (t, n, s) = (dims.t as usize, dims.n as usize, dims.s as usize);
+    if s < crate::kernels::LANES {
+        return true; // tiny-depth scalar path in both orientations
+    }
+    let table = crate::kernels::dispatch::selected();
+    let fwd = crate::kernels::dispatch::resolved_gemm(table, t, n, s);
+    let mir = crate::kernels::dispatch::resolved_gemm(table, n, t, s);
+    match (fwd, mir) {
+        (None, None) => true, // no packed path: unblocked loops both ways
+        (Some(a), Some(b)) => {
+            // forward out = A·Bᵀ vs mirrored out = B·Aᵀ
+            a.engages(t, n, s) == b.engages(n, t, s)
+                // gradient wrt A: original da-branch vs mirrored db-branch
+                && a.engages(t, s, n) == b.engages(t, s, n)
+                // gradient wrt B: original db-branch vs mirrored da-branch
+                && a.engages(n, s, t) == b.engages(n, s, t)
+        }
+        _ => false,
+    }
+}
+
+/// The orientation mirror of `tree`: every bit-compatible contraction
+/// split swapped `(l, r) → (r, l)`. Mirrors have identical analytic cost
+/// and bit-identical outputs/gradients, but different wall-clock: the
+/// parallel backend partitions work over output rows (`g·t` rows of
+/// length `n` vs `g·n` rows of length `t`), so task granularity — and
+/// pool utilization — differs per orientation. `None` when no split is
+/// eligible (nothing to measure).
+fn mirrored_tree(ctx: &NetCtx, tree: &Tree) -> Option<Tree> {
+    let mut swapped_any = false;
+    let mut splits = Vec::with_capacity(tree.splits.len());
+    for &(mask, l, r) in &tree.splits {
+        let sa = ctx.subset(l);
+        let sb = ctx.subset(r);
+        let merge = analyze_merge(ctx, &sa, &sb);
+        if mirror_safe(&merge.dims) {
+            splits.push((mask, r, l));
+            swapped_any = true;
+        } else {
+            splits.push((mask, l, r));
+        }
+    }
+    swapped_any.then_some(Tree {
+        splits,
+        root: tree.root,
+    })
+}
+
+/// The candidate set `Strategy::Measured` scores: the top-k FLOPs-ranked
+/// trees (k-best subset DP; greedy above the DP input limit), each
+/// followed by its bit-compatible orientation mirror when one exists.
+/// Ordered FLOPs-ascending with the canonical FLOPs-best tree first —
+/// [`crate::cost::tuning::select_index`]'s first-wins tie-break therefore
+/// reproduces the analytic choice when measurements don't disagree.
+///
+/// Public so calibration (`crate::tune`) enumerates exactly the set the
+/// planner will later rank.
+pub fn candidate_plans(
+    sized: &SizedSpec,
+    opts: &PlanOptions,
+    top_k: usize,
+) -> Result<Vec<Plan>, String> {
+    let n = sized.spec.n_inputs();
+    if n < 2 {
+        return Err("planning requires at least 2 inputs".to_string());
+    }
+    if n > 63 {
+        return Err(format!("too many inputs ({n} > 63)"));
+    }
+    let owned;
+    let sized = match &opts.conv_kinds {
+        Some(kinds) => {
+            owned = SizedSpec::with_kinds(sized.spec.clone(), sized.dims.clone(), kinds.clone())?;
+            &owned
+        }
+        None => sized,
+    };
+    let ctx = NetCtx::new(sized);
+    let ltr_tree = left_to_right_tree(n);
+    let ltr_cost = tree_cost(&ctx, &ltr_tree, opts.training, None)
+        .ok_or("internal: LTR tree must be feasible")?;
+
+    let base = if n <= opts.max_dp_inputs.min(MAX_DP_INPUTS_HARD) {
+        k_best_trees(&ctx, n, opts.training, opts.cost_cap, top_k)?
+    } else {
+        vec![greedy_tree(&ctx, n, opts.training)]
+    };
+
+    let mut plans = Vec::with_capacity(base.len() * 2);
+    for tree in &base {
+        if tree_cost(&ctx, tree, opts.training, opts.cost_cap).is_none() {
+            continue; // greedy fallback may violate the cap
+        }
+        plans.push(build_plan(&ctx, tree, opts, ltr_cost)?);
+        if let Some(mirror) = mirrored_tree(&ctx, tree) {
+            plans.push(build_plan(&ctx, &mirror, opts, ltr_cost)?);
+        }
+    }
+    if plans.is_empty() {
+        return Err(format!(
+            "no evaluation path satisfies per-step cost cap {:?}",
+            opts.cost_cap
+        ));
+    }
+    Ok(plans)
+}
+
+/// Measured-cost plan selection: rank [`candidate_plans`] by the global
+/// tuning cache's measurements for this execution context, falling back
+/// to analytic FLOPs when the context is unmeasured, and stamp the chosen
+/// plan with the current tuning generation.
+fn measured_plan(sized: &SizedSpec, opts: &PlanOptions, top_k: usize) -> Result<Plan, String> {
+    let mut cands = candidate_plans(sized, opts, top_k)?;
+    let key = tuning::CalibKey::current(&cands[0].expr, &sized.dims, opts.backend, opts.training);
+    let measured = tuning::global().measurements(&key.context_id());
+    let scored: Vec<(String, f64)> = cands.iter().map(|p| (p.signature(), p.cost)).collect();
+    let scores = tuning::blend_scores(&scored, &measured, opts.training);
+    let idx = tuning::select_index(&scores);
+    let mut plan = cands.swap_remove(idx);
+    plan.tuning_generation = Some(tuning::generation());
+    Ok(plan)
+}
+
+// ---------------------------------------------------------------------------
 // Plan construction
 // ---------------------------------------------------------------------------
 
@@ -497,6 +841,7 @@ fn build_plan(
         flat_cost: flat_cost(sized),
         largest_intermediate: largest,
         peak_mem_elems: peak_mem,
+        tuning_generation: None,
     })
 }
 

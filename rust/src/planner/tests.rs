@@ -532,3 +532,118 @@ fn subset_order_independence() {
     assert_eq!(m01_2.result.sizes, m12_0.result.sizes);
     assert_eq!(m01_2.result, ctx.subset(0b111));
 }
+
+#[test]
+fn strategy_display_parse_round_trips() {
+    let variants = [
+        Strategy::Optimal,
+        Strategy::Greedy,
+        Strategy::LeftToRight,
+        Strategy::Measured { top_k: 1 },
+        Strategy::Measured { top_k: 3 },
+        Strategy::Measured {
+            top_k: DEFAULT_MEASURED_TOP_K,
+        },
+    ];
+    for s in variants {
+        let rendered = s.to_string();
+        let parsed: Strategy = rendered.parse().unwrap_or_else(|e| {
+            panic!("'{rendered}' failed to parse back: {e}");
+        });
+        assert_eq!(parsed, s, "round-trip through '{rendered}'");
+    }
+    // Shorthands.
+    assert_eq!("ltr".parse::<Strategy>().unwrap(), Strategy::LeftToRight);
+    assert_eq!(
+        "measured".parse::<Strategy>().unwrap(),
+        Strategy::Measured {
+            top_k: DEFAULT_MEASURED_TOP_K
+        }
+    );
+    assert_eq!(
+        " optimal ".parse::<Strategy>().unwrap(),
+        Strategy::Optimal,
+        "surrounding whitespace is tolerated"
+    );
+}
+
+#[test]
+fn unknown_strategy_strings_are_structured_errors() {
+    for bad in [
+        "fastest",
+        "",
+        "Optimal",
+        "measured:",
+        "measured:0",
+        "measured:-1",
+        "measured:3x",
+        "measured: 3",
+    ] {
+        let err = bad
+            .parse::<Strategy>()
+            .expect_err("must reject unknown strategy strings");
+        assert_eq!(err.input, bad.trim(), "error preserves the input");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("unknown strategy") && msg.contains("measured[:K]"),
+            "error message lists the accepted forms: {msg}"
+        );
+    }
+}
+
+#[test]
+fn measured_candidates_are_flops_ordered_with_canonical_first() {
+    // 3-input matmul chain with a strongly preferred association order.
+    let sized = crate::einsum::SizedSpec::new(
+        parse("ij,jk,kl->il").unwrap(),
+        vec![vec![2, 64], vec![64, 64], vec![64, 2]],
+    )
+    .unwrap();
+    let opts = PlanOptions::default();
+    let cands = candidate_plans(&sized, &opts, 3).unwrap();
+    assert!(cands.len() >= 2, "expected mirrors or multiple trees");
+    // Candidate 0 is the FLOPs-optimal plan.
+    let optimal = plan(
+        "ij,jk,kl->il",
+        vec![vec![2, 64], vec![64, 64], vec![64, 2]],
+        &opts,
+    );
+    assert_eq!(cands[0].cost, optimal.cost);
+    // FLOPs-ascending over tree pairs: every candidate costs at least as
+    // much as candidate 0, and costs never decrease across tree groups.
+    for c in &cands {
+        assert!(c.cost >= cands[0].cost);
+    }
+    // Signatures are unique (mirrors differ in operand order).
+    let mut sigs: Vec<String> = cands.iter().map(|p| p.signature()).collect();
+    sigs.sort();
+    sigs.dedup();
+    assert_eq!(sigs.len(), cands.len(), "candidate signatures collide");
+    // Candidates carry no tuning-generation stamp (only the measured
+    // selection result is stamped).
+    for c in &cands {
+        assert_eq!(c.tuning_generation, None);
+    }
+}
+
+#[test]
+fn measured_strategy_falls_back_to_analytic_on_cache_miss() {
+    // Fresh expression: nothing measured in any context, so the measured
+    // planner must reproduce the analytic (optimal) tree choice and cost.
+    let dims = vec![vec![3, 17], vec![17, 29], vec![29, 5]];
+    let optimal = plan("ab,bc,cd->ad", dims.clone(), &PlanOptions::default());
+    let measured = plan(
+        "ab,bc,cd->ad",
+        dims,
+        &PlanOptions {
+            strategy: Strategy::Measured { top_k: 4 },
+            ..Default::default()
+        },
+    );
+    assert_eq!(measured.cost, optimal.cost);
+    assert_eq!(measured.strategy, Strategy::Measured { top_k: 4 });
+    assert!(
+        measured.tuning_generation.is_some(),
+        "measured plans are generation-stamped"
+    );
+}

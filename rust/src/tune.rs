@@ -1,0 +1,276 @@
+//! Calibration driver for the measured-cost planner.
+//!
+//! [`calibrate_expr`] runs the plan tournament that backs
+//! [`Strategy::Measured`](crate::planner::Strategy::Measured): it
+//! enumerates the planner's candidate contraction trees
+//! ([`crate::planner::candidate_plans`]), compiles each one, times
+//! forward — and, for training contexts, fused train-step — replays on
+//! the live backend via [`crate::util::timing`], and records the
+//! wall-clock measurements in the global
+//! [`crate::cost::tuning::TuningCache`]. Subsequent
+//! `Strategy::Measured` compiles for the same execution context
+//! (expression, shapes, backend, pool width, kernel variant, training
+//! mode) rank candidates by these measurements instead of analytic
+//! FLOPs.
+//!
+//! Recording happens *after* every candidate has been timed, so the
+//! tuning generation bumps once per calibrated context-batch rather
+//! than mid-tournament; the candidates compiled here carry no
+//! generation stamp ([`crate::planner::Plan::tuning_generation`] is `None` for
+//! non-measured planning) and stay valid throughout.
+//!
+//! The driver lives outside the replay hot path: calibration allocates
+//! freely (workspaces, probe tensors, report strings) and is expected
+//! to run at service warm-up or from an explicit tuning pass — see
+//! `EvalService::calibrate_registered` for the coordinator entry point.
+
+use std::sync::Arc;
+
+use crate::autodiff::CkptPolicy;
+use crate::cost::tuning::{self, CalibKey, Measurement};
+use crate::einsum::{parse, SizedSpec};
+use crate::exec::{CompiledPlan, TrainWorkspace, Workspace};
+use crate::planner::{candidate_plans, PlanOptions, DEFAULT_MEASURED_TOP_K};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::timing;
+
+/// Knobs for one calibration pass. `Default` is sized for service
+/// warm-up: a handful of iterations per candidate, persisted to the
+/// `CONV_EINSUM_TUNING_CACHE` path when one is configured.
+#[derive(Debug, Clone)]
+pub struct CalibrationSpec {
+    /// How many FLOPs-ranked trees to enumerate (each bit-compatible
+    /// orientation mirror rides along, so up to `2 * top_k` candidates
+    /// are timed).
+    pub top_k: usize,
+    /// Warm-up replays per candidate (excluded from the measurement;
+    /// grows workspaces so the timed replays are steady-state).
+    pub warmup: usize,
+    /// Timed replays per candidate (the median is recorded).
+    pub iters: usize,
+    /// Persist the global cache to the `CONV_EINSUM_TUNING_CACHE` path
+    /// after recording (no-op when the variable is unset). Leave off
+    /// for probe runs that must not overwrite a pinned artifact.
+    pub persist: bool,
+    /// Seed for the deterministic probe tensors.
+    pub seed: u64,
+}
+
+impl Default for CalibrationSpec {
+    fn default() -> Self {
+        CalibrationSpec {
+            top_k: DEFAULT_MEASURED_TOP_K,
+            warmup: 2,
+            iters: 7,
+            persist: true,
+            seed: 0x5EED_CA11,
+        }
+    }
+}
+
+/// Timing record for one tournament candidate.
+#[derive(Debug, Clone)]
+pub struct CandidateTiming {
+    /// Structural signature ([`crate::planner::Plan::signature`]) — the
+    /// measurement key.
+    pub signature: String,
+    /// Analytic cost (FLOPs) of the candidate.
+    pub cost: f64,
+    /// Median forward replay wall-clock, seconds.
+    pub fwd_secs: f64,
+    /// Median fused train-step wall-clock, seconds (training contexts).
+    pub train_secs: Option<f64>,
+}
+
+/// Outcome of one [`calibrate_expr`] pass.
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    /// The execution context the measurements were recorded under.
+    pub context_id: String,
+    /// Per-candidate timings, in tournament order (FLOPs-ascending,
+    /// canonical tree before its mirror) — index 0 is the plan the
+    /// analytic ranking would pick.
+    pub candidates: Vec<CandidateTiming>,
+    /// Index of the wall-clock winner in `candidates`.
+    pub best: usize,
+    /// Cache path the measurements were persisted to, when any.
+    pub saved: Option<String>,
+}
+
+impl CalibrationReport {
+    /// Seconds the measured winner saves per replay over the analytic
+    /// (FLOPs-best) choice; `0.0` when the analytic choice wins.
+    pub fn secs_saved(&self) -> f64 {
+        let secs = |c: &CandidateTiming| c.train_secs.unwrap_or(c.fwd_secs);
+        (secs(&self.candidates[0]) - secs(&self.candidates[self.best])).max(0.0)
+    }
+
+    /// The report as a JSON object (the `BENCH_planner.json` row shape).
+    pub fn to_json(&self) -> Json {
+        let candidates = self.candidates.iter().map(|c| {
+            let mut fields = vec![
+                ("signature", Json::str(&c.signature)),
+                ("cost", Json::num(c.cost)),
+                ("fwd_secs", Json::num(c.fwd_secs)),
+            ];
+            if let Some(t) = c.train_secs {
+                fields.push(("train_secs", Json::num(t)));
+            }
+            Json::obj(fields)
+        });
+        let mut fields = vec![
+            ("context", Json::str(&self.context_id)),
+            ("candidates", Json::arr(candidates)),
+            ("best", Json::num(self.best as f64)),
+            ("secs_saved", Json::num(self.secs_saved())),
+        ];
+        if let Some(p) = &self.saved {
+            fields.push(("saved", Json::str(p)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Time one compiled candidate: median forward replay seconds, plus
+/// median fused train-step seconds when `training`.
+fn time_candidate(
+    compiled: &CompiledPlan,
+    inputs: &[&Tensor],
+    training: bool,
+    spec: &CalibrationSpec,
+) -> Result<(f64, Option<f64>), String> {
+    let mut ws = Workspace::new();
+    let mut out = Tensor::zeros(compiled.out_shape());
+    // Validate once outside the timer so replay errors surface as errors
+    // rather than poisoning the measurement.
+    compiled
+        .run_into(inputs, &mut ws, &mut out)
+        .map_err(|e| format!("calibration forward failed: {e}"))?;
+    let mut failed = false;
+    let fwd = timing::bench("calib-fwd", spec.warmup, spec.iters.max(1), || {
+        failed |= compiled.run_into(inputs, &mut ws, &mut out).is_err();
+    });
+    if failed {
+        return Err("calibration forward failed during timing".to_string());
+    }
+    let fwd_secs = fwd.median_secs();
+
+    if !training {
+        return Ok((fwd_secs, None));
+    }
+    let layout = compiled.train_layout(CkptPolicy::StoreAll);
+    let mut tws = TrainWorkspace::new();
+    let dout = Tensor::zeros(compiled.out_shape());
+    let mut grads: Vec<Tensor> = compiled
+        .in_dims()
+        .iter()
+        .map(|d| Tensor::zeros(d))
+        .collect();
+    compiled
+        .train_step(&layout, inputs, &dout, &mut tws, &mut out, &mut grads)
+        .map_err(|e| format!("calibration train step failed: {e}"))?;
+    let mut failed = false;
+    let train = timing::bench("calib-train", spec.warmup, spec.iters.max(1), || {
+        failed |= compiled
+            .train_step(&layout, inputs, &dout, &mut tws, &mut out, &mut grads)
+            .is_err();
+    });
+    if failed {
+        return Err("calibration train step failed during timing".to_string());
+    }
+    Ok((fwd_secs, Some(train.median_secs())))
+}
+
+/// Run the plan tournament for `expr` at these shapes and record the
+/// measurements in the global tuning cache.
+///
+/// Every candidate of [`candidate_plans`] (the exact set a later
+/// `Strategy::Measured` compile will rank) is compiled and timed on the
+/// backend in `opts`; `opts.training` selects whether fused train-step
+/// replays are timed alongside forwards, and is baked into the context
+/// key, so calibrate with the same `training` flag the serving path
+/// will plan with. Returns the per-candidate report; measurements are
+/// visible to planners as soon as this returns (the tuning generation
+/// has bumped, so previously compiled *measured* plans re-verify as
+/// stale and recompile via their `PlanCache`).
+pub fn calibrate_expr(
+    expr: &str,
+    dims: &[Vec<usize>],
+    opts: &PlanOptions,
+    spec: &CalibrationSpec,
+) -> Result<CalibrationReport, String> {
+    let parsed = parse(expr).map_err(|e| e.to_string())?;
+    let sized = SizedSpec::new(parsed, dims.to_vec())?;
+    let plans = candidate_plans(&sized, opts, spec.top_k)?;
+
+    let mut compiled: Vec<CompiledPlan> = Vec::with_capacity(plans.len());
+    for plan in &plans {
+        compiled.push(
+            CompiledPlan::compile_arc(Arc::new(plan.clone()))
+                .map_err(|e| format!("calibration compile failed: {e}"))?,
+        );
+    }
+
+    let mut rng = Rng::new(spec.seed);
+    let probes: Vec<Tensor> = dims
+        .iter()
+        .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+        .collect();
+    let inputs: Vec<&Tensor> = probes.iter().collect();
+
+    let mut candidates = Vec::with_capacity(plans.len());
+    for (plan, cp) in plans.iter().zip(&compiled) {
+        let (fwd_secs, train_secs) = time_candidate(cp, &inputs, opts.training, spec)?;
+        candidates.push(CandidateTiming {
+            signature: plan.signature(),
+            cost: plan.cost,
+            fwd_secs,
+            train_secs,
+        });
+    }
+
+    // Record everything at once: the generation bumps per measurement,
+    // but no measured plan was compiled mid-tournament to invalidate.
+    let key = CalibKey::current(&plans[0].expr, dims, opts.backend, opts.training);
+    let ctx_id = key.context_id();
+    for c in &candidates {
+        tuning::global().record(
+            &ctx_id,
+            &c.signature,
+            Measurement {
+                fwd_secs: c.fwd_secs,
+                train_secs: c.train_secs,
+                cost: c.cost,
+            },
+        );
+    }
+
+    let secs: Vec<f64> = candidates
+        .iter()
+        .map(|c| {
+            if opts.training {
+                c.train_secs.unwrap_or(c.fwd_secs)
+            } else {
+                c.fwd_secs
+            }
+        })
+        .collect();
+    let best = tuning::select_index(&secs);
+
+    let mut saved = None;
+    if spec.persist {
+        if let Some(path) = tuning::env_path() {
+            tuning::global().save_to(&path)?;
+            saved = Some(path);
+        }
+    }
+
+    Ok(CalibrationReport {
+        context_id: ctx_id,
+        candidates,
+        best,
+        saved,
+    })
+}

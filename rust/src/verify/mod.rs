@@ -121,6 +121,12 @@ pub enum VerifyError {
         found: &'static str,
         selected: &'static str,
     },
+    /// A measured plan carries a tuning-generation stamp older than the
+    /// process's current tuning-cache generation — its candidate ranking
+    /// was decided against measurements that have since changed, so the
+    /// plan must be re-planned (a fresh `PlanCache` lookup misses and
+    /// recompiles; see `PlanKey::tuning_generation`).
+    TuningGenerationMismatch { plan: u64, current: u64 },
     /// Structural inconsistency not covered by a more specific variant.
     Malformed { what: String },
 }
@@ -187,6 +193,12 @@ impl fmt::Display for VerifyError {
                 "step {step}: kernel pinned to variant '{found}' but the process \
                  selected '{selected}' (plan compiled under a different kernel \
                  selection?)"
+            ),
+            VerifyError::TuningGenerationMismatch { plan, current } => write!(
+                f,
+                "plan ranked under tuning-cache generation {plan} but the process is \
+                 at generation {current} (stale measured plan; re-plan to pick up the \
+                 new calibration data)"
             ),
             VerifyError::Malformed { what } => write!(f, "malformed compiled plan: {what}"),
         }
@@ -710,6 +722,12 @@ impl CompiledPlan {
     /// Runs automatically after every compile in debug/test builds and on
     /// [`crate::exec::PlanCache`] insertion in release builds.
     pub fn verify(&self) -> Result<(), VerifyError> {
+        if let Some(plan) = self.plan.tuning_generation {
+            let current = crate::cost::tuning::generation();
+            if plan != current {
+                return Err(VerifyError::TuningGenerationMismatch { plan, current });
+            }
+        }
         self.verify_steps()?;
         self.verify_inference_dataflow()?;
         self.verify_flops()?;

@@ -1,0 +1,424 @@
+//! Integration tests for the measured-cost autotuning planner: tuning-cache
+//! persistence, analytic fallback on corrupted artifacts, tuning-generation
+//! staleness (both `CompiledPlan::verify()` and `PlanCache` keying),
+//! measured-vs-optimal bit-identity across ConvKinds × backends, per-geometry
+//! GEMM-tuning bit-invariance, and the pinned-fixture CI smoke test.
+//!
+//! Every test serializes on one mutex: the tuning cache, its generation
+//! counter, the dispatcher's tuned-geometry registry, and `force_variant`
+//! are all process-global, and these tests mutate them.
+
+use conv_einsum::autodiff::CkptPolicy;
+use conv_einsum::cost::tuning::{
+    self, CalibKey, GemmTuning, Measurement, TuningCache, TUNING_CACHE_ENV,
+};
+use conv_einsum::einsum::{parse, ConvKind, SizedSpec};
+use conv_einsum::kernels::dispatch::{self, Variant, PACK_MIN_FLOPS};
+use conv_einsum::tune::{calibrate_expr, CalibrationSpec};
+use conv_einsum::util::rng::Rng;
+use conv_einsum::{
+    compile_expr, Backend, PlanCache, PlanOptions, Strategy, Tensor, TrainWorkspace, VerifyError,
+    Workspace,
+};
+use std::sync::{Mutex, MutexGuard};
+
+static GLOBAL_STATE: Mutex<()> = Mutex::new(());
+
+fn lock_global() -> MutexGuard<'static, ()> {
+    // A panicking test must not wedge the rest of the binary.
+    GLOBAL_STATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores the forced kernel variant (and clears the global tuning cache)
+/// when dropped, so a panicking test cannot leak process-global state into
+/// the next one.
+struct StateGuard;
+
+impl Drop for StateGuard {
+    fn drop(&mut self) {
+        dispatch::force_variant(None);
+        tuning::global().clear();
+    }
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|x| x.to_bits()).collect()
+}
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("conv_einsum_{}_{}.json", name, std::process::id()))
+}
+
+fn measurement(fwd: f64, cost: f64) -> Measurement {
+    Measurement {
+        fwd_secs: fwd,
+        train_secs: None,
+        cost,
+    }
+}
+
+#[test]
+fn tuning_cache_json_file_round_trip() {
+    let _g = lock_global();
+    let path = tmp_path("roundtrip");
+    let cache = TuningCache::new();
+    cache.record("ctx-a", "sig-1", measurement(1.5e-3, 1000.0));
+    cache.record(
+        "ctx-a",
+        "sig-2",
+        Measurement {
+            fwd_secs: 2.5e-3,
+            train_secs: Some(7.5e-3),
+            cost: 2000.0,
+        },
+    );
+    cache.record("ctx-b", "sig-1", measurement(9e-4, 500.0));
+    cache.set_gemm_tuning(GemmTuning {
+        m: 16,
+        n: 64,
+        k: 32,
+        kc: 8,
+        min_flops: 1 << 12,
+    });
+    cache.save_to(path.to_str().unwrap()).unwrap();
+
+    let back = TuningCache::new();
+    let loaded = back.load_path(path.to_str().unwrap()).unwrap();
+    assert_eq!(loaded, 3);
+    assert_eq!(back.context_count(), 2);
+    assert_eq!(
+        back.lookup("ctx-a", "sig-2"),
+        cache.lookup("ctx-a", "sig-2"),
+        "train_secs must survive the round trip"
+    );
+    assert_eq!(back.lookup("ctx-b", "sig-1"), cache.lookup("ctx-b", "sig-1"));
+    assert_eq!(back.gemm_tunings(), cache.gemm_tunings());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn corrupted_cache_falls_back_to_analytic_without_panicking() {
+    let _g = lock_global();
+    let _restore = StateGuard;
+    for garbage in [
+        "",
+        "{",
+        "not json at all",
+        "[1, 2, 3]",
+        "{\"kind\": \"something_else\"}",
+        // Truncated mid-object.
+        "{\"kind\": \"conv_einsum_tuning_cache\", \"contexts\": {\"c\": {\"s\": {\"fwd_",
+    ] {
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, garbage).unwrap();
+        let cache = TuningCache::new();
+        assert!(
+            cache.load_path(path.to_str().unwrap()).is_err(),
+            "garbage {garbage:?} must be rejected, not half-loaded"
+        );
+        assert!(cache.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+    // With nothing measured for this context, a measured plan reproduces
+    // the analytic choice exactly — planning never panics on cache misses.
+    let dims = vec![vec![3, 17], vec![17, 29], vec![29, 5]];
+    let optimal = compile_expr("ab,bc,cd->ad", &dims, &PlanOptions::default()).unwrap();
+    let measured = compile_expr(
+        "ab,bc,cd->ad",
+        &dims,
+        &PlanOptions {
+            strategy: Strategy::Measured { top_k: 4 },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(measured.plan().cost, optimal.plan().cost);
+}
+
+#[test]
+fn stale_generation_stamp_is_rejected_by_verify() {
+    let _g = lock_global();
+    let _restore = StateGuard;
+    let dims = vec![vec![4, 6], vec![6, 8]];
+    let opts = PlanOptions {
+        strategy: Strategy::Measured { top_k: 2 },
+        ..Default::default()
+    };
+    let compiled = compile_expr("ij,jk->ik", &dims, &opts).unwrap();
+    compiled.verify().expect("fresh measured plan verifies");
+    let stamped = compiled.plan().tuning_generation.expect("stamped");
+
+    // Any recording into the global cache moves the generation on.
+    tuning::global().record("some-context", "some-sig", measurement(1e-3, 10.0));
+
+    match compiled.verify() {
+        Err(VerifyError::TuningGenerationMismatch { plan, current }) => {
+            assert_eq!(plan, stamped);
+            assert!(current > stamped);
+        }
+        other => panic!("expected TuningGenerationMismatch, got {other:?}"),
+    }
+    // Replanning picks up the new generation and verifies again.
+    let fresh = compile_expr("ij,jk->ik", &dims, &opts).unwrap();
+    fresh.verify().expect("recompiled measured plan verifies");
+    // Analytic plans never carry a stamp and are untouched by calibration.
+    let optimal = compile_expr("ij,jk->ik", &dims, &PlanOptions::default()).unwrap();
+    assert_eq!(optimal.plan().tuning_generation, None);
+    optimal.verify().unwrap();
+}
+
+#[test]
+fn plan_cache_key_rotates_with_tuning_generation() {
+    let _g = lock_global();
+    let _restore = StateGuard;
+    let cache = PlanCache::new();
+    let dims = vec![vec![4, 6], vec![6, 8]];
+    let opts = PlanOptions {
+        strategy: Strategy::Measured { top_k: 2 },
+        ..Default::default()
+    };
+    cache.get_or_compile("ij,jk->ik", &dims, &opts).unwrap();
+    cache.get_or_compile("ij,jk->ik", &dims, &opts).unwrap();
+    assert_eq!((cache.misses(), cache.hits()), (1, 1));
+
+    // Calibration data landed: the measured key rotates, so the stale
+    // compiled plan is never served again.
+    tuning::global().record("some-context", "some-sig", measurement(1e-3, 10.0));
+    cache.get_or_compile("ij,jk->ik", &dims, &opts).unwrap();
+    assert_eq!((cache.misses(), cache.hits()), (2, 1));
+
+    // Analytic strategies key with generation 0 and keep hitting.
+    let analytic = PlanOptions::default();
+    cache.get_or_compile("ij,jk->ik", &dims, &analytic).unwrap();
+    tuning::global().record("other-context", "sig", measurement(1e-3, 10.0));
+    cache.get_or_compile("ij,jk->ik", &dims, &analytic).unwrap();
+    assert_eq!((cache.misses(), cache.hits()), (3, 2));
+}
+
+/// Run forward + one train step, returning (output bits, grad bits).
+fn run_both(
+    compiled: &conv_einsum::CompiledPlan,
+    inputs: &[&Tensor],
+) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let mut ws = Workspace::new();
+    let out = compiled.run(inputs, &mut ws).unwrap();
+
+    let layout = compiled.train_layout(CkptPolicy::StoreAll);
+    let mut tws = TrainWorkspace::new();
+    let mut dout = Tensor::zeros(compiled.out_shape());
+    for (i, v) in dout.data_mut().iter_mut().enumerate() {
+        *v = ((i % 13) as f32) * 0.25 - 1.0;
+    }
+    let mut tout = Tensor::zeros(compiled.out_shape());
+    let mut grads: Vec<Tensor> = compiled
+        .in_dims()
+        .iter()
+        .map(|d| Tensor::zeros(d))
+        .collect();
+    compiled
+        .train_step(&layout, inputs, &dout, &mut tws, &mut tout, &mut grads)
+        .unwrap();
+    assert_eq!(bits(&out), bits(&tout), "taped forward matches inference");
+    (bits(&out), grads.iter().map(bits).collect())
+}
+
+#[test]
+fn measured_plans_bit_identical_to_optimal_across_kinds_and_backends() {
+    let _g = lock_global();
+    let _restore = StateGuard;
+    // Pin the portable kernels: mirror eligibility and accumulation order
+    // become machine-independent, so this grid behaves identically on
+    // AVX2, NEON, and fallback hosts.
+    dispatch::force_variant(Some(Variant::Portable));
+
+    const KINDS: [ConvKind; 4] = [
+        ConvKind::Same,
+        ConvKind::Valid,
+        ConvKind::Full,
+        ConvKind::Circular,
+    ];
+    let backends = [Backend::Scalar, Backend::Parallel { threads: 2 }];
+
+    // A conv expression (2-input conv mode, so every kind is legal) and a
+    // pure contraction; both 2-input, so the measured tournament contains
+    // exactly the analytic tree (conv steps are never mirrored) or the
+    // tree plus its orientation mirror.
+    let conv_case = ("bsx,tsx->btx|x", vec![vec![2, 3, 9], vec![4, 3, 9]]);
+    let mm_case = ("ij,jk->ik", vec![vec![6, 24], vec![24, 10]]);
+
+    let mut rng = Rng::new(20260808);
+    for backend in backends {
+        for kind in KINDS {
+            let opts = |strategy| PlanOptions {
+                strategy,
+                conv_kinds: Some(vec![kind]),
+                backend,
+                ..Default::default()
+            };
+            let (expr, dims) = conv_case.clone();
+            let probes: Vec<Tensor> = dims
+                .iter()
+                .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+                .collect();
+            let inputs: Vec<&Tensor> = probes.iter().collect();
+            let optimal = compile_expr(expr, &dims, &opts(Strategy::Optimal)).unwrap();
+            let measured =
+                compile_expr(expr, &dims, &opts(Strategy::Measured { top_k: 3 })).unwrap();
+            assert_eq!(
+                run_both(&optimal, &inputs),
+                run_both(&measured, &inputs),
+                "{expr} kind={kind:?} backend={backend:?}"
+            );
+        }
+
+        // Contraction case: seed the cache so the measured planner picks
+        // the orientation *mirror* — the selection wall-clock can prefer —
+        // and prove outputs and gradients still match the analytic plan
+        // bit for bit.
+        let (expr, dims) = mm_case.clone();
+        let sized = SizedSpec::new(parse(expr).unwrap(), dims.clone()).unwrap();
+        let base = PlanOptions {
+            backend,
+            ..Default::default()
+        };
+        let cands = conv_einsum::candidate_plans(&sized, &base, 1).unwrap();
+        assert_eq!(
+            cands.len(),
+            2,
+            "2-input contraction must offer canonical + mirror"
+        );
+        let ctx = CalibKey::current(&cands[0].expr, &dims, backend, false).context_id();
+        // Canonical "slow", mirror "fast": measured choice flips.
+        tuning::global().record(&ctx, &cands[0].signature(), measurement(5e-3, cands[0].cost));
+        tuning::global().record(&ctx, &cands[1].signature(), measurement(1e-3, cands[1].cost));
+
+        let probes: Vec<Tensor> = dims
+            .iter()
+            .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+            .collect();
+        let inputs: Vec<&Tensor> = probes.iter().collect();
+        let optimal = compile_expr(expr, &dims, &base).unwrap();
+        let measured = compile_expr(
+            expr,
+            &dims,
+            &PlanOptions {
+                strategy: Strategy::Measured { top_k: 1 },
+                backend,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            measured.plan().signature(),
+            cands[1].signature(),
+            "seeded measurements must flip selection to the mirror"
+        );
+        assert_ne!(measured.plan().signature(), optimal.plan().signature());
+        assert_eq!(
+            run_both(&optimal, &inputs),
+            run_both(&measured, &inputs),
+            "mirrored measured plan must stay bit-identical ({backend:?})"
+        );
+        tuning::global().clear();
+    }
+}
+
+#[test]
+fn gemm_kc_tuning_is_bit_invariant() {
+    let _g = lock_global();
+    let _restore = StateGuard;
+    // Native variant: on SIMD hosts the packed GEMM engages for this
+    // geometry and the tuned kc actually changes the blocking; on
+    // portable hosts resolved_gemm is None both ways and the test
+    // degenerates to a (still valid) equality check.
+    let dims = vec![vec![16, 32], vec![32, 64]];
+    let mut rng = Rng::new(7);
+    let probes: Vec<Tensor> = dims
+        .iter()
+        .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+        .collect();
+    let inputs: Vec<&Tensor> = probes.iter().collect();
+    let opts = PlanOptions::default();
+
+    let untuned = compile_expr("ij,jk->ik", &dims, &opts).unwrap();
+    let mut ws = Workspace::new();
+    let before = bits(&untuned.run(&inputs, &mut ws).unwrap());
+
+    // Tune the forward geometry (m, n, k) = (16, 64, 32) to a much
+    // smaller cache block; keep the engagement threshold at the default
+    // so only the (bit-invariant) blocking changes.
+    tuning::global().set_gemm_tuning(GemmTuning {
+        m: 16,
+        n: 64,
+        k: 32,
+        kc: 8,
+        min_flops: PACK_MIN_FLOPS,
+    });
+    if let Some(g) = dispatch::resolved_gemm(dispatch::selected(), 16, 64, 32) {
+        assert_eq!(g.kc, 8, "tuned kc must be resolved for the geometry");
+    }
+
+    let tuned = compile_expr("ij,jk->ik", &dims, &opts).unwrap();
+    let after = bits(&tuned.run(&inputs, &mut ws).unwrap());
+    assert_eq!(
+        before, after,
+        "kc-only GEMM tuning must not change result bits"
+    );
+}
+
+#[test]
+fn pinned_fixture_calibration_smoke() {
+    // CI runs this with CONV_EINSUM_TUNING_CACHE pointing at the pinned
+    // fixture in tests/fixtures/; without the variable the test is a no-op
+    // so ordinary `cargo test` stays hermetic.
+    let Ok(path) = std::env::var(TUNING_CACHE_ENV) else {
+        return;
+    };
+    let _g = lock_global();
+    let _restore = StateGuard;
+
+    // The pinned artifact parses and carries both measurement contexts
+    // and a GEMM tuning.
+    let local = TuningCache::new();
+    let loaded = local.load_path(&path).expect("pinned fixture must parse");
+    assert!(loaded >= 1, "fixture carries measurements");
+    assert!(
+        !local.gemm_tunings().is_empty(),
+        "fixture carries a GEMM tuning"
+    );
+
+    // Deterministic end-to-end calibration: pinned backend geometry and
+    // kernel variant, fixed probe seed, no persistence (the checked-in
+    // fixture must never be overwritten by a test run).
+    dispatch::force_variant(Some(Variant::Portable));
+    let dims = vec![vec![3, 48], vec![48, 32]];
+    let opts = PlanOptions {
+        strategy: Strategy::Measured { top_k: 2 },
+        backend: Backend::Parallel { threads: 2 },
+        ..Default::default()
+    };
+    let spec = CalibrationSpec {
+        top_k: 2,
+        warmup: 1,
+        iters: 3,
+        persist: false,
+        seed: 7,
+    };
+    let report = calibrate_expr("ij,jk->ik", &dims, &opts, &spec).unwrap();
+    assert!(
+        report.candidates.len() >= 2,
+        "tournament includes the orientation mirror"
+    );
+    assert!(report.saved.is_none(), "persist=false never writes");
+    assert!(report.best < report.candidates.len());
+
+    // The calibrated context now drives measured planning: the compile
+    // succeeds, verifies, and selects the measured wall-clock winner.
+    let compiled = compile_expr("ij,jk->ik", &dims, &opts).unwrap();
+    compiled.verify().expect("measured plan verifies");
+    assert_eq!(
+        compiled.plan().signature(),
+        report.candidates[report.best].signature,
+        "measured planning selects the calibration winner"
+    );
+}
