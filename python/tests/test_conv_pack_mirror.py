@@ -1,0 +1,309 @@
+"""Differential mirror of the Rust conv-atom packed-panel math.
+
+This file transcribes, in numpy, the index algebra behind the packed
+run-structured conv-atom panels in ``rust/src/exec/atom.rs`` and
+``rust/src/kernels/pack.rs``:
+
+* ``conv_triples`` — the per-axis ``(a, b, p)`` triple enumeration for
+  Same / Valid / Full / Circular convolution kinds,
+* ``head_and_runs`` — cross-product head over all-but-last conv axes,
+  unit-stride run merging on the last axis,
+* ``fwd_tables`` — the flattened head-major × runs table
+  ``(boff, aoff, ooff, len)`` and its ``boffs`` gather column,
+* ``pack_conv_weights`` — the zero-padded consumption-ordered weight
+  panel (``ne`` = run count rounded up to the 8-lane width),
+* the packed and unpacked forward loops, and the v3 run-structured
+  backward passes (dA with the ``w == 0`` skip, dB without it).
+
+Each piece is checked against an independent brute-force oracle built
+straight from the combined triples, over all four conv kinds, flipped
+feature/filter orders, a two-axis geometry with a non-trivial head, and
+a modulus-clamped circular case.  Inputs are small integers stored as
+float32, so every sum is exact and the comparisons are bit-strict —
+the same quantifier the Rust suite uses for packed-vs-unpacked parity.
+"""
+
+import numpy as np
+import pytest
+
+LANES = 8  # kernels/pack.rs pads each panel row to this multiple.
+
+
+class ConvAxis:
+    def __init__(self, kind, ia, ib, modulus=None):
+        assert kind in ("same", "valid", "full", "circular")
+        self.kind = kind
+        self.ia = ia
+        self.ib = ib
+        self.modulus = modulus
+
+    def out_len(self):
+        feat = max(self.ia, self.ib)
+        filt = min(self.ia, self.ib)
+        if self.kind == "full":
+            return self.ia + self.ib - 1
+        if self.kind == "same":
+            return feat
+        if self.kind == "valid":
+            return feat - filt + 1
+        m = feat if self.modulus is None else self.modulus
+        return min(self.ia + self.ib - 1, m)
+
+
+def conv_triples(c):
+    """Mirror of atom.rs::conv_triples — a-major, then b."""
+    feat = max(c.ia, c.ib)
+    filt = min(c.ia, c.ib)
+    triples = []
+    for a in range(c.ia):
+        for b in range(c.ib):
+            if c.kind == "full":
+                triples.append((a, b, a + b))
+            elif c.kind == "circular":
+                m = feat if c.modulus is None else c.modulus
+                triples.append((a, b, (a + b) % m))
+            elif c.kind == "same":
+                p = a + b - (filt - 1) // 2
+                if 0 <= p < feat:
+                    triples.append((a, b, p))
+            else:  # valid
+                p = a + b - (filt - 1)
+                if 0 <= p < feat - filt + 1:
+                    triples.append((a, b, p))
+    return triples
+
+
+def combined_triples(axes):
+    """Cross-product of the per-axis triples with row-major flattening."""
+    combo = [(0, 0, 0)]
+    for c in axes:
+        combo = [
+            (ao * c.ia + ia, bo * c.ib + ib, po * c.out_len() + p)
+            for (ao, bo, po) in combo
+            for (ia, ib, p) in conv_triples(c)
+        ]
+    return combo
+
+
+def head_and_runs(axes):
+    """Mirror of atom.rs::head_and_runs."""
+    head = [(0, 0, 0)]
+    for c in axes[:-1]:
+        head = [
+            (ao * c.ia + ia, bo * c.ib + ib, po * c.out_len() + p)
+            for (ao, bo, po) in head
+            for (ia, ib, p) in conv_triples(c)
+        ]
+    last = axes[-1]
+    by_ib = [[] for _ in range(last.ib)]
+    for (ia, ib, p) in conv_triples(last):
+        by_ib[ib].append((ia, p))
+    runs = []
+    for ib, pairs in enumerate(by_ib):
+        pairs.sort()
+        for (ia, p) in pairs:
+            if runs and runs[-1][0] == ib:
+                _, ia0, p0, ln = runs[-1]
+                if ia == ia0 + ln and p == p0 + ln:
+                    runs[-1] = (ib, ia0, p0, ln + 1)
+                    continue
+            runs.append((ib, ia, p, 1))
+    return head, runs
+
+
+def fwd_tables(axes):
+    """Mirror of AtomKernel::fwd_tables — flat table plus gather column."""
+    head, runs = head_and_runs(axes)
+    last = axes[-1]
+    la, lb, lo = last.ia, last.ib, last.out_len()
+    flat = [
+        (bo * lb + ib, ao * la + ia0, po * lo + p0, ln)
+        for (ao, bo, po) in head
+        for (ib, ia0, p0, ln) in runs
+    ]
+    boffs = [entry[0] for entry in flat]
+    return flat, boffs
+
+
+def round_up_lanes(entries):
+    return (entries + LANES - 1) // LANES * LANES
+
+
+def pack_conv_weights(bv, rows, pb, boffs, ne):
+    """Mirror of kernels/pack.rs::pack_conv_weights (zero-padded gather)."""
+    panel = np.zeros(rows * ne, dtype=np.float32)
+    for r in range(rows):
+        for e, boff in enumerate(boffs):
+            panel[r * ne + e] = bv[r * pb + boff]
+    return panel
+
+
+class Atom:
+    def __init__(self, g, t, n, s, axes):
+        self.g, self.t, self.n, self.s, self.axes = g, t, n, s, axes
+        self.pa = int(np.prod([c.ia for c in axes]))
+        self.pb = int(np.prod([c.ib for c in axes]))
+        self.po = int(np.prod([c.out_len() for c in axes]))
+
+
+def forward_mirror(atom, av, bv, packed):
+    """The forward_impl conv nest: packed panel or strided weight reads."""
+    g, t, n, s = atom.g, atom.t, atom.n, atom.s
+    pa, pb, po = atom.pa, atom.pb, atom.po
+    flat, boffs = fwd_tables(atom.axes)
+    ne = round_up_lanes(len(flat))
+    panel = pack_conv_weights(bv, g * n * s, pb, boffs, ne) if packed else None
+    out = np.zeros(g * t * n * po, dtype=np.float32)
+    for gi in range(g):
+        for ti in range(t):
+            for ni in range(n):
+                ob = ((gi * t + ti) * n + ni) * po
+                for si in range(s):
+                    abase = ((gi * t + ti) * s + si) * pa
+                    row = ((gi * n + ni) * s + si) * ne
+                    bbase = ((gi * n + ni) * s + si) * pb
+                    for e, (boff, aoff, ooff, ln) in enumerate(flat):
+                        w = panel[row + e] if packed else bv[bbase + boff]
+                        if w == 0.0:
+                            continue
+                        dst = slice(ob + ooff, ob + ooff + ln)
+                        src = slice(abase + aoff, abase + aoff + ln)
+                        out[dst] += w * av[src]
+    return out
+
+
+def backward_mirror(atom, av, bv, dv, packed):
+    """The v3 run-structured backward: dA (with w==0 skip) and dB."""
+    g, t, n, s = atom.g, atom.t, atom.n, atom.s
+    pa, pb, po = atom.pa, atom.pb, atom.po
+    flat, boffs = fwd_tables(atom.axes)
+    ne = round_up_lanes(len(flat))
+    panel = pack_conv_weights(bv, g * n * s, pb, boffs, ne) if packed else None
+    da = np.zeros(g * t * s * pa, dtype=np.float32)
+    db = np.zeros(g * n * s * pb, dtype=np.float32)
+    for gi in range(g):
+        for ti in range(t):
+            for ni in range(n):
+                ob = ((gi * t + ti) * n + ni) * po
+                for si in range(s):
+                    abase = ((gi * t + ti) * s + si) * pa
+                    row = ((gi * n + ni) * s + si) * ne
+                    bbase = ((gi * n + ni) * s + si) * pb
+                    for e, (boff, aoff, ooff, ln) in enumerate(flat):
+                        asl = slice(abase + aoff, abase + aoff + ln)
+                        osl = slice(ob + ooff, ob + ooff + ln)
+                        w = panel[row + e] if packed else bv[bbase + boff]
+                        if w != 0.0:
+                            da[asl] += w * dv[osl]
+                        db[bbase + boff] += float(np.dot(av[asl], dv[osl]))
+    return da, db
+
+
+def oracle(atom, av, bv, dv):
+    """Brute-force forward + grads straight from the combined triples."""
+    g, t, n, s = atom.g, atom.t, atom.n, atom.s
+    a4 = av.reshape(g, t, s, atom.pa)
+    b4 = bv.reshape(g, n, s, atom.pb)
+    d4 = dv.reshape(g, t, n, atom.po)
+    out = np.zeros((g, t, n, atom.po), dtype=np.float32)
+    da = np.zeros_like(a4)
+    db = np.zeros_like(b4)
+    for (a, b, p) in combined_triples(atom.axes):
+        out[:, :, :, p] += np.einsum("gts,gns->gtn", a4[:, :, :, a], b4[:, :, :, b])
+        da[:, :, :, a] += np.einsum("gtn,gns->gts", d4[:, :, :, p], b4[:, :, :, b])
+        db[:, :, :, b] += np.einsum("gtn,gts->gns", d4[:, :, :, p], a4[:, :, :, a])
+    return out.ravel(), da.ravel(), db.ravel()
+
+
+def rand_ints(n, seed):
+    """Small integers as float32: every sum below is exact, so comparisons
+    are bit-strict and independent of accumulation order."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(-3, 4, size=n).astype(np.float32)
+
+
+GEOMETRIES = [
+    pytest.param([ConvAxis(k, 9, 3)], id=f"{k}-1axis") for k in
+    ("same", "valid", "full", "circular")
+] + [
+    pytest.param([ConvAxis(k, 3, 9)], id=f"{k}-flipped") for k in
+    ("same", "valid", "full", "circular")
+] + [
+    pytest.param([ConvAxis(k, 6, 3), ConvAxis(k, 5, 2)], id=f"{k}-2axis")
+    for k in ("same", "valid", "full", "circular")
+] + [
+    pytest.param([ConvAxis("circular", 7, 3, modulus=5)], id="circular-modulus"),
+]
+
+
+def make_atom(axes):
+    return Atom(g=2, t=3, n=2, s=2, axes=axes)
+
+
+@pytest.mark.parametrize("axes", GEOMETRIES)
+class TestConvPackMirror:
+    def test_flat_table_covers_combined_triples(self, axes):
+        """Expanding every run element-wise recovers exactly the combined
+        triples — no entry dropped, none duplicated, none invented."""
+        flat, _ = fwd_tables(axes)
+        expanded = sorted(
+            (boff, aoff + j, ooff + j)
+            for (boff, aoff, ooff, ln) in flat
+            for j in range(ln)
+        )
+        expected = sorted((b, a, p) for (a, b, p) in combined_triples(axes))
+        assert expanded == expected
+
+    def test_panel_width_rounds_to_lanes(self, axes):
+        flat, _ = fwd_tables(axes)
+        ne = round_up_lanes(len(flat))
+        assert ne % LANES == 0
+        assert len(flat) <= ne < len(flat) + LANES
+
+    def test_pack_gathers_in_consumption_order_and_zero_pads(self, axes):
+        atom = make_atom(axes)
+        flat, boffs = fwd_tables(axes)
+        ne = round_up_lanes(len(flat))
+        rows = atom.g * atom.n * atom.s
+        bv = rand_ints(rows * atom.pb, seed=11)
+        panel = pack_conv_weights(bv, rows, atom.pb, boffs, ne)
+        for r in range(rows):
+            wrow = panel[r * ne:(r + 1) * ne]
+            for e, boff in enumerate(boffs):
+                assert wrow[e] == bv[r * atom.pb + boff]
+            assert not wrow[len(flat):].any()
+
+    def test_packed_forward_matches_unpacked_and_oracle(self, axes):
+        atom = make_atom(axes)
+        av = rand_ints(atom.g * atom.t * atom.s * atom.pa, seed=21)
+        bv = rand_ints(atom.g * atom.n * atom.s * atom.pb, seed=22)
+        dv = rand_ints(atom.g * atom.t * atom.n * atom.po, seed=23)
+        want, _, _ = oracle(atom, av, bv, dv)
+        packed = forward_mirror(atom, av, bv, packed=True)
+        unpacked = forward_mirror(atom, av, bv, packed=False)
+        assert np.array_equal(packed, unpacked)
+        assert np.array_equal(packed, want)
+
+    def test_run_structured_backward_matches_oracle(self, axes):
+        atom = make_atom(axes)
+        av = rand_ints(atom.g * atom.t * atom.s * atom.pa, seed=31)
+        bv = rand_ints(atom.g * atom.n * atom.s * atom.pb, seed=32)
+        dv = rand_ints(atom.g * atom.t * atom.n * atom.po, seed=33)
+        _, want_da, want_db = oracle(atom, av, bv, dv)
+        for packed in (True, False):
+            da, db = backward_mirror(atom, av, bv, dv, packed=packed)
+            assert np.array_equal(da, want_da)
+            assert np.array_equal(db, want_db)
+
+    def test_zero_weights_do_not_change_grad_b(self, axes):
+        """The dA pass may skip w == 0 (a zero weight contributes nothing),
+        but dB must NOT skip: a zero weight still has a nonzero gradient."""
+        atom = make_atom(axes)
+        av = rand_ints(atom.g * atom.t * atom.s * atom.pa, seed=41)
+        bv = rand_ints(atom.g * atom.n * atom.s * atom.pb, seed=42)
+        dv = rand_ints(atom.g * atom.t * atom.n * atom.po, seed=43)
+        bv[::3] = 0.0  # force plenty of skipped weights
+        _, want_da, want_db = oracle(atom, av, bv, dv)
+        da, db = backward_mirror(atom, av, bv, dv, packed=True)
+        assert np.array_equal(da, want_da)
+        assert np.array_equal(db, want_db)

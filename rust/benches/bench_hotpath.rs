@@ -2,7 +2,10 @@
 //! microkernel throughput (GEMM-shaped contraction + conv atom GFLOP/s at
 //! small/medium/large geometries for every runtime-dispatchable kernel
 //! variant, dumped to `BENCH_kernels.json` with the dispatched-vs-portable
-//! large-GEMM speedup and a tiny-K non-regression assertion), the
+//! large-GEMM speedup, a tiny-K non-regression assertion, a packed-vs-
+//! unpacked conv-atom weight-panel sweep across all four ConvKinds with a
+//! tiny-geometry short-circuit assertion, and the self-learning per-
+//! geometry GEMM-blocking sweep), the
 //! measured-vs-FLOPs planner sweep (skewed GEMM geometries on the parallel
 //! backend, calibrated through the plan tournament, dumped to
 //! `BENCH_planner.json`; all candidates are asserted bit-identical and the
@@ -24,17 +27,19 @@
 //! With `CONV_EINSUM_BENCH_ASSERT_ONLY=1` only the zero-allocation
 //! assertions run (fast; used by the CI release-test job) — inference,
 //! single training steps, coalesced training batches, and measured-plan
-//! replays.
+//! replays. With `CONV_EINSUM_BENCH_KERNELS_ONLY=1` only the per-variant
+//! kernel section runs and writes `BENCH_kernels.json` (used by the CI
+//! forced-variant matrix job to publish the packed-vs-unpacked sweep).
 use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff, TrainSegment};
 use conv_einsum::coordinator::{EvalService, ServiceConfig};
 use conv_einsum::cost::tuning;
-use conv_einsum::einsum::{parse, SizedSpec};
-use conv_einsum::exec::{pairwise, pairwise_with};
+use conv_einsum::einsum::{parse, ConvKind, SizedSpec};
+use conv_einsum::exec::{force_conv_pack, pairwise, pairwise_with};
 use conv_einsum::kernels::{axpy8, dispatch};
 use conv_einsum::parallel::{default_threads, Pool};
 use conv_einsum::planner::{candidate_plans, contract_path, PlanOptions, Strategy};
 use conv_einsum::tnn::{build_layer, Decomp};
-use conv_einsum::tune::{calibrate_expr, CalibrationSpec};
+use conv_einsum::tune::{calibrate_expr, calibrate_gemm_blocking, CalibrationSpec};
 use conv_einsum::util::json::Json;
 use conv_einsum::util::rng::Rng;
 use conv_einsum::util::timing::bench;
@@ -462,6 +467,128 @@ fn kernel_variant_benches(rng: &mut Rng) {
     }
     println!("  -> tiny-K short-circuit holds across variants (no dispatch regression)");
 
+    // ---- packed conv-atom weight panels: packed vs unpacked per kind ------
+    // One realistic 1-D conv layer geometry per convolution variety on the
+    // dispatched variant: the run-structured loop with the weights gathered
+    // into a zero-padded consumption-ordered panel vs the same loop reading
+    // weights through the strided `boff` gather. Packing is a pure data-
+    // layout change, so the speedup is the panel's cache story alone.
+    println!("== packed conv-atom panels: packed vs unpacked per ConvKind ==");
+    let pack_kinds = [
+        (ConvKind::Same, "same"),
+        (ConvKind::Valid, "valid"),
+        (ConvKind::Full, "full"),
+        (ConvKind::Circular, "circular"),
+    ];
+    for (kind, kname) in pack_kinds {
+        let spec = SizedSpec::with_kinds(
+            parse("bsx,tsx->btx|x").unwrap(),
+            vec![vec![8, 16, 128], vec![32, 16, 5]],
+            vec![kind],
+        )
+        .unwrap();
+        let x = Tensor::rand(&[8, 16, 128], -1.0, 1.0, rng);
+        let w = Tensor::rand(&[32, 16, 5], -1.0, 1.0, rng);
+        let mults = (8usize * 16 * 32 * 128 * 5) as f64;
+        force_conv_pack(Some(false));
+        let unp = bench(&format!("conv-pack {kname} unpacked"), 3, 15, || {
+            let _ = pairwise_with(&spec, &x, &w, &[], &scalar_opts);
+        });
+        force_conv_pack(Some(true));
+        let pck = bench(&format!("conv-pack {kname} packed  "), 3, 15, || {
+            let _ = pairwise_with(&spec, &x, &w, &[], &scalar_opts);
+        });
+        force_conv_pack(None);
+        let speedup = unp.median_secs() / pck.median_secs();
+        println!(
+            "{}\n{}\n  -> {kname}: unpacked {:.2} GFLOP/s, packed {:.2} GFLOP/s, \
+             speedup {speedup:.2}x",
+            unp.report(),
+            pck.report(),
+            gflops(mults, unp.median_secs()),
+            gflops(mults, pck.median_secs())
+        );
+        report.insert(
+            format!("conv_pack_{kname}_unpacked_median_s"),
+            Json::num(unp.median_secs()),
+        );
+        report.insert(
+            format!("conv_pack_{kname}_packed_median_s"),
+            Json::num(pck.median_secs()),
+        );
+        report.insert(format!("conv_pack_{kname}_speedup"), Json::num(speedup));
+    }
+
+    // Tiny-geometry non-regression pin: a conv atom below the
+    // `CONV_PACK_MIN_FLOPS` floor short-circuits packing to the plain run
+    // loop, so auto routing must stay within noise of the forced-unpacked
+    // loop (0.5x floor absorbs timer noise).
+    let tiny_spec = SizedSpec::with_kinds(
+        parse("bsx,tsx->btx|x").unwrap(),
+        vec![vec![2, 3, 11], vec![4, 3, 3]],
+        vec![ConvKind::Same],
+    )
+    .unwrap();
+    let tx = Tensor::rand(&[2, 3, 11], -1.0, 1.0, rng);
+    let tw = Tensor::rand(&[4, 3, 3], -1.0, 1.0, rng);
+    force_conv_pack(None);
+    let tiny_auto = bench("conv-pack tiny auto    ", 20, 100, || {
+        let _ = pairwise_with(&tiny_spec, &tx, &tw, &[], &scalar_opts);
+    });
+    force_conv_pack(Some(false));
+    let tiny_plain = bench("conv-pack tiny unpacked", 20, 100, || {
+        let _ = pairwise_with(&tiny_spec, &tx, &tw, &[], &scalar_opts);
+    });
+    force_conv_pack(None);
+    println!("{}\n{}", tiny_auto.report(), tiny_plain.report());
+    assert!(
+        tiny_auto.median_secs() <= 2.0 * tiny_plain.median_secs(),
+        "tiny conv atom regressed under auto pack routing: auto {:.3e}s vs plain {:.3e}s \
+         (the CONV_PACK_MIN_FLOPS short-circuit must keep small atoms on the plain loop)",
+        tiny_auto.median_secs(),
+        tiny_plain.median_secs()
+    );
+    println!("  -> tiny conv short-circuit holds (auto routing within noise of plain loop)");
+    report.insert(
+        "conv_pack_tiny_auto_median_s".to_string(),
+        Json::num(tiny_auto.median_secs()),
+    );
+    report.insert(
+        "conv_pack_tiny_unpacked_median_s".to_string(),
+        Json::num(tiny_plain.median_secs()),
+    );
+
+    // ---- self-learning GEMM blocking: measured KC / engagement sweep ------
+    // The calibration sweep times each KC candidate (and the unpacked
+    // loop) per geometry and installs the winner in the dispatcher via the
+    // persistent tuning cache; the learned rows land in the report.
+    println!("== self-learning GEMM blocking: per-geometry KC sweep ==");
+    let blk_spec = CalibrationSpec {
+        top_k: 1,
+        warmup: 1,
+        iters: 5,
+        persist: false,
+        seed: 23,
+    };
+    match calibrate_gemm_blocking(&[(96, 96, 192), (48, 256, 512)], &blk_spec) {
+        Ok(rows) => {
+            for r in &rows {
+                println!(
+                    "  gemm {}x{}x{}: learned kc={} min_flops={} packed {:.3e}s \
+                     unpacked {:.3e}s (packs: {})",
+                    r.m, r.n, r.k, r.kc, r.min_flops, r.packed_secs, r.unpacked_secs,
+                    r.packs()
+                );
+            }
+            report.insert(
+                "gemm_blocking_sweep".to_string(),
+                Json::arr(rows.iter().map(|r| r.to_json())),
+            );
+        }
+        Err(e) => println!("  (gemm blocking sweep skipped: {e})"),
+    }
+    tuning::global().clear();
+
     std::fs::write("BENCH_kernels.json", Json::Obj(report).encode_pretty()).ok();
     println!("wrote BENCH_kernels.json\n");
 }
@@ -608,6 +735,16 @@ fn main() {
             "zero-allocation assertions passed \
              (inference + training + batched training + measured plans)"
         );
+        return;
+    }
+
+    // CI artifact path: only the per-variant kernel section — which also
+    // runs the packed-vs-unpacked conv-atom sweep, the tiny-geometry
+    // short-circuit assert, and the learned GEMM-blocking sweep — and its
+    // `BENCH_kernels.json` dump (used by the forced-variant matrix job).
+    if std::env::var("CONV_EINSUM_BENCH_KERNELS_ONLY").is_ok() {
+        let mut rng = Rng::new(3);
+        kernel_variant_benches(&mut rng);
         return;
     }
 

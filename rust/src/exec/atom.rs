@@ -42,13 +42,45 @@
 //! use, so scalar and parallel results are **bit-identical** on every path
 //! for a fixed variant.
 
+use std::sync::atomic::{AtomicU8, Ordering};
+
 use crate::einsum::{ConvKind, ModeId, SizedSpec};
 use crate::exec::{Backend, ExecOptions};
 use crate::kernels::dispatch::{self, GemmParams, KernelTable, Variant};
-use crate::kernels::pack::{pack_a, pack_b};
-use crate::kernels::{axpy_run, LANES, StepKernel};
+use crate::kernels::pack::{pack_a, pack_b, pack_conv_weights};
+use crate::kernels::{axpy_run, dot_run, LANES, StepKernel};
 use crate::parallel::Pool;
 use crate::tensor::Tensor;
+
+/// Test/bench override for the conv-atom panel engagement: 0 = auto
+/// (the [`dispatch::ConvPackParams::engages`] predicate), 1 = never pack,
+/// 2 = always pack (subject only to the workspace panel ceiling).
+static FORCE_CONV_PACK: AtomicU8 = AtomicU8::new(0);
+
+/// Pin the conv-atom panel routing (`None` restores the auto predicate).
+///
+/// Test/bench plumbing only (the packed-vs-unpacked sweep and the
+/// bit-identity suite): the decision is captured per [`AtomKernel`] at
+/// first use, so set this *before* compiling the plans it should affect
+/// and restore it afterwards. Packing is a pure data-layout change —
+/// forcing it either way never changes result bits for a fixed variant.
+#[doc(hidden)]
+pub fn force_conv_pack(v: Option<bool>) {
+    let code = match v {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    FORCE_CONV_PACK.store(code, Ordering::Relaxed);
+}
+
+fn forced_conv_pack() -> Option<bool> {
+    match FORCE_CONV_PACK.load(Ordering::Relaxed) {
+        1 => Some(false),
+        2 => Some(true),
+        _ => None,
+    }
+}
 
 /// One convolution axis of the atom.
 #[derive(Debug, Clone)]
@@ -327,12 +359,15 @@ const AUTO_PARALLEL_MIN_WORK: usize = 1 << 13;
 /// times later than on the unblocked kernels.
 const AUTO_PARALLEL_MIN_WORK_GEMM: usize = 1 << 15;
 
-/// Packing scratch for the cache-blocked GEMM path. On the hot replay
-/// paths these borrow the `pack_a`/`pack_b` buffers owned by the
-/// workspace ([`crate::exec::Workspace`] / the training arena), keeping
+/// Packing scratch for the cache-blocked GEMM path and the conv-atom
+/// weight panels. On the hot replay paths these borrow the
+/// `pack_a`/`pack_b` buffers owned by the workspace
+/// ([`crate::exec::Workspace`] / the training arena), keeping
 /// steady-state execution allocation-free; one-shot entry points pass
-/// short-lived locals. Conv atoms and variants without a packed GEMM never
-/// touch them, so empty slices are fine whenever [`Atom::pack_lens`]
+/// short-lived locals. Contraction atoms use both buffers for the GEMM
+/// panels; conv atoms whose geometry engages the panel path (see
+/// [`dispatch::ConvPackParams`]) use `b` for the consumption-ordered
+/// weight panel. Empty slices are fine whenever [`Atom::pack_lens`]
 /// returns zeros.
 pub struct PackBufs<'a> {
     /// A-panel buffer (at least `pack_lens().0` floats).
@@ -341,20 +376,54 @@ pub struct PackBufs<'a> {
     pub b: &'a mut [f32],
 }
 
-/// Kernel tables for one [`Atom`], built lazily per direction and cached:
-/// the head-axes triple table and run-coalesced last conv axis driving the
-/// forward kernels, and the fully combined triple table driving the
-/// backward kernels. Forward-only paths (inference plans, one-shot
-/// `pairwise`) never pay for the backward table and vice versa; a repeat
-/// caller ([`crate::exec::CompiledPlan`], the autodiff tape) initializes
-/// each at most once. The tables are unused for pure contractions (the
+/// Forward tables of a conv atom: the head-axes triple table, the
+/// run-coalesced last axis, and the flattened `(head × run)`
+/// consumption-order view the packed panel path and the run-structured
+/// backward iterate.
+#[derive(Debug, Clone)]
+struct FwdTables {
+    /// Head triples `(a_off, b_off, out_off)` over all conv axes but the
+    /// last (in units of the last axis's extents).
+    head: Vec<(u32, u32, u32)>,
+    /// Last-axis runs `(ib, ia_start, p_start, len)`.
+    runs: Vec<(u32, u32, u32, u32)>,
+    /// `head × runs` flattened in consumption order:
+    /// `(b_off, a_off, out_off, len)` with all offsets resolved into the
+    /// conv blocks (`b_off = bo·lb + ib`, `a_off = ao·la + ia_start`,
+    /// `out_off = po·lo + p_start`).
+    flat: Vec<(u32, u32, u32, u32)>,
+    /// The `b_off` column of `flat` — the gather list for
+    /// [`pack_conv_weights`].
+    boffs: Vec<u32>,
+}
+
+/// Resolved conv-panel packing decision for one [`AtomKernel`] (the conv
+/// analogue of the resolved [`GemmParams`]): row width and total panel
+/// footprint of the consumption-ordered weight panel.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ConvPack {
+    /// Panel row width: `flat.len()` rounded up to a [`LANES`] multiple
+    /// (the pad entries are zero weights, which the run loops skip).
+    ne: usize,
+    /// Total panel footprint: `g · n · s · ne` floats.
+    panel_len: usize,
+}
+
+/// Kernel tables for one [`Atom`], built lazily and cached: the head-axes
+/// triple table, the run-coalesced last conv axis, and the flattened
+/// consumption-order view (see [`FwdTables`]) that drive both the forward
+/// and the v3 run-structured backward kernels. A repeat caller
+/// ([`crate::exec::CompiledPlan`], the autodiff tape) initializes the
+/// tables at most once. The tables are unused for pure contractions (the
 /// matmul kernels need none), but every holder carries the [`StepKernel`]
 /// selected for the atom and the microkernel [`KernelTable`] (variant)
 /// pinned at build time. Build the holder with [`Atom::kernel`].
 #[derive(Debug, Clone)]
 pub struct AtomKernel {
-    fwd: std::sync::OnceLock<(Vec<(u32, u32, u32)>, Vec<(u32, u32, u32, u32)>)>,
-    combined: std::sync::OnceLock<Vec<(u32, u32, u32)>>,
+    fwd: std::sync::OnceLock<FwdTables>,
+    /// Resolved conv-panel decision, captured at first use (compile time
+    /// via [`Atom::pack_lens`]) so replays and workspace sizing agree.
+    conv_pack: std::sync::OnceLock<Option<ConvPack>>,
     step: StepKernel,
     table: &'static KernelTable,
     /// GEMM parameters resolved for this atom's forward geometry when the
@@ -399,14 +468,60 @@ impl AtomKernel {
         self.gemm
     }
 
-    /// Forward tables (head triples + last-axis runs); conv atoms only.
-    fn fwd_tables(&self, atom: &Atom) -> &(Vec<(u32, u32, u32)>, Vec<(u32, u32, u32, u32)>) {
-        self.fwd.get_or_init(|| atom.head_and_runs())
+    /// Forward tables (head triples, last-axis runs, flattened
+    /// consumption-order view); conv atoms only.
+    // alloc-ok(fn): built at most once per holder (cached in the OnceLock),
+    // at compile time on every workspace-backed path (pack_lens forces it).
+    fn fwd_tables(&self, atom: &Atom) -> &FwdTables {
+        self.fwd.get_or_init(|| {
+            let (head, runs) = atom.head_and_runs();
+            let last = atom.conv.last().unwrap();
+            let (la, lb, lo) = (last.ia as u32, last.ib as u32, last.out as u32);
+            let mut flat = Vec::with_capacity(head.len() * runs.len());
+            for &(ao, bo, poo) in &head {
+                for &(ib, ia0, p0, len) in &runs {
+                    flat.push((bo * lb + ib, ao * la + ia0, poo * lo + p0, len));
+                }
+            }
+            let boffs = flat.iter().map(|&(boff, ..)| boff).collect();
+            FwdTables {
+                head,
+                runs,
+                flat,
+                boffs,
+            }
+        })
     }
 
-    /// Backward table (fully combined triples); conv atoms only.
-    fn combined_table(&self, atom: &Atom) -> &Vec<(u32, u32, u32)> {
-        self.combined.get_or_init(|| atom.combined_triples())
+    /// The conv-panel decision for this holder (always `None` for pure
+    /// contractions). Resolved once — from the [`dispatch::ConvPackParams`]
+    /// engagement predicate, or a [`force_conv_pack`] override — and
+    /// cached, so execution and [`Atom::pack_lens`] workspace sizing can
+    /// never disagree. Tiny geometries (below the predicate's FLOP floor)
+    /// short-circuit to the plain run loops here.
+    pub(crate) fn conv_pack(&self, atom: &Atom) -> Option<ConvPack> {
+        *self.conv_pack.get_or_init(|| {
+            if atom.conv.is_empty() {
+                return None;
+            }
+            let entries = self.fwd_tables(atom).flat.len();
+            if entries == 0 {
+                return None;
+            }
+            let ne = (entries + LANES - 1) / LANES * LANES;
+            let panel_len = atom
+                .g
+                .saturating_mul(atom.n)
+                .saturating_mul(atom.s)
+                .saturating_mul(ne);
+            let cp = dispatch::conv_pack_params(self.table);
+            let engaged = match forced_conv_pack() {
+                Some(true) => panel_len <= cp.max_panel,
+                Some(false) => false,
+                None => cp.engages(atom.flop_estimate(), atom.t, panel_len),
+            };
+            engaged.then_some(ConvPack { ne, panel_len })
+        })
     }
 }
 
@@ -441,19 +556,25 @@ impl Atom {
         )
     }
 
-    /// Packing-buffer lengths `(pack_a_len, pack_b_len)` the cache-blocked
-    /// GEMM path may need for this atom under `table`: zeros for conv atoms
-    /// and for variants without a packed GEMM. Sized as the elementwise max
-    /// over the three matmul orientations the atom can run — forward
+    /// Packing-buffer lengths `(pack_a_len, pack_b_len)` this atom may
+    /// need under `kernel`. For pure contractions these size the
+    /// cache-blocked GEMM panels, as the elementwise max over the three
+    /// matmul orientations the atom can run — forward
     /// `C(t×n) += A(t×s)·B(n×s)ᵀ`, backward `da(t×s) += D(t×n)·B(n×s)` and
     /// `db(n×s) += Dᵀ(n×t)·A(t×s)` — counting only orientations whose shape
-    /// actually engages the packed path. The `+ LANES` term bounds the
-    /// microtile row rounding for any `mr <= LANES`. Uses the holder's
-    /// *resolved* GEMM parameters, so tuned per-geometry `kc` / engagement
-    /// thresholds size the scratch consistently with execution.
+    /// actually engages the packed path (the `+ LANES` term bounds the
+    /// microtile row rounding for any `mr <= LANES`). For conv atoms the
+    /// B length sizes the consumption-ordered weight panel when the
+    /// geometry engages it (see [`dispatch::ConvPackParams`]), zero
+    /// otherwise. Uses the holder's *resolved* parameters, so tuned
+    /// per-geometry overrides and the cached panel decision size the
+    /// scratch consistently with execution.
     pub fn pack_lens(&self, kernel: &AtomKernel) -> (usize, usize) {
         if !self.conv.is_empty() {
-            return (0, 0);
+            return match kernel.conv_pack(self) {
+                Some(cp) => (0, cp.panel_len),
+                None => (0, 0),
+            };
         }
         let gp = match kernel.gemm {
             Some(gp) => gp,
@@ -494,7 +615,7 @@ impl Atom {
         };
         AtomKernel {
             fwd: std::sync::OnceLock::new(),
-            combined: std::sync::OnceLock::new(),
+            conv_pack: std::sync::OnceLock::new(),
             step: self.select_kernel(),
             table,
             gemm,
@@ -523,29 +644,7 @@ impl Atom {
         }
     }
 
-    /// Build the flattened combined triple table: offsets into the a-conv
-    /// block, b-conv block and out-conv block for every contributing
-    /// combination across all conv axes.
-    // alloc-ok(fn): built at most once per atom (cached in the OnceLock).
-    fn combined_triples(&self) -> Vec<(u32, u32, u32)> {
-        let mut combined: Vec<(u32, u32, u32)> = vec![(0, 0, 0)];
-        for c in &self.conv {
-            let mut next = Vec::with_capacity(combined.len() * c.triples.len());
-            for &(ao, bo, po) in &combined {
-                for &(ia, ib, p) in &c.triples {
-                    next.push((
-                        ao * c.ia as u32 + ia,
-                        bo * c.ib as u32 + ib,
-                        po * c.out as u32 + p,
-                    ));
-                }
-            }
-            combined = next;
-        }
-        combined
-    }
-
-    /// §Perf: combined triples for all conv axes *except the last*, plus the
+    /// §Perf: cross-product triples for all conv axes *except the last*, plus the
     /// last axis lowered into contiguous runs — for a fixed filter tap `ib`,
     /// consecutive feature indices `ia` map to consecutive outputs `p`, so
     /// the innermost loop becomes a vectorizable axpy over slices instead of
@@ -779,9 +878,70 @@ impl Atom {
         } else {
             // §Perf run-coalesced kernel: head axes via triple table, last
             // axis as contiguous axpy runs (see EXPERIMENTS.md §Perf/L3)
-            // through the step-selected microkernel.
+            // through the step-selected microkernel. When the geometry
+            // engages the conv panel, the weights are first gathered into a
+            // consumption-ordered panel (one padded row per `(g·n, s)`
+            // weight row) and the same loop nest reads them sequentially —
+            // a pure data-layout change, so packed and unpacked outputs are
+            // bit-identical (the pad entries are zero weights, which the
+            // `w == 0` fast path skips either way).
             let sk = kernel.step();
-            let (head, runs) = kernel.fwd_tables(self);
+            let ft = kernel.fwd_tables(self);
+            if let Some(cp) = kernel.conv_pack(self) {
+                pack_conv_weights(bv, g * n * s, pb, &ft.boffs, cp.ne, packs.b);
+                let panel = &packs.b[..cp.panel_len];
+                let flat = &ft.flat[..];
+                match pool {
+                    Some(pool) => {
+                        // One task per conv output row out[g,t,n,·].
+                        pool.run_chunks(out, po, |row, orow_buf| {
+                            let ni = row % n;
+                            let ti = (row / n) % t;
+                            let gi = row / (n * t);
+                            for si in 0..s {
+                                let abase = ((gi * t + ti) * s + si) * pa;
+                                let wrow = &panel[((gi * n + ni) * s + si) * cp.ne..][..flat.len()];
+                                for (&w, &(_, aoff, ooff, len)) in wrow.iter().zip(flat) {
+                                    if w == 0.0 {
+                                        continue;
+                                    }
+                                    let a0 = abase + aoff as usize;
+                                    let o0 = ooff as usize;
+                                    let asl = &av[a0..a0 + len as usize];
+                                    let osl = &mut orow_buf[o0..o0 + len as usize];
+                                    axpy_run(table, sk, w, asl, osl);
+                                }
+                            }
+                        });
+                    }
+                    None => {
+                        for gi in 0..g {
+                            for ti in 0..t {
+                                for ni in 0..n {
+                                    let ob = ((gi * t + ti) * n + ni) * po;
+                                    for si in 0..s {
+                                        let abase = ((gi * t + ti) * s + si) * pa;
+                                        let wrow = &panel
+                                            [((gi * n + ni) * s + si) * cp.ne..][..flat.len()];
+                                        for (&w, &(_, aoff, ooff, len)) in wrow.iter().zip(flat) {
+                                            if w == 0.0 {
+                                                continue;
+                                            }
+                                            let a0 = abase + aoff as usize;
+                                            let o0 = ob + ooff as usize;
+                                            let asl = &av[a0..a0 + len as usize];
+                                            let osl = &mut out[o0..o0 + len as usize];
+                                            axpy_run(table, sk, w, asl, osl);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                return;
+            }
+            let (head, runs) = (&ft.head[..], &ft.runs[..]);
             let last = self.conv.last().unwrap();
             let (la, lb, lo) = (last.ia, last.ib, last.out);
             match pool {
@@ -1040,55 +1200,101 @@ impl Atom {
                 }
             }
         } else {
-            let combined = kernel.combined_table(self);
+            // v3 run-structured conv backward: both passes reuse the
+            // forward's flattened `(head × run)` table instead of the v2
+            // element-wise combined triples.
+            //
+            // * dA: `da[·, aoff + j] += w · dout[·, ooff + j]` — one
+            //   [`axpy_run`] per live weight, with the forward's `w == 0`
+            //   skip (the panel pad rides along for free).
+            // * dB: `db[·, boff] += ⟨A[·, aoff..], dout[·, ooff..]⟩` — one
+            //   [`dot_run`] per table entry (no skip: a zero weight still
+            //   has a nonzero gradient).
+            //
+            // The serial nests mirror the pool partitions exactly — dA one
+            // `(g, t)` block per task reducing over `n`, dB one `(g, n)`
+            // block reducing over `t` — so scalar and parallel stay
+            // bit-identical, and the packed panel feeds dA the same weight
+            // values in the same order as the strided reads.
+            let sk = kernel.step();
+            let ft = kernel.fwd_tables(self);
+            let flat = &ft.flat[..];
+            let ne = match kernel.conv_pack(self) {
+                Some(cp) => {
+                    pack_conv_weights(bv, g * n * s, pb, &ft.boffs, cp.ne, packs.b);
+                    cp.ne
+                }
+                None => 0,
+            };
+            let panel = &packs.b[..];
+            let da_pass = |gi: usize, ti: usize, da_block: &mut [f32]| {
+                for ni in 0..n {
+                    let ob = ((gi * t + ti) * n + ni) * po;
+                    for si in 0..s {
+                        let abase = si * pa;
+                        if ne > 0 {
+                            let wrow = &panel[((gi * n + ni) * s + si) * ne..][..flat.len()];
+                            for (&w, &(_, aoff, ooff, len)) in wrow.iter().zip(flat) {
+                                if w == 0.0 {
+                                    continue;
+                                }
+                                let o0 = ob + ooff as usize;
+                                let a0 = abase + aoff as usize;
+                                let dsl = &dv[o0..o0 + len as usize];
+                                let asl = &mut da_block[a0..a0 + len as usize];
+                                axpy_run(table, sk, w, dsl, asl);
+                            }
+                        } else {
+                            let bbase = ((gi * n + ni) * s + si) * pb;
+                            for &(boff, aoff, ooff, len) in flat {
+                                let w = bv[bbase + boff as usize];
+                                if w == 0.0 {
+                                    continue;
+                                }
+                                let o0 = ob + ooff as usize;
+                                let a0 = abase + aoff as usize;
+                                let dsl = &dv[o0..o0 + len as usize];
+                                let asl = &mut da_block[a0..a0 + len as usize];
+                                axpy_run(table, sk, w, dsl, asl);
+                            }
+                        }
+                    }
+                }
+            };
+            let db_pass = |gi: usize, ni: usize, db_block: &mut [f32]| {
+                for ti in 0..t {
+                    let ob = ((gi * t + ti) * n + ni) * po;
+                    for si in 0..s {
+                        let abase = ((gi * t + ti) * s + si) * pa;
+                        let bbase = si * pb;
+                        for &(boff, aoff, ooff, len) in flat {
+                            let a0 = abase + aoff as usize;
+                            let o0 = ob + ooff as usize;
+                            let asl = &av[a0..a0 + len as usize];
+                            let dsl = &dv[o0..o0 + len as usize];
+                            db_block[bbase + boff as usize] += dot_run(table, sk, asl, dsl);
+                        }
+                    }
+                }
+            };
             match pool {
                 Some(pool) => {
                     pool.run_chunks(da, s * pa, |row, da_block| {
-                        let ti = row % t;
-                        let gi = row / t;
-                        for ni in 0..n {
-                            let ob = ((gi * t + ti) * n + ni) * po;
-                            for si in 0..s {
-                                let bbase = ((gi * n + ni) * s + si) * pb;
-                                let abase = si * pa;
-                                for &(ao, bo, poo) in combined {
-                                    da_block[abase + ao as usize] +=
-                                        dv[ob + poo as usize] * bv[bbase + bo as usize];
-                                }
-                            }
-                        }
+                        da_pass(row / t, row % t, da_block);
                     });
                     pool.run_chunks(db, s * pb, |row, db_block| {
-                        let ni = row % n;
-                        let gi = row / n;
-                        for ti in 0..t {
-                            let ob = ((gi * t + ti) * n + ni) * po;
-                            for si in 0..s {
-                                let abase = ((gi * t + ti) * s + si) * pa;
-                                let bbase = si * pb;
-                                for &(ao, bo, poo) in combined {
-                                    db_block[bbase + bo as usize] +=
-                                        dv[ob + poo as usize] * av[abase + ao as usize];
-                                }
-                            }
-                        }
+                        db_pass(row / n, row % n, db_block);
                     });
                 }
                 None => {
                     for gi in 0..g {
                         for ti in 0..t {
-                            for ni in 0..n {
-                                let ob = ((gi * t + ti) * n + ni) * po;
-                                for si in 0..s {
-                                    let abase = ((gi * t + ti) * s + si) * pa;
-                                    let bbase = ((gi * n + ni) * s + si) * pb;
-                                    for &(ao, bo, poo) in combined {
-                                        let do_ = dv[ob + poo as usize];
-                                        da[abase + ao as usize] += do_ * bv[bbase + bo as usize];
-                                        db[bbase + bo as usize] += do_ * av[abase + ao as usize];
-                                    }
-                                }
-                            }
+                            da_pass(gi, ti, &mut da[((gi * t + ti) * s) * pa..][..s * pa]);
+                        }
+                    }
+                    for gi in 0..g {
+                        for ni in 0..n {
+                            db_pass(gi, ni, &mut db[((gi * n + ni) * s) * pb..][..s * pb]);
                         }
                     }
                 }

@@ -42,6 +42,8 @@ pub mod compiled;
 mod reference;
 
 pub use atom::{canonicalize, conv_triples, Atom, AtomKernel, ConvAxis};
+#[doc(hidden)]
+pub use atom::force_conv_pack;
 pub use compiled::{
     compile_expr, CompiledPlan, PlanCache, PlanKey, TrainLayout, TrainWorkspace, Workspace,
     DEFAULT_PLAN_CACHE_CAPACITY,

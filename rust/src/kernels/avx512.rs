@@ -1,0 +1,392 @@
+//! Explicit AVX-512F microkernels (`x86_64` only, behind the `avx512`
+//! cargo feature), selected at runtime by [`crate::kernels::dispatch`]
+//! after `is_x86_feature_detected!` confirms `avx512f`.
+//!
+//! The module is additionally feature-gated at compile time because the
+//! AVX-512 intrinsics and `#[target_feature(enable = "avx512f")]` only
+//! stabilized in rustc 1.89; the default build keeps the crate's baseline
+//! MSRV and simply never compiles this file (the `Avx512` dispatch variant
+//! then degrades to `Portable`).
+//!
+//! # Accumulation order (normative for the `Avx512` variant)
+//!
+//! * [`dot`] — 32 fused logical lanes: 16-lane chunks are consumed in
+//!   index order, even-numbered chunks fusing into accumulator `acc0` and
+//!   odd-numbered chunks into `acc1` (`acc[l] = fma(a, b, acc[l])`); the
+//!   final ragged chunk is handled with a masked FMA that leaves dead
+//!   lanes untouched. The accumulators combine element-wise as
+//!   `acc = acc0 + acc1`, then reduce by the pairwise tree
+//!   `(((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))) + (((l8+l9)+(l10+l11)) +
+//!   ((l12+l13)+(l14+l15)))`. There is no scalar tail: raggedness is
+//!   absorbed by the masked chunk.
+//! * [`axpy`] — each element updated exactly once with a single fused
+//!   multiply-add (`out[i] = fma(w, a[i], out[i])`), the ragged tail via
+//!   masked load/FMA/store. Per-element this is the same operation as the
+//!   AVX2/NEON axpy, so all fused variants agree bitwise on axpy.
+//! * [`add`] — plain addition, each element exactly once (masked tail):
+//!   bit-identical to every other variant's `add`.
+//! * [`panel`] — the 8×32 GEMM microtile: every output element is loaded
+//!   from C, updated by one pure FMA chain over `k` ascending, and stored
+//!   back — the same per-element contract as the AVX2/NEON panels, so the
+//!   result per element is independent of tiling, `KC` blocking, and row
+//!   partitioning across workers.
+//!
+//! Scalar edges elsewhere in the GEMM driver use [`f32::mul_add`], which
+//! is bit-identical to the hardware FMA used here.
+//!
+//! Every intrinsic call sits in an explicit `unsafe` block (the crate
+//! denies `unsafe_op_in_unsafe_fn`) with its obligation discharged in a
+//! `SAFETY:` comment; `tools/hotpath_lint.rs` additionally checks that
+//! every `#[target_feature]` function here is declared `unsafe fn`.
+
+// Arch intrinsics are callable without `unsafe` inside a matching
+// `#[target_feature]` context on newer toolchains, which would flag the
+// explicit blocks below as unused; keep them for the SAFETY discipline.
+#![allow(unused_unsafe)]
+
+use core::arch::x86_64::{
+    _mm512_add_ps, _mm512_fmadd_ps, _mm512_loadu_ps, _mm512_mask3_fmadd_ps,
+    _mm512_mask_storeu_ps, _mm512_maskz_loadu_ps, _mm512_set1_ps, _mm512_setzero_ps,
+    _mm512_storeu_ps, __mmask16,
+};
+
+/// Vector length of one 512-bit register of `f32`.
+pub const VL: usize = 16;
+/// Microtile rows of the packed GEMM kernel (16 of 32 zmm registers hold
+/// accumulators: 8 rows × 2 halves of 32 columns).
+pub const MR: usize = 8;
+/// Microtile columns (two 16-lane registers wide).
+pub const NR: usize = 32;
+
+/// The lane mask selecting the first `live` of 16 lanes (`live <= 16`).
+#[inline]
+fn tail_mask(live: usize) -> __mmask16 {
+    debug_assert!(live <= VL);
+    if live >= VL {
+        !0
+    } else {
+        ((1u32 << live) - 1) as __mmask16
+    }
+}
+
+/// Safe entry installed in the `Avx512` [`crate::kernels::dispatch::KernelTable`].
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: this function is only reachable through the table returned by
+    // `dispatch::table_for(Variant::Avx512)`, which is handed out only
+    // after `is_x86_feature_detected!` confirmed "avx512f".
+    unsafe { dot_avx512(a, b) }
+}
+
+/// Safe entry installed in the `Avx512` [`crate::kernels::dispatch::KernelTable`].
+pub fn axpy(w: f32, a: &[f32], out: &mut [f32]) {
+    // SAFETY: reachable only via the detection-gated Avx512 table (see
+    // `dot` above).
+    unsafe { axpy_avx512(w, a, out) }
+}
+
+/// Safe entry installed in the `Avx512` [`crate::kernels::dispatch::KernelTable`].
+pub fn add(out: &mut [f32], a: &[f32]) {
+    // SAFETY: reachable only via the detection-gated Avx512 table (see
+    // `dot` above).
+    unsafe { add_avx512(out, a) }
+}
+
+/// Safe entry installed in the `Avx512` [`crate::kernels::dispatch::GemmParams`].
+pub fn panel(pa: &[f32], pb: &[f32], c: &mut [f32], cs: usize, rows: usize, kc: usize) {
+    // SAFETY: reachable only via the detection-gated Avx512 table (see
+    // `dot` above).
+    unsafe { panel_avx512(pa, pb, c, cs, rows, kc) }
+}
+
+/// # Safety
+///
+/// Requires AVX-512F; the caller must have verified CPU support (the safe
+/// wrappers above are only installed after feature detection).
+#[target_feature(enable = "avx512f")]
+unsafe fn dot_avx512(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / VL;
+    let tail = a.len() % VL;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    // SAFETY: no memory preconditions; AVX-512F is enabled on this function.
+    let (mut acc0, mut acc1) = unsafe { (_mm512_setzero_ps(), _mm512_setzero_ps()) };
+    for k in 0..chunks {
+        // SAFETY: `k * VL + VL <= chunks * VL <= len` for both slices, so
+        // the unaligned 16-float loads stay in bounds.
+        unsafe {
+            let x = _mm512_loadu_ps(ap.add(k * VL));
+            let y = _mm512_loadu_ps(bp.add(k * VL));
+            if k % 2 == 0 {
+                acc0 = _mm512_fmadd_ps(x, y, acc0);
+            } else {
+                acc1 = _mm512_fmadd_ps(x, y, acc1);
+            }
+        }
+    }
+    if tail > 0 {
+        let m = tail_mask(tail);
+        // SAFETY: masked loads access only the `tail` live lanes, all of
+        // which are within the slices (`chunks * VL + tail == len`); the
+        // architecture suppresses faults on masked-out lanes. The masked
+        // FMA leaves dead accumulator lanes bit-untouched.
+        unsafe {
+            let x = _mm512_maskz_loadu_ps(m, ap.add(chunks * VL));
+            let y = _mm512_maskz_loadu_ps(m, bp.add(chunks * VL));
+            if chunks % 2 == 0 {
+                acc0 = _mm512_mask3_fmadd_ps(x, y, acc0, m);
+            } else {
+                acc1 = _mm512_mask3_fmadd_ps(x, y, acc1, m);
+            }
+        }
+    }
+    // SAFETY: no memory preconditions for the element-wise combine.
+    let acc = unsafe { _mm512_add_ps(acc0, acc1) };
+    let mut lanes = [0.0f32; VL];
+    // SAFETY: `lanes` holds exactly 16 f32s; unaligned store is permitted.
+    unsafe { _mm512_storeu_ps(lanes.as_mut_ptr(), acc) };
+    let q0 = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    let q1 = ((lanes[8] + lanes[9]) + (lanes[10] + lanes[11]))
+        + ((lanes[12] + lanes[13]) + (lanes[14] + lanes[15]));
+    q0 + q1
+}
+
+/// # Safety
+///
+/// Requires AVX-512F; the caller must have verified CPU support.
+#[target_feature(enable = "avx512f")]
+unsafe fn axpy_avx512(w: f32, a: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    let chunks = out.len() / VL;
+    let tail = out.len() % VL;
+    let ap = a.as_ptr();
+    let op = out.as_mut_ptr();
+    // SAFETY: no memory preconditions for the broadcast.
+    let wv = unsafe { _mm512_set1_ps(w) };
+    for k in 0..chunks {
+        // SAFETY: `k * VL + VL <= chunks * VL <= len` keeps loads and the
+        // store in bounds; `a` and `out` are distinct slices (&/&mut), so
+        // the accesses never alias.
+        unsafe {
+            let x = _mm512_loadu_ps(ap.add(k * VL));
+            let o = _mm512_loadu_ps(op.add(k * VL));
+            _mm512_storeu_ps(op.add(k * VL), _mm512_fmadd_ps(wv, x, o));
+        }
+    }
+    if tail > 0 {
+        let m = tail_mask(tail);
+        // SAFETY: masked load/FMA/store touch only the `tail` live lanes,
+        // all in bounds (`chunks * VL + tail == len`); masked-out lanes are
+        // neither read nor written.
+        unsafe {
+            let x = _mm512_maskz_loadu_ps(m, ap.add(chunks * VL));
+            let o = _mm512_maskz_loadu_ps(m, op.add(chunks * VL));
+            _mm512_mask_storeu_ps(op.add(chunks * VL), m, _mm512_fmadd_ps(wv, x, o));
+        }
+    }
+}
+
+/// # Safety
+///
+/// Requires AVX-512F; the caller must have verified CPU support.
+#[target_feature(enable = "avx512f")]
+unsafe fn add_avx512(out: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(a.len(), out.len());
+    let chunks = out.len() / VL;
+    let tail = out.len() % VL;
+    let ap = a.as_ptr();
+    let op = out.as_mut_ptr();
+    for k in 0..chunks {
+        // SAFETY: in-bounds as in `axpy_avx512`; distinct slices, no
+        // aliasing.
+        unsafe {
+            let x = _mm512_loadu_ps(ap.add(k * VL));
+            let o = _mm512_loadu_ps(op.add(k * VL));
+            _mm512_storeu_ps(op.add(k * VL), _mm512_add_ps(o, x));
+        }
+    }
+    if tail > 0 {
+        let m = tail_mask(tail);
+        // SAFETY: masked load/add/store touch only the `tail` live lanes,
+        // all in bounds; masked-out lanes are neither read nor written.
+        unsafe {
+            let x = _mm512_maskz_loadu_ps(m, ap.add(chunks * VL));
+            let o = _mm512_maskz_loadu_ps(m, op.add(chunks * VL));
+            _mm512_mask_storeu_ps(op.add(chunks * VL), m, _mm512_add_ps(o, x));
+        }
+    }
+}
+
+/// The 8×32 FMA microtile over packed panels: `C[r][j]` is loaded, updated
+/// by `kc` fused multiply-adds in `k`-ascending order, and stored back.
+/// Rows `rows..MR` read the A panel's zero padding into never-stored
+/// accumulators.
+///
+/// # Safety
+///
+/// Requires AVX-512F; the caller must have verified CPU support, and must
+/// pass panels with `pa.len() >= kc * MR`, `pb.len() >= kc * NR`,
+/// `1 <= rows <= MR`, `cs >= NR` and `c.len() >= (rows - 1) * cs + NR`
+/// (all debug-asserted).
+#[target_feature(enable = "avx512f")]
+unsafe fn panel_avx512(pa: &[f32], pb: &[f32], c: &mut [f32], cs: usize, rows: usize, kc: usize) {
+    debug_assert!(rows >= 1 && rows <= MR);
+    debug_assert!(cs >= NR);
+    debug_assert!(pa.len() >= kc * MR);
+    debug_assert!(pb.len() >= kc * NR);
+    debug_assert!(c.len() >= (rows - 1) * cs + NR);
+    // SAFETY: no memory preconditions.
+    let zero = unsafe { _mm512_setzero_ps() };
+    let mut acc = [[zero; 2]; MR];
+    let cp = c.as_mut_ptr();
+    for (r, accr) in acc.iter_mut().enumerate().take(rows) {
+        // SAFETY: `r < rows`, so `r * cs + NR <= c.len()` (asserted above).
+        unsafe {
+            accr[0] = _mm512_loadu_ps(cp.add(r * cs));
+            accr[1] = _mm512_loadu_ps(cp.add(r * cs + VL));
+        }
+    }
+    let pap = pa.as_ptr();
+    let pbp = pb.as_ptr();
+    for k in 0..kc {
+        // SAFETY: `k < kc` and the panel-length asserts above keep every
+        // load in bounds (`k * NR + NR <= kc * NR`, `k * MR + MR <= kc * MR`).
+        unsafe {
+            let b0 = _mm512_loadu_ps(pbp.add(k * NR));
+            let b1 = _mm512_loadu_ps(pbp.add(k * NR + VL));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm512_set1_ps(*pap.add(k * MR + r));
+                accr[0] = _mm512_fmadd_ps(av, b0, accr[0]);
+                accr[1] = _mm512_fmadd_ps(av, b1, accr[1]);
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(rows) {
+        // SAFETY: `r < rows`, bounds as for the loads above; rows are
+        // `cs >= NR` apart, so the two stores per row never overlap another
+        // row's.
+        unsafe {
+            _mm512_storeu_ps(cp.add(r * cs), accr[0]);
+            _mm512_storeu_ps(cp.add(r * cs + VL), accr[1]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn supported() -> bool {
+        std::arch::is_x86_feature_detected!("avx512f")
+    }
+
+    /// Scalar emulation of the AVX-512 dot order: 16-lane chunks fused
+    /// into two alternating accumulators (masked ragged chunk included),
+    /// element-wise combine, pairwise tree reduction.
+    fn dot_reference(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = [[0.0f32; VL]; 2];
+        let mut i = 0;
+        let mut chunk = 0;
+        while i < a.len() {
+            let live = VL.min(a.len() - i);
+            let dst = &mut acc[chunk % 2];
+            for l in 0..live {
+                dst[l] = a[i + l].mul_add(b[i + l], dst[l]);
+            }
+            i += live;
+            chunk += 1;
+        }
+        let lanes: Vec<f32> = (0..VL).map(|l| acc[0][l] + acc[1][l]).collect();
+        let q0 = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+        let q1 = ((lanes[8] + lanes[9]) + (lanes[10] + lanes[11]))
+            + ((lanes[12] + lanes[13]) + (lanes[14] + lanes[15]));
+        q0 + q1
+    }
+
+    #[test]
+    fn dot_matches_scalar_fma_emulation_on_ragged_lengths() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(401);
+        for len in 0..=71 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_reference(&a, &b).to_bits(),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_fma_on_ragged_lengths() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(402);
+        for len in 0..=71 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let w = rng.normal_f32(0.0, 2.0);
+            let mut got = init.clone();
+            axpy(w, &a, &mut got);
+            for (i, g) in got.iter().enumerate() {
+                let want = w.mul_add(a[i], init[i]);
+                assert_eq!(g.to_bits(), want.to_bits(), "len {len} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_bit_identical_to_portable() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(403);
+        for len in 0..=71 {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut got = init.clone();
+            add(&mut got, &a);
+            let mut want = init;
+            crate::kernels::portable::add8(&mut want, &a);
+            for (g, w_) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w_.to_bits(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_matches_pure_fma_chain() {
+        if !supported() {
+            return;
+        }
+        let mut rng = Rng::new(404);
+        for rows in 1..=MR {
+            let kc = 7;
+            let pa: Vec<f32> = (0..kc * MR).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let pb: Vec<f32> = (0..kc * NR).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let c0: Vec<f32> = (0..rows * NR).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut c = c0.clone();
+            panel(&pa, &pb, &mut c, NR, rows, kc);
+            for r in 0..rows {
+                for j in 0..NR {
+                    let mut want = c0[r * NR + j];
+                    for k in 0..kc {
+                        want = pa[k * MR + r].mul_add(pb[k * NR + j], want);
+                    }
+                    assert_eq!(
+                        c[r * NR + j].to_bits(),
+                        want.to_bits(),
+                        "rows {rows} r {r} j {j}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,6 +1,6 @@
 //! One-time runtime selection of the microkernel variant.
 //!
-//! The crate ships three implementations of its hot inner loops (see the
+//! The crate ships four implementations of its hot inner loops (see the
 //! [`crate::kernels`] module docs for the accumulation-order contract):
 //!
 //! * **`Portable`** — the original hand-unrolled 8-lane kernels
@@ -11,6 +11,11 @@
 //!   register-blocked GEMM microtile over cache-blocked packed panels
 //!   (`x86_64` only, gated on `is_x86_feature_detected!("avx2")` and
 //!   `"fma"`).
+//! * **`Avx512`** — explicit AVX-512F intrinsics with 32 fused logical
+//!   lanes, masked ragged edges, and an 8×32 microtile (`x86_64` with the
+//!   `avx512` cargo feature, gated on
+//!   `is_x86_feature_detected!("avx512f")`; without the feature the
+//!   variant degrades to `Portable` at table-construction time).
 //! * **`Neon`** — explicit NEON intrinsics with an 8×8 microtile
 //!   (`aarch64` only, where NEON is a baseline feature).
 //!
@@ -22,9 +27,10 @@
 //!    single-process use only) wins;
 //! 2. else the `CONV_EINSUM_KERNEL_VARIANT` environment variable
 //!    ([`VARIANT_ENV`]) is honoured — `portable`/`scalar`, `avx2` (or
-//!    `avx2fma`/`avx2+fma`), `neon`; any other value falls through to
-//!    auto-detection;
-//! 3. else CPU features are detected: `Avx2Fma` when AVX2 and FMA are both
+//!    `avx2fma`/`avx2+fma`), `avx512` (or `avx512f`), `neon`; any other
+//!    value falls through to auto-detection;
+//! 3. else CPU features are detected: `Avx512` when AVX-512F is present
+//!    (and compiled in), else `Avx2Fma` when AVX2 and FMA are both
 //!    present, `Neon` on `aarch64`, `Portable` otherwise.
 //!
 //! The result is cached in a `OnceLock`, so every `AtomKernel` built in
@@ -42,13 +48,16 @@ use std::sync::{OnceLock, RwLock};
 
 #[cfg(target_arch = "x86_64")]
 use super::avx2;
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+use super::avx512;
 #[cfg(target_arch = "aarch64")]
 use super::neon;
 use super::{portable, LANES};
 
 /// Environment variable consulted (once, at first kernel build) to pin the
 /// kernel variant: `portable` / `scalar`, `avx2` / `avx2fma` / `avx2+fma`,
-/// or `neon`. Unknown values fall back to auto-detection.
+/// `avx512` / `avx512f`, or `neon`. Unknown values fall back to
+/// auto-detection.
 pub const VARIANT_ENV: &str = "CONV_EINSUM_KERNEL_VARIANT";
 
 /// Depth of one cache-blocked GEMM slice: panels cover `KC` values of the
@@ -72,7 +81,7 @@ pub type AddFn = fn(&mut [f32], &[f32]);
 /// `nr`-column packed panels, one pure FMA chain per element.
 pub type PanelFn = fn(&[f32], &[f32], &mut [f32], usize, usize, usize);
 
-/// The three microkernel implementations. `Ord` on preference is not
+/// The four microkernel implementations. `Ord` on preference is not
 /// defined — use [`selected`]/[`table_for`] to resolve one.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Variant {
@@ -80,6 +89,9 @@ pub enum Variant {
     Portable,
     /// Explicit AVX2 + FMA intrinsics (`x86_64` with both features).
     Avx2Fma,
+    /// Explicit AVX-512F intrinsics (`x86_64` with the feature detected
+    /// and the `avx512` cargo feature compiled in).
+    Avx512,
     /// Explicit NEON intrinsics (`aarch64`).
     Neon,
 }
@@ -90,6 +102,7 @@ impl Variant {
         match self {
             Variant::Portable => "portable",
             Variant::Avx2Fma => "avx2fma",
+            Variant::Avx512 => "avx512",
             Variant::Neon => "neon",
         }
     }
@@ -122,6 +135,52 @@ impl GemmParams {
     /// large enough overall to amortize the packing copies.
     pub fn engages(&self, m: usize, n: usize, k: usize) -> bool {
         k >= LANES && n >= self.nr && m.saturating_mul(n).saturating_mul(k) >= self.min_flops
+    }
+}
+
+/// Minimum atom FLOP estimate before the packed conv-atom panel path
+/// engages; below this (the tiny-geometry mirror of the tiny-K GEMM rule)
+/// the panel packing traffic costs more than the streamed weight reads it
+/// replaces, and the plain run loop wins.
+pub const CONV_PACK_MIN_FLOPS: usize = 1 << 14;
+
+/// Ceiling on the conv weight-panel footprint in `f32` elements (16 MiB).
+/// The panel duplicates each weight once per head entry that reads it, so
+/// degenerate geometries could otherwise blow the workspace up; past this
+/// bound the unpacked path is used.
+pub const CONV_PACK_MAX_PANEL: usize = 1 << 22;
+
+/// Parameters of the packed conv-atom panel path (the conv-geometry
+/// analogue of [`GemmParams`]): weights are re-laid-out into a
+/// consumption-ordered, zero-padded panel in the workspace pack buffers so
+/// the run-structured inner loops stream them sequentially.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvPackParams {
+    /// Engagement threshold on the atom's FLOP estimate
+    /// ([`CONV_PACK_MIN_FLOPS`] by default).
+    pub min_flops: usize,
+    /// Maximum panel footprint in `f32` elements ([`CONV_PACK_MAX_PANEL`]).
+    pub max_panel: usize,
+}
+
+impl ConvPackParams {
+    /// Whether the packed panel path should run for a conv atom with this
+    /// FLOP estimate, `t` reuse rows (the panel is packed once per replay
+    /// and re-read for every `t` output row), and `panel_elems` panel
+    /// footprint. Packing is a pure data-layout change — engaging or not
+    /// never changes result bits for a fixed variant.
+    pub fn engages(&self, flops: usize, t: usize, panel_elems: usize) -> bool {
+        t >= 2 && panel_elems > 0 && panel_elems <= self.max_panel && flops >= self.min_flops
+    }
+}
+
+/// The conv-pack parameters for a kernel table (currently
+/// variant-independent: the panel layout feeds the same run loops on every
+/// variant; routed through the table so per-variant tuning can slot in).
+pub fn conv_pack_params(_table: &KernelTable) -> ConvPackParams {
+    ConvPackParams {
+        min_flops: CONV_PACK_MIN_FLOPS,
+        max_panel: CONV_PACK_MAX_PANEL,
     }
 }
 
@@ -173,6 +232,22 @@ static AVX2_FMA: KernelTable = KernelTable {
     }),
 };
 
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+static AVX512: KernelTable = KernelTable {
+    variant: Variant::Avx512,
+    fused: true,
+    dot: avx512::dot,
+    axpy: avx512::axpy,
+    add: avx512::add,
+    gemm: Some(GemmParams {
+        mr: avx512::MR,
+        nr: avx512::NR,
+        kc: KC,
+        min_flops: PACK_MIN_FLOPS,
+        panel: avx512::panel,
+    }),
+};
+
 #[cfg(target_arch = "aarch64")]
 static NEON: KernelTable = KernelTable {
     variant: Variant::Neon,
@@ -189,7 +264,8 @@ static NEON: KernelTable = KernelTable {
     }),
 };
 
-/// Test/bench override: 0 = none, 1 = portable, 2 = avx2fma, 3 = neon.
+/// Test/bench override: 0 = none, 1 = portable, 2 = avx2fma, 3 = neon,
+/// 4 = avx512.
 static FORCED: AtomicU8 = AtomicU8::new(0);
 
 /// The process-wide default, resolved once from env + detection.
@@ -203,8 +279,19 @@ pub fn table_for(v: Variant) -> &'static KernelTable {
     match v {
         Variant::Portable => &PORTABLE,
         Variant::Avx2Fma => avx2_table(),
+        Variant::Avx512 => avx512_table(),
         Variant::Neon => neon_table(),
     }
+}
+
+fn avx512_table() -> &'static KernelTable {
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return &AVX512;
+        }
+    }
+    &PORTABLE
 }
 
 fn avx2_table() -> &'static KernelTable {
@@ -236,6 +323,7 @@ pub fn selected() -> &'static KernelTable {
         1 => return table_for(Variant::Portable),
         2 => return table_for(Variant::Avx2Fma),
         3 => return table_for(Variant::Neon),
+        4 => return table_for(Variant::Avx512),
         _ => {}
     }
     DEFAULT.get_or_init(|| match env_choice() {
@@ -258,6 +346,7 @@ pub fn force_variant(v: Option<Variant>) {
         Some(Variant::Portable) => 1,
         Some(Variant::Avx2Fma) => 2,
         Some(Variant::Neon) => 3,
+        Some(Variant::Avx512) => 4,
     };
     FORCED.store(code, Ordering::Relaxed);
 }
@@ -268,6 +357,12 @@ pub fn force_variant(v: Option<Variant>) {
 // called on the execution hot path.
 pub fn available() -> Vec<Variant> {
     let mut v = Vec::new();
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            v.push(Variant::Avx512);
+        }
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if std::arch::is_x86_feature_detected!("avx2")
@@ -340,12 +435,19 @@ fn env_choice() -> Option<Variant> {
     match raw.trim().to_ascii_lowercase().as_str() {
         "portable" | "scalar" => Some(Variant::Portable),
         "avx2" | "avx2fma" | "avx2+fma" => Some(Variant::Avx2Fma),
+        "avx512" | "avx512f" => Some(Variant::Avx512),
         "neon" => Some(Variant::Neon),
         _ => None,
     }
 }
 
 fn detect() -> &'static KernelTable {
+    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return &AVX512;
+        }
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if std::arch::is_x86_feature_detected!("avx2")
@@ -379,7 +481,7 @@ mod tests {
         // Whichever of the SIMD variants the host lacks must degrade; the
         // one it has must come back as itself with a packed GEMM.
         let avail = available();
-        for v in [Variant::Avx2Fma, Variant::Neon] {
+        for v in [Variant::Avx2Fma, Variant::Avx512, Variant::Neon] {
             let t = table_for(v);
             if avail.contains(&v) {
                 assert_eq!(t.variant, v);
@@ -396,7 +498,22 @@ mod tests {
     fn available_ends_with_portable() {
         let avail = available();
         assert_eq!(*avail.last().unwrap(), Variant::Portable);
-        assert!(avail.len() <= 2);
+        assert!(avail.len() <= 3);
+    }
+
+    #[test]
+    fn conv_pack_engages_requires_reuse_volume_and_bounded_panel() {
+        let cp = conv_pack_params(&PORTABLE);
+        // Too few reuse rows to amortize the pack.
+        assert!(!cp.engages(1 << 20, 1, 1 << 10));
+        // Too small overall (the tiny-geometry short-circuit).
+        assert!(!cp.engages(CONV_PACK_MIN_FLOPS - 1, 8, 1 << 10));
+        // Degenerate: an empty panel never engages.
+        assert!(!cp.engages(1 << 20, 8, 0));
+        // Panel footprint past the workspace ceiling.
+        assert!(!cp.engages(1 << 20, 8, CONV_PACK_MAX_PANEL + 1));
+        // Realistic conv geometry.
+        assert!(cp.engages(1 << 20, 8, 1 << 16));
     }
 
     #[test]

@@ -3,15 +3,16 @@
 //!
 //! The planner minimizes FLOPs, but the paper's wall-clock claims only
 //! materialize if each atom executes near hardware peak. The crate ships
-//! three kernel *variants* (see [`dispatch::Variant`]): the portable
+//! four kernel *variants* (see [`dispatch::Variant`]): the portable
 //! hand-unrolled 8-lane code that leans on the autovectorizer, and
-//! explicit AVX2+FMA / NEON implementations that add fused multiply-adds
-//! and a register-blocked, cache-blocked packed GEMM for the matmul-shaped
-//! atom loops. [`dispatch::selected`] resolves one variant per process
-//! (feature detection, overridable via the `CONV_EINSUM_KERNEL_VARIANT`
-//! env var), and every kernel table built afterwards uses it.
+//! explicit AVX2+FMA / AVX-512F / NEON implementations that add fused
+//! multiply-adds and a register-blocked, cache-blocked packed GEMM for
+//! the matmul-shaped atom loops. [`dispatch::selected`] resolves one
+//! variant per process (feature detection, overridable via the
+//! `CONV_EINSUM_KERNEL_VARIANT` env var), and every kernel table built
+//! afterwards uses it.
 //!
-//! # Accumulation order v2 (normative, per variant)
+//! # Accumulation order v3 (normative, per variant)
 //!
 //! Floating-point addition is not associative, so every kernel fixes its
 //! accumulation order *as part of its contract*. Since v2 the contract is
@@ -19,8 +20,8 @@
 //! compiled-plan replay, all draw their kernels from the same
 //! process-selected [`dispatch::KernelTable`], so results are bit-identical
 //! across backends *for a fixed variant* — not across variants or ISAs
-//! (the AVX2/NEON variants contract with fused multiply-adds, which round
-//! once where the portable code rounds twice).
+//! (the fused variants round once where the portable code rounds twice,
+//! and the AVX-512 dot uses a 32-lane order where the others use 8).
 //!
 //! Orders common to all variants:
 //!
@@ -28,12 +29,15 @@
 //!   (`out[i] += w * a[i]`, fused to `out[i] = fma(w, a[i], out[i])` on
 //!   FMA variants); no reassociation ever. `add` performs no
 //!   multiplication, so it is bit-identical across *all* variants.
-//! * **dot** accumulates 8 logical lanes per block
+//! * **dot** on the 8-lane variants accumulates 8 logical lanes per block
 //!   (`acc[l] ⊕= a[8k + l] · b[8k + l]`, where `⊕` is fused on FMA
 //!   variants), combines lanes pairwise as
 //!   `((acc0+acc1)+(acc2+acc3)) + ((acc4+acc5)+(acc6+acc7))`, then folds
-//!   the ragged tail sequentially in index order.
-//! * **packed GEMM** (AVX2/NEON only; engages per
+//!   the ragged tail sequentially in index order. The AVX-512 variant's
+//!   dot is 32 logical lanes (two 16-lane accumulators fed by alternating
+//!   chunks, a masked ragged chunk, element-wise combine, then a pairwise
+//!   tree over 16 lanes — see `kernels/avx512.rs`).
+//! * **packed GEMM** (SIMD variants only; engages per
 //!   [`dispatch::GemmParams::engages`]): each output element is one pure
 //!   FMA chain over the contracted index in ascending order, with the
 //!   accumulator loaded from and stored back to C at cache-block
@@ -46,11 +50,22 @@
 //!   way the portable axpy fallbacks do, so on non-finite data
 //!   (`0 · ∞`, NaN payloads) the variants may differ; the contract
 //!   quantifies over finite inputs.
+//! * **conv atoms** (new in v3): the forward keeps its v2 per-element
+//!   order (head entries in table order, last-axis runs in order, zero
+//!   weights skipped) whether or not the packed weight-panel path engages
+//!   — packing is a pure data-layout change, so packed and unpacked
+//!   results are bit-identical for a fixed variant. The conv *backward*
+//!   is now run-structured on every path: dA accumulates via the
+//!   variant's axpy over last-axis runs and dB via [`dot_run`] over the
+//!   same runs, each da/db element receiving its contributions in
+//!   `(n or t, s, head, run)` order. This changes backward bits relative
+//!   to the v2 element-wise order, which is why the contract version is
+//!   bumped — stale compiled artifacts fail verification instead of
+//!   silently mixing orders.
 //!
-//! The portable variant's orders are byte-for-byte those of accumulation
-//! order v1 ([`dot8`], [`axpy8`], [`add8`] remain exported under their v1
-//! names); forcing `CONV_EINSUM_KERNEL_VARIANT=portable` reproduces v1
-//! results exactly.
+//! The portable variant's dot/axpy/add orders are byte-for-byte those of
+//! accumulation order v1 ([`dot8`], [`axpy8`], [`add8`] remain exported
+//! under their v1 names).
 //!
 //! # Per-step selection
 //!
@@ -70,6 +85,8 @@ mod portable;
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+mod avx512;
 #[cfg(target_arch = "aarch64")]
 mod neon;
 
@@ -98,7 +115,12 @@ pub const LANES: usize = 8;
 /// **v2** — per-variant contract: runtime-dispatched AVX2+FMA/NEON
 /// variants with fused contractions and a packed cache-blocked GEMM;
 /// bit-identity quantifies over (variant, input), not ISA.
-pub const ACCUM_ORDER_VERSION: u32 = 2;
+/// **v3** — AVX-512 variant (32-lane dot order, masked ragged edges) and
+/// run-structured conv backward (dA via axpy runs, dB via [`dot_run`],
+/// replacing the v2 element-wise triple loops); conv forward order
+/// unchanged, packed conv panels bit-identical to unpacked by
+/// construction.
+pub const ACCUM_ORDER_VERSION: u32 = 3;
 
 /// Which microkernel family a compiled step's inner loops use. Chosen once
 /// per step at compile/lowering time (see module docs).
@@ -154,6 +176,30 @@ pub fn axpy_run(table: &KernelTable, kind: StepKernel, w: f32, a: &[f32], out: &
             }
         }
         _ => (table.axpy)(w, a, out),
+    }
+}
+
+/// Dot product over one conv run, dispatched by the step's selected
+/// kernel (the dB mirror of [`axpy_run`]): wide runs use the table's
+/// blocked dot, narrow runs a sequential loop that fuses exactly when the
+/// table's vector kernels do. Part of the v3 conv-backward order.
+#[inline]
+pub fn dot_run(table: &KernelTable, kind: StepKernel, a: &[f32], b: &[f32]) -> f32 {
+    match kind {
+        StepKernel::ConvRunsNarrow => {
+            let mut total = 0.0f32;
+            if table.fused {
+                for (x, y) in a.iter().zip(b) {
+                    total = x.mul_add(*y, total);
+                }
+            } else {
+                for (x, y) in a.iter().zip(b) {
+                    total += x * y;
+                }
+            }
+            total
+        }
+        _ => (table.dot)(a, b),
     }
 }
 

@@ -23,6 +23,16 @@
 //! twice. Every element of the destination prefix in use is overwritten on
 //! every call (including the zero padding), so pack buffers need no
 //! clearing between replays.
+//!
+//! # Conv-atom weight panels
+//!
+//! [`pack_conv_weights`] serves the conv atoms' run-structured loops the
+//! same way: for every `(group · bfree, s)` weight row it gathers the
+//! weights in the exact `(head, run)` order the inner loops consume them,
+//! into rows of a fixed padded width. The pad entries are **zero**, which
+//! the conv loops already skip (the `w == 0` fast path), so padding never
+//! changes which operations run. Like the GEMM panels, the full
+//! destination prefix is overwritten every call.
 
 /// Pack the `kc`-deep slice (columns `k0..k0 + kc` of the logical
 /// `m × k` operand `A`, where `A[i][k] = src[i * rs + k * cs]`) into
@@ -90,6 +100,37 @@ pub fn pack_b(
     }
 }
 
+/// Pack conv-atom weights into a consumption-ordered panel: for each of
+/// the `rows` logical weight rows (one per `(group·bfree, s)` pair, each
+/// `pb` elements of `src` apart), gather the `boffs` entries — the
+/// flattened `(head, run)` weight offsets — into a padded row of `ne`
+/// elements (`ne >= boffs.len()`; the pad is zero-filled). `dst` must hold
+/// at least `rows * ne` elements.
+#[inline]
+pub fn pack_conv_weights(
+    src: &[f32],
+    rows: usize,
+    pb: usize,
+    boffs: &[u32],
+    ne: usize,
+    dst: &mut [f32],
+) {
+    debug_assert!(ne >= boffs.len());
+    debug_assert!(dst.len() >= rows * ne);
+    debug_assert!(src.len() >= rows * pb);
+    for row in 0..rows {
+        let s = &src[row * pb..(row + 1) * pb];
+        let d = &mut dst[row * ne..row * ne + ne];
+        let (live, pad) = d.split_at_mut(boffs.len());
+        for (slot, &bo) in live.iter_mut().zip(boffs) {
+            *slot = s[bo as usize];
+        }
+        for slot in pad.iter_mut() {
+            *slot = 0.0;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +170,24 @@ mod tests {
                     let j = jt * nr + jj;
                     assert_eq!(dst[jt * nr * k + kk * nr + jj], src[kk * n + j]);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_conv_weights_gathers_in_consumption_order_and_zero_pads() {
+        // Three weight rows of pb = 4, gather order [3, 0, 2], padded to 5.
+        let src: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let boffs = [3u32, 0, 2];
+        let ne = 5;
+        let mut dst = vec![-1.0f32; 3 * ne];
+        pack_conv_weights(&src, 3, 4, &boffs, ne, &mut dst);
+        for row in 0..3 {
+            for (e, &bo) in boffs.iter().enumerate() {
+                assert_eq!(dst[row * ne + e], src[row * 4 + bo as usize]);
+            }
+            for e in boffs.len()..ne {
+                assert_eq!(dst[row * ne + e], 0.0);
             }
         }
     }

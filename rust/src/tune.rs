@@ -27,9 +27,10 @@
 use std::sync::Arc;
 
 use crate::autodiff::CkptPolicy;
-use crate::cost::tuning::{self, CalibKey, Measurement};
+use crate::cost::tuning::{self, CalibKey, GemmTuning, Measurement};
 use crate::einsum::{parse, SizedSpec};
 use crate::exec::{CompiledPlan, TrainWorkspace, Workspace};
+use crate::kernels::dispatch::{self, TunedGemm};
 use crate::planner::{candidate_plans, PlanOptions, DEFAULT_MEASURED_TOP_K};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -273,4 +274,182 @@ pub fn calibrate_expr(
         best,
         saved,
     })
+}
+
+/// Cache-block depths swept per geometry by [`calibrate_gemm_blocking`]
+/// (each clamped to the contraction depth; duplicates collapse).
+pub const GEMM_KC_CANDIDATES: [usize; 4] = [64, 128, 256, 512];
+
+/// Measured sweep for one GEMM geometry: the per-`kc` packed timings, the
+/// unpacked baseline, and the blocking the sweep learned from them.
+#[derive(Debug, Clone)]
+pub struct GemmBlockingTiming {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Winning cache-block depth (best median packed replay).
+    pub kc: usize,
+    /// Learned engagement threshold: at or below the static floor when
+    /// packing wins on this geometry, just above `m·n·k` when it loses.
+    pub min_flops: usize,
+    /// Median replay seconds at the winning `kc`.
+    pub packed_secs: f64,
+    /// Median replay seconds with packing disengaged.
+    pub unpacked_secs: f64,
+    /// The full `(kc, median seconds)` sweep, in candidate order.
+    pub kc_secs: Vec<(usize, f64)>,
+}
+
+impl GemmBlockingTiming {
+    /// Whether the learned tuning engages the packed path here.
+    pub fn packs(&self) -> bool {
+        self.min_flops <= self.m * self.n * self.k
+    }
+
+    /// The sweep as a JSON object (the `BENCH_kernels.json` row shape).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("m", Json::num(self.m as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("kc", Json::num(self.kc as f64)),
+            ("min_flops", Json::num(self.min_flops as f64)),
+            ("packs", Json::Bool(self.packs())),
+            ("packed_secs", Json::num(self.packed_secs)),
+            ("unpacked_secs", Json::num(self.unpacked_secs)),
+            (
+                "kc_secs",
+                Json::arr(self.kc_secs.iter().map(|&(kc, s)| {
+                    Json::obj(vec![
+                        ("kc", Json::num(kc as f64)),
+                        ("secs", Json::num(s)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Time one `m×k · k×n` contraction replay under the dispatcher tuning
+/// currently installed for that geometry (the plan must be compiled
+/// *after* the tuning is set — resolved GEMM parameters are captured at
+/// compile time).
+fn time_gemm_geometry(
+    m: usize,
+    n: usize,
+    k: usize,
+    spec: &CalibrationSpec,
+) -> Result<f64, String> {
+    let dims = vec![vec![m, k], vec![n, k]];
+    let parsed = parse("ts,ns->tn").map_err(|e| e.to_string())?;
+    let sized = SizedSpec::new(parsed, dims.clone())?;
+    let plans = candidate_plans(&sized, &PlanOptions::default(), 1)?;
+    let compiled = CompiledPlan::compile_arc(Arc::new(plans[0].clone()))
+        .map_err(|e| format!("blocking-sweep compile failed: {e}"))?;
+    let mut rng = Rng::new(spec.seed);
+    let probes: Vec<Tensor> = dims
+        .iter()
+        .map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng))
+        .collect();
+    let inputs: Vec<&Tensor> = probes.iter().collect();
+    let mut ws = Workspace::new();
+    let mut out = Tensor::zeros(compiled.out_shape());
+    compiled
+        .run_into(&inputs, &mut ws, &mut out)
+        .map_err(|e| format!("blocking-sweep forward failed: {e}"))?;
+    let mut failed = false;
+    let t = timing::bench("calib-gemm", spec.warmup, spec.iters.max(1), || {
+        failed |= compiled.run_into(&inputs, &mut ws, &mut out).is_err();
+    });
+    if failed {
+        return Err("blocking-sweep forward failed during timing".to_string());
+    }
+    Ok(t.median_secs())
+}
+
+/// Learn per-geometry GEMM blocking from measured sweeps (the
+/// self-learning arm of the kernel dispatcher).
+///
+/// For each `(m, n, k)` geometry this times the contraction replay at
+/// every [`GEMM_KC_CANDIDATES`] cache-block depth (engagement forced on)
+/// plus an unpacked baseline (engagement forced off), installs temporary
+/// tunings directly into the dispatcher so each compile resolves the
+/// candidate blocking, then records the winner in the global
+/// [`tuning::TuningCache`] via [`TuningCache::set_gemm_tuning`] — which
+/// re-installs it in the dispatcher, bumps the tuning generation (stale
+/// measured plans re-verify and recompile), and makes it eligible for
+/// persistence. When the unpacked baseline wins, the learned threshold
+/// parks engagement just above `m·n·k` so the geometry short-circuits to
+/// the unblocked loops. With `spec.persist`, the cache is saved to the
+/// `CONV_EINSUM_TUNING_CACHE` path when one is configured.
+///
+/// [`TuningCache::set_gemm_tuning`]: tuning::TuningCache::set_gemm_tuning
+// alloc-ok(fn): calibration driver; runs at warm-up, never on the replay
+// hot path.
+pub fn calibrate_gemm_blocking(
+    geometries: &[(usize, usize, usize)],
+    spec: &CalibrationSpec,
+) -> Result<Vec<GemmBlockingTiming>, String> {
+    let mut reports = Vec::with_capacity(geometries.len());
+    for &(m, n, k) in geometries {
+        let flops = m
+            .checked_mul(n)
+            .and_then(|v| v.checked_mul(k))
+            .ok_or_else(|| format!("geometry {m}x{n}x{k} overflows the FLOP estimate"))?;
+        // Packed sweep: force engagement at each candidate depth.
+        let mut kc_secs: Vec<(usize, f64)> = Vec::new();
+        for kc in GEMM_KC_CANDIDATES {
+            let kc = kc.min(k).max(1);
+            if kc_secs.iter().any(|&(c, _)| c == kc) {
+                continue;
+            }
+            dispatch::set_gemm_tunings(&[((m, n, k), TunedGemm { kc, min_flops: 0 })]);
+            kc_secs.push((kc, time_gemm_geometry(m, n, k, spec)?));
+        }
+        // Unpacked baseline: park the threshold above this geometry.
+        dispatch::set_gemm_tunings(&[(
+            (m, n, k),
+            TunedGemm {
+                kc: k.max(1),
+                min_flops: usize::MAX,
+            },
+        )]);
+        let unpacked_secs = time_gemm_geometry(m, n, k, spec)?;
+
+        let secs: Vec<f64> = kc_secs.iter().map(|&(_, s)| s).collect();
+        let best = tuning::select_index(&secs);
+        let (kc, packed_secs) = kc_secs[best];
+        let min_flops = if packed_secs <= unpacked_secs {
+            // Packing wins here: keep the static floor, but never above
+            // this geometry's own volume (so it always engages).
+            dispatch::PACK_MIN_FLOPS.min(flops)
+        } else {
+            flops.saturating_add(1)
+        };
+        // The permanent record: cache + dispatcher + generation bump.
+        tuning::global().set_gemm_tuning(GemmTuning {
+            m,
+            n,
+            k,
+            kc,
+            min_flops,
+        });
+        reports.push(GemmBlockingTiming {
+            m,
+            n,
+            k,
+            kc,
+            min_flops,
+            packed_secs,
+            unpacked_secs,
+            kc_secs,
+        });
+    }
+
+    if spec.persist {
+        if let Some(path) = tuning::env_path() {
+            tuning::global().save_to(&path)?;
+        }
+    }
+    Ok(reports)
 }

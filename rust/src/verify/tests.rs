@@ -228,6 +228,27 @@ fn mutation_overlapping_training_slots_are_rejected() {
 }
 
 #[test]
+fn offline_arena_packing_never_peaks_above_best_fit() {
+    // The shipped training layout (offline interval packing when it wins,
+    // online best-fit otherwise) must never peak above the plain best-fit
+    // pass — for every checkpoint policy, on both a recompute-heavy chain
+    // and a conv plan — and must still satisfy the liveness verifier.
+    for cp in [chain_plan(), conv_plan(ConvKind::Same)] {
+        for policy in CkptPolicy::ALL {
+            let layout = cp.train_layout(policy);
+            let bestfit = cp.train_layout_bestfit_elems(policy);
+            assert!(
+                layout.arena_elems() <= bestfit,
+                "{policy:?}: packed peak {} exceeds best-fit peak {bestfit}",
+                layout.arena_elems()
+            );
+            cp.verify_train_layout(&layout)
+                .expect("packed layout must verify");
+        }
+    }
+}
+
+#[test]
 fn mutation_truncated_final_permutation_is_rejected() {
     // A plan whose output order forces a final permutation.
     let mut cp = compile_expr(

@@ -1,13 +1,18 @@
 //! Per-variant parity suite for the runtime-dispatched microkernels.
 //!
-//! The v2 accumulation contract is stated *per variant*: for every kernel
+//! The v3 accumulation contract is stated *per variant*: for every kernel
 //! variant the host can run (plus the always-present portable fallback),
 //! scalar and parallel backends must produce bit-identical outputs and
 //! gradients — across all four convolution varieties, the tiny-K /
-//! packed-GEMM / unblocked contraction routings, and the training engine
-//! under {StoreAll, Sqrt} checkpoint policies. The suite also pins the
-//! verifier's rejection of stale compiled artifacts (wrong
-//! accumulation-order version, wrong pinned variant).
+//! packed-GEMM / unblocked contraction routings, the packed conv-atom
+//! weight-panel path (forced on, forced off, and auto-engaged), and the
+//! training engine under {StoreAll, Sqrt} checkpoint policies. Packing a
+//! conv atom's weights into a zero-padded panel is a pure data-layout
+//! change, so packed and unpacked runs of the *same* variant must also be
+//! bit-identical to each other. The suite also pins the verifier's
+//! rejection of stale compiled artifacts (wrong accumulation-order
+//! version, wrong pinned variant) and the tiny-geometry short-circuit
+//! that keeps small conv atoms on the plain run loop.
 //!
 //! Forcing a variant is process-global, so everything runs inside ONE
 //! `#[test]` (this integration binary contains nothing else) and the
@@ -15,7 +20,7 @@
 
 use conv_einsum::autodiff::{CkptPolicy, MemoryMeter, PathAutodiff};
 use conv_einsum::einsum::{parse, ConvKind, SizedSpec};
-use conv_einsum::exec::{pairwise_vjp_with, pairwise_with};
+use conv_einsum::exec::{canonicalize, force_conv_pack, pairwise_vjp_with, pairwise_with};
 use conv_einsum::kernels::dispatch::{self, Variant};
 use conv_einsum::kernels::{ACCUM_ORDER_VERSION, LANES};
 use conv_einsum::util::rng::Rng;
@@ -39,6 +44,17 @@ fn conv_spec(kind: ConvKind) -> SizedSpec {
     SizedSpec::with_kinds(
         parse("bsx,tsx->btx|x").unwrap(),
         vec![vec![2, 3, 11], vec![4, 3, 3]],
+        vec![kind],
+    )
+    .unwrap()
+}
+
+/// A conv geometry big enough to auto-engage the packed weight panel
+/// (flop estimate 1·4·6·3·64·5 = 23040 ≥ `CONV_PACK_MIN_FLOPS`, t ≥ 2).
+fn big_conv_spec(kind: ConvKind) -> SizedSpec {
+    SizedSpec::with_kinds(
+        parse("bsx,tsx->btx|x").unwrap(),
+        vec![vec![4, 3, 64], vec![6, 3, 5]],
         vec![kind],
     )
     .unwrap()
@@ -105,6 +121,136 @@ fn conv_parity(variant: Variant) {
                 "{} {kind:?} db workers={workers}",
                 variant.name()
             );
+        }
+    }
+}
+
+/// Packed conv-atom weight panels: for a fixed variant, forcing the panel
+/// on and off must produce bit-identical outputs and gradients (packing
+/// is a pure data-layout change — the packed loop consumes the same
+/// weights in the same order, pad lanes are zero weights the existing
+/// `w == 0` fast path skips), on scalar and parallel backends, across all
+/// four kinds. Also pins the engagement oracle: the big geometry
+/// auto-engages, the tiny one short-circuits to the plain run loop
+/// (`CONV_PACK_MIN_FLOPS` floor).
+fn conv_pack_parity(variant: Variant) {
+    for kind in KINDS {
+        // Engagement oracle under auto routing.
+        let tiny = canonicalize(&conv_spec(kind), &[]);
+        let tiny_kernel = tiny.kernel();
+        assert_eq!(
+            tiny.pack_lens(&tiny_kernel),
+            (0, 0),
+            "{} {kind:?}: tiny conv atom must stay on the plain run loop",
+            variant.name()
+        );
+        let s = big_conv_spec(kind);
+        let big = canonicalize(&s, &[]);
+        let big_kernel = big.kernel();
+        assert!(
+            big.pack_lens(&big_kernel).1 > 0,
+            "{} {kind:?}: big conv atom must auto-engage the weight panel",
+            variant.name()
+        );
+
+        let mut rng = Rng::new(331);
+        let a = Tensor::rand(&s.dims[0], -1.0, 1.0, &mut rng);
+        let b = Tensor::rand(&s.dims[1], -1.0, 1.0, &mut rng);
+
+        // Unpacked scalar baseline.
+        force_conv_pack(Some(false));
+        let want = pairwise_with(&s, &a, &b, &[], &ExecOptions::scalar());
+        let dout = Tensor::rand(want.shape(), -1.0, 1.0, &mut rng);
+        let (da_u, db_u) = pairwise_vjp_with(&s, &a, &b, &dout, &[], &ExecOptions::scalar());
+
+        // Packed (forced) and auto-engaged runs, scalar and pooled, must
+        // all reproduce the unpacked bits exactly.
+        for force in [Some(true), None] {
+            force_conv_pack(force);
+            for opts in [
+                ExecOptions::scalar(),
+                ExecOptions::parallel(1),
+                ExecOptions::parallel(2),
+                ExecOptions::parallel(4),
+            ] {
+                let got = pairwise_with(&s, &a, &b, &[], &opts);
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "{} {kind:?} packed={force:?} forward {:?}",
+                    variant.name(),
+                    opts.backend
+                );
+                let (da_p, db_p) = pairwise_vjp_with(&s, &a, &b, &dout, &[], &opts);
+                assert_eq!(
+                    bits(&da_p),
+                    bits(&da_u),
+                    "{} {kind:?} packed={force:?} da {:?}",
+                    variant.name(),
+                    opts.backend
+                );
+                assert_eq!(
+                    bits(&db_p),
+                    bits(&db_u),
+                    "{} {kind:?} packed={force:?} db {:?}",
+                    variant.name(),
+                    opts.backend
+                );
+            }
+        }
+        force_conv_pack(None);
+    }
+}
+
+/// Training engine over the packed conv-panel path: plans compiled with
+/// the panel forced off vs forced on must train bit-identically under
+/// {StoreAll, Sqrt} (the pack decision is captured per compiled kernel,
+/// so each plan pins one routing for its whole lifetime).
+fn conv_pack_training_parity(variant: Variant) {
+    let expr = "bsx,tsx->btx|x";
+    let dims = vec![vec![4, 3, 64], vec![6, 3, 5]];
+    for kind in KINDS {
+        let opts = PlanOptions {
+            training: true,
+            conv_kinds: Some(vec![kind]),
+            ..Default::default()
+        };
+        force_conv_pack(Some(false));
+        let unpacked = Arc::new(compile_expr(expr, &dims, &opts).unwrap());
+        force_conv_pack(Some(true));
+        let packed = Arc::new(compile_expr(expr, &dims, &opts).unwrap());
+        force_conv_pack(None);
+        let mut rng = Rng::new(337);
+        let ins: Vec<Tensor> = dims.iter().map(|d| Tensor::rand(d, -1.0, 1.0, &mut rng)).collect();
+        let refs: Vec<&Tensor> = ins.iter().collect();
+        let dout = Tensor::rand(unpacked.out_shape(), -1.0, 1.0, &mut rng);
+        let ad_u = PathAutodiff::from_compiled(Arc::clone(&unpacked));
+        let ad_p = PathAutodiff::from_compiled(Arc::clone(&packed));
+        let mut ws = TrainWorkspace::new();
+        let meter = MemoryMeter::new();
+        for policy in [CkptPolicy::StoreAll, CkptPolicy::Sqrt] {
+            let d = dout.clone();
+            let (y_u, g_u) = ad_u
+                .forward_backward(&refs, |_| d.clone(), policy, &mut ws, &meter)
+                .unwrap();
+            let d = dout.clone();
+            let (y_p, g_p) = ad_p
+                .forward_backward(&refs, |_| d.clone(), policy, &mut ws, &meter)
+                .unwrap();
+            assert_eq!(
+                bits(&y_p),
+                bits(&y_u),
+                "{} {kind:?} {policy:?}: packed training output diverged",
+                variant.name()
+            );
+            for (i, (gp, gu)) in g_p.iter().zip(g_u.iter()).enumerate() {
+                assert_eq!(
+                    bits(gp),
+                    bits(gu),
+                    "{} {kind:?} {policy:?}: packed training grad {i} diverged",
+                    variant.name()
+                );
+            }
         }
     }
 }
@@ -258,6 +404,8 @@ fn per_variant_bit_identity_and_verifier_pinning() {
         dispatch::force_variant(Some(variant));
         assert_eq!(dispatch::selected().variant, variant, "force must stick");
         conv_parity(variant);
+        conv_pack_parity(variant);
+        conv_pack_training_parity(variant);
         contraction_parity(variant);
         training_parity(variant);
     }

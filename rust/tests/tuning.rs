@@ -14,7 +14,9 @@ use conv_einsum::cost::tuning::{
 };
 use conv_einsum::einsum::{parse, ConvKind, SizedSpec};
 use conv_einsum::kernels::dispatch::{self, Variant, PACK_MIN_FLOPS};
-use conv_einsum::tune::{calibrate_expr, CalibrationSpec};
+use conv_einsum::tune::{
+    calibrate_expr, calibrate_gemm_blocking, CalibrationSpec, GEMM_KC_CANDIDATES,
+};
 use conv_einsum::util::rng::Rng;
 use conv_einsum::{
     compile_expr, Backend, PlanCache, PlanOptions, Strategy, Tensor, TrainWorkspace, VerifyError,
@@ -364,6 +366,49 @@ fn gemm_kc_tuning_is_bit_invariant() {
         before, after,
         "kc-only GEMM tuning must not change result bits"
     );
+}
+
+#[test]
+fn gemm_blocking_sweep_learns_and_installs_per_geometry_tuning() {
+    let _g = lock_global();
+    let _restore = StateGuard;
+    let spec = CalibrationSpec {
+        top_k: 1,
+        warmup: 0,
+        iters: 1,
+        persist: false,
+        seed: 11,
+    };
+    let (m, n, k) = (12, 40, 96);
+    let before_gen = tuning::generation();
+    let reports = calibrate_gemm_blocking(&[(m, n, k)], &spec).unwrap();
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert_eq!((r.m, r.n, r.k), (m, n, k));
+    // The winning depth is one of the swept candidates, clamped to k.
+    assert!(r.kc <= k && r.kc >= 1);
+    assert!(GEMM_KC_CANDIDATES.iter().any(|&c| c.min(k).max(1) == r.kc));
+    // Every distinct clamped depth was timed, plus the unpacked baseline.
+    assert!(!r.kc_secs.is_empty());
+    assert!(r.kc_secs.iter().all(|&(_, s)| s >= 0.0));
+    assert!(r.unpacked_secs >= 0.0);
+    // The learned blocking landed in the persistent cache (generation
+    // bumped, so stale measured plans re-verify)...
+    assert!(tuning::generation() > before_gen);
+    let learned = tuning::global().gemm_tunings();
+    assert!(
+        learned
+            .iter()
+            .any(|t| (t.m, t.n, t.k, t.kc, t.min_flops) == (m, n, k, r.kc, r.min_flops)),
+        "sweep result must be recorded in the tuning cache"
+    );
+    // ...and in the dispatcher, where the next compile resolves it.
+    if let Some(g) = dispatch::resolved_gemm(dispatch::selected(), m, n, k) {
+        assert_eq!(g.kc, r.kc, "dispatcher must resolve the learned kc");
+    }
+    // The JSON row used by the bench artifact carries the sweep.
+    let row = r.to_json();
+    assert!(row.get("kc").is_some() && row.get("unpacked_secs").is_some());
 }
 
 #[test]

@@ -14,7 +14,12 @@
 //!   newer toolchains safe `target_feature` functions are callable from
 //!   ordinary safe code with no feature check, so every SIMD variant entry
 //!   point must be an `unsafe fn` reached only through its
-//!   detection-gated dispatch wrapper.
+//!   detection-gated dispatch wrapper;
+//! * a **`#[target_feature(...)]` feature string outside the reviewed
+//!   allowlist** (`avx2`, `fma`, `avx512f`, `neon`) — every feature a
+//!   kernel enables must have a matching runtime-detection gate in
+//!   `kernels/dispatch.rs`, so a new string has to be reviewed (detection
+//!   + ragged-edge masking) before it may appear on a hot path.
 //!
 //! Annotation grammar (all inside ordinary `//` comments):
 //!
@@ -63,6 +68,12 @@ const ALLOC_PATTERNS: &[&str] = &[
 
 /// How many comment lines above an `unsafe` may carry its SAFETY note.
 const SAFETY_LOOKBACK: usize = 8;
+
+/// Target features a hot-path kernel may enable. Each entry is paired
+/// with a runtime-detection gate in `kernels/dispatch.rs` (`avx2`/`fma` →
+/// Avx2Fma, `avx512f` → Avx512, `neon` → Neon); anything else is a
+/// feature nobody reviewed a detection path or ragged-edge story for.
+const ALLOWED_TARGET_FEATURES: &[&str] = &["avx2", "fma", "avx512f", "neon"];
 
 #[derive(Debug)]
 pub struct Finding {
@@ -197,6 +208,21 @@ fn scan_file(path: &Path, src: &str, findings: &mut Vec<Finding>) {
         // -- target_feature hygiene ---------------------------------------
         if code.contains("#[target_feature(") {
             target_feature_armed = true;
+            // Feature strings live in literals the code half masks out, so
+            // read them from the raw line.
+            for feat in quoted_strings(raw) {
+                if !ALLOWED_TARGET_FEATURES.contains(&feat.as_str()) {
+                    findings.push(Finding {
+                        file: path.to_path_buf(),
+                        line: lineno,
+                        what: format!(
+                            "target feature `{feat}` is not in the reviewed allowlist \
+                             {ALLOWED_TARGET_FEATURES:?} (add a runtime-detection gate \
+                             in kernels/dispatch.rs first)"
+                        ),
+                    });
+                }
+            }
         }
         if target_feature_armed && contains_word(&code, "fn") {
             if !contains_word(&code, "unsafe") {
@@ -296,6 +322,24 @@ fn scan_file(path: &Path, src: &str, findings: &mut Vec<Finding>) {
             recent_comments.drain(..recent_comments.len() - SAFETY_LOOKBACK * 2);
         }
     }
+}
+
+/// All `"..."` literal contents on a raw source line (no escape handling:
+/// target-feature strings are plain identifiers).
+fn quoted_strings(raw: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = raw;
+    while let Some(open) = rest.find('"') {
+        let after = &rest[open + 1..];
+        match after.find('"') {
+            Some(close) => {
+                out.push(after[..close].to_string());
+                rest = &after[close + 1..];
+            }
+            None => break,
+        }
+    }
+    out
 }
 
 fn has_safety(comment: &str) -> bool {
